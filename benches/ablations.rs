@@ -1,0 +1,252 @@
+//! Paper §6.4 ablations + appendix tables, one sub-experiment each:
+//!   beta2       — Table 8  (β₂ = 0.95)
+//!   bf16        — Tables 3/9 (pure-bf16 master weights & state)
+//!   statefree   — Table 10 (signSGD vs SGD as the state-free rule)
+//!   lion        — Table 11 (Lion as the state-full rule)
+//!   gpt2        — Table 12 (GPT-2-style architecture)
+//!   blockpolicy — Table 13 (random / ascending / descending)
+//!   freq        — Table 14 + §D (update-frequency T sweep; FRUGAL is
+//!                 robust at small T, GaLore-with-kept-state degrades)
+//!   sched       — Tables 15/16 (constant vs cosine schedules)
+//!   rho         — Table 17 (density sweep 1.0 → 0 → pure signSGD)
+//!   concurrent  — Tables 20/21 (AdaMeM, Fira, LDAdam)
+//!
+//! Run one: `FRUGAL_ABLATION=freq cargo bench --bench ablations`
+//! Default: all (with reduced steps).
+
+mod common;
+
+use common::*;
+use frugal::coordinator::LrSchedule;
+use frugal::util::bench::print_table;
+use frugal::TrainConfig;
+
+fn base_cfg(model: &str, steps: u64) -> TrainConfig {
+    TrainConfig {
+        model: model.to_string(),
+        rho: 0.25,
+        update_freq: 50,
+        steps,
+        ..Default::default()
+    }
+}
+
+fn run_set(
+    title: &str,
+    rt: &frugal::runtime::Runtime,
+    man: &frugal::runtime::Manifest,
+    steps: u64,
+    set: Vec<(String, TrainConfig, bool)>,
+) -> frugal::Result<Vec<(String, f64)>> {
+    let mut rows = Vec::new();
+    let mut finals = Vec::new();
+    for (label, cfg, bf16) in set {
+        let r = pretrain_run(rt, man, &cfg, &label, steps, bf16)?;
+        println!("  {label:<28} ppl {:?} ({:.0}s)", r.checkpoints, r.wall_s);
+        finals.push((label.clone(), *r.checkpoints.last().unwrap()));
+        rows.push(row(&r));
+    }
+    print_table(title, &["variant", "ppl@2%", "ppl@20%", "ppl@100%", "state", "wall"], &rows);
+    Ok(finals)
+}
+
+fn main() -> frugal::Result<()> {
+    let (rt, man) = open()?;
+    let model = bench_model();
+    let steps = bench_steps(150);
+    let which = std::env::var("FRUGAL_ABLATION").unwrap_or_else(|_| "all".to_string());
+    let all = which == "all";
+    let b = || base_cfg(&model, steps);
+
+    if all || which == "beta2" {
+        println!("\n## Table 8: beta2 = 0.95");
+        let mk = |opt: &str, beta2: f64| {
+            (format!("{opt} b2={beta2}"),
+             TrainConfig { optimizer: opt.into(), beta2, ..b() }, false)
+        };
+        let finals = run_set("Table 8", &rt, &man, steps, vec![
+            mk("adamw", 0.999), mk("adamw", 0.95),
+            mk("frugal", 0.95), mk("galore", 0.95), mk("badam", 0.95),
+        ])?;
+        let get = |l: &str| finals.iter().find(|(n, _)| n.starts_with(l)).unwrap().1;
+        println!("shape: FRUGAL beats GaLore/BAdam at b2=0.95: {}",
+                 if get("frugal") < get("galore") && get("frugal") < get("badam") {
+                     "YES"
+                 } else {
+                     "NO"
+                 });
+    }
+
+    if all || which == "bf16" {
+        println!("\n## Tables 3/9: pure bf16 master weights + state");
+        let mk = |opt: &str, bf16: bool| {
+            (format!("{opt}{}", if bf16 { " bf16" } else { " f32" }),
+             TrainConfig { optimizer: opt.into(), ..b() }, bf16)
+        };
+        let finals = run_set("Tables 3/9", &rt, &man, steps, vec![
+            mk("adamw", false), mk("adamw", true),
+            mk("frugal", true), mk("galore", true), mk("badam", true),
+        ])?;
+        let get = |l: &str| finals.iter().find(|(n, _)| n == l).unwrap().1;
+        println!("shape: bf16 hurts AdamW: {}",
+                 if get("adamw bf16") > get("adamw f32") { "YES" } else { "NO" });
+        println!("shape: FRUGAL-bf16 beats GaLore/BAdam-bf16 (Table 9): {}",
+                 if get("frugal bf16") < get("galore bf16")
+                     && get("frugal bf16") < get("badam bf16") { "YES" } else { "NO" });
+    }
+
+    if all || which == "statefree" {
+        println!("\n## Table 10: state-free rule — signSGD vs SGD");
+        let finals = run_set("Table 10", &rt, &man, steps, vec![
+            ("adamw".into(), TrainConfig { optimizer: "adamw".into(), ..b() }, false),
+            ("frugal + signSGD".into(), TrainConfig { optimizer: "frugal".into(), ..b() }, false),
+            ("frugal + SGD".into(),
+             TrainConfig { optimizer: "frugal-sgd".into(), ..b() }, false),
+        ])?;
+        let get = |l: &str| finals.iter().find(|(n, _)| n.starts_with(l)).unwrap().1;
+        println!("shape: signSGD <= SGD as state-free rule: {}",
+                 if get("frugal + signSGD") <= get("frugal + SGD") * 1.02 { "YES" } else { "NO" });
+    }
+
+    if all || which == "lion" {
+        println!("\n## Table 11: Lion as the state-full optimizer");
+        let finals = run_set("Table 11", &rt, &man, steps, vec![
+            ("adamw".into(), TrainConfig { optimizer: "adamw".into(), ..b() }, false),
+            ("lion".into(), TrainConfig { optimizer: "lion".into(), lr: 3e-4, ..b() }, false),
+            ("frugal(+lion)".into(),
+             TrainConfig { optimizer: "frugal-lion".into(), lr: 3e-4, ..b() }, false),
+            ("galore".into(), TrainConfig { optimizer: "galore".into(), ..b() }, false),
+        ])?;
+        let get = |l: &str| finals.iter().find(|(n, _)| n.starts_with(l)).unwrap().1;
+        println!("shape: FRUGAL(+Lion) < GaLore: {}",
+                 if get("frugal(+lion)") < get("galore") { "YES" } else { "NO" });
+    }
+
+    if all || which == "gpt2" {
+        println!("\n## Table 12: GPT-2-style architecture");
+        let mk = |opt: &str| {
+            (opt.to_string(),
+             TrainConfig { optimizer: opt.into(), model: "gpt2tiny".into(),
+                           update_freq: 50, rho: 0.25, ..Default::default() },
+             false)
+        };
+        let finals = run_set("Table 12 (gpt2tiny)", &rt, &man, steps, vec![
+            mk("adamw"), mk("galore"), mk("badam"), mk("frugal"), mk("frugal0"),
+        ])?;
+        let get = |l: &str| finals.iter().find(|(n, _)| n == l).unwrap().1;
+        println!("shape: FRUGAL < GaLore,BAdam on GPT-2 arch: {}",
+                 if get("frugal") < get("galore") && get("frugal") < get("badam") {
+                     "YES"
+                 } else {
+                     "NO"
+                 });
+    }
+
+    if all || which == "blockpolicy" {
+        println!("\n## Table 13: block selection policy");
+        let mk = |policy: &str| {
+            (policy.to_string(),
+             TrainConfig { optimizer: "frugal".into(), block_policy: policy.into(),
+                           rho: 1.0 / 3.0, ..b() },
+             false)
+        };
+        let finals = run_set("Table 13", &rt, &man, steps,
+                             vec![mk("random"), mk("ascending"), mk("descending")])?;
+        let vals: Vec<f64> = finals.iter().map(|(_, v)| *v).collect();
+        let spread = (vals.iter().cloned().fold(f64::MIN, f64::max)
+            - vals.iter().cloned().fold(f64::MAX, f64::min))
+            / vals[0];
+        println!("shape: policy spread < 5% (no significant difference): {}",
+                 if spread < 0.05 { "YES" } else { "NO" });
+    }
+
+    if all || which == "freq" {
+        println!("\n## Table 14 + §D: update frequency T");
+        let mut set = Vec::new();
+        for t in [5u64, 20, 50, 200] {
+            set.push((format!("FRUGAL T={t}"),
+                      TrainConfig { optimizer: "frugal".into(), update_freq: t, ..b() }, false));
+        }
+        // GaLore state-handling at small T (§D: Keep degrades, Reset helps).
+        set.push(("GaLore T=5 (keep state)".into(),
+                  TrainConfig { optimizer: "galore".into(), update_freq: 5, ..b() }, false));
+        set.push(("GaLore T=5 (reset state)".into(),
+                  TrainConfig { optimizer: "galore-reset".into(), update_freq: 5, ..b() },
+                  false));
+        let finals = run_set("Table 14 / §D", &rt, &man, steps, set)?;
+        let get = |l: &str| finals.iter().find(|(n, _)| n.starts_with(l)).unwrap().1;
+        let f5 = get("FRUGAL T=5");
+        let f200 = get("FRUGAL T=200");
+        println!("shape: FRUGAL robust to small T (<10% gap): {}",
+                 if (f5 - f200).abs() / f200 < 0.10 { "YES" } else { "NO" });
+        println!("shape: GaLore reset <= keep at T=5 (§D): {}",
+                 if get("GaLore T=5 (reset") <= get("GaLore T=5 (keep") * 1.02 {
+                     "YES"
+                 } else {
+                     "NO"
+                 });
+    }
+
+    if all || which == "sched" {
+        println!("\n## Tables 15/16: schedulers");
+        for (sched_name, sched) in [
+            ("constant+warmup", LrSchedule::ConstantWarmup { warmup: steps / 10 }),
+            ("cosine", LrSchedule::Cosine { total: steps, warmup: steps / 10, min_frac: 0.1 }),
+        ] {
+            let mk = |opt: &str| {
+                (format!("{opt} ({sched_name})"),
+                 TrainConfig { optimizer: opt.into(), schedule: sched.clone(), ..b() }, false)
+            };
+            let finals = run_set(&format!("Tables 15/16 — {sched_name}"), &rt, &man, steps,
+                                 vec![mk("adamw"), mk("galore"), mk("badam"), mk("frugal")])?;
+            let get =
+                |l: &str| finals.iter().find(|(n, _)| n.starts_with(l)).unwrap().1;
+            println!("shape [{sched_name}]: FRUGAL < GaLore,BAdam: {}",
+                     if get("frugal") < get("galore") && get("frugal") < get("badam") {
+                         "YES"
+                     } else {
+                         "NO"
+                     });
+        }
+    }
+
+    if all || which == "rho" {
+        println!("\n## Table 17: density sweep");
+        let mut set = Vec::new();
+        for rho in [1.0, 0.5, 0.25, 0.125, 0.0] {
+            set.push((format!("rho={rho}"),
+                      TrainConfig { optimizer: "frugal".into(), rho, ..b() }, false));
+        }
+        set.push(("pure signSGD".into(),
+                  TrainConfig { optimizer: "signsgd".into(), lr: 1e-3, ..b() }, false));
+        let finals = run_set("Table 17", &rt, &man, steps, set)?;
+        // Shape: ppl increases monotonically-ish as rho decreases, and pure
+        // signSGD (no Adam anywhere, incl. output layer) is far worse.
+        let get = |l: &str| finals.iter().find(|(n, _)| n == l).unwrap().1;
+        println!("shape: rho=1 <= rho=0 (more state helps): {}",
+                 if get("rho=1") <= get("rho=0") * 1.02 { "YES" } else { "NO" });
+        println!("shape: pure signSGD far worse than FRUGAL(0): {}",
+                 if get("pure signSGD") > 1.15 * get("rho=0") { "YES" } else { "NO" });
+    }
+
+    if all || which == "concurrent" {
+        println!("\n## Tables 20/21: concurrent methods");
+        let finals = run_set("Tables 20/21", &rt, &man, steps, vec![
+            ("adamw".into(), TrainConfig { optimizer: "adamw".into(), ..b() }, false),
+            ("frugal".into(), TrainConfig { optimizer: "frugal".into(), ..b() }, false),
+            ("adamem".into(), TrainConfig { optimizer: "adamem".into(), ..b() }, false),
+            ("fira".into(),
+             TrainConfig { optimizer: "fira".into(), clip: Some(1.0), weight_decay: 0.1, ..b() },
+             false),
+            ("ldadam".into(), TrainConfig { optimizer: "ldadam".into(), ..b() }, false),
+            ("galore".into(), TrainConfig { optimizer: "galore".into(), ..b() }, false),
+        ])?;
+        let get = |l: &str| finals.iter().find(|(n, _)| n == l).unwrap().1;
+        println!("shape: AdaMeM beats GaLore (residual used): {}",
+                 if get("adamem") < get("galore") { "YES" } else { "NO" });
+        println!("shape: FRUGAL competitive with Fira/LDAdam (within 10%): {}",
+                 if get("frugal") < 1.10 * get("fira").min(get("ldadam")) { "YES" } else { "NO" });
+    }
+
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Shared helpers for the paper-table bench harnesses.
+//!
+//! Every bench is an experiment binary (harness = false): it re-runs the
+//! training comparison behind one paper table/figure at CPU scale and
+//! prints rows in the paper's format. Absolute perplexities differ from
+//! the paper (different corpus/scale — DESIGN.md §3); the *shape* (who
+//! wins, rough factors) is the reproduction target and is asserted in the
+//! printed "shape:" line.
+//!
+//! Env knobs shared by all benches:
+//!   FRUGAL_BENCH_MODEL  (default "tiny")
+//!   FRUGAL_BENCH_STEPS  (default 200)
+//!   FRUGAL_BENCH_FULL=1 (run the slow full grid)
+
+use std::path::Path;
+
+use frugal::coordinator::metrics::perplexity;
+use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::runtime::{Manifest, Runtime};
+use frugal::train::{GradTrainer, Precision};
+use frugal::TrainConfig;
+
+pub fn bench_model() -> String {
+    std::env::var("FRUGAL_BENCH_MODEL").unwrap_or_else(|_| "tiny".to_string())
+}
+
+pub fn bench_steps(default: u64) -> u64 {
+    std::env::var("FRUGAL_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+pub fn full_grid() -> bool {
+    std::env::var("FRUGAL_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Result of one pre-training run, with validation perplexity measured at
+/// the checkpoint fractions (the paper reports 4k/40k/200k of 200k — i.e.
+/// 2%, 20%, 100%).
+pub struct RunResult {
+    pub label: String,
+    pub checkpoints: Vec<f64>, // val perplexity at each checkpoint
+    pub state_floats: usize,
+    pub wall_s: f64,
+}
+
+pub const CHECKPOINT_FRACS: &[f64] = &[0.02, 0.2, 1.0];
+
+/// Pre-train `cfg.model` with the Rust-side optimizer named in `cfg`,
+/// returning checkpointed validation perplexities.
+pub fn pretrain_run(
+    rt: &Runtime,
+    man: &Manifest,
+    cfg: &TrainConfig,
+    label: &str,
+    steps: u64,
+    bf16: bool,
+) -> frugal::Result<RunResult> {
+    let entry = man.model(&cfg.model)?.clone();
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
+    let layout = entry.layout();
+    let opt = cfg.build_optimizer(&layout)?;
+    let mut tr =
+        GradTrainer::new(rt, man, &cfg.model, opt, cfg.schedule.clone(), cfg.lr, cfg.seed)?;
+    tr.clip = cfg.clip.map(|c| c as f32);
+    if bf16 {
+        tr.precision = Precision::PureBf16;
+    }
+    let mut checkpoints = Vec::new();
+    let check_steps: Vec<u64> = CHECKPOINT_FRACS
+        .iter()
+        .map(|f| ((steps as f64 * f).round() as u64).max(1))
+        .collect();
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+        tr.step(&batch.tokens)?;
+        if check_steps.contains(&(step + 1)) {
+            let val = tr.session.eval_loss(&tr.flat, 8, |i| {
+                corpus.val_batch(entry.batch, entry.seq_len, i).tokens
+            })?;
+            checkpoints.push(perplexity(val));
+        }
+    }
+    Ok(RunResult {
+        label: label.to_string(),
+        checkpoints,
+        state_floats: tr.optimizer.state_floats(),
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Open the shared runtime/manifest pair.
+pub fn open() -> frugal::Result<(Runtime, Manifest)> {
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(Path::new("artifacts"))?;
+    Ok((rt, man))
+}
+
+/// Format a checkpoint row.
+pub fn row(r: &RunResult) -> Vec<String> {
+    let mut cells = vec![r.label.clone()];
+    for c in &r.checkpoints {
+        cells.push(format!("{c:.2}"));
+    }
+    cells.push(format!("{}", r.state_floats));
+    cells.push(format!("{:.0}s", r.wall_s));
+    cells
+}

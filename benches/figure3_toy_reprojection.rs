@@ -1,0 +1,46 @@
+//! Paper Figure 3: toy quadratic min ‖W‖², W ∈ ℝ^{10×10}, GaLore-like
+//! SGDM with rank ∈ {3, 6} random projections refreshed every T=10 steps,
+//! with vs without momentum re-projection (+ mass normalization, §D).
+//! Mean ± std over 5 seeds, exactly the paper's protocol.
+
+use frugal::toy::galore_sgdm_toy;
+use frugal::util::bench::print_table;
+
+fn main() {
+    let steps = 300u64;
+    let seeds = 5u64;
+    println!("Figure 3 reproduction: min ||W||^2, W in R^10x10, T=10, lr=0.05, beta=0.9\n");
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    for rank in [3usize, 6] {
+        let mut final_with = Vec::new();
+        let mut final_without = Vec::new();
+        for seed in 0..seeds {
+            let w = galore_sgdm_toy(10, rank, 10, steps, 0.05, 0.9, true, seed);
+            let wo = galore_sgdm_toy(10, rank, 10, steps, 0.05, 0.9, false, seed);
+            final_with.push(*w.last().unwrap());
+            final_without.push(*wo.last().unwrap());
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let std = |v: &[f64]| {
+            let m = mean(v);
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        let (mw, sw) = (mean(&final_with), std(&final_with));
+        let (mo, so) = (mean(&final_without), std(&final_without));
+        ratios.push(mo / mw.max(1e-12));
+        rows.push(vec![
+            format!("rank {rank}"),
+            format!("{mw:.4} ± {sw:.4}"),
+            format!("{mo:.4} ± {so:.4}"),
+            format!("{:.1}x", mo / mw.max(1e-12)),
+        ]);
+    }
+    print_table(
+        "Figure 3: final loss after 300 steps (5 seeds)",
+        &["rank", "with re-projection", "without (GaLore)", "ratio"],
+        &rows,
+    );
+    println!("\nshape: re-projection converges much faster at both ranks: {}",
+             if ratios.iter().all(|&r| r > 2.0) { "YES" } else { "NO" });
+}

@@ -1,0 +1,76 @@
+//! Paper Table 4: which module classes tolerate a state-free optimizer.
+//!
+//! FRUGAL ρ=0 trains all Linear layers with signSGD; this bench then
+//! progressively demotes Embeddings / Norms / the Output layer from the
+//! state-full (AdamW) set to the state-free set via the fused-path mask
+//! builder. The paper's finding: Embeddings and RMSNorms barely matter,
+//! but demoting the **Output layer is catastrophic** (20.02 → 34.66 ppl).
+
+mod common;
+
+use common::*;
+use frugal::coordinator::metrics::perplexity;
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::optim::frugal::BlockPolicy;
+use frugal::optim::Role;
+use frugal::train::FusedTrainer;
+use frugal::util::bench::print_table;
+
+fn main() -> frugal::Result<()> {
+    let (rt, man) = open()?;
+    let steps = bench_steps(200);
+    let model = bench_model();
+    let entry = man.model(&model)?.clone();
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
+    println!("Table 4 reproduction: model={model}, {steps} steps, FRUGAL rho=0 (fused path)");
+
+    let variants: Vec<(&str, Vec<Role>)> = vec![
+        ("Linear only (FRUGAL rho=0)", vec![]),
+        ("Linear + Norms", vec![Role::Norm]),
+        ("Linear + Embeddings", vec![Role::Embed]),
+        ("Linear + Emb + Norms", vec![Role::Embed, Role::Norm]),
+        ("Linear + Output layer", vec![Role::Output]),
+    ];
+
+    let mut rows = Vec::new();
+    let mut finals = Vec::new();
+    for (label, statefree) in variants {
+        let mut mb = MaskBuilder::new(
+            entry.layout(),
+            0.0,
+            SubspacePolicy::Blockwise(BlockPolicy::Random),
+            0,
+        );
+        mb.statefree_roles = statefree.clone();
+        let mut tr = FusedTrainer::new(
+            &rt, &man, &model, mb,
+            LrSchedule::Cosine { total: steps, warmup: steps / 10, min_frac: 0.1 },
+            1e-3, 1.0, 1 << 30, 0,
+        )?;
+        for step in 0..steps {
+            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+            tr.step(&batch.tokens)?;
+        }
+        let val = tr.session.eval_loss(&tr.flat, 8, |i| {
+            corpus.val_batch(entry.batch, entry.seq_len, i).tokens
+        })?;
+        let ppl = perplexity(val);
+        println!("  {label:<28} ppl {ppl:.2}");
+        finals.push((label.to_string(), ppl));
+        rows.push(vec![label.to_string(), format!("{ppl:.2}")]);
+    }
+    print_table("Table 4: state-free modules vs perplexity", &["state-free modules", "ppl"],
+                &rows);
+
+    let get = |l: &str| finals.iter().find(|(n, _)| n.starts_with(l)).unwrap().1;
+    let base = get("Linear only");
+    let demote_out = get("Linear + Output");
+    let demote_emb = get("Linear + Emb + Norms");
+    println!("\nshape: Output demotion catastrophic (>25% worse): {}",
+             if demote_out > 1.25 * base { "YES" } else { "NO" });
+    println!("shape: Emb+Norms demotion mild (<10% worse):       {}",
+             if demote_emb < 1.10 * base { "YES" } else { "NO" });
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Paper Tables 6, 7, 19: memory-efficient fine-tuning.
+//!
+//! Pre-trains one backbone, then fine-tunes it per task with each method
+//! and reports accuracy per task + average:
+//!   Table 6 (GLUE-like, 8 tasks): Full / LoRA / GaLore / FRUGAL(colwise) /
+//!                                 FRUGAL(rho=0).
+//!   Table 7 (commonsense-like): FRUGAL_BENCH_SUITE=commonsense.
+//!   Table 19 (head sensitivity): the final "signSGD everything" row —
+//!   training the classification head (Output) with signSGD collapses.
+//!
+//! Default: first 4 tasks; FRUGAL_BENCH_FULL=1 runs all 8.
+
+mod common;
+
+use common::*;
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::data::{CorpusConfig, SyntheticCorpus, TaskSuite};
+use frugal::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, StateFreeKind};
+use frugal::optim::Role;
+use frugal::train::{finetune_and_eval, FusedTrainer};
+use frugal::util::bench::print_table;
+use frugal::TrainConfig;
+
+fn main() -> frugal::Result<()> {
+    let (rt, man) = open()?;
+    let model = bench_model();
+    let entry = man.model(&model)?.clone();
+    let pretrain_steps = bench_steps(300);
+    let ft_steps = bench_steps(200) / 2;
+    let suite_kind =
+        std::env::var("FRUGAL_BENCH_SUITE").unwrap_or_else(|_| "glue".to_string());
+
+    // Backbone.
+    println!("pre-training backbone: {model}, {pretrain_steps} steps (AdamW fused)");
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
+    let mb = MaskBuilder::new(entry.layout(), 1.0,
+                              SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
+    let mut tr = FusedTrainer::new(
+        &rt, &man, &model, mb,
+        LrSchedule::Cosine { total: pretrain_steps, warmup: pretrain_steps / 10, min_frac: 0.1 },
+        1e-3, 1.0, 1 << 30, 0,
+    )?;
+    for step in 0..pretrain_steps {
+        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+        tr.step(&batch.tokens)?;
+    }
+    let base_flat = tr.flat.clone();
+
+    let suite = if suite_kind == "commonsense" {
+        TaskSuite::commonsense_like(entry.vocab, entry.seq_len, 11)
+    } else {
+        TaskSuite::glue_like(entry.vocab, entry.seq_len, 11)
+    };
+    let n_tasks = if full_grid() { suite.tasks.len() } else { 4 };
+
+    // Methods: name -> optimizer factory.
+    type Factory<'a> = Box<dyn Fn() -> frugal::Result<Box<dyn frugal::optim::Optimizer>> + 'a>;
+    let layout = entry.layout();
+    let mk_cfg = |opt: &str, rho: f64, lr_free: f64| TrainConfig {
+        optimizer: opt.to_string(),
+        rho,
+        lr_free_mult: lr_free,
+        update_freq: 50,
+        ..Default::default()
+    };
+    let methods: Vec<(&str, Factory)> = vec![
+        ("Full (AdamW)", Box::new(|| mk_cfg("adamw", 0.25, 1.0).build_optimizer(&layout))),
+        ("LoRA r=8", Box::new(|| mk_cfg("lora", 0.25, 1.0).build_optimizer(&layout))),
+        ("GaLore", Box::new(|| mk_cfg("galore", 0.25, 1.0).build_optimizer(&layout))),
+        ("FRUGAL colwise",
+         Box::new(|| mk_cfg("frugal-columnwise", 0.125, 0.1).build_optimizer(&layout))),
+        ("FRUGAL rho=0", Box::new(|| mk_cfg("frugal0", 0.0, 0.1).build_optimizer(&layout))),
+        // Table 19 row: the classification head itself goes state-free.
+        ("signSGD (head too)", Box::new(|| {
+            let cfg = FrugalCfg {
+                rho: 0.0,
+                projection: ProjectionKind::Blockwise,
+                state_free: StateFreeKind::SignSgd,
+                lr_free_mult: 0.1,
+                statefull_roles: vec![],           // nothing keeps Adam
+                frozen_roles: vec![Role::Embed],   // embeddings frozen as in §7.1
+                ..Default::default()
+            };
+            Ok(Box::new(Frugal::new(layout.clone(), cfg)) as Box<dyn frugal::optim::Optimizer>)
+        })),
+    ];
+
+    let mut header = vec!["method".to_string()];
+    for t in suite.tasks.iter().take(n_tasks) {
+        header.push(t.cfg.name.clone());
+    }
+    header.push("avg".into());
+    let mut rows = Vec::new();
+    let mut avgs = Vec::new();
+    for (label, factory) in &methods {
+        let mut cells = vec![label.to_string()];
+        let mut sum = 0.0;
+        for task in suite.tasks.iter().take(n_tasks) {
+            let opt = factory()?;
+            let lr = if label.contains("LoRA") { 1e-3 } else { 3e-4 };
+            let acc =
+                finetune_and_eval(&rt, &man, &model, &base_flat, task, opt, ft_steps, lr, 3)?;
+            sum += acc;
+            cells.push(format!("{:.1}", 100.0 * acc));
+        }
+        let avg = 100.0 * sum / n_tasks as f64;
+        println!("  {label:<20} avg {avg:.1}%");
+        cells.push(format!("{avg:.1}"));
+        avgs.push((label.to_string(), avg));
+        rows.push(cells);
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(
+        &format!("Table 6/7 ({suite_kind}-like): fine-tune accuracy, {ft_steps} steps/task"),
+        &header_refs,
+        &rows,
+    );
+
+    let get = |l: &str| avgs.iter().find(|(n, _)| n.starts_with(l)).unwrap().1;
+    println!("\nshape: FRUGAL >= GaLore:             {}",
+             if get("FRUGAL colwise") >= get("GaLore") - 2.0 { "YES" } else { "NO" });
+    println!("shape: FRUGAL rho=0 competitive:     {}",
+             if get("FRUGAL rho=0") >= get("LoRA") - 5.0 { "YES" } else { "NO" });
+    println!("shape: signSGD-head collapses (T19): {}",
+             if get("signSGD (head too)") < get("FRUGAL rho=0") - 3.0 { "YES" } else { "NO" });
+    Ok(())
+}

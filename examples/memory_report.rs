@@ -1,0 +1,91 @@
+//! Figure 1 / Table 2 memory columns: the analytic optimizer-state memory
+//! model (paper §C) evaluated at the paper's TRUE model sizes, plus the
+//! *measured* state allocation of this crate's optimizers on a small
+//! layout — demonstrating the analytic model and the implementation agree.
+//!
+//! Run: `cargo run --release --example memory_report`
+
+use frugal::optim::memory::{fmt_gib, optimizer_state_bytes, total_training_bytes, ArchSpec,
+                            Method};
+use frugal::optim::Layout;
+use frugal::util::bench::print_table;
+use frugal::TrainConfig;
+
+fn main() -> frugal::Result<()> {
+    // ------------------------------------------------------------------
+    // Part 1: paper Table 2's parenthetical numbers, reproduced exactly.
+    // ------------------------------------------------------------------
+    let methods: Vec<(&str, Method)> = vec![
+        ("AdamW", Method::AdamW),
+        ("GaLore rho=0.25", Method::GaLore { rho: 0.25 }),
+        ("BAdam rho=0.25", Method::BAdam { rho: 0.25 }),
+        ("FRUGAL rho=0.25", Method::Frugal { rho: 0.25 }),
+        ("FRUGAL rho=0.0", Method::Frugal { rho: 0.0 }),
+        ("Adafactor", Method::Adafactor),
+        ("Lion", Method::Lion),
+        ("signSGD", Method::SignSgd),
+    ];
+    let scales = ["60M", "130M", "350M", "1B", "3B"];
+    let rows: Vec<Vec<String>> = methods
+        .iter()
+        .map(|(name, m)| {
+            let mut row = vec![name.to_string()];
+            for s in scales {
+                let arch = ArchSpec::paper_llama(s);
+                row.push(fmt_gib(optimizer_state_bytes(&arch, m, 4)));
+            }
+            row
+        })
+        .collect();
+    print_table(
+        "Optimizer-state memory, f32, paper model sizes (paper Table 2 values in parens)",
+        &["method", "60M", "130M", "350M", "1B", "3B"],
+        &rows,
+    );
+    println!("paper prints: AdamW 0.43/1.00/2.74/9.98, GaLore 0.30/0.54/1.10/3.41,");
+    println!("              FRUGAL 0.29/0.52/1.05/3.23, FRUGAL(0) 0.24/0.37/0.49/0.98");
+
+    // ------------------------------------------------------------------
+    // Part 2: Figure 1's memory split (weights+grads vs optimizer state).
+    // ------------------------------------------------------------------
+    let mut rows = Vec::new();
+    for (name, m) in [("AdamW", Method::AdamW), ("FRUGAL rho=0.25", Method::Frugal { rho: 0.25 })]
+    {
+        let arch = ArchSpec::paper_llama("1B");
+        let opt = optimizer_state_bytes(&arch, &m, 4);
+        let total = total_training_bytes(&arch, &m, 4);
+        rows.push(vec![
+            name.to_string(),
+            fmt_gib(total - opt),
+            fmt_gib(opt),
+            fmt_gib(total),
+        ]);
+    }
+    print_table("Figure 1 split at 1B (f32)", &["method", "weights+grads", "opt state", "total"],
+                &rows);
+
+    // ------------------------------------------------------------------
+    // Part 3: measured vs analytic on an in-crate layout.
+    // ------------------------------------------------------------------
+    let layout = Layout::synthetic(512, 64, 172, 4);
+    let mut rows = Vec::new();
+    for name in ["adamw", "frugal", "frugal0", "badam", "galore", "signsgd", "adafactor"] {
+        let cfg = TrainConfig { optimizer: name.into(), ..Default::default() };
+        let mut opt = cfg.build_optimizer(&layout)?;
+        // One step allocates projection state.
+        let mut p = vec![0.0f32; layout.padded_size];
+        let g = vec![0.01f32; layout.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", opt.state_floats()),
+            format!("{:.1}%", 100.0 * opt.state_floats() as f64 / (2 * layout.flat_size) as f64),
+        ]);
+    }
+    print_table(
+        "Measured state allocation (synthetic 4-layer layout; % of AdamW)",
+        &["optimizer", "state f32s", "vs AdamW"],
+        &rows,
+    );
+    Ok(())
+}

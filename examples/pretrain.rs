@@ -1,0 +1,103 @@
+//! End-to-end pre-training driver — the repo's headline validation run.
+//!
+//! Trains the `e2e` config (6-layer, d=256, ~6.8M-param LLaMA — the CPU-
+//! scale stand-in for the paper's 130M A100 runs, DESIGN.md §3) on the
+//! synthetic corpus with three optimizers side by side:
+//!   AdamW (fused mask≡1), FRUGAL ρ=0.25, FRUGAL ρ=0.0
+//! and logs the three loss curves + final validation perplexity — the
+//! shape of paper Table 2's row ordering (AdamW ≤ FRUGAL(0.25) ≤
+//! FRUGAL(0) < baselines) at small scale. Recorded in EXPERIMENTS.md.
+//!
+//! Env knobs: MODEL (default "e2e"; use "tiny"/"small" for a fast look),
+//! STEPS (default 300), EVAL_EVERY, LOG (JSONL path prefix).
+//!
+//! Run: `cargo run --release --example pretrain`
+
+use std::path::Path;
+
+use frugal::coordinator::metrics::perplexity;
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::optim::frugal::BlockPolicy;
+use frugal::runtime::{Manifest, Runtime};
+use frugal::train::FusedTrainer;
+use frugal::util::bench::print_table;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> frugal::Result<()> {
+    let model = std::env::var("MODEL").unwrap_or_else(|_| "e2e".to_string());
+    let steps = env_u64("STEPS", 300);
+    let eval_every = env_u64("EVAL_EVERY", 50);
+    let t_freq = env_u64("UPDATE_FREQ", 100);
+
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(Path::new("artifacts"))?;
+    let entry = man.model(&model)?.clone();
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
+    println!(
+        "e2e pretrain: model={model} ({} params, d={}, L={}), {} steps, batch {}x{} tokens",
+        entry.flat_size, entry.d_model, entry.n_layers, steps, entry.batch, entry.seq_len
+    );
+    println!("uniform-baseline loss = ln({}) = {:.3}\n", entry.vocab,
+             (entry.vocab as f64).ln());
+
+    // (label, rho): AdamW == FRUGAL with everything state-full.
+    let variants: Vec<(&str, f32)> =
+        vec![("AdamW (rho=1.0)", 1.0), ("FRUGAL rho=0.25", 0.25), ("FRUGAL rho=0.0", 0.0)];
+
+    let mut summary = Vec::new();
+    for (label, rho) in variants {
+        let masks = MaskBuilder::new(
+            entry.layout(),
+            rho,
+            SubspacePolicy::Blockwise(BlockPolicy::Random),
+            7,
+        );
+        let mut tr = FusedTrainer::new(
+            &rt,
+            &man,
+            &model,
+            masks,
+            LrSchedule::Cosine { total: steps, warmup: steps / 10, min_frac: 0.1 },
+            1e-3,
+            1.0,
+            t_freq,
+            7, // same init seed for all variants
+        )?;
+        println!("--- {label} ---");
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+            let loss = tr.step(&batch.tokens)?;
+            if (step + 1) % eval_every == 0 || step + 1 == steps {
+                println!("  step {:>5}  loss {:.4}  tok/s {:.0}", step + 1, loss,
+                         tr.metrics.last().map(|r| r.tokens_per_s).unwrap_or(0.0));
+            }
+        }
+        let val = tr.session.eval_loss(&tr.flat, 16, |i| {
+            corpus.val_batch(entry.batch, entry.seq_len, i).tokens
+        })?;
+        let secs = t0.elapsed().as_secs_f64();
+        if let Ok(prefix) = std::env::var("LOG") {
+            let path = format!("{prefix}_{}.jsonl", label.replace([' ', '=', '.'], "_"));
+            tr.metrics.write_jsonl(Path::new(&path))?;
+            println!("  wrote {path}");
+        }
+        summary.push(vec![
+            label.to_string(),
+            format!("{:.4}", val),
+            format!("{:.2}", perplexity(val)),
+            format!("{:.1}s", secs),
+        ]);
+    }
+    print_table(
+        "e2e summary (paper Table 2 shape: AdamW <= FRUGAL(0.25) <= FRUGAL(0))",
+        &["optimizer", "val loss", "val ppl", "wall"],
+        &summary,
+    );
+    Ok(())
+}

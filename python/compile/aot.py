@@ -1,0 +1,177 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model config we emit three artifacts:
+  eval_<cfg>.hlo.txt   (flat, tokens) -> (loss,)
+  grad_<cfg>.hlo.txt   (flat, tokens) -> (loss, grads)
+  step_<cfg>.hlo.txt   (flat, m, v, mask, tokens, lr_full, lr_free, step)
+                       -> (loss, new_flat, new_m, new_v)
+plus optimizer-only kernels at a few flat sizes:
+  frugal_update_<n>.hlo.txt, adamw_update_<n>.hlo.txt,
+  signsgd_update_<n>.hlo.txt, frugal_sgdm_update_<n>.hlo.txt
+
+``manifest.json`` describes, for every artifact, the input/output layout
+and the per-parameter (name, role, offset, shape) table the Rust
+coordinator uses to build blockwise/columnwise masks.
+
+Incremental: a re-run skips artifacts whose file already exists unless
+--force is passed (so ``make artifacts`` is a no-op on an up-to-date tree;
+make-level mtime checks handle source changes).
+"""
+
+import argparse
+import functools
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, PAD_BLOCK
+from .kernels.adamw import adamw_update
+from .kernels.frugal_sgdm import frugal_sgdm_update
+from .kernels.frugal_update import frugal_update
+from .kernels.signsgd import signsgd_update
+
+# Flat sizes for the optimizer-only artifacts (hot-path benches + runtime
+# unit tests). Must be multiples of PAD_BLOCK.
+OPT_SIZES = [4096, 1 << 20]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_model_artifacts(cfg, out_dir, force):
+    n = model.padded_size(cfg)
+    b, s = cfg.batch, cfg.seq_len
+    flat = _spec((n,))
+    toks = _spec((b, s), jnp.int32)
+    scalar = _spec((1,))
+
+    entries = {}
+
+    def emit(name, fn, args):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if force or not os.path.exists(path):
+            text = to_hlo_text(jax.jit(fn).lower(*args))
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {path} ({len(text)} chars)")
+        else:
+            print(f"  skip {path} (exists)")
+        return os.path.basename(path)
+
+    entries["eval"] = emit(
+        f"eval_{cfg.name}",
+        functools.partial(model.eval_step, cfg=cfg), (flat, toks))
+    entries["grad"] = emit(
+        f"grad_{cfg.name}",
+        functools.partial(model.grad_step, cfg=cfg), (flat, toks))
+    entries["predict"] = emit(
+        f"predict_{cfg.name}",
+        functools.partial(model.predict_step, cfg=cfg), (flat, toks))
+    entries["step"] = emit(
+        f"step_{cfg.name}",
+        functools.partial(model.train_step, cfg=cfg),
+        (flat, flat, flat, flat, toks, scalar, scalar, scalar))
+
+    params = []
+    off = 0
+    for name, shape, role in model.param_spec(cfg):
+        params.append({"name": name, "role": role, "offset": off,
+                       "shape": list(shape)})
+        off += math.prod(shape)
+
+    return {
+        "arch": cfg.arch,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq_len": s,
+        "batch": b,
+        "flat_size": model.flat_size(cfg),
+        "padded_size": n,
+        "beta1": cfg.beta1,
+        "beta2": cfg.beta2,
+        "eps": cfg.eps,
+        "weight_decay": cfg.weight_decay,
+        "artifacts": entries,
+        "params": params,
+    }
+
+
+def lower_opt_artifacts(out_dir, force):
+    entries = {}
+    for n in OPT_SIZES:
+        vec = _spec((n,))
+        scalar = _spec((1,))
+        kinds = {
+            f"frugal_update_{n}": (frugal_update,
+                                   (vec, vec, vec, vec, vec, scalar, scalar,
+                                    scalar)),
+            f"adamw_update_{n}": (adamw_update,
+                                  (vec, vec, vec, vec, scalar, scalar)),
+            f"signsgd_update_{n}": (signsgd_update, (vec, vec, scalar)),
+            f"frugal_sgdm_update_{n}": (frugal_sgdm_update,
+                                        (vec, vec, vec, vec, scalar)),
+        }
+        for name, (fn, args) in kinds.items():
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            if force or not os.path.exists(path):
+                text = to_hlo_text(jax.jit(fn).lower(*args))
+                with open(path, "w") as f:
+                    f.write(text)
+                print(f"  wrote {path} ({len(text)} chars)")
+            else:
+                print(f"  skip {path} (exists)")
+            entries[name] = f"{name}.hlo.txt"
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--configs", default="test,tiny,small,e2e,gpt2tiny",
+                    help="comma-separated config names (see configs.py)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"pad_block": PAD_BLOCK, "models": {}, "optim": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        print(f"config {name}: flat={model.flat_size(cfg)} "
+              f"padded={model.padded_size(cfg)}")
+        manifest["models"][name] = lower_model_artifacts(cfg, args.out,
+                                                         args.force)
+    manifest["optim"] = lower_opt_artifacts(args.out, args.force)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

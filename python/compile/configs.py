@@ -1,0 +1,74 @@
+"""Model configurations for AOT artifact generation.
+
+Each config describes a LLaMA-style (or GPT-2-style) decoder-only
+transformer. The shapes here are baked into the lowered HLO artifacts; the
+Rust coordinator discovers them through ``artifacts/manifest.json``.
+
+Paper mapping: the FRUGAL paper pre-trains LLaMA 60M/130M/350M/1B/3B on C4.
+We cannot pre-train those on a CPU testbed, so the configs below are
+scaled-down members of the same architecture family (RMSNorm + SwiGLU +
+RoPE, untied output head), per DESIGN.md §3. The analytic memory model in
+``rust/src/optim/memory.rs`` is evaluated at the paper's true sizes.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    arch: str = "llama"  # "llama" | "gpt2"
+    # FFN hidden size; LLaMA uses ~8/3*d rounded, GPT-2 uses 4*d.
+    d_ff: int = 0
+    use_pallas_norm: bool = True
+    # AdamW hyper-parameters baked into the fused step artifact.
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            if self.arch == "llama":
+                # LLaMA: h_ff = 8/3 * h, rounded up to a multiple of 8.
+                dff = int(round(self.d_model * 8 / 3))
+                dff = (dff + 7) // 8 * 8
+            else:
+                dff = 4 * self.d_model
+            object.__setattr__(self, "d_ff", dff)
+        assert self.d_model % self.n_heads == 0, "d_model must divide n_heads"
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Registry of configs with artifacts built by ``python -m compile.aot``.
+CONFIGS = {
+    # Minimal config used by unit tests: fast to lower and execute.
+    "test": ModelConfig("test", vocab=128, d_model=32, n_layers=2, n_heads=2,
+                        seq_len=32, batch=4),
+    # Small demo config (quickstart example).
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                        seq_len=64, batch=8),
+    # Bench config: the workhorse for table reproductions.
+    "small": ModelConfig("small", vocab=1024, d_model=128, n_layers=4,
+                         n_heads=4, seq_len=128, batch=8),
+    # End-to-end pre-training config (examples/pretrain.rs): ~7M params.
+    "e2e": ModelConfig("e2e", vocab=4096, d_model=256, n_layers=6, n_heads=8,
+                       seq_len=128, batch=8),
+    # GPT-2-style architecture (paper Table 12 ablation).
+    "gpt2tiny": ModelConfig("gpt2tiny", vocab=256, d_model=64, n_layers=2,
+                            n_heads=4, seq_len=64, batch=8, arch="gpt2"),
+}
+
+# Flat-vector block size used by the fused optimizer kernels. The flat
+# parameter vector is zero-padded to a multiple of this. (8,128)-aligned for
+# the TPU VPU; on CPU interpret mode it is simply the pallas grid tile.
+PAD_BLOCK = 1024

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: standalone fused AdamW step over a flat vector.
+
+Used for the full-rank AdamW baseline artifact (paper Table 2 first row)
+and as the state-full half of the FRUGAL kernel's unit tests. Same flat
+layout and scalar conventions as ``frugal_update``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import PAD_BLOCK
+from .frugal_update import _auto_block
+
+
+def _kernel(p_ref, g_ref, m_ref, v_ref, lr_ref, step_ref,
+            new_p_ref, new_m_ref, new_v_ref,
+            *, beta1, beta2, eps, weight_decay):
+    p = p_ref[...]
+    g = g_ref[...]
+    lr = lr_ref[0]
+    step = step_ref[0]
+    new_m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    new_v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    update = new_m / bc1 / (jnp.sqrt(new_v / bc2) + eps)
+    if weight_decay != 0.0:
+        update = update + weight_decay * p
+    new_p_ref[...] = p - lr * update
+    new_m_ref[...] = new_m
+    new_v_ref[...] = new_v
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps",
+                                             "weight_decay", "block"))
+def adamw_update(p, g, m, v, lr, step, *, beta1=0.9, beta2=0.999, eps=1e-8,
+                 weight_decay=0.0, block=PAD_BLOCK):
+    """One AdamW step over f32[N] (N a multiple of ``block``).
+
+    ``lr`` and ``step`` are f32[1]. Returns (new_p, new_m, new_v).
+    """
+    n = p.shape[0]
+    assert n % block == 0, f"flat length {n} not a multiple of {block}"
+    block = _auto_block(n, block)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    kernel = functools.partial(_kernel, beta1=beta1, beta2=beta2, eps=eps,
+                               weight_decay=weight_decay)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[vec, vec, vec, vec, scalar, scalar],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype)] * 3,
+        interpret=True,
+    )(p, g, m, v, lr, step)

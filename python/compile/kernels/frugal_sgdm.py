@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: FRUGAL (SGDM, SGD) — the theory instance, paper Alg. 2.
+
+State-full lanes run SGD-with-momentum, state-free lanes run plain SGD, and
+a lane's momentum buffer is released (zeroed) whenever it is outside the
+momentum set J_k — exactly Alg. 2 line 3. Used by the theory-validation
+tests (Thm 5.2 sanity checks) and the toy-problem artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import PAD_BLOCK
+from .frugal_update import _auto_block
+
+
+def _kernel(p_ref, g_ref, m_ref, mask_ref, lr_ref, new_p_ref, new_m_ref,
+            *, beta):
+    g = g_ref[...]
+    on = mask_ref[...] > 0.0
+    # Alg. 2 line 3: m_j <- (1-beta) g_j + beta * (m_j if j in J_k else 0).
+    new_m = (1.0 - beta) * g + beta * jnp.where(on, m_ref[...], 0.0)
+    # Alg. 2 line 4: update with momentum inside J_k, raw gradient outside.
+    update = jnp.where(on, new_m, g)
+    new_p_ref[...] = p_ref[...] - lr_ref[0] * update
+    new_m_ref[...] = jnp.where(on, new_m, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block"))
+def frugal_sgdm_update(p, g, m, mask, lr, *, beta=0.9, block=PAD_BLOCK):
+    """One FRUGAL(SGDM, SGD) step over f32[N]; lr: f32[1].
+
+    Returns (new_p, new_m).
+    """
+    n = p.shape[0]
+    assert n % block == 0, f"flat length {n} not a multiple of {block}"
+    block = _auto_block(n, block)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_kernel, beta=beta),
+        grid=(n // block,),
+        in_specs=[vec, vec, vec, vec, scalar],
+        out_specs=[vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype)] * 2,
+        interpret=True,
+    )(p, g, m, mask, lr)

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: the fused FRUGAL masked optimizer update.
+
+This is the paper's compute hot-spot — paper Alg. 1 / Alg. 4 specialized to
+the configuration used in all main experiments (AdamW as the state-full
+optimizer, signSGD as the state-free optimizer, blockwise/columnwise
+subspace selection expressed as a runtime 0/1 mask over the flat parameter
+vector).
+
+Hardware adaptation (DESIGN.md §2): on GPU the reference implementation
+(PyTorch, paper §G) launches separate elementwise kernels for exp_avg,
+exp_avg_sq, the Adam quotient, and the sign step — 6+ passes over HBM. Here
+the whole update is ONE pass: each grid step streams a PAD_BLOCK-sized tile
+of (p, g, m, v, mask) HBM→VMEM, computes both branches on the VPU with a
+vectorized select (no divergence penalty, unlike warp divergence), and
+streams (p', m', v') back. Per-tile VMEM footprint is 8 tiles × PAD_BLOCK ×
+4B = 32 KiB for PAD_BLOCK=1024 — far below the ~16 MiB VMEM budget, so the
+kernel is purely HBM-bandwidth-bound and the roofline is the 8-stream
+memcpy rate.
+
+All arrays are flat f32 vectors of the same padded length (a multiple of
+``configs.PAD_BLOCK``); scalars (lr_full, lr_free, step) arrive as shape-(1,)
+arrays so the lowered HLO stays static while the Rust coordinator varies
+them every step. ``interpret=True`` everywhere: CPU PJRT cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import PAD_BLOCK
+
+
+def _kernel(p_ref, g_ref, m_ref, v_ref, mask_ref,
+            lr_full_ref, lr_free_ref, step_ref,
+            new_p_ref, new_m_ref, new_v_ref,
+            *, beta1, beta2, eps, weight_decay):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    mask = mask_ref[...]
+    lr_full = lr_full_ref[0]
+    lr_free = lr_free_ref[0]
+    step = step_ref[0]
+
+    on = mask > 0.0
+
+    # State-full branch: AdamW with bias correction. State advances only on
+    # active lanes; inactive lanes have their state released (paper §4:
+    # "either resetting or projecting states is important").
+    new_m = beta1 * m + (1.0 - beta1) * g
+    new_v = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    adam_step = new_m / bc1 / (jnp.sqrt(new_v / bc2) + eps)
+    if weight_decay != 0.0:
+        adam_step = adam_step + weight_decay * p
+
+    # State-free branch: signSGD (no momentum, no state).
+    sign_step = jnp.sign(g)
+
+    update = jnp.where(on, lr_full * adam_step, lr_free * sign_step)
+    new_p_ref[...] = p - update
+    new_m_ref[...] = jnp.where(on, new_m, 0.0)
+    new_v_ref[...] = jnp.where(on, new_v, 0.0)
+
+
+def _auto_block(n: int, block: int) -> int:
+    """Perf (EXPERIMENTS.md §Perf iteration 1): interpret-mode pallas turns
+    each grid step into an XLA loop iteration with dynamic-slice; a
+    PAD_BLOCK-sized grid made the fused step ~36x slower than roofline on
+    CPU. The kernel is elementwise, so on CPU we use ONE grid step for
+    vectors up to 16 MiB (the whole flat vector for every config here).
+    On a real TPU the BlockSpec would instead tile (8,128)-aligned chunks
+    sized to double-buffer within the ~16 MiB VMEM budget."""
+    return n if n <= (1 << 22) else block
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps",
+                                             "weight_decay", "block"))
+def frugal_update(p, g, m, v, mask, lr_full, lr_free, step, *,
+                  beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0,
+                  block=PAD_BLOCK):
+    """Apply one fused FRUGAL step over a flat padded parameter vector.
+
+    Args:
+      p, g, m, v, mask: f32[N] with N a multiple of ``block``. ``mask`` is
+        1.0 on state-full lanes, 0.0 on state-free lanes. Padding lanes must
+        have g == 0 and mask == 0 (sign(0) == 0 keeps them fixed).
+      lr_full, lr_free, step: f32[1] scalars (step is 1-based, drives Adam
+        bias correction).
+    Returns:
+      (new_p, new_m, new_v), each f32[N].
+    """
+    n = p.shape[0]
+    assert n % block == 0, f"flat length {n} not a multiple of {block}"
+    block = _auto_block(n, block)
+    grid = (n // block,)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), p.dtype)] * 3
+    kernel = functools.partial(_kernel, beta1=beta1, beta2=beta2, eps=eps,
+                               weight_decay=weight_decay)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec, vec, vec, vec, vec, scalar, scalar, scalar],
+        out_specs=[vec, vec, vec],
+        out_shape=out_shape,
+        interpret=True,
+    )(p, g, m, v, mask, lr_full, lr_free, step)

@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest/hypothesis sweeps compare the
+Pallas kernels (interpret=True) against these implementations with
+``assert_allclose``. They are also used directly by the L2 model when a
+kernel is disabled (e.g. ``use_pallas_norm=False``).
+"""
+
+import jax.numpy as jnp
+
+
+def adamw_ref(p, g, m, v, lr, step, *, beta1=0.9, beta2=0.999, eps=1e-8,
+              weight_decay=0.0):
+    """One decoupled-weight-decay Adam step (Loshchilov & Hutter).
+
+    ``step`` is the 1-based step count used for bias correction.
+    Returns (new_p, new_m, new_v).
+    """
+    new_m = beta1 * m + (1.0 - beta1) * g
+    new_v = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    m_hat = new_m / bc1
+    v_hat = new_v / bc2
+    update = m_hat / (jnp.sqrt(v_hat) + eps)
+    new_p = p - lr * update - lr * weight_decay * p
+    return new_p, new_m, new_v
+
+
+def signsgd_ref(p, g, lr):
+    """One signSGD step (Bernstein et al., 2018), no momentum."""
+    return p - lr * jnp.sign(g)
+
+
+def sgd_ref(p, g, lr):
+    """Plain SGD step."""
+    return p - lr * g
+
+
+def frugal_update_ref(p, g, m, v, mask, lr_full, lr_free, step, *,
+                      beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0):
+    """The FRUGAL fused masked update (paper Alg. 1/4, blockwise variant).
+
+    Lanes with ``mask > 0`` are *state-full*: they take an AdamW step and
+    their (m, v) state advances. Lanes with ``mask == 0`` are *state-free*:
+    they take a signSGD step and their state is held at zero — this encodes
+    the paper's reset-on-subspace-change semantics (§4, §D): the moment a
+    lane leaves the state-full subspace its stale state is discarded, so
+    state and gradient always live in the same subspace.
+
+    Returns (new_p, new_m, new_v).
+    """
+    on = mask > 0
+    new_m = beta1 * m + (1.0 - beta1) * g
+    new_v = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    adam_step = new_m / bc1 / (jnp.sqrt(new_v / bc2) + eps) + weight_decay * p
+    sign_step = jnp.sign(g)
+    new_p = p - jnp.where(on, lr_full * adam_step, lr_free * sign_step)
+    new_m = jnp.where(on, new_m, 0.0)
+    new_v = jnp.where(on, new_v, 0.0)
+    return new_p, new_m, new_v
+
+
+def frugal_sgdm_ref(p, g, m, mask, lr, *, beta=0.9):
+    """The theory instance: FRUGAL(SGDM, SGD) — paper Alg. 2.
+
+    State-full lanes (mask>0) run SGDM with buffer m; state-free lanes run
+    plain SGD and their momentum buffer is released (set to zero), exactly
+    as in Alg. 2 line 3.
+    Returns (new_p, new_m).
+    """
+    on = mask > 0
+    new_m = (1.0 - beta) * g + beta * jnp.where(on, m, 0.0)
+    update = jnp.where(on, new_m, g)
+    return p - lr * update, jnp.where(on, new_m, 0.0)
+
+
+def rmsnorm_ref(x, gain, *, eps=1e-6):
+    """RMSNorm (Zhang & Sennrich, 2019) over the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gain

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: RMSNorm forward, with a custom VJP.
+
+RMSNorm is the normalization used by the paper's LLaMA-style models
+(Zhang & Sennrich, 2019). The forward pass is a Pallas kernel (one row of
+the (tokens, d_model) activation matrix per grid step, resident in VMEM);
+the backward pass is pure jnp under ``jax.custom_vjp`` so the whole model
+remains differentiable when lowering the train-step artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import rmsnorm_ref
+
+EPS = 1e-6
+
+
+def _kernel(x_ref, gain_ref, o_ref):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ms + EPS)) * gain_ref[...]
+
+
+def _forward(x2d, gain):
+    rows, d = x2d.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x2d.dtype),
+        interpret=True,
+    )(x2d, gain)
+
+
+@jax.custom_vjp
+def rmsnorm(x, gain):
+    """RMSNorm over the last axis; ``x``: (..., d), ``gain``: (d,)."""
+    shape = x.shape
+    y = _forward(x.reshape(-1, shape[-1]), gain)
+    return y.reshape(shape)
+
+
+def _fwd(x, gain):
+    return rmsnorm(x, gain), (x, gain)
+
+
+def _bwd(res, ct):
+    x, gain = res
+    # d/dx [ x * rstd(x) * gain ]: with r = 1/sqrt(mean(x^2)+eps),
+    # dy/dx = r*gain*I - r^3/d * gain * x x^T (per row).
+    d = x.shape[-1]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    r = 1.0 / jnp.sqrt(ms + EPS)
+    gct = ct * gain
+    dot = jnp.sum(gct * x, axis=-1, keepdims=True)
+    dx = r * gct - (r ** 3 / d) * x * dot
+    dgain = jnp.sum(ct * x * r, axis=tuple(range(x.ndim - 1)))
+    return dx, dgain
+
+
+rmsnorm.defvjp(_fwd, _bwd)

@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: standalone signSGD step over a flat vector.
+
+The state-free optimizer of the paper's main configuration (§4). Also the
+entire optimizer for the pure-signSGD row of paper Table 17.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import PAD_BLOCK
+from .frugal_update import _auto_block
+
+
+def _kernel(p_ref, g_ref, lr_ref, new_p_ref):
+    new_p_ref[...] = p_ref[...] - lr_ref[0] * jnp.sign(g_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def signsgd_update(p, g, lr, *, block=PAD_BLOCK):
+    """One signSGD step over f32[N] (N a multiple of ``block``); lr: f32[1]."""
+    n = p.shape[0]
+    assert n % block == 0, f"flat length {n} not a multiple of {block}"
+    block = _auto_block(n, block)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[vec, vec, scalar],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        interpret=True,
+    )(p, g, lr)

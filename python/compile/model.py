@@ -1,0 +1,234 @@
+"""L2: LLaMA-style (and GPT-2-style) decoder-only transformer in JAX.
+
+All parameters live in ONE flat f32 vector (zero-padded to a multiple of
+``configs.PAD_BLOCK``). This is the interchange contract with the Rust
+coordinator: Rust owns the flat vector (init, optimizer state, subspace
+masks keyed on the per-parameter offsets from the manifest) and the lowered
+HLO artifacts take/return the flat vector. The layout is fixed by
+``param_spec`` and exported via ``aot.py`` into ``artifacts/manifest.json``.
+
+The forward pass calls the Pallas RMSNorm kernel (L1) through its custom
+VJP, so the lowered train-step HLO genuinely contains the kernel's ops.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PAD_BLOCK
+from .kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+from .kernels.ref import rmsnorm_ref
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig):
+    """Ordered list of (name, shape, role) defining the flat layout.
+
+    ``role`` is one of "embed" | "norm" | "linear" | "output" — the module
+    classes the paper treats differently (Embeddings/RMSNorms/Output always
+    state-full; Linear layers are the projectable set — paper §6.1/§A.1).
+    """
+    d, dff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    spec = [("embed.tok", (v, d), "embed")]
+    if cfg.arch == "gpt2":
+        spec.append(("embed.pos", (cfg.seq_len, d), "embed"))
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        if cfg.arch == "llama":
+            spec += [
+                (pre + "attn_norm", (d,), "norm"),
+                (pre + "wq", (d, d), "linear"),
+                (pre + "wk", (d, d), "linear"),
+                (pre + "wv", (d, d), "linear"),
+                (pre + "wo", (d, d), "linear"),
+                (pre + "ffn_norm", (d,), "norm"),
+                (pre + "w_gate", (d, dff), "linear"),
+                (pre + "w_up", (d, dff), "linear"),
+                (pre + "w_down", (dff, d), "linear"),
+            ]
+        else:  # gpt2
+            spec += [
+                (pre + "ln1.g", (d,), "norm"),
+                (pre + "ln1.b", (d,), "norm"),
+                (pre + "wq", (d, d), "linear"),
+                (pre + "wk", (d, d), "linear"),
+                (pre + "wv", (d, d), "linear"),
+                (pre + "wo", (d, d), "linear"),
+                (pre + "ln2.g", (d,), "norm"),
+                (pre + "ln2.b", (d,), "norm"),
+                (pre + "fc_in", (d, dff), "linear"),
+                (pre + "fc_out", (dff, d), "linear"),
+            ]
+    if cfg.arch == "llama":
+        spec.append(("final_norm", (d,), "norm"))
+    else:
+        spec += [("final_norm.g", (d,), "norm"), ("final_norm.b", (d,), "norm")]
+    spec.append(("output", (d, v), "output"))
+    return spec
+
+
+def flat_size(cfg: ModelConfig) -> int:
+    return sum(math.prod(shape) for _, shape, _ in param_spec(cfg))
+
+
+def padded_size(cfg: ModelConfig) -> int:
+    n = flat_size(cfg)
+    return (n + PAD_BLOCK - 1) // PAD_BLOCK * PAD_BLOCK
+
+
+def unflatten(flat, cfg: ModelConfig):
+    """Slice the flat vector into the named parameter dict (static offsets)."""
+    params = {}
+    off = 0
+    for name, shape, _ in param_spec(cfg):
+        n = math.prod(shape)
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Reference initializer (tests / golden vectors). Rust mirrors this
+    scheme (N(0, 0.02) for weights, 1 for gains, 0 for biases) with its own
+    RNG; exact agreement is not required, only the same distribution."""
+    parts = []
+    for name, shape, role in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        n = math.prod(shape)
+        if role == "norm":
+            val = jnp.zeros(n) if name.endswith(".b") else jnp.ones(n)
+        else:
+            val = 0.02 * jax.random.normal(sub, (n,))
+        parts.append(val.astype(jnp.float32))
+    flat = jnp.concatenate(parts)
+    pad = padded_size(cfg) - flat.shape[0]
+    return jnp.pad(flat, (0, pad))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x, gain, use_pallas):
+    return rmsnorm_pallas(x, gain) if use_pallas else rmsnorm_ref(x, gain)
+
+
+def _layernorm(x, gain, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gain + bias
+
+
+def _rope(x):
+    """Rotary position embedding over (B, S, H, Dh)."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(s, dtype=jnp.float32)
+    angles = jnp.einsum("s,f->sf", t, freqs)  # (S, half)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(x, p, pre, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p[pre + "wq"]).reshape(b, s, h, dh)
+    k = (x @ p[pre + "wk"]).reshape(b, s, h, dh)
+    v = (x @ p[pre + "wv"]).reshape(b, s, h, dh)
+    if cfg.arch == "llama":
+        q, k = _rope(q), _rope(k)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", attn, v).reshape(b, s, d)
+    return out @ p[pre + "wo"]
+
+
+def forward(flat, tokens, cfg: ModelConfig):
+    """Token logits. ``tokens``: i32 (B, S). Returns (B, S, vocab)."""
+    p = unflatten(flat, cfg)
+    x = p["embed.tok"][tokens]
+    if cfg.arch == "gpt2":
+        x = x + p["embed.pos"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        if cfg.arch == "llama":
+            hmid = _rmsnorm(x, p[pre + "attn_norm"], cfg.use_pallas_norm)
+            x = x + _attention(hmid, p, pre, cfg)
+            hmid = _rmsnorm(x, p[pre + "ffn_norm"], cfg.use_pallas_norm)
+            gate = jax.nn.silu(hmid @ p[pre + "w_gate"])
+            x = x + (gate * (hmid @ p[pre + "w_up"])) @ p[pre + "w_down"]
+        else:
+            hmid = _layernorm(x, p[pre + "ln1.g"], p[pre + "ln1.b"])
+            x = x + _attention(hmid, p, pre, cfg)
+            hmid = _layernorm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+            x = x + jax.nn.gelu(hmid @ p[pre + "fc_in"]) @ p[pre + "fc_out"]
+    if cfg.arch == "llama":
+        x = _rmsnorm(x, p["final_norm"], cfg.use_pallas_norm)
+    else:
+        x = _layernorm(x, p["final_norm.g"], p["final_norm.b"])
+    return x @ p["output"]
+
+
+def loss_fn(flat, tokens, cfg: ModelConfig):
+    """Mean next-token cross-entropy (natural log; perplexity = exp(loss))."""
+    logits = forward(flat, tokens, cfg)  # (B, S, V)
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - picked)
+
+
+# ---------------------------------------------------------------------------
+# Artifact entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def eval_step(flat, tokens, cfg: ModelConfig):
+    """(loss,) for a batch — the validation-perplexity path."""
+    return (loss_fn(flat, tokens, cfg),)
+
+
+def predict_step(flat, tokens, cfg: ModelConfig):
+    """(logits at the second-to-last position,) — predicts the final token
+    of each sequence. Drives the fine-tuning accuracy benches: tasks render
+    the class label as the last token (see rust/src/data/tasks.rs), so
+    argmax over the label-token ids here is classification accuracy.
+    Causality makes feeding the full (label-included) sequence safe."""
+    logits = forward(flat, tokens, cfg)
+    return (logits[:, -2, :],)
+
+
+def grad_step(flat, tokens, cfg: ModelConfig):
+    """(loss, grads) — feeds the Rust-side optimizer suite (GaLore/BAdam/
+    Fira/LDAdam/… need SVD or other host-side math, so they consume raw
+    gradients and update parameters in Rust)."""
+    loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+    return loss, grads
+
+
+def train_step(flat, m, v, mask, tokens, lr_full, lr_free, step,
+               cfg: ModelConfig):
+    """The fused hot path: fwd + bwd + FRUGAL masked update in one HLO.
+
+    The Pallas ``frugal_update`` kernel consumes the flat gradient. Rust
+    varies ``mask`` every T steps (subspace re-selection) and ``lr_*``
+    every step (schedules) without touching the artifact.
+    Returns (loss, new_flat, new_m, new_v).
+    """
+    from .kernels.frugal_update import frugal_update
+
+    loss, grads = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+    new_p, new_m, new_v = frugal_update(
+        flat, grads, m, v, mask, lr_full, lr_free, step,
+        beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+        weight_decay=cfg.weight_decay)
+    return loss, new_p, new_m, new_v

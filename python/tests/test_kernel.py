@@ -1,0 +1,256 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/values for every L1 kernel and asserts
+``allclose`` against ``kernels/ref.py``.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.adamw import adamw_update
+from compile.kernels.frugal_sgdm import frugal_sgdm_update
+from compile.kernels.frugal_update import frugal_update
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.signsgd import signsgd_update
+
+ATOL = 1e-5
+BLOCK = 256  # small block so hypothesis can sweep several grid sizes fast
+
+
+def _arr(rng, n, scale=1.0):
+    return jnp.asarray(rng.standard_normal(n) * scale, dtype=jnp.float32)
+
+
+def _scalar(x):
+    return jnp.asarray([x], dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# frugal_update — the paper's fused masked AdamW+signSGD step
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1),
+       step=st.integers(1, 1000), density=st.floats(0.0, 1.0))
+def test_frugal_update_matches_ref(blocks, seed, step, density):
+    rng = np.random.default_rng(seed)
+    n = blocks * BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    v = jnp.abs(_arr(rng, n, 0.01))
+    mask = jnp.asarray(rng.random(n) < density, dtype=jnp.float32)
+    lr_f, lr_s = 1e-3, 3e-4
+    got = frugal_update(p, g, m, v, mask, _scalar(lr_f), _scalar(lr_s),
+                        _scalar(float(step)), block=BLOCK)
+    want = ref.frugal_update_ref(p, g, m, v, mask, lr_f, lr_s, float(step))
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+@pytest.mark.parametrize("wd", [0.0, 0.1])
+@pytest.mark.parametrize("betas", [(0.9, 0.999), (0.9, 0.95)])
+def test_frugal_update_hyperparams(wd, betas):
+    """Paper Table 8 uses beta2=0.95; the 3B run uses weight decay 0.1."""
+    rng = np.random.default_rng(7)
+    n = 2 * BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    v = jnp.abs(_arr(rng, n, 0.01))
+    mask = jnp.asarray(rng.integers(0, 2, n), dtype=jnp.float32)
+    got = frugal_update(p, g, m, v, mask, _scalar(1e-3), _scalar(1e-3),
+                        _scalar(5.0), beta1=betas[0], beta2=betas[1],
+                        weight_decay=wd, block=BLOCK)
+    want = ref.frugal_update_ref(p, g, m, v, mask, 1e-3, 1e-3, 5.0,
+                                 beta1=betas[0], beta2=betas[1],
+                                 weight_decay=wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+def test_frugal_update_all_on_is_adamw():
+    """mask == 1 everywhere reduces FRUGAL to plain AdamW (paper Table 17,
+    rho=1.0 column)."""
+    rng = np.random.default_rng(1)
+    n = 2 * BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    v = jnp.abs(_arr(rng, n, 0.01))
+    ones = jnp.ones(n, dtype=jnp.float32)
+    got = frugal_update(p, g, m, v, ones, _scalar(1e-3), _scalar(9.0),
+                        _scalar(3.0), block=BLOCK)
+    want = ref.adamw_ref(p, g, m, v, 1e-3, 3.0)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+def test_frugal_update_all_off_is_signsgd():
+    """mask == 0 everywhere reduces FRUGAL to pure signSGD with zero state
+    (paper Table 17 'signSgd' column / Table 7 rho=0)."""
+    rng = np.random.default_rng(2)
+    n = BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    v = jnp.abs(_arr(rng, n, 0.01))
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    new_p, new_m, new_v = frugal_update(p, g, m, v, zeros, _scalar(9.0),
+                                        _scalar(1e-3), _scalar(3.0),
+                                        block=BLOCK)
+    np.testing.assert_allclose(np.asarray(new_p),
+                               np.asarray(ref.signsgd_ref(p, g, 1e-3)),
+                               atol=ATOL)
+    assert not np.any(np.asarray(new_m))
+    assert not np.any(np.asarray(new_v))
+
+
+def test_frugal_update_padding_lanes_frozen():
+    """Padding lanes (g == 0, mask == 0) must never move: sign(0) == 0."""
+    rng = np.random.default_rng(3)
+    n = BLOCK
+    p = _arr(rng, n)
+    g = jnp.zeros(n, dtype=jnp.float32)
+    z = jnp.zeros(n, dtype=jnp.float32)
+    new_p, new_m, new_v = frugal_update(p, g, z, z, z, _scalar(1.0),
+                                        _scalar(1.0), _scalar(1.0),
+                                        block=BLOCK)
+    np.testing.assert_array_equal(np.asarray(new_p), np.asarray(p))
+    assert not np.any(np.asarray(new_m))
+    assert not np.any(np.asarray(new_v))
+
+
+def test_frugal_update_state_release_on_mask_change():
+    """When a lane leaves the state-full set its (m, v) is released —
+    the paper's reset semantics (§4: resetting performs comparably to
+    projection; §D: stale state in a different subspace is harmful)."""
+    rng = np.random.default_rng(4)
+    n = BLOCK
+    p, g = _arr(rng, n), _arr(rng, n)
+    m, v = _arr(rng, n, 0.5), jnp.abs(_arr(rng, n, 0.5))
+    mask = jnp.zeros(n, dtype=jnp.float32).at[: n // 2].set(1.0)
+    _, new_m, new_v = frugal_update(p, g, m, v, mask, _scalar(1e-3),
+                                    _scalar(1e-3), _scalar(2.0), block=BLOCK)
+    assert not np.any(np.asarray(new_m)[n // 2:])
+    assert not np.any(np.asarray(new_v)[n // 2:])
+    assert np.any(np.asarray(new_m)[: n // 2])
+
+
+# ---------------------------------------------------------------------------
+# adamw / signsgd standalone kernels
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1),
+       step=st.integers(1, 500))
+def test_adamw_matches_ref(blocks, seed, step):
+    rng = np.random.default_rng(seed)
+    n = blocks * BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    v = jnp.abs(_arr(rng, n, 0.01))
+    got = adamw_update(p, g, m, v, _scalar(1e-3), _scalar(float(step)),
+                       block=BLOCK)
+    want = ref.adamw_ref(p, g, m, v, 1e-3, float(step))
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(1e-5, 1e-1))
+def test_signsgd_matches_ref(blocks, seed, lr):
+    rng = np.random.default_rng(seed)
+    n = blocks * BLOCK
+    p, g = _arr(rng, n), _arr(rng, n)
+    got = signsgd_update(p, g, _scalar(lr), block=BLOCK)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.signsgd_ref(p, g, lr)),
+                               atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# frugal_sgdm — the theory instance (paper Alg. 2)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(blocks=st.integers(1, 3), seed=st.integers(0, 2**31 - 1),
+       beta=st.floats(0.0, 0.99), density=st.floats(0.0, 1.0))
+def test_frugal_sgdm_matches_ref(blocks, seed, beta, density):
+    rng = np.random.default_rng(seed)
+    n = blocks * BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    mask = jnp.asarray(rng.random(n) < density, dtype=jnp.float32)
+    got = frugal_sgdm_update(p, g, m, mask, _scalar(1e-2), beta=beta,
+                             block=BLOCK)
+    want = ref.frugal_sgdm_ref(p, g, m, mask, 1e-2, beta=beta)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
+
+
+def test_frugal_sgdm_full_mask_is_sgdm():
+    """J_k == [d] reduces Alg. 2 to SGDM (paper §5.2 discussion)."""
+    rng = np.random.default_rng(5)
+    n = BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    ones = jnp.ones(n, dtype=jnp.float32)
+    new_p, new_m = frugal_sgdm_update(p, g, m, ones, _scalar(1e-2),
+                                      beta=0.9, block=BLOCK)
+    want_m = 0.1 * g + 0.9 * m
+    np.testing.assert_allclose(np.asarray(new_m), np.asarray(want_m),
+                               atol=ATOL)
+    np.testing.assert_allclose(np.asarray(new_p),
+                               np.asarray(p - 1e-2 * want_m), atol=ATOL)
+
+
+def test_frugal_sgdm_empty_mask_is_sgd():
+    """J_k == {} reduces Alg. 2 to plain SGD (paper §5.2 discussion)."""
+    rng = np.random.default_rng(6)
+    n = BLOCK
+    p, g, m = _arr(rng, n), _arr(rng, n), _arr(rng, n, 0.1)
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    new_p, new_m = frugal_sgdm_update(p, g, m, zeros, _scalar(1e-2),
+                                      beta=0.9, block=BLOCK)
+    np.testing.assert_allclose(np.asarray(new_p), np.asarray(p - 1e-2 * g),
+                               atol=ATOL)
+    assert not np.any(np.asarray(new_m))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm kernel (fwd pallas + custom-vjp bwd)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 16), d=st.sampled_from([8, 32, 64, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, d)), dtype=jnp.float32)
+    gain = jnp.asarray(rng.standard_normal(d), dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, gain)),
+                               np.asarray(ref.rmsnorm_ref(x, gain)),
+                               atol=ATOL)
+
+
+def test_rmsnorm_grad_matches_ref():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((4, 6, 32)), dtype=jnp.float32)
+    gain = jnp.asarray(rng.standard_normal(32), dtype=jnp.float32)
+
+    def f(x, g):
+        return jnp.sum(jnp.tanh(rmsnorm(x, g)))
+
+    def fr(x, g):
+        return jnp.sum(jnp.tanh(ref.rmsnorm_ref(x, g)))
+
+    ga = jax.grad(f, argnums=(0, 1))(x, gain)
+    gb = jax.grad(fr, argnums=(0, 1))(x, gain)
+    np.testing.assert_allclose(np.asarray(ga[0]), np.asarray(gb[0]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ga[1]), np.asarray(gb[1]),
+                               atol=1e-4)
+
+
+def test_rmsnorm_3d_batch():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((2, 3, 16)), dtype=jnp.float32)
+    gain = jnp.ones(16, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, gain)),
+                               np.asarray(ref.rmsnorm_ref(x, gain)),
+                               atol=ATOL)

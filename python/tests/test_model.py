@@ -1,0 +1,221 @@
+"""L2 model tests: layout, shapes, gradients, loss behaviour, train step."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS, ModelConfig, PAD_BLOCK
+
+
+CFG = CONFIGS["test"]
+GPT = CONFIGS["gpt2tiny"]
+
+
+def _params(cfg, seed=0):
+    return model.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _tokens(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)),
+                       dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+def test_param_spec_offsets_cover_flat_size():
+    off = 0
+    for name, shape, role in model.param_spec(CFG):
+        off += math.prod(shape)
+    assert off == model.flat_size(CFG)
+
+
+def test_padded_size_is_block_multiple():
+    for cfg in CONFIGS.values():
+        assert model.padded_size(cfg) % PAD_BLOCK == 0
+        assert 0 <= model.padded_size(cfg) - model.flat_size(cfg) < PAD_BLOCK
+
+
+def test_unflatten_roundtrip():
+    flat = _params(CFG)
+    params = model.unflatten(flat, CFG)
+    off = 0
+    for name, shape, _ in model.param_spec(CFG):
+        n = math.prod(shape)
+        np.testing.assert_array_equal(
+            np.asarray(params[name]).reshape(-1),
+            np.asarray(flat[off:off + n]))
+        off += n
+
+
+def test_roles_partition():
+    roles = {r for _, _, r in model.param_spec(CFG)}
+    assert roles == {"embed", "norm", "linear", "output"}
+    # Linear layers dominate the parameter count in LLaMA-like models
+    # (paper footnote 2: "Linear layers contain most parameters").
+    by_role = {}
+    for _, shape, role in model.param_spec(CONFIGS["small"]):
+        by_role[role] = by_role.get(role, 0) + math.prod(shape)
+    assert by_role["linear"] > by_role["embed"]
+    assert by_role["linear"] > 10 * by_role["norm"]
+
+
+def test_llama_ffn_is_8_thirds():
+    cfg = CONFIGS["small"]
+    want = int(round(cfg.d_model * 8 / 3))
+    assert abs(cfg.d_ff - want) <= 8
+
+
+def test_norm_params_init_to_one():
+    flat = _params(CFG)
+    params = model.unflatten(flat, CFG)
+    np.testing.assert_array_equal(np.asarray(params["final_norm"]),
+                                  np.ones(CFG.d_model, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def test_forward_shape():
+    logits = model.forward(_params(CFG), _tokens(CFG), CFG)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+
+def test_forward_gpt2_shape():
+    logits = model.forward(_params(GPT), _tokens(GPT), GPT)
+    assert logits.shape == (GPT.batch, GPT.seq_len, GPT.vocab)
+
+
+def test_initial_loss_near_uniform():
+    """Fresh init should predict ~uniform: loss ≈ ln(vocab)."""
+    loss = float(model.loss_fn(_params(CFG), _tokens(CFG), CFG))
+    assert abs(loss - math.log(CFG.vocab)) < 0.5
+
+
+def test_causality():
+    """Changing a future token must not affect past logits."""
+    flat = _params(CFG)
+    toks = _tokens(CFG)
+    logits1 = model.forward(flat, toks, CFG)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits2 = model.forward(flat, toks2, CFG)
+    np.testing.assert_allclose(np.asarray(logits1[:, :-1]),
+                               np.asarray(logits2[:, :-1]), atol=1e-5)
+
+
+def test_pallas_norm_matches_ref_norm_forward():
+    """The model with the Pallas RMSNorm must equal the model with the
+    jnp reference norm — end-to-end L1-in-L2 equivalence."""
+    flat = _params(CFG)
+    toks = _tokens(CFG)
+    cfg_ref = ModelConfig(**{**CFG.__dict__, "name": "test_ref",
+                             "use_pallas_norm": False, "d_ff": CFG.d_ff})
+    l1 = model.forward(flat, toks, CFG)
+    l2 = model.forward(flat, toks, cfg_ref)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+
+
+def test_grad_nonzero_everywhere_unpadded():
+    """Every real parameter should receive gradient signal; padding must
+    stay at zero."""
+    loss, grads = model.grad_step(_params(CFG), _tokens(CFG), CFG)
+    g = np.asarray(grads)
+    nflat = model.flat_size(CFG)
+    # padding strictly zero
+    assert not np.any(g[nflat:])
+    # the vast majority of real lanes see gradient
+    assert np.mean(g[:nflat] != 0.0) > 0.9
+
+
+def test_grad_matches_finite_difference():
+    flat = _params(CFG)
+    toks = _tokens(CFG)
+    _, grads = model.grad_step(flat, toks, CFG)
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, model.flat_size(CFG), 5)
+    epsv = 1e-3
+    for i in idx:
+        e = jnp.zeros_like(flat).at[i].set(epsv)
+        l_plus = float(model.loss_fn(flat + e, toks, CFG))
+        l_minus = float(model.loss_fn(flat - e, toks, CFG))
+        fd = (l_plus - l_minus) / (2 * epsv)
+        assert abs(fd - float(grads[i])) < 5e-3, f"lane {i}"
+
+
+# ---------------------------------------------------------------------------
+# Fused train step
+# ---------------------------------------------------------------------------
+
+def test_train_step_reduces_loss():
+    flat = _params(CFG)
+    toks = _tokens(CFG)
+    n = model.padded_size(CFG)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    mask = jnp.zeros(n).at[: model.flat_size(CFG)].set(1.0)
+    lr = jnp.asarray([1e-3], jnp.float32)
+    loss0 = None
+    for step in range(1, 6):
+        loss, flat, m, v = model.train_step(
+            flat, m, v, mask, toks, lr, lr,
+            jnp.asarray([float(step)], jnp.float32), CFG)
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < loss0
+
+
+def test_train_step_matches_manual_composition():
+    """step artifact == grad artifact + frugal_update kernel."""
+    from compile.kernels.frugal_update import frugal_update
+
+    flat = _params(CFG)
+    toks = _tokens(CFG)
+    n = model.padded_size(CFG)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    rng = np.random.default_rng(3)
+    mask = jnp.asarray(rng.integers(0, 2, n), dtype=jnp.float32)
+    lr_f = jnp.asarray([1e-3], jnp.float32)
+    lr_s = jnp.asarray([4e-4], jnp.float32)
+    step = jnp.asarray([1.0], jnp.float32)
+
+    loss_a, p_a, m_a, v_a = model.train_step(flat, m, v, mask, toks, lr_f,
+                                             lr_s, step, CFG)
+    loss_b, grads = model.grad_step(flat, toks, CFG)
+    p_b, m_b, v_b = frugal_update(flat, grads, m, v, mask, lr_f, lr_s, step,
+                                  beta1=CFG.beta1, beta2=CFG.beta2,
+                                  eps=CFG.eps, weight_decay=CFG.weight_decay)
+    np.testing.assert_allclose(float(loss_a), float(loss_b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p_a), np.asarray(p_b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_a), np.asarray(m_b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v_a), np.asarray(v_b), atol=1e-6)
+
+
+def test_train_step_respects_mask_partition():
+    """State-free lanes move by exactly lr_free in absolute value (signSGD),
+    state-full lanes move by the Adam step."""
+    flat = _params(CFG)
+    toks = _tokens(CFG)
+    n = model.padded_size(CFG)
+    nreal = model.flat_size(CFG)
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    mask = jnp.zeros(n).at[: nreal // 2].set(1.0)
+    lr_s = 3e-4
+    _, new_flat, _, _ = model.train_step(
+        flat, m, v, mask, toks, jnp.asarray([1e-3], jnp.float32),
+        jnp.asarray([lr_s], jnp.float32), jnp.asarray([1.0], jnp.float32),
+        CFG)
+    delta = np.asarray(new_flat - flat)
+    _, grads = model.grad_step(flat, toks, CFG)
+    g = np.asarray(grads)
+    free = slice(nreal // 2, nreal)
+    moved = g[free] != 0
+    np.testing.assert_allclose(np.abs(delta[free][moved]), lr_s, rtol=1e-3)

@@ -1,0 +1,422 @@
+//! Experiment configuration (TOML) and the optimizer factory.
+//!
+//! A `TrainConfig` fully describes a run: model artifact, optimizer +
+//! hyper-parameters, schedule, duration, data seed. `configs/*.toml` ship
+//! ready-made files for the paper's experiments; every CLI flag can
+//! override a field.
+
+
+use crate::coordinator::LrSchedule;
+use crate::optim::adamw::AdamCfg;
+use crate::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, StateFreeKind,
+                           StateFullKind};
+use crate::optim::galore::{GaLore, GaLoreCfg, StateHandling};
+use crate::optim::lion::LionCfg;
+use crate::optim::{Layout, Optimizer};
+use crate::Result;
+
+/// Everything needed to launch a training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model config name from artifacts/manifest.json ("tiny", "small", …).
+    pub model: String,
+    /// Optimizer name: adamw | frugal | frugal0 | galore | galore-random |
+    /// badam | signsgd | sgd | sgdm | lion | adafactor | fira | ldadam |
+    /// adamem | lora | frugal-svd | frugal-randk | frugal-columnwise.
+    pub optimizer: String,
+    pub steps: u64,
+    /// Peak learning rate (paper grid: 1e-4 … 3e-3; default 1e-3).
+    pub lr: f64,
+    /// State-free LR multiplier (1.0 pre-training, 0.1 fine-tuning).
+    pub lr_free_mult: f64,
+    /// Density ρ for projection methods.
+    pub rho: f64,
+    /// Subspace update frequency T.
+    pub update_freq: u64,
+    /// Block policy for blockwise selection: random | ascending | descending.
+    pub block_policy: String,
+    /// Optional global-norm gradient clipping (paper: none; 1.0 for 3B).
+    pub clip: Option<f64>,
+    pub schedule: LrSchedule,
+    pub weight_decay: f64,
+    pub beta2: f64,
+    /// Evaluate on the held-out stream every N steps.
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub seed: u64,
+    /// Where artifacts live.
+    pub artifacts_dir: String,
+    /// Optional JSONL log path.
+    pub log_path: Option<String>,
+    /// Optional checkpoint path (written at the end of the run).
+    pub checkpoint: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "tiny".into(),
+            optimizer: "frugal".into(),
+            steps: 300,
+            lr: 1e-3,
+            lr_free_mult: 1.0,
+            rho: 0.25,
+            update_freq: 200,
+            block_policy: "random".into(),
+            clip: None,
+            schedule: LrSchedule::paper_default(10_000),
+            weight_decay: 0.0,
+            beta2: 0.999,
+            eval_every: 100,
+            eval_batches: 8,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+            log_path: None,
+            checkpoint: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse the flat `key = value` config format (see `configs/*.toml`).
+    /// The schedule is encoded as `schedule = "<kind>"` plus
+    /// `schedule_cycle` / `schedule_total` / `schedule_warmup` /
+    /// `schedule_min_frac` keys.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let kv = crate::util::kv::KvFile::parse(text)?;
+        let mut cfg = TrainConfig::default();
+        if let Some(v) = kv.get("model") {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = kv.get("optimizer") {
+            cfg.optimizer = v.to_string();
+        }
+        if let Some(v) = kv.get_u64("steps")? {
+            cfg.steps = v;
+        }
+        if let Some(v) = kv.get_f64("lr")? {
+            cfg.lr = v;
+        }
+        if let Some(v) = kv.get_f64("lr_free_mult")? {
+            cfg.lr_free_mult = v;
+        }
+        if let Some(v) = kv.get_f64("rho")? {
+            cfg.rho = v;
+        }
+        if let Some(v) = kv.get_u64("update_freq")? {
+            cfg.update_freq = v;
+        }
+        if let Some(v) = kv.get("block_policy") {
+            cfg.block_policy = v.to_string();
+        }
+        if let Some(v) = kv.get_f64("clip")? {
+            cfg.clip = Some(v);
+        }
+        if let Some(v) = kv.get_f64("weight_decay")? {
+            cfg.weight_decay = v;
+        }
+        if let Some(v) = kv.get_f64("beta2")? {
+            cfg.beta2 = v;
+        }
+        if let Some(v) = kv.get_u64("eval_every")? {
+            cfg.eval_every = v;
+        }
+        if let Some(v) = kv.get_u64("eval_batches")? {
+            cfg.eval_batches = v;
+        }
+        if let Some(v) = kv.get_u64("seed")? {
+            cfg.seed = v;
+        }
+        if let Some(v) = kv.get("artifacts_dir") {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = kv.get("log_path") {
+            cfg.log_path = Some(v.to_string());
+        }
+        if let Some(v) = kv.get("checkpoint") {
+            cfg.checkpoint = Some(v.to_string());
+        }
+        let cycle = kv.get_u64("schedule_cycle")?.unwrap_or(10_000);
+        let total = kv.get_u64("schedule_total")?.unwrap_or(cfg.steps);
+        let warmup = kv.get_u64("schedule_warmup")?.unwrap_or(total / 10);
+        let min_frac = kv.get_f64("schedule_min_frac")?.unwrap_or(0.1);
+        cfg.schedule = match kv.get("schedule") {
+            Some("constant_warmup") => LrSchedule::ConstantWarmup { warmup },
+            Some("cosine") => LrSchedule::Cosine { total, warmup, min_frac },
+            Some("cosine_restarts") | None => LrSchedule::paper_default(cycle),
+            Some(other) => anyhow::bail!("unknown schedule '{other}'"),
+        };
+        Ok(cfg)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        use std::fmt::Write;
+        let _ = writeln!(out, "model = \"{}\"", self.model);
+        let _ = writeln!(out, "optimizer = \"{}\"", self.optimizer);
+        let _ = writeln!(out, "steps = {}", self.steps);
+        let _ = writeln!(out, "lr = {}", self.lr);
+        let _ = writeln!(out, "lr_free_mult = {}", self.lr_free_mult);
+        let _ = writeln!(out, "rho = {}", self.rho);
+        let _ = writeln!(out, "update_freq = {}", self.update_freq);
+        let _ = writeln!(out, "block_policy = \"{}\"", self.block_policy);
+        if let Some(c) = self.clip {
+            let _ = writeln!(out, "clip = {c}");
+        }
+        let _ = writeln!(out, "weight_decay = {}", self.weight_decay);
+        let _ = writeln!(out, "beta2 = {}", self.beta2);
+        let _ = writeln!(out, "eval_every = {}", self.eval_every);
+        let _ = writeln!(out, "eval_batches = {}", self.eval_batches);
+        let _ = writeln!(out, "seed = {}", self.seed);
+        let _ = writeln!(out, "artifacts_dir = \"{}\"", self.artifacts_dir);
+        if let Some(p) = &self.log_path {
+            let _ = writeln!(out, "log_path = \"{p}\"");
+        }
+        if let Some(p) = &self.checkpoint {
+            let _ = writeln!(out, "checkpoint = \"{p}\"");
+        }
+        match &self.schedule {
+            LrSchedule::ConstantWarmup { warmup } => {
+                let _ = writeln!(out, "schedule = \"constant_warmup\"");
+                let _ = writeln!(out, "schedule_warmup = {warmup}");
+            }
+            LrSchedule::Cosine { total, warmup, min_frac } => {
+                let _ = writeln!(out, "schedule = \"cosine\"");
+                let _ = writeln!(out, "schedule_total = {total}");
+                let _ = writeln!(out, "schedule_warmup = {warmup}");
+                let _ = writeln!(out, "schedule_min_frac = {min_frac}");
+            }
+            LrSchedule::CosineRestarts { cycle, .. } => {
+                let _ = writeln!(out, "schedule = \"cosine_restarts\"");
+                let _ = writeln!(out, "schedule_cycle = {cycle}");
+            }
+        }
+        out
+    }
+
+    pub fn block_policy(&self) -> BlockPolicy {
+        match self.block_policy.as_str() {
+            "ascending" => BlockPolicy::Ascending,
+            "descending" => BlockPolicy::Descending,
+            _ => BlockPolicy::Random,
+        }
+    }
+
+    fn adam_cfg(&self) -> AdamCfg {
+        AdamCfg {
+            beta2: self.beta2 as f32,
+            weight_decay: self.weight_decay as f32,
+            ..Default::default()
+        }
+    }
+
+    /// Instantiate the Rust-side optimizer named by `self.optimizer`.
+    pub fn build_optimizer(&self, layout: &Layout) -> Result<Box<dyn Optimizer>> {
+        let n = layout.padded_size;
+        let adam = self.adam_cfg();
+        let frugal_cfg = |projection, state_free| FrugalCfg {
+            rho: self.rho as f32,
+            update_freq: self.update_freq,
+            projection,
+            block_policy: self.block_policy(),
+            state_full: StateFullKind::AdamW(adam),
+            state_free,
+            lr_free_mult: self.lr_free_mult as f32,
+            seed: self.seed,
+            ..Default::default()
+        };
+        let opt: Box<dyn Optimizer> = match self.optimizer.as_str() {
+            "adamw" => Box::new(crate::optim::AdamW::new(n, adam)),
+            "sgd" => Box::new(crate::optim::sgd::Sgd),
+            "signsgd" => Box::new(crate::optim::sgd::SignSgd),
+            "sgdm" => Box::new(crate::optim::sgd::Sgdm::new(n, 0.9)),
+            "lion" => Box::new(crate::optim::lion::Lion::new(n, LionCfg::default())),
+            "adafactor" => Box::new(crate::optim::adafactor::Adafactor::new(
+                layout.clone(),
+                Default::default(),
+            )),
+            "frugal" => Box::new(Frugal::new(
+                layout.clone(),
+                frugal_cfg(ProjectionKind::Blockwise, StateFreeKind::SignSgd),
+            )),
+            "frugal0" => {
+                let mut cfg = frugal_cfg(ProjectionKind::Blockwise, StateFreeKind::SignSgd);
+                cfg.rho = 0.0;
+                Box::new(Frugal::new(layout.clone(), cfg))
+            }
+            "frugal-sgd" => Box::new(Frugal::new(
+                layout.clone(),
+                frugal_cfg(ProjectionKind::Blockwise, StateFreeKind::Sgd),
+            )),
+            "frugal-svd" => Box::new(Frugal::new(
+                layout.clone(),
+                frugal_cfg(ProjectionKind::Svd, StateFreeKind::SignSgd),
+            )),
+            "frugal-random" => Box::new(Frugal::new(
+                layout.clone(),
+                frugal_cfg(ProjectionKind::Random, StateFreeKind::SignSgd),
+            )),
+            "frugal-randk" => Box::new(Frugal::new(
+                layout.clone(),
+                frugal_cfg(ProjectionKind::RandK, StateFreeKind::SignSgd),
+            )),
+            "frugal-columnwise" => Box::new(Frugal::new(
+                layout.clone(),
+                frugal_cfg(ProjectionKind::Columnwise, StateFreeKind::SignSgd),
+            )),
+            "frugal-lion" => {
+                let mut cfg = frugal_cfg(ProjectionKind::Blockwise, StateFreeKind::SignSgd);
+                cfg.state_full = StateFullKind::Lion(LionCfg::default());
+                Box::new(Frugal::new(layout.clone(), cfg))
+            }
+            "galore" => Box::new(GaLore::new(
+                layout.clone(),
+                GaLoreCfg {
+                    rho: self.rho as f32,
+                    update_freq: self.update_freq,
+                    adam,
+                    seed: self.seed,
+                    ..Default::default()
+                },
+            )),
+            "galore-random" => Box::new(GaLore::new(
+                layout.clone(),
+                GaLoreCfg {
+                    rho: self.rho as f32,
+                    update_freq: self.update_freq,
+                    adam,
+                    random_projection: true,
+                    seed: self.seed,
+                    ..Default::default()
+                },
+            )),
+            "galore-reset" => Box::new(GaLore::new(
+                layout.clone(),
+                GaLoreCfg {
+                    rho: self.rho as f32,
+                    update_freq: self.update_freq,
+                    adam,
+                    state_handling: StateHandling::Reset,
+                    seed: self.seed,
+                    ..Default::default()
+                },
+            )),
+            "badam" => Box::new(crate::optim::badam::BAdam::new(
+                layout.clone(),
+                crate::optim::badam::BAdamCfg {
+                    rho: self.rho as f32,
+                    update_freq: self.update_freq,
+                    adam,
+                    policy: self.block_policy(),
+                    seed: self.seed,
+                },
+            )),
+            "fira" => Box::new(crate::optim::fira::Fira::new(
+                layout.clone(),
+                crate::optim::fira::FiraCfg {
+                    rho: self.rho as f32,
+                    update_freq: self.update_freq,
+                    adam,
+                    ..Default::default()
+                },
+            )),
+            "ldadam" => Box::new(crate::optim::ldadam::LdAdam::new(
+                layout.clone(),
+                crate::optim::ldadam::LdAdamCfg {
+                    rho: self.rho as f32,
+                    adam,
+                    ..Default::default()
+                },
+            )),
+            "adamem" => Box::new(crate::optim::adamem::AdaMeM::new(
+                layout.clone(),
+                crate::optim::adamem::AdaMeMCfg {
+                    rho: self.rho as f32,
+                    update_freq: self.update_freq,
+                    ..Default::default()
+                },
+            )),
+            "lora" => Box::new(crate::optim::Lora::new(
+                layout.clone(),
+                crate::optim::LoraCfg { adam, seed: self.seed, ..Default::default() },
+            )),
+            other => anyhow::bail!("unknown optimizer '{other}'"),
+        };
+        Ok(opt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut cfg = TrainConfig::default();
+        cfg.clip = Some(1.0);
+        cfg.log_path = Some("run.jsonl".into());
+        let text = cfg.to_toml();
+        let back = TrainConfig::from_toml(&text).unwrap();
+        assert_eq!(back.optimizer, cfg.optimizer);
+        assert_eq!(back.schedule, cfg.schedule);
+        assert_eq!(back.clip, cfg.clip);
+        assert_eq!(back.log_path, cfg.log_path);
+        assert_eq!(back.steps, cfg.steps);
+    }
+
+    #[test]
+    fn schedule_variants_parse() {
+        let cfg = TrainConfig::from_toml("schedule = \"cosine\"\nschedule_total = 500\n").unwrap();
+        assert!(matches!(cfg.schedule, LrSchedule::Cosine { total: 500, .. }));
+        let cfg =
+            TrainConfig::from_toml("schedule = \"constant_warmup\"\nschedule_warmup = 7\n")
+                .unwrap();
+        assert!(matches!(cfg.schedule, LrSchedule::ConstantWarmup { warmup: 7 }));
+        assert!(TrainConfig::from_toml("schedule = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn factory_builds_all_known_optimizers() {
+        let layout = Layout::synthetic(32, 8, 20, 2);
+        for name in [
+            "adamw", "sgd", "signsgd", "sgdm", "lion", "adafactor", "frugal", "frugal0",
+            "frugal-sgd", "frugal-svd", "frugal-random", "frugal-randk", "frugal-columnwise",
+            "frugal-lion", "galore", "galore-random", "galore-reset", "badam", "fira",
+            "ldadam", "adamem", "lora",
+        ] {
+            let cfg = TrainConfig { optimizer: name.into(), ..Default::default() };
+            let opt = cfg.build_optimizer(&layout).unwrap();
+            assert!(!opt.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn factory_rejects_unknown() {
+        let layout = Layout::synthetic(32, 8, 20, 2);
+        let cfg = TrainConfig { optimizer: "madgrad".into(), ..Default::default() };
+        assert!(cfg.build_optimizer(&layout).is_err());
+    }
+
+    #[test]
+    fn optimizers_step_without_panicking() {
+        let layout = Layout::synthetic(32, 8, 20, 2);
+        let mut g = vec![0.0f32; layout.padded_size];
+        for (i, v) in g[..layout.flat_size].iter_mut().enumerate() {
+            *v = ((i % 17) as f32 - 8.0) * 0.01;
+        }
+        for name in ["adamw", "frugal", "galore", "badam", "fira", "ldadam", "adamem", "lora"] {
+            let cfg = TrainConfig { optimizer: name.into(), ..Default::default() };
+            let mut opt = cfg.build_optimizer(&layout).unwrap();
+            let mut p = vec![0.1f32; layout.padded_size];
+            for _ in 0..3 {
+                opt.step(&mut p, &g, 1e-3);
+            }
+            assert!(p.iter().all(|x| x.is_finite()), "{name} produced NaN");
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Checkpointing: flat params + optimizer buffers to a simple binary
+//! format (magic, version, named f32 sections). No external deps.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"FRUGALck";
+const VERSION: u32 = 1;
+
+/// A checkpoint: named f32 vectors (params, m, v, mask, …) plus the step.
+#[derive(Debug, Default, Clone)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub sections: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.sections.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_slice())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        for (name, data) in &self.sections {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(data.len() as u64).to_le_bytes())?;
+            // f32 little-endian
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a FRUGAL checkpoint");
+        let mut buf4 = [0u8; 4];
+        let mut buf8 = [0u8; 8];
+        r.read_exact(&mut buf4)?;
+        let version = u32::from_le_bytes(buf4);
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        r.read_exact(&mut buf8)?;
+        let step = u64::from_le_bytes(buf8);
+        r.read_exact(&mut buf4)?;
+        let n_sections = u32::from_le_bytes(buf4);
+        let mut sections = Vec::with_capacity(n_sections as usize);
+        for _ in 0..n_sections {
+            r.read_exact(&mut buf4)?;
+            let name_len = u32::from_le_bytes(buf4) as usize;
+            let mut name_buf = vec![0u8; name_len];
+            r.read_exact(&mut name_buf)?;
+            let name = String::from_utf8(name_buf)?;
+            r.read_exact(&mut buf8)?;
+            let len = u64::from_le_bytes(buf8) as usize;
+            let mut bytes = vec![0u8; len * 4];
+            r.read_exact(&mut bytes)?;
+            let data =
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+            sections.push((name, data));
+        }
+        Ok(Checkpoint { step, sections })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            step: 1234,
+            sections: vec![
+                ("params".into(), vec![1.0, -2.5, 3.25]),
+                ("m".into(), vec![0.0; 10]),
+            ],
+        };
+        let path = std::env::temp_dir().join("frugal_ck_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.get("params").unwrap(), &[1.0, -2.5, 3.25]);
+        assert_eq!(back.get("m").unwrap().len(), 10);
+        assert!(back.get("missing").is_none());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("frugal_ck_bad.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

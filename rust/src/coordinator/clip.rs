@@ -1,0 +1,101 @@
+//! Gradient clipping utilities.
+//!
+//! The paper's main setup uses NO clipping (§A.1, following GaLore); the
+//! 3B run uses global-norm clipping at 1.0 (§6.3); the Fira comparison
+//! (§B.2) needs Fira's norm-growth limiter. All three live here.
+
+/// Clip `grads` to a maximum global L2 norm. Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = crate::tensor::norm(grads);
+    if norm > max_norm && norm > 0.0 {
+        crate::tensor::scale(grads, max_norm / norm);
+    }
+    norm
+}
+
+/// Fira's norm-growth limiter: instead of a fixed clip threshold, cap the
+/// ratio between successive gradient norms at `gamma`, converting spikes
+/// into gradual increases (paper §B.1).
+pub struct NormGrowthLimiter {
+    pub gamma: f32,
+    prev_norm: Option<f32>,
+}
+
+impl NormGrowthLimiter {
+    pub fn new(gamma: f32) -> Self {
+        NormGrowthLimiter { gamma, prev_norm: None }
+    }
+
+    /// Apply the limiter in place; returns the scale factor used.
+    pub fn apply(&mut self, grads: &mut [f32]) -> f32 {
+        let norm = crate::tensor::norm(grads);
+        let scale = match self.prev_norm {
+            Some(prev) if norm > self.gamma * prev && norm > 0.0 => self.gamma * prev / norm,
+            _ => 1.0,
+        };
+        if scale != 1.0 {
+            crate::tensor::scale(grads, scale);
+        }
+        self.prev_norm = Some((norm * scale).max(1e-12));
+        scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_noop_below_threshold() {
+        let mut g = vec![0.3f32, 0.4]; // norm 0.5
+        let n = clip_global_norm(&mut g, 1.0);
+        assert!((n - 0.5).abs() < 1e-6);
+        assert_eq!(g, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn clip_rescales_above_threshold() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        clip_global_norm(&mut g, 1.0);
+        let n = crate::tensor::norm(&g);
+        assert!((n - 1.0).abs() < 1e-5);
+        assert!((g[0] / g[1] - 0.75).abs() < 1e-6, "direction preserved");
+    }
+
+    #[test]
+    fn limiter_allows_gradual_growth() {
+        let mut lim = NormGrowthLimiter::new(1.1);
+        let mut g = vec![1.0f32];
+        assert_eq!(lim.apply(&mut g), 1.0);
+        let mut g2 = vec![1.05f32];
+        assert_eq!(lim.apply(&mut g2), 1.0);
+    }
+
+    #[test]
+    fn limiter_converts_spike_to_gradual() {
+        let mut lim = NormGrowthLimiter::new(1.01);
+        let mut g = vec![1.0f32];
+        lim.apply(&mut g);
+        // 100x spike gets capped to 1.01x.
+        let mut spike = vec![100.0f32];
+        lim.apply(&mut spike);
+        assert!((spike[0] - 1.01).abs() < 1e-4, "spike -> {}", spike[0]);
+        // Next step may grow another 1.01x from the capped value.
+        let mut next = vec![100.0f32];
+        lim.apply(&mut next);
+        assert!((next[0] - 1.01 * 1.01).abs() < 1e-3);
+    }
+
+    #[test]
+    fn limiter_tracks_decreases_immediately() {
+        let mut lim = NormGrowthLimiter::new(1.01);
+        let mut g = vec![10.0f32];
+        lim.apply(&mut g);
+        let mut small = vec![0.1f32];
+        assert_eq!(lim.apply(&mut small), 1.0);
+        // After the decrease, the baseline follows down.
+        let mut spike = vec![10.0f32];
+        lim.apply(&mut spike);
+        assert!(spike[0] < 0.2, "baseline should have dropped: {}", spike[0]);
+    }
+}

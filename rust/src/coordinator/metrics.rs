@@ -1,0 +1,145 @@
+//! Run metrics: loss/perplexity aggregation and JSONL logging.
+
+use std::io::Write;
+use std::time::Instant;
+
+
+/// One logged training record.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f64,
+    pub tokens_per_s: f64,
+}
+
+/// Exponential-moving-average loss tracker + validation perplexity.
+pub struct Metrics {
+    pub ema_beta: f64,
+    ema: Option<f64>,
+    records: Vec<StepRecord>,
+    start: Instant,
+    tokens_seen: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { ema_beta: 0.98, ema: None, records: Vec::new(), start: Instant::now(),
+                  tokens_seen: 0 }
+    }
+
+    pub fn record(&mut self, step: u64, loss: f32, lr: f64, tokens: u64) {
+        self.tokens_seen += tokens;
+        let ema = match self.ema {
+            Some(e) => self.ema_beta * e + (1.0 - self.ema_beta) * loss as f64,
+            None => loss as f64,
+        };
+        self.ema = Some(ema);
+        let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.records.push(StepRecord {
+            step,
+            loss,
+            lr,
+            tokens_per_s: self.tokens_seen as f64 / elapsed,
+        });
+    }
+
+    pub fn ema_loss(&self) -> Option<f64> {
+        self.ema
+    }
+
+    pub fn last(&self) -> Option<&StepRecord> {
+        self.records.last()
+    }
+
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
+    }
+
+    /// Mean loss of the final `k` records (the "validation perplexity at N
+    /// iterations" readout of the paper tables uses `exp` of this on a
+    /// held-out stream).
+    pub fn tail_mean_loss(&self, k: usize) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.loss as f64).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Write all records as JSONL.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{{\"step\":{},\"loss\":{},\"lr\":{},\"tokens_per_s\":{}}}",
+                r.step, r.loss, r.lr, r.tokens_per_s
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Perplexity from mean cross-entropy (nats).
+pub fn perplexity(mean_loss: f64) -> f64 {
+    mean_loss.exp()
+}
+
+/// Mean loss over a set of per-batch losses.
+pub fn mean(losses: &[f32]) -> f64 {
+    if losses.is_empty() {
+        return f64::NAN;
+    }
+    losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_follows_loss() {
+        let mut m = Metrics::new();
+        for step in 0..100 {
+            m.record(step, 5.0 - 0.04 * step as f32, 1e-3, 1024);
+        }
+        let ema = m.ema_loss().unwrap();
+        assert!(ema < 5.0 && ema > 1.0);
+        // EMA lags the instantaneous loss.
+        assert!(ema > m.last().unwrap().loss as f64);
+    }
+
+    #[test]
+    fn perplexity_is_exp() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-12);
+        assert!((perplexity((10.0f64).ln()) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_mean() {
+        let mut m = Metrics::new();
+        for step in 0..10 {
+            m.record(step, step as f32, 1e-3, 1);
+        }
+        assert!((m.tail_mean_loss(2).unwrap() - 8.5).abs() < 1e-9);
+        assert!((m.tail_mean_loss(100).unwrap() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let mut m = Metrics::new();
+        m.record(1, 2.5, 1e-4, 512);
+        let dir = std::env::temp_dir().join("frugal_metrics_test.jsonl");
+        m.write_jsonl(&dir).unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert!(text.contains("\"loss\":2.5"));
+        std::fs::remove_file(dir).ok();
+    }
+}

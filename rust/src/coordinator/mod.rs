@@ -1,0 +1,18 @@
+//! L3 coordination: everything around the optimizer step.
+//!
+//! - [`scheduler`]: the paper's LR schedules (§A.1, Tables 15/16).
+//! - [`subspace`]: mask construction for the FUSED PJRT path — the Rust
+//!   mirror of the paper's subspace selection, producing the 0/1 mask the
+//!   Pallas `frugal_update` kernel consumes.
+//! - [`clip`]: global-norm gradient clipping and Fira's norm-growth limiter.
+//! - [`metrics`]: loss/perplexity tracking and JSONL run logs.
+//! - [`checkpoint`]: flat-vector + optimizer-state snapshots.
+
+pub mod checkpoint;
+pub mod clip;
+pub mod metrics;
+pub mod scheduler;
+pub mod subspace;
+
+pub use scheduler::LrSchedule;
+pub use subspace::{MaskBuilder, SubspacePolicy};

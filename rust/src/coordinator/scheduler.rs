@@ -1,0 +1,120 @@
+//! Learning-rate schedules (paper §A.1 and Tables 15/16).
+//!
+//! The main pre-training setup uses **cosine with restarts**: cycles of
+//! length = the subspace update period's multiple, 10% warmup within each
+//! cycle, decay to 10% of peak. Ablations use constant-with-warmup and
+//! one-cycle cosine.
+
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// Constant after linear warmup (Table 15).
+    ConstantWarmup { warmup: u64 },
+    /// Single cosine cycle over `total` steps with linear warmup
+    /// (Table 16); decays to `min_frac` of peak.
+    Cosine { total: u64, warmup: u64, min_frac: f64 },
+    /// Cosine with restarts (§A.1): cycles of `cycle` steps, warmup =
+    /// 10% of the cycle, decay to 10% of peak within each cycle.
+    CosineRestarts { cycle: u64, warmup_frac: f64, min_frac: f64 },
+}
+
+impl LrSchedule {
+    /// The paper's default: cosine with restarts, cycle 10k, 10% warmup.
+    pub fn paper_default(cycle: u64) -> Self {
+        LrSchedule::CosineRestarts { cycle, warmup_frac: 0.1, min_frac: 0.1 }
+    }
+
+    /// Multiplier in [0, 1] applied to the peak LR at `step` (0-based).
+    pub fn factor(&self, step: u64) -> f64 {
+        match *self {
+            LrSchedule::ConstantWarmup { warmup } => {
+                if warmup == 0 || step >= warmup {
+                    1.0
+                } else {
+                    (step + 1) as f64 / warmup as f64
+                }
+            }
+            LrSchedule::Cosine { total, warmup, min_frac } => {
+                if warmup > 0 && step < warmup {
+                    return (step + 1) as f64 / warmup as f64;
+                }
+                let t = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+                let t = t.min(1.0);
+                min_frac + (1.0 - min_frac) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            LrSchedule::CosineRestarts { cycle, warmup_frac, min_frac } => {
+                let pos = step % cycle.max(1);
+                let warmup = ((cycle as f64) * warmup_frac).round() as u64;
+                if warmup > 0 && pos < warmup {
+                    return (pos + 1) as f64 / warmup as f64;
+                }
+                let t = (pos - warmup) as f64 / (cycle - warmup).max(1) as f64;
+                min_frac + (1.0 - min_frac) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+
+    pub fn lr(&self, peak: f64, step: u64) -> f64 {
+        peak * self.factor(step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_warmup_ramps_then_flat() {
+        let s = LrSchedule::ConstantWarmup { warmup: 10 };
+        assert!(s.factor(0) > 0.0 && s.factor(0) <= 0.1 + 1e-9);
+        assert!(s.factor(9) <= 1.0);
+        assert_eq!(s.factor(10), 1.0);
+        assert_eq!(s.factor(1000), 1.0);
+    }
+
+    #[test]
+    fn cosine_decays_to_min_frac() {
+        let s = LrSchedule::Cosine { total: 100, warmup: 10, min_frac: 0.1 };
+        assert!((s.factor(100) - 0.1).abs() < 1e-9);
+        assert!((s.factor(10) - 1.0).abs() < 1e-9);
+        // Monotone decay after warmup.
+        let mut prev = 2.0;
+        for step in 10..=100 {
+            let f = s.factor(step);
+            assert!(f <= prev + 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn restarts_reset_each_cycle() {
+        let s = LrSchedule::paper_default(100);
+        // Peak right after warmup within each cycle.
+        assert!((s.factor(10) - 1.0).abs() < 1e-9);
+        assert!((s.factor(110) - 1.0).abs() < 1e-9);
+        // End of cycle near min_frac.
+        assert!(s.factor(99) < 0.15);
+        // Warmup restarts.
+        assert!(s.factor(100) < 0.2);
+    }
+
+    #[test]
+    fn lr_scales_peak() {
+        let s = LrSchedule::ConstantWarmup { warmup: 0 };
+        assert_eq!(s.lr(3e-4, 50), 3e-4);
+    }
+
+    #[test]
+    fn factors_bounded() {
+        for s in [
+            LrSchedule::ConstantWarmup { warmup: 7 },
+            LrSchedule::Cosine { total: 50, warmup: 5, min_frac: 0.1 },
+            LrSchedule::paper_default(40),
+        ] {
+            for step in 0..200 {
+                let f = s.factor(step);
+                assert!(f > 0.0 && f <= 1.0 + 1e-12, "{s:?} step={step} f={f}");
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Subspace mask construction for the fused PJRT train-step path.
+//!
+//! The Pallas `frugal_update` kernel routes each flat lane to AdamW
+//! (mask = 1) or signSGD (mask = 0) at runtime. This module is the
+//! coordinator-side selection logic (the paper's Alg. 4 `update_indices`):
+//! every `T` steps the trainer calls [`MaskBuilder::advance`] to obtain
+//! the next round's mask. State reset on subspace change happens inside
+//! the kernel itself (evicted lanes' m/v are zeroed — see
+//! `python/compile/kernels/frugal_update.py`).
+
+
+use crate::util::Prng;
+
+use crate::optim::frugal::BlockPolicy;
+use crate::optim::projection::{column_subset, randk_indices};
+use crate::optim::{Layout, Role};
+
+/// How Linear lanes are selected into the state-full subspace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubspacePolicy {
+    Blockwise(BlockPolicy),
+    Columnwise,
+    RandK,
+}
+
+/// Builds per-round masks over the flat vector.
+pub struct MaskBuilder {
+    layout: Layout,
+    pub rho: f32,
+    pub policy: SubspacePolicy,
+    /// Roles that are always state-full (paper default: non-Linear).
+    pub statefull_roles: Vec<Role>,
+    /// Roles forced state-FREE (Table 4 experiments move Embeddings /
+    /// Norms / Output here).
+    pub statefree_roles: Vec<Role>,
+    round: u64,
+    cursor: usize,
+    rng: Prng,
+}
+
+impl MaskBuilder {
+    pub fn new(layout: Layout, rho: f32, policy: SubspacePolicy, seed: u64) -> Self {
+        MaskBuilder {
+            layout,
+            rho,
+            policy,
+            statefull_roles: vec![Role::Embed, Role::Norm, Role::Output],
+            statefree_roles: vec![],
+            round: 0,
+            cursor: 0,
+            rng: Prng::seed_from_u64(seed),
+        }
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Produce the next round's mask (length = padded_size; padding = 0).
+    pub fn advance(&mut self) -> Vec<f32> {
+        self.round += 1;
+        let mut mask = vec![0.0f32; self.layout.padded_size];
+
+        // Role lanes.
+        for p in self.layout.params.clone() {
+            if p.role == Role::Linear {
+                continue;
+            }
+            let on = self.statefull_roles.contains(&p.role)
+                && !self.statefree_roles.contains(&p.role);
+            if on {
+                mask[p.offset..p.offset + p.numel()].fill(1.0);
+            }
+        }
+
+        // Linear lanes per policy.
+        let linear: Vec<crate::optim::ParamInfo> =
+            self.layout.params.iter().filter(|p| p.role == Role::Linear).cloned().collect();
+        match self.policy {
+            SubspacePolicy::Blockwise(policy) => {
+                let total: usize = linear.iter().map(|p| p.numel()).sum();
+                let target = (self.rho as f64 * total as f64).round() as usize;
+                let mut order: Vec<usize> = (0..linear.len()).collect();
+                match policy {
+                    BlockPolicy::Random => self.rng.shuffle(&mut order),
+                    BlockPolicy::Ascending => {
+                        { let n = order.len().max(1); order.rotate_left(self.cursor % n) }
+                    }
+                    BlockPolicy::Descending => {
+                        order.reverse();
+                        { let n = order.len().max(1); order.rotate_left(self.cursor % n) };
+                    }
+                }
+                let mut acc = 0usize;
+                let mut picked = 0usize;
+                for &i in &order {
+                    if acc >= target {
+                        break;
+                    }
+                    let p = &linear[i];
+                    mask[p.offset..p.offset + p.numel()].fill(1.0);
+                    acc += p.numel();
+                    picked += 1;
+                }
+                self.cursor = (self.cursor + picked.max(1)) % linear.len().max(1);
+            }
+            SubspacePolicy::Columnwise => {
+                for p in &linear {
+                    let (rows, cols) = p.dims();
+                    let k = ((self.rho * cols as f32).round() as usize).min(cols);
+                    let sel = column_subset(cols, k, &mut self.rng);
+                    for r in 0..rows {
+                        for &c in &sel {
+                            mask[p.offset + r * cols + c] = 1.0;
+                        }
+                    }
+                }
+            }
+            SubspacePolicy::RandK => {
+                for (i, p) in linear.iter().enumerate() {
+                    let n = p.numel();
+                    let k = ((self.rho * n as f32).round() as usize).min(n);
+                    let seed = (self.round << 20) ^ (i as u64) ^ 0xBADC_0FFE;
+                    for idx in randk_indices(n, k, seed) {
+                        mask[p.offset + idx] = 1.0;
+                    }
+                }
+            }
+        }
+        mask
+    }
+
+    /// Realized Linear-lane density of a mask (proptest invariant).
+    pub fn linear_density(&self, mask: &[f32]) -> f32 {
+        let mut on = 0usize;
+        let mut total = 0usize;
+        for p in self.layout.params.iter().filter(|p| p.role == Role::Linear) {
+            total += p.numel();
+            on += mask[p.offset..p.offset + p.numel()].iter().filter(|&&m| m > 0.0).count();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            on as f32 / total as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Layout {
+        Layout::synthetic(64, 16, 40, 4)
+    }
+
+    #[test]
+    fn roles_always_statefull_by_default() {
+        let l = layout();
+        let mut mb = MaskBuilder::new(l.clone(), 0.0, SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
+        let mask = mb.advance();
+        for p in &l.params {
+            if p.role != Role::Linear {
+                assert!(
+                    mask[p.offset..p.offset + p.numel()].iter().all(|&m| m == 1.0),
+                    "{} should be state-full",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rho_zero_means_no_linear_lanes() {
+        let l = layout();
+        let mut mb = MaskBuilder::new(l.clone(), 0.0, SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
+        let mask = mb.advance();
+        assert_eq!(mb.linear_density(&mask), 0.0);
+    }
+
+    #[test]
+    fn density_tracks_rho() {
+        let l = layout();
+        for (policy, tol) in [
+            (SubspacePolicy::Blockwise(BlockPolicy::Random), 0.15),
+            (SubspacePolicy::Columnwise, 0.03),
+            (SubspacePolicy::RandK, 0.01),
+        ] {
+            let mut mb = MaskBuilder::new(l.clone(), 0.25, policy, 1);
+            let mask = mb.advance();
+            let d = mb.linear_density(&mask);
+            assert!((d - 0.25).abs() <= tol, "{policy:?}: density {d}");
+        }
+    }
+
+    #[test]
+    fn padding_lanes_always_zero() {
+        let l = layout();
+        let mut mb = MaskBuilder::new(l.clone(), 1.0, SubspacePolicy::RandK, 2);
+        let mask = mb.advance();
+        for lane in l.flat_size..l.padded_size {
+            assert_eq!(mask[lane], 0.0);
+        }
+    }
+
+    #[test]
+    fn rounds_differ() {
+        let l = layout();
+        let mut mb =
+            MaskBuilder::new(l.clone(), 0.25, SubspacePolicy::Blockwise(BlockPolicy::Random), 3);
+        let m1 = mb.advance();
+        let mut differs = false;
+        for _ in 0..8 {
+            if mb.advance() != m1 {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn ascending_visits_all_blocks() {
+        let l = layout();
+        let n_lin = l.linears().count();
+        let mut mb = MaskBuilder::new(
+            l.clone(),
+            1.0 / n_lin as f32,
+            SubspacePolicy::Blockwise(BlockPolicy::Ascending),
+            4,
+        );
+        let mut seen = vec![false; l.params.len()];
+        for _ in 0..n_lin * 2 {
+            let mask = mb.advance();
+            for (i, p) in l.params.iter().enumerate() {
+                if p.role == Role::Linear && mask[p.offset] == 1.0 {
+                    seen[i] = true;
+                }
+            }
+        }
+        for (i, p) in l.params.iter().enumerate() {
+            if p.role == Role::Linear {
+                assert!(seen[i], "block {} never active", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn statefree_roles_demote_modules() {
+        // Table 4 machinery: moving Output to the state-free set.
+        let l = layout();
+        let mut mb =
+            MaskBuilder::new(l.clone(), 0.25, SubspacePolicy::Blockwise(BlockPolicy::Random), 5);
+        mb.statefree_roles = vec![Role::Output];
+        let mask = mb.advance();
+        let out = l.params.iter().find(|p| p.role == Role::Output).unwrap();
+        assert!(mask[out.offset..out.offset + out.numel()].iter().all(|&m| m == 0.0));
+        let emb = l.params.iter().find(|p| p.role == Role::Embed).unwrap();
+        assert!(mask[emb.offset..emb.offset + emb.numel()].iter().all(|&m| m == 1.0));
+    }
+}

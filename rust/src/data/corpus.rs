@@ -1,0 +1,264 @@
+//! Synthetic pre-training corpus: a hidden-state Markov language.
+//!
+//! Design goals (so that optimizer *orderings* transfer from C4):
+//! - **Zipfian marginals**: token frequencies follow a power law, like
+//!   natural text. Embedding rows see wildly different gradient scales —
+//!   the regime where Adam-style preconditioning matters (paper §2,
+//!   "Sign-based methods...").
+//! - **Local structure**: an order-1 hidden-topic chain modulates a sparse
+//!   bigram table, giving the model actual sequence structure to learn
+//!   (loss descends well below the unigram entropy).
+//! - **Determinism**: the whole corpus is a pure function of the seed;
+//!   train/validation streams use disjoint seeds.
+
+
+use crate::util::Prng;
+
+/// Corpus hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    /// Number of hidden topics modulating the bigram table.
+    pub topics: usize,
+    /// Zipf exponent for the marginal token distribution.
+    pub zipf_s: f64,
+    /// Per-step probability of switching topic.
+    pub topic_switch: f64,
+    /// Candidate successors per (topic, token) bucket — smaller is more
+    /// predictable (lower achievable perplexity).
+    pub branching: usize,
+    pub seed: u64,
+}
+
+impl CorpusConfig {
+    pub fn default_for_vocab(vocab: usize) -> Self {
+        CorpusConfig {
+            vocab,
+            topics: 8,
+            zipf_s: 1.1,
+            topic_switch: 0.05,
+            branching: (vocab / 16).max(4),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// A batch of token ids, shape (batch, seq_len), row-major.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Deterministic synthetic corpus / batch stream.
+pub struct SyntheticCorpus {
+    cfg: CorpusConfig,
+    /// Zipf CDF over the vocab (used to draw successor candidates).
+    zipf_cdf: Vec<f64>,
+    /// successors[topic][token] = candidate next tokens (Zipf-weighted
+    /// within the candidate set through their order).
+    successors: Vec<Vec<Vec<u32>>>,
+}
+
+impl SyntheticCorpus {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let mut rng = Prng::seed_from_u64(cfg.seed);
+        // Zipf weights over the vocab.
+        let mut weights: Vec<f64> =
+            (0..cfg.vocab).map(|i| 1.0 / ((i + 1) as f64).powf(cfg.zipf_s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let zipf_cdf: Vec<f64> = weights
+            .iter_mut()
+            .map(|w| {
+                acc += *w / total;
+                acc
+            })
+            .collect();
+
+        // Sparse successor tables per topic: structure the model can learn.
+        let mut successors = Vec::with_capacity(cfg.topics);
+        for _ in 0..cfg.topics {
+            let mut per_token = Vec::with_capacity(cfg.vocab);
+            for _ in 0..cfg.vocab {
+                let cands: Vec<u32> = (0..cfg.branching)
+                    .map(|_| sample_cdf(&zipf_cdf, rng.f64()) as u32)
+                    .collect();
+                per_token.push(cands);
+            }
+            successors.push(per_token);
+        }
+        SyntheticCorpus { cfg, zipf_cdf, successors }
+    }
+
+    pub fn config(&self) -> &CorpusConfig {
+        &self.cfg
+    }
+
+    /// Generate one sequence of `len` tokens from the stream keyed by
+    /// `stream_seed` (use distinct seeds for train vs validation).
+    pub fn sequence(&self, len: usize, stream_seed: u64) -> Vec<i32> {
+        let mut rng = Prng::seed_from_u64(self.cfg.seed ^ stream_seed);
+        let mut topic = rng.range(0, self.cfg.topics);
+        let mut tok = sample_cdf(&self.zipf_cdf, rng.f64());
+        let mut out = Vec::with_capacity(len);
+        out.push(tok as i32);
+        for _ in 1..len {
+            if rng.f64() < self.cfg.topic_switch {
+                topic = rng.range(0, self.cfg.topics);
+            }
+            let cands = &self.successors[topic][tok];
+            // Zipf-tilted choice among candidates: earlier candidates more
+            // likely, occasional uniform exploration for tail mass.
+            tok = if rng.f64() < 0.9 {
+                let idx = tilted_index(cands.len(), &mut rng);
+                cands[idx] as usize
+            } else {
+                sample_cdf(&self.zipf_cdf, rng.f64())
+            };
+            out.push(tok as i32);
+        }
+        out
+    }
+
+    /// The `idx`-th training batch, deterministic in `idx`.
+    pub fn train_batch(&self, batch: usize, seq_len: usize, idx: u64) -> Batch {
+        self.batch_from_stream(batch, seq_len, 0x7424_0000_0000 + idx)
+    }
+
+    /// The `idx`-th validation batch (disjoint stream).
+    pub fn val_batch(&self, batch: usize, seq_len: usize, idx: u64) -> Batch {
+        self.batch_from_stream(batch, seq_len, 0xEA11_57BE_A700_0000 ^ idx)
+    }
+
+    fn batch_from_stream(&self, batch: usize, seq_len: usize, stream: u64) -> Batch {
+        let mut tokens = Vec::with_capacity(batch * seq_len);
+        for b in 0..batch {
+            tokens.extend(self.sequence(seq_len, stream.wrapping_mul(1315423911).wrapping_add(b as u64)));
+        }
+        Batch { tokens, batch, seq_len }
+    }
+
+    /// Empirical unigram entropy (nats) of the stream — an upper bound for
+    /// a converged model's loss and a sanity anchor for benches.
+    pub fn unigram_entropy(&self, samples: usize) -> f64 {
+        let seq = self.sequence(samples, 0xE27);
+        let mut counts = vec![0u64; self.cfg.vocab];
+        for &t in &seq {
+            counts[t as usize] += 1;
+        }
+        let n = seq.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum()
+    }
+}
+
+/// Binary-search a CDF.
+fn sample_cdf(cdf: &[f64], u: f64) -> usize {
+    match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        Ok(i) | Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+/// Geometric-ish tilt over 0..n (earlier indices more likely).
+fn tilted_index(n: usize, rng: &mut Prng) -> usize {
+    let mut i = 0;
+    while i + 1 < n && rng.f64() < 0.55 {
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> SyntheticCorpus {
+        SyntheticCorpus::new(CorpusConfig::default_for_vocab(256))
+    }
+
+    #[test]
+    fn deterministic() {
+        let c1 = corpus();
+        let c2 = corpus();
+        assert_eq!(c1.sequence(128, 1), c2.sequence(128, 1));
+        assert_eq!(c1.train_batch(4, 32, 7).tokens, c2.train_batch(4, 32, 7).tokens);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let c = corpus();
+        let b = c.train_batch(8, 64, 0);
+        assert_eq!(b.tokens.len(), 8 * 64);
+        assert!(b.tokens.iter().all(|&t| (t as usize) < 256 && t >= 0));
+    }
+
+    #[test]
+    fn train_and_val_streams_differ() {
+        let c = corpus();
+        assert_ne!(c.train_batch(2, 64, 0).tokens, c.val_batch(2, 64, 0).tokens);
+        assert_ne!(c.train_batch(2, 64, 0).tokens, c.train_batch(2, 64, 1).tokens);
+    }
+
+    #[test]
+    fn marginals_are_heavy_tailed() {
+        let c = corpus();
+        let seq = c.sequence(20_000, 42);
+        let mut counts = vec![0u64; 256];
+        for &t in &seq {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Top-16 tokens should carry a large share of the mass (Zipf).
+        let top: u64 = counts[..16].iter().sum();
+        assert!(top as f64 / 20_000.0 > 0.35, "not heavy-tailed: {top}");
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // Bigram predictability: conditional entropy must sit well below
+        // unigram entropy, otherwise pre-training benches would be flat.
+        let c = corpus();
+        let seq = c.sequence(50_000, 9);
+        let mut uni = std::collections::HashMap::new();
+        let mut bi = std::collections::HashMap::new();
+        for w in seq.windows(2) {
+            *uni.entry(w[0]).or_insert(0u64) += 1;
+            *bi.entry((w[0], w[1])).or_insert(0u64) += 1;
+        }
+        let n = (seq.len() - 1) as f64;
+        let h_uni: f64 = uni
+            .values()
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum();
+        let h_joint: f64 = bi
+            .values()
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum();
+        let h_cond = h_joint - h_uni;
+        assert!(
+            h_cond < 0.8 * h_uni,
+            "conditional entropy {h_cond:.3} vs unigram {h_uni:.3}: no structure"
+        );
+    }
+
+    #[test]
+    fn unigram_entropy_positive_and_bounded() {
+        let c = corpus();
+        let h = c.unigram_entropy(10_000);
+        assert!(h > 1.0 && h < (256f64).ln() + 0.01, "h={h}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Data substrate: synthetic corpora and fine-tuning task suites.
+//!
+//! Substitution (DESIGN.md §3): the paper pre-trains on C4 and fine-tunes
+//! on GLUE / Commonsense170K — none of which fit a CPU testbed. What the
+//! optimizer comparison actually needs is (a) a stationary language-
+//! modelling task with heavy-tailed token statistics and learnable
+//! structure at several difficulty scales, and (b) label-supervised
+//! sequence tasks where a pre-trained backbone plus a classification head
+//! can be fine-tuned. Both are generated deterministically from seeds.
+
+mod corpus;
+mod tasks;
+
+pub use corpus::{Batch, CorpusConfig, SyntheticCorpus};
+pub use tasks::{ClassificationTask, TaskConfig, TaskExample, TaskSuite};

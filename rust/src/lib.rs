@@ -1,0 +1,39 @@
+//! FRUGAL: Memory-Efficient Optimization by Reducing State Overhead for
+//! Scalable Training — full-system reproduction.
+//!
+//! Architecture (see DESIGN.md): this crate is the L3 coordinator of a
+//! three-layer Rust + JAX + Pallas stack. Python/JAX runs only at build
+//! time (`make artifacts`) to AOT-lower the model and the Pallas optimizer
+//! kernels to HLO text; this crate loads those artifacts through the PJRT
+//! C API (`xla` crate) and owns everything else: subspace selection, the
+//! optimizer suite, state management, schedules, data, metrics, and the
+//! training loop.
+//!
+//! Module map:
+//! - [`tensor`]: minimal dense f32 matrix/vector substrate (+ bf16 sim).
+//! - [`linalg`]: Jacobi SVD, QR, principal angles, random projections.
+//! - [`data`]: synthetic corpus + fine-tuning task generators.
+//! - [`optim`]: the optimizer suite — FRUGAL and every baseline the paper
+//!   compares against — plus projections and the analytic memory model.
+//! - [`coordinator`]: subspace scheduling, LR schedules, clipping,
+//!   module-role partitioning, metrics, checkpointing.
+//! - [`runtime`]: PJRT artifact loading and execution.
+//! - [`train`]: end-to-end trainers binding runtime + coordinator.
+//! - [`config`]: TOML experiment configuration.
+//! - [`toy`]: closed-form toy problems for the theory experiments.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod toy;
+pub mod train;
+pub mod util;
+
+pub use config::TrainConfig;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

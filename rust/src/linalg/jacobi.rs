@@ -1,0 +1,221 @@
+//! One-sided Jacobi SVD.
+//!
+//! Orthogonalizes the columns of `A` by Jacobi rotations (accumulated into
+//! `V`); on convergence the column norms are the singular values and the
+//! normalized columns form `U`. Cubic but robust, and our matrices are the
+//! per-module weight gradients (≤ a few thousand on a side at paper scale,
+//! ≤ 512 here), where the one-time cost is exactly the SVD overhead the
+//! paper charges GaLore for (§C, Table 21).
+
+use crate::tensor::Matrix;
+
+/// Thin SVD result: `a = u * diag(s) * v^T`, with `u`: (m×k), `s`: k,
+/// `v`: (n×k), k = min(m, n). Singular values are sorted descending.
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub v: Matrix,
+}
+
+/// Compute the thin SVD of `a` via one-sided Jacobi.
+pub fn svd(a: &Matrix) -> Svd {
+    // Work on the tall orientation: if m < n, decompose A^T and swap U/V.
+    if a.rows < a.cols {
+        let Svd { u, s, v } = svd(&a.transpose());
+        return Svd { u: v, s, v: u };
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // Column-major working copy of A's columns for cache-friendly rotations.
+    let mut cols: Vec<Vec<f32>> = (0..n).map(|j| a.col(j)).collect();
+    let mut v = Matrix::eye(n);
+
+    // Perf (EXPERIMENTS.md §Perf iteration 2): the input data is f32, so
+    // rotating until 1e-10 relative off-diagonals only polishes float
+    // noise (60 sweeps, ~334 ms for 64x64). 1e-7 converges in ~5 sweeps
+    // with reconstruction error still < 1e-4 relative (see tests).
+    let eps = 1e-7_f64;
+    let total_sq: f64 = a.data.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    for _sweep in 0..30 {
+        let mut off = 0.0_f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0_f64, 0.0_f64, 0.0_f64);
+                for i in 0..m {
+                    let x = cols[p][i] as f64;
+                    let y = cols[q][i] as f64;
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p, q) entry of A^T A.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = cols[p][i];
+                    let y = cols[q][i];
+                    cols[p][i] = (c as f32) * x - (s as f32) * y;
+                    cols[q][i] = (s as f32) * x + (c as f32) * y;
+                }
+                for i in 0..n {
+                    let x = v[(i, p)];
+                    let y = v[(i, q)];
+                    v[(i, p)] = (c as f32) * x - (s as f32) * y;
+                    v[(i, q)] = (s as f32) * x + (c as f32) * y;
+                }
+            }
+        }
+        if off * off < 1e-12 * total_sq.max(1e-30) {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = normalized columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f32> = cols.iter().map(|c| crate::tensor::norm(c)).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let k = n; // tall orientation: k = n = min(m, n)
+    let mut u = Matrix::zeros(m, k);
+    let mut s = Vec::with_capacity(k);
+    let mut v_sorted = Matrix::zeros(n, k);
+    for (jj, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s.push(nj);
+        if nj > 0.0 {
+            for i in 0..m {
+                u[(i, jj)] = cols[j][i] / nj;
+            }
+        } else if jj < m {
+            u[(jj, jj)] = 1.0; // arbitrary orthogonal completion for zero σ
+        }
+        for i in 0..n {
+            v_sorted[(i, jj)] = v[(i, j)];
+        }
+    }
+    Svd { u, s, v: v_sorted }
+}
+
+impl Svd {
+    /// First `r` left singular vectors as an (m×r) matrix — the GaLore
+    /// projection P for a gradient with rows ≥ cols.
+    pub fn top_left(&self, r: usize) -> Matrix {
+        let r = r.min(self.s.len());
+        let mut p = Matrix::zeros(self.u.rows, r);
+        for i in 0..self.u.rows {
+            for j in 0..r {
+                p[(i, j)] = self.u[(i, j)];
+            }
+        }
+        p
+    }
+
+    /// First `r` right singular vectors as an (n×r) matrix.
+    pub fn top_right(&self, r: usize) -> Matrix {
+        let r = r.min(self.s.len());
+        let mut p = Matrix::zeros(self.v.rows, r);
+        for i in 0..self.v.rows {
+            for j in 0..r {
+                p[(i, j)] = self.v[(i, j)];
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    use crate::util::Prng;
+
+    fn reconstruct(d: &Svd) -> Matrix {
+        let k = d.s.len();
+        let mut sv = Matrix::zeros(k, d.v.rows);
+        for i in 0..k {
+            for j in 0..d.v.rows {
+                sv[(i, j)] = d.s[i] * d.v[(j, i)];
+            }
+        }
+        d.u.matmul(&sv)
+    }
+
+    #[test]
+    fn reconstructs_random_matrix() {
+        let mut rng = Prng::seed_from_u64(0);
+        for &(m, n) in &[(6, 4), (4, 6), (5, 5), (12, 3)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let d = svd(&a);
+            let r = reconstruct(&d);
+            let err = a.sub(&r).frobenius_norm() / a.frobenius_norm();
+            assert!(err < 1e-4, "({m},{n}) err={err}");
+        }
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = Prng::seed_from_u64(1);
+        let a = Matrix::randn(8, 5, 1.0, &mut rng);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn u_v_orthonormal() {
+        let mut rng = Prng::seed_from_u64(2);
+        let a = Matrix::randn(7, 4, 1.0, &mut rng);
+        let d = svd(&a);
+        let utu = d.u.t_matmul(&d.u);
+        let vtv = d.v.t_matmul(&d.v);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu[(i, j)] - want).abs() < 1e-4);
+                assert!((vtv[(i, j)] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Matrix::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-5);
+        assert!((d.s[1] - 2.0).abs() < 1e-5);
+        assert!((d.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // rank-1 outer product
+        let u = vec![1.0, 2.0, 3.0];
+        let v = vec![4.0, 5.0];
+        let a = Matrix::from_fn(3, 2, |i, j| u[i] * v[j]);
+        let d = svd(&a);
+        assert!(d.s[1] < 1e-4 * d.s[0]);
+        let r = reconstruct(&d);
+        assert!(a.sub(&r).frobenius_norm() < 1e-4);
+    }
+
+    #[test]
+    fn top_left_projection_captures_energy() {
+        let mut rng = Prng::seed_from_u64(3);
+        let a = Matrix::randn(10, 6, 1.0, &mut rng);
+        let d = svd(&a);
+        let p = d.top_left(3);
+        // ||P P^T A||_F^2 = sum of top-3 squared singular values.
+        let proj = p.matmul(&p.t_matmul(&a));
+        let want: f32 = d.s[..3].iter().map(|x| x * x).sum();
+        let got = proj.frobenius_norm().powi(2);
+        assert!((got - want).abs() / want < 1e-3);
+    }
+}

@@ -1,0 +1,16 @@
+//! Numerical linear algebra needed by the paper's algorithms.
+//!
+//! - [`svd`]: one-sided Jacobi SVD — GaLore/Fira/AdaMeM projection updates
+//!   and the Figure 2 analysis.
+//! - [`qr`]: modified Gram-Schmidt orthonormalization — random
+//!   semi-orthogonal projections (paper §3.1 "Random" rows of Table 1).
+//! - [`principal_angles`]: cosines of principal angles between subspaces
+//!   (Figure 2 histograms).
+//! - [`power_iteration`]: block power iteration — LDAdam's cheap
+//!   projection refresh (paper §B.1).
+
+mod jacobi;
+mod ortho;
+
+pub use jacobi::{svd, Svd};
+pub use ortho::{gram_schmidt, power_iteration, principal_angles, random_semi_orthogonal};

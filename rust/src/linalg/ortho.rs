@@ -1,0 +1,166 @@
+//! Orthonormalization, random semi-orthogonal projections, principal
+//! angles, and block power iteration.
+
+use crate::util::Prng;
+
+use super::svd;
+use crate::tensor::Matrix;
+
+/// Orthonormalize the columns of `a` in place (modified Gram-Schmidt, two
+/// passes for stability). Returns the number of non-degenerate columns.
+pub fn gram_schmidt(a: &mut Matrix) -> usize {
+    let n = a.cols;
+    let m = a.rows;
+    // Initial column scales, for relative rank detection.
+    let scales: Vec<f32> = (0..n).map(|j| crate::tensor::norm(&a.col(j)).max(1e-30)).collect();
+    let mut rank = 0;
+    for pass in 0..2 {
+        for j in 0..n {
+            for k in 0..j {
+                let mut dot = 0.0f64;
+                for i in 0..m {
+                    dot += (a[(i, j)] * a[(i, k)]) as f64;
+                }
+                for i in 0..m {
+                    a[(i, j)] -= (dot as f32) * a[(i, k)];
+                }
+            }
+            let nrm = crate::tensor::norm(&a.col(j));
+            // Degenerate column: residual below fp noise relative to the
+            // original scale — zero it instead of normalizing noise.
+            let degenerate = pass == 0 && nrm <= 1e-5 * scales[j];
+            if degenerate || nrm <= 1e-30 {
+                for i in 0..m {
+                    a[(i, j)] = 0.0;
+                }
+            } else {
+                for i in 0..m {
+                    a[(i, j)] /= nrm;
+                }
+            }
+        }
+    }
+    for j in 0..n {
+        if crate::tensor::norm(&a.col(j)) > 0.5 {
+            rank += 1;
+        }
+    }
+    rank
+}
+
+/// Draw an (n×r) matrix with orthonormal columns — the paper's "Random"
+/// semi-orthogonal projection (§3.1). Gaussian ensemble + Gram-Schmidt.
+pub fn random_semi_orthogonal(n: usize, r: usize, rng: &mut Prng) -> Matrix {
+    assert!(r <= n, "semi-orthogonal needs r <= n");
+    let mut a = Matrix::randn(n, r, 1.0, rng);
+    gram_schmidt(&mut a);
+    a
+}
+
+/// Cosines of the principal angles between the column spaces of `p` and
+/// `q` (both with orthonormal columns): the singular values of `p^T q`.
+/// Sorted descending. This is the quantity histogrammed in paper Figure 2.
+pub fn principal_angles(p: &Matrix, q: &Matrix) -> Vec<f32> {
+    assert_eq!(p.rows, q.rows, "subspaces of different ambient dim");
+    let ptq = p.t_matmul(q);
+    let mut s = svd(&ptq).s;
+    // Numerical safety: cosines live in [0, 1].
+    for v in &mut s {
+        *v = v.clamp(0.0, 1.0);
+    }
+    s
+}
+
+/// Block power iteration: refine an (m×r) orthonormal basis `q` toward the
+/// top-r left singular subspace of `a` (m×n). One iteration is
+/// `q <- orth(a a^T q)` — LDAdam's per-step projection refresh, which the
+/// paper credits with replacing the expensive SVD (§B.1).
+pub fn power_iteration(a: &Matrix, q: &Matrix, iters: usize) -> Matrix {
+    let mut q = q.clone();
+    assert_eq!(q.rows, a.rows);
+    for _ in 0..iters {
+        // z = A (A^T q): (n×r) then (m×r) — avoids forming A A^T.
+        let atq = a.t_matmul(&q);
+        q = a.matmul(&atq);
+        gram_schmidt(&mut q);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    #[test]
+    fn random_projection_is_semi_orthogonal() {
+        let mut rng = Prng::seed_from_u64(0);
+        let p = random_semi_orthogonal(16, 5, &mut rng);
+        let ptp = p.t_matmul(&p);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((ptp[(i, j)] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn principal_angles_same_subspace() {
+        let mut rng = Prng::seed_from_u64(1);
+        let p = random_semi_orthogonal(12, 4, &mut rng);
+        let cos = principal_angles(&p, &p);
+        for c in cos {
+            assert!((c - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn principal_angles_orthogonal_subspaces() {
+        // span{e0, e1} vs span{e2, e3}
+        let p = Matrix::from_fn(6, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        let q = Matrix::from_fn(6, 2, |i, j| if i == j + 2 { 1.0 } else { 0.0 });
+        let cos = principal_angles(&p, &q);
+        for c in cos {
+            assert!(c < 1e-5);
+        }
+    }
+
+    #[test]
+    fn random_subspaces_have_moderate_angles() {
+        // The Figure 2 baseline: two independent random r-dim subspaces of
+        // R^n have no cosine near 1 when r << n.
+        let mut rng = Prng::seed_from_u64(2);
+        let p = random_semi_orthogonal(128, 16, &mut rng);
+        let q = random_semi_orthogonal(128, 16, &mut rng);
+        let cos = principal_angles(&p, &q);
+        assert!(cos[0] < 0.9, "max cosine {} unexpectedly high", cos[0]);
+    }
+
+    #[test]
+    fn power_iteration_finds_top_subspace() {
+        let mut rng = Prng::seed_from_u64(3);
+        // Construct a matrix with a dominant rank-2 left subspace.
+        let u = random_semi_orthogonal(20, 2, &mut rng);
+        let v = random_semi_orthogonal(15, 2, &mut rng);
+        let mut a = Matrix::zeros(20, 15);
+        for i in 0..20 {
+            for j in 0..15 {
+                a[(i, j)] = 10.0 * u[(i, 0)] * v[(j, 0)] + 8.0 * u[(i, 1)] * v[(j, 1)];
+            }
+        }
+        let noise = Matrix::randn(20, 15, 0.05, &mut rng);
+        let a = a.add(&noise);
+        let q0 = random_semi_orthogonal(20, 2, &mut rng);
+        let q = power_iteration(&a, &q0, 8);
+        let cos = principal_angles(&q, &u);
+        assert!(cos[1] > 0.98, "subspace not recovered: {cos:?}");
+    }
+
+    #[test]
+    fn gram_schmidt_reports_rank() {
+        let mut a = Matrix::from_vec(3, 2, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        let rank = gram_schmidt(&mut a);
+        assert_eq!(rank, 1);
+    }
+}

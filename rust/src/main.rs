@@ -1,0 +1,374 @@
+//! `frugal` — the L3 coordinator CLI (hand-rolled args: offline build).
+//!
+//! Subcommands:
+//!   info      — show artifact manifest + platform
+//!   pretrain  — pre-train a model config on the synthetic corpus
+//!   memory    — print the paper's Table 2 memory columns (analytic, §C)
+//!   toy       — Figure 3 toy quadratic (state re-projection)
+//!   angles    — Figure 2 principal-angle analysis
+//!
+//! Example:
+//!   frugal pretrain --model tiny --optimizer frugal --rho 0.25 --steps 500
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use frugal::coordinator::metrics::perplexity;
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::optim::memory::{fmt_gib, optimizer_state_bytes, ArchSpec, Method};
+use frugal::runtime::{Manifest, Runtime};
+use frugal::train::{FusedTrainer, GradTrainer};
+use frugal::util::Prng;
+use frugal::TrainConfig;
+
+const USAGE: &str = "\
+frugal — FRUGAL memory-efficient training framework
+
+USAGE:
+  frugal info     [--artifacts DIR]
+  frugal pretrain [--config FILE] [--model M] [--optimizer O] [--steps N]
+                  [--lr F] [--rho F] [--update-freq N] [--seed N] [--fused]
+                  [--log FILE] [--artifacts DIR]
+  frugal memory
+  frugal toy      [--steps N] [--rank R] [--update-freq T]
+  frugal angles   [--artifacts DIR] [--model M] [--steps N]
+";
+
+/// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
+struct Args {
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bool_flags: &[&str]) -> frugal::Result<Args> {
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let Some(key) = arg.strip_prefix("--") else {
+                anyhow::bail!("unexpected argument '{arg}'\n{USAGE}");
+            };
+            if bool_flags.contains(&key) {
+                bools.push(key.to_string());
+                i += 1;
+            } else {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(Args { flags, bools })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_u64(&self, key: &str) -> frugal::Result<Option<u64>> {
+        self.get(key).map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}"))).transpose()
+    }
+
+    fn get_f64(&self, key: &str) -> frugal::Result<Option<f64>> {
+        self.get(key).map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}"))).transpose()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> frugal::Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "info" => {
+            let args = Args::parse(rest, &[])?;
+            info(Path::new(args.get("artifacts").unwrap_or("artifacts")))
+        }
+        "pretrain" => {
+            let args = Args::parse(rest, &["fused"])?;
+            let mut cfg = match args.get("config") {
+                Some(p) => TrainConfig::from_toml_file(Path::new(p))?,
+                None => TrainConfig::default(),
+            };
+            if let Some(m) = args.get("model") {
+                cfg.model = m.to_string();
+            }
+            if let Some(o) = args.get("optimizer") {
+                cfg.optimizer = o.to_string();
+            }
+            if let Some(s) = args.get_u64("steps")? {
+                cfg.steps = s;
+            }
+            if let Some(l) = args.get_f64("lr")? {
+                cfg.lr = l;
+            }
+            if let Some(r) = args.get_f64("rho")? {
+                cfg.rho = r;
+            }
+            if let Some(t) = args.get_u64("update-freq")? {
+                cfg.update_freq = t;
+            }
+            if let Some(s) = args.get_u64("seed")? {
+                cfg.seed = s;
+            }
+            if let Some(p) = args.get("log") {
+                cfg.log_path = Some(p.to_string());
+            }
+            if let Some(d) = args.get("artifacts") {
+                cfg.artifacts_dir = d.to_string();
+            }
+            pretrain(cfg, args.has("fused"))
+        }
+        "memory" => {
+            memory_table();
+            Ok(())
+        }
+        "toy" => {
+            let args = Args::parse(rest, &[])?;
+            toy(
+                args.get_u64("steps")?.unwrap_or(300),
+                args.get_u64("rank")?.unwrap_or(3) as usize,
+                args.get_u64("update-freq")?.unwrap_or(10),
+            );
+            Ok(())
+        }
+        "angles" => {
+            let args = Args::parse(rest, &[])?;
+            angles(
+                Path::new(args.get("artifacts").unwrap_or("artifacts")),
+                args.get("model").unwrap_or("tiny"),
+                args.get_u64("steps")?.unwrap_or(200),
+            )
+        }
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn info(artifacts: &Path) -> frugal::Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let man = Manifest::load(artifacts)?;
+    println!("pad_block: {}", man.pad_block);
+    let mut names: Vec<_> = man.models.keys().collect();
+    names.sort();
+    for name in names {
+        let m = &man.models[name];
+        println!(
+            "  {name}: arch={} d={} L={} vocab={} seq={} batch={} params={} padded={}",
+            m.arch, m.d_model, m.n_layers, m.vocab, m.seq_len, m.batch, m.flat_size,
+            m.padded_size
+        );
+    }
+    println!("optimizer kernels: {}", man.optim.len());
+    Ok(())
+}
+
+fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+    let entry = man.model(&cfg.model)?.clone();
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
+    println!(
+        "pretrain: model={} optimizer={} steps={} lr={} rho={} fused={fused}",
+        cfg.model, cfg.optimizer, cfg.steps, cfg.lr, cfg.rho
+    );
+
+    let eval_every = cfg.eval_every.max(1);
+    if fused {
+        let mb = MaskBuilder::new(
+            entry.layout(),
+            cfg.rho as f32,
+            SubspacePolicy::Blockwise(cfg.block_policy()),
+            cfg.seed,
+        );
+        let mut tr = FusedTrainer::new(
+            &rt,
+            &man,
+            &cfg.model,
+            mb,
+            cfg.schedule.clone(),
+            cfg.lr,
+            cfg.lr_free_mult,
+            cfg.update_freq,
+            cfg.seed,
+        )?;
+        for step in 0..cfg.steps {
+            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+            let loss = tr.step(&batch.tokens)?;
+            if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
+                let val = tr.session.eval_loss(&tr.flat, cfg.eval_batches, |i| {
+                    corpus.val_batch(entry.batch, entry.seq_len, i).tokens
+                })?;
+                println!(
+                    "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  tok/s {:.0}",
+                    step + 1,
+                    loss,
+                    val,
+                    perplexity(val),
+                    tr.metrics.last().map(|r| r.tokens_per_s).unwrap_or(0.0)
+                );
+            }
+        }
+        if let Some(path) = &cfg.log_path {
+            tr.metrics.write_jsonl(Path::new(path))?;
+        }
+    } else {
+        let layout = entry.layout();
+        let opt = cfg.build_optimizer(&layout)?;
+        let mut tr =
+            GradTrainer::new(&rt, &man, &cfg.model, opt, cfg.schedule.clone(), cfg.lr, cfg.seed)?;
+        tr.clip = cfg.clip.map(|c| c as f32);
+        for step in 0..cfg.steps {
+            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+            let loss = tr.step(&batch.tokens)?;
+            if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
+                let val = tr.session.eval_loss(&tr.flat, cfg.eval_batches, |i| {
+                    corpus.val_batch(entry.batch, entry.seq_len, i).tokens
+                })?;
+                println!(
+                    "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  state_floats {}",
+                    step + 1,
+                    loss,
+                    val,
+                    perplexity(val),
+                    tr.optimizer.state_floats()
+                );
+            }
+        }
+        if let Some(path) = &cfg.log_path {
+            tr.metrics.write_jsonl(Path::new(path))?;
+        }
+    }
+    Ok(())
+}
+
+fn memory_table() {
+    println!("Optimizer-state memory at the paper's model sizes (paper Table 2, analytic §C):");
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "method", "60M", "130M", "350M", "1B");
+    let rows: Vec<(&str, Method)> = vec![
+        ("AdamW", Method::AdamW),
+        ("GaLore rho=0.25", Method::GaLore { rho: 0.25 }),
+        ("BAdam rho=0.25", Method::BAdam { rho: 0.25 }),
+        ("FRUGAL rho=0.25", Method::Frugal { rho: 0.25 }),
+        ("FRUGAL rho=0.0", Method::Frugal { rho: 0.0 }),
+        ("signSGD", Method::SignSgd),
+    ];
+    for (name, method) in rows {
+        let mut cells = Vec::new();
+        for scale in ["60M", "130M", "350M", "1B"] {
+            let arch = ArchSpec::paper_llama(scale);
+            cells.push(fmt_gib(optimizer_state_bytes(&arch, &method, 4)));
+        }
+        println!("{:<22} {:>8} {:>8} {:>8} {:>8}", name, cells[0], cells[1], cells[2], cells[3]);
+    }
+}
+
+fn toy(steps: u64, rank: usize, update_freq: u64) {
+    println!(
+        "Figure 3 toy: min ||W||^2, W in R^10x10, GaLore-like SGDM, rank={rank}, T={update_freq}"
+    );
+    let mut with_sum = vec![0.0f64; steps as usize];
+    let mut without_sum = vec![0.0f64; steps as usize];
+    for seed in 0..5 {
+        let w = frugal::toy::galore_sgdm_toy(10, rank, update_freq, steps, 0.05, 0.9, true, seed);
+        let wo =
+            frugal::toy::galore_sgdm_toy(10, rank, update_freq, steps, 0.05, 0.9, false, seed);
+        for i in 0..steps as usize {
+            with_sum[i] += w[i] / 5.0;
+            without_sum[i] += wo[i] / 5.0;
+        }
+    }
+    println!("{:>6} {:>14} {:>14}", "step", "with-reproj", "without");
+    for i in (0..steps as usize).step_by((steps as usize / 15).max(1)) {
+        println!("{:>6} {:>14.6} {:>14.6}", i, with_sum[i], without_sum[i]);
+    }
+}
+
+fn angles(artifacts: &Path, model: &str, steps: u64) -> frugal::Result<()> {
+    use frugal::linalg::principal_angles;
+    use frugal::optim::projection::MatrixProjector;
+    use frugal::tensor::Matrix;
+
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(artifacts)?;
+    let entry = man.model(model)?.clone();
+    let layout = entry.layout();
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
+    let cfg = TrainConfig { model: model.into(), optimizer: "adamw".into(), ..Default::default() };
+    let opt = cfg.build_optimizer(&layout)?;
+    let mut tr = GradTrainer::new(&rt, &man, model, opt, cfg.schedule.clone(), cfg.lr, cfg.seed)?;
+
+    // Track the wk projection of a middle layer, like the paper (k_proj of
+    // layer 5 in the 60M model; here the middle layer of the config).
+    let target = layout
+        .linears()
+        .find(|p| p.name.contains(&format!("layers.{}.wk", entry.n_layers / 2)))
+        .unwrap()
+        .clone();
+    let (rows, cols) = target.dims();
+    let r = (rows.min(cols) / 4).max(2);
+    let mut projections: Vec<MatrixProjector> = Vec::new();
+    let snapshot_every = (steps / 4).max(1);
+    for step in 0..steps {
+        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+        if step % snapshot_every == 0 {
+            let (_, grads) = tr.loss_and_grad(&batch.tokens)?;
+            let g = Matrix::from_vec(
+                rows,
+                cols,
+                grads[target.offset..target.offset + target.numel()].to_vec(),
+            );
+            projections.push(MatrixProjector::from_svd(&g, r));
+        }
+        tr.step(&batch.tokens)?;
+    }
+    println!("Figure 2: principal-angle cosines between SVD projections of {}", target.name);
+    for i in 1..projections.len() {
+        let cos = principal_angles(&projections[0].p, &projections[i].p);
+        let high = cos.iter().filter(|&&c| c > 0.9).count();
+        println!(
+            "  P_0 vs P_{}: max={:.3} median={:.3} #cos>0.9={}/{}",
+            i,
+            cos[0],
+            cos[cos.len() / 2],
+            high,
+            cos.len()
+        );
+    }
+    // Random baseline.
+    let mut rng = Prng::seed_from_u64(0);
+    let p1 = frugal::linalg::random_semi_orthogonal(rows.min(cols), r, &mut rng);
+    let p2 = frugal::linalg::random_semi_orthogonal(rows.min(cols), r, &mut rng);
+    let cos = principal_angles(&p1, &p2);
+    println!(
+        "  random vs random: max={:.3} (#cos>0.9 = {})",
+        cos[0],
+        cos.iter().filter(|&&c| c > 0.9).count()
+    );
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! AdaMeM (Vyas et al., 2024) — concurrent method (paper §B.1, Table 20).
+//!
+//! Splits the gradient into the top-SVD subspace and its residual (like
+//! FRUGAL), but fixes the update rules: momentum is kept only in the
+//! low-rank subspace and fed through an Adafactor preconditioner, while
+//! the residual goes through a ONE-SIDED Adafactor preconditioner with no
+//! momentum. Per the paper's framing, this is a special case of FRUGAL
+//! with (Adafactor+momentum, one-sided Adafactor) as the rule pair.
+
+use super::adafactor::{AdafactorCfg, FactorState};
+use super::adamw::{AdamCfg, AdamState};
+use super::projection::{MatrixProjector, Side};
+use super::{Layout, Optimizer, Role};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct AdaMeMCfg {
+    pub rho: f32,
+    pub update_freq: u64,
+    pub beta1: f32,
+    pub factor: AdafactorCfg,
+}
+
+impl Default for AdaMeMCfg {
+    fn default() -> Self {
+        AdaMeMCfg { rho: 0.25, update_freq: 200, beta1: 0.9, factor: AdafactorCfg::default() }
+    }
+}
+
+struct MemState {
+    proj: MatrixProjector,
+    /// Momentum in the low-rank subspace.
+    m: Vec<f32>,
+    /// Adafactor accumulator for the low-rank part.
+    low_factor: FactorState,
+    /// One-sided accumulator for the residual: one value per residual
+    /// row/column (the "one-sided Adafactor" of the paper).
+    resid_acc: Vec<f32>,
+}
+
+pub struct AdaMeM {
+    pub cfg: AdaMeMCfg,
+    layout: Layout,
+    lin: Vec<Option<MemState>>,
+    role_state: Vec<Option<AdamState>>,
+    adam_cfg: AdamCfg,
+    step_counter: u64,
+    scratch: Vec<f32>,
+}
+
+impl AdaMeM {
+    pub fn new(layout: Layout, cfg: AdaMeMCfg) -> Self {
+        let n = layout.params.len();
+        let mut role_state: Vec<Option<AdamState>> = (0..n).map(|_| None).collect();
+        for (i, p) in layout.params.iter().enumerate() {
+            if p.role != Role::Linear {
+                role_state[i] = Some(AdamState::new(p.numel()));
+            }
+        }
+        AdaMeM {
+            cfg,
+            layout,
+            lin: (0..n).map(|_| None).collect(),
+            role_state,
+            adam_cfg: AdamCfg::default(),
+            step_counter: 0,
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for AdaMeM {
+    fn name(&self) -> String {
+        format!("adamem(rho={})", self.cfg.rho)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        let refresh = self.step_counter % self.cfg.update_freq == 0;
+        self.step_counter += 1;
+        for i in 0..self.layout.params.len() {
+            let p = self.layout.params[i].clone();
+            let range = p.offset..p.offset + p.numel();
+            let g = &grads[range.clone()];
+            if p.role != Role::Linear {
+                let cfg = self.adam_cfg;
+                self.role_state[i].as_mut().unwrap().apply(&mut params[range], g, lr, &cfg);
+                continue;
+            }
+            let (rows, cols) = p.dims();
+            let gm = Matrix::from_vec(rows, cols, g.to_vec());
+            let r = ((self.cfg.rho * rows.min(cols) as f32).round() as usize).max(1);
+            if refresh || self.lin[i].is_none() {
+                let proj = MatrixProjector::from_svd(&gm, r);
+                let (lr_rows, lr_cols) = match proj.side {
+                    Side::Left => (proj.rank(), cols),
+                    Side::Right => (rows, proj.rank()),
+                };
+                // Residual one-sided accumulator: per the larger dimension.
+                let resid_len = rows.max(cols);
+                self.lin[i] = Some(MemState {
+                    proj,
+                    m: vec![0.0; lr_rows * lr_cols],
+                    low_factor: FactorState::new(lr_rows, lr_cols),
+                    resid_acc: vec![0.0; resid_len],
+                });
+            }
+            let beta1 = self.cfg.beta1;
+            let factor_cfg = self.cfg.factor;
+            let st = self.lin[i].as_mut().unwrap();
+            let low = st.proj.down(&gm);
+            // Momentum on the low-rank gradient.
+            for (mi, gi) in st.m.iter_mut().zip(&low.data) {
+                *mi = beta1 * *mi + (1.0 - beta1) * gi;
+            }
+            // Adafactor preconditioning of the momentum.
+            let (lrows, lcols) = (low.rows, low.cols);
+            self.scratch.clear();
+            self.scratch.resize(st.m.len(), 0.0);
+            let m_snapshot = st.m.clone();
+            st.low_factor.precondition(&m_snapshot, lrows, lcols, &factor_cfg,
+                                       &mut self.scratch);
+            let low_upd = Matrix::from_vec(lrows, lcols, self.scratch.clone());
+            let full_upd = st.proj.up(&low_upd);
+
+            // Residual through one-sided Adafactor (no momentum): EMA of
+            // per-row (or per-col) mean square, preconditioned division.
+            let back = st.proj.up(&low);
+            let resid = gm.sub(&back);
+            let one_sided_rows = rows >= cols;
+            if one_sided_rows {
+                for ri in 0..rows {
+                    let mut acc = 0.0f32;
+                    for j in 0..cols {
+                        let x = resid[(ri, j)];
+                        acc += x * x;
+                    }
+                    st.resid_acc[ri] = factor_cfg.beta2 * st.resid_acc[ri]
+                        + (1.0 - factor_cfg.beta2) * (acc / cols as f32);
+                }
+            } else {
+                for j in 0..cols {
+                    let mut acc = 0.0f32;
+                    for ri in 0..rows {
+                        let x = resid[(ri, j)];
+                        acc += x * x;
+                    }
+                    st.resid_acc[j] = factor_cfg.beta2 * st.resid_acc[j]
+                        + (1.0 - factor_cfg.beta2) * (acc / rows as f32);
+                }
+            }
+            let prm = &mut params[range];
+            for ri in 0..rows {
+                for j in 0..cols {
+                    let lane = ri * cols + j;
+                    let denom = if one_sided_rows { st.resid_acc[ri] } else { st.resid_acc[j] };
+                    let resid_upd = resid[(ri, j)] / denom.sqrt().max(1e-8);
+                    prm[lane] -= lr * (full_upd.data[lane] + resid_upd);
+                }
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        let role: usize = self.role_state.iter().flatten().map(|s| s.floats()).sum();
+        let lin: usize = self
+            .lin
+            .iter()
+            .flatten()
+            .map(|s| s.proj.floats() + s.m.len() + s.low_factor.floats() + s.resid_acc.len())
+            .sum();
+        role + lin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    use crate::util::Prng;
+
+    fn layout() -> Layout {
+        Layout::synthetic(32, 8, 20, 2)
+    }
+
+    fn grads(l: &Layout, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::seed_from_u64(seed);
+        let mut g = vec![0.0f32; l.padded_size];
+        for v in g[..l.flat_size].iter_mut() {
+            *v = crate::tensor::matrix::normal_sample(&mut rng) * 0.1;
+        }
+        g
+    }
+
+    #[test]
+    fn full_rank_updates() {
+        let l = layout();
+        let mut opt = AdaMeM::new(l.clone(), AdaMeMCfg::default());
+        let g = grads(&l, 0);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let info = l.linears().next().unwrap();
+        let (rows, cols) = info.dims();
+        let upd =
+            Matrix::from_vec(rows, cols, p[info.offset..info.offset + info.numel()].to_vec());
+        let s = crate::linalg::svd(&upd).s;
+        let r = ((0.25 * rows.min(cols) as f32).round() as usize).max(1);
+        assert!(s[r] > 1e-3 * s[0], "residual missing: {s:?}");
+    }
+
+    #[test]
+    fn state_is_sublinear_in_linear_params() {
+        let l = Layout::synthetic(64, 16, 40, 4);
+        let mut opt = AdaMeM::new(l.clone(), AdaMeMCfg { rho: 0.25, ..Default::default() });
+        let g = grads(&l, 1);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let role: usize =
+            l.params.iter().filter(|p| p.role != Role::Linear).map(|p| p.numel()).sum();
+        let lin_state = opt.state_floats() - 2 * role;
+        assert!(lin_state < l.linear_numel(), "adamem state not sublinear");
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let l = layout();
+        let mut opt = AdaMeM::new(l.clone(), AdaMeMCfg { update_freq: 5, ..Default::default() });
+        let mut p = grads(&l, 2);
+        let n0: f32 = p.iter().map(|x| x * x).sum();
+        for _ in 0..50 {
+            let g = p.clone();
+            opt.step(&mut p, &g, 1e-3);
+        }
+        let n1: f32 = p.iter().map(|x| x * x).sum();
+        assert!(n1 < n0);
+    }
+}

@@ -1,0 +1,223 @@
+//! BAdam (Luo et al., 2024) — block coordinate descent baseline.
+//!
+//! Parameters are divided into blocks (transformer layers); every `T`
+//! steps the active block changes and is updated with AdamW while all
+//! other Linear blocks are **frozen**. Non-Linear roles get full Adam as
+//! in all our baselines (paper §A.1). The difference from FRUGAL is
+//! exactly that frozen blocks receive no state-free update.
+
+
+use crate::util::Prng;
+
+use super::adamw::{AdamCfg, AdamState};
+use super::frugal::BlockPolicy;
+use super::{Layout, Optimizer, Role};
+
+#[derive(Clone, Debug)]
+pub struct BAdamCfg {
+    /// Fraction of Linear parameters active at once (paper ρ = a_block/p).
+    pub rho: f32,
+    pub update_freq: u64,
+    pub adam: AdamCfg,
+    pub policy: BlockPolicy,
+    pub seed: u64,
+}
+
+impl Default for BAdamCfg {
+    fn default() -> Self {
+        BAdamCfg {
+            rho: 0.25,
+            update_freq: 200,
+            adam: AdamCfg::default(),
+            policy: BlockPolicy::Ascending,
+            seed: 0,
+        }
+    }
+}
+
+pub struct BAdam {
+    pub cfg: BAdamCfg,
+    layout: Layout,
+    /// Adam state for active Linear blocks (keyed by param index).
+    lin: Vec<Option<AdamState>>,
+    role_state: Vec<Option<AdamState>>,
+    step_count: u64,
+    cursor: usize,
+    rng: Prng,
+}
+
+impl BAdam {
+    pub fn new(layout: Layout, cfg: BAdamCfg) -> Self {
+        let n = layout.params.len();
+        let rng = Prng::seed_from_u64(cfg.seed);
+        let mut role_state: Vec<Option<AdamState>> = (0..n).map(|_| None).collect();
+        for (i, p) in layout.params.iter().enumerate() {
+            if p.role != Role::Linear {
+                role_state[i] = Some(AdamState::new(p.numel()));
+            }
+        }
+        BAdam {
+            cfg,
+            layout,
+            lin: (0..n).map(|_| None).collect(),
+            role_state,
+            step_count: 0,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    fn reselect(&mut self) {
+        let linear_idx: Vec<usize> = (0..self.layout.params.len())
+            .filter(|&i| self.layout.params[i].role == Role::Linear)
+            .collect();
+        let total: usize = linear_idx.iter().map(|&i| self.layout.params[i].numel()).sum();
+        let target = (self.cfg.rho as f64 * total as f64).round() as usize;
+        let mut order = linear_idx.clone();
+        match self.cfg.policy {
+            BlockPolicy::Random => self.rng.shuffle(&mut order),
+            BlockPolicy::Ascending => { let n = order.len().max(1); order.rotate_left(self.cursor % n) },
+            BlockPolicy::Descending => {
+                order.reverse();
+                { let n = order.len().max(1); order.rotate_left(self.cursor % n) };
+            }
+        }
+        // Free all previous state (paper Alg. 4 block_step: state of
+        // deactivated blocks is cleared to save memory).
+        for s in self.lin.iter_mut() {
+            *s = None;
+        }
+        let mut acc = 0usize;
+        let mut picked = 0usize;
+        for &i in &order {
+            if acc >= target {
+                break;
+            }
+            self.lin[i] = Some(AdamState::new(self.layout.params[i].numel()));
+            acc += self.layout.params[i].numel();
+            picked += 1;
+        }
+        self.cursor = (self.cursor + picked.max(1)) % linear_idx.len().max(1);
+    }
+}
+
+impl Optimizer for BAdam {
+    fn name(&self) -> String {
+        format!("badam(rho={})", self.cfg.rho)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        if self.step_count % self.cfg.update_freq == 0 {
+            self.reselect();
+        }
+        self.step_count += 1;
+        let adam = self.cfg.adam;
+        for i in 0..self.layout.params.len() {
+            let p = self.layout.params[i].clone();
+            let range = p.offset..p.offset + p.numel();
+            let g = &grads[range.clone()];
+            if p.role != Role::Linear {
+                self.role_state[i].as_mut().unwrap().apply(&mut params[range], g, lr, &adam);
+            } else if let Some(st) = self.lin[i].as_mut() {
+                st.apply(&mut params[range], g, lr, &adam);
+            }
+            // frozen block: no update at all
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        let role: usize = self.role_state.iter().flatten().map(|s| s.floats()).sum();
+        let lin: usize = self.lin.iter().flatten().map(|s| s.floats()).sum();
+        role + lin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Layout {
+        Layout::synthetic(32, 8, 20, 4)
+    }
+
+    fn grads(l: &Layout, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::seed_from_u64(seed);
+        let mut g = vec![0.0f32; l.padded_size];
+        for v in g[..l.flat_size].iter_mut() {
+            *v = crate::tensor::matrix::normal_sample(&mut rng) * 0.1;
+        }
+        g
+    }
+
+    #[test]
+    fn inactive_blocks_frozen() {
+        let l = layout();
+        let mut opt = BAdam::new(l.clone(), BAdamCfg { rho: 0.25, ..Default::default() });
+        let g = grads(&l, 0);
+        let mut p = vec![0.5f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let mut frozen = 0usize;
+        let mut moved = 0usize;
+        for info in l.linears() {
+            let any = (info.offset..info.offset + info.numel()).any(|x| p[x] != 0.5);
+            if any {
+                moved += 1;
+            } else {
+                frozen += 1;
+            }
+        }
+        assert!(moved >= 1);
+        assert!(frozen > moved, "rho=0.25 should freeze most blocks");
+    }
+
+    #[test]
+    fn state_matches_active_mass() {
+        let l = layout();
+        let mut opt = BAdam::new(l.clone(), BAdamCfg { rho: 0.25, ..Default::default() });
+        let g = grads(&l, 1);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let role: usize =
+            l.params.iter().filter(|p| p.role != Role::Linear).map(|p| p.numel()).sum();
+        let lin_state = opt.state_floats() - 2 * role;
+        let expect = (2.0 * 0.25 * l.linear_numel() as f32) as usize;
+        assert!(
+            (lin_state as f32 - expect as f32).abs() / expect as f32 <= 0.5,
+            "lin_state={lin_state} expect~{expect}"
+        );
+    }
+
+    #[test]
+    fn ascending_policy_cycles_through_all_blocks() {
+        let l = layout();
+        let n_lin = l.linears().count();
+        let mut opt = BAdam::new(
+            l.clone(),
+            BAdamCfg { rho: 1.0 / n_lin as f32, update_freq: 1, ..Default::default() },
+        );
+        let g = grads(&l, 2);
+        let mut p = vec![0.0f32; l.padded_size];
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..n_lin * 2 {
+            opt.step(&mut p, &g, 1e-3);
+            for (i, s) in opt.lin.iter().enumerate() {
+                if s.is_some() {
+                    seen.insert(i);
+                }
+            }
+        }
+        assert_eq!(seen.len(), n_lin, "cycling must visit every block");
+    }
+
+    #[test]
+    fn non_linear_roles_always_updated() {
+        let l = layout();
+        let mut opt = BAdam::new(l.clone(), BAdamCfg { rho: 0.0, ..Default::default() });
+        let g = grads(&l, 3);
+        let mut p = vec![0.5f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let emb = l.params.iter().find(|p| p.role == Role::Embed).unwrap();
+        let any = (emb.offset..emb.offset + emb.numel()).any(|x| p[x] != 0.5);
+        assert!(any, "embeddings must train even at rho=0");
+    }
+}

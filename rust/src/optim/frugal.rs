@@ -1,0 +1,773 @@
+//! FRUGAL — Full-Rank Updates with GrAdient spLitting (paper Alg. 1/4).
+//!
+//! Every step, the flat space is split into a *state-full* subspace
+//! (updated by an advanced rule — AdamW by default) and the complementary
+//! *state-free* subspace (updated by signSGD by default), so the update is
+//! full-rank while state memory scales with ρ. Every `T` steps the
+//! state-full subspace is re-selected (blockwise / columnwise / RandK /
+//! SVD / random semi-orthogonal) and the state of evicted lanes is
+//! **released** — the reset semantics the paper shows are required (§4,
+//! §D).
+//!
+//! Module roles: parameters whose role is in `statefull_roles`
+//! (default: Embed, Norm, Output — paper §A.1) keep persistent full state
+//! and never enter the projection game; Linear parameters are the
+//! projectable set. Table 4's module-sensitivity experiment is run by
+//! shrinking `statefull_roles`.
+
+
+use crate::util::Prng;
+
+use super::adamw::{AdamCfg, AdamState};
+use super::lion::{LionCfg, LionState};
+use super::projection::{column_subset, randk_indices, MatrixProjector};
+use super::sgd::sign_step;
+use super::{Layout, Optimizer, Role};
+use crate::tensor::Matrix;
+
+/// How the state-full subspace is chosen (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionKind {
+    /// Whole matrices in/out (the paper's default — most memory-efficient).
+    Blockwise,
+    /// Random column subsets per matrix (used for fine-tuning, §7).
+    Columnwise,
+    /// Random coordinate subsets per matrix (seed-reconstructible, §C).
+    RandK,
+    /// Top-r SVD subspace of the current gradient (GaLore-like).
+    Svd,
+    /// Random semi-orthogonal subspace (paper §3.1 "Random").
+    Random,
+}
+
+/// Block traversal policy for Blockwise selection (paper Table 13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockPolicy {
+    Random,
+    Ascending,
+    Descending,
+}
+
+/// The state-full update rule (paper Tables 2/11).
+#[derive(Clone, Copy, Debug)]
+pub enum StateFullKind {
+    AdamW(AdamCfg),
+    Lion(LionCfg),
+    Sgdm { beta: f32 },
+}
+
+/// The state-free update rule (paper Table 10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateFreeKind {
+    SignSgd,
+    Sgd,
+    /// Freeze the state-free subspace — turns FRUGAL into its low-rank
+    /// ancestors (the "Optimizes state-free subspace: No" rows of Table 1).
+    Frozen,
+}
+
+#[derive(Clone, Debug)]
+pub struct FrugalCfg {
+    /// Fraction of Linear parameters in the state-full subspace (paper ρ).
+    pub rho: f32,
+    /// Subspace update frequency T (paper Table 14; default 200).
+    pub update_freq: u64,
+    pub projection: ProjectionKind,
+    pub block_policy: BlockPolicy,
+    pub state_full: StateFullKind,
+    pub state_free: StateFreeKind,
+    /// lr_free = lr * lr_free_mult (1.0 for pre-training §A.1, 0.1 for
+    /// fine-tuning §A.2).
+    pub lr_free_mult: f32,
+    /// Roles with persistent full state (paper default: all non-Linear).
+    pub statefull_roles: Vec<Role>,
+    /// Roles excluded from training entirely (RoBERTa ρ=0 freezes
+    /// embeddings, §7.1).
+    pub frozen_roles: Vec<Role>,
+    pub seed: u64,
+}
+
+impl Default for FrugalCfg {
+    fn default() -> Self {
+        FrugalCfg {
+            rho: 0.25,
+            update_freq: 200,
+            projection: ProjectionKind::Blockwise,
+            block_policy: BlockPolicy::Random,
+            state_full: StateFullKind::AdamW(AdamCfg::default()),
+            state_free: StateFreeKind::SignSgd,
+            lr_free_mult: 1.0,
+            statefull_roles: vec![Role::Embed, Role::Norm, Role::Output],
+            frozen_roles: vec![],
+            seed: 0,
+        }
+    }
+}
+
+/// Generic state-full rule state, allocated per active region.
+#[derive(Clone, Debug)]
+enum FullState {
+    Adam(AdamState),
+    Lion(LionState),
+    Sgdm(Vec<f32>),
+}
+
+impl FullState {
+    fn new(kind: &StateFullKind, n: usize) -> Self {
+        match kind {
+            StateFullKind::AdamW(_) => FullState::Adam(AdamState::new(n)),
+            StateFullKind::Lion(_) => FullState::Lion(LionState::new(n)),
+            StateFullKind::Sgdm { .. } => FullState::Sgdm(vec![0.0; n]),
+        }
+    }
+
+    /// Advance state on `grads` and write the unscaled update direction
+    /// (to be multiplied by lr) into `out`.
+    fn update_into(&mut self, kind: &StateFullKind, grads: &[f32], out: &mut [f32]) {
+        match (self, kind) {
+            (FullState::Adam(st), StateFullKind::AdamW(cfg)) => st.update_into(grads, cfg, out),
+            (FullState::Lion(st), StateFullKind::Lion(cfg)) => {
+                for i in 0..grads.len() {
+                    let interp = cfg.beta1 * st.m[i] + (1.0 - cfg.beta1) * grads[i];
+                    out[i] = if interp > 0.0 {
+                        1.0
+                    } else if interp < 0.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    };
+                    st.m[i] = cfg.beta2 * st.m[i] + (1.0 - cfg.beta2) * grads[i];
+                }
+            }
+            (FullState::Sgdm(m), StateFullKind::Sgdm { beta }) => {
+                for i in 0..grads.len() {
+                    m[i] = (1.0 - beta) * grads[i] + beta * m[i];
+                    out[i] = m[i];
+                }
+            }
+            _ => unreachable!("state/kind mismatch"),
+        }
+    }
+
+    fn floats(&self) -> usize {
+        match self {
+            FullState::Adam(st) => st.floats(),
+            FullState::Lion(st) => st.floats(),
+            FullState::Sgdm(m) => m.len(),
+        }
+    }
+}
+
+/// Per-Linear-parameter projection state.
+enum LinearState {
+    /// Blockwise: whole matrix active (with state) or state-free.
+    Block { active: bool, state: Option<FullState> },
+    /// Columnwise: sorted active columns, their position map, and state of
+    /// size rows×k.
+    Columns { cols: Vec<usize>, pos: Vec<i32>, state: FullState },
+    /// RandK: seed-derived active indices (bitmap is bookkeeping; the real
+    /// system stores only the seed — §C) and state of size k.
+    RandK { idx: Vec<usize>, member: Vec<i32>, state: FullState },
+    /// Dense rank-r projector; state lives in the low-rank space.
+    Projected { proj: MatrixProjector, state: FullState },
+}
+
+impl LinearState {
+    fn floats(&self) -> usize {
+        match self {
+            LinearState::Block { state, .. } => state.as_ref().map_or(0, |s| s.floats()),
+            LinearState::Columns { state, .. } => state.floats(),
+            LinearState::RandK { state, .. } => state.floats(),
+            LinearState::Projected { proj, state } => proj.floats() + state.floats(),
+        }
+    }
+}
+
+/// The FRUGAL optimizer over a flat parameter vector.
+pub struct Frugal {
+    pub cfg: FrugalCfg,
+    layout: Layout,
+    /// Persistent full state for always-state-full roles, keyed by param
+    /// index; `None` for Linear / frozen params.
+    role_state: Vec<Option<FullState>>,
+    /// Projection state per param index (Linear only).
+    linear_state: Vec<Option<LinearState>>,
+    step_count: u64,
+    round: u64,
+    /// Blockwise cycling cursor (Ascending/Descending policies).
+    cursor: usize,
+    rng: Prng,
+    /// Scratch buffers reused across steps (no hot-loop allocation).
+    scratch: Vec<f32>,
+    scratch2: Vec<f32>,
+}
+
+impl Frugal {
+    pub fn new(layout: Layout, cfg: FrugalCfg) -> Self {
+        let n = layout.params.len();
+        let rng = Prng::seed_from_u64(cfg.seed);
+        let mut me = Frugal {
+            cfg,
+            layout,
+            role_state: (0..n).map(|_| None).collect(),
+            linear_state: (0..n).map(|_| None).collect(),
+            step_count: 0,
+            round: 0,
+            cursor: 0,
+            rng,
+            scratch: Vec::new(),
+            scratch2: Vec::new(),
+        };
+        for i in 0..n {
+            let p = &me.layout.params[i];
+            if p.role != Role::Linear
+                && me.cfg.statefull_roles.contains(&p.role)
+                && !me.cfg.frozen_roles.contains(&p.role)
+            {
+                me.role_state[i] = Some(FullState::new(&me.cfg.state_full, p.numel()));
+            }
+        }
+        me
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// (Re-)select the state-full subspace. For SVD projection the current
+    /// gradient is needed, hence `grads`.
+    fn reselect(&mut self, grads: &[f32]) {
+        self.round += 1;
+        let linear_idx: Vec<usize> = (0..self.layout.params.len())
+            .filter(|&i| self.layout.params[i].role == Role::Linear)
+            .collect();
+        match self.cfg.projection {
+            ProjectionKind::Blockwise => self.reselect_blockwise(&linear_idx),
+            ProjectionKind::Columnwise => {
+                for &i in &linear_idx {
+                    let p = &self.layout.params[i];
+                    let (rows, cols) = p.dims();
+                    let k = ((self.cfg.rho * cols as f32).round() as usize).min(cols);
+                    let sel = column_subset(cols, k, &mut self.rng);
+                    let mut pos = vec![-1i32; cols];
+                    for (j, &c) in sel.iter().enumerate() {
+                        pos[c] = j as i32;
+                    }
+                    self.linear_state[i] = Some(LinearState::Columns {
+                        cols: sel,
+                        pos,
+                        state: FullState::new(&self.cfg.state_full, rows * k),
+                    });
+                }
+            }
+            ProjectionKind::RandK => {
+                for &i in &linear_idx {
+                    let p = &self.layout.params[i];
+                    let n = p.numel();
+                    let k = ((self.cfg.rho * n as f32).round() as usize).min(n);
+                    let seed = self.cfg.seed ^ (self.round << 20) ^ (i as u64);
+                    let mut idx = randk_indices(n, k, seed);
+                    idx.sort_unstable();
+                    let mut member = vec![-1i32; n];
+                    for (j, &e) in idx.iter().enumerate() {
+                        member[e] = j as i32;
+                    }
+                    self.linear_state[i] = Some(LinearState::RandK {
+                        idx,
+                        member,
+                        state: FullState::new(&self.cfg.state_full, k),
+                    });
+                }
+            }
+            ProjectionKind::Svd | ProjectionKind::Random => {
+                for &i in &linear_idx {
+                    let p = &self.layout.params[i];
+                    let (rows, cols) = p.dims();
+                    let r = ((self.cfg.rho * rows.min(cols) as f32).round() as usize).max(1);
+                    let proj = if self.cfg.projection == ProjectionKind::Svd {
+                        let g = Matrix::from_vec(
+                            rows,
+                            cols,
+                            grads[p.offset..p.offset + p.numel()].to_vec(),
+                        );
+                        MatrixProjector::from_svd(&g, r)
+                    } else {
+                        MatrixProjector::random(rows, cols, r, &mut self.rng)
+                    };
+                    let state_n = if proj.side == super::projection::Side::Left {
+                        proj.rank() * cols
+                    } else {
+                        rows * proj.rank()
+                    };
+                    self.linear_state[i] = Some(LinearState::Projected {
+                        proj,
+                        state: FullState::new(&self.cfg.state_full, state_n),
+                    });
+                }
+            }
+        }
+    }
+
+    fn reselect_blockwise(&mut self, linear_idx: &[usize]) {
+        let total: usize = linear_idx.iter().map(|&i| self.layout.params[i].numel()).sum();
+        let target = (self.cfg.rho as f64 * total as f64).round() as usize;
+        // Order blocks per policy, starting at the cycling cursor so every
+        // block is eventually visited (BAdam-style traversal).
+        let mut order: Vec<usize> = linear_idx.to_vec();
+        match self.cfg.block_policy {
+            BlockPolicy::Random => self.rng.shuffle(&mut order),
+            BlockPolicy::Ascending => { let n = order.len().max(1); order.rotate_left(self.cursor % n) },
+            BlockPolicy::Descending => {
+                order.reverse();
+                { let n = order.len().max(1); order.rotate_left(self.cursor % n) };
+            }
+        }
+        let mut active = std::collections::HashSet::new();
+        let mut acc = 0usize;
+        let mut picked = 0usize;
+        for &i in &order {
+            if acc >= target {
+                break;
+            }
+            active.insert(i);
+            acc += self.layout.params[i].numel();
+            picked += 1;
+        }
+        self.cursor = (self.cursor + picked.max(1)) % linear_idx.len().max(1);
+        for &i in linear_idx {
+            let is_active = active.contains(&i);
+            let state = if is_active {
+                Some(FullState::new(&self.cfg.state_full, self.layout.params[i].numel()))
+            } else {
+                None
+            };
+            self.linear_state[i] = Some(LinearState::Block { active: is_active, state });
+        }
+    }
+
+    fn state_free_apply(&self, params: &mut [f32], grads: &[f32], lr_free: f32) {
+        match self.cfg.state_free {
+            StateFreeKind::SignSgd => sign_step(params, grads, lr_free),
+            StateFreeKind::Sgd => crate::tensor::axpy(-lr_free, grads, params),
+            StateFreeKind::Frozen => {}
+        }
+    }
+
+    /// Fraction of *Linear* lanes currently in the state-full subspace —
+    /// the realized ρ, asserted by the proptest invariants.
+    pub fn realized_rho(&self) -> f32 {
+        let mut active = 0usize;
+        let mut total = 0usize;
+        for (i, p) in self.layout.params.iter().enumerate() {
+            if p.role != Role::Linear {
+                continue;
+            }
+            total += p.numel();
+            active += match &self.linear_state[i] {
+                Some(LinearState::Block { active: true, .. }) => p.numel(),
+                Some(LinearState::Columns { cols, .. }) => p.dims().0 * cols.len(),
+                Some(LinearState::RandK { idx, .. }) => idx.len(),
+                Some(LinearState::Projected { proj, .. }) => {
+                    // Rank-r subspace of a (rows×cols) matrix ~ r/min_dim.
+                    let (rows, cols) = p.dims();
+                    proj.rank() * rows.max(cols)
+                }
+                _ => 0,
+            };
+        }
+        if total == 0 {
+            0.0
+        } else {
+            active as f32 / total as f32
+        }
+    }
+}
+
+impl Optimizer for Frugal {
+    fn name(&self) -> String {
+        format!("frugal(rho={},{:?})", self.cfg.rho, self.cfg.projection)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        if self.step_count % self.cfg.update_freq == 0 {
+            self.reselect(grads);
+        }
+        self.step_count += 1;
+        let lr_free = lr * self.cfg.lr_free_mult;
+
+        for i in 0..self.layout.params.len() {
+            let p = self.layout.params[i].clone();
+            let range = p.offset..p.offset + p.numel();
+            let g = &grads[range.clone()];
+
+            if self.cfg.frozen_roles.contains(&p.role) {
+                continue;
+            }
+
+            if p.role != Role::Linear {
+                if let Some(state) = self.role_state[i].as_mut() {
+                    apply_full(
+                        state,
+                        &self.cfg.state_full,
+                        &mut params[range],
+                        g,
+                        lr,
+                        &mut self.scratch,
+                    );
+                } else {
+                    // Non-Linear role demoted to the state-free set
+                    // (Table 4 machinery).
+                    self.state_free_apply(&mut params[range], g, lr_free);
+                }
+                continue;
+            }
+
+            // Linear parameter: route through the projection state.
+            let mut lstate = self.linear_state[i].take();
+            match lstate.as_mut() {
+                Some(LinearState::Block { active, state }) => {
+                    if *active {
+                        apply_full(
+                            state.as_mut().unwrap(),
+                            &self.cfg.state_full,
+                            &mut params[range],
+                            g,
+                            lr,
+                            &mut self.scratch,
+                        );
+                    } else {
+                        self.state_free_apply(&mut params[range], g, lr_free);
+                    }
+                }
+                Some(LinearState::Columns { cols, pos, state }) => {
+                    let (rows, ncols) = p.dims();
+                    let k = cols.len();
+                    // Gather active-column grads.
+                    self.scratch.clear();
+                    self.scratch.resize(rows * k, 0.0);
+                    for r in 0..rows {
+                        for (j, &c) in cols.iter().enumerate() {
+                            self.scratch[r * k + j] = g[r * ncols + c];
+                        }
+                    }
+                    self.scratch2.clear();
+                    self.scratch2.resize(rows * k, 0.0);
+                    state.update_into(&self.cfg.state_full, &self.scratch, &mut self.scratch2);
+                    let prm = &mut params[range];
+                    for r in 0..rows {
+                        for c in 0..ncols {
+                            let lane = r * ncols + c;
+                            if pos[c] >= 0 {
+                                prm[lane] -= lr * self.scratch2[r * k + pos[c] as usize];
+                            } else {
+                                match self.cfg.state_free {
+                                    StateFreeKind::SignSgd => {
+                                        if g[lane] > 0.0 {
+                                            prm[lane] -= lr_free;
+                                        } else if g[lane] < 0.0 {
+                                            prm[lane] += lr_free;
+                                        }
+                                    }
+                                    StateFreeKind::Sgd => prm[lane] -= lr_free * g[lane],
+                                    StateFreeKind::Frozen => {}
+                                }
+                            }
+                        }
+                    }
+                }
+                Some(LinearState::RandK { idx, member, state }) => {
+                    let k = idx.len();
+                    self.scratch.clear();
+                    self.scratch.resize(k, 0.0);
+                    for (j, &e) in idx.iter().enumerate() {
+                        self.scratch[j] = g[e];
+                    }
+                    self.scratch2.clear();
+                    self.scratch2.resize(k, 0.0);
+                    state.update_into(&self.cfg.state_full, &self.scratch, &mut self.scratch2);
+                    let prm = &mut params[range];
+                    for lane in 0..prm.len() {
+                        if member[lane] >= 0 {
+                            prm[lane] -= lr * self.scratch2[member[lane] as usize];
+                        } else {
+                            match self.cfg.state_free {
+                                StateFreeKind::SignSgd => {
+                                    if g[lane] > 0.0 {
+                                        prm[lane] -= lr_free;
+                                    } else if g[lane] < 0.0 {
+                                        prm[lane] += lr_free;
+                                    }
+                                }
+                                StateFreeKind::Sgd => prm[lane] -= lr_free * g[lane],
+                                StateFreeKind::Frozen => {}
+                            }
+                        }
+                    }
+                }
+                Some(LinearState::Projected { proj, state }) => {
+                    let (rows, cols) = p.dims();
+                    let gm = Matrix::from_vec(rows, cols, g.to_vec());
+                    let low = proj.down(&gm);
+                    self.scratch2.clear();
+                    self.scratch2.resize(low.data.len(), 0.0);
+                    state.update_into(&self.cfg.state_full, &low.data, &mut self.scratch2);
+                    let low_upd =
+                        Matrix::from_vec(low.rows, low.cols, self.scratch2.clone());
+                    let full_upd = proj.up(&low_upd);
+                    // Residual g - P P^T g for the state-free branch.
+                    let back = proj.up(&low);
+                    let prm = &mut params[range];
+                    for lane in 0..prm.len() {
+                        prm[lane] -= lr * full_upd.data[lane];
+                    }
+                    let resid: Vec<f32> =
+                        g.iter().zip(&back.data).map(|(a, b)| a - b).collect();
+                    self.state_free_apply(prm, &resid, lr_free);
+                }
+                None => unreachable!("linear param without state after reselect"),
+            }
+            self.linear_state[i] = lstate;
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        let role: usize = self.role_state.iter().flatten().map(|s| s.floats()).sum();
+        let lin: usize = self.linear_state.iter().flatten().map(|s| s.floats()).sum();
+        role + lin
+    }
+}
+
+/// Apply the state-full rule to a full (contiguous) region.
+fn apply_full(
+    state: &mut FullState,
+    kind: &StateFullKind,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+    scratch: &mut Vec<f32>,
+) {
+    scratch.clear();
+    scratch.resize(params.len(), 0.0);
+    state.update_into(kind, grads, scratch);
+    for i in 0..params.len() {
+        params[i] -= lr * scratch[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Layout {
+        Layout::synthetic(32, 8, 20, 2)
+    }
+
+    fn grads_like(layout: &Layout, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::seed_from_u64(seed);
+        let mut g = vec![0.0f32; layout.padded_size];
+        for v in g[..layout.flat_size].iter_mut() {
+            *v = crate::tensor::matrix::normal_sample(&mut rng) * 0.1;
+        }
+        g
+    }
+
+    #[test]
+    fn padding_lanes_never_move() {
+        let l = layout();
+        let mut opt = Frugal::new(l.clone(), FrugalCfg::default());
+        let mut p = vec![0.5f32; l.padded_size];
+        let g = grads_like(&l, 0);
+        opt.step(&mut p, &g, 1e-2);
+        for lane in l.flat_size..l.padded_size {
+            assert_eq!(p[lane], 0.5);
+        }
+    }
+
+    #[test]
+    fn rho_zero_blockwise_trains_everything_state_free() {
+        let l = layout();
+        let cfg = FrugalCfg { rho: 0.0, ..Default::default() };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let mut p = vec![0.0f32; l.padded_size];
+        let g = grads_like(&l, 1);
+        opt.step(&mut p, &g, 1e-2);
+        // All linear lanes moved by exactly ±lr_free (signSGD).
+        for info in l.linears() {
+            for lane in info.offset..info.offset + info.numel() {
+                if g[lane] != 0.0 {
+                    assert!((p[lane].abs() - 1e-2).abs() < 1e-6, "lane {lane}");
+                }
+            }
+        }
+        // State floats = only the role params (embed/norm/output Adam).
+        let role_numel: usize = l
+            .params
+            .iter()
+            .filter(|p| p.role != Role::Linear)
+            .map(|p| p.numel())
+            .sum();
+        assert_eq!(opt.state_floats(), 2 * role_numel);
+    }
+
+    #[test]
+    fn rho_one_blockwise_is_full_adam() {
+        let l = layout();
+        let cfg = FrugalCfg { rho: 1.0, ..Default::default() };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let mut p = vec![0.0f32; l.padded_size];
+        let g = grads_like(&l, 2);
+        opt.step(&mut p, &g, 1e-3);
+        // Compare against full AdamW on the real lanes.
+        let mut p2 = vec![0.0f32; l.padded_size];
+        let mut adam = super::super::AdamW::new(l.padded_size, AdamCfg::default());
+        adam.step(&mut p2, &g, 1e-3);
+        for lane in 0..l.flat_size {
+            assert!((p[lane] - p2[lane]).abs() < 1e-6, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn realized_rho_tracks_target_blockwise() {
+        let l = Layout::synthetic(64, 16, 40, 4);
+        for rho in [0.0f32, 0.25, 0.5, 1.0] {
+            let cfg = FrugalCfg { rho, ..Default::default() };
+            let mut opt = Frugal::new(l.clone(), cfg);
+            let g = grads_like(&l, 3);
+            let mut p = vec![0.0f32; l.padded_size];
+            opt.step(&mut p, &g, 1e-3);
+            let realized = opt.realized_rho();
+            // Blockwise granularity: within one block of the target.
+            assert!(
+                (realized - rho).abs() < 0.25,
+                "rho={rho} realized={realized}"
+            );
+        }
+    }
+
+    #[test]
+    fn columnwise_partition_is_exact() {
+        let l = layout();
+        let cfg = FrugalCfg {
+            rho: 0.5,
+            projection: ProjectionKind::Columnwise,
+            ..Default::default()
+        };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let g = grads_like(&l, 4);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let realized = opt.realized_rho();
+        assert!((realized - 0.5).abs() < 0.05, "realized={realized}");
+    }
+
+    #[test]
+    fn randk_state_size_matches_rho() {
+        let l = layout();
+        let cfg = FrugalCfg {
+            rho: 0.125,
+            projection: ProjectionKind::RandK,
+            ..Default::default()
+        };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let g = grads_like(&l, 5);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let lin_total = l.linear_numel();
+        let role_total: usize =
+            l.params.iter().filter(|p| p.role != Role::Linear).map(|p| p.numel()).sum();
+        let expect = 2.0 * role_total as f32 + 2.0 * 0.125 * lin_total as f32;
+        let got = opt.state_floats() as f32;
+        assert!(
+            (got - expect).abs() / expect < 0.05,
+            "state={got} expect~{expect}"
+        );
+    }
+
+    #[test]
+    fn subspace_changes_across_rounds() {
+        let l = layout();
+        let cfg = FrugalCfg { update_freq: 1, rho: 0.3, seed: 9, ..Default::default() };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let g = grads_like(&l, 6);
+        let mut p = vec![0.0f32; l.padded_size];
+        let active_set = |o: &Frugal| -> Vec<bool> {
+            o.linear_state
+                .iter()
+                .map(|s| matches!(s, Some(LinearState::Block { active: true, .. })))
+                .collect()
+        };
+        opt.step(&mut p, &g, 1e-3);
+        let a1 = active_set(&opt);
+        let mut changed = false;
+        for _ in 0..10 {
+            opt.step(&mut p, &g, 1e-3);
+            if active_set(&opt) != a1 {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed, "active blocks never changed with T=1");
+    }
+
+    #[test]
+    fn frozen_roles_do_not_move() {
+        let l = layout();
+        let cfg = FrugalCfg { frozen_roles: vec![Role::Embed], ..Default::default() };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let g = grads_like(&l, 7);
+        let mut p = vec![0.1f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-2);
+        let emb = l.params.iter().find(|p| p.role == Role::Embed).unwrap();
+        for lane in emb.offset..emb.offset + emb.numel() {
+            assert_eq!(p[lane], 0.1);
+        }
+    }
+
+    #[test]
+    fn svd_projection_runs_and_reduces_quadratic() {
+        let l = layout();
+        let cfg = FrugalCfg {
+            projection: ProjectionKind::Svd,
+            rho: 0.5,
+            update_freq: 5,
+            ..Default::default()
+        };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let mut p = grads_like(&l, 8); // start away from 0
+        let mut loss_first = None;
+        for _ in 0..30 {
+            let g: Vec<f32> = p.clone(); // grad of 0.5||p||^2
+            let loss: f32 = p.iter().map(|x| x * x).sum();
+            loss_first.get_or_insert(loss);
+            opt.step(&mut p, &g, 1e-2);
+        }
+        let loss_last: f32 = p.iter().map(|x| x * x).sum();
+        assert!(loss_last < loss_first.unwrap());
+    }
+
+    #[test]
+    fn frozen_state_free_matches_badam_shape() {
+        // StateFreeKind::Frozen + blockwise = BAdam-style updates: inactive
+        // blocks do not move at all.
+        let l = layout();
+        let cfg = FrugalCfg {
+            rho: 0.3,
+            state_free: StateFreeKind::Frozen,
+            ..Default::default()
+        };
+        let mut opt = Frugal::new(l.clone(), cfg);
+        let g = grads_like(&l, 10);
+        let mut p = vec![0.25f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        let mut frozen_lanes = 0;
+        for info in l.linears() {
+            let moved = (info.offset..info.offset + info.numel())
+                .any(|lane| p[lane] != 0.25);
+            if !moved {
+                frozen_lanes += info.numel();
+            }
+        }
+        assert!(frozen_lanes > 0, "some blocks must be frozen at rho=0.3");
+    }
+}

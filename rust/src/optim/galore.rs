@@ -1,0 +1,312 @@
+//! GaLore (Zhao et al., 2024a) — gradient low-rank projection baseline.
+//!
+//! Every `T` steps the projector P of each Linear matrix is recomputed
+//! from the SVD of the current gradient; Adam state lives in the rank-r
+//! space; the low-rank update is lifted back and applied. The state-free
+//! subspace is **discarded** (that is the gap FRUGAL fills).
+//!
+//! `StateHandling` reproduces the paper's §D analysis: the original GaLore
+//! `Keep`s stale state across projector changes (harmful at small T,
+//! Table 14); `Project` rotates momentum into the new subspace with
+//! momentum-mass normalization (Fig. 3); `Reset` zeroes it.
+
+
+use crate::util::Prng;
+
+use super::adamw::{AdamCfg, AdamState};
+use super::projection::MatrixProjector;
+use super::{Layout, Optimizer, Role};
+use crate::tensor::Matrix;
+
+/// What happens to optimizer state when the projector changes (paper §D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateHandling {
+    /// Original GaLore: keep stale state (wrong subspace).
+    Keep,
+    /// Rotate momentum into the new subspace, normalize by momentum mass,
+    /// reset variance (Hao et al. 2024 Alg. 2 + paper §D normalization).
+    Project,
+    /// Zero the state.
+    Reset,
+}
+
+#[derive(Clone, Debug)]
+pub struct GaLoreCfg {
+    /// rho = r / min_dim (the paper's density generalization, §A).
+    pub rho: f32,
+    pub update_freq: u64,
+    pub adam: AdamCfg,
+    /// Use a random semi-orthogonal projector instead of SVD (Table 1 row
+    /// "Random / No").
+    pub random_projection: bool,
+    pub state_handling: StateHandling,
+    /// GaLore's lifted-update scale factor (alpha in the original paper).
+    pub scale: f32,
+    pub seed: u64,
+}
+
+impl Default for GaLoreCfg {
+    fn default() -> Self {
+        GaLoreCfg {
+            rho: 0.25,
+            update_freq: 200,
+            adam: AdamCfg::default(),
+            random_projection: false,
+            state_handling: StateHandling::Keep,
+            scale: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+struct ProjState {
+    proj: MatrixProjector,
+    adam: AdamState,
+}
+
+/// GaLore over the flat vector; non-Linear roles get full Adam (paper
+/// §A.1: Embeddings/RMSNorms/Output always AdamW).
+pub struct GaLore {
+    pub cfg: GaLoreCfg,
+    layout: Layout,
+    lin: Vec<Option<ProjState>>,
+    role_state: Vec<Option<AdamState>>,
+    step_count: u64,
+    rng: Prng,
+    scratch: Vec<f32>,
+}
+
+impl GaLore {
+    pub fn new(layout: Layout, cfg: GaLoreCfg) -> Self {
+        let n = layout.params.len();
+        let rng = Prng::seed_from_u64(cfg.seed);
+        let mut role_state: Vec<Option<AdamState>> = (0..n).map(|_| None).collect();
+        for (i, p) in layout.params.iter().enumerate() {
+            if p.role != Role::Linear {
+                role_state[i] = Some(AdamState::new(p.numel()));
+            }
+        }
+        GaLore {
+            cfg,
+            layout,
+            lin: (0..n).map(|_| None).collect(),
+            role_state,
+            step_count: 0,
+            rng,
+            scratch: Vec::new(),
+        }
+    }
+
+    fn rank_for(&self, rows: usize, cols: usize) -> usize {
+        ((self.cfg.rho * rows.min(cols) as f32).round() as usize).max(1)
+    }
+
+    fn refresh_projector(&mut self, i: usize, g: &Matrix) {
+        let r = self.rank_for(g.rows, g.cols);
+        let new_proj = if self.cfg.random_projection {
+            MatrixProjector::random(g.rows, g.cols, r, &mut self.rng)
+        } else {
+            MatrixProjector::from_svd(g, r)
+        };
+        let state_n = match new_proj.side {
+            super::projection::Side::Left => new_proj.rank() * g.cols,
+            super::projection::Side::Right => g.rows * new_proj.rank(),
+        };
+        let old = self.lin[i].take();
+        let mut adam = AdamState::new(state_n);
+        match (old, self.cfg.state_handling) {
+            (Some(mut old_state), StateHandling::Keep) => {
+                // Keep stale buffers verbatim (sizes match: rank is fixed).
+                if old_state.adam.m.len() == state_n {
+                    std::mem::swap(&mut adam, &mut old_state.adam);
+                }
+            }
+            (Some(old_state), StateHandling::Project) => {
+                if old_state.proj.side == new_proj.side {
+                    // m_new = R m_old, R = P_new^T P_old, then renormalize
+                    // to preserve momentum mass (paper §D / Fig. 3).
+                    let rot = new_proj.rotation_from(&old_state.proj);
+                    let (mr, mc) = match new_proj.side {
+                        super::projection::Side::Left => {
+                            (old_state.proj.rank(), g.cols)
+                        }
+                        super::projection::Side::Right => {
+                            (g.rows, old_state.proj.rank())
+                        }
+                    };
+                    let old_m = Matrix::from_vec(mr, mc, old_state.adam.m.clone());
+                    let new_m = match new_proj.side {
+                        super::projection::Side::Left => rot.matmul(&old_m),
+                        super::projection::Side::Right => old_m.matmul_t(&rot),
+                    };
+                    let old_norm = crate::tensor::norm(&old_state.adam.m);
+                    let new_norm = crate::tensor::norm(&new_m.data);
+                    let gain = if new_norm > 1e-12 { old_norm / new_norm } else { 0.0 };
+                    adam.m.copy_from_slice(&new_m.data);
+                    crate::tensor::scale(&mut adam.m, gain);
+                    adam.t = old_state.adam.t; // momentum history continues
+                }
+            }
+            _ => {} // Reset or first round: fresh zero state
+        }
+        self.lin[i] = Some(ProjState { proj: new_proj, adam });
+    }
+}
+
+impl Optimizer for GaLore {
+    fn name(&self) -> String {
+        let kind = if self.cfg.random_projection { "random" } else { "svd" };
+        format!("galore({kind},rho={},{:?})", self.cfg.rho, self.cfg.state_handling)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        let refresh = self.step_count % self.cfg.update_freq == 0;
+        self.step_count += 1;
+        for i in 0..self.layout.params.len() {
+            let p = self.layout.params[i].clone();
+            let range = p.offset..p.offset + p.numel();
+            let g = &grads[range.clone()];
+            if p.role != Role::Linear {
+                let st = self.role_state[i].as_mut().unwrap();
+                st.apply(&mut params[range], g, lr, &self.cfg.adam.clone());
+                continue;
+            }
+            let (rows, cols) = p.dims();
+            let gm = Matrix::from_vec(rows, cols, g.to_vec());
+            if refresh || self.lin[i].is_none() {
+                self.refresh_projector(i, &gm);
+            }
+            let adam_cfg = self.cfg.adam;
+            let scale = self.cfg.scale;
+            let st = self.lin[i].as_mut().unwrap();
+            let low = st.proj.down(&gm);
+            self.scratch.clear();
+            self.scratch.resize(low.data.len(), 0.0);
+            st.adam.update_into(&low.data, &adam_cfg, &mut self.scratch);
+            let low_upd = Matrix::from_vec(low.rows, low.cols, self.scratch.clone());
+            let full_upd = st.proj.up(&low_upd);
+            let prm = &mut params[range];
+            for lane in 0..prm.len() {
+                prm[lane] -= lr * scale * full_upd.data[lane];
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        let role: usize = self.role_state.iter().flatten().map(|s| s.floats()).sum();
+        let lin: usize = self
+            .lin
+            .iter()
+            .flatten()
+            .map(|s| s.adam.floats() + s.proj.floats())
+            .sum();
+        role + lin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Layout {
+        Layout::synthetic(32, 8, 20, 2)
+    }
+
+    fn grads(l: &Layout, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::seed_from_u64(seed);
+        let mut g = vec![0.0f32; l.padded_size];
+        for v in g[..l.flat_size].iter_mut() {
+            *v = crate::tensor::matrix::normal_sample(&mut rng) * 0.1;
+        }
+        g
+    }
+
+    #[test]
+    fn updates_are_low_rank() {
+        let l = layout();
+        let mut opt = GaLore::new(l.clone(), GaLoreCfg { rho: 0.25, ..Default::default() });
+        let g = grads(&l, 0);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        // The update of each linear matrix has rank <= r.
+        for info in l.linears() {
+            let (rows, cols) = info.dims();
+            let upd = Matrix::from_vec(
+                rows,
+                cols,
+                p[info.offset..info.offset + info.numel()].to_vec(),
+            );
+            let s = crate::linalg::svd(&upd).s;
+            let r = ((0.25 * rows.min(cols) as f32).round() as usize).max(1);
+            for &sv in &s[r..] {
+                assert!(sv < 1e-4 * s[0].max(1e-9), "rank exceeded: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_is_low_rank_sized() {
+        let l = layout();
+        let opt_full = super::super::AdamW::new(l.padded_size, AdamCfg::default());
+        let mut opt = GaLore::new(l.clone(), GaLoreCfg { rho: 0.25, ..Default::default() });
+        let g = grads(&l, 1);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        assert!(opt.state_floats() < opt_full.state_floats());
+    }
+
+    #[test]
+    fn keep_vs_reset_differ_at_small_t() {
+        // §D: with frequent projector updates the three state handlings
+        // produce different trajectories.
+        let l = layout();
+        let mk = |handling| {
+            GaLore::new(
+                l.clone(),
+                GaLoreCfg { update_freq: 2, state_handling: handling, ..Default::default() },
+            )
+        };
+        let mut keep = mk(StateHandling::Keep);
+        let mut reset = mk(StateHandling::Reset);
+        let mut pk = vec![0.0f32; l.padded_size];
+        let mut pr = pk.clone();
+        for s in 0..8 {
+            let g = grads(&l, 100 + s);
+            keep.step(&mut pk, &g, 1e-3);
+            reset.step(&mut pr, &g, 1e-3);
+        }
+        assert_ne!(pk, pr);
+    }
+
+    #[test]
+    fn random_projection_variant_runs() {
+        let l = layout();
+        let mut opt = GaLore::new(
+            l.clone(),
+            GaLoreCfg { random_projection: true, ..Default::default() },
+        );
+        let g = grads(&l, 2);
+        let mut p = vec![0.0f32; l.padded_size];
+        opt.step(&mut p, &g, 1e-3);
+        assert!(p.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn converges_on_quadratic_matrix_problem() {
+        // min 0.5||W||^2 over one linear param — GaLore with projection
+        // should still descend (it sees the full gradient each reselect).
+        let l = layout();
+        let mut opt = GaLore::new(
+            l.clone(),
+            GaLoreCfg { update_freq: 5, rho: 0.5, ..Default::default() },
+        );
+        let mut p = grads(&l, 3);
+        let n0: f32 = p.iter().map(|x| x * x).sum();
+        for _ in 0..50 {
+            let g = p.clone();
+            opt.step(&mut p, &g, 1e-2);
+        }
+        let n1: f32 = p.iter().map(|x| x * x).sum();
+        assert!(n1 < n0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Lion (Chen et al., 2024) — the alternative state-full rule of paper
+//! Table 11: update = sign(β1 m + (1−β1) g); m ← β2 m + (1−β2) g.
+//! One state buffer (half of Adam's).
+
+use super::Optimizer;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LionCfg {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for LionCfg {
+    fn default() -> Self {
+        LionCfg { beta1: 0.9, beta2: 0.99, weight_decay: 0.0 }
+    }
+}
+
+/// Reusable Lion state (shared with FRUGAL's Lion-as-state-full variant).
+#[derive(Clone, Debug)]
+pub struct LionState {
+    pub m: Vec<f32>,
+}
+
+impl LionState {
+    pub fn new(n: usize) -> Self {
+        LionState { m: vec![0.0; n] }
+    }
+
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn apply(&mut self, params: &mut [f32], grads: &[f32], lr: f32, cfg: &LionCfg) {
+        for i in 0..params.len() {
+            let interp = cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * grads[i];
+            let dir = if interp > 0.0 {
+                1.0
+            } else if interp < 0.0 {
+                -1.0
+            } else {
+                0.0
+            };
+            params[i] -= lr * (dir + cfg.weight_decay * params[i]);
+            self.m[i] = cfg.beta2 * self.m[i] + (1.0 - cfg.beta2) * grads[i];
+        }
+    }
+
+    pub fn floats(&self) -> usize {
+        self.m.len()
+    }
+}
+
+/// Full-rank Lion over the flat vector.
+pub struct Lion {
+    cfg: LionCfg,
+    state: LionState,
+}
+
+impl Lion {
+    pub fn new(n: usize, cfg: LionCfg) -> Self {
+        Lion { cfg, state: LionState::new(n) }
+    }
+}
+
+impl Optimizer for Lion {
+    fn name(&self) -> String {
+        "lion".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        self.state.apply(params, grads, lr, &self.cfg);
+    }
+
+    fn state_floats(&self) -> usize {
+        self.state.floats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_sign_of_gradient() {
+        let mut opt = Lion::new(2, LionCfg::default());
+        let mut p = vec![0.0f32, 0.0];
+        opt.step(&mut p, &[2.0, -0.1], 0.01);
+        assert_eq!(p, vec![-0.01, 0.01]);
+    }
+
+    #[test]
+    fn zero_everything_is_fixed_point() {
+        let mut opt = Lion::new(2, LionCfg::default());
+        let mut p = vec![1.0f32, -1.0];
+        opt.step(&mut p, &[0.0, 0.0], 0.01);
+        assert_eq!(p, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn state_is_single_buffer() {
+        assert_eq!(Lion::new(64, LionCfg::default()).state_floats(), 64);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = Lion::new(2, LionCfg::default());
+        let mut x = vec![4.0f32, -4.0];
+        let mut lr = 0.1;
+        for s in 0..800 {
+            let g: Vec<f32> = x.clone();
+            if s % 100 == 99 {
+                lr *= 0.5; // sign methods need decaying lr to converge
+            }
+            opt.step(&mut x, &g, lr);
+        }
+        assert!(x.iter().all(|v| v.abs() < 0.2), "{x:?}");
+    }
+}

@@ -1,0 +1,257 @@
+//! LoRA (Hu et al., 2021) — the fine-tuning baseline of paper §7.
+//!
+//! For each targeted Linear matrix W (by name filter, e.g. wq/wv as in the
+//! original RoBERTa setup), trains rank-r factors (B: m×r, A: r×n) with
+//! AdamW and writes W = W₀ + (α/r)·B·A into the flat vector after every
+//! step. W₀ stays frozen. Gradients come from the full-matrix gradient G
+//! via the chain rule: ∂L/∂B = G Aᵀ, ∂L/∂A = Bᵀ G.
+//!
+//! Implemented as an [`Optimizer`] over the shared flat vector so the same
+//! PJRT grad artifact drives it (the artifact differentiates w.r.t. the
+//! *merged* W, which is exactly G).
+
+
+use crate::util::Prng;
+
+use super::adamw::{AdamCfg, AdamState};
+use super::{Layout, Optimizer, Role};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct LoraCfg {
+    pub rank: usize,
+    /// LoRA scale α (update scale α/r).
+    pub alpha: f32,
+    /// Substrings selecting target matrices (paper §7.1: ["wq", "wv"];
+    /// §7.2: q/k/v/up/down). Empty = all Linear matrices.
+    pub targets: Vec<String>,
+    pub adam: AdamCfg,
+    /// Train non-Linear roles with Adam (the classification-head rule of
+    /// Table 6: head always trained; embeddings frozen).
+    pub train_roles: Vec<Role>,
+    pub seed: u64,
+}
+
+impl Default for LoraCfg {
+    fn default() -> Self {
+        LoraCfg {
+            rank: 8,
+            alpha: 16.0,
+            targets: vec!["wq".into(), "wv".into()],
+            adam: AdamCfg::default(),
+            train_roles: vec![Role::Output, Role::Norm],
+            seed: 0,
+        }
+    }
+}
+
+struct Adapter {
+    w0: Vec<f32>,
+    a: Matrix,
+    b: Matrix,
+    adam_a: AdamState,
+    adam_b: AdamState,
+}
+
+pub struct Lora {
+    pub cfg: LoraCfg,
+    layout: Layout,
+    adapters: Vec<Option<Adapter>>,
+    role_state: Vec<Option<AdamState>>,
+    initialized: bool,
+}
+
+impl Lora {
+    pub fn new(layout: Layout, cfg: LoraCfg) -> Self {
+        let n = layout.params.len();
+        let mut role_state: Vec<Option<AdamState>> = (0..n).map(|_| None).collect();
+        for (i, p) in layout.params.iter().enumerate() {
+            if p.role != Role::Linear && cfg.train_roles.contains(&p.role) {
+                role_state[i] = Some(AdamState::new(p.numel()));
+            }
+        }
+        Lora { cfg, layout, adapters: (0..n).map(|_| None).collect(), role_state,
+               initialized: false }
+    }
+
+    fn is_target(&self, name: &str) -> bool {
+        self.cfg.targets.is_empty()
+            || self.cfg.targets.iter().any(|t| name.contains(t.as_str()))
+    }
+
+    /// Snapshot W₀ and initialize factors (A ~ N(0, 0.02), B = 0 — the
+    /// standard LoRA init so the adapter starts as a no-op).
+    fn init_from(&mut self, params: &[f32]) {
+        let mut rng = Prng::seed_from_u64(self.cfg.seed);
+        for i in 0..self.layout.params.len() {
+            let p = &self.layout.params[i];
+            if p.role != Role::Linear || !self.is_target(&p.name) {
+                continue;
+            }
+            let (rows, cols) = p.dims();
+            let r = self.cfg.rank.min(rows.min(cols));
+            if r == 0 {
+                continue;
+            }
+            let w0 = params[p.offset..p.offset + p.numel()].to_vec();
+            self.adapters[i] = Some(Adapter {
+                w0,
+                a: Matrix::randn(r, cols, 0.02, &mut rng),
+                b: Matrix::zeros(rows, r),
+                adam_a: AdamState::new(r * cols),
+                adam_b: AdamState::new(rows * r),
+            });
+        }
+        self.initialized = true;
+    }
+}
+
+impl Optimizer for Lora {
+    fn name(&self) -> String {
+        format!("lora(r={})", self.cfg.rank)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        if !self.initialized {
+            self.init_from(params);
+        }
+        let adam = self.cfg.adam;
+        let scale = self.cfg.alpha / self.cfg.rank.max(1) as f32;
+        for i in 0..self.layout.params.len() {
+            let p = self.layout.params[i].clone();
+            let range = p.offset..p.offset + p.numel();
+            let g = &grads[range.clone()];
+            if p.role != Role::Linear {
+                if let Some(st) = self.role_state[i].as_mut() {
+                    st.apply(&mut params[range], g, lr, &adam);
+                }
+                continue;
+            }
+            let Some(ad) = self.adapters[i].as_mut() else {
+                continue; // untargeted Linear stays frozen
+            };
+            let (rows, cols) = p.dims();
+            let gm = Matrix::from_vec(rows, cols, g.to_vec());
+            // dB = scale * G A^T ; dA = scale * B^T G.
+            let db = gm.matmul_t(&ad.a).scaled(scale);
+            let da = ad.b.t_matmul(&gm).scaled(scale);
+            ad.adam_b.apply(&mut ad.b.data, &db.data, lr, &adam);
+            ad.adam_a.apply(&mut ad.a.data, &da.data, lr, &adam);
+            // Merge: W = W0 + scale * B A.
+            let ba = ad.b.matmul(&ad.a);
+            let prm = &mut params[range];
+            for lane in 0..prm.len() {
+                prm[lane] = ad.w0[lane] + scale * ba.data[lane];
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        // Optimizer state only (W0 is frozen weights, not state — the paper
+        // counts adapters' Adam buffers).
+        let role: usize = self.role_state.iter().flatten().map(|s| s.floats()).sum();
+        let ad: usize = self
+            .adapters
+            .iter()
+            .flatten()
+            .map(|a| a.adam_a.floats() + a.adam_b.floats())
+            .sum();
+        role + ad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+
+    fn layout() -> Layout {
+        Layout::synthetic(32, 8, 20, 2)
+    }
+
+    fn grads(l: &Layout, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::seed_from_u64(seed);
+        let mut g = vec![0.0f32; l.padded_size];
+        for v in g[..l.flat_size].iter_mut() {
+            *v = crate::tensor::matrix::normal_sample(&mut rng) * 0.1;
+        }
+        g
+    }
+
+    #[test]
+    fn first_step_no_op_then_low_rank_delta() {
+        let l = layout();
+        let mut opt = Lora::new(l.clone(), LoraCfg { rank: 2, ..Default::default() });
+        let p0 = grads(&l, 7); // arbitrary "pretrained" weights
+        let mut p = p0.clone();
+        let g = grads(&l, 8);
+        opt.step(&mut p, &g, 1e-3);
+        // Targeted matrices: delta = scale * B A has rank <= 2.
+        for info in l.linears().filter(|p| p.name.contains("wq")) {
+            let (rows, cols) = info.dims();
+            let delta: Vec<f32> = (info.offset..info.offset + info.numel())
+                .map(|x| p[x] - p0[x])
+                .collect();
+            let dm = Matrix::from_vec(rows, cols, delta);
+            let s = crate::linalg::svd(&dm).s;
+            for &sv in &s[2..] {
+                assert!(sv < 1e-4 * s[0].max(1e-9), "delta not rank-2: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn untargeted_linear_frozen() {
+        let l = layout();
+        let mut opt = Lora::new(l.clone(), LoraCfg::default()); // wq, wv only
+        let p0 = grads(&l, 1);
+        let mut p = p0.clone();
+        let g = grads(&l, 2);
+        for _ in 0..3 {
+            opt.step(&mut p, &g, 1e-3);
+        }
+        for info in l.linears().filter(|p| p.name.contains("w_gate")) {
+            for lane in info.offset..info.offset + info.numel() {
+                assert_eq!(p[lane], p0[lane], "w_gate must stay frozen");
+            }
+        }
+    }
+
+    #[test]
+    fn embeddings_frozen_head_trained() {
+        let l = layout();
+        let mut opt = Lora::new(l.clone(), LoraCfg::default());
+        let p0 = grads(&l, 3);
+        let mut p = p0.clone();
+        let g = grads(&l, 4);
+        opt.step(&mut p, &g, 1e-3);
+        let emb = l.params.iter().find(|p| p.role == Role::Embed).unwrap();
+        for lane in emb.offset..emb.offset + emb.numel() {
+            assert_eq!(p[lane], p0[lane]);
+        }
+        let out = l.params.iter().find(|p| p.role == Role::Output).unwrap();
+        let moved = (out.offset..out.offset + out.numel()).any(|x| p[x] != p0[x]);
+        assert!(moved, "output head must train");
+    }
+
+    #[test]
+    fn state_scales_with_rank_not_matrix() {
+        let l = layout();
+        let opt_r2 = {
+            let mut o = Lora::new(l.clone(), LoraCfg { rank: 2, ..Default::default() });
+            let mut p = grads(&l, 5);
+            let g = grads(&l, 6);
+            o.step(&mut p, &g, 1e-3);
+            o.state_floats()
+        };
+        let opt_r4 = {
+            let mut o = Lora::new(l.clone(), LoraCfg { rank: 4, ..Default::default() });
+            let mut p = grads(&l, 5);
+            let g = grads(&l, 6);
+            o.step(&mut p, &g, 1e-3);
+            o.state_floats()
+        };
+        assert!(opt_r4 > opt_r2);
+        assert!(opt_r4 < l.linear_numel(), "lora state must be small");
+    }
+}

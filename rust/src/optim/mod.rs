@@ -1,0 +1,186 @@
+//! The optimizer suite: FRUGAL and every baseline the paper compares.
+//!
+//! All optimizers operate on the **flat parameter vector** (the interchange
+//! format with the PJRT artifacts) plus a [`Layout`] describing where each
+//! named parameter lives and what module role it plays. Projection-based
+//! methods (GaLore, BAdam, FRUGAL, Fira, LDAdam, AdaMeM) view the Linear
+//! slices as matrices; everything else is elementwise.
+//!
+//! Memory honesty: each optimizer allocates state **only** for the lanes it
+//! preconditions — `state_floats()` reports the real allocation and the
+//! proptest suite checks it against the analytic model in [`memory`].
+
+pub mod adafactor;
+pub mod adamem;
+pub mod adamw;
+pub mod badam;
+pub mod fira;
+pub mod frugal;
+pub mod galore;
+pub mod ldadam;
+pub mod lion;
+pub mod lora;
+pub mod memory;
+pub mod projection;
+pub mod sgd;
+
+pub use adamw::{AdamCfg, AdamState, AdamW};
+pub use frugal::{Frugal, FrugalCfg, ProjectionKind, StateFreeKind, StateFullKind};
+pub use galore::{GaLore, GaLoreCfg, StateHandling};
+pub use lora::{Lora, LoraCfg};
+
+
+/// Module role — the classes the paper treats differently (§6.1, §A.1):
+/// Embeddings, Norms and the Output layer default to the always-state-full
+/// set; Linear layers are the projectable set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    Embed,
+    Norm,
+    Linear,
+    Output,
+}
+
+/// One named parameter tensor inside the flat vector.
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub role: Role,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Matrix view dims (rows, cols); vectors are (1, n).
+    pub fn dims(&self) -> (usize, usize) {
+        match self.shape.len() {
+            2 => (self.shape[0], self.shape[1]),
+            1 => (1, self.shape[0]),
+            _ => (self.shape[0], self.numel() / self.shape[0]),
+        }
+    }
+
+    /// Transformer layer index parsed from `layers.<i>.` names.
+    pub fn layer(&self) -> Option<usize> {
+        self.name.strip_prefix("layers.")?.split('.').next()?.parse().ok()
+    }
+}
+
+/// The flat-vector layout: the Rust mirror of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub params: Vec<ParamInfo>,
+    pub flat_size: usize,
+    pub padded_size: usize,
+}
+
+impl Layout {
+    pub fn new(params: Vec<ParamInfo>, padded_size: usize) -> Self {
+        let flat_size = params.iter().map(|p| p.numel()).sum();
+        Layout { params, flat_size, padded_size }
+    }
+
+    /// Linear-role parameters (the projectable set).
+    pub fn linears(&self) -> impl Iterator<Item = &ParamInfo> {
+        self.params.iter().filter(|p| p.role == Role::Linear)
+    }
+
+    /// Number of transformer layers present.
+    pub fn n_layers(&self) -> usize {
+        self.params.iter().filter_map(|p| p.layer()).max().map_or(0, |l| l + 1)
+    }
+
+    /// Total Linear parameter count (the paper's `P`).
+    pub fn linear_numel(&self) -> usize {
+        self.linears().map(|p| p.numel()).sum()
+    }
+
+    /// A tiny synthetic layout for tests/benches: `n_layers` layers of
+    /// (d×d) attention-ish and (d×ff) MLP-ish matrices plus embed/norm/out.
+    pub fn synthetic(vocab: usize, d: usize, ff: usize, n_layers: usize) -> Layout {
+        let mut params = Vec::new();
+        let mut off = 0usize;
+        let mut push = |params: &mut Vec<ParamInfo>, name: String, role, shape: Vec<usize>| {
+            let numel: usize = shape.iter().product();
+            params.push(ParamInfo { name, role, offset: off, shape });
+            off += numel;
+        };
+        push(&mut params, "embed.tok".into(), Role::Embed, vec![vocab, d]);
+        for i in 0..n_layers {
+            push(&mut params, format!("layers.{i}.attn_norm"), Role::Norm, vec![d]);
+            for w in ["wq", "wk", "wv", "wo"] {
+                push(&mut params, format!("layers.{i}.{w}"), Role::Linear, vec![d, d]);
+            }
+            push(&mut params, format!("layers.{i}.ffn_norm"), Role::Norm, vec![d]);
+            push(&mut params, format!("layers.{i}.w_gate"), Role::Linear, vec![d, ff]);
+            push(&mut params, format!("layers.{i}.w_up"), Role::Linear, vec![d, ff]);
+            push(&mut params, format!("layers.{i}.w_down"), Role::Linear, vec![ff, d]);
+        }
+        push(&mut params, "final_norm".into(), Role::Norm, vec![d]);
+        push(&mut params, "output".into(), Role::Output, vec![d, vocab]);
+        let padded = (off + 1023) / 1024 * 1024;
+        Layout::new(params, padded)
+    }
+}
+
+/// A flat-vector optimizer. `lr` arrives from the coordinator's schedule
+/// each step; `step()` must leave padding lanes untouched.
+pub trait Optimizer: Send {
+    fn name(&self) -> String;
+
+    /// Apply one update in place. `grads.len() == params.len()`.
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
+
+    /// Number of f32 state values currently allocated (the paper's
+    /// "additional memory overhead" — Table 2 parenthetical numbers).
+    fn state_floats(&self) -> usize;
+
+    /// Hook: called by the trainer so projection-based methods know the
+    /// global step for their update-frequency-T logic. Default: no-op.
+    fn begin_step(&mut self, _global_step: u64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_layout_roles() {
+        let l = Layout::synthetic(64, 16, 40, 3);
+        assert_eq!(l.n_layers(), 3);
+        assert_eq!(l.linears().count(), 3 * 7);
+        assert!(l.flat_size <= l.padded_size);
+        assert_eq!(l.padded_size % 1024, 0);
+        // offsets are contiguous
+        let mut off = 0;
+        for p in &l.params {
+            assert_eq!(p.offset, off);
+            off += p.numel();
+        }
+        assert_eq!(off, l.flat_size);
+    }
+
+    #[test]
+    fn param_info_layer_parse() {
+        let p = ParamInfo {
+            name: "layers.11.wq".into(),
+            role: Role::Linear,
+            offset: 0,
+            shape: vec![4, 4],
+        };
+        assert_eq!(p.layer(), Some(11));
+        let e = ParamInfo { name: "embed.tok".into(), role: Role::Embed, offset: 0, shape: vec![4] };
+        assert_eq!(e.layer(), None);
+    }
+
+    #[test]
+    fn dims_of_vector_param() {
+        let p =
+            ParamInfo { name: "n".into(), role: Role::Norm, offset: 0, shape: vec![7] };
+        assert_eq!(p.dims(), (1, 7));
+    }
+}

@@ -1,0 +1,202 @@
+//! Gradient projectors — the paper's subspace-selection menu (§4, Table 1).
+//!
+//! Matrix projectors (SVD / random semi-orthogonal) map a gradient matrix
+//! G to a rank-r subspace and back; index projectors (RandK / columnwise /
+//! blockwise) select coordinates. Memory footprints follow paper §C: SVD
+//! and Random store the projection matrix P (the 26/24 factor of Table 2);
+//! RandK stores only a seed; columnwise stores column indices; blockwise
+//! stores block indices.
+
+
+use crate::util::Prng;
+
+use crate::linalg::{random_semi_orthogonal, svd};
+use crate::tensor::Matrix;
+
+/// Which side of G the projection multiplies (GaLore projects the smaller
+/// dimension so P is (min_dim × r)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// P: (m×r); down(G) = Pᵀ G (r×n); up(L) = P L.
+    Left,
+    /// P: (n×r); down(G) = G P (m×r); up(L) = L Pᵀ.
+    Right,
+}
+
+/// A dense rank-r projector for one weight matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixProjector {
+    pub p: Matrix,
+    pub side: Side,
+}
+
+impl MatrixProjector {
+    /// GaLore-style: P = top-r singular vectors of G on the smaller side.
+    pub fn from_svd(g: &Matrix, r: usize) -> Self {
+        let d = svd(g);
+        if g.rows <= g.cols {
+            MatrixProjector { p: d.top_left(r.min(g.rows)), side: Side::Left }
+        } else {
+            MatrixProjector { p: d.top_right(r.min(g.cols)), side: Side::Right }
+        }
+    }
+
+    /// Random semi-orthogonal P on the smaller side (paper §3.1 "Random").
+    pub fn random(rows: usize, cols: usize, r: usize, rng: &mut Prng) -> Self {
+        if rows <= cols {
+            MatrixProjector { p: random_semi_orthogonal(rows, r.min(rows), rng), side: Side::Left }
+        } else {
+            MatrixProjector { p: random_semi_orthogonal(cols, r.min(cols), rng), side: Side::Right }
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.p.cols
+    }
+
+    /// Project a full gradient down to the low-rank space.
+    pub fn down(&self, g: &Matrix) -> Matrix {
+        match self.side {
+            Side::Left => self.p.t_matmul(g),
+            Side::Right => g.matmul(&self.p),
+        }
+    }
+
+    /// Lift a low-rank update back to full size.
+    pub fn up(&self, low: &Matrix) -> Matrix {
+        match self.side {
+            Side::Left => self.p.matmul(low),
+            Side::Right => low.matmul_t(&self.p),
+        }
+    }
+
+    /// Floats stored for this projector (paper §C memory accounting).
+    pub fn floats(&self) -> usize {
+        self.p.rows * self.p.cols
+    }
+
+    /// Rotation matrix R = P_newᵀ P_old used to re-project momentum when
+    /// the subspace changes (paper §D / Hao et al. 2024 Alg. 2).
+    pub fn rotation_from(&self, old: &MatrixProjector) -> Matrix {
+        assert_eq!(self.side, old.side, "cannot rotate across sides");
+        self.p.t_matmul(&old.p)
+    }
+}
+
+/// Seed-reconstructible RandK index subset: k indices out of n, sampled
+/// without replacement. Per paper §C, only the seed needs storing — the
+/// indices are regenerated on demand, so the memory cost is O(1).
+pub fn randk_indices(n: usize, k: usize, seed: u64) -> Vec<usize> {
+    let k = k.min(n);
+    let mut rng = Prng::seed_from_u64(seed);
+    // Partial Fisher–Yates over a lazily-materialized permutation.
+    let mut swaps: std::collections::HashMap<usize, usize> = Default::default();
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let j = rng.range(i, n);
+        let vi = *swaps.get(&i).unwrap_or(&i);
+        let vj = *swaps.get(&j).unwrap_or(&j);
+        out.push(vj);
+        swaps.insert(j, vi);
+    }
+    out
+}
+
+/// Columnwise subset: k distinct column indices of a (·×cols) matrix.
+pub fn column_subset(cols: usize, k: usize, rng: &mut Prng) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..cols).collect();
+    for i in 0..k.min(cols) {
+        let j = rng.range(i, cols);
+        idx.swap(i, j);
+    }
+    idx.truncate(k.min(cols));
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svd_projector_sides() {
+        let mut rng = Prng::seed_from_u64(0);
+        let wide = Matrix::randn(4, 10, 1.0, &mut rng);
+        let tall = Matrix::randn(10, 4, 1.0, &mut rng);
+        let pw = MatrixProjector::from_svd(&wide, 2);
+        let pt = MatrixProjector::from_svd(&tall, 2);
+        assert_eq!(pw.side, Side::Left);
+        assert_eq!(pt.side, Side::Right);
+        assert_eq!(pw.down(&wide).rows, 2);
+        assert_eq!(pt.down(&tall).cols, 2);
+    }
+
+    #[test]
+    fn down_up_is_projection() {
+        // up(down(G)) projected twice equals projected once (idempotent).
+        let mut rng = Prng::seed_from_u64(1);
+        let g = Matrix::randn(8, 6, 1.0, &mut rng);
+        let proj = MatrixProjector::from_svd(&g, 3);
+        let once = proj.up(&proj.down(&g));
+        let twice = proj.up(&proj.down(&once));
+        assert!(once.sub(&twice).frobenius_norm() < 1e-4);
+    }
+
+    #[test]
+    fn svd_projection_captures_more_energy_than_random() {
+        // The paper's §3.1 observation: SVD better preserves gradient
+        // spectrum at a single step.
+        let mut rng = Prng::seed_from_u64(2);
+        // Low-rank-dominant gradient.
+        let u = Matrix::randn(16, 2, 3.0, &mut rng);
+        let v = Matrix::randn(2, 12, 1.0, &mut rng);
+        let g = u.matmul(&v).add(&Matrix::randn(16, 12, 0.1, &mut rng));
+        let svd_p = MatrixProjector::from_svd(&g, 2);
+        let rnd_p = MatrixProjector::random(16, 12, 2, &mut rng);
+        let e_svd = svd_p.up(&svd_p.down(&g)).frobenius_norm();
+        let e_rnd = rnd_p.up(&rnd_p.down(&g)).frobenius_norm();
+        assert!(e_svd > e_rnd, "svd={e_svd} rnd={e_rnd}");
+    }
+
+    #[test]
+    fn randk_reconstructible_and_distinct() {
+        let a = randk_indices(1000, 100, 42);
+        let b = randk_indices(1000, 100, 42);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100, "duplicates found");
+        assert!(sorted.iter().all(|&i| i < 1000));
+        let c = randk_indices(1000, 100, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn randk_full_is_permutation() {
+        let mut a = randk_indices(50, 50, 7);
+        a.sort_unstable();
+        assert_eq!(a, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn column_subset_sorted_distinct() {
+        let mut rng = Prng::seed_from_u64(5);
+        let s = column_subset(64, 16, &mut rng);
+        assert_eq!(s.len(), 16);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn rotation_identity_for_same_projector() {
+        let mut rng = Prng::seed_from_u64(6);
+        let p = MatrixProjector::random(12, 20, 4, &mut rng);
+        let r = p.rotation_from(&p);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((r[(i, j)] - want).abs() < 1e-4);
+            }
+        }
+    }
+}

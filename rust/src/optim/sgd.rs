@@ -1,0 +1,145 @@
+//! State-free optimizers (SGD, signSGD) and SGDM.
+//!
+//! signSGD (Bernstein et al., 2018) is the paper's state-free method of
+//! choice (§4, Table 10): zero optimizer state, Adam-like update magnitude.
+
+use super::Optimizer;
+
+/// Plain SGD. Zero state.
+pub struct Sgd;
+
+impl Optimizer for Sgd {
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        crate::tensor::axpy(-lr, grads, params);
+    }
+
+    fn state_floats(&self) -> usize {
+        0
+    }
+}
+
+/// signSGD without momentum. Zero state. `sign(0) == 0`, so padding lanes
+/// (zero gradient) never move.
+pub struct SignSgd;
+
+/// The elementwise sign step, shared with FRUGAL's state-free branch.
+#[inline]
+pub fn sign_step(params: &mut [f32], grads: &[f32], lr: f32) {
+    for (p, g) in params.iter_mut().zip(grads) {
+        // f32::signum(0.0) == 0.0 is NOT true (it's 1.0 with sign of zero),
+        // so branch explicitly: padding lanes must stay fixed.
+        if *g > 0.0 {
+            *p -= lr;
+        } else if *g < 0.0 {
+            *p += lr;
+        }
+    }
+}
+
+impl Optimizer for SignSgd {
+    fn name(&self) -> String {
+        "signsgd".into()
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        sign_step(params, grads, lr);
+    }
+
+    fn state_floats(&self) -> usize {
+        0
+    }
+}
+
+/// SGD with (EMA-form) momentum: m <- (1-β) g + β m, p -= lr m.
+/// The state-full rule of the paper's theory instance (Alg. 2).
+pub struct Sgdm {
+    pub beta: f32,
+    pub m: Vec<f32>,
+}
+
+impl Sgdm {
+    pub fn new(n: usize, beta: f32) -> Self {
+        Sgdm { beta, m: vec![0.0; n] }
+    }
+}
+
+impl Optimizer for Sgdm {
+    fn name(&self) -> String {
+        format!("sgdm(b={})", self.beta)
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        for i in 0..params.len() {
+            self.m[i] = (1.0 - self.beta) * grads[i] + self.beta * self.m[i];
+            params[i] -= lr * self.m[i];
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step_is_linear() {
+        let mut p = vec![1.0f32, 2.0];
+        Sgd.step(&mut p, &[0.5, -1.0], 0.1);
+        assert_eq!(p, vec![0.95, 2.1]);
+    }
+
+    #[test]
+    fn signsgd_unit_moves() {
+        let mut p = vec![0.0f32, 0.0, 0.0];
+        SignSgd.step(&mut p, &[3.0, -0.001, 0.0], 0.01);
+        assert_eq!(p, vec![-0.01, 0.01, 0.0]);
+    }
+
+    #[test]
+    fn signsgd_zero_grad_fixed_point() {
+        // The padding-lane invariant the fused kernel also relies on.
+        let mut p = vec![1.23f32; 8];
+        SignSgd.step(&mut p, &[0.0; 8], 1.0);
+        assert_eq!(p, vec![1.23f32; 8]);
+    }
+
+    #[test]
+    fn sgdm_matches_manual_recursion() {
+        let mut opt = Sgdm::new(1, 0.9);
+        let mut p = vec![0.0f32];
+        let gs = [1.0f32, 2.0, -1.0];
+        let mut m = 0.0f32;
+        let mut want = 0.0f32;
+        for g in gs {
+            m = 0.1 * g + 0.9 * m;
+            want -= 0.1 * m;
+            opt.step(&mut p, &[g], 0.1);
+        }
+        assert!((p[0] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_sizes() {
+        assert_eq!(Sgd.state_floats(), 0);
+        assert_eq!(SignSgd.state_floats(), 0);
+        assert_eq!(Sgdm::new(10, 0.9).state_floats(), 10);
+    }
+
+    #[test]
+    fn sgdm_converges_on_quadratic() {
+        let mut opt = Sgdm::new(2, 0.9);
+        let mut x = vec![5.0f32, -3.0];
+        for _ in 0..500 {
+            let g: Vec<f32> = x.iter().map(|v| *v).collect();
+            opt.step(&mut x, &g, 0.05);
+        }
+        assert!(x.iter().all(|v| v.abs() < 1e-2), "{x:?}");
+    }
+}

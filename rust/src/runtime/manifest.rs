@@ -1,0 +1,203 @@
+//! `artifacts/manifest.json` — the contract between aot.py and this crate.
+//! Parsed with the in-tree JSON parser (offline build — no serde).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::optim::{Layout, ParamInfo, Role};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub arch: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub flat_size: usize,
+    pub padded_size: usize,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub artifacts: HashMap<String, String>,
+    pub params: Vec<ParamInfo>,
+}
+
+impl ModelEntry {
+    fn from_json(v: &Json) -> Result<ModelEntry> {
+        let mut artifacts = HashMap::new();
+        for (k, val) in v.field("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), val.as_str()?.to_string());
+        }
+        let mut params = Vec::new();
+        for p in v.field("params")?.as_arr()? {
+            let shape = p
+                .field("shape")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            params.push(ParamInfo {
+                name: p.field("name")?.as_str()?.to_string(),
+                role: match p.field("role")?.as_str()? {
+                    "embed" => Role::Embed,
+                    "norm" => Role::Norm,
+                    "output" => Role::Output,
+                    _ => Role::Linear,
+                },
+                offset: p.field("offset")?.as_usize()?,
+                shape,
+            });
+        }
+        Ok(ModelEntry {
+            arch: v.field("arch")?.as_str()?.to_string(),
+            vocab: v.field("vocab")?.as_usize()?,
+            d_model: v.field("d_model")?.as_usize()?,
+            n_layers: v.field("n_layers")?.as_usize()?,
+            n_heads: v.field("n_heads")?.as_usize()?,
+            d_ff: v.field("d_ff")?.as_usize()?,
+            seq_len: v.field("seq_len")?.as_usize()?,
+            batch: v.field("batch")?.as_usize()?,
+            flat_size: v.field("flat_size")?.as_usize()?,
+            padded_size: v.field("padded_size")?.as_usize()?,
+            beta1: v.field("beta1")?.as_f64()?,
+            beta2: v.field("beta2")?.as_f64()?,
+            eps: v.field("eps")?.as_f64()?,
+            weight_decay: v.field("weight_decay")?.as_f64()?,
+            artifacts,
+            params,
+        })
+    }
+
+    /// Convert the manifest param table into the optimizer [`Layout`].
+    pub fn layout(&self) -> Layout {
+        Layout {
+            params: self.params.clone(),
+            flat_size: self.flat_size,
+            padded_size: self.padded_size,
+        }
+    }
+
+    /// Tokens per training batch.
+    pub fn tokens_per_batch(&self) -> u64 {
+        (self.batch * self.seq_len) as u64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub pad_block: usize,
+    pub models: HashMap<String, ModelEntry>,
+    pub optim: HashMap<String, String>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut models = HashMap::new();
+        for (name, entry) in v.field("models")?.as_obj()? {
+            models.insert(name.clone(), ModelEntry::from_json(entry)?);
+        }
+        let mut optim = HashMap::new();
+        for (name, rel) in v.field("optim")?.as_obj()? {
+            optim.insert(name.clone(), rel.as_str()?.to_string());
+        }
+        Ok(Manifest {
+            pad_block: v.field("pad_block")?.as_usize()?,
+            models,
+            optim,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {}/manifest.json ({e}); run `make artifacts` first",
+                dir.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model config '{name}' not in manifest"))
+    }
+
+    /// Absolute path of a model artifact ("eval" | "grad" | "step").
+    pub fn artifact_path(&self, model: &str, kind: &str) -> Result<PathBuf> {
+        let entry = self.model(model)?;
+        let rel = entry
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("artifact kind '{kind}' missing for '{model}'"))?;
+        Ok(self.dir.join(rel))
+    }
+
+    /// Absolute path of an optimizer-only artifact by key name.
+    pub fn optim_artifact(&self, key: &str) -> Result<PathBuf> {
+        let rel = self
+            .optim
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("optimizer artifact '{key}' not in manifest"))?;
+        Ok(self.dir.join(rel))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> &'static str {
+        r#"{
+          "pad_block": 1024,
+          "models": {
+            "test": {
+              "arch": "llama", "vocab": 128, "d_model": 32, "n_layers": 2,
+              "n_heads": 2, "d_ff": 88, "seq_len": 32, "batch": 4,
+              "flat_size": 100, "padded_size": 1024,
+              "beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "weight_decay": 0.0,
+              "artifacts": {"eval": "eval_test.hlo.txt"},
+              "params": [
+                {"name": "embed.tok", "role": "embed", "offset": 0, "shape": [8, 4]},
+                {"name": "layers.0.wq", "role": "linear", "offset": 32, "shape": [4, 4]},
+                {"name": "final_norm", "role": "norm", "offset": 48, "shape": [4]},
+                {"name": "output", "role": "output", "offset": 52, "shape": [4, 8]}
+              ]
+            }
+          },
+          "optim": {"frugal_update_4096": "frugal_update_4096.hlo.txt"}
+        }"#
+    }
+
+    #[test]
+    fn parse_and_layout() {
+        let man = Manifest::parse(sample_json(), Path::new("/tmp")).unwrap();
+        let entry = man.models.get("test").unwrap();
+        let layout = entry.layout();
+        assert_eq!(layout.params.len(), 4);
+        assert_eq!(layout.params[1].role, Role::Linear);
+        assert_eq!(layout.params[0].role, Role::Embed);
+        assert_eq!(layout.flat_size, 100);
+        assert_eq!(entry.tokens_per_batch(), 128);
+        assert!((entry.beta2 - 0.999).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let man = Manifest::parse(sample_json(), Path::new("/tmp")).unwrap();
+        assert!(man.model("nope").is_err());
+        assert!(man.artifact_path("test", "step").is_err());
+        assert!(man.optim_artifact("nope").is_err());
+        assert!(man.artifact_path("test", "eval").is_ok());
+    }
+}

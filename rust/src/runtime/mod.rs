@@ -1,0 +1,97 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects).
+//!
+//! Python never runs here: artifacts are produced once by
+//! `make artifacts` and the binary is self-contained afterwards.
+
+mod manifest;
+
+pub use manifest::{Manifest, ModelEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::Result;
+
+/// A compiled, ready-to-run computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; the artifact's tuple output is
+    /// decomposed into its elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT client plus a compile cache keyed by artifact path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(path) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = std::sync::Arc::new(Executable {
+            exe,
+            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+        });
+        self.cache.lock().unwrap().insert(path.to_path_buf(), executable.clone());
+        Ok(executable)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers (marshalling between Vec<f32>/Vec<i32> and xla::Literal)
+// ---------------------------------------------------------------------------
+
+/// 1-D f32 literal.
+pub fn lit_f32(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Shape-(1,) f32 scalar input (the aot.py scalar convention).
+pub fn lit_scalar1(x: f32) -> xla::Literal {
+    xla::Literal::vec1(&[x])
+}
+
+/// (rows × cols) i32 literal from row-major data.
+pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "token buffer shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Extract a Vec<f32> from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract the scalar f32 from a rank-0 literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

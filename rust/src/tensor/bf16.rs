@@ -1,0 +1,74 @@
+//! Software bfloat16 rounding (round-to-nearest-even).
+//!
+//! Used to reproduce the paper's precision experiments (Tables 3 and 9):
+//! "pure bf16" training stores master weights and optimizer state in
+//! bfloat16, which loses fine-grained updates. We simulate that storage
+//! format by rounding values through bf16 after every update, exactly as a
+//! bf16 tensor would quantize them.
+
+/// Round an f32 to the nearest bfloat16-representable value (ties to even).
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // bf16 keeps the top 16 bits of the f32. Round-to-nearest-even on the
+    // truncated 16 bits.
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb);
+    f32::from_bits(rounded & 0xffff_0000)
+}
+
+/// Round every element of a slice through bf16 storage.
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = bf16_round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_unchanged() {
+        for &v in &[0.0f32, 1.0, -2.0, 0.5, 256.0, -0.09375] {
+            assert_eq!(bf16_round(v), v, "{v} should be bf16-exact");
+        }
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        // bf16 has 8 significand bits: relative error <= 2^-8.
+        for i in 1..1000 {
+            let v = 1.0 + i as f32 * 1e-3;
+            let r = bf16_round(v);
+            assert!(((r - v) / v).abs() <= 1.0 / 256.0, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn small_update_is_lost() {
+        // The Table 3 phenomenon in miniature: adding a tiny delta to a
+        // bf16-stored weight is a no-op — master weights need f32.
+        let w = bf16_round(1.0f32);
+        let updated = bf16_round(w + 1e-4);
+        assert_eq!(updated, w);
+        // While an f32 master weight retains it.
+        assert_ne!(w + 1e-4, w);
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1.0 + 2^-9 is exactly halfway between 1.0 and 1.0 + 2^-8.
+        let v = 1.0 + 2f32.powi(-9);
+        assert_eq!(bf16_round(v), 1.0); // even significand wins
+    }
+
+    #[test]
+    fn slice_rounding() {
+        let mut xs = vec![1.0001f32; 8];
+        bf16_round_slice(&mut xs);
+        for x in &xs {
+            assert_eq!(*x, 1.0);
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Minimal dense-linear-algebra substrate.
+//!
+//! The paper's algorithms operate on per-module weight matrices and on the
+//! flat parameter vector. We deliberately avoid external ndarray crates:
+//! the operations needed (gemm, transpose, norms, column gathers, bf16
+//! rounding) are few, and owning them keeps the hot paths transparent to
+//! profile and optimize (see EXPERIMENTS.md §Perf).
+
+mod bf16;
+pub mod matrix;
+
+pub use bf16::{bf16_round, bf16_round_slice};
+pub use matrix::Matrix;
+
+/// Dot product of two equal-length slices.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm of a slice.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x` (BLAS axpy).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// In-place scale.
+pub fn scale(a: &mut [f32], s: f32) {
+    for v in a {
+        *v *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_norm_axpy() {
+        let a = [1.0, 2.0, 3.0];
+        let mut b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert!((norm(&a) - 14f32.sqrt()).abs() < 1e-6);
+        axpy(2.0, &a, &mut b);
+        assert_eq!(b, [6.0, 9.0, 12.0]);
+        let mut c = [1.0, -2.0];
+        scale(&mut c, -3.0);
+        assert_eq!(c, [-3.0, 6.0]);
+    }
+}

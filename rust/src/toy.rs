@@ -1,0 +1,219 @@
+//! Closed-form toy problems for the theory experiments.
+//!
+//! - [`QuadraticMatrix`]: min ‖W‖² over W ∈ ℝ^{10×10} — the paper's
+//!   Figure 3 setup (GaLore-like SGDM with/without momentum re-projection).
+//! - [`Quadratic`]: min ½ xᵀ diag(λ) x — convergence-rate checks against
+//!   Theorem 5.2's step-size condition.
+//! - [`galore_sgdm_toy`]: the exact Fig. 3 algorithm — rank-r random
+//!   projection refreshed every T steps, SGDM in the projected space, with
+//!   optional momentum re-projection + mass normalization.
+
+
+use crate::util::Prng;
+
+use crate::linalg::random_semi_orthogonal;
+use crate::tensor::Matrix;
+
+/// min ½ xᵀ diag(λ) x; ∇f = λ ⊙ x. L = max λ.
+pub struct Quadratic {
+    pub lambda: Vec<f32>,
+}
+
+impl Quadratic {
+    pub fn new(lambda: Vec<f32>) -> Self {
+        Quadratic { lambda }
+    }
+
+    pub fn loss(&self, x: &[f32]) -> f64 {
+        x.iter().zip(&self.lambda).map(|(xi, li)| 0.5 * (li * xi * xi) as f64).sum()
+    }
+
+    pub fn grad(&self, x: &[f32], out: &mut [f32]) {
+        for i in 0..x.len() {
+            out[i] = self.lambda[i] * x[i];
+        }
+    }
+
+    /// Stochastic gradient with additive N(0, σ²) noise per coordinate.
+    pub fn stochastic_grad(&self, x: &[f32], sigma: f32, rng: &mut Prng, out: &mut [f32]) {
+        for i in 0..x.len() {
+            out[i] = self.lambda[i] * x[i]
+                + sigma * crate::tensor::matrix::normal_sample(rng);
+        }
+    }
+
+    pub fn smoothness(&self) -> f32 {
+        self.lambda.iter().cloned().fold(0.0, f32::max)
+    }
+}
+
+/// One trajectory of the Figure 3 experiment: GaLore-like SGDM on
+/// min ‖W‖², W ∈ ℝ^{n×n}, rank-r random projection refreshed every `t`
+/// steps. If `reproject`, momentum is rotated into the new subspace and
+/// renormalized to preserve momentum mass (paper §D); otherwise it is kept
+/// verbatim (original GaLore).
+///
+/// Returns the loss ‖W‖² at every step.
+pub fn galore_sgdm_toy(
+    n: usize,
+    rank: usize,
+    t: u64,
+    steps: u64,
+    lr: f32,
+    beta: f32,
+    reproject: bool,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = Prng::seed_from_u64(seed);
+    let mut w = Matrix::randn(n, n, 1.0, &mut rng);
+    let mut p = random_semi_orthogonal(n, rank, &mut rng);
+    // Momentum lives in the projected space: (rank × n).
+    let mut m = Matrix::zeros(rank, n);
+    let mut losses = Vec::with_capacity(steps as usize);
+    for step in 0..steps {
+        if step > 0 && step % t == 0 {
+            let p_new = random_semi_orthogonal(n, rank, &mut rng);
+            if reproject {
+                // m_new = (P_new^T P_old) m_old, then normalize by the
+                // norm ratio to preserve momentum mass (§D / Fig. 3).
+                let rot = p_new.t_matmul(&p);
+                let m_rot = rot.matmul(&m);
+                let old_norm = crate::tensor::norm(&m.data);
+                let new_norm = crate::tensor::norm(&m_rot.data);
+                let gain = if new_norm > 1e-12 { old_norm / new_norm } else { 0.0 };
+                m = m_rot.scaled(gain);
+            }
+            // !reproject: keep stale m (different subspace) — GaLore.
+            p = p_new;
+        }
+        losses.push((w.frobenius_norm() as f64).powi(2));
+        // grad of ||W||^2 = 2W; project, momentum, lift, apply.
+        let g = w.scaled(2.0);
+        let g_low = p.t_matmul(&g);
+        for i in 0..m.data.len() {
+            m.data[i] = beta * m.data[i] + (1.0 - beta) * g_low.data[i];
+        }
+        let upd = p.matmul(&m);
+        w = w.sub(&upd.scaled(lr));
+    }
+    losses
+}
+
+/// FRUGAL(SGDM, SGD) on a [`Quadratic`] — Algorithm 2, used by the theory
+/// tests: momentum set J_k = coordinates selected i.i.d. with prob `p_sel`
+/// each round of length `t`.
+pub fn frugal_sgdm_quadratic(
+    problem: &Quadratic,
+    x0: &[f32],
+    lr: f32,
+    beta: f32,
+    p_sel: f64,
+    t: u64,
+    steps: u64,
+    sigma: f32,
+    seed: u64,
+) -> Vec<f64> {
+    let d = x0.len();
+    let mut rng = Prng::seed_from_u64(seed);
+    let mut x = x0.to_vec();
+    let mut m = vec![0.0f32; d];
+    let mut mask = vec![false; d];
+    let mut g = vec![0.0f32; d];
+    let mut losses = Vec::with_capacity(steps as usize);
+    
+    for step in 0..steps {
+        if step % t == 0 {
+            for b in mask.iter_mut() {
+                *b = rng.f64() < p_sel;
+            }
+        }
+        losses.push(problem.loss(&x));
+        problem.stochastic_grad(&x, sigma, &mut rng, &mut g);
+        for j in 0..d {
+            if mask[j] {
+                m[j] = (1.0 - beta) * g[j] + beta * m[j];
+                x[j] -= lr * m[j];
+            } else {
+                m[j] = 0.0; // buffer released outside J_k (Alg. 2 line 3)
+                x[j] -= lr * g[j];
+            }
+        }
+    }
+    losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_grad_correct() {
+        let q = Quadratic::new(vec![1.0, 4.0]);
+        let mut g = vec![0.0; 2];
+        q.grad(&[2.0, 3.0], &mut g);
+        assert_eq!(g, vec![2.0, 12.0]);
+        assert!((q.loss(&[2.0, 3.0]) - (2.0 + 18.0)) < 1e-9);
+        assert_eq!(q.smoothness(), 4.0);
+    }
+
+    #[test]
+    fn figure3_reprojection_converges_faster() {
+        // The paper's Fig. 3 claim: with re-projection the toy problem
+        // converges much faster. Average over a few seeds like the paper
+        // (5 runs).
+        let mut adv = 0;
+        for seed in 0..5 {
+            let with = galore_sgdm_toy(10, 3, 10, 300, 0.05, 0.9, true, seed);
+            let without = galore_sgdm_toy(10, 3, 10, 300, 0.05, 0.9, false, seed);
+            if with.last().unwrap() < without.last().unwrap() {
+                adv += 1;
+            }
+        }
+        assert!(adv >= 4, "re-projection won only {adv}/5 runs");
+    }
+
+    #[test]
+    fn figure3_both_decrease() {
+        let with = galore_sgdm_toy(10, 3, 10, 300, 0.05, 0.9, true, 0);
+        let without = galore_sgdm_toy(10, 3, 10, 300, 0.05, 0.9, false, 0);
+        assert!(with.last().unwrap() < &with[0]);
+        assert!(without.last().unwrap() < &without[0]);
+    }
+
+    #[test]
+    fn alg2_full_selection_is_sgdm_rate() {
+        // With p_sel=1 (always J=[d]) and the Thm 5.2 step bound, the
+        // deterministic quadratic converges.
+        let q = Quadratic::new(vec![1.0; 8]);
+        let beta = 0.9f32;
+        let alpha = (1.0 - beta) / (q.smoothness() * (4.0 - beta + beta * beta));
+        let losses =
+            frugal_sgdm_quadratic(&q, &[5.0; 8], alpha, beta, 1.0, 10, 2000, 0.0, 0);
+        assert!(losses.last().unwrap() < &1e-3, "final={}", losses.last().unwrap());
+    }
+
+    #[test]
+    fn alg2_partial_selection_still_converges() {
+        let q = Quadratic::new(vec![0.5, 1.0, 2.0, 4.0]);
+        let beta = 0.9f32;
+        let alpha = (1.0 - beta) / (q.smoothness() * (4.0 - beta + beta * beta));
+        let losses =
+            frugal_sgdm_quadratic(&q, &[3.0; 4], alpha, beta, 0.5, 5, 4000, 0.0, 1);
+        assert!(losses.last().unwrap() < &1e-3, "final={}", losses.last().unwrap());
+    }
+
+    #[test]
+    fn alg2_noise_floor_scales_with_sigma() {
+        // Theorem 5.2: the stationary noise floor is O(L·α·σ²).
+        let q = Quadratic::new(vec![1.0; 16]);
+        let run = |sigma: f32| {
+            let losses =
+                frugal_sgdm_quadratic(&q, &[1.0; 16], 0.01, 0.9, 0.5, 10, 5000, sigma, 2);
+            // average of the last 500 losses = stationary level
+            losses[4500..].iter().sum::<f64>() / 500.0
+        };
+        let lo = run(0.1);
+        let hi = run(1.0);
+        assert!(hi > 5.0 * lo, "noise floor should grow ~sigma^2: lo={lo} hi={hi}");
+    }
+}

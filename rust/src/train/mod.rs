@@ -1,0 +1,381 @@
+//! End-to-end trainers binding runtime + coordinator.
+//!
+//! Two execution paths (DESIGN.md §2):
+//! - [`FusedTrainer`]: the performance path. One PJRT call per step runs
+//!   fwd + bwd + the Pallas `frugal_update` kernel; Rust supplies the
+//!   subspace mask (re-built every T steps) and the scheduled LRs. Covers
+//!   FRUGAL (any mask policy), full AdamW (mask ≡ 1 on real lanes) and
+//!   pure signSGD (mask ≡ 0) — the fast cases of the paper's tables.
+//! - [`GradTrainer`]: the flexibility path. The grad artifact returns
+//!   (loss, grads) and any [`Optimizer`] from the suite consumes them in
+//!   Rust — required by GaLore/BAdam/Fira/LDAdam/AdaMeM/LoRA which need
+//!   host-side SVD / error feedback / adapters.
+
+
+use crate::util::Prng;
+
+use crate::coordinator::clip::clip_global_norm;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::subspace::MaskBuilder;
+use crate::coordinator::LrSchedule;
+use crate::optim::{Optimizer, Role};
+use crate::runtime::{lit_f32, lit_i32_2d, lit_scalar1, to_scalar_f32, to_vec_f32, Executable,
+                     Manifest, ModelEntry, Runtime};
+use crate::tensor::bf16_round_slice;
+use crate::Result;
+
+/// Initialize the flat parameter vector the same way model.init_params
+/// does in python: N(0, 0.02) for weights, 1 for norm gains, 0 for norm
+/// biases, 0 padding.
+pub fn init_flat(entry: &ModelEntry, seed: u64) -> Vec<f32> {
+    let mut rng = Prng::seed_from_u64(seed);
+    let mut flat = vec![0.0f32; entry.padded_size];
+    for p in &entry.layout().params {
+        let dst = &mut flat[p.offset..p.offset + p.numel()];
+        if p.role == Role::Norm {
+            let fill = if p.name.ends_with(".b") { 0.0 } else { 1.0 };
+            dst.iter_mut().for_each(|x| *x = fill);
+        } else {
+            for x in dst.iter_mut() {
+                *x = 0.02 * crate::tensor::matrix::normal_sample(&mut rng);
+            }
+        }
+    }
+    flat
+}
+
+/// Common handles for one model config.
+pub struct Session {
+    pub entry: ModelEntry,
+    pub eval_exe: std::sync::Arc<Executable>,
+    pub predict_exe: Option<std::sync::Arc<Executable>>,
+    pub model_name: String,
+}
+
+impl Session {
+    pub fn open(rt: &Runtime, man: &Manifest, model: &str) -> Result<Session> {
+        let entry = man.model(model)?.clone();
+        let eval_exe = rt.load(&man.artifact_path(model, "eval")?)?;
+        // predict is optional: older artifact trees may not have it.
+        let predict_exe = man
+            .artifact_path(model, "predict")
+            .ok()
+            .and_then(|p| rt.load(&p).ok());
+        Ok(Session { entry, eval_exe, predict_exe, model_name: model.to_string() })
+    }
+
+    /// Last-token logits for a batch: (batch × vocab), row-major.
+    pub fn predict(&self, flat: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let exe = self
+            .predict_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("predict artifact missing; re-run make artifacts"))?;
+        let out = exe.run(&[
+            lit_f32(flat),
+            lit_i32_2d(tokens, self.entry.batch, self.entry.seq_len)?,
+        ])?;
+        to_vec_f32(&out[0])
+    }
+
+    /// Mean held-out loss over `batches` validation batches supplied by
+    /// the closure (idx -> token buffer).
+    pub fn eval_loss(
+        &self,
+        flat: &[f32],
+        batches: u64,
+        mut batch_fn: impl FnMut(u64) -> Vec<i32>,
+    ) -> Result<f64> {
+        let mut total = 0.0f64;
+        for i in 0..batches {
+            let tokens = batch_fn(i);
+            let out = self.eval_exe.run(&[
+                lit_f32(flat),
+                lit_i32_2d(&tokens, self.entry.batch, self.entry.seq_len)?,
+            ])?;
+            total += to_scalar_f32(&out[0])? as f64;
+        }
+        Ok(total / batches as f64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused path
+// ---------------------------------------------------------------------------
+
+/// Precision regime for master weights/state (paper Tables 3/9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 master weights (the paper's mixed-precision stand-in).
+    F32,
+    /// Round params + optimizer state through bf16 after every step.
+    PureBf16,
+}
+
+pub struct FusedTrainer {
+    pub session: Session,
+    step_exe: std::sync::Arc<Executable>,
+    pub flat: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    mask: Vec<f32>,
+    pub mask_builder: MaskBuilder,
+    pub schedule: LrSchedule,
+    pub peak_lr: f64,
+    pub lr_free_mult: f64,
+    pub update_freq: u64,
+    pub precision: Precision,
+    step: u64,
+    /// Adam-step counter fed to the kernel's bias correction. Restarts at
+    /// each subspace change so corrections match the freshly-reset state.
+    adam_t: u64,
+    pub metrics: Metrics,
+}
+
+impl FusedTrainer {
+    pub fn new(
+        rt: &Runtime,
+        man: &Manifest,
+        model: &str,
+        mask_builder: MaskBuilder,
+        schedule: LrSchedule,
+        peak_lr: f64,
+        lr_free_mult: f64,
+        update_freq: u64,
+        seed: u64,
+    ) -> Result<FusedTrainer> {
+        let session = Session::open(rt, man, model)?;
+        let step_exe = rt.load(&man.artifact_path(model, "step")?)?;
+        let n = session.entry.padded_size;
+        let flat = init_flat(&session.entry, seed);
+        Ok(FusedTrainer {
+            session,
+            step_exe,
+            flat,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            mask: Vec::new(),
+            mask_builder,
+            schedule,
+            peak_lr,
+            lr_free_mult,
+            update_freq,
+            precision: Precision::F32,
+            step: 0,
+            adam_t: 0,
+            metrics: Metrics::new(),
+        })
+    }
+
+    /// One fused train step on `tokens` (batch × seq, row-major).
+    pub fn step(&mut self, tokens: &[i32]) -> Result<f32> {
+        if self.step % self.update_freq == 0 {
+            self.mask = self.mask_builder.advance();
+            self.adam_t = 0;
+        }
+        self.adam_t += 1;
+        let lr = self.schedule.lr(self.peak_lr, self.step) as f32;
+        let lr_free = lr * self.lr_free_mult as f32;
+        let entry = &self.session.entry;
+        let out = self.step_exe.run(&[
+            lit_f32(&self.flat),
+            lit_f32(&self.m),
+            lit_f32(&self.v),
+            lit_f32(&self.mask),
+            lit_i32_2d(tokens, entry.batch, entry.seq_len)?,
+            lit_scalar1(lr),
+            lit_scalar1(lr_free),
+            lit_scalar1(self.adam_t as f32),
+        ])?;
+        let loss = to_scalar_f32(&out[0])?;
+        self.flat = to_vec_f32(&out[1])?;
+        self.m = to_vec_f32(&out[2])?;
+        self.v = to_vec_f32(&out[3])?;
+        if self.precision == Precision::PureBf16 {
+            bf16_round_slice(&mut self.flat);
+            bf16_round_slice(&mut self.m);
+            bf16_round_slice(&mut self.v);
+        }
+        self.step += 1;
+        self.metrics.record(self.step, loss, lr as f64, entry.tokens_per_batch());
+        Ok(loss)
+    }
+
+    pub fn global_step(&self) -> u64 {
+        self.step
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grad path
+// ---------------------------------------------------------------------------
+
+pub struct GradTrainer {
+    pub session: Session,
+    grad_exe: std::sync::Arc<Executable>,
+    pub flat: Vec<f32>,
+    pub optimizer: Box<dyn Optimizer>,
+    pub schedule: LrSchedule,
+    pub peak_lr: f64,
+    pub clip: Option<f32>,
+    pub precision: Precision,
+    step: u64,
+    pub metrics: Metrics,
+}
+
+impl GradTrainer {
+    pub fn new(
+        rt: &Runtime,
+        man: &Manifest,
+        model: &str,
+        optimizer: Box<dyn Optimizer>,
+        schedule: LrSchedule,
+        peak_lr: f64,
+        seed: u64,
+    ) -> Result<GradTrainer> {
+        let session = Session::open(rt, man, model)?;
+        let grad_exe = rt.load(&man.artifact_path(model, "grad")?)?;
+        let flat = init_flat(&session.entry, seed);
+        Ok(GradTrainer {
+            session,
+            grad_exe,
+            flat,
+            optimizer,
+            schedule,
+            peak_lr,
+            clip: None,
+            precision: Precision::F32,
+            step: 0,
+            metrics: Metrics::new(),
+        })
+    }
+
+    /// One grad-then-rust-optimizer step.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<f32> {
+        let entry = &self.session.entry;
+        let out = self.grad_exe.run(&[
+            lit_f32(&self.flat),
+            lit_i32_2d(tokens, entry.batch, entry.seq_len)?,
+        ])?;
+        let loss = to_scalar_f32(&out[0])?;
+        let mut grads = to_vec_f32(&out[1])?;
+        if let Some(max_norm) = self.clip {
+            clip_global_norm(&mut grads, max_norm);
+        }
+        let lr = self.schedule.lr(self.peak_lr, self.step) as f32;
+        self.optimizer.begin_step(self.step);
+        self.optimizer.step(&mut self.flat, &grads, lr);
+        if self.precision == Precision::PureBf16 {
+            bf16_round_slice(&mut self.flat);
+        }
+        self.step += 1;
+        self.metrics.record(self.step, loss, lr as f64, entry.tokens_per_batch());
+        Ok(loss)
+    }
+
+    /// Loss + raw gradient without applying an update (Figure 2 gradient
+    /// collection).
+    pub fn loss_and_grad(&self, tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let entry = &self.session.entry;
+        let out = self.grad_exe.run(&[
+            lit_f32(&self.flat),
+            lit_i32_2d(tokens, entry.batch, entry.seq_len)?,
+        ])?;
+        Ok((to_scalar_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+
+    pub fn global_step(&self) -> u64 {
+        self.step
+    }
+}
+
+/// Deterministic task-batch sampler shared by fine-tuning drivers: cycles
+/// training examples of a [`crate::data::ClassificationTask`].
+pub fn task_batch(
+    task: &crate::data::ClassificationTask,
+    entry: &ModelEntry,
+    step: u64,
+    rng: &mut Prng,
+) -> Vec<i32> {
+    let _ = rng.next_u64(); // advance stream per call (mirrors shuffling)
+    task.train_batch((step as usize * entry.batch) % task.cfg.train_examples, entry.batch)
+}
+
+// ---------------------------------------------------------------------------
+// Fine-tuning harness (paper §7 experiments)
+// ---------------------------------------------------------------------------
+
+/// Fine-tune `base_flat` on one classification task with the given
+/// optimizer and report test accuracy (argmax over the task's label-token
+/// ids at the final position).
+pub fn finetune_and_eval(
+    rt: &Runtime,
+    man: &Manifest,
+    model: &str,
+    base_flat: &[f32],
+    task: &crate::data::ClassificationTask,
+    optimizer: Box<dyn Optimizer>,
+    steps: u64,
+    peak_lr: f64,
+    seed: u64,
+) -> Result<f64> {
+    let mut tr = GradTrainer::new(
+        rt,
+        man,
+        model,
+        optimizer,
+        LrSchedule::ConstantWarmup { warmup: steps / 10 },
+        peak_lr,
+        seed,
+    )?;
+    tr.flat.copy_from_slice(base_flat);
+    let entry = tr.session.entry.clone();
+    for step in 0..steps {
+        let tokens = task.train_batch((step as usize * entry.batch) % task.cfg.train_examples,
+                                      entry.batch);
+        tr.step(&tokens)?;
+    }
+    task_accuracy(&tr.session, &tr.flat, task)
+}
+
+/// Test-set accuracy of `flat` on `task` via the predict artifact.
+pub fn task_accuracy(
+    session: &Session,
+    flat: &[f32],
+    task: &crate::data::ClassificationTask,
+) -> Result<f64> {
+    let entry = &session.entry;
+    let vocab = entry.vocab;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let n_test = task.cfg.test_examples;
+    let mut idx = 0usize;
+    while idx < n_test {
+        let mut tokens = Vec::with_capacity(entry.batch * entry.seq_len);
+        let mut labels = Vec::with_capacity(entry.batch);
+        for b in 0..entry.batch {
+            let ex = task.test_example((idx + b) % n_test);
+            tokens.extend_from_slice(&ex.tokens);
+            labels.push(ex.label);
+        }
+        let logits = session.predict(flat, &tokens)?;
+        for (b, &label) in labels.iter().enumerate() {
+            if idx + b >= n_test {
+                break;
+            }
+            let row = &logits[b * vocab..(b + 1) * vocab];
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for c in 0..task.cfg.classes {
+                let tok = task.label_token(c) as usize;
+                if row[tok] > best_v {
+                    best_v = row[tok];
+                    best = c;
+                }
+            }
+            correct += (best == label) as usize;
+            total += 1;
+        }
+        idx += entry.batch;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}

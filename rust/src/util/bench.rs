@@ -1,0 +1,100 @@
+//! Tiny timing harness for the `benches/` binaries (criterion is not
+//! available offline). Warmup + N timed iterations, reports median and
+//! mean-absolute-deviation.
+
+use std::time::Instant;
+
+/// Timing summary in nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub mad_ns: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    /// Throughput given a per-iteration element count.
+    pub fn elements_per_s(&self, elements: usize) -> f64 {
+        elements as f64 / (self.median_ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.3} ms/iter (±{:.3}, n={})", self.median_ns / 1e6, self.mad_ns / 1e6,
+               self.iters)
+    }
+}
+
+/// Time `f` with `warmup` unrecorded and `iters` recorded runs.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mad = samples.iter().map(|s| (s - median).abs()).sum::<f64>() / samples.len() as f64;
+    Timing { median_ns: median, mean_ns: mean, mad_ns: mad, iters }
+}
+
+/// Print a paper-style table: header row then aligned cells.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_work() {
+        let t = time_fn(1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(t.median_ns > 0.0);
+        assert_eq!(t.iters, 5);
+        assert!(t.per_iter_ms() < 1e3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Timing { median_ns: 1e9, mean_ns: 1e9, mad_ns: 0.0, iters: 1 };
+        assert!((t.elements_per_s(1000) - 1000.0).abs() < 1e-6);
+    }
+}

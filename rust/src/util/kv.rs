@@ -1,0 +1,97 @@
+//! Flat `key = value` config files (the `configs/*.toml` format).
+//!
+//! A pragmatic TOML subset: one `key = value` per line, `#` comments,
+//! quoted strings, integers, floats, booleans. No tables/arrays — the
+//! TrainConfig schema is flat by design.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed key→raw-value map.
+#[derive(Clone, Debug, Default)]
+pub struct KvFile {
+    pub entries: HashMap<String, String>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<KvFile> {
+        let mut entries = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let key = key.trim().to_string();
+            let mut value = value.trim();
+            // strip trailing comment on unquoted values
+            if !value.starts_with('"') {
+                if let Some(idx) = value.find('#') {
+                    value = value[..idx].trim();
+                }
+            }
+            let value = if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+                value[1..value.len() - 1].to_string()
+            } else {
+                value.to_string()
+            };
+            entries.insert(key, value);
+        }
+        Ok(KvFile { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key).map(|v| v.parse().map_err(|e| anyhow::anyhow!("{key}: {e}"))).transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key).map(|v| v.parse().map_err(|e| anyhow::anyhow!("{key}: {e}"))).transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.get(key).map(|v| v.parse().map_err(|e| anyhow::anyhow!("{key}: {e}"))).transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_types() {
+        let text = r#"
+# a comment
+model = "tiny"
+steps = 500
+lr = 1e-3            # inline comment
+fused = true
+[section headers are ignored]
+rho = 0.25
+"#;
+        let kv = KvFile::parse(text).unwrap();
+        assert_eq!(kv.get("model"), Some("tiny"));
+        assert_eq!(kv.get_u64("steps").unwrap(), Some(500));
+        assert_eq!(kv.get_f64("lr").unwrap(), Some(1e-3));
+        assert_eq!(kv.get_bool("fused").unwrap(), Some(true));
+        assert_eq!(kv.get_f64("rho").unwrap(), Some(0.25));
+        assert_eq!(kv.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(KvFile::parse("just some words").is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let kv = KvFile::parse("steps = many").unwrap();
+        assert!(kv.get_u64("steps").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! In-tree substrates replacing external crates (this build is fully
+//! offline: only `xla` and `anyhow` are external dependencies).
+//!
+//! - [`rng`]: xoshiro256++ PRNG with the distributions the paper's
+//!   algorithms need (uniform, range, normal, shuffle).
+//! - [`json`]: minimal JSON parser/writer for `artifacts/manifest.json`
+//!   and run logs.
+//! - [`kv`]: the flat `key = value` config-file format used by
+//!   `configs/*.toml`.
+//! - [`bench`]: a tiny timing harness for the `benches/` binaries.
+
+pub mod bench;
+pub mod json;
+pub mod kv;
+pub mod rng;
+
+pub use rng::Prng;
