@@ -50,7 +50,7 @@ fn main() -> frugal::Result<()> {
             let r = pretrain_run(&rt, &man, &cfg, label, steps, false)?;
             println!("  {label:<16} ppl {:?} ({:.0}s)", r.checkpoints, r.wall_s);
             // paper-size memory column (130M as the representative scale)
-            let arch = ArchSpec::paper_llama("130M");
+            let arch = ArchSpec::paper_llama("130M")?;
             let mem = fmt_gib(optimizer_state_bytes(&arch, mem_method, 4));
             finals.push((label.to_string(), *r.checkpoints.last().unwrap()));
             let mut cells = row(&r);

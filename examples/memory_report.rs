@@ -26,17 +26,15 @@ fn main() -> frugal::Result<()> {
         ("signSGD", Method::SignSgd),
     ];
     let scales = ["60M", "130M", "350M", "1B", "3B"];
-    let rows: Vec<Vec<String>> = methods
-        .iter()
-        .map(|(name, m)| {
-            let mut row = vec![name.to_string()];
-            for s in scales {
-                let arch = ArchSpec::paper_llama(s);
-                row.push(fmt_gib(optimizer_state_bytes(&arch, m, 4)));
-            }
-            row
-        })
-        .collect();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (name, m) in &methods {
+        let mut row = vec![name.to_string()];
+        for s in scales {
+            let arch = ArchSpec::paper_llama(s)?;
+            row.push(fmt_gib(optimizer_state_bytes(&arch, m, 4)));
+        }
+        rows.push(row);
+    }
     print_table(
         "Optimizer-state memory, f32, paper model sizes (paper Table 2 values in parens)",
         &["method", "60M", "130M", "350M", "1B", "3B"],
@@ -51,7 +49,7 @@ fn main() -> frugal::Result<()> {
     let mut rows = Vec::new();
     for (name, m) in [("AdamW", Method::AdamW), ("FRUGAL rho=0.25", Method::Frugal { rho: 0.25 })]
     {
-        let arch = ArchSpec::paper_llama("1B");
+        let arch = ArchSpec::paper_llama("1B")?;
         let opt = optimizer_state_bytes(&arch, &m, 4);
         let total = total_training_bytes(&arch, &m, 4);
         rows.push(vec![

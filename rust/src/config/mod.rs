@@ -7,6 +7,7 @@
 
 
 use crate::coordinator::LrSchedule;
+use crate::engine::ParallelCfg;
 use crate::optim::adamw::AdamCfg;
 use crate::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, StateFreeKind,
                            StateFullKind};
@@ -50,6 +51,9 @@ pub struct TrainConfig {
     pub log_path: Option<String>,
     /// Optional checkpoint path (written at the end of the run).
     pub checkpoint: Option<String>,
+    /// Data-parallel engine settings (`[parallel]` section / `--workers`).
+    /// `None` = legacy single-worker trainers.
+    pub parallel: Option<ParallelCfg>,
 }
 
 impl Default for TrainConfig {
@@ -73,6 +77,7 @@ impl Default for TrainConfig {
             artifacts_dir: "artifacts".into(),
             log_path: None,
             checkpoint: None,
+            parallel: None,
         }
     }
 }
@@ -89,6 +94,36 @@ impl TrainConfig {
     /// `schedule_min_frac` keys.
     pub fn from_toml(text: &str) -> Result<Self> {
         let kv = crate::util::kv::KvFile::parse(text)?;
+        // An unrecognized [section] — or a typo'd key inside [parallel] —
+        // would be read by nothing and silently swallowed: a
+        // wrong-hyperparameter run with no diagnostic. Reject both.
+        const PARALLEL_KEYS: [&str; 6] = [
+            "workers", "grad_accum", "shard_granularity", "straggler_ms", "timeout_ms",
+            "threaded",
+        ];
+        for section in &kv.sections {
+            anyhow::ensure!(
+                section == "parallel",
+                "unknown config section '[{section}]' (known sections: [parallel])"
+            );
+        }
+        for key in kv.entries.keys() {
+            if let Some((section, rest)) = key.split_once('.') {
+                anyhow::ensure!(
+                    section == "parallel",
+                    "unknown config section '[{section}]' (known sections: [parallel])"
+                );
+                anyhow::ensure!(
+                    PARALLEL_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [parallel] (known keys: {})",
+                    PARALLEL_KEYS.join(", ")
+                );
+            } else if PARALLEL_KEYS.contains(&key.as_str()) {
+                // An engine key at top level means the [parallel] header
+                // is missing (or malformed) — don't silently ignore it.
+                anyhow::bail!("key '{key}' belongs under the [parallel] section");
+            }
+        }
         let mut cfg = TrainConfig::default();
         if let Some(v) = kv.get("model") {
             cfg.model = v.to_string();
@@ -140,6 +175,28 @@ impl TrainConfig {
         }
         if let Some(v) = kv.get("checkpoint") {
             cfg.checkpoint = Some(v.to_string());
+        }
+        if kv.has_section("parallel") {
+            let mut p = ParallelCfg::default();
+            if let Some(v) = kv.get_u64("parallel.workers")? {
+                p.workers = v.max(1) as usize;
+            }
+            if let Some(v) = kv.get_u64("parallel.grad_accum")? {
+                p.grad_accum = v.max(1) as usize;
+            }
+            if let Some(v) = kv.get_u64("parallel.shard_granularity")? {
+                p.shard_granularity = v.max(1) as usize;
+            }
+            if let Some(v) = kv.get_u64("parallel.straggler_ms")? {
+                p.straggler_ms = v;
+            }
+            if let Some(v) = kv.get_u64("parallel.timeout_ms")? {
+                p.timeout_ms = v;
+            }
+            if let Some(v) = kv.get_bool("parallel.threaded")? {
+                p.threaded = v;
+            }
+            cfg.parallel = Some(p);
         }
         let cycle = kv.get_u64("schedule_cycle")?.unwrap_or(10_000);
         let total = kv.get_u64("schedule_total")?.unwrap_or(cfg.steps);
@@ -196,6 +253,15 @@ impl TrainConfig {
                 let _ = writeln!(out, "schedule_cycle = {cycle}");
             }
         }
+        if let Some(p) = &self.parallel {
+            let _ = writeln!(out, "\n[parallel]");
+            let _ = writeln!(out, "workers = {}", p.workers);
+            let _ = writeln!(out, "grad_accum = {}", p.grad_accum);
+            let _ = writeln!(out, "shard_granularity = {}", p.shard_granularity);
+            let _ = writeln!(out, "straggler_ms = {}", p.straggler_ms);
+            let _ = writeln!(out, "timeout_ms = {}", p.timeout_ms);
+            let _ = writeln!(out, "threaded = {}", p.threaded);
+        }
         out
     }
 
@@ -207,7 +273,9 @@ impl TrainConfig {
         }
     }
 
-    fn adam_cfg(&self) -> AdamCfg {
+    /// Adam hyper-parameters shared by every Adam-based optimizer this
+    /// config can build (including the engine's sharded state).
+    pub fn adam_cfg(&self) -> AdamCfg {
         AdamCfg {
             beta2: self.beta2 as f32,
             weight_decay: self.weight_decay as f32,
@@ -367,6 +435,58 @@ mod tests {
         assert_eq!(back.clip, cfg.clip);
         assert_eq!(back.log_path, cfg.log_path);
         assert_eq!(back.steps, cfg.steps);
+        assert_eq!(back.parallel, None);
+    }
+
+    #[test]
+    fn parallel_section_roundtrip() {
+        let mut cfg = TrainConfig::default();
+        cfg.parallel = Some(ParallelCfg {
+            workers: 4,
+            grad_accum: 8,
+            shard_granularity: 128,
+            straggler_ms: 3,
+            timeout_ms: 250,
+            threaded: false,
+        });
+        let text = cfg.to_toml();
+        let back = TrainConfig::from_toml(&text).unwrap();
+        assert_eq!(back.parallel, cfg.parallel);
+    }
+
+    #[test]
+    fn unknown_section_is_rejected() {
+        let err = TrainConfig::from_toml("[training]\nsteps = 100\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown config section '[training]'"));
+    }
+
+    #[test]
+    fn typoed_parallel_key_is_rejected() {
+        let err = TrainConfig::from_toml("[parallel]\nworker = 4\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown key 'worker' in [parallel]"));
+        // A top-level key misplaced after the section header is caught too.
+        assert!(TrainConfig::from_toml("[parallel]\nworkers = 2\nsteps = 100\n").is_err());
+    }
+
+    #[test]
+    fn parallel_section_defaults_fill_in() {
+        let cfg = TrainConfig::from_toml("[parallel]\nworkers = 2\n").unwrap();
+        let p = cfg.parallel.expect("section present");
+        assert_eq!(p.workers, 2);
+        assert_eq!(p.grad_accum, ParallelCfg::default().grad_accum);
+        let cfg = TrainConfig::from_toml("steps = 5\n").unwrap();
+        assert!(cfg.parallel.is_none());
+        // A bare header (all defaults) still opts into the engine.
+        let cfg = TrainConfig::from_toml("[parallel]\n").unwrap();
+        assert_eq!(cfg.parallel, Some(ParallelCfg::default()));
+    }
+
+    #[test]
+    fn top_level_engine_key_is_rejected() {
+        let err = TrainConfig::from_toml("workers = 4\n").unwrap_err();
+        assert!(format!("{err}").contains("belongs under the [parallel] section"));
+        let err = TrainConfig::from_toml("[bogus]\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown config section '[bogus]'"));
     }
 
     #[test]

@@ -146,12 +146,53 @@ impl MaskBuilder {
     }
 }
 
+/// Sorted ids of the real (non-padding) lanes a mask routes to the
+/// state-full rule — the lane set the data-parallel engine shards
+/// ZeRO-style across workers (`engine::ShardPlan`).
+pub fn statefull_lanes(mask: &[f32], flat_size: usize) -> Vec<u32> {
+    mask[..flat_size.min(mask.len())]
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m > 0.0)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// Sorted ids of the real lanes a mask routes to the state-free rule
+/// (signSGD). Padding lanes are excluded: they carry no gradient and must
+/// never be touched by an update.
+pub fn statefree_lanes(mask: &[f32], flat_size: usize) -> Vec<u32> {
+    mask[..flat_size.min(mask.len())]
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m == 0.0)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn layout() -> Layout {
         Layout::synthetic(64, 16, 40, 4)
+    }
+
+    #[test]
+    fn lane_sets_partition_the_real_lanes() {
+        let l = layout();
+        let mut mb =
+            MaskBuilder::new(l.clone(), 0.3, SubspacePolicy::Blockwise(BlockPolicy::Random), 9);
+        let mask = mb.advance();
+        let full = statefull_lanes(&mask, l.flat_size);
+        let free = statefree_lanes(&mask, l.flat_size);
+        assert_eq!(full.len() + free.len(), l.flat_size);
+        let mut all: Vec<u32> = full.iter().chain(free.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..l.flat_size as u32).collect::<Vec<_>>());
+        // Padding lanes appear in neither set.
+        assert!(full.iter().all(|&i| (i as usize) < l.flat_size));
+        assert!(free.iter().all(|&i| (i as usize) < l.flat_size));
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Deterministic tree all-reduce over in-memory leaves.
+//!
+//! Floating-point addition is commutative but not associative, so a
+//! gradient combine that sums "in completion order" produces different
+//! bits on every run and at every worker count. [`ReduceTree`] fixes the
+//! *grouping* instead: leaves are combined along a static binary tree
+//! keyed by leaf index — level `l` pairs node `2k` with `2k+1`, an
+//! unpaired tail node promotes alone — so the result is bit-identical
+//! regardless of how many workers produced the leaves or in which order
+//! they arrived. This is the engine invariant that makes
+//! `--workers 1` ≡ `--workers N` (see `tests/engine_parallel.rs`).
+//!
+//! The tree is *eager*: `push` cascades a leaf upward as far as its
+//! siblings allow, so combines overlap with still-running workers instead
+//! of waiting for a barrier.
+
+use std::collections::HashMap;
+
+/// Number of nodes at level `l` of a tree with `n` leaves.
+#[inline]
+fn width(n: usize, l: u32) -> usize {
+    // ceil(n / 2^l) without overflow for the l ranges we use (l <= 64).
+    if l >= usize::BITS {
+        return usize::from(n > 0);
+    }
+    let step = 1usize << l;
+    (n + step - 1) / step
+}
+
+/// Incremental deterministic tree reduction of `n` equal-length `Vec<f32>`
+/// leaves. Feed each leaf exactly once via [`ReduceTree::push`]; the call
+/// that completes the root returns the reduced vector.
+pub struct ReduceTree {
+    n: usize,
+    /// Pending subtree results keyed by (level, index-within-level).
+    pending: HashMap<(u32, usize), Vec<f32>>,
+    fed: Vec<bool>,
+}
+
+impl ReduceTree {
+    pub fn new(n: usize) -> ReduceTree {
+        assert!(n > 0, "reduce tree needs at least one leaf");
+        ReduceTree { n, pending: HashMap::new(), fed: vec![false; n] }
+    }
+
+    pub fn leaves(&self) -> usize {
+        self.n
+    }
+
+    /// Feed leaf `idx`. Returns `Some(root)` on the push that completes
+    /// the tree, `None` otherwise. Panics on an out-of-range or duplicate
+    /// index — both are orchestrator bugs, not data conditions.
+    pub fn push(&mut self, idx: usize, buf: Vec<f32>) -> Option<Vec<f32>> {
+        assert!(idx < self.n, "leaf {idx} out of range (n={})", self.n);
+        assert!(!self.fed[idx], "leaf {idx} fed twice");
+        self.fed[idx] = true;
+
+        let mut level = 0u32;
+        let mut i = idx;
+        let mut buf = buf;
+        loop {
+            let w = width(self.n, level);
+            if w == 1 {
+                debug_assert!(self.pending.is_empty(), "root reached with pending subtrees");
+                return Some(buf);
+            }
+            let sib = i ^ 1;
+            if sib >= w {
+                // Odd tail node: promotes alone to the next level.
+                level += 1;
+                i /= 2;
+                continue;
+            }
+            match self.pending.remove(&(level, sib)) {
+                Some(other) => {
+                    // Combine in index order (lower index on the left) so
+                    // the grouping — and therefore the bits — is fixed.
+                    let (mut left, right) = if i < sib { (buf, other) } else { (other, buf) };
+                    debug_assert_eq!(left.len(), right.len(), "leaf length mismatch");
+                    for (a, b) in left.iter_mut().zip(&right) {
+                        *a += b;
+                    }
+                    buf = left;
+                    level += 1;
+                    i /= 2;
+                }
+                None => {
+                    self.pending.insert((level, i), buf);
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+/// One-shot convenience: deterministically tree-reduce `leaves` (feeding
+/// them in index order). Returns the elementwise tree sum.
+pub fn tree_reduce(leaves: Vec<Vec<f32>>) -> Vec<f32> {
+    let mut tree = ReduceTree::new(leaves.len());
+    let mut root = None;
+    for (i, leaf) in leaves.into_iter().enumerate() {
+        root = tree.push(i, leaf);
+    }
+    root.expect("tree must complete after all leaves")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    /// Plain level-by-level reference with the same pairing rule.
+    fn reference(leaves: &[Vec<f32>]) -> Vec<f32> {
+        let mut cur: Vec<Vec<f32>> = leaves.to_vec();
+        while cur.len() > 1 {
+            let mut nxt = Vec::new();
+            let mut it = 0;
+            while it + 1 < cur.len() {
+                let sum: Vec<f32> =
+                    cur[it].iter().zip(&cur[it + 1]).map(|(a, b)| a + b).collect();
+                nxt.push(sum);
+                it += 2;
+            }
+            if cur.len() % 2 == 1 {
+                nxt.push(cur.last().unwrap().clone());
+            }
+            cur = nxt;
+        }
+        cur.pop().unwrap()
+    }
+
+    fn random_leaves(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Prng::seed_from_u64(seed);
+        (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+    }
+
+    #[test]
+    fn single_leaf_is_identity() {
+        let out = tree_reduce(vec![vec![1.0, -2.5, 3.25]]);
+        assert_eq!(out, vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn matches_reference_grouping_all_sizes() {
+        for n in 1..=17 {
+            let leaves = random_leaves(n, 33, n as u64);
+            let want = reference(&leaves);
+            let got = tree_reduce(leaves);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn arrival_order_is_irrelevant_bitwise() {
+        let n = 11;
+        let leaves = random_leaves(n, 64, 7);
+        let want = tree_reduce(leaves.clone());
+        let mut rng = Prng::seed_from_u64(99);
+        for _ in 0..25 {
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let mut tree = ReduceTree::new(n);
+            let mut got = None;
+            for &i in &order {
+                if let Some(r) = tree.push(i, leaves[i].clone()) {
+                    assert!(got.is_none(), "double completion");
+                    got = Some(r);
+                }
+            }
+            let got = got.expect("incomplete tree");
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn integer_leaves_sum_exactly() {
+        // Small integers are exact in f32, so the tree sum must equal the
+        // naive sum exactly — pins down that nothing is lost or repeated.
+        let n = 13;
+        let leaves: Vec<Vec<f32>> =
+            (0..n).map(|i| vec![i as f32, (2 * i) as f32, 1.0]).collect();
+        let out = tree_reduce(leaves);
+        let s = (0..n).sum::<usize>() as f32;
+        assert_eq!(out, vec![s, 2.0 * s, n as f32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "fed twice")]
+    fn duplicate_leaf_panics() {
+        let mut tree = ReduceTree::new(3);
+        tree.push(0, vec![1.0]);
+        tree.push(0, vec![1.0]);
+    }
+}

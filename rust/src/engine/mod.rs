@@ -1,0 +1,546 @@
+//! Data-parallel execution engine with sharded FRUGAL state.
+//!
+//! The engine generalizes the single-device trainers in [`crate::train`]
+//! to `N` data-parallel workers while keeping the training math
+//! **bit-identical to the single-worker run** at a fixed global batch:
+//!
+//! 1. Each optimizer step covers `grad_accum` micro-batches (the global
+//!    batch). Workers compute micro-batch gradients concurrently; the
+//!    assignment of micro-batches to workers is round-robin but — by
+//!    construction — irrelevant to the result.
+//! 2. Gradients (and losses) are combined with a deterministic **tree
+//!    all-reduce** over in-memory channels ([`allreduce`]): the combine
+//!    grouping is keyed by micro-batch index, never by completion order,
+//!    so the reduced gradient has the same bits for any worker count,
+//!    thread interleaving, or injected straggler delay.
+//! 3. The FRUGAL update is lane-local (Adam on masked lanes, signSGD on
+//!    the rest — the `frugal_update` kernel semantics), so the state-full
+//!    moments are **sharded** ZeRO-style ([`shard`]): each worker holds
+//!    `ceil(K/N)` lanes' worth of m/v, updates its own lanes, and the
+//!    new values are gathered back into the replicated flat vector.
+//! 4. Every `update_freq` steps the subspace is re-selected through the
+//!    shared [`MaskBuilder`] and all shard state is released + fresh
+//!    (the paper's state-reset semantics), which doubles as the shard
+//!    lifecycle boundary — no cross-worker state migration exists.
+//!
+//! Submodules: [`allreduce`] (the deterministic tree), [`shard`] (state
+//! partitioner + shard update kernels), [`refmodel`] (a pure-Rust
+//! gradient source so everything runs without PJRT artifacts), and
+//! [`orchestrator`] (the round-based driver behind `frugal pretrain
+//! --workers N`).
+
+pub mod allreduce;
+pub mod orchestrator;
+pub mod refmodel;
+pub mod shard;
+
+pub use allreduce::{tree_reduce, ReduceTree};
+pub use orchestrator::{Orchestrator, RoundReport};
+pub use refmodel::{RefLm, RefLmCfg};
+pub use shard::ShardPlan;
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::coordinator::clip::clip_global_norm;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::subspace::{statefree_lanes, statefull_lanes, MaskBuilder};
+use crate::coordinator::LrSchedule;
+use crate::optim::adamw::{AdamCfg, AdamState};
+use crate::train::SubspaceClock;
+use crate::Result;
+
+/// Anything that can turn (params, tokens) into (loss, gradient).
+/// Implemented by [`RefLm`] and by `train::PjrtGradSource`.
+pub trait GradSource {
+    /// Length of the flat parameter/gradient vectors.
+    fn padded_size(&self) -> usize;
+
+    /// Mean loss over the micro-batch and its gradient (length
+    /// `padded_size`, zero on padding lanes).
+    fn loss_and_grad(&mut self, flat: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)>;
+
+    /// Loss only (used for evaluation); default derives it from
+    /// [`GradSource::loss_and_grad`].
+    fn loss(&mut self, flat: &[f32], tokens: &[i32]) -> Result<f32> {
+        Ok(self.loss_and_grad(flat, tokens)?.0)
+    }
+}
+
+/// The `[parallel]` run-config section (see `configs/*.toml`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParallelCfg {
+    /// Data-parallel worker count N.
+    pub workers: usize,
+    /// Micro-batches per optimizer step (the global batch is
+    /// `grad_accum × model-batch` sequences). Independent of `workers` so
+    /// the same config is bit-identical at any N.
+    pub grad_accum: usize,
+    /// Shard sizes are rounded up to a multiple of this many lanes.
+    pub shard_granularity: usize,
+    /// Straggler *simulation*: one (rotating per round) worker sleeps
+    /// this many ms before **each micro-batch it processes**, so its
+    /// per-step skew is `straggler_ms × ceil(grad_accum/workers)`. 0
+    /// disables. Threaded execution only — logical workers have no
+    /// concurrency to skew ([`Engine::new`] prints a note if set).
+    pub straggler_ms: u64,
+    /// Straggler *detection*: receive timeout after which a waiting
+    /// orchestrator counts a timeout event in the round report. 0
+    /// disables. Detection never drops work — bit-equality is preserved.
+    /// Threaded execution only, like `straggler_ms`.
+    pub timeout_ms: u64,
+    /// Run workers on OS threads (true) or as logical workers on the
+    /// caller thread (false). Either way the result is bit-identical.
+    pub threaded: bool,
+}
+
+impl Default for ParallelCfg {
+    fn default() -> Self {
+        ParallelCfg {
+            workers: 1,
+            grad_accum: 4,
+            shard_granularity: 64,
+            straggler_ms: 0,
+            timeout_ms: 0,
+            threaded: true,
+        }
+    }
+}
+
+/// Engine hyper-parameters (the optimizer/schedule half; the subspace
+/// half lives in the [`MaskBuilder`] passed to [`Engine::new`]).
+#[derive(Clone, Debug)]
+pub struct EngineCfg {
+    pub parallel: ParallelCfg,
+    pub schedule: LrSchedule,
+    pub peak_lr: f64,
+    /// lr_free = lr × lr_free_mult for the state-free (signSGD) lanes.
+    pub lr_free_mult: f64,
+    /// Subspace re-selection period T (also the round length).
+    pub update_freq: u64,
+    pub adam: AdamCfg,
+    /// Optional global-norm clip applied to the reduced mean gradient.
+    pub clip: Option<f32>,
+}
+
+/// Gradient sources, one per worker. `Threaded` sources run on OS
+/// threads and must be `Send`; `Local` sources (e.g. PJRT handles of
+/// unknown thread-safety) run as logical workers on the caller thread.
+pub enum Sources {
+    Threaded(Vec<Box<dyn GradSource + Send>>),
+    Local(Vec<Box<dyn GradSource>>),
+}
+
+impl Sources {
+    pub fn len(&self) -> usize {
+        match self {
+            Sources::Threaded(v) => v.len(),
+            Sources::Local(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get_mut(&mut self, i: usize) -> &mut dyn GradSource {
+        match self {
+            Sources::Threaded(v) => v[i].as_mut(),
+            Sources::Local(v) => v[i].as_mut(),
+        }
+    }
+}
+
+/// What one worker sends back per micro-batch.
+type MicroResult = (usize, usize, Result<(f32, Vec<f32>)>);
+
+/// The data-parallel FRUGAL trainer.
+pub struct Engine {
+    cfg: EngineCfg,
+    pub mask_builder: MaskBuilder,
+    sources: Sources,
+    pub flat: Vec<f32>,
+    mask: Vec<f32>,
+    /// State-full lane shards (rebuilt every round).
+    plan: ShardPlan,
+    /// State-free lane shards (no state; partitioned for parallel apply).
+    free_plan: ShardPlan,
+    /// Per-worker Adam moments over `plan.lanes_of(w)`.
+    states: Vec<AdamState>,
+    clock: SubspaceClock,
+    round: u64,
+    reports: Vec<RoundReport>,
+    pub metrics: Metrics,
+}
+
+impl Engine {
+    /// `init_flat` must match the mask-builder layout's `padded_size`;
+    /// `sources` must hold one gradient source per worker.
+    pub fn new(
+        mask_builder: MaskBuilder,
+        cfg: EngineCfg,
+        sources: Sources,
+        init_flat: Vec<f32>,
+    ) -> Result<Engine> {
+        let padded = mask_builder.layout().padded_size;
+        anyhow::ensure!(cfg.parallel.workers >= 1, "parallel.workers must be >= 1");
+        anyhow::ensure!(cfg.parallel.grad_accum >= 1, "parallel.grad_accum must be >= 1");
+        anyhow::ensure!(
+            sources.len() == cfg.parallel.workers,
+            "need one gradient source per worker ({} sources for {} workers)",
+            sources.len(),
+            cfg.parallel.workers
+        );
+        anyhow::ensure!(
+            init_flat.len() == padded,
+            "init vector has {} lanes, layout wants {padded}",
+            init_flat.len()
+        );
+        // Straggler knobs only act where there is real concurrency; say
+        // so rather than silently reporting `timeouts 0` forever.
+        let threaded_exec = cfg.parallel.threaded
+            && cfg.parallel.workers > 1
+            && matches!(sources, Sources::Threaded(_));
+        if !threaded_exec && (cfg.parallel.straggler_ms > 0 || cfg.parallel.timeout_ms > 0) {
+            eprintln!(
+                "note: straggler_ms/timeout_ms are inert on logical (non-threaded) \
+                 workers; run threaded sources with workers > 1 to exercise them"
+            );
+        }
+        let clock = SubspaceClock::new(cfg.update_freq);
+        Ok(Engine {
+            cfg,
+            mask_builder,
+            sources,
+            flat: init_flat,
+            mask: Vec::new(),
+            plan: ShardPlan::default(),
+            free_plan: ShardPlan::default(),
+            states: Vec::new(),
+            clock,
+            round: 0,
+            reports: Vec::new(),
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn cfg(&self) -> &EngineCfg {
+        &self.cfg
+    }
+
+    pub fn global_step(&self) -> u64 {
+        self.clock.step()
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn mask(&self) -> &[f32] {
+        &self.mask
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Completed + in-progress round reports.
+    pub fn reports(&self) -> &[RoundReport] {
+        &self.reports
+    }
+
+    /// Total optimizer-state floats across all workers.
+    pub fn state_floats(&self) -> usize {
+        self.states.iter().map(|s| s.floats()).sum()
+    }
+
+    /// Optimizer-state floats held by each worker — the sharding
+    /// criterion: ≤ 2·(ceil(K/N) + granularity padding).
+    pub fn state_floats_per_worker(&self) -> Vec<usize> {
+        self.states.iter().map(|s| s.floats()).collect()
+    }
+
+    /// Start a new round: re-select the subspace, release all shard
+    /// state, re-partition the fresh state-full lane set.
+    fn begin_round(&mut self) {
+        self.round += 1;
+        self.mask = self.mask_builder.advance();
+        let flat_size = self.mask_builder.layout().flat_size;
+        let workers = self.cfg.parallel.workers;
+        let gran = self.cfg.parallel.shard_granularity;
+        self.plan = ShardPlan::partition(statefull_lanes(&self.mask, flat_size), workers, gran);
+        self.free_plan =
+            ShardPlan::partition(statefree_lanes(&self.mask, flat_size), workers, gran);
+        // Release (drop) previous shards, allocate fresh zeroed moments —
+        // the paper's state reset on subspace change.
+        self.states = (0..workers).map(|w| AdamState::new(self.plan.shard_len(w))).collect();
+        self.reports.push(RoundReport::new(self.round, self.clock.step(), &self.plan));
+    }
+
+    /// One data-parallel optimizer step. `batch_fn` maps a global
+    /// micro-batch index to its token buffer; the engine calls it with
+    /// indices `step*grad_accum .. (step+1)*grad_accum`.
+    pub fn step<F>(&mut self, batch_fn: &F) -> Result<f32>
+    where
+        F: Fn(u64) -> Vec<i32> + Sync,
+    {
+        let (step, reselect) = self.clock.tick();
+        if reselect {
+            self.begin_round();
+        }
+        let m = self.cfg.parallel.grad_accum;
+        let nw = self.cfg.parallel.workers;
+        let padded = self.mask_builder.layout().padded_size;
+
+        // ---- gradient phase: compute M micro-batch grads, tree-reduce.
+        let use_threads = self.cfg.parallel.threaded
+            && nw > 1
+            && matches!(self.sources, Sources::Threaded(_));
+        let (loss_sum, mut grad, tokens_total, timeouts) = if use_threads {
+            let straggler_ms = self.cfg.parallel.straggler_ms;
+            let straggler_worker = (self.round as usize + nw - 1) % nw;
+            let timeout_ms = self.cfg.parallel.timeout_ms;
+            let flat: &[f32] = &self.flat;
+            let Sources::Threaded(srcs) = &mut self.sources else { unreachable!() };
+            let (tx, rx) = mpsc::channel::<MicroResult>();
+            std::thread::scope(|scope| {
+                for (w, src) in srcs.iter_mut().enumerate() {
+                    let tx = tx.clone();
+                    scope.spawn(move || {
+                        let mut j = w;
+                        while j < m {
+                            if straggler_ms > 0 && w == straggler_worker {
+                                std::thread::sleep(Duration::from_millis(straggler_ms));
+                            }
+                            let tokens = batch_fn(step * m as u64 + j as u64);
+                            let n_tok = tokens.len();
+                            let res = src.loss_and_grad(flat, &tokens);
+                            // A send error means the collector bailed;
+                            // just stop producing.
+                            if tx.send((j, n_tok, res)).is_err() {
+                                return;
+                            }
+                            j += nw;
+                        }
+                    });
+                }
+                drop(tx);
+                collect_micro_grads(&rx, m, padded, timeout_ms)
+            })?
+        } else {
+            // Logical workers: compute and feed the tree one micro-batch
+            // at a time — only O(log m) partial sums are ever alive, so
+            // peak memory stays far below m full gradients.
+            let mut acc = MicroAccumulator::new(m, padded);
+            for j in 0..m {
+                let tokens = batch_fn(step * m as u64 + j as u64);
+                let n_tok = tokens.len();
+                let (loss, grad) =
+                    self.sources.get_mut(j % nw).loss_and_grad(&self.flat, &tokens)?;
+                acc.push(j, n_tok, loss, grad)?;
+            }
+            let (loss, grad, tokens_total) = acc.finish()?;
+            (loss, grad, tokens_total, 0)
+        };
+
+        // Mean over the global batch — the same scale at any worker count.
+        let inv = 1.0 / m as f32;
+        for g in grad.iter_mut() {
+            *g *= inv;
+        }
+        let loss = loss_sum * inv;
+        if let Some(max_norm) = self.cfg.clip {
+            clip_global_norm(&mut grad, max_norm);
+        }
+
+        // ---- update phase: sharded FRUGAL update (Adam on state-full
+        // lanes, signSGD on state-free lanes), then gather.
+        let lr = self.cfg.schedule.lr(self.cfg.peak_lr, step) as f32;
+        let lr_free = lr * self.cfg.lr_free_mult as f32;
+        let adam = self.cfg.adam;
+        let (full_new, free_new) = {
+            let plan = &self.plan;
+            let free_plan = &self.free_plan;
+            let flat: &[f32] = &self.flat;
+            let grad_ref: &[f32] = &grad;
+            if use_threads {
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(nw);
+                    for (w, state) in self.states.iter_mut().enumerate() {
+                        handles.push(scope.spawn(move || {
+                            let full = shard::adam_shard_update(
+                                state,
+                                plan.lanes_of(w),
+                                flat,
+                                grad_ref,
+                                lr,
+                                &adam,
+                            );
+                            let free = shard::sign_shard_update(
+                                free_plan.lanes_of(w),
+                                flat,
+                                grad_ref,
+                                lr_free,
+                            );
+                            (full, free)
+                        }));
+                    }
+                    let mut full_new = Vec::with_capacity(nw);
+                    let mut free_new = Vec::with_capacity(nw);
+                    for h in handles {
+                        let (full, free) = h.join().expect("shard worker panicked");
+                        full_new.push(full);
+                        free_new.push(free);
+                    }
+                    (full_new, free_new)
+                })
+            } else {
+                let mut full_new = Vec::with_capacity(nw);
+                let mut free_new = Vec::with_capacity(nw);
+                for (w, state) in self.states.iter_mut().enumerate() {
+                    full_new.push(shard::adam_shard_update(
+                        state,
+                        plan.lanes_of(w),
+                        flat,
+                        grad_ref,
+                        lr,
+                        &adam,
+                    ));
+                    free_new.push(shard::sign_shard_update(
+                        free_plan.lanes_of(w),
+                        flat,
+                        grad_ref,
+                        lr_free,
+                    ));
+                }
+                (full_new, free_new)
+            }
+        };
+
+        // Gather: scatter each worker's shard back into the replicated
+        // flat vector (disjoint lanes — order cannot matter).
+        for w in 0..nw {
+            for (k, &lane) in self.plan.lanes_of(w).iter().enumerate() {
+                self.flat[lane as usize] = full_new[w][k];
+            }
+            for (k, &lane) in self.free_plan.lanes_of(w).iter().enumerate() {
+                self.flat[lane as usize] = free_new[w][k];
+            }
+        }
+
+        if let Some(report) = self.reports.last_mut() {
+            report.steps += 1;
+            report.loss_sum += loss as f64;
+            report.straggler_timeouts += timeouts;
+        }
+        self.metrics.record(step + 1, loss, lr as f64, tokens_total as u64);
+        Ok(loss)
+    }
+
+    /// Mean held-out loss over `batches` validation batches (computed on
+    /// worker 0's source).
+    pub fn eval_loss(
+        &mut self,
+        batches: u64,
+        mut batch_fn: impl FnMut(u64) -> Vec<i32>,
+    ) -> Result<f64> {
+        let mut total = 0.0f64;
+        for i in 0..batches.max(1) {
+            let tokens = batch_fn(i);
+            total += self.sources.get_mut(0).loss(&self.flat, &tokens)? as f64;
+        }
+        Ok(total / batches.max(1) as f64)
+    }
+}
+
+/// Incremental gradient/loss accumulator over the deterministic tree:
+/// feed micro-batch results as they become available; only O(log m)
+/// partial sums are alive at any moment.
+struct MicroAccumulator {
+    gtree: ReduceTree,
+    ltree: ReduceTree,
+    grad_root: Option<Vec<f32>>,
+    loss_root: Option<Vec<f32>>,
+    tokens_total: usize,
+    received: usize,
+    padded: usize,
+}
+
+impl MicroAccumulator {
+    fn new(m: usize, padded: usize) -> MicroAccumulator {
+        MicroAccumulator {
+            gtree: ReduceTree::new(m),
+            ltree: ReduceTree::new(m),
+            grad_root: None,
+            loss_root: None,
+            tokens_total: 0,
+            received: 0,
+            padded,
+        }
+    }
+
+    fn push(&mut self, j: usize, n_tok: usize, loss: f32, grad: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            grad.len() == self.padded,
+            "micro-batch {j} gradient has {} lanes, expected {}",
+            grad.len(),
+            self.padded
+        );
+        self.tokens_total += n_tok;
+        self.received += 1;
+        if let Some(root) = self.gtree.push(j, grad) {
+            self.grad_root = Some(root);
+        }
+        if let Some(root) = self.ltree.push(j, vec![loss]) {
+            self.loss_root = Some(root);
+        }
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.received >= self.gtree.leaves()
+    }
+
+    fn finish(self) -> Result<(f32, Vec<f32>, usize)> {
+        let grad = self.grad_root.expect("grad tree incomplete");
+        let loss = self.loss_root.expect("loss tree incomplete")[0];
+        Ok((loss, grad, self.tokens_total))
+    }
+}
+
+/// Drain `m` micro-batch results from `rx`, tree-reducing gradients and
+/// losses by micro-batch index. Returns (loss_sum, grad_sum,
+/// token_count, timeout_events).
+fn collect_micro_grads(
+    rx: &mpsc::Receiver<MicroResult>,
+    m: usize,
+    padded: usize,
+    timeout_ms: u64,
+) -> Result<(f32, Vec<f32>, usize, u64)> {
+    let mut acc = MicroAccumulator::new(m, padded);
+    let mut timeouts = 0u64;
+    while !acc.done() {
+        let (j, n_tok, res) = if timeout_ms > 0 {
+            match rx.recv_timeout(Duration::from_millis(timeout_ms)) {
+                Ok(msg) => msg,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    timeouts += 1;
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("workers exited with {}/{m} micro-batches delivered",
+                                  acc.received);
+                }
+            }
+        } else {
+            rx.recv().map_err(|_| {
+                anyhow::anyhow!("workers exited with {}/{m} micro-batches delivered",
+                                acc.received)
+            })?
+        };
+        let (loss, grad) = res?;
+        acc.push(j, n_tok, loss, grad)?;
+    }
+    let (loss, grad, tokens_total) = acc.finish()?;
+    Ok((loss, grad, tokens_total, timeouts))
+}

@@ -1,0 +1,210 @@
+//! Round-based orchestration of the data-parallel engine.
+//!
+//! Psyche-style shape: a training run is a sequence of **rounds**, each
+//! `update_freq` optimizer steps long — the subspace re-selection period
+//! is the natural round boundary because that is when shard state is
+//! released and re-partitioned. Per round the orchestrator schedules the
+//! round's micro-batches (global indices, so the data order is a pure
+//! function of the step — never of the worker count), drives the engine,
+//! and closes the round with a [`RoundReport`]: steps, mean loss, shard
+//! occupancy, and straggler-timeout events observed by the deterministic
+//! all-reduce collector.
+
+use super::shard::ShardPlan;
+use super::Engine;
+use crate::Result;
+
+/// Summary of one engine round (one subspace period).
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    /// 1-based round number.
+    pub round: u64,
+    /// 1-based first optimizer step of the round.
+    pub first_step: u64,
+    /// Steps completed so far in this round.
+    pub steps: u64,
+    /// Sum of per-step mean losses (divide by `steps` for the mean).
+    pub loss_sum: f64,
+    /// State-full lanes selected this round (K).
+    pub statefull_lanes: usize,
+    /// Largest per-worker shard (ceil(K/N) + granularity padding).
+    pub max_shard_lanes: usize,
+    /// Receive-timeout events counted while waiting on workers
+    /// (straggler detection; informational — nothing is dropped).
+    pub straggler_timeouts: u64,
+}
+
+impl RoundReport {
+    pub fn new(round: u64, first_step: u64, plan: &ShardPlan) -> RoundReport {
+        RoundReport {
+            round,
+            first_step,
+            steps: 0,
+            loss_sum: 0.0,
+            statefull_lanes: plan.total_lanes(),
+            max_shard_lanes: plan.max_shard_len(),
+            straggler_timeouts: 0,
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.steps == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum / self.steps as f64
+        }
+    }
+}
+
+/// Drives an [`Engine`] through a fixed number of steps with periodic
+/// held-out evaluation and (optionally) per-round console reporting.
+pub struct Orchestrator {
+    pub engine: Engine,
+    /// Print round summaries and eval lines to stdout.
+    pub verbose: bool,
+}
+
+impl Orchestrator {
+    pub fn new(engine: Engine) -> Orchestrator {
+        Orchestrator { engine, verbose: false }
+    }
+
+    /// Run `steps` optimizer steps. `train_fn` maps a global micro-batch
+    /// index to tokens; `val_fn` maps a validation batch index to tokens
+    /// and is consulted every `eval_every` steps. Returns the final
+    /// held-out loss.
+    pub fn run<F, G>(
+        &mut self,
+        steps: u64,
+        train_fn: &F,
+        val_fn: &mut G,
+        eval_every: u64,
+        eval_batches: u64,
+    ) -> Result<f64>
+    where
+        F: Fn(u64) -> Vec<i32> + Sync,
+        G: FnMut(u64) -> Vec<i32>,
+    {
+        let eval_every = eval_every.max(1);
+        let mut finished_rounds = 0usize;
+        let mut last_val = f64::NAN;
+        for s in 0..steps {
+            let loss = self.engine.step(train_fn)?;
+            // A new round began if the report list grew past the one we
+            // considered current: close out (print) the previous round.
+            let n_reports = self.engine.reports().len();
+            if self.verbose && n_reports > finished_rounds + 1 {
+                let prev = &self.engine.reports()[n_reports - 2];
+                print_round(prev);
+                finished_rounds = n_reports - 1;
+            }
+            if (s + 1) % eval_every == 0 || s + 1 == steps {
+                last_val = self.engine.eval_loss(eval_batches, &mut *val_fn)?;
+                if self.verbose {
+                    println!(
+                        "step {:>6}  loss {:.4}  val {:.4}  ppl {:.2}  shards {}x{}",
+                        s + 1,
+                        loss,
+                        last_val,
+                        crate::coordinator::metrics::perplexity(last_val),
+                        self.engine.cfg().parallel.workers,
+                        self.engine.plan().max_shard_len(),
+                    );
+                }
+            }
+        }
+        if self.verbose {
+            if let Some(last) = self.engine.reports().last() {
+                print_round(last);
+            }
+        }
+        Ok(last_val)
+    }
+}
+
+fn print_round(r: &RoundReport) {
+    println!(
+        "round {:>4}  steps {:>4}  mean-loss {:.4}  statefull {:>8} lanes  \
+         max-shard {:>7}  timeouts {}",
+        r.round, r.steps, r.mean_loss(), r.statefull_lanes, r.max_shard_lanes,
+        r.straggler_timeouts
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+    use crate::coordinator::LrSchedule;
+    use crate::engine::refmodel::{RefLm, RefLmCfg};
+    use crate::engine::{EngineCfg, ParallelCfg, Sources};
+    use crate::optim::adamw::AdamCfg;
+    use crate::optim::frugal::BlockPolicy;
+    use crate::util::Prng;
+
+    fn build(workers: usize, update_freq: u64) -> (Orchestrator, RefLm) {
+        let model = RefLm::new(RefLmCfg::default());
+        let layout = model.layout().clone();
+        let sources = Sources::Threaded(
+            (0..workers)
+                .map(|_| Box::new(model.clone()) as Box<dyn crate::engine::GradSource + Send>)
+                .collect(),
+        );
+        let mb = MaskBuilder::new(
+            layout,
+            0.25,
+            SubspacePolicy::Blockwise(BlockPolicy::Random),
+            7,
+        );
+        let cfg = EngineCfg {
+            parallel: ParallelCfg { workers, grad_accum: 2, ..Default::default() },
+            schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+            peak_lr: 1e-3,
+            lr_free_mult: 1.0,
+            update_freq,
+            adam: AdamCfg::default(),
+            clip: None,
+        };
+        let init = model.init_flat(0);
+        let engine = Engine::new(mb, cfg, sources, init).unwrap();
+        (Orchestrator::new(engine), model)
+    }
+
+    fn batch_closure(model: &RefLm) -> impl Fn(u64) -> Vec<i32> + Sync + '_ {
+        let cfg = model.cfg().clone();
+        move |idx| {
+            let mut rng = Prng::seed_from_u64(0xBA7C4 ^ idx);
+            (0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32).collect()
+        }
+    }
+
+    #[test]
+    fn rounds_align_with_update_freq() {
+        let (mut orch, model) = build(2, 3);
+        let train = batch_closure(&model);
+        let val = batch_closure(&model);
+        orch.run(7, &train, &mut |i| val(1000 + i), 100, 1).unwrap();
+        // 7 steps at T=3 → rounds begin at steps 0, 3, 6 → 3 reports.
+        let reports = orch.engine.reports();
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].steps, 3);
+        assert_eq!(reports[1].steps, 3);
+        assert_eq!(reports[2].steps, 1);
+        assert_eq!(reports[0].first_step, 1);
+        assert_eq!(reports[1].first_step, 4);
+        for r in reports {
+            assert!(r.mean_loss().is_finite());
+            assert!(r.statefull_lanes > 0);
+            assert!(r.max_shard_lanes <= r.statefull_lanes);
+        }
+    }
+
+    #[test]
+    fn run_returns_final_val_loss() {
+        let (mut orch, model) = build(1, 10);
+        let train = batch_closure(&model);
+        let val = batch_closure(&model);
+        let v = orch.run(3, &train, &mut |i| val(500 + i), 2, 2).unwrap();
+        assert!(v.is_finite() && v > 0.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! ZeRO-style partitioning of FRUGAL's state-full optimizer state.
+//!
+//! FRUGAL's memory story is that Adam moments exist only for the ρ
+//! fraction of lanes currently in the state-full subspace. Data
+//! parallelism compounds the saving: the state-full lane set is sorted
+//! and cut into `N` contiguous shards, and each worker allocates m/v for
+//! **its shard only** — `ceil(K/N)` lanes (± granularity padding at the
+//! shard boundary), i.e. `ρ/N` of the Linear parameters per worker.
+//!
+//! Because the paper's reset semantics drop state on every subspace
+//! re-selection (§4, §D), a re-selection is also the shard lifecycle
+//! boundary: the engine *releases* all shards (drops the `AdamState`s)
+//! and re-partitions the fresh lane set, so no cross-shard state motion
+//! is ever needed. Updates are lane-local (Adam, signSGD), so sharding
+//! cannot change the math — only who computes it.
+
+use crate::optim::adamw::{AdamCfg, AdamState};
+use crate::optim::sgd::sign_step;
+
+/// A partition of a sorted lane set into `workers` contiguous shards.
+#[derive(Clone, Debug, Default)]
+pub struct ShardPlan {
+    /// Sorted, deduplicated flat-vector lane ids.
+    lanes: Vec<u32>,
+    /// `workers + 1` cut points into `lanes`.
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Partition `lanes` (any order; sorted + deduplicated internally)
+    /// into `workers` shards of `ceil(K/workers)` lanes, rounded up to a
+    /// multiple of `granularity` (alignment padding lands on the last
+    /// shard, which may be short or empty).
+    pub fn partition(mut lanes: Vec<u32>, workers: usize, granularity: usize) -> ShardPlan {
+        assert!(workers >= 1, "need at least one worker");
+        lanes.sort_unstable();
+        lanes.dedup();
+        let k = lanes.len();
+        let gran = granularity.max(1);
+        let mut chunk = (k + workers - 1) / workers;
+        chunk = (chunk + gran - 1) / gran * gran;
+        let bounds = (0..=workers).map(|w| (w * chunk).min(k)).collect();
+        ShardPlan { lanes, bounds }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.bounds.len().saturating_sub(1)
+    }
+
+    /// Total lanes across all shards.
+    pub fn total_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The sorted lane ids owned by worker `w`.
+    pub fn lanes_of(&self, w: usize) -> &[u32] {
+        &self.lanes[self.bounds[w]..self.bounds[w + 1]]
+    }
+
+    pub fn shard_len(&self, w: usize) -> usize {
+        self.bounds[w + 1] - self.bounds[w]
+    }
+
+    pub fn max_shard_len(&self) -> usize {
+        (0..self.workers()).map(|w| self.shard_len(w)).max().unwrap_or(0)
+    }
+}
+
+/// Gather-update-scatter kernel for one state-full shard: runs Adam (with
+/// the shard's private moments) on the owned lanes and returns the new
+/// parameter values in shard order. The caller scatters them — the
+/// in-memory mirror of ZeRO's all-gather of updated shards.
+pub fn adam_shard_update(
+    state: &mut AdamState,
+    lanes: &[u32],
+    flat: &[f32],
+    grad: &[f32],
+    lr: f32,
+    cfg: &AdamCfg,
+) -> Vec<f32> {
+    let mut p: Vec<f32> = lanes.iter().map(|&l| flat[l as usize]).collect();
+    let g: Vec<f32> = lanes.iter().map(|&l| grad[l as usize]).collect();
+    state.apply(&mut p, &g, lr, cfg);
+    p
+}
+
+/// The state-free counterpart: signSGD over the owned lanes (zero state).
+pub fn sign_shard_update(lanes: &[u32], flat: &[f32], grad: &[f32], lr_free: f32) -> Vec<f32> {
+    let mut p: Vec<f32> = lanes.iter().map(|&l| flat[l as usize]).collect();
+    let g: Vec<f32> = lanes.iter().map(|&l| grad[l as usize]).collect();
+    sign_step(&mut p, &g, lr_free);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lane_vec(k: usize) -> Vec<u32> {
+        // Scattered (non-contiguous) lanes, delivered unsorted.
+        let mut v: Vec<u32> = (0..k as u32).map(|i| i * 3 + 1).collect();
+        v.reverse();
+        v
+    }
+
+    #[test]
+    fn covers_all_lanes_disjointly() {
+        for k in [0usize, 1, 7, 64, 100, 1023] {
+            for workers in [1usize, 2, 3, 4, 8] {
+                let plan = ShardPlan::partition(lane_vec(k), workers, 1);
+                let mut seen = Vec::new();
+                for w in 0..workers {
+                    seen.extend_from_slice(plan.lanes_of(w));
+                }
+                let mut want = lane_vec(k);
+                want.sort_unstable();
+                assert_eq!(seen, want, "k={k} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_size_is_ceil_k_over_n() {
+        for k in [1usize, 5, 64, 100, 1000] {
+            for workers in [1usize, 2, 3, 4, 8] {
+                let plan = ShardPlan::partition(lane_vec(k), workers, 1);
+                let ceil = (k + workers - 1) / workers;
+                assert_eq!(plan.max_shard_len(), ceil.min(k), "k={k} workers={workers}");
+                for w in 0..workers {
+                    assert!(plan.shard_len(w) <= ceil);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn granularity_pads_only_at_boundaries() {
+        let k = 100;
+        let workers = 3;
+        let gran = 16;
+        let plan = ShardPlan::partition(lane_vec(k), workers, gran);
+        let ceil = (k + workers - 1) / workers; // 34
+        let padded = (ceil + gran - 1) / gran * gran; // 48
+        for w in 0..workers {
+            assert!(plan.shard_len(w) <= padded, "worker {w}");
+        }
+        assert_eq!(plan.total_lanes(), k);
+        // All but the last non-empty shard are exactly the padded chunk.
+        assert_eq!(plan.shard_len(0), padded);
+        assert_eq!(plan.shard_len(1), padded);
+        assert_eq!(plan.shard_len(2), k - 2 * padded);
+    }
+
+    #[test]
+    fn empty_lane_set_is_fine() {
+        let plan = ShardPlan::partition(Vec::new(), 4, 64);
+        assert_eq!(plan.total_lanes(), 0);
+        for w in 0..4 {
+            assert_eq!(plan.shard_len(w), 0);
+        }
+    }
+
+    #[test]
+    fn adam_shard_matches_unsharded_adam() {
+        // Lane-locality: sharded Adam over a lane subset must produce the
+        // same values as full Adam restricted to those lanes.
+        let n = 40;
+        let flat: Vec<f32> = (0..n).map(|i| 0.1 * i as f32).collect();
+        let grad: Vec<f32> = (0..n).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+        let cfg = AdamCfg::default();
+
+        let mut full_state = AdamState::new(n);
+        let mut full_p = flat.clone();
+        full_state.apply(&mut full_p, &grad, 1e-2, &cfg);
+
+        let lanes: Vec<u32> = (0..n as u32).filter(|l| l % 3 == 0).collect();
+        let mut shard_state = AdamState::new(lanes.len());
+        let new_vals = adam_shard_update(&mut shard_state, &lanes, &flat, &grad, 1e-2, &cfg);
+        for (j, &lane) in lanes.iter().enumerate() {
+            assert_eq!(
+                new_vals[j].to_bits(),
+                full_p[lane as usize].to_bits(),
+                "lane {lane}"
+            );
+        }
+    }
+
+    #[test]
+    fn sign_shard_moves_by_lr_free() {
+        let flat = vec![1.0f32, 1.0, 1.0];
+        let grad = vec![0.5f32, -0.5, 0.0];
+        let out = sign_shard_update(&[0, 1, 2], &flat, &grad, 0.25);
+        assert_eq!(out, vec![0.75, 1.25, 1.0]);
+    }
+}

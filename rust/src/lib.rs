@@ -18,13 +18,21 @@
 //! - [`coordinator`]: subspace scheduling, LR schedules, clipping,
 //!   module-role partitioning, metrics, checkpointing.
 //! - [`runtime`]: PJRT artifact loading and execution.
-//! - [`train`]: end-to-end trainers binding runtime + coordinator.
-//! - [`config`]: TOML experiment configuration.
+//! - [`train`]: end-to-end trainers binding runtime + coordinator, plus
+//!   the subspace clock and the PJRT→engine gradient adapter.
+//! - [`engine`]: the data-parallel execution engine — N-worker training
+//!   with a deterministic tree all-reduce, ZeRO-style sharding of
+//!   FRUGAL's state-full Adam moments (`ρ/N` per worker), a round-based
+//!   orchestrator, and a pure-Rust reference LM so the whole path runs
+//!   without PJRT artifacts. Invariant: `--workers N` is bit-identical
+//!   to `--workers 1` at a fixed global batch.
+//! - [`config`]: TOML experiment configuration (incl. `[parallel]`).
 //! - [`toy`]: closed-form toy problems for the theory experiments.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod linalg;
 pub mod optim;
 pub mod runtime;

@@ -3,12 +3,14 @@
 //! Subcommands:
 //!   info      — show artifact manifest + platform
 //!   pretrain  — pre-train a model config on the synthetic corpus
+//!               (`--workers N` switches to the data-parallel engine)
 //!   memory    — print the paper's Table 2 memory columns (analytic, §C)
 //!   toy       — Figure 3 toy quadratic (state re-projection)
 //!   angles    — Figure 2 principal-angle analysis
 //!
 //! Example:
 //!   frugal pretrain --model tiny --optimizer frugal --rho 0.25 --steps 500
+//!   frugal pretrain --workers 4 --grad-accum 8 --steps 200   # engine path
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -16,9 +18,11 @@ use std::path::{Path, PathBuf};
 use frugal::coordinator::metrics::perplexity;
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::engine::{Engine, EngineCfg, GradSource, Orchestrator, ParallelCfg, RefLm, RefLmCfg,
+                     Sources};
 use frugal::optim::memory::{fmt_gib, optimizer_state_bytes, ArchSpec, Method};
 use frugal::runtime::{Manifest, Runtime};
-use frugal::train::{FusedTrainer, GradTrainer};
+use frugal::train::{FusedTrainer, GradTrainer, PjrtGradSource};
 use frugal::util::Prng;
 use frugal::TrainConfig;
 
@@ -30,9 +34,16 @@ USAGE:
   frugal pretrain [--config FILE] [--model M] [--optimizer O] [--steps N]
                   [--lr F] [--rho F] [--update-freq N] [--seed N] [--fused]
                   [--log FILE] [--artifacts DIR]
-  frugal memory
+                  [--workers N] [--grad-accum M] [--backend auto|ref|pjrt]
+                  [--straggler-ms N] [--timeout-ms N] [--sequential]
+  frugal memory   [--model SCALE]
   frugal toy      [--steps N] [--rank R] [--update-freq T]
   frugal angles   [--artifacts DIR] [--model M] [--steps N]
+
+`--workers N` runs the data-parallel engine: N workers over in-memory
+channels, deterministic tree all-reduce, FRUGAL state sharded ceil(K/N)
+lanes per worker. The per-step loss trace is bit-identical for any N at a
+fixed --grad-accum (the global batch).
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -106,7 +117,7 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             info(Path::new(args.get("artifacts").unwrap_or("artifacts")))
         }
         "pretrain" => {
-            let args = Args::parse(rest, &["fused"])?;
+            let args = Args::parse(rest, &["fused", "sequential"])?;
             let mut cfg = match args.get("config") {
                 Some(p) => TrainConfig::from_toml_file(Path::new(p))?,
                 None => TrainConfig::default(),
@@ -138,11 +149,48 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             if let Some(d) = args.get("artifacts") {
                 cfg.artifacts_dir = d.to_string();
             }
-            pretrain(cfg, args.has("fused"))
+            // Engine flags: any of them (or a [parallel] config section)
+            // routes through the data-parallel engine.
+            if let Some(w) = args.get_u64("workers")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.workers = (w as usize).max(1);
+            }
+            if let Some(m) = args.get_u64("grad-accum")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.grad_accum = (m as usize).max(1);
+            }
+            if let Some(s) = args.get_u64("straggler-ms")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.straggler_ms = s;
+            }
+            if let Some(t) = args.get_u64("timeout-ms")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.timeout_ms = t;
+            }
+            if args.has("sequential") {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.threaded = false;
+            }
+            // --backend alone also opts into the engine (it has no
+            // meaning on the legacy paths and must not be ignored).
+            if args.get("backend").is_some() {
+                cfg.parallel.get_or_insert_with(ParallelCfg::default);
+            }
+            if cfg.parallel.is_some() {
+                anyhow::ensure!(
+                    !args.has("fused"),
+                    "--fused is the single-device fused-kernel path; it cannot \
+                     combine with the engine flags (--workers/--grad-accum/...)"
+                );
+                let backend = args.get("backend").unwrap_or("auto").to_string();
+                pretrain_parallel(cfg, &backend)
+            } else {
+                pretrain(cfg, args.has("fused"))
+            }
         }
         "memory" => {
-            memory_table();
-            Ok(())
+            let args = Args::parse(rest, &[])?;
+            memory_table(args.get("model"))
         }
         "toy" => {
             let args = Args::parse(rest, &[])?;
@@ -267,9 +315,150 @@ fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
     Ok(())
 }
 
-fn memory_table() {
+/// Data-parallel engine path (`--workers N` / `[parallel]` config).
+///
+/// Backends:
+/// - `pjrt`: the grad artifact drives N logical workers (PJRT handle
+///   thread-safety is backend-dependent, so sources stay on the caller
+///   thread; the PJRT CPU client parallelizes internally).
+/// - `ref`:  the built-in pure-Rust reference LM on N OS threads.
+/// - `auto`: `pjrt` when artifacts are loadable, else `ref`.
+fn pretrain_parallel(mut cfg: TrainConfig, backend: &str) -> frugal::Result<()> {
+    // The engine implements the FRUGAL update (subspace-masked AdamW +
+    // signSGD); a different --optimizer must not silently run as FRUGAL.
+    match cfg.optimizer.as_str() {
+        "frugal" => {}
+        "frugal0" => cfg.rho = 0.0,
+        other => anyhow::bail!(
+            "optimizer '{other}' is not supported by the data-parallel engine \
+             (it runs the FRUGAL masked update); use 'frugal' or 'frugal0', or \
+             drop the engine flags for the single-worker optimizer suite \
+             (rho = 1.0 makes FRUGAL full AdamW on Linear lanes)"
+        ),
+    }
+    let pcfg = cfg.parallel.clone().expect("parallel config present");
+
+    // Resolve the backend.
+    enum Built {
+        Pjrt { sources: Sources, layout: frugal::optim::Layout, init: Vec<f32>,
+               batch: usize, seq_len: usize, vocab: usize },
+        Reference(RefLm),
+    }
+    let try_pjrt = || -> frugal::Result<Built> {
+        let rt = Runtime::cpu()?;
+        let man = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        let entry = man.model(&cfg.model)?.clone();
+        // One source per worker; Runtime::load caches by artifact path,
+        // so all N share a single compiled executable (Arc clones).
+        let mut list: Vec<Box<dyn GradSource>> = Vec::with_capacity(pcfg.workers);
+        for _ in 0..pcfg.workers {
+            list.push(Box::new(PjrtGradSource::new(&rt, &man, &cfg.model)?));
+        }
+        Ok(Built::Pjrt {
+            sources: Sources::Local(list),
+            layout: entry.layout(),
+            init: frugal::train::init_flat(&entry, cfg.seed),
+            batch: entry.batch,
+            seq_len: entry.seq_len,
+            vocab: entry.vocab,
+        })
+    };
+    let built = match backend {
+        "pjrt" => try_pjrt()?,
+        "ref" => Built::Reference(RefLm::new(RefLmCfg::default())),
+        "auto" => match try_pjrt() {
+            Ok(b) => b,
+            Err(e) => {
+                println!("note: PJRT backend unavailable ({e}); using the built-in \
+                          reference model");
+                Built::Reference(RefLm::new(RefLmCfg::default()))
+            }
+        },
+        other => anyhow::bail!("unknown backend '{other}' (expected auto | ref | pjrt)"),
+    };
+
+    let (sources, layout, init, batch, seq_len, vocab) = match built {
+        Built::Pjrt { sources, layout, init, batch, seq_len, vocab } => {
+            (sources, layout, init, batch, seq_len, vocab)
+        }
+        Built::Reference(model) => {
+            let rcfg = model.cfg().clone();
+            let layout = model.layout().clone();
+            let init = model.init_flat(cfg.seed);
+            let sources = Sources::Threaded(
+                (0..pcfg.workers)
+                    .map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>)
+                    .collect(),
+            );
+            (sources, layout, init, rcfg.batch, rcfg.seq_len, rcfg.vocab)
+        }
+    };
+
+    println!(
+        "pretrain[engine]: optimizer={} workers={} grad_accum={} global_batch={} seqs \
+         rho={} T={} steps={} lr={}",
+        cfg.optimizer,
+        pcfg.workers,
+        pcfg.grad_accum,
+        pcfg.grad_accum * batch,
+        cfg.rho,
+        cfg.update_freq,
+        cfg.steps,
+        cfg.lr
+    );
+
+    let mask_builder = MaskBuilder::new(
+        layout,
+        cfg.rho as f32,
+        SubspacePolicy::Blockwise(cfg.block_policy()),
+        cfg.seed,
+    );
+    let engine_cfg = EngineCfg {
+        parallel: pcfg,
+        schedule: cfg.schedule.clone(),
+        peak_lr: cfg.lr,
+        lr_free_mult: cfg.lr_free_mult,
+        update_freq: cfg.update_freq,
+        adam: cfg.adam_cfg(),
+        clip: cfg.clip.map(|c| c as f32),
+    };
+    let engine = Engine::new(mask_builder, engine_cfg, sources, init)?;
+    let mut orch = Orchestrator::new(engine);
+    orch.verbose = true;
+
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(vocab));
+    let train_fn = |micro: u64| corpus.train_batch(batch, seq_len, micro).tokens;
+    let mut val_fn = |idx: u64| corpus.val_batch(batch, seq_len, idx).tokens;
+    orch.run(cfg.steps, &train_fn, &mut val_fn, cfg.eval_every, cfg.eval_batches)?;
+
+    let per_worker = orch.engine.state_floats_per_worker();
+    println!(
+        "sharded state: {} f32s total, per-worker max {} (statefull lanes {})",
+        orch.engine.state_floats(),
+        per_worker.iter().max().copied().unwrap_or(0),
+        orch.engine.plan().total_lanes()
+    );
+    if let Some(path) = &cfg.log_path {
+        orch.engine.metrics.write_jsonl(Path::new(path))?;
+    }
+    Ok(())
+}
+
+fn memory_table(model: Option<&str>) -> frugal::Result<()> {
+    // A bad --model must surface as a CLI error, not a panic.
+    let scales: Vec<&str> = match model {
+        Some(name) => {
+            ArchSpec::paper_llama(name)?;
+            vec![name]
+        }
+        None => vec!["60M", "130M", "350M", "1B"],
+    };
     println!("Optimizer-state memory at the paper's model sizes (paper Table 2, analytic §C):");
-    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "method", "60M", "130M", "350M", "1B");
+    print!("{:<22}", "method");
+    for scale in &scales {
+        print!(" {scale:>8}");
+    }
+    println!();
     let rows: Vec<(&str, Method)> = vec![
         ("AdamW", Method::AdamW),
         ("GaLore rho=0.25", Method::GaLore { rho: 0.25 }),
@@ -279,13 +468,14 @@ fn memory_table() {
         ("signSGD", Method::SignSgd),
     ];
     for (name, method) in rows {
-        let mut cells = Vec::new();
-        for scale in ["60M", "130M", "350M", "1B"] {
-            let arch = ArchSpec::paper_llama(scale);
-            cells.push(fmt_gib(optimizer_state_bytes(&arch, &method, 4)));
+        print!("{name:<22}");
+        for scale in &scales {
+            let arch = ArchSpec::paper_llama(scale)?;
+            print!(" {:>8}", fmt_gib(optimizer_state_bytes(&arch, &method, 4)));
         }
-        println!("{:<22} {:>8} {:>8} {:>8} {:>8}", name, cells[0], cells[1], cells[2], cells[3]);
+        println!();
     }
+    Ok(())
 }
 
 fn toy(steps: u64, rank: usize, update_freq: u64) {

@@ -18,17 +18,25 @@ pub struct ArchSpec {
 }
 
 impl ArchSpec {
+    /// Scale names [`ArchSpec::paper_llama`] accepts.
+    pub const PAPER_SCALES: [&'static str; 5] = ["60M", "130M", "350M", "1B", "3B"];
+
     /// The paper's model scales (vocab 32k via the T5 tokenizer, §A.1).
-    pub fn paper_llama(name: &str) -> ArchSpec {
+    /// Unknown names are a user-facing error (bad `--model`), not a bug,
+    /// so this returns `Result` rather than panicking.
+    pub fn paper_llama(name: &str) -> crate::Result<ArchSpec> {
         let (h, l, hff) = match name {
             "60M" => (512, 8, 1376),
             "130M" => (768, 12, 2048),
             "350M" => (1024, 24, 2736),
             "1B" => (2048, 24, 5461),
             "3B" => (2560, 32, 6848),
-            _ => panic!("unknown paper config {name}"),
+            _ => anyhow::bail!(
+                "unknown paper config '{name}' (expected one of {})",
+                Self::PAPER_SCALES.join(", ")
+            ),
         };
-        ArchSpec { name: name.into(), vocab: 32_000, h, n_layers: l, h_ff: hff }
+        Ok(ArchSpec { name: name.into(), vocab: 32_000, h, n_layers: l, h_ff: hff })
     }
 
     /// Linear-layer parameter count P (paper §C): per layer 4·h² (QKVO)
@@ -124,10 +132,10 @@ mod tests {
             let t = arch.total_params() as f64 / 1e6;
             assert!((t - m).abs() / m < 0.15, "{}: {}M vs {}M", arch.name, t, m);
         };
-        close(&ArchSpec::paper_llama("60M"), 58.0);
-        close(&ArchSpec::paper_llama("130M"), 134.0);
-        close(&ArchSpec::paper_llama("350M"), 368.0);
-        close(&ArchSpec::paper_llama("1B"), 1340.0);
+        close(&ArchSpec::paper_llama("60M").unwrap(), 58.0);
+        close(&ArchSpec::paper_llama("130M").unwrap(), 134.0);
+        close(&ArchSpec::paper_llama("350M").unwrap(), 368.0);
+        close(&ArchSpec::paper_llama("1B").unwrap(), 1340.0);
     }
 
     /// The headline reproduction: Table 2's parenthetical memory numbers.
@@ -152,7 +160,7 @@ mod tests {
             ("1B", Method::Frugal { rho: 0.0 }, "0.98G"),
         ];
         for (scale, method, want) in cases {
-            let arch = ArchSpec::paper_llama(scale);
+            let arch = ArchSpec::paper_llama(scale).unwrap();
             let got = fmt_gib(optimizer_state_bytes(&arch, method, 4));
             // Allow 0.01–0.02G of rounding slack against the paper print.
             let gw: f64 = want.trim_end_matches('G').parse().unwrap();
@@ -165,9 +173,17 @@ mod tests {
     }
 
     #[test]
+    fn unknown_scale_is_a_clean_error() {
+        let err = ArchSpec::paper_llama("7B").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown paper config '7B'"), "{msg}");
+        assert!(msg.contains("130M"), "should list valid scales: {msg}");
+    }
+
+    #[test]
     fn frugal_strictly_cheaper_than_galore_at_same_rho() {
         for scale in ["60M", "130M", "350M", "1B"] {
-            let arch = ArchSpec::paper_llama(scale);
+            let arch = ArchSpec::paper_llama(scale).unwrap();
             let f = optimizer_state_bytes(&arch, &Method::Frugal { rho: 0.25 }, 4);
             let g = optimizer_state_bytes(&arch, &Method::GaLore { rho: 0.25 }, 4);
             assert!(f < g, "{scale}: frugal {f} !< galore {g}");
@@ -176,14 +192,14 @@ mod tests {
 
     #[test]
     fn zero_state_methods() {
-        let arch = ArchSpec::paper_llama("130M");
+        let arch = ArchSpec::paper_llama("130M").unwrap();
         assert_eq!(optimizer_state_bytes(&arch, &Method::SignSgd, 4), 0);
         assert_eq!(optimizer_state_bytes(&arch, &Method::Sgd, 4), 0);
     }
 
     #[test]
     fn monotone_in_rho() {
-        let arch = ArchSpec::paper_llama("130M");
+        let arch = ArchSpec::paper_llama("130M").unwrap();
         let mut prev = 0;
         for rho in [0.0, 0.0625, 0.125, 0.25, 0.5, 1.0] {
             let b = optimizer_state_bytes(&arch, &Method::Frugal { rho }, 4);
@@ -197,7 +213,7 @@ mod tests {
 
     #[test]
     fn adafactor_sublinear() {
-        let arch = ArchSpec::paper_llama("130M");
+        let arch = ArchSpec::paper_llama("130M").unwrap();
         let af = optimizer_state_bytes(&arch, &Method::Adafactor, 4);
         let adam = optimizer_state_bytes(&arch, &Method::AdamW, 4);
         assert!(af < adam / 10);
@@ -207,7 +223,7 @@ mod tests {
     fn table3_total_memory_shape() {
         // Table 3: pure-bf16 350M (2.1GB) ≈ mixed-precision 175M (2.0GB)
         // — i.e. halving the bytes roughly doubles the affordable size.
-        let m350 = ArchSpec::paper_llama("350M");
+        let m350 = ArchSpec::paper_llama("350M").unwrap();
         let bf16 = total_training_bytes(&m350, &Method::AdamW, 2);
         let f32_ = total_training_bytes(&m350, &Method::AdamW, 4);
         assert!((f32_ as f64 / bf16 as f64 - 2.0).abs() < 0.01);

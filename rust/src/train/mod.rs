@@ -10,6 +10,12 @@
 //!   (loss, grads) and any [`Optimizer`] from the suite consumes them in
 //!   Rust — required by GaLore/BAdam/Fira/LDAdam/AdaMeM/LoRA which need
 //!   host-side SVD / error feedback / adapters.
+//!
+//! A third, data-parallel path lives in [`crate::engine`]: N workers,
+//! deterministic tree all-reduce, sharded FRUGAL state. It plugs into
+//! either gradient provider — [`PjrtGradSource`] adapts the grad
+//! artifact, `engine::RefLm` is the artifact-free reference model — and
+//! shares the subspace cadence with the fused path via [`SubspaceClock`].
 
 
 use crate::util::Prng;
@@ -99,6 +105,57 @@ impl Session {
 }
 
 // ---------------------------------------------------------------------------
+// Subspace clock (shared by FusedTrainer and the data-parallel engine)
+// ---------------------------------------------------------------------------
+
+/// Tracks the training step against the subspace update period `T`:
+/// which steps re-select the mask, and the Adam bias-correction counter
+/// that restarts at each re-selection (matching the fused kernel's
+/// state-reset semantics). One clock drives both the fused PJRT path and
+/// `engine::Engine`, so their round boundaries are identical by
+/// construction.
+#[derive(Clone, Debug)]
+pub struct SubspaceClock {
+    update_freq: u64,
+    step: u64,
+    adam_t: u64,
+}
+
+impl SubspaceClock {
+    pub fn new(update_freq: u64) -> SubspaceClock {
+        SubspaceClock { update_freq: update_freq.max(1), step: 0, adam_t: 0 }
+    }
+
+    /// Advance one step. Returns `(step_index, reselect_due)` where
+    /// `step_index` is the 0-based index of the step about to run and
+    /// `reselect_due` says the subspace must be re-selected before it.
+    pub fn tick(&mut self) -> (u64, bool) {
+        let due = self.step % self.update_freq == 0;
+        if due {
+            self.adam_t = 0;
+        }
+        self.adam_t += 1;
+        let step = self.step;
+        self.step += 1;
+        (step, due)
+    }
+
+    /// Steps completed so far.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// 1-based Adam step within the current subspace period.
+    pub fn adam_t(&self) -> u64 {
+        self.adam_t
+    }
+
+    pub fn update_freq(&self) -> u64 {
+        self.update_freq
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fused path
 // ---------------------------------------------------------------------------
 
@@ -122,12 +179,10 @@ pub struct FusedTrainer {
     pub schedule: LrSchedule,
     pub peak_lr: f64,
     pub lr_free_mult: f64,
-    pub update_freq: u64,
     pub precision: Precision,
-    step: u64,
-    /// Adam-step counter fed to the kernel's bias correction. Restarts at
-    /// each subspace change so corrections match the freshly-reset state.
-    adam_t: u64,
+    /// Step/period tracking, incl. the Adam bias-correction counter that
+    /// restarts at each subspace change (freshly-reset state).
+    pub clock: SubspaceClock,
     pub metrics: Metrics,
 }
 
@@ -158,22 +213,19 @@ impl FusedTrainer {
             schedule,
             peak_lr,
             lr_free_mult,
-            update_freq,
             precision: Precision::F32,
-            step: 0,
-            adam_t: 0,
+            clock: SubspaceClock::new(update_freq),
             metrics: Metrics::new(),
         })
     }
 
     /// One fused train step on `tokens` (batch × seq, row-major).
     pub fn step(&mut self, tokens: &[i32]) -> Result<f32> {
-        if self.step % self.update_freq == 0 {
+        let (step, reselect) = self.clock.tick();
+        if reselect {
             self.mask = self.mask_builder.advance();
-            self.adam_t = 0;
         }
-        self.adam_t += 1;
-        let lr = self.schedule.lr(self.peak_lr, self.step) as f32;
+        let lr = self.schedule.lr(self.peak_lr, step) as f32;
         let lr_free = lr * self.lr_free_mult as f32;
         let entry = &self.session.entry;
         let out = self.step_exe.run(&[
@@ -184,7 +236,7 @@ impl FusedTrainer {
             lit_i32_2d(tokens, entry.batch, entry.seq_len)?,
             lit_scalar1(lr),
             lit_scalar1(lr_free),
-            lit_scalar1(self.adam_t as f32),
+            lit_scalar1(self.clock.adam_t() as f32),
         ])?;
         let loss = to_scalar_f32(&out[0])?;
         self.flat = to_vec_f32(&out[1])?;
@@ -195,13 +247,12 @@ impl FusedTrainer {
             bf16_round_slice(&mut self.m);
             bf16_round_slice(&mut self.v);
         }
-        self.step += 1;
-        self.metrics.record(self.step, loss, lr as f64, entry.tokens_per_batch());
+        self.metrics.record(step + 1, loss, lr as f64, entry.tokens_per_batch());
         Ok(loss)
     }
 
     pub fn global_step(&self) -> u64 {
-        self.step
+        self.clock.step()
     }
 }
 
@@ -285,6 +336,66 @@ impl GradTrainer {
 
     pub fn global_step(&self) -> u64 {
         self.step
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine adapter
+// ---------------------------------------------------------------------------
+
+/// A [`crate::engine::GradSource`] backed by the PJRT grad artifact — the
+/// bridge between the AOT three-layer stack and the data-parallel engine.
+/// PJRT handle thread-safety is backend-dependent, so this source is used
+/// through `engine::Sources::Local` (logical workers on the caller
+/// thread); the PJRT CPU client parallelizes internally.
+pub struct PjrtGradSource {
+    exe: std::sync::Arc<Executable>,
+    /// Forward-only loss executable for evaluation (the grad artifact
+    /// would compute + transfer a full gradient just to discard it).
+    eval_exe: Option<std::sync::Arc<Executable>>,
+    entry: ModelEntry,
+}
+
+impl PjrtGradSource {
+    pub fn new(rt: &Runtime, man: &Manifest, model: &str) -> Result<PjrtGradSource> {
+        let entry = man.model(model)?.clone();
+        let exe = rt.load(&man.artifact_path(model, "grad")?)?;
+        let eval_exe = man
+            .artifact_path(model, "eval")
+            .ok()
+            .and_then(|p| rt.load(&p).ok());
+        Ok(PjrtGradSource { exe, eval_exe, entry })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+}
+
+impl crate::engine::GradSource for PjrtGradSource {
+    fn padded_size(&self) -> usize {
+        self.entry.padded_size
+    }
+
+    fn loss_and_grad(&mut self, flat: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let out = self.exe.run(&[
+            lit_f32(flat),
+            lit_i32_2d(tokens, self.entry.batch, self.entry.seq_len)?,
+        ])?;
+        Ok((to_scalar_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+
+    fn loss(&mut self, flat: &[f32], tokens: &[i32]) -> Result<f32> {
+        match &self.eval_exe {
+            Some(exe) => {
+                let out = exe.run(&[
+                    lit_f32(flat),
+                    lit_i32_2d(tokens, self.entry.batch, self.entry.seq_len)?,
+                ])?;
+                to_scalar_f32(&out[0])
+            }
+            None => Ok(self.loss_and_grad(flat, tokens)?.0),
+        }
     }
 }
 

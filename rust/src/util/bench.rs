@@ -49,6 +49,30 @@ pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
     Timing { median_ns: median, mean_ns: mean, mad_ns: mad, iters }
 }
 
+/// Render one machine-readable benchmark record as a JSON object line
+/// (`{"bench":"...", "label":"...", <fields>}`) for downstream tooling.
+/// Numeric fields are emitted as JSON numbers; non-finite values become
+/// `null` (bare NaN/inf are not valid JSON).
+pub fn json_record(bench: &str, label: &str, fields: &[(&str, f64)]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"bench\":\"{}\",\"label\":\"{}\"",
+        crate::util::json::escape(bench),
+        crate::util::json::escape(label)
+    );
+    for (key, value) in fields {
+        if value.is_finite() {
+            let _ = write!(out, ",\"{}\":{}", crate::util::json::escape(key), value);
+        } else {
+            let _ = write!(out, ",\"{}\":null", crate::util::json::escape(key));
+        }
+    }
+    out.push('}');
+    out
+}
+
 /// Print a paper-style table: header row then aligned cells.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n=== {title} ===");
@@ -96,5 +120,23 @@ mod tests {
     fn throughput_math() {
         let t = Timing { median_ns: 1e9, mean_ns: 1e9, mad_ns: 0.0, iters: 1 };
         assert!((t.elements_per_s(1000) - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_record_is_valid_json() {
+        let line = json_record(
+            "parallel_scaling",
+            "workers=4",
+            &[("steps_per_s", 12.5), ("speedup", f64::NAN)],
+        );
+        assert_eq!(
+            line,
+            "{\"bench\":\"parallel_scaling\",\"label\":\"workers=4\",\
+             \"steps_per_s\":12.5,\"speedup\":null}"
+        );
+        // Round-trips through the in-tree parser.
+        let parsed = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(parsed.field("bench").unwrap().as_str().unwrap(), "parallel_scaling");
+        assert!((parsed.field("steps_per_s").unwrap().as_f64().unwrap() - 12.5).abs() < 1e-12);
     }
 }

@@ -1,31 +1,68 @@
 //! Flat `key = value` config files (the `configs/*.toml` format).
 //!
 //! A pragmatic TOML subset: one `key = value` per line, `#` comments,
-//! quoted strings, integers, floats, booleans. No tables/arrays — the
-//! TrainConfig schema is flat by design.
+//! quoted strings, integers, floats, booleans. A `[section]` header whose
+//! name is a bare dotted identifier (e.g. `[parallel]`) namespaces the
+//! keys after it as `section.key` — the psyche-style run-config shape;
+//! any other bracketed line is ignored for backward compatibility. No
+//! arrays — the TrainConfig schema is flat by design.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-/// Parsed key→raw-value map.
+/// True for `[parallel]`-style headers: bare dotted identifiers only.
+fn section_name(line: &str) -> Option<&str> {
+    let inner = line.strip_prefix('[')?.strip_suffix(']')?.trim();
+    let ok = !inner.is_empty()
+        && inner
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-');
+    ok.then_some(inner)
+}
+
+/// Parsed key→raw-value map (section keys are `section.key`).
 #[derive(Clone, Debug, Default)]
 pub struct KvFile {
     pub entries: HashMap<String, String>,
+    /// Identifier `[section]` headers seen, even when empty — a bare
+    /// `[parallel]` must still opt a run into the engine defaults.
+    pub sections: Vec<String>,
 }
 
 impl KvFile {
     pub fn parse(text: &str) -> Result<KvFile> {
         let mut entries = HashMap::new();
+        let mut sections = Vec::new();
+        let mut prefix = String::new();
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.trim();
-            if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.starts_with('[') {
+                // Strip a trailing comment so `[parallel]  # engine` still
+                // opens the section rather than silently resetting to the
+                // top level (which would leak its keys past readers).
+                let header = match line.find('#') {
+                    Some(idx) => line[..idx].trim_end(),
+                    None => line,
+                };
+                prefix = match section_name(header) {
+                    Some(name) => {
+                        if !sections.iter().any(|s| s == name) {
+                            sections.push(name.to_string());
+                        }
+                        format!("{name}.")
+                    }
+                    None => String::new(),
+                };
                 continue;
             }
             let Some((key, value)) = line.split_once('=') else {
                 bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
             };
-            let key = key.trim().to_string();
+            let key = format!("{prefix}{}", key.trim());
             let mut value = value.trim();
             // strip trailing comment on unquoted values
             if !value.starts_with('"') {
@@ -40,7 +77,7 @@ impl KvFile {
             };
             entries.insert(key, value);
         }
-        Ok(KvFile { entries })
+        Ok(KvFile { entries, sections })
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -57,6 +94,14 @@ impl KvFile {
 
     pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
         self.get(key).map(|v| v.parse().map_err(|e| anyhow::anyhow!("{key}: {e}"))).transpose()
+    }
+
+    /// True if the `[section]` header appeared (even empty) or any key
+    /// lives under it.
+    pub fn has_section(&self, section: &str) -> bool {
+        let prefix = format!("{section}.");
+        self.sections.iter().any(|s| s == section)
+            || self.entries.keys().any(|k| k.starts_with(&prefix))
     }
 }
 
@@ -93,5 +138,32 @@ rho = 0.25
     fn bad_number_errors() {
         let kv = KvFile::parse("steps = many").unwrap();
         assert!(kv.get_u64("steps").is_err());
+    }
+
+    #[test]
+    fn identifier_sections_namespace_keys() {
+        let text = r#"
+steps = 10
+[parallel]           # trailing comments on headers are fine
+workers = 4          # data-parallel workers
+grad_accum = 8
+[not a real section!]
+after = 1
+"#;
+        let kv = KvFile::parse(text).unwrap();
+        assert_eq!(kv.get_u64("steps").unwrap(), Some(10));
+        assert_eq!(kv.get_u64("parallel.workers").unwrap(), Some(4));
+        assert_eq!(kv.get_u64("parallel.grad_accum").unwrap(), Some(8));
+        // A non-identifier header resets to the top level (legacy rule).
+        assert_eq!(kv.get_u64("after").unwrap(), Some(1));
+        assert!(kv.has_section("parallel"));
+        assert!(!kv.has_section("workers"));
+    }
+
+    #[test]
+    fn empty_section_header_is_recorded() {
+        let kv = KvFile::parse("[parallel]\n# all defaults\n").unwrap();
+        assert!(kv.has_section("parallel"));
+        assert!(kv.entries.is_empty());
     }
 }

@@ -1,0 +1,218 @@
+//! Integration tests for the data-parallel engine.
+//!
+//! The headline invariant: at a fixed global batch (`grad_accum`) and
+//! seed, training with `workers = N` is **bit-identical** to
+//! `workers = 1` — same per-step loss trace, same parameter vector —
+//! for any thread interleaving and under injected straggler delay.
+//! Plus the sharding criterion: each worker holds Adam moments for
+//! `ceil(statefull_lanes / N)` lanes (± shard-granularity padding).
+
+use frugal::coordinator::subspace::{statefull_lanes, MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::engine::{
+    Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg, ShardPlan, Sources,
+};
+use frugal::optim::adamw::AdamCfg;
+use frugal::optim::frugal::BlockPolicy;
+
+const SEED: u64 = 42;
+
+fn model() -> RefLm {
+    RefLm::new(RefLmCfg::default())
+}
+
+fn engine(workers: usize, parallel: ParallelCfg, threaded: bool) -> Engine {
+    let m = model();
+    let layout = m.layout().clone();
+    let sources = if threaded {
+        Sources::Threaded(
+            (0..workers).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
+        )
+    } else {
+        Sources::Local((0..workers).map(|_| Box::new(m.clone()) as Box<dyn GradSource>).collect())
+    };
+    let mask_builder = MaskBuilder::new(
+        layout,
+        0.25,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        SEED,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg { workers, ..parallel },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: 4, // exercise a subspace re-selection mid-run
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+}
+
+/// Deterministic micro-batch stream shared by all runs.
+fn batch_fn(micro: u64) -> Vec<i32> {
+    let cfg = RefLmCfg::default();
+    let mut rng = frugal::util::Prng::seed_from_u64(0xDA7A ^ micro.wrapping_mul(0x9E37));
+    (0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32).collect()
+}
+
+fn run(engine: &mut Engine, steps: u64) -> Vec<u32> {
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(engine.step(&batch_fn).unwrap().to_bits());
+    }
+    losses
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Acceptance criterion: workers=1 vs workers=4 at the same global batch
+/// — identical loss trace bits and identical parameter vectors after 10
+/// steps (which span two subspace re-selections at T=4).
+#[test]
+fn workers_1_and_4_are_bit_identical() {
+    let parallel = ParallelCfg { grad_accum: 4, ..Default::default() };
+    let mut e1 = engine(1, parallel.clone(), true);
+    let mut e4 = engine(4, parallel, true);
+    let t1 = run(&mut e1, 10);
+    let t4 = run(&mut e4, 10);
+    assert_eq!(t1, t4, "per-step loss traces diverged");
+    assert_eq!(bits(&e1.flat), bits(&e4.flat), "parameter vectors diverged");
+    // Not a no-op run: parameters actually moved.
+    let moved = e1
+        .flat
+        .iter()
+        .zip(&model().init_flat(SEED))
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(moved > 1000, "only {moved} lanes moved");
+}
+
+/// Same invariant across 2, 3 (uneven micro-batch split), and 8 (more
+/// workers than needed) — and for threaded vs logical (local) execution.
+#[test]
+fn all_worker_counts_and_modes_agree() {
+    let parallel = ParallelCfg { grad_accum: 6, ..Default::default() };
+    let mut reference = engine(1, parallel.clone(), false);
+    let want_trace = run(&mut reference, 6);
+    let want_flat = bits(&reference.flat);
+    for workers in [2usize, 3, 8] {
+        for threaded in [false, true] {
+            let mut e = engine(workers, parallel.clone(), threaded);
+            let trace = run(&mut e, 6);
+            assert_eq!(trace, want_trace, "workers={workers} threaded={threaded}");
+            assert_eq!(bits(&e.flat), want_flat, "workers={workers} threaded={threaded}");
+        }
+    }
+}
+
+/// Straggler delay skews completion order but must not change a single
+/// bit — the all-reduce is keyed by micro-batch index, not arrival.
+#[test]
+fn straggler_injection_does_not_change_bits() {
+    let fast = ParallelCfg { grad_accum: 4, ..Default::default() };
+    let slow = ParallelCfg { grad_accum: 4, straggler_ms: 5, timeout_ms: 1, ..Default::default() };
+    let mut e_fast = engine(3, fast, true);
+    let mut e_slow = engine(3, slow, true);
+    let t_fast = run(&mut e_fast, 4);
+    let t_slow = run(&mut e_slow, 4);
+    assert_eq!(t_fast, t_slow);
+    assert_eq!(bits(&e_fast.flat), bits(&e_slow.flat));
+}
+
+/// Straggler detection counts timeout events in the round report when a
+/// worker is much slower than the receive timeout.
+#[test]
+fn straggler_timeouts_are_reported() {
+    let parallel =
+        ParallelCfg { grad_accum: 4, straggler_ms: 60, timeout_ms: 5, ..Default::default() };
+    let mut e = engine(2, parallel, true);
+    for _ in 0..2 {
+        e.step(&batch_fn).unwrap();
+    }
+    let timeouts: u64 = e.reports().iter().map(|r| r.straggler_timeouts).sum();
+    assert!(timeouts > 0, "expected timeout events with a 60ms straggler and 5ms timeout");
+}
+
+/// Sharding criterion: per-worker moment storage is 2 × ceil(K/N) floats
+/// (± granularity padding), and the shards cover exactly the state-full
+/// lane set of the current mask.
+#[test]
+fn per_worker_state_is_ceil_k_over_n() {
+    for workers in [1usize, 2, 3, 4] {
+        let parallel =
+            ParallelCfg { grad_accum: 2, shard_granularity: 64, ..Default::default() };
+        let mut e = engine(workers, parallel, true);
+        e.step(&batch_fn).unwrap();
+        let k = statefull_lanes(e.mask(), model().layout().flat_size).len();
+        assert_eq!(e.plan().total_lanes(), k, "plan must cover the state-full set");
+        let ceil = (k + workers - 1) / workers;
+        let padded = (ceil + 63) / 64 * 64;
+        let per_worker = e.state_floats_per_worker();
+        assert_eq!(per_worker.len(), workers);
+        for (w, &floats) in per_worker.iter().enumerate() {
+            assert!(
+                floats <= 2 * padded,
+                "worker {w}: {floats} floats > 2*{padded} (K={k}, N={workers})"
+            );
+        }
+        assert_eq!(per_worker.iter().sum::<usize>(), 2 * k, "total must be exactly 2K");
+        assert_eq!(e.state_floats(), 2 * k);
+    }
+}
+
+/// Subspace re-selection releases and re-partitions shard state: after a
+/// round boundary the shard plan tracks the new mask.
+#[test]
+fn reselection_rebuilds_shards() {
+    let parallel = ParallelCfg { grad_accum: 2, ..Default::default() };
+    let mut e = engine(2, parallel, true);
+    e.step(&batch_fn).unwrap();
+    let mask1 = e.mask().to_vec();
+    let k1 = e.plan().total_lanes();
+    assert!(k1 > 0);
+    // T=4: 20 more steps cross five re-selections.
+    let mut mask_changed = false;
+    for _ in 0..20 {
+        e.step(&batch_fn).unwrap();
+        if e.mask() != &mask1[..] {
+            mask_changed = true;
+        }
+    }
+    assert_eq!(e.round(), 6);
+    assert_eq!(e.reports().len(), 6);
+    assert!(mask_changed, "random blockwise mask never changed across 6 rounds");
+    let flat_size = model().layout().flat_size;
+    let mask_now = e.mask().to_vec();
+    assert_eq!(e.plan().total_lanes(), statefull_lanes(&mask_now, flat_size).len());
+}
+
+/// The shard partitioner in isolation (unit-level, mirrors engine use).
+#[test]
+fn shard_plan_partitions_exactly() {
+    let lanes: Vec<u32> = (0..1000u32).filter(|l| l % 7 != 0).collect();
+    let k = lanes.len();
+    for workers in [1usize, 2, 3, 5, 8] {
+        let plan = ShardPlan::partition(lanes.clone(), workers, 1);
+        let ceil = (k + workers - 1) / workers;
+        assert_eq!(plan.max_shard_len(), ceil);
+        let mut recovered: Vec<u32> = Vec::new();
+        for w in 0..workers {
+            recovered.extend_from_slice(plan.lanes_of(w));
+        }
+        assert_eq!(recovered, lanes);
+    }
+}
+
+/// Gradient-accumulation sanity: more micro-batches per step changes the
+/// data (it IS a bigger global batch) but stays deterministic run-to-run.
+#[test]
+fn engine_runs_are_reproducible() {
+    let parallel = ParallelCfg { grad_accum: 3, ..Default::default() };
+    let mut a = engine(2, parallel.clone(), true);
+    let mut b = engine(2, parallel, true);
+    assert_eq!(run(&mut a, 5), run(&mut b, 5));
+    assert_eq!(bits(&a.flat), bits(&b.flat));
+}

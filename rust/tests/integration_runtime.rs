@@ -19,14 +19,28 @@ use frugal::runtime::{lit_f32, lit_i32_2d, lit_scalar1, to_scalar_f32, to_vec_f3
 use frugal::train::{init_flat, FusedTrainer, GradTrainer, Session};
 use frugal::TrainConfig;
 
+/// Feature/artifact gate for every test in this file: these tests need
+/// both the AOT artifacts (`make artifacts`) and a real PJRT runtime (a
+/// build against the actual `xla` crate, not the offline stub). On
+/// machines with neither they skip with a message instead of failing —
+/// `cargo test -q` must pass on an artifact-less checkout.
 fn open() -> Option<(Runtime, Manifest)> {
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
         return None;
     }
-    let rt = Runtime::cpu().expect("pjrt cpu client");
-    let man = Manifest::load(dir).expect("manifest");
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP: PJRT runtime unavailable ({e})");
+            return None;
+        }
+    };
+    // A manifest that exists but fails to parse is a real regression in
+    // the artifact builder — fail loudly rather than skip.
+    let man = Manifest::load(dir)
+        .expect("artifacts/manifest.json exists but failed to parse; re-run `make artifacts`");
     Some((rt, man))
 }
 

@@ -5,6 +5,7 @@
 //! failing case prints its seed for reproduction.
 
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::engine::{tree_reduce, ReduceTree, ShardPlan};
 use frugal::optim::frugal::BlockPolicy;
 use frugal::optim::projection::randk_indices;
 use frugal::optim::{Layout, Role};
@@ -161,6 +162,85 @@ fn prop_state_reset_iff_subspace_change() {
             let realized = opt.realized_rho();
             assert!((realized - 0.4).abs() < 0.45, "case {case}: rho drifted to {realized}");
         }
+    }
+}
+
+/// The engine's tree all-reduce is bit-identical for every leaf arrival
+/// order — the invariant behind `workers=1 ≡ workers=N`. The in-order
+/// sequential feed (`tree_reduce`) is the reference result.
+#[test]
+fn prop_tree_allreduce_arrival_order_invariant() {
+    for case in 0..40u64 {
+        let mut rng = Prng::seed_from_u64(case);
+        let n = 1 + rng.range(0, 33);
+        let len = 1 + rng.range(0, 200);
+        let leaves: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+        let want: Vec<u32> =
+            tree_reduce(leaves.clone()).iter().map(|x| x.to_bits()).collect();
+        for _ in 0..4 {
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let mut tree = ReduceTree::new(n);
+            let mut root = None;
+            for &i in &order {
+                if let Some(r) = tree.push(i, leaves[i].clone()) {
+                    root = Some(r);
+                }
+            }
+            let got: Vec<u32> =
+                root.expect("tree incomplete").iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "case {case}: order {order:?}");
+        }
+    }
+}
+
+/// On integer-valued leaves (exact in f32) the tree sum equals the naive
+/// sequential sum exactly — nothing is dropped or double-counted.
+#[test]
+fn prop_tree_allreduce_exact_on_integers() {
+    for case in 0..30u64 {
+        let mut rng = Prng::seed_from_u64(500 + case);
+        let n = 1 + rng.range(0, 20);
+        let len = 1 + rng.range(0, 50);
+        let leaves: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.range(0, 200) as f32 - 100.0).collect())
+            .collect();
+        let mut naive = vec![0.0f32; len];
+        for leaf in &leaves {
+            for (a, b) in naive.iter_mut().zip(leaf) {
+                *a += b;
+            }
+        }
+        assert_eq!(tree_reduce(leaves), naive, "case {case}");
+    }
+}
+
+/// Shard partitions cover every lane exactly once, in order, with the
+/// per-shard size bounded by ceil(K/N) rounded up to the granularity.
+#[test]
+fn prop_shard_partition_covers_and_bounds() {
+    for case in 0..50u64 {
+        let mut rng = Prng::seed_from_u64(900 + case);
+        let k = rng.range(0, 5000);
+        let workers = 1 + rng.range(0, 9);
+        let gran = 1 + rng.range(0, 128);
+        let mut lanes: Vec<u32> = (0..k as u32).map(|i| i * 2 + 1).collect();
+        rng.shuffle(&mut lanes);
+        let plan = ShardPlan::partition(lanes.clone(), workers, gran);
+        lanes.sort_unstable();
+        let mut recovered = Vec::new();
+        for w in 0..workers {
+            recovered.extend_from_slice(plan.lanes_of(w));
+        }
+        assert_eq!(recovered, lanes, "case {case}: lanes lost or reordered");
+        let ceil = if k == 0 { 0 } else { (k + workers - 1) / workers };
+        let bound = (ceil + gran - 1) / gran * gran;
+        assert!(
+            plan.max_shard_len() <= bound.max(1),
+            "case {case}: shard {} > bound {bound} (K={k} N={workers} gran={gran})",
+            plan.max_shard_len()
+        );
     }
 }
 

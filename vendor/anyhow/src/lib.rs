@@ -1,0 +1,152 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This build runs on machines with no crates.io access, so the subset of
+//! anyhow the workspace actually uses is vendored here: [`Error`],
+//! [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros. `Error`
+//! captures the source chain as strings at conversion time; `{:#}`
+//! formatting joins the chain with `": "` like the real crate.
+//!
+//! Intentionally NOT implemented (unused in this workspace): downcasting,
+//! backtraces, `Context`/`with_context`.
+
+use std::fmt;
+
+/// Error type: a rendered message chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a plain message (what `anyhow!` expands to).
+    pub fn msg(message: impl Into<String>) -> Error {
+        Error { chain: vec![message.into()] }
+    }
+
+    /// The source chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+// Like real anyhow: any std error converts via `?`. `Error` itself does
+// not implement `std::error::Error`, which keeps this blanket impl
+// coherent with `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let name = "x";
+        let e = anyhow!("bad flag {name}");
+        assert_eq!(e.to_string(), "bad flag x");
+        let e = anyhow!("{} + {}", 1, 2);
+        assert_eq!(e.to_string(), "1 + 2");
+        let e = anyhow!(io_err());
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            Ok(7)
+        }
+        fn g() -> Result<u32> {
+            bail!("always fails: {}", 3);
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "not ok");
+        assert_eq!(g().unwrap_err().to_string(), "always fails: 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u64> {
+            let n: u64 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn alternate_format_joins_chain() {
+        let e = Error { chain: vec!["outer".into(), "inner".into()] };
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Offline stub of the `xla` (PJRT) crate API surface used by this repo.
+//!
+//! The real dependency wraps the PJRT C API and cannot be fetched or
+//! linked on the offline build machines, so this stub provides the exact
+//! types and method signatures `frugal::runtime` compiles against.
+//! Every entry point that would touch PJRT returns [`Error`] at runtime
+//! (`PjRtClient::cpu()` fails first, so nothing deeper is reachable).
+//!
+//! To run against real artifacts, point the `xla` dependency in the root
+//! `Cargo.toml` at the actual crate instead of this path — the runtime
+//! module needs no source changes.
+
+use std::fmt;
+
+/// Error raised by every stubbed PJRT entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "PJRT unavailable: {what} (this binary was built against the offline \
+         xla stub; swap in the real xla crate to execute HLO artifacts)"
+    ))
+}
+
+/// A host literal (dense array) — stubbed, holds no data.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+}
+
+/// An on-device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client. `cpu()` always fails in the stub, so a build against
+/// this crate degrades to the pure-Rust engine paths.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module proto (from HLO text).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn literal_constructors_exist() {
+        let _ = Literal::vec1(&[1.0f32, 2.0]);
+        let _ = Literal::vec1(&[1i32, 2]);
+        assert!(Literal.reshape(&[2, 1]).is_err());
+    }
+}
