@@ -1,0 +1,153 @@
+//! Split-aware reduce-tree compression: bytes/step, steps/s, and the
+//! loss-vs-uncompressed gap on the built-in reference LM, at a fixed
+//! global batch (so every codec sees identical data and the only
+//! variables are wire bytes, wall-clock, and codec error).
+//!
+//! Emits the human table plus one JSON record per codec, and writes the
+//! records to `BENCH_compress_reduce.json` (the CI `bench-smoke` job
+//! uploads all `BENCH_*.json` files as perf-trajectory artifacts).
+//!
+//! Asserts the acceptance bounds for the split codec: ≥ 3× reduction in
+//! reduce-tree bytes/step and a final-loss gap ≤ 2% vs uncompressed.
+//!
+//! Env knobs: FRUGAL_BENCH_STEPS (default 30).
+
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::engine::{
+    CompressCfg, CompressMode, Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg,
+    Sources,
+};
+use frugal::optim::adamw::AdamCfg;
+use frugal::optim::frugal::BlockPolicy;
+use frugal::util::bench::{json_record, print_table, time_fn, write_json_records};
+
+const WORKERS: usize = 4;
+const GRAD_ACCUM: usize = 8;
+
+fn build_engine(model: &RefLm, mode: CompressMode) -> Engine {
+    let sources = Sources::Threaded(
+        (0..WORKERS).map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let mask_builder = MaskBuilder::new(
+        model.layout().clone(),
+        0.25,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        0,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg {
+            workers: WORKERS,
+            grad_accum: GRAD_ACCUM,
+            compress: CompressCfg { mode, block: 256 },
+            ..Default::default()
+        },
+        schedule: LrSchedule::ConstantWarmup { warmup: 0 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        // Several rounds per run: codec plans + EF residuals rebuild on
+        // every re-selection, so the bench covers that path too.
+        update_freq: 10,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    Engine::new(mask_builder, cfg, sources, model.init_flat(0)).unwrap()
+}
+
+fn tail_mean(losses: &[f32]) -> f64 {
+    let k = losses.len().min(4).max(1);
+    let tail = &losses[losses.len() - k..];
+    tail.iter().map(|&l| l as f64).sum::<f64>() / tail.len() as f64
+}
+
+fn main() -> frugal::Result<()> {
+    let steps: usize = std::env::var("FRUGAL_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    // Same bench-scale model as parallel_scaling.
+    let model = RefLm::new(RefLmCfg {
+        vocab: 256,
+        d_model: 32,
+        d_ff: 64,
+        n_layers: 4,
+        seq_len: 64,
+        batch: 8,
+    });
+    let rcfg = model.cfg().clone();
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(rcfg.vocab));
+    let batch_fn = move |micro: u64| corpus.train_batch(rcfg.batch, rcfg.seq_len, micro).tokens;
+
+    println!(
+        "compress_reduce: {} params, workers={WORKERS}, grad_accum={GRAD_ACCUM}, \
+         {steps} timed steps/codec",
+        model.layout().flat_size
+    );
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    let mut baseline: Option<(f64, f64)> = None; // (bytes/step, tail loss)
+    for mode in CompressMode::ALL {
+        let mut engine = build_engine(&model, mode);
+        let mut losses: Vec<f32> = Vec::new();
+        let timing = time_fn(1, steps, || {
+            losses.push(engine.step(&batch_fn).unwrap());
+        });
+        let ran_steps = engine.global_step().max(1);
+        let bytes_per_step = engine.wire_bytes_total() as f64 / ran_steps as f64;
+        let dense_per_step = engine.wire_dense_bytes_total() as f64 / ran_steps as f64;
+        let reduction = dense_per_step / bytes_per_step;
+        let tail = tail_mean(&losses);
+        let (base_bytes, base_tail) = *baseline.get_or_insert((bytes_per_step, tail));
+        let gap = (tail - base_tail).abs() / base_tail;
+        let steps_per_s = 1e9 / timing.median_ns;
+        rows.push(vec![
+            format!("{mode}"),
+            format!("{bytes_per_step:.0}"),
+            format!("{reduction:.2}x"),
+            format!("{:.2}", timing.per_iter_ms()),
+            format!("{tail:.4}"),
+            format!("{:.3}%", 100.0 * gap),
+        ]);
+        records.push(json_record(
+            "compress_reduce",
+            &format!("compress={mode}"),
+            &[
+                ("workers", WORKERS as f64),
+                ("grad_accum", GRAD_ACCUM as f64),
+                ("bytes_per_step", bytes_per_step),
+                ("dense_bytes_per_step", dense_per_step),
+                ("reduction", reduction),
+                ("ms_per_step", timing.per_iter_ms()),
+                ("steps_per_s", steps_per_s),
+                ("final_loss", tail),
+                ("loss_gap_pct", 100.0 * gap),
+                ("residual_floats", engine.residual_floats() as f64),
+            ],
+        ));
+        println!("{}", records.last().unwrap());
+        if mode == CompressMode::Split {
+            // The acceptance bounds: these are what the determinism/perf
+            // gates exist to protect.
+            assert!(
+                base_bytes >= 3.0 * bytes_per_step,
+                "split codec only reduced bytes/step {base_bytes:.0} -> \
+                 {bytes_per_step:.0} (< 3x)"
+            );
+            assert!(
+                gap <= 0.02,
+                "split codec final-loss gap {:.3}% exceeds 2% \
+                 (uncompressed {base_tail:.4}, split {tail:.4})",
+                100.0 * gap
+            );
+        }
+    }
+    print_table(
+        "Reduce-tree codecs (fixed global batch; gap vs --compress none)",
+        &["codec", "bytes/step", "reduction", "ms/step", "tail loss", "loss gap"],
+        &rows,
+    );
+    write_json_records("BENCH_compress_reduce.json", &records)?;
+    println!("wrote BENCH_compress_reduce.json ({} records)", records.len());
+    Ok(())
+}

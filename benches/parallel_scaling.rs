@@ -5,7 +5,9 @@
 //! wall-clock — pure scaling measurement.
 //!
 //! Emits the human table plus one JSON record per point (util::bench
-//! harness) for downstream tooling:
+//! harness) for downstream tooling, and writes the records to
+//! `BENCH_parallel_scaling.json` (uploaded by the CI `bench-smoke` job
+//! as a perf-trajectory artifact):
 //!   {"bench":"parallel_scaling","label":"workers=4", ...}
 //!
 //! Env knobs: FRUGAL_BENCH_STEPS (default 30).
@@ -16,7 +18,7 @@ use frugal::data::{CorpusConfig, SyntheticCorpus};
 use frugal::engine::{Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg, Sources};
 use frugal::optim::adamw::AdamCfg;
 use frugal::optim::frugal::BlockPolicy;
-use frugal::util::bench::{json_record, print_table, time_fn};
+use frugal::util::bench::{json_record, print_table, time_fn, write_json_records};
 
 const GRAD_ACCUM: usize = 8;
 
@@ -66,6 +68,7 @@ fn main() -> frugal::Result<()> {
         model.layout().flat_size
     );
     let mut rows = Vec::new();
+    let mut records = Vec::new();
     let mut base_steps_per_s = None;
     let mut final_losses: Vec<u32> = Vec::new();
     for workers in [1usize, 2, 4, 8] {
@@ -84,21 +87,19 @@ fn main() -> frugal::Result<()> {
             format!("{:.0}", steps_per_s * tokens_per_step),
             format!("{speedup:.2}x"),
         ]);
-        println!(
-            "{}",
-            json_record(
-                "parallel_scaling",
-                &format!("workers={workers}"),
-                &[
-                    ("workers", workers as f64),
-                    ("grad_accum", GRAD_ACCUM as f64),
-                    ("ms_per_step", timing.per_iter_ms()),
-                    ("steps_per_s", steps_per_s),
-                    ("tokens_per_s", steps_per_s * tokens_per_step),
-                    ("speedup", speedup),
-                ],
-            )
-        );
+        records.push(json_record(
+            "parallel_scaling",
+            &format!("workers={workers}"),
+            &[
+                ("workers", workers as f64),
+                ("grad_accum", GRAD_ACCUM as f64),
+                ("ms_per_step", timing.per_iter_ms()),
+                ("steps_per_s", steps_per_s),
+                ("tokens_per_s", steps_per_s * tokens_per_step),
+                ("speedup", speedup),
+            ],
+        ));
+        println!("{}", records.last().unwrap());
     }
     print_table(
         "Engine scaling (fixed global batch — identical math at every point)",
@@ -111,5 +112,7 @@ fn main() -> frugal::Result<()> {
     println!("shape: bit-identical final loss across worker counts: {}",
              if all_equal { "YES" } else { "NO" });
     assert!(all_equal, "engine invariant violated across worker counts");
+    write_json_records("BENCH_parallel_scaling.json", &records)?;
+    println!("wrote BENCH_parallel_scaling.json ({} records)", records.len());
     Ok(())
 }

@@ -7,7 +7,7 @@
 
 
 use crate::coordinator::LrSchedule;
-use crate::engine::ParallelCfg;
+use crate::engine::{CompressMode, ParallelCfg};
 use crate::optim::adamw::AdamCfg;
 use crate::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, StateFreeKind,
                            StateFullKind};
@@ -94,24 +94,34 @@ impl TrainConfig {
     /// `schedule_min_frac` keys.
     pub fn from_toml(text: &str) -> Result<Self> {
         let kv = crate::util::kv::KvFile::parse(text)?;
-        // An unrecognized [section] — or a typo'd key inside [parallel] —
-        // would be read by nothing and silently swallowed: a
-        // wrong-hyperparameter run with no diagnostic. Reject both.
+        // An unrecognized [section] — or a typo'd key inside [parallel]
+        // or [parallel.compress] — would be read by nothing and silently
+        // swallowed: a wrong-hyperparameter run with no diagnostic.
+        // Reject both.
         const PARALLEL_KEYS: [&str; 6] = [
             "workers", "grad_accum", "shard_granularity", "straggler_ms", "timeout_ms",
             "threaded",
         ];
+        const COMPRESS_KEYS: [&str; 2] = ["mode", "block"];
         for section in &kv.sections {
             anyhow::ensure!(
-                section == "parallel",
-                "unknown config section '[{section}]' (known sections: [parallel])"
+                section == "parallel" || section == "parallel.compress",
+                "unknown config section '[{section}]' (known sections: [parallel], \
+                 [parallel.compress])"
             );
         }
         for key in kv.entries.keys() {
-            if let Some((section, rest)) = key.split_once('.') {
+            if let Some(rest) = key.strip_prefix("parallel.compress.") {
+                anyhow::ensure!(
+                    COMPRESS_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [parallel.compress] (known keys: {})",
+                    COMPRESS_KEYS.join(", ")
+                );
+            } else if let Some((section, rest)) = key.split_once('.') {
                 anyhow::ensure!(
                     section == "parallel",
-                    "unknown config section '[{section}]' (known sections: [parallel])"
+                    "unknown config section '[{section}]' (known sections: [parallel], \
+                     [parallel.compress])"
                 );
                 anyhow::ensure!(
                     PARALLEL_KEYS.contains(&rest),
@@ -176,7 +186,7 @@ impl TrainConfig {
         if let Some(v) = kv.get("checkpoint") {
             cfg.checkpoint = Some(v.to_string());
         }
-        if kv.has_section("parallel") {
+        if kv.has_section("parallel") || kv.has_section("parallel.compress") {
             let mut p = ParallelCfg::default();
             if let Some(v) = kv.get_u64("parallel.workers")? {
                 p.workers = v.max(1) as usize;
@@ -195,6 +205,12 @@ impl TrainConfig {
             }
             if let Some(v) = kv.get_bool("parallel.threaded")? {
                 p.threaded = v;
+            }
+            if let Some(v) = kv.get("parallel.compress.mode") {
+                p.compress.mode = CompressMode::parse(v)?;
+            }
+            if let Some(v) = kv.get_u64("parallel.compress.block")? {
+                p.compress.block = v.max(1) as usize;
             }
             cfg.parallel = Some(p);
         }
@@ -261,6 +277,9 @@ impl TrainConfig {
             let _ = writeln!(out, "straggler_ms = {}", p.straggler_ms);
             let _ = writeln!(out, "timeout_ms = {}", p.timeout_ms);
             let _ = writeln!(out, "threaded = {}", p.threaded);
+            let _ = writeln!(out, "\n[parallel.compress]");
+            let _ = writeln!(out, "mode = \"{}\"", p.compress.mode);
+            let _ = writeln!(out, "block = {}", p.compress.block);
         }
         out
     }
@@ -422,6 +441,7 @@ impl TrainConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::CompressCfg;
 
     #[test]
     fn toml_roundtrip() {
@@ -448,10 +468,47 @@ mod tests {
             straggler_ms: 3,
             timeout_ms: 250,
             threaded: false,
+            compress: CompressCfg { mode: CompressMode::Split, block: 128 },
         });
         let text = cfg.to_toml();
         let back = TrainConfig::from_toml(&text).unwrap();
         assert_eq!(back.parallel, cfg.parallel);
+    }
+
+    #[test]
+    fn compress_section_parses_all_modes() {
+        for mode in CompressMode::ALL {
+            let text = format!(
+                "[parallel]\nworkers = 2\n\n[parallel.compress]\nmode = \"{mode}\"\nblock = 64\n"
+            );
+            let cfg = TrainConfig::from_toml(&text).unwrap();
+            let p = cfg.parallel.expect("engine section present");
+            assert_eq!(p.compress.mode, mode);
+            assert_eq!(p.compress.block, 64);
+        }
+    }
+
+    #[test]
+    fn bare_compress_section_opts_into_the_engine() {
+        // [parallel.compress] alone still routes the run through the
+        // engine (with default workers) rather than being swallowed.
+        let cfg = TrainConfig::from_toml("[parallel.compress]\nmode = \"split\"\n").unwrap();
+        let p = cfg.parallel.expect("engine section present");
+        assert_eq!(p.workers, ParallelCfg::default().workers);
+        assert_eq!(p.compress.mode, CompressMode::Split);
+        assert_eq!(p.compress.block, CompressCfg::default().block);
+    }
+
+    #[test]
+    fn typoed_compress_key_or_mode_is_rejected() {
+        let err =
+            TrainConfig::from_toml("[parallel.compress]\nmodes = \"split\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown key 'modes' in [parallel.compress]"));
+        let err =
+            TrainConfig::from_toml("[parallel.compress]\nmode = \"zstd\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown compress mode 'zstd'"));
+        let err = TrainConfig::from_toml("[parallel.zip]\nmode = \"split\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown config section '[parallel.zip]'"));
     }
 
     #[test]

@@ -170,6 +170,24 @@ pub fn statefree_lanes(mask: &[f32], flat_size: usize) -> Vec<u32> {
         .collect()
 }
 
+/// Both lane sets in one mask pass: `(statefull, statefree)`, each
+/// sorted. Equivalent to ([`statefull_lanes`], [`statefree_lanes`]) —
+/// the engine calls this once per round to drive both the ZeRO-style
+/// shard plans and the per-lane-group compression codecs
+/// (`engine::CompressPlan`).
+pub fn lane_partition(mask: &[f32], flat_size: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut full = Vec::new();
+    let mut free = Vec::new();
+    for (i, &m) in mask[..flat_size.min(mask.len())].iter().enumerate() {
+        if m > 0.0 {
+            full.push(i as u32);
+        } else {
+            free.push(i as u32);
+        }
+    }
+    (full, free)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,9 +214,22 @@ mod tests {
     }
 
     #[test]
+    fn lane_partition_matches_individual_lane_sets() {
+        let l = layout();
+        let mut mb = MaskBuilder::new(l.clone(), 0.4, SubspacePolicy::RandK, 11);
+        for _ in 0..3 {
+            let mask = mb.advance();
+            let (full, free) = lane_partition(&mask, l.flat_size);
+            assert_eq!(full, statefull_lanes(&mask, l.flat_size));
+            assert_eq!(free, statefree_lanes(&mask, l.flat_size));
+        }
+    }
+
+    #[test]
     fn roles_always_statefull_by_default() {
         let l = layout();
-        let mut mb = MaskBuilder::new(l.clone(), 0.0, SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
+        let mut mb =
+            MaskBuilder::new(l.clone(), 0.0, SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
         let mask = mb.advance();
         for p in &l.params {
             if p.role != Role::Linear {
@@ -214,7 +245,8 @@ mod tests {
     #[test]
     fn rho_zero_means_no_linear_lanes() {
         let l = layout();
-        let mut mb = MaskBuilder::new(l.clone(), 0.0, SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
+        let mut mb =
+            MaskBuilder::new(l.clone(), 0.0, SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
         let mask = mb.advance();
         assert_eq!(mb.linear_density(&mask), 0.0);
     }

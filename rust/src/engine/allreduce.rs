@@ -10,9 +10,16 @@
 //! they arrived. This is the engine invariant that makes
 //! `--workers 1` ≡ `--workers N` (see `tests/engine_parallel.rs`).
 //!
-//! The tree is *eager*: `push` cascades a leaf upward as far as its
+//! The tree is *eager*: a push cascades a leaf upward as far as its
 //! siblings allow, so combines overlap with still-running workers instead
 //! of waiting for a barrier.
+//!
+//! The tree is generic over the leaf type `T` (default `Vec<f32>`, the
+//! raw-gradient case): [`ReduceTree::push_with`] threads an arbitrary
+//! combine function through the same static grouping, which is how the
+//! engine reduces **encoded** payloads (`compress::EncodedGrad`) —
+//! decode-combine-reencode at every node, same grouping, same
+//! determinism guarantee for any fixed codec.
 
 use std::collections::HashMap;
 
@@ -24,21 +31,31 @@ fn width(n: usize, l: u32) -> usize {
         return usize::from(n > 0);
     }
     let step = 1usize << l;
-    (n + step - 1) / step
+    n.div_ceil(step)
 }
 
-/// Incremental deterministic tree reduction of `n` equal-length `Vec<f32>`
-/// leaves. Feed each leaf exactly once via [`ReduceTree::push`]; the call
-/// that completes the root returns the reduced vector.
-pub struct ReduceTree {
+/// Elementwise `left += right` — the combine of the raw fp32 tree.
+fn add_assign_vec(mut left: Vec<f32>, right: Vec<f32>) -> Vec<f32> {
+    debug_assert_eq!(left.len(), right.len(), "leaf length mismatch");
+    for (a, b) in left.iter_mut().zip(&right) {
+        *a += b;
+    }
+    left
+}
+
+/// Incremental deterministic tree reduction of `n` equal-shaped leaves.
+/// Feed each leaf exactly once via [`ReduceTree::push`] (raw `Vec<f32>`)
+/// or [`ReduceTree::push_with`] (any `T` + combine); the call that
+/// completes the root returns the reduced value.
+pub struct ReduceTree<T = Vec<f32>> {
     n: usize,
     /// Pending subtree results keyed by (level, index-within-level).
-    pending: HashMap<(u32, usize), Vec<f32>>,
+    pending: HashMap<(u32, usize), T>,
     fed: Vec<bool>,
 }
 
-impl ReduceTree {
-    pub fn new(n: usize) -> ReduceTree {
+impl<T> ReduceTree<T> {
+    pub fn new(n: usize) -> ReduceTree<T> {
         assert!(n > 0, "reduce tree needs at least one leaf");
         ReduceTree { n, pending: HashMap::new(), fed: vec![false; n] }
     }
@@ -47,10 +64,18 @@ impl ReduceTree {
         self.n
     }
 
-    /// Feed leaf `idx`. Returns `Some(root)` on the push that completes
-    /// the tree, `None` otherwise. Panics on an out-of-range or duplicate
-    /// index — both are orchestrator bugs, not data conditions.
-    pub fn push(&mut self, idx: usize, buf: Vec<f32>) -> Option<Vec<f32>> {
+    /// Feed leaf `idx`, combining subtrees with `combine(left, right)`
+    /// (left = lower leaf index — the grouping **and** the argument order
+    /// are fixed by the tree, never by arrival). Returns `Some(root)` on
+    /// the push that completes the tree, `None` otherwise. Panics on an
+    /// out-of-range or duplicate index — both are orchestrator bugs, not
+    /// data conditions.
+    pub fn push_with(
+        &mut self,
+        idx: usize,
+        buf: T,
+        combine: &mut impl FnMut(T, T) -> T,
+    ) -> Option<T> {
         assert!(idx < self.n, "leaf {idx} out of range (n={})", self.n);
         assert!(!self.fed[idx], "leaf {idx} fed twice");
         self.fed[idx] = true;
@@ -75,12 +100,8 @@ impl ReduceTree {
                 Some(other) => {
                     // Combine in index order (lower index on the left) so
                     // the grouping — and therefore the bits — is fixed.
-                    let (mut left, right) = if i < sib { (buf, other) } else { (other, buf) };
-                    debug_assert_eq!(left.len(), right.len(), "leaf length mismatch");
-                    for (a, b) in left.iter_mut().zip(&right) {
-                        *a += b;
-                    }
-                    buf = left;
+                    let (left, right) = if i < sib { (buf, other) } else { (other, buf) };
+                    buf = combine(left, right);
                     level += 1;
                     i /= 2;
                 }
@@ -93,15 +114,28 @@ impl ReduceTree {
     }
 }
 
-/// One-shot convenience: deterministically tree-reduce `leaves` (feeding
-/// them in index order). Returns the elementwise tree sum.
-pub fn tree_reduce(leaves: Vec<Vec<f32>>) -> Vec<f32> {
+impl ReduceTree<Vec<f32>> {
+    /// [`ReduceTree::push_with`] specialized to elementwise fp32 addition
+    /// — the uncompressed gradient tree.
+    pub fn push(&mut self, idx: usize, buf: Vec<f32>) -> Option<Vec<f32>> {
+        self.push_with(idx, buf, &mut add_assign_vec)
+    }
+}
+
+/// One-shot convenience: deterministically tree-reduce `leaves` with
+/// `combine`, feeding them in index order.
+pub fn tree_reduce_with<T>(leaves: Vec<T>, mut combine: impl FnMut(T, T) -> T) -> T {
     let mut tree = ReduceTree::new(leaves.len());
     let mut root = None;
     for (i, leaf) in leaves.into_iter().enumerate() {
-        root = tree.push(i, leaf);
+        root = tree.push_with(i, leaf, &mut combine);
     }
     root.expect("tree must complete after all leaves")
+}
+
+/// One-shot convenience for the raw fp32 tree: the elementwise tree sum.
+pub fn tree_reduce(leaves: Vec<Vec<f32>>) -> Vec<f32> {
+    tree_reduce_with(leaves, add_assign_vec)
 }
 
 #[cfg(test)]
@@ -189,6 +223,32 @@ mod tests {
         let out = tree_reduce(leaves);
         let s = (0..n).sum::<usize>() as f32;
         assert_eq!(out, vec![s, 2.0 * s, n as f32]);
+    }
+
+    #[test]
+    fn generic_tree_fixes_grouping_not_type() {
+        // A non-commutative combine (string concatenation) exposes the
+        // grouping: any arrival order must produce the same parenthesized
+        // reduction, with the lower index always on the left.
+        let n = 6;
+        let leaves: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+        let want = tree_reduce_with(leaves.clone(), |a, b| format!("({a}+{b})"));
+        assert_eq!(want, "(((0+1)+(2+3))+(4+5))");
+        let mut rng = Prng::seed_from_u64(3);
+        for _ in 0..10 {
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let mut tree = ReduceTree::new(n);
+            let mut got = None;
+            for &i in &order {
+                if let Some(r) =
+                    tree.push_with(i, leaves[i].clone(), &mut |a, b| format!("({a}+{b})"))
+                {
+                    got = Some(r);
+                }
+            }
+            assert_eq!(got.expect("incomplete"), want, "order {order:?}");
+        }
     }
 
     #[test]

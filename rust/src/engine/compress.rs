@@ -1,0 +1,706 @@
+//! Split-aware gradient compression for the reduce tree.
+//!
+//! FRUGAL splits the gradient into a state-full subspace (Adam) and a
+//! state-free complement whose update only ever consumes the *sign* of
+//! the reduced gradient (signSGD). Shipping the state-free lanes through
+//! the all-reduce at full fp32 therefore wastes most of the communication
+//! budget — the same overhead-reduction logic the paper applies to
+//! optimizer state, applied to transport. This module makes that split a
+//! first-class transport concept:
+//!
+//! - [`GradCodec`] is the codec interface; three deterministic
+//!   implementations exist: [`NoneCodec`] (raw fp32 — today's path),
+//!   [`SignEfCodec`] (1-bit sign + one fp32 scale per block, with an
+//!   error-feedback residual), and [`BlockQ8Codec`] (blockwise 8-bit
+//!   absmax quantization).
+//! - [`CompressPlan`] composes codecs **per lane group** from the round's
+//!   subspace mask: under [`CompressMode::Split`] the state-free lanes
+//!   travel as 1-bit signs and the state-full lanes as 8-bit blocks, so
+//!   the codec follows every subspace re-selection (and the EF residuals
+//!   reset with the shards — the paper's state-reset semantics extended
+//!   to transport state).
+//!
+//! # Where each codec runs
+//!
+//! Leaves (worker → tree) are encoded by the group's *leaf* codec; every
+//! interior node decodes its two children, adds them, and **re-encodes**
+//! the partial sum, so all tree edges carry compressed payloads. Interior
+//! re-encoding of a compressed group always uses [`BlockQ8Codec`], even
+//! when the leaf codec is [`SignEfCodec`]: re-signing partial sums at
+//! every level would erase the sum's magnitude information (sign-of-sum ≠
+//! sum-of-signs), which measurably breaks convergence, while 8-bit absmax
+//! keeps interior hops compressed at < 0.5% relative error. The 1-bit
+//! stage thus sits exactly on the widest fan-in — the `m` worker edges —
+//! where it pays the most.
+//!
+//! # Determinism
+//!
+//! Every codec is a pure function of its input (fixed-order f32
+//! arithmetic, round-half-away-from-zero quantization), and the tree
+//! grouping is keyed by micro-batch index (`allreduce`), so for a *fixed*
+//! codec the reduced gradient has identical bits at any worker count and
+//! arrival order — the engine's `--workers 1 ≡ --workers N` invariant
+//! holds per codec (see `tests/engine_parallel.rs` and
+//! `tests/prop_invariants.rs`). Different codecs are different math and
+//! produce different (equally deterministic) traces.
+
+use crate::Result;
+
+/// Which compression the engine applies on the reduce tree
+/// (`[parallel.compress] mode` / `frugal pretrain --compress`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompressMode {
+    /// Raw fp32 everywhere — bit-identical to the pre-compression engine.
+    #[default]
+    None,
+    /// 1-bit sign + per-block scale with error feedback on the
+    /// state-free lanes; state-full lanes stay fp32.
+    SignEf,
+    /// Blockwise 8-bit absmax on the state-full lanes; state-free lanes
+    /// stay fp32.
+    Q8,
+    /// Both: [`CompressMode::SignEf`] on state-free lanes and
+    /// [`CompressMode::Q8`] on state-full lanes — the FRUGAL-shaped
+    /// codec.
+    Split,
+}
+
+impl CompressMode {
+    /// All modes, in CLI/config spelling order.
+    pub const ALL: [CompressMode; 4] =
+        [CompressMode::None, CompressMode::SignEf, CompressMode::Q8, CompressMode::Split];
+
+    /// Parse the CLI/config spelling (`none | sign-ef | q8 | split`).
+    pub fn parse(s: &str) -> Result<CompressMode> {
+        match s {
+            "none" => Ok(CompressMode::None),
+            "sign-ef" => Ok(CompressMode::SignEf),
+            "q8" => Ok(CompressMode::Q8),
+            "split" => Ok(CompressMode::Split),
+            other => {
+                anyhow::bail!("unknown compress mode '{other}' (expected none|sign-ef|q8|split)")
+            }
+        }
+    }
+
+    /// The CLI/config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CompressMode::None => "none",
+            CompressMode::SignEf => "sign-ef",
+            CompressMode::Q8 => "q8",
+            CompressMode::Split => "split",
+        }
+    }
+
+    /// True when the state-full lane group is quantized (8-bit blocks).
+    pub fn compresses_full(&self) -> bool {
+        matches!(self, CompressMode::Q8 | CompressMode::Split)
+    }
+
+    /// True when the state-free lane group is sign-compressed (and
+    /// therefore carries an EF residual).
+    pub fn compresses_free(&self) -> bool {
+        matches!(self, CompressMode::SignEf | CompressMode::Split)
+    }
+}
+
+impl std::fmt::Display for CompressMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The `[parallel.compress]` run-config section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressCfg {
+    pub mode: CompressMode,
+    /// Lanes per scale block for both quantizers.
+    pub block: usize,
+}
+
+impl Default for CompressCfg {
+    fn default() -> Self {
+        CompressCfg { mode: CompressMode::None, block: 256 }
+    }
+}
+
+/// One lane group's encoded bytes — what actually crosses a tree edge.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Raw fp32 values.
+    F32(Vec<f32>),
+    /// 1-bit signs (LSB-first in `u64` words) + one fp32 scale per
+    /// `block` lanes. Lane `i` decodes to `±scales[i / block]`.
+    Sign { len: usize, block: usize, bits: Vec<u64>, scales: Vec<f32> },
+    /// 8-bit absmax quantization: lane `i` decodes to
+    /// `q[i] as f32 * scales[i / block]`.
+    Q8 { len: usize, block: usize, q: Vec<i8>, scales: Vec<f32> },
+}
+
+impl Payload {
+    /// Number of lanes this payload encodes.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::Sign { len, .. } | Payload::Q8 { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes this payload occupies on the wire (sign bits or quantized
+    /// values plus the fp32 block scales).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::F32(v) => 4 * v.len(),
+            Payload::Sign { len, scales, .. } => len.div_ceil(8) + 4 * scales.len(),
+            Payload::Q8 { q, scales, .. } => q.len() + 4 * scales.len(),
+        }
+    }
+
+    /// Decode back to fp32 values (length [`Payload::len`]).
+    pub fn decode(&self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v.clone(),
+            Payload::Sign { len, block, bits, scales } => {
+                let mut out = Vec::with_capacity(*len);
+                for i in 0..*len {
+                    let s = scales[i / block];
+                    let positive = (bits[i / 64] >> (i % 64)) & 1 == 1;
+                    out.push(if positive { s } else { -s });
+                }
+                out
+            }
+            Payload::Q8 { len, block, q, scales } => {
+                let mut out = Vec::with_capacity(*len);
+                for i in 0..*len {
+                    out.push(q[i] as f32 * scales[i / block]);
+                }
+                out
+            }
+        }
+    }
+
+    /// Decode, consuming the payload — the F32 case moves its values out
+    /// instead of cloning them.
+    pub fn into_values(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            other => other.decode(),
+        }
+    }
+}
+
+/// A deterministic gradient codec for one lane group.
+///
+/// `encode` must be a pure function of `vals` (+ the residual when error
+/// feedback is used); `decode` must be a pure function of the payload —
+/// together with the index-keyed tree grouping this is what keeps the
+/// engine bit-identical across worker counts within a fixed codec.
+pub trait GradCodec {
+    fn name(&self) -> &'static str;
+
+    /// Encode `vals`. When `residual` is given (error feedback), the
+    /// encoder compresses `vals + residual` and stores the compression
+    /// error back into `residual` — over steps the transmitted values
+    /// integrate to the true signal even though each message is lossy.
+    fn encode(&self, vals: &[f32], residual: Option<&mut [f32]>) -> Payload;
+
+    /// Decode a payload produced by any codec (payloads self-describe).
+    fn decode(&self, payload: &Payload) -> Vec<f32> {
+        payload.decode()
+    }
+}
+
+/// The identity codec: raw fp32, residual ignored.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoneCodec;
+
+impl GradCodec for NoneCodec {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn encode(&self, vals: &[f32], _residual: Option<&mut [f32]>) -> Payload {
+        Payload::F32(vals.to_vec())
+    }
+}
+
+/// 1-bit sign + per-block fp32 scale (the block's mean |value|), with an
+/// optional error-feedback residual. `scale = mean|e|` makes the encoder
+/// a 1/B-contraction (`‖e − dec‖² ≤ (1 − 1/B)‖e‖²`), so the EF residual
+/// stays bounded and the long-run transmitted mean is unbiased.
+#[derive(Clone, Copy, Debug)]
+pub struct SignEfCodec {
+    /// Lanes per scale block (≥ 1).
+    pub block: usize,
+}
+
+impl GradCodec for SignEfCodec {
+    fn name(&self) -> &'static str {
+        "sign-ef"
+    }
+
+    fn encode(&self, vals: &[f32], residual: Option<&mut [f32]>) -> Payload {
+        let block = self.block.max(1);
+        let n = vals.len();
+        // Error feedback: compress vals + residual, not vals.
+        let e: Vec<f32> = match &residual {
+            Some(r) => {
+                assert_eq!(r.len(), n, "EF residual length mismatch");
+                vals.iter().zip(r.iter()).map(|(v, r)| v + r).collect()
+            }
+            None => vals.to_vec(),
+        };
+        let mut scales = Vec::with_capacity(n.div_ceil(block));
+        for blk in e.chunks(block) {
+            let mut sum = 0.0f32;
+            for &x in blk {
+                sum += x.abs();
+            }
+            scales.push(sum / blk.len() as f32);
+        }
+        let mut bits = vec![0u64; n.div_ceil(64)];
+        for (i, &x) in e.iter().enumerate() {
+            if x >= 0.0 {
+                bits[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        if let Some(r) = residual {
+            for (i, &x) in e.iter().enumerate() {
+                let s = scales[i / block];
+                r[i] = x - if x >= 0.0 { s } else { -s };
+            }
+        }
+        Payload::Sign { len: n, block, bits, scales }
+    }
+}
+
+/// Blockwise 8-bit absmax quantization: `scale = max|v| / 127` per block,
+/// values round to the nearest of 255 signed levels. Residual ignored —
+/// at 8 bits the per-step error is small enough that EF buys nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockQ8Codec {
+    /// Lanes per scale block (≥ 1).
+    pub block: usize,
+}
+
+impl GradCodec for BlockQ8Codec {
+    fn name(&self) -> &'static str {
+        "q8"
+    }
+
+    fn encode(&self, vals: &[f32], _residual: Option<&mut [f32]>) -> Payload {
+        let block = self.block.max(1);
+        let n = vals.len();
+        let mut q = Vec::with_capacity(n);
+        let mut scales = Vec::with_capacity(n.div_ceil(block));
+        for blk in vals.chunks(block) {
+            let mut amax = 0.0f32;
+            for &x in blk {
+                amax = amax.max(x.abs());
+            }
+            if amax == 0.0 {
+                scales.push(0.0);
+                q.resize(q.len() + blk.len(), 0);
+                continue;
+            }
+            let scale = amax / 127.0;
+            scales.push(scale);
+            for &x in blk {
+                q.push((x / scale).round().clamp(-127.0, 127.0) as i8);
+            }
+        }
+        Payload::Q8 { len: n, block, q, scales }
+    }
+}
+
+/// An encoded micro-batch gradient — one reduce-tree message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EncodedGrad {
+    /// Uncompressed full (padded) gradient — [`CompressMode::None`].
+    Dense(Vec<f32>),
+    /// Gathered lane groups, one payload each, in the plan's lane order.
+    Split { full: Payload, free: Payload },
+}
+
+/// Bytes that crossed reduce-tree edges during one optimizer step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    /// Encoded bytes actually shipped.
+    pub bytes: u64,
+    /// Messages (leaf sends + interior combine outputs).
+    pub messages: u64,
+    /// What the same messages would have cost at raw fp32.
+    pub dense_bytes: u64,
+}
+
+/// The per-round compression plan: lane groups (from the round's subspace
+/// mask) plus the codec assignment of [`CompressMode`]. Rebuilt on every
+/// subspace re-selection so the codec follows the mask.
+#[derive(Clone, Debug, Default)]
+pub struct CompressPlan {
+    cfg: CompressCfg,
+    /// Sorted state-full lane ids (the BlockQ8 group under `q8`/`split`).
+    full: Vec<u32>,
+    /// Sorted state-free lane ids (the SignEf group under
+    /// `sign-ef`/`split`).
+    free: Vec<u32>,
+    /// Length of the padded flat gradient the plan decodes back into.
+    padded: usize,
+}
+
+impl CompressPlan {
+    /// `full`/`free` must be sorted, disjoint, in-range lane ids (the
+    /// `lane_partition` output for the round's mask).
+    pub fn new(cfg: CompressCfg, full: Vec<u32>, free: Vec<u32>, padded: usize) -> CompressPlan {
+        debug_assert!(full.windows(2).all(|w| w[0] < w[1]), "full lanes unsorted");
+        debug_assert!(free.windows(2).all(|w| w[0] < w[1]), "free lanes unsorted");
+        debug_assert!(full.iter().chain(&free).all(|&l| (l as usize) < padded));
+        CompressPlan { cfg, full, free, padded }
+    }
+
+    pub fn mode(&self) -> CompressMode {
+        self.cfg.mode
+    }
+
+    pub fn block(&self) -> usize {
+        self.cfg.block.max(1)
+    }
+
+    /// Length of the padded flat vector [`CompressPlan::into_grad`]
+    /// produces.
+    pub fn padded_size(&self) -> usize {
+        self.padded
+    }
+
+    /// Floats of per-slot EF residual this plan needs (0 = EF inactive).
+    pub fn residual_len(&self) -> usize {
+        if self.cfg.mode.compresses_free() {
+            self.free.len()
+        } else {
+            0
+        }
+    }
+
+    fn gather(lanes: &[u32], grad: &[f32]) -> Vec<f32> {
+        lanes.iter().map(|&l| grad[l as usize]).collect()
+    }
+
+    /// Encode one worker-computed micro-batch gradient (a leaf message),
+    /// consuming it — the `None` codec moves the vector straight into the
+    /// tree, copy-free like the pre-compression engine. `residual` is the
+    /// micro-batch slot's EF buffer ([`CompressPlan::residual_len`]
+    /// floats) or `None` when EF is off.
+    pub fn encode_leaf(&self, grad: Vec<f32>, residual: Option<&mut [f32]>) -> EncodedGrad {
+        if self.cfg.mode == CompressMode::None {
+            return EncodedGrad::Dense(grad);
+        }
+        let full_vals = Self::gather(&self.full, &grad);
+        let free_vals = Self::gather(&self.free, &grad);
+        let full = if self.cfg.mode.compresses_full() {
+            BlockQ8Codec { block: self.block() }.encode(&full_vals, None)
+        } else {
+            Payload::F32(full_vals)
+        };
+        let free = if self.cfg.mode.compresses_free() {
+            SignEfCodec { block: self.block() }.encode(&free_vals, residual)
+        } else {
+            Payload::F32(free_vals)
+        };
+        EncodedGrad::Split { full, free }
+    }
+
+    /// Decode, add, re-encode one lane group at an interior tree node.
+    /// Compressed groups re-encode as 8-bit blocks (see module docs for
+    /// why interior hops never re-sign); an uncompressed (F32) group's
+    /// values move in and out without copies.
+    fn combine_group(&self, a: Payload, b: Payload, compressed: bool) -> Payload {
+        let mut sum = a.into_values();
+        let other = b.into_values();
+        debug_assert_eq!(sum.len(), other.len(), "lane-group length mismatch");
+        for (x, y) in sum.iter_mut().zip(&other) {
+            *x += y;
+        }
+        if compressed {
+            BlockQ8Codec { block: self.block() }.encode(&sum, None)
+        } else {
+            Payload::F32(sum)
+        }
+    }
+
+    /// Combine two subtree messages into their parent's message. The
+    /// caller (the reduce tree) fixes the grouping; this is the
+    /// decode-combine-reencode step, pure in its inputs.
+    pub fn combine(&self, a: EncodedGrad, b: EncodedGrad) -> EncodedGrad {
+        match (a, b) {
+            (EncodedGrad::Dense(mut x), EncodedGrad::Dense(y)) => {
+                // The None codec: exact fp32 addition, identical to the
+                // pre-compression engine.
+                debug_assert_eq!(x.len(), y.len(), "leaf length mismatch");
+                for (a, b) in x.iter_mut().zip(&y) {
+                    *a += b;
+                }
+                EncodedGrad::Dense(x)
+            }
+            (
+                EncodedGrad::Split { full: af, free: ar },
+                EncodedGrad::Split { full: bf, free: br },
+            ) => EncodedGrad::Split {
+                full: self.combine_group(af, bf, self.cfg.mode.compresses_full()),
+                free: self.combine_group(ar, br, self.cfg.mode.compresses_free()),
+            },
+            _ => panic!("mixed encoded-grad variants in one reduce tree (engine bug)"),
+        }
+    }
+
+    /// Decode the tree root back into the padded flat gradient (padding
+    /// lanes zero, like every worker-produced gradient).
+    pub fn into_grad(&self, enc: EncodedGrad) -> Vec<f32> {
+        match enc {
+            EncodedGrad::Dense(v) => v,
+            EncodedGrad::Split { full, free } => {
+                let mut out = vec![0.0f32; self.padded];
+                for (lane, v) in self.full.iter().zip(full.into_values()) {
+                    out[*lane as usize] = v;
+                }
+                for (lane, v) in self.free.iter().zip(free.into_values()) {
+                    out[*lane as usize] = v;
+                }
+                out
+            }
+        }
+    }
+
+    /// Bytes `enc` occupies on the wire.
+    pub fn wire_bytes(&self, enc: &EncodedGrad) -> usize {
+        match enc {
+            EncodedGrad::Dense(v) => 4 * v.len(),
+            EncodedGrad::Split { full, free } => full.wire_bytes() + free.wire_bytes(),
+        }
+    }
+
+    /// True when a worker-produced leaf message matches this plan (shape
+    /// validation at the collector).
+    pub fn leaf_matches(&self, enc: &EncodedGrad) -> bool {
+        match enc {
+            EncodedGrad::Dense(v) => {
+                self.cfg.mode == CompressMode::None && v.len() == self.padded
+            }
+            EncodedGrad::Split { full, free } => {
+                self.cfg.mode != CompressMode::None
+                    && full.len() == self.full.len()
+                    && free.len() == self.free.len()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::seed_from_u64(seed);
+        (0..n).map(|_| 0.1 * rng.normal()).collect()
+    }
+
+    /// A plan over `padded` lanes with every third lane state-full.
+    fn plan(mode: CompressMode, block: usize, flat: usize, padded: usize) -> CompressPlan {
+        let full: Vec<u32> = (0..flat as u32).filter(|l| l % 3 == 0).collect();
+        let free: Vec<u32> = (0..flat as u32).filter(|l| l % 3 != 0).collect();
+        CompressPlan::new(CompressCfg { mode, block }, full, free, padded)
+    }
+
+    #[test]
+    fn mode_parses_and_displays() {
+        for mode in CompressMode::ALL {
+            assert_eq!(CompressMode::parse(mode.as_str()).unwrap(), mode);
+            assert_eq!(format!("{mode}"), mode.as_str());
+        }
+        assert!(CompressMode::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn sign_roundtrip_is_exact() {
+        let vals = randvec(200, 7);
+        let codec = SignEfCodec { block: 32 };
+        let dec = codec.decode(&codec.encode(&vals, None));
+        for (b, blk) in vals.chunks(32).enumerate() {
+            let mut sum = 0.0f32;
+            for &x in blk {
+                sum += x.abs();
+            }
+            let scale = sum / blk.len() as f32;
+            for (k, &x) in blk.iter().enumerate() {
+                let want = if x >= 0.0 { scale } else { -scale };
+                assert_eq!(dec[b * 32 + k].to_bits(), want.to_bits(), "lane {}", b * 32 + k);
+            }
+        }
+    }
+
+    #[test]
+    fn sign_error_feedback_integrates_to_the_signal() {
+        // Repeatedly EF-encoding the same vector: the running mean of the
+        // decodes converges to the vector (each message is 1-bit lossy,
+        // the stream is not). Tolerance calibrated on the reference
+        // implementation; the bound is distribution-insensitive.
+        let vals = randvec(256, 11);
+        let codec = SignEfCodec { block: 8 };
+        let mut residual = vec![0.0f32; vals.len()];
+        let mut acc = vec![0.0f64; vals.len()];
+        let rounds = 200;
+        for _ in 0..rounds {
+            let dec = codec.decode(&codec.encode(&vals, Some(&mut residual)));
+            for (a, &d) in acc.iter_mut().zip(&dec) {
+                *a += d as f64;
+            }
+        }
+        let mut err2 = 0.0f64;
+        let mut norm2 = 0.0f64;
+        for (a, &v) in acc.iter().zip(&vals) {
+            let d = a / rounds as f64 - v as f64;
+            err2 += d * d;
+            norm2 += v as f64 * v as f64;
+        }
+        let rel = (err2 / norm2).sqrt();
+        assert!(rel < 0.08, "EF mean-decode error {rel} too large");
+        // Without EF the per-message error does NOT integrate away.
+        let dec = codec.decode(&codec.encode(&vals, None));
+        let mut raw2 = 0.0f64;
+        for (&d, &v) in dec.iter().zip(&vals) {
+            raw2 += (d - v) as f64 * (d - v) as f64;
+        }
+        assert!((raw2 / norm2).sqrt() > rel * 3.0, "EF did not help");
+    }
+
+    #[test]
+    fn q8_error_bounded_by_half_step() {
+        let vals = randvec(300, 3);
+        let codec = BlockQ8Codec { block: 64 };
+        let dec = codec.decode(&codec.encode(&vals, None));
+        for (b, blk) in vals.chunks(64).enumerate() {
+            let mut amax = 0.0f32;
+            for &x in blk {
+                amax = amax.max(x.abs());
+            }
+            let step = amax / 127.0;
+            for (k, (&x, &d)) in blk.iter().zip(&dec[b * 64..]).enumerate() {
+                assert!(
+                    (x - d).abs() <= 0.5001 * step,
+                    "lane {}: {x} -> {d} (step {step})",
+                    b * 64 + k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_all_zero_block_stays_zero() {
+        let codec = BlockQ8Codec { block: 16 };
+        let dec = codec.decode(&codec.encode(&[0.0; 40], None));
+        assert_eq!(dec, vec![0.0; 40]);
+    }
+
+    #[test]
+    fn none_mode_is_exact_passthrough() {
+        let p = plan(CompressMode::None, 64, 90, 96);
+        let mut grad = randvec(90, 5);
+        grad.resize(96, 0.0);
+        let enc = p.encode_leaf(grad.clone(), None);
+        assert!(p.leaf_matches(&enc));
+        assert_eq!(p.wire_bytes(&enc), 4 * 96);
+        assert_eq!(p.into_grad(enc), grad);
+    }
+
+    #[test]
+    fn split_leaf_reconstructs_with_small_error_and_zero_padding() {
+        let p = plan(CompressMode::Split, 32, 90, 96);
+        let mut grad = randvec(90, 9);
+        grad.resize(96, 0.0);
+        let enc = p.encode_leaf(grad.clone(), None);
+        assert!(p.leaf_matches(&enc));
+        let dec = p.into_grad(enc);
+        assert_eq!(dec.len(), 96);
+        for (lane, &v) in dec.iter().enumerate().skip(90) {
+            assert_eq!(v, 0.0, "padding lane {lane} moved");
+        }
+        // State-full lanes round-trip within the q8 half-step.
+        for lane in (0..90).step_by(3) {
+            assert!((dec[lane] - grad[lane]).abs() < 0.1, "full lane {lane}");
+        }
+    }
+
+    #[test]
+    fn split_wire_bytes_shrink_at_least_3x() {
+        let p = plan(CompressMode::Split, 256, 4000, 4096);
+        let grad = {
+            let mut g = randvec(4000, 1);
+            g.resize(4096, 0.0);
+            g
+        };
+        let raw = plan(CompressMode::None, 256, 4000, 4096);
+        let dense = p.wire_bytes(&raw.encode_leaf(grad.clone(), None));
+        let split = p.wire_bytes(&p.encode_leaf(grad.clone(), None));
+        assert!(
+            dense >= 3 * split,
+            "leaf message only shrank {dense}B -> {split}B (< 3x)"
+        );
+        // Interior messages (q8 on both groups) are compressed too.
+        let a = p.encode_leaf(grad.clone(), None);
+        let b = p.encode_leaf(grad.clone(), None);
+        let interior = p.wire_bytes(&p.combine(a, b));
+        assert!(dense >= 3 * interior, "interior message {interior}B not 3x under {dense}B");
+    }
+
+    #[test]
+    fn combine_is_deterministic_and_tracks_the_sum() {
+        let p = plan(CompressMode::Split, 16, 120, 128);
+        let mk = |seed| {
+            let mut g = randvec(120, seed);
+            g.resize(128, 0.0);
+            g
+        };
+        let (ga, gb) = (mk(21), mk(22));
+        let c1 = p.combine(p.encode_leaf(ga.clone(), None), p.encode_leaf(gb.clone(), None));
+        let c2 = p.combine(p.encode_leaf(ga.clone(), None), p.encode_leaf(gb.clone(), None));
+        assert_eq!(c1, c2, "combine not deterministic");
+        let dec = p.into_grad(c1);
+        let mut err2 = 0.0f64;
+        let mut norm2 = 0.0f64;
+        for i in 0..120 {
+            let want = ga[i] + gb[i];
+            err2 += (dec[i] - want) as f64 * (dec[i] - want) as f64;
+            norm2 += want as f64 * want as f64;
+        }
+        // Sign-compressed free lanes dominate the error; the EF residual
+        // (absent here: single shot) bounds it over time, not per message.
+        assert!(err2 / norm2 < 2.0, "combined decode unrelated to the sum");
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed encoded-grad variants")]
+    fn mixed_variants_panic() {
+        let p = plan(CompressMode::Split, 16, 30, 32);
+        let dense = EncodedGrad::Dense(vec![0.0; 32]);
+        let split = p.encode_leaf(vec![0.0f32; 32], None);
+        p.combine(dense, split);
+    }
+
+    #[test]
+    fn residual_len_follows_mode() {
+        for (mode, expect_ef) in [
+            (CompressMode::None, false),
+            (CompressMode::SignEf, true),
+            (CompressMode::Q8, false),
+            (CompressMode::Split, true),
+        ] {
+            let p = plan(mode, 16, 90, 96);
+            assert_eq!(p.residual_len() > 0, expect_ef, "{mode:?}");
+        }
+    }
+}

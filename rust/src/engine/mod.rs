@@ -13,38 +13,55 @@
 //!    grouping is keyed by micro-batch index, never by completion order,
 //!    so the reduced gradient has the same bits for any worker count,
 //!    thread interleaving, or injected straggler delay.
-//! 3. The FRUGAL update is lane-local (Adam on masked lanes, signSGD on
+//! 3. Gradients can travel the tree **compressed** ([`compress`]): the
+//!    `[parallel.compress]` config / `--compress` flag picks a
+//!    deterministic codec per FRUGAL lane group — 1-bit sign +
+//!    error-feedback for the state-free lanes (whose update only
+//!    consumes the sign), blockwise 8-bit absmax for the state-full
+//!    lanes — and every tree node decodes, adds, and re-encodes, so all
+//!    edges carry compressed payloads. Within a fixed codec the
+//!    `--workers 1 ≡ --workers N` bit-identity is preserved: codecs are
+//!    pure functions and EF residuals are keyed by micro-batch slot,
+//!    never by worker.
+//! 4. The FRUGAL update is lane-local (Adam on masked lanes, signSGD on
 //!    the rest — the `frugal_update` kernel semantics), so the state-full
 //!    moments are **sharded** ZeRO-style ([`shard`]): each worker holds
 //!    `ceil(K/N)` lanes' worth of m/v, updates its own lanes, and the
 //!    new values are gathered back into the replicated flat vector.
-//! 4. Every `update_freq` steps the subspace is re-selected through the
+//! 5. Every `update_freq` steps the subspace is re-selected through the
 //!    shared [`MaskBuilder`] and all shard state is released + fresh
-//!    (the paper's state-reset semantics), which doubles as the shard
-//!    lifecycle boundary — no cross-worker state migration exists.
+//!    (the paper's state-reset semantics), which doubles as the shard —
+//!    and EF-residual — lifecycle boundary: no cross-worker state
+//!    migration exists.
 //!
-//! Submodules: [`allreduce`] (the deterministic tree), [`shard`] (state
-//! partitioner + shard update kernels), [`refmodel`] (a pure-Rust
+//! Submodules: [`allreduce`] (the deterministic tree), [`compress`] (the
+//! split-aware codecs + per-round plan), [`shard`] (state partitioner,
+//! shard update kernels, EF residual bank), [`refmodel`] (a pure-Rust
 //! gradient source so everything runs without PJRT artifacts), and
 //! [`orchestrator`] (the round-based driver behind `frugal pretrain
 //! --workers N`).
 
 pub mod allreduce;
+pub mod compress;
 pub mod orchestrator;
 pub mod refmodel;
 pub mod shard;
 
-pub use allreduce::{tree_reduce, ReduceTree};
+pub use allreduce::{tree_reduce, tree_reduce_with, ReduceTree};
+pub use compress::{
+    BlockQ8Codec, CompressCfg, CompressMode, CompressPlan, EncodedGrad, GradCodec, NoneCodec,
+    Payload, SignEfCodec, WireStats,
+};
 pub use orchestrator::{Orchestrator, RoundReport};
 pub use refmodel::{RefLm, RefLmCfg};
-pub use shard::ShardPlan;
+pub use shard::{ResidualBank, ShardPlan};
 
 use std::sync::mpsc;
 use std::time::Duration;
 
 use crate::coordinator::clip::clip_global_norm;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::subspace::{statefree_lanes, statefull_lanes, MaskBuilder};
+use crate::coordinator::subspace::{lane_partition, MaskBuilder};
 use crate::coordinator::LrSchedule;
 use crate::optim::adamw::{AdamCfg, AdamState};
 use crate::train::SubspaceClock;
@@ -92,6 +109,10 @@ pub struct ParallelCfg {
     /// Run workers on OS threads (true) or as logical workers on the
     /// caller thread (false). Either way the result is bit-identical.
     pub threaded: bool,
+    /// Reduce-tree gradient compression (`[parallel.compress]` section /
+    /// `--compress`). Codecs are deterministic, so bit-identity across
+    /// worker counts holds within any fixed mode.
+    pub compress: CompressCfg,
 }
 
 impl Default for ParallelCfg {
@@ -103,6 +124,7 @@ impl Default for ParallelCfg {
             straggler_ms: 0,
             timeout_ms: 0,
             threaded: true,
+            compress: CompressCfg::default(),
         }
     }
 }
@@ -151,8 +173,10 @@ impl Sources {
     }
 }
 
-/// What one worker sends back per micro-batch.
-type MicroResult = (usize, usize, Result<(f32, Vec<f32>)>);
+/// What one worker sends back per micro-batch: the slot index, token
+/// count, and the loss + **encoded** gradient (the leaf message — the
+/// worker-side encode is the compressed wire hop).
+type MicroResult = (usize, usize, Result<(f32, EncodedGrad)>);
 
 /// The data-parallel FRUGAL trainer.
 pub struct Engine {
@@ -167,6 +191,12 @@ pub struct Engine {
     free_plan: ShardPlan,
     /// Per-worker Adam moments over `plan.lanes_of(w)`.
     states: Vec<AdamState>,
+    /// Per-round codec assignment over the mask's lane groups.
+    cplan: CompressPlan,
+    /// Per-slot EF residuals (SignEf transport state; reset each round).
+    residuals: ResidualBank,
+    wire_bytes: u64,
+    wire_dense_bytes: u64,
     clock: SubspaceClock,
     round: u64,
     reports: Vec<RoundReport>,
@@ -185,6 +215,7 @@ impl Engine {
         let padded = mask_builder.layout().padded_size;
         anyhow::ensure!(cfg.parallel.workers >= 1, "parallel.workers must be >= 1");
         anyhow::ensure!(cfg.parallel.grad_accum >= 1, "parallel.grad_accum must be >= 1");
+        anyhow::ensure!(cfg.parallel.compress.block >= 1, "parallel.compress.block must be >= 1");
         anyhow::ensure!(
             sources.len() == cfg.parallel.workers,
             "need one gradient source per worker ({} sources for {} workers)",
@@ -217,6 +248,10 @@ impl Engine {
             plan: ShardPlan::default(),
             free_plan: ShardPlan::default(),
             states: Vec::new(),
+            cplan: CompressPlan::default(),
+            residuals: ResidualBank::default(),
+            wire_bytes: 0,
+            wire_dense_bytes: 0,
             clock,
             round: 0,
             reports: Vec::new(),
@@ -244,6 +279,11 @@ impl Engine {
         &self.plan
     }
 
+    /// The current round's codec assignment.
+    pub fn compress_plan(&self) -> &CompressPlan {
+        &self.cplan
+    }
+
     /// Completed + in-progress round reports.
     pub fn reports(&self) -> &[RoundReport] {
         &self.reports
@@ -260,20 +300,42 @@ impl Engine {
         self.states.iter().map(|s| s.floats()).collect()
     }
 
+    /// Total EF-residual floats currently allocated across all workers
+    /// (the compression codec's transport-state overhead).
+    pub fn residual_floats(&self) -> usize {
+        self.residuals.floats()
+    }
+
+    /// Bytes shipped over reduce-tree edges so far (encoded).
+    pub fn wire_bytes_total(&self) -> u64 {
+        self.wire_bytes
+    }
+
+    /// What the same reduce-tree traffic would have cost at raw fp32.
+    pub fn wire_dense_bytes_total(&self) -> u64 {
+        self.wire_dense_bytes
+    }
+
     /// Start a new round: re-select the subspace, release all shard
-    /// state, re-partition the fresh state-full lane set.
+    /// state (Adam moments *and* EF residuals), re-partition the fresh
+    /// lane sets, and rebuild the codec plan over them.
     fn begin_round(&mut self) {
         self.round += 1;
         self.mask = self.mask_builder.advance();
         let flat_size = self.mask_builder.layout().flat_size;
+        let padded = self.mask_builder.layout().padded_size;
         let workers = self.cfg.parallel.workers;
         let gran = self.cfg.parallel.shard_granularity;
-        self.plan = ShardPlan::partition(statefull_lanes(&self.mask, flat_size), workers, gran);
-        self.free_plan =
-            ShardPlan::partition(statefree_lanes(&self.mask, flat_size), workers, gran);
+        let (full, free) = lane_partition(&self.mask, flat_size);
+        self.plan = ShardPlan::partition(full.clone(), workers, gran);
+        self.free_plan = ShardPlan::partition(free.clone(), workers, gran);
+        self.cplan = CompressPlan::new(self.cfg.parallel.compress, full, free, padded);
         // Release (drop) previous shards, allocate fresh zeroed moments —
-        // the paper's state reset on subspace change.
+        // the paper's state reset on subspace change. The EF residuals
+        // are defined over the (changed) state-free lane set, so they
+        // reset on the same boundary.
         self.states = (0..workers).map(|w| AdamState::new(self.plan.shard_len(w))).collect();
+        self.residuals.reset(workers, self.cfg.parallel.grad_accum, self.cplan.residual_len());
         self.reports.push(RoundReport::new(self.round, self.clock.step(), &self.plan));
     }
 
@@ -292,56 +354,81 @@ impl Engine {
         let nw = self.cfg.parallel.workers;
         let padded = self.mask_builder.layout().padded_size;
 
-        // ---- gradient phase: compute M micro-batch grads, tree-reduce.
+        // ---- gradient phase: compute M micro-batch grads, encode each
+        // as a leaf message, tree-reduce (decode-combine-reencode).
         let use_threads = self.cfg.parallel.threaded
             && nw > 1
             && matches!(self.sources, Sources::Threaded(_));
-        let (loss_sum, mut grad, tokens_total, timeouts) = if use_threads {
+        let (loss_sum, mut grad, tokens_total, timeouts, wire) = if use_threads {
             let straggler_ms = self.cfg.parallel.straggler_ms;
             let straggler_worker = (self.round as usize + nw - 1) % nw;
             let timeout_ms = self.cfg.parallel.timeout_ms;
             let flat: &[f32] = &self.flat;
+            let cplan: &CompressPlan = &self.cplan;
             let Sources::Threaded(srcs) = &mut self.sources else { unreachable!() };
+            let banks = self.residuals.per_worker_mut();
+            assert_eq!(banks.len(), nw, "residual bank not sized to the worker count");
             let (tx, rx) = mpsc::channel::<MicroResult>();
             std::thread::scope(|scope| {
-                for (w, src) in srcs.iter_mut().enumerate() {
+                for ((w, src), wres) in srcs.iter_mut().enumerate().zip(banks.iter_mut()) {
                     let tx = tx.clone();
                     scope.spawn(move || {
                         let mut j = w;
+                        let mut local = 0usize;
                         while j < m {
                             if straggler_ms > 0 && w == straggler_worker {
                                 std::thread::sleep(Duration::from_millis(straggler_ms));
                             }
                             let tokens = batch_fn(step * m as u64 + j as u64);
                             let n_tok = tokens.len();
-                            let res = src.loss_and_grad(flat, &tokens);
+                            let res = src.loss_and_grad(flat, &tokens).and_then(|(loss, grad)| {
+                                    anyhow::ensure!(
+                                        grad.len() == padded,
+                                        "micro-batch {j} gradient has {} lanes, expected \
+                                         {padded}",
+                                        grad.len()
+                                    );
+                                    // Slot j's EF residual lives at local
+                                    // index j/N of this worker's bank.
+                                    let slot = wres.get_mut(local).map(|r| r.as_mut_slice());
+                                    Ok((loss, cplan.encode_leaf(grad, slot)))
+                                });
                             // A send error means the collector bailed;
                             // just stop producing.
                             if tx.send((j, n_tok, res)).is_err() {
                                 return;
                             }
                             j += nw;
+                            local += 1;
                         }
                     });
                 }
                 drop(tx);
-                collect_micro_grads(&rx, m, padded, timeout_ms)
+                collect_micro_grads(cplan, &rx, m, timeout_ms)
             })?
         } else {
             // Logical workers: compute and feed the tree one micro-batch
             // at a time — only O(log m) partial sums are ever alive, so
             // peak memory stays far below m full gradients.
-            let mut acc = MicroAccumulator::new(m, padded);
+            let mut acc = MicroAccumulator::new(&self.cplan, m);
             for j in 0..m {
                 let tokens = batch_fn(step * m as u64 + j as u64);
                 let n_tok = tokens.len();
                 let (loss, grad) =
                     self.sources.get_mut(j % nw).loss_and_grad(&self.flat, &tokens)?;
-                acc.push(j, n_tok, loss, grad)?;
+                anyhow::ensure!(
+                    grad.len() == padded,
+                    "micro-batch {j} gradient has {} lanes, expected {padded}",
+                    grad.len()
+                );
+                let enc = self.cplan.encode_leaf(grad, self.residuals.slot_mut(j));
+                acc.push(j, n_tok, loss, enc)?;
             }
-            let (loss, grad, tokens_total) = acc.finish()?;
-            (loss, grad, tokens_total, 0)
+            let (loss, grad, tokens_total, wire) = acc.finish()?;
+            (loss, grad, tokens_total, 0, wire)
         };
+        self.wire_bytes += wire.bytes;
+        self.wire_dense_bytes += wire.dense_bytes;
 
         // Mean over the global batch — the same scale at any worker count.
         let inv = 1.0 / m as f32;
@@ -432,6 +519,8 @@ impl Engine {
             report.steps += 1;
             report.loss_sum += loss as f64;
             report.straggler_timeouts += timeouts;
+            report.wire_bytes += wire.bytes;
+            report.wire_dense_bytes += wire.dense_bytes;
         }
         self.metrics.record(step + 1, loss, lr as f64, tokens_total as u64);
         Ok(loss)
@@ -454,43 +543,63 @@ impl Engine {
 }
 
 /// Incremental gradient/loss accumulator over the deterministic tree:
-/// feed micro-batch results as they become available; only O(log m)
-/// partial sums are alive at any moment.
-struct MicroAccumulator {
-    gtree: ReduceTree,
-    ltree: ReduceTree,
-    grad_root: Option<Vec<f32>>,
+/// feed encoded micro-batch results as they become available; only
+/// O(log m) partial messages are alive at any moment. Gradient leaves
+/// combine through the round's [`CompressPlan`]
+/// (decode-combine-reencode); losses stay raw fp32 (one float). The
+/// accumulator also meters the wire: every leaf send and every interior
+/// combine output is one tree-edge message.
+struct MicroAccumulator<'p> {
+    plan: &'p CompressPlan,
+    gtree: ReduceTree<EncodedGrad>,
+    ltree: ReduceTree<Vec<f32>>,
+    grad_root: Option<EncodedGrad>,
     loss_root: Option<Vec<f32>>,
     tokens_total: usize,
     received: usize,
-    padded: usize,
+    wire: WireStats,
 }
 
-impl MicroAccumulator {
-    fn new(m: usize, padded: usize) -> MicroAccumulator {
+impl<'p> MicroAccumulator<'p> {
+    fn new(plan: &'p CompressPlan, m: usize) -> MicroAccumulator<'p> {
         MicroAccumulator {
+            plan,
             gtree: ReduceTree::new(m),
             ltree: ReduceTree::new(m),
             grad_root: None,
             loss_root: None,
             tokens_total: 0,
             received: 0,
-            padded,
+            wire: WireStats::default(),
         }
     }
 
-    fn push(&mut self, j: usize, n_tok: usize, loss: f32, grad: Vec<f32>) -> Result<()> {
+    fn push(&mut self, j: usize, n_tok: usize, loss: f32, enc: EncodedGrad) -> Result<()> {
         anyhow::ensure!(
-            grad.len() == self.padded,
-            "micro-batch {j} gradient has {} lanes, expected {}",
-            grad.len(),
-            self.padded
+            self.plan.leaf_matches(&enc),
+            "micro-batch {j} leaf message does not match the round's compression plan"
         );
         self.tokens_total += n_tok;
         self.received += 1;
-        if let Some(root) = self.gtree.push(j, grad) {
+        let dense = 4 * self.plan.padded_size() as u64;
+        self.wire.bytes += self.plan.wire_bytes(&enc) as u64;
+        self.wire.messages += 1;
+        self.wire.dense_bytes += dense;
+        let plan = self.plan;
+        let mut up_bytes = 0u64;
+        let mut up_msgs = 0u64;
+        let root = self.gtree.push_with(j, enc, &mut |a, b| {
+            let parent = plan.combine(a, b);
+            up_bytes += plan.wire_bytes(&parent) as u64;
+            up_msgs += 1;
+            parent
+        });
+        if let Some(root) = root {
             self.grad_root = Some(root);
         }
+        self.wire.bytes += up_bytes;
+        self.wire.messages += up_msgs;
+        self.wire.dense_bytes += up_msgs * dense;
         if let Some(root) = self.ltree.push(j, vec![loss]) {
             self.loss_root = Some(root);
         }
@@ -501,23 +610,24 @@ impl MicroAccumulator {
         self.received >= self.gtree.leaves()
     }
 
-    fn finish(self) -> Result<(f32, Vec<f32>, usize)> {
-        let grad = self.grad_root.expect("grad tree incomplete");
+    fn finish(self) -> Result<(f32, Vec<f32>, usize, WireStats)> {
+        let enc = self.grad_root.expect("grad tree incomplete");
+        let grad = self.plan.into_grad(enc);
         let loss = self.loss_root.expect("loss tree incomplete")[0];
-        Ok((loss, grad, self.tokens_total))
+        Ok((loss, grad, self.tokens_total, self.wire))
     }
 }
 
-/// Drain `m` micro-batch results from `rx`, tree-reducing gradients and
-/// losses by micro-batch index. Returns (loss_sum, grad_sum,
-/// token_count, timeout_events).
+/// Drain `m` micro-batch results from `rx`, tree-reducing encoded
+/// gradients and raw losses by micro-batch index. Returns (loss_sum,
+/// grad_sum, token_count, timeout_events, wire_stats).
 fn collect_micro_grads(
+    plan: &CompressPlan,
     rx: &mpsc::Receiver<MicroResult>,
     m: usize,
-    padded: usize,
     timeout_ms: u64,
-) -> Result<(f32, Vec<f32>, usize, u64)> {
-    let mut acc = MicroAccumulator::new(m, padded);
+) -> Result<(f32, Vec<f32>, usize, u64, WireStats)> {
+    let mut acc = MicroAccumulator::new(plan, m);
     let mut timeouts = 0u64;
     while !acc.done() {
         let (j, n_tok, res) = if timeout_ms > 0 {
@@ -538,9 +648,9 @@ fn collect_micro_grads(
                                 acc.received)
             })?
         };
-        let (loss, grad) = res?;
-        acc.push(j, n_tok, loss, grad)?;
+        let (loss, enc) = res?;
+        acc.push(j, n_tok, loss, enc)?;
     }
-    let (loss, grad, tokens_total) = acc.finish()?;
-    Ok((loss, grad, tokens_total, timeouts))
+    let (loss, grad, tokens_total, wire) = acc.finish()?;
+    Ok((loss, grad, tokens_total, timeouts, wire))
 }

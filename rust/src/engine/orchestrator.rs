@@ -32,6 +32,11 @@ pub struct RoundReport {
     /// Receive-timeout events counted while waiting on workers
     /// (straggler detection; informational — nothing is dropped).
     pub straggler_timeouts: u64,
+    /// Bytes shipped over reduce-tree edges this round (encoded — see
+    /// `engine::compress`).
+    pub wire_bytes: u64,
+    /// What the same tree traffic would have cost at raw fp32.
+    pub wire_dense_bytes: u64,
 }
 
 impl RoundReport {
@@ -44,6 +49,8 @@ impl RoundReport {
             statefull_lanes: plan.total_lanes(),
             max_shard_lanes: plan.max_shard_len(),
             straggler_timeouts: 0,
+            wire_bytes: 0,
+            wire_dense_bytes: 0,
         }
     }
 
@@ -52,6 +59,16 @@ impl RoundReport {
             f64::NAN
         } else {
             self.loss_sum / self.steps as f64
+        }
+    }
+
+    /// Compression factor of the round's reduce-tree traffic (1.0 when
+    /// uncompressed or before any step completed).
+    pub fn wire_reduction(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.wire_dense_bytes as f64 / self.wire_bytes as f64
         }
     }
 }
@@ -123,11 +140,12 @@ impl Orchestrator {
 }
 
 fn print_round(r: &RoundReport) {
+    let wire_kb = r.wire_bytes as f64 / r.steps.max(1) as f64 / 1024.0;
     println!(
         "round {:>4}  steps {:>4}  mean-loss {:.4}  statefull {:>8} lanes  \
-         max-shard {:>7}  timeouts {}",
+         max-shard {:>7}  wire {:>8.1}KB/step (x{:.1} vs fp32)  timeouts {}",
         r.round, r.steps, r.mean_loss(), r.statefull_lanes, r.max_shard_lanes,
-        r.straggler_timeouts
+        wire_kb, r.wire_reduction(), r.straggler_timeouts
     );
 }
 
@@ -196,6 +214,10 @@ mod tests {
             assert!(r.mean_loss().is_finite());
             assert!(r.statefull_lanes > 0);
             assert!(r.max_shard_lanes <= r.statefull_lanes);
+            // Uncompressed default: the wire is metered but not reduced.
+            assert!(r.wire_bytes > 0, "round {} shipped no tree traffic", r.round);
+            assert_eq!(r.wire_bytes, r.wire_dense_bytes);
+            assert!((r.wire_reduction() - 1.0).abs() < 1e-12);
         }
     }
 

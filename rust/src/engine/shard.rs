@@ -92,6 +92,70 @@ pub fn sign_shard_update(lanes: &[u32], flat: &[f32], grad: &[f32], lr_free: f32
     p
 }
 
+/// Per-worker error-feedback residual buffers, keyed by micro-batch slot.
+///
+/// The `SignEf` codec's residual is persistent worker-side transport
+/// state: slot `j`'s buffer accumulates the encode error of micro-batch
+/// stream `j` and is folded into the next encode of the same slot. The
+/// bank keys storage by **slot**, not by worker — worker `j % N` owns
+/// slot `j` at local index `j / N` — so every buffer's contents are a
+/// pure function of the micro-batch index and never of the worker count.
+/// That is what keeps `--workers 1 ≡ --workers N` bit-identical under
+/// compression.
+///
+/// Like the Adam shards, residuals are released and re-zeroed on every
+/// subspace re-selection: the state-free lane set they are defined over
+/// changes with the mask (the paper's state-reset semantics, extended to
+/// transport state).
+#[derive(Clone, Debug, Default)]
+pub struct ResidualBank {
+    /// `per_worker[w][j / workers]` is slot `j`'s buffer (`j ≡ w mod N`).
+    per_worker: Vec<Vec<Vec<f32>>>,
+}
+
+impl ResidualBank {
+    /// Release all buffers and allocate fresh zeroed ones: one `len`-float
+    /// buffer per micro-batch slot in `0..slots`. `len == 0` disables
+    /// error feedback — every worker keeps an empty slot list (but the
+    /// bank still has one entry per worker, so per-worker iteration
+    /// always matches the worker count).
+    pub fn reset(&mut self, workers: usize, slots: usize, len: usize) {
+        assert!(workers >= 1, "need at least one worker");
+        self.per_worker = (0..workers)
+            .map(|w| {
+                let owned = if len == 0 { 0 } else { slots.saturating_sub(w).div_ceil(workers) };
+                (0..owned).map(|_| vec![0.0f32; len]).collect()
+            })
+            .collect();
+    }
+
+    /// Mutable per-worker slot lists — disjoint, one per OS thread.
+    pub fn per_worker_mut(&mut self) -> &mut [Vec<Vec<f32>>] {
+        &mut self.per_worker
+    }
+
+    /// Slot `j`'s buffer (logical-worker path); `None` when error
+    /// feedback is off or the bank has not been reset yet.
+    pub fn slot_mut(&mut self, j: usize) -> Option<&mut [f32]> {
+        let n = self.per_worker.len();
+        if n == 0 {
+            return None;
+        }
+        self.per_worker[j % n].get_mut(j / n).map(|v| v.as_mut_slice())
+    }
+
+    /// Total residual floats across all workers.
+    pub fn floats(&self) -> usize {
+        self.per_worker.iter().map(|w| w.iter().map(|s| s.len()).sum::<usize>()).sum()
+    }
+
+    /// Residual floats held by each worker — the sharding criterion's
+    /// transport-state counterpart: `ceil(slots/N)` buffers per worker.
+    pub fn per_worker_floats(&self) -> Vec<usize> {
+        self.per_worker.iter().map(|w| w.iter().map(|s| s.len()).sum()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +255,52 @@ mod tests {
         let grad = vec![0.5f32, -0.5, 0.0];
         let out = sign_shard_update(&[0, 1, 2], &flat, &grad, 0.25);
         assert_eq!(out, vec![0.75, 1.25, 1.0]);
+    }
+
+    #[test]
+    fn residual_bank_covers_every_slot_once() {
+        for workers in [1usize, 2, 3, 4, 8] {
+            for slots in [1usize, 2, 4, 6, 9] {
+                let mut bank = ResidualBank::default();
+                bank.reset(workers, slots, 5);
+                // Every slot resolves to a buffer; marking each shows the
+                // buffers are distinct (slot j owns exactly one).
+                for j in 0..slots {
+                    let buf = bank.slot_mut(j).expect("slot missing");
+                    assert_eq!(buf.len(), 5);
+                    assert_eq!(buf[0], 0.0, "slot {j} buffer reused (N={workers})");
+                    buf[0] = 1.0 + j as f32;
+                }
+                assert_eq!(bank.floats(), slots * 5, "workers={workers} slots={slots}");
+                // Out-of-range slots (more workers than micro-batches)
+                // have no buffer.
+                assert!(bank.slot_mut(slots).is_none());
+                // Per-worker occupancy sums to the total and each worker
+                // holds ceil-or-floor(slots/N) buffers' worth.
+                let per = bank.per_worker_floats();
+                assert_eq!(per.len(), workers);
+                assert_eq!(per.iter().sum::<usize>(), slots * 5);
+                let ceil = slots.div_ceil(workers);
+                assert!(per.iter().all(|&f| f <= ceil * 5));
+            }
+        }
+    }
+
+    #[test]
+    fn residual_bank_len_zero_disables_ef_but_keeps_worker_rows() {
+        let mut bank = ResidualBank::default();
+        bank.reset(3, 8, 0);
+        assert_eq!(bank.per_worker_mut().len(), 3);
+        assert!(bank.slot_mut(0).is_none());
+        assert_eq!(bank.floats(), 0);
+    }
+
+    #[test]
+    fn residual_bank_reset_releases_state() {
+        let mut bank = ResidualBank::default();
+        bank.reset(2, 4, 3);
+        bank.slot_mut(1).unwrap()[2] = 7.0;
+        bank.reset(2, 4, 3);
+        assert_eq!(bank.slot_mut(1).unwrap()[2], 0.0, "reset must zero residuals");
     }
 }

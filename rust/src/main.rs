@@ -18,9 +18,10 @@ use std::path::{Path, PathBuf};
 use frugal::coordinator::metrics::perplexity;
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::data::{CorpusConfig, SyntheticCorpus};
-use frugal::engine::{Engine, EngineCfg, GradSource, Orchestrator, ParallelCfg, RefLm, RefLmCfg,
-                     Sources};
-use frugal::optim::memory::{fmt_gib, optimizer_state_bytes, ArchSpec, Method};
+use frugal::engine::{CompressMode, Engine, EngineCfg, GradSource, Orchestrator, ParallelCfg,
+                     RefLm, RefLmCfg, Sources};
+use frugal::optim::memory::{fmt_gib, lane_wire_bytes, optimizer_state_bytes, split_wire_report,
+                            ArchSpec, Method, WireCodec};
 use frugal::runtime::{Manifest, Runtime};
 use frugal::train::{FusedTrainer, GradTrainer, PjrtGradSource};
 use frugal::util::Prng;
@@ -35,6 +36,7 @@ USAGE:
                   [--lr F] [--rho F] [--update-freq N] [--seed N] [--fused]
                   [--log FILE] [--artifacts DIR]
                   [--workers N] [--grad-accum M] [--backend auto|ref|pjrt]
+                  [--compress none|sign-ef|q8|split] [--compress-block N]
                   [--straggler-ms N] [--timeout-ms N] [--sequential]
   frugal memory   [--model SCALE]
   frugal toy      [--steps N] [--rank R] [--update-freq T]
@@ -44,6 +46,11 @@ USAGE:
 channels, deterministic tree all-reduce, FRUGAL state sharded ceil(K/N)
 lanes per worker. The per-step loss trace is bit-identical for any N at a
 fixed --grad-accum (the global batch).
+
+`--compress` picks the reduce-tree codec per FRUGAL lane group: `split`
+ships state-free lanes as 1-bit signs (+ error feedback) and state-full
+lanes as blockwise 8-bit — the bit-identity across worker counts holds
+within any fixed codec.
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -170,6 +177,14 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             if args.has("sequential") {
                 let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
                 p.threaded = false;
+            }
+            if let Some(c) = args.get("compress") {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.compress.mode = CompressMode::parse(c)?;
+            }
+            if let Some(b) = args.get_u64("compress-block")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.compress.block = b.max(1) as usize;
             }
             // --backend alone also opts into the engine (it has no
             // meaning on the legacy paths and must not be ignored).
@@ -396,7 +411,7 @@ fn pretrain_parallel(mut cfg: TrainConfig, backend: &str) -> frugal::Result<()> 
 
     println!(
         "pretrain[engine]: optimizer={} workers={} grad_accum={} global_batch={} seqs \
-         rho={} T={} steps={} lr={}",
+         rho={} T={} steps={} lr={} compress={}",
         cfg.optimizer,
         pcfg.workers,
         pcfg.grad_accum,
@@ -404,7 +419,8 @@ fn pretrain_parallel(mut cfg: TrainConfig, backend: &str) -> frugal::Result<()> 
         cfg.rho,
         cfg.update_freq,
         cfg.steps,
-        cfg.lr
+        cfg.lr,
+        pcfg.compress.mode
     );
 
     let mask_builder = MaskBuilder::new(
@@ -437,6 +453,15 @@ fn pretrain_parallel(mut cfg: TrainConfig, backend: &str) -> frugal::Result<()> 
         orch.engine.state_floats(),
         per_worker.iter().max().copied().unwrap_or(0),
         orch.engine.plan().total_lanes()
+    );
+    let steps = orch.engine.global_step().max(1);
+    println!(
+        "reduce-tree wire: {} bytes/step encoded vs {} fp32 (x{:.1} reduction), \
+         EF residual {} f32s",
+        orch.engine.wire_bytes_total() / steps,
+        orch.engine.wire_dense_bytes_total() / steps,
+        orch.engine.wire_dense_bytes_total() as f64 / orch.engine.wire_bytes_total().max(1) as f64,
+        orch.engine.residual_floats()
     );
     if let Some(path) = &cfg.log_path {
         orch.engine.metrics.write_jsonl(Path::new(path))?;
@@ -475,6 +500,54 @@ fn memory_table(model: Option<&str>) -> frugal::Result<()> {
         }
         println!();
     }
+
+    // Reduce-tree compression accounting (engine `--compress`, analytic):
+    // bytes one leaf message costs on the wire per codec, at rho = 0.25
+    // with 256-lane scale blocks, vs the fp32 baseline.
+    let block = 256u64;
+    let rho = 0.25f64;
+    println!(
+        "\nReduce-tree message compression at rho={rho}, block={block} \
+         (engine --compress; reduction vs fp32):"
+    );
+    print!("{:<22}", "codec");
+    for scale in &scales {
+        print!(" {scale:>8}");
+    }
+    println!();
+    let codec_rows: Vec<(&str, WireCodec, WireCodec)> = vec![
+        ("none", WireCodec::F32, WireCodec::F32),
+        ("sign-ef (free lanes)", WireCodec::F32, WireCodec::Sign1 { block }),
+        ("q8 (full lanes)", WireCodec::Q8 { block }, WireCodec::F32),
+        ("split", WireCodec::Q8 { block }, WireCodec::Sign1 { block }),
+    ];
+    for (name, full_codec, free_codec) in codec_rows {
+        print!("{name:<22}");
+        for scale in &scales {
+            let arch = ArchSpec::paper_llama(scale)?;
+            let dense = 4 * arch.total_params();
+            let wire = lane_wire_bytes(arch.statefull_lanes(rho), full_codec)
+                + lane_wire_bytes(arch.statefree_lanes(rho), free_codec);
+            print!(" {:>7.2}x", dense as f64 / wire as f64);
+        }
+        println!();
+    }
+    print!("{:<22}", "split overheads");
+    for scale in &scales {
+        let arch = ArchSpec::paper_llama(scale)?;
+        let r = split_wire_report(&arch, rho, block);
+        // EF residual (fp32 per state-free lane, one buffer per
+        // micro-batch slot) + block scales, as a fraction of the bytes
+        // the codec removes from the wire.
+        let saved = r.dense_bytes - r.wire_bytes;
+        let overhead = 4 * r.residual_floats + r.scale_bytes;
+        print!(" {:>7.0}%", 100.0 * overhead as f64 / saved as f64);
+    }
+    println!();
+    println!(
+        "(split overheads = per-slot EF residual + block scales, relative to \
+         bytes-on-wire saved per message)"
+    );
     Ok(())
 }
 

@@ -31,6 +31,21 @@ impl std::fmt::Display for Timing {
     }
 }
 
+/// Summarize raw nanosecond samples into a [`Timing`].
+///
+/// Sorts with `f64::total_cmp`: a NaN sample (e.g. from a
+/// caller-computed derived metric) sorts after every number instead of
+/// panicking the comparator mid-bench the way
+/// `partial_cmp(..).unwrap()` did.
+pub fn summarize(mut samples: Vec<f64>) -> Timing {
+    assert!(!samples.is_empty(), "summarize needs at least one sample");
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mad = samples.iter().map(|s| (s - median).abs()).sum::<f64>() / samples.len() as f64;
+    Timing { median_ns: median, mean_ns: mean, mad_ns: mad, iters: samples.len() }
+}
+
 /// Time `f` with `warmup` unrecorded and `iters` recorded runs.
 pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
     for _ in 0..warmup {
@@ -42,11 +57,7 @@ pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median = samples[samples.len() / 2];
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    let mad = samples.iter().map(|s| (s - median).abs()).sum::<f64>() / samples.len() as f64;
-    Timing { median_ns: median, mean_ns: mean, mad_ns: mad, iters }
+    summarize(samples)
 }
 
 /// Render one machine-readable benchmark record as a JSON object line
@@ -71,6 +82,21 @@ pub fn json_record(bench: &str, label: &str, fields: &[(&str, f64)]) -> String {
     }
     out.push('}');
     out
+}
+
+/// Write [`json_record`] lines to `path` — the `BENCH_*.json` artifact
+/// format CI uploads to track the perf trajectory (one JSON object per
+/// line, parseable by `util::json`).
+pub fn write_json_records(
+    path: impl AsRef<std::path::Path>,
+    lines: &[String],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    for line in lines {
+        writeln!(f, "{line}")?;
+    }
+    Ok(())
 }
 
 /// Print a paper-style table: header row then aligned cells.
@@ -120,6 +146,37 @@ mod tests {
     fn throughput_math() {
         let t = Timing { median_ns: 1e9, mean_ns: 1e9, mad_ns: 0.0, iters: 1 };
         assert!((t.elements_per_s(1000) - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summarize_survives_nan_samples() {
+        // Regression: the old partial_cmp(..).unwrap() comparator
+        // panicked on any NaN sample. Under the total order NaN sorts
+        // last, so the median of a mostly-finite set stays finite.
+        let t = summarize(vec![3.0, f64::NAN, 1.0]);
+        assert_eq!(t.iters, 3);
+        assert!(t.median_ns.is_finite());
+        assert_eq!(t.median_ns, 3.0);
+        // All-finite behavior unchanged.
+        let t = summarize(vec![5.0, 1.0, 3.0]);
+        assert_eq!(t.median_ns, 3.0);
+        assert!((t.mean_ns - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_records_file_roundtrip() {
+        let path = std::env::temp_dir().join("frugal_bench_records_test.json");
+        let lines = vec![
+            json_record("b", "l1", &[("v", 1.0)]),
+            json_record("b", "l2", &[("v", 2.0)]),
+        ];
+        write_json_records(&path, &lines).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(crate::util::json::Json::parse(line).is_ok());
+        }
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -64,11 +64,15 @@ impl KvFile {
             };
             let key = format!("{prefix}{}", key.trim());
             let mut value = value.trim();
-            // strip trailing comment on unquoted values
-            if !value.starts_with('"') {
-                if let Some(idx) = value.find('#') {
-                    value = value[..idx].trim();
+            // Strip trailing comments: after the closing quote for quoted
+            // values (a '#' inside the quotes is data), anywhere for bare
+            // values.
+            if let Some(rest) = value.strip_prefix('"') {
+                if let Some(end) = rest.find('"') {
+                    value = &value[..end + 2];
                 }
+            } else if let Some(idx) = value.find('#') {
+                value = value[..idx].trim();
             }
             let value = if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
                 value[1..value.len() - 1].to_string()
@@ -165,5 +169,34 @@ after = 1
         let kv = KvFile::parse("[parallel]\n# all defaults\n").unwrap();
         assert!(kv.has_section("parallel"));
         assert!(kv.entries.is_empty());
+    }
+
+    #[test]
+    fn dotted_subsections_nest_keys() {
+        // The `[parallel.compress]` engine section: a dotted identifier
+        // header prefixes its keys with the full dotted path, and the
+        // parent section remains visible through the key prefix.
+        let text = r#"
+[parallel]
+workers = 4
+
+[parallel.compress]
+mode = "split"    # codec assignment
+block = 256
+"#;
+        let kv = KvFile::parse(text).unwrap();
+        assert_eq!(kv.get_u64("parallel.workers").unwrap(), Some(4));
+        assert_eq!(kv.get("parallel.compress.mode"), Some("split"));
+        assert_eq!(kv.get_u64("parallel.compress.block").unwrap(), Some(256));
+        // Inline comments after quoted values strip; '#' inside quotes is
+        // data.
+        let kv = KvFile::parse("name = \"a#b\"   # comment\n").unwrap();
+        assert_eq!(kv.get("name"), Some("a#b"));
+        assert!(kv.has_section("parallel"));
+        assert!(kv.has_section("parallel.compress"));
+        // A subsection alone still implies its parent via the key prefix.
+        let kv = KvFile::parse("[parallel.compress]\nmode = \"q8\"\n").unwrap();
+        assert!(kv.has_section("parallel"));
+        assert!(kv.has_section("parallel.compress"));
     }
 }

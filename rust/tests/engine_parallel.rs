@@ -10,7 +10,8 @@
 use frugal::coordinator::subspace::{statefull_lanes, MaskBuilder, SubspacePolicy};
 use frugal::coordinator::LrSchedule;
 use frugal::engine::{
-    Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg, ShardPlan, Sources,
+    CompressCfg, CompressMode, Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg,
+    ShardPlan, Sources,
 };
 use frugal::optim::adamw::AdamCfg;
 use frugal::optim::frugal::BlockPolicy;
@@ -215,4 +216,104 @@ fn engine_runs_are_reproducible() {
     let mut b = engine(2, parallel, true);
     assert_eq!(run(&mut a, 5), run(&mut b, 5));
     assert_eq!(bits(&a.flat), bits(&b.flat));
+}
+
+/// `[parallel]` config with compression mode `mode` (small scale blocks
+/// so several blocks exist at test sizes).
+fn compressed(mode: CompressMode) -> ParallelCfg {
+    ParallelCfg {
+        grad_accum: 4,
+        compress: CompressCfg { mode, block: 64 },
+        ..Default::default()
+    }
+}
+
+/// The headline invariant survives compression: within any fixed codec,
+/// the per-step loss trace and final parameters are bit-identical across
+/// worker counts and execution modes. 10 steps at T=4 cross two subspace
+/// re-selections, so codec plans and EF residuals rebuild mid-run.
+#[test]
+fn compressed_workers_are_bit_identical() {
+    for mode in [CompressMode::SignEf, CompressMode::Q8, CompressMode::Split] {
+        let mut e1 = engine(1, compressed(mode), true);
+        let t1 = run(&mut e1, 10);
+        for workers in [2usize, 4] {
+            for threaded in [false, true] {
+                let mut e = engine(workers, compressed(mode), threaded);
+                let t = run(&mut e, 10);
+                assert_eq!(t, t1, "{mode:?} workers={workers} threaded={threaded}");
+                assert_eq!(
+                    bits(&e.flat),
+                    bits(&e1.flat),
+                    "{mode:?} workers={workers} threaded={threaded}"
+                );
+            }
+        }
+    }
+}
+
+/// Compression under straggler skew: arrival order changes, bits don't.
+#[test]
+fn compressed_straggler_injection_does_not_change_bits() {
+    let fast = compressed(CompressMode::Split);
+    let slow = ParallelCfg { straggler_ms: 5, timeout_ms: 1, ..compressed(CompressMode::Split) };
+    let mut e_fast = engine(3, fast, true);
+    let mut e_slow = engine(3, slow, true);
+    assert_eq!(run(&mut e_fast, 4), run(&mut e_slow, 4));
+    assert_eq!(bits(&e_fast.flat), bits(&e_slow.flat));
+}
+
+/// Convergence parity (the acceptance bound): the split codec — 1-bit
+/// EF-sign on the state-free lanes, q8 on the state-full lanes — tracks
+/// the uncompressed run within 2% on the reference LM.
+#[test]
+fn split_codec_tracks_uncompressed_loss() {
+    let steps = 24;
+    let mut plain = engine(2, ParallelCfg { grad_accum: 4, ..Default::default() }, true);
+    let mut comp = engine(2, compressed(CompressMode::Split), true);
+    let mut lu = Vec::new();
+    let mut lc = Vec::new();
+    for _ in 0..steps {
+        lu.push(plain.step(&batch_fn).unwrap());
+        lc.push(comp.step(&batch_fn).unwrap());
+    }
+    let tail = |v: &[f32]| v[v.len() - 4..].iter().map(|&x| x as f64).sum::<f64>() / 4.0;
+    let (tu, tc) = (tail(&lu), tail(&lc));
+    let gap = (tc - tu).abs() / tu;
+    assert!(
+        gap <= 0.02,
+        "split-codec loss gap {:.3}% exceeds 2% (uncompressed {tu:.4}, split {tc:.4})",
+        100.0 * gap
+    );
+    assert!(lu.iter().chain(lc.iter()).all(|l| l.is_finite()));
+}
+
+/// Wire accounting: the split codec ships ≥ 3× fewer reduce-tree bytes
+/// than fp32, the uncompressed engine meters but does not reduce, and EF
+/// residual state exists only when a sign group is active.
+#[test]
+fn split_codec_cuts_wire_bytes_3x() {
+    let mut dense = engine(2, ParallelCfg { grad_accum: 4, ..Default::default() }, true);
+    let mut split = engine(2, compressed(CompressMode::Split), true);
+    for _ in 0..2 {
+        dense.step(&batch_fn).unwrap();
+        split.step(&batch_fn).unwrap();
+    }
+    assert_eq!(dense.wire_bytes_total(), dense.wire_dense_bytes_total());
+    assert_eq!(dense.residual_floats(), 0);
+    assert_eq!(split.wire_dense_bytes_total(), dense.wire_dense_bytes_total());
+    assert!(
+        dense.wire_bytes_total() >= 3 * split.wire_bytes_total(),
+        "split wire bytes {} not 3x under dense {}",
+        split.wire_bytes_total(),
+        dense.wire_bytes_total()
+    );
+    // EF residuals: one buffer per micro-batch slot, state-free lanes
+    // each, released and re-sized with the round's lane sets.
+    let free_lanes = split.compress_plan().residual_len();
+    assert!(free_lanes > 0);
+    assert_eq!(split.residual_floats(), 4 * free_lanes);
+    // Round reports carry the same accounting.
+    let report = split.reports().last().unwrap();
+    assert!(report.wire_reduction() >= 3.0);
 }

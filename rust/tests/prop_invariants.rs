@@ -5,7 +5,10 @@
 //! failing case prints its seed for reproduction.
 
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
-use frugal::engine::{tree_reduce, ReduceTree, ShardPlan};
+use frugal::engine::{
+    tree_reduce, tree_reduce_with, CompressCfg, CompressMode, CompressPlan, EncodedGrad,
+    GradCodec, ReduceTree, ShardPlan, SignEfCodec,
+};
 use frugal::optim::frugal::BlockPolicy;
 use frugal::optim::projection::randk_indices;
 use frugal::optim::{Layout, Role};
@@ -213,6 +216,121 @@ fn prop_tree_allreduce_exact_on_integers() {
             }
         }
         assert_eq!(tree_reduce(leaves), naive, "case {case}");
+    }
+}
+
+/// The encoded-payload tree (decode-combine-reencode through the round's
+/// compression plan) is bit-invariant to arrival-order permutation and
+/// worker count for every codec — the compression extension of the
+/// `workers=1 ≡ workers=N` invariant. Worker counts are exercised as
+/// round-robin arrival patterns (worker w owns slots w, w+N, ...; one
+/// worker races arbitrarily far ahead, and the reverse), plus random
+/// shuffles.
+#[test]
+fn prop_encoded_tree_arrival_and_worker_count_invariant() {
+    for case in 0..24u64 {
+        let mut rng = Prng::seed_from_u64(4000 + case);
+        let mode = CompressMode::ALL[case as usize % 4];
+        let flat = 32 + rng.range(0, 400);
+        let padded = flat + rng.range(0, 32);
+        let mut full = Vec::new();
+        let mut free = Vec::new();
+        for i in 0..flat as u32 {
+            if rng.f32() < 0.4 {
+                full.push(i);
+            } else {
+                free.push(i);
+            }
+        }
+        let cfg = CompressCfg { mode, block: 1 + rng.range(0, 100) };
+        let plan = CompressPlan::new(cfg, full, free, padded);
+        let m = 1 + rng.range(0, 12);
+        let leaves: Vec<EncodedGrad> = (0..m)
+            .map(|_| {
+                let grad: Vec<f32> = (0..padded)
+                    .map(|i| if i < flat { 0.1 * rng.normal() } else { 0.0 })
+                    .collect();
+                plan.encode_leaf(grad, None)
+            })
+            .collect();
+        let want: Vec<u32> = plan
+            .into_grad(tree_reduce_with(leaves.clone(), |a, b| plan.combine(a, b)))
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        let mut orders: Vec<Vec<usize>> = Vec::new();
+        for workers in [1usize, 2, 3, 8] {
+            // Worker w owns slots {w, w+N, ...}. Emit each worker's whole
+            // stream before the next worker's — the arrival pattern of one
+            // worker racing arbitrarily far ahead — and its reverse.
+            let mut order = Vec::new();
+            for w in 0..workers {
+                let mut j = w;
+                while j < m {
+                    order.push(j);
+                    j += workers;
+                }
+            }
+            let mut rev = order.clone();
+            rev.reverse();
+            orders.push(order);
+            orders.push(rev);
+        }
+        for _ in 0..3 {
+            let mut order: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut order);
+            orders.push(order);
+        }
+        for order in orders {
+            let mut tree = ReduceTree::new(m);
+            let mut root = None;
+            for &i in &order {
+                if let Some(r) =
+                    tree.push_with(i, leaves[i].clone(), &mut |a, b| plan.combine(a, b))
+                {
+                    root = Some(r);
+                }
+            }
+            let got: Vec<u32> = plan
+                .into_grad(root.expect("tree incomplete"))
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            assert_eq!(got, want, "case {case} mode {mode:?} order {order:?}");
+        }
+    }
+}
+
+/// SignEf encode→decode round-trips sign and block scale exactly: every
+/// decoded lane is bitwise ±(block's mean |value|) with the input's sign
+/// (zero counted positive).
+#[test]
+fn prop_sign_ef_roundtrip_exact() {
+    for case in 0..30u64 {
+        let mut rng = Prng::seed_from_u64(6000 + case);
+        let n = 1 + rng.range(0, 300);
+        let block = 1 + rng.range(0, 64);
+        let vals: Vec<f32> = (0..n).map(|_| 0.3 * rng.normal()).collect();
+        let codec = SignEfCodec { block };
+        let payload = codec.encode(&vals, None);
+        let dec = codec.decode(&payload);
+        assert_eq!(dec.len(), n, "case {case}");
+        for (b, blk) in vals.chunks(block).enumerate() {
+            let mut sum = 0.0f32;
+            for &x in blk {
+                sum += x.abs();
+            }
+            let scale = sum / blk.len() as f32;
+            for (k, &x) in blk.iter().enumerate() {
+                let want = if x >= 0.0 { scale } else { -scale };
+                assert_eq!(
+                    dec[b * block + k].to_bits(),
+                    want.to_bits(),
+                    "case {case} lane {}",
+                    b * block + k
+                );
+            }
+        }
     }
 }
 
