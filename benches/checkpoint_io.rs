@@ -1,0 +1,155 @@
+//! Checkpoint I/O throughput: save/load MB/s and bytes for the sharded
+//! snapshot subsystem on the reference LM, q8 vs raw moment codecs.
+//!
+//! Emits one JSON record per (codec, op) and writes them to
+//! `BENCH_checkpoint_io.json` (uploaded by the CI `bench-smoke` job with
+//! the other `BENCH_*.json` perf-trajectory artifacts).
+//!
+//! Asserts: raw snapshots round-trip bit-exactly, and q8 moment sections
+//! come in well under raw ones.
+//!
+//! Env knobs: FRUGAL_BENCH_STEPS (timed iterations per op, default 10).
+
+use frugal::ckpt::{self, MomentCodec};
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::engine::{
+    CompressCfg, CompressMode, Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg,
+    Sources,
+};
+use frugal::optim::adamw::AdamCfg;
+use frugal::optim::frugal::BlockPolicy;
+use frugal::util::bench::{json_record, print_table, time_fn, write_json_records};
+
+const WORKERS: usize = 2;
+const GRAD_ACCUM: usize = 4;
+
+fn build_engine(model: &RefLm) -> Engine {
+    let sources = Sources::Threaded(
+        (0..WORKERS).map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let mask_builder = MaskBuilder::new(
+        model.layout().clone(),
+        0.25,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        0,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg {
+            workers: WORKERS,
+            grad_accum: GRAD_ACCUM,
+            // split: EF residual slots exist, so snapshots carry every
+            // section kind the format defines.
+            compress: CompressCfg { mode: CompressMode::Split, block: 256 },
+            ..Default::default()
+        },
+        schedule: LrSchedule::ConstantWarmup { warmup: 0 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: 10,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    Engine::new(mask_builder, cfg, sources, model.init_flat(0)).unwrap()
+}
+
+fn main() -> frugal::Result<()> {
+    let iters: usize = std::env::var("FRUGAL_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    // A beefier reference LM than the default so the files are non-toy.
+    let model = RefLm::new(RefLmCfg {
+        vocab: 512,
+        d_model: 64,
+        d_ff: 128,
+        n_layers: 4,
+        seq_len: 64,
+        batch: 4,
+    });
+    let mut engine = build_engine(&model);
+    let batch_fn = |micro: u64| {
+        let mut rng = frugal::util::Prng::seed_from_u64(0xBE4C ^ micro);
+        (0..4 * 64).map(|_| rng.range(0, 512) as i32).collect::<Vec<i32>>()
+    };
+    // Mid-round (3 steps at T=10): moments and residuals are live, so
+    // the snapshot is as large as it gets.
+    for _ in 0..3 {
+        engine.step(&batch_fn)?;
+    }
+    let state = engine.capture_state()?;
+    println!(
+        "checkpoint_io: {} params ({} statefull lanes), workers={WORKERS}, \
+         {iters} timed iters/op",
+        model.layout().flat_size,
+        state.full_lanes.len()
+    );
+
+    let dir = std::env::temp_dir().join(format!("frugal_ckpt_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    let mut bytes_by_codec = Vec::new();
+    for codec in [MomentCodec::Raw, MomentCodec::Q8] {
+        let sub = dir.join(codec.as_str());
+        let report = ckpt::save(&sub, &state, codec, 256)?;
+        let save_t = time_fn(1, iters, || {
+            ckpt::save(&sub, &state, codec, 256).unwrap();
+        });
+        let load_t = time_fn(1, iters, || {
+            std::hint::black_box(ckpt::load(&sub).unwrap());
+        });
+        let loaded = ckpt::load(&sub)?;
+        if codec == MomentCodec::Raw {
+            // Raw snapshots are bit-exact.
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&loaded.flat), bits(&state.flat), "raw flat roundtrip");
+            assert_eq!(bits(&loaded.m), bits(&state.m), "raw m roundtrip");
+            assert_eq!(bits(&loaded.v), bits(&state.v), "raw v roundtrip");
+        }
+        assert_eq!(loaded.full_lanes, state.full_lanes, "{codec}: mask roundtrip");
+        bytes_by_codec.push((codec, report.bytes, report.moment_bytes));
+        let mb = report.bytes as f64 / (1 << 20) as f64;
+        let save_mb_s = mb / (save_t.median_ns / 1e9);
+        let load_mb_s = mb / (load_t.median_ns / 1e9);
+        rows.push(vec![
+            format!("{codec}"),
+            format!("{}", report.bytes),
+            format!("{}", report.moment_bytes),
+            format!("{save_mb_s:.0}"),
+            format!("{load_mb_s:.0}"),
+        ]);
+        for (op, t, mb_s) in [("save", &save_t, save_mb_s), ("load", &load_t, load_mb_s)] {
+            records.push(json_record(
+                "checkpoint_io",
+                &format!("codec={codec} op={op}"),
+                &[
+                    ("bytes", report.bytes as f64),
+                    ("moment_bytes", report.moment_bytes as f64),
+                    ("files", report.files as f64),
+                    ("ms", t.per_iter_ms()),
+                    ("mb_per_s", mb_s),
+                    ("statefull_lanes", state.full_lanes.len() as f64),
+                ],
+            ));
+            println!("{}", records.last().unwrap());
+        }
+    }
+    // q8 moment sections must come in well under raw (the whole point of
+    // the codec): > 3x smaller on the moment payloads.
+    let (_, _, raw_moments) = bytes_by_codec[0];
+    let (_, _, q8_moments) = bytes_by_codec[1];
+    assert!(
+        raw_moments >= 3 * q8_moments,
+        "q8 moments {q8_moments}B not 3x under raw {raw_moments}B"
+    );
+    print_table(
+        "Checkpoint I/O (sharded snapshots on the reference LM)",
+        &["codec", "bytes", "moment bytes", "save MB/s", "load MB/s"],
+        &rows,
+    );
+    write_json_records("BENCH_checkpoint_io.json", &records)?;
+    println!("wrote BENCH_checkpoint_io.json ({} records)", records.len());
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,458 @@
+//! The binary section container shared by `meta.bin` and the per-worker
+//! shard files.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8B   "FRGLSNP2"
+//! version  u32  2
+//! count    u32  number of sections
+//! per section:
+//!   name_len u32   (1..=256)
+//!   name     UTF-8 bytes
+//!   kind     u8    0 = F32, 1 = Q8, 2 = U32, 3 = U64
+//!   byte_len u64   payload bytes (validated against the remaining file
+//!                  BEFORE any allocation — a hostile header cannot drive
+//!                  an unbounded `vec![0; len]`)
+//!   payload  bytes (kind-specific, see below)
+//!   crc32    u32   of the payload bytes
+//! ```
+//!
+//! Trailing bytes after the last section are an error, as are truncated
+//! payloads and CRC mismatches. Kind-specific payloads:
+//!
+//! - `F32` / `U32` / `U64`: packed little-endian words.
+//! - `Q8`: `len u64 | block u32 | q i8×len | scales f32×ceil(len/block)`
+//!   — exactly the [`Payload::Q8`] shape of the engine's `BlockQ8` wire
+//!   codec, so a quantized moment section decodes through the same math
+//!   as a compressed reduce-tree message.
+//!
+//! Files are written atomically: the fully-serialized buffer goes to
+//! `<path>.tmp` in one bulk write and is renamed into place, so a crash
+//! mid-write never leaves a half-valid file under the final name.
+
+use std::path::Path;
+
+use crate::engine::Payload;
+use crate::Result;
+
+use super::crc::crc32;
+
+pub(crate) const MAGIC: &[u8; 8] = b"FRGLSNP2";
+pub(crate) const VERSION: u32 = 2;
+const MAX_SECTIONS: u32 = 1 << 20;
+const MAX_NAME_LEN: usize = 256;
+
+/// One named section's decoded contents.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SectionData {
+    /// Raw f32 values (params, residuals, raw-codec moments).
+    F32(Vec<f32>),
+    /// Blockwise 8-bit absmax quantized f32s (q8-codec moments).
+    Q8 { len: usize, block: usize, q: Vec<i8>, scales: Vec<f32> },
+    /// Raw u32 words (lane ids).
+    U32(Vec<u32>),
+    /// Raw u64 words (RNG state, counters).
+    U64(Vec<u64>),
+}
+
+impl SectionData {
+    fn kind(&self) -> u8 {
+        match self {
+            SectionData::F32(_) => 0,
+            SectionData::Q8 { .. } => 1,
+            SectionData::U32(_) => 2,
+            SectionData::U64(_) => 3,
+        }
+    }
+
+    /// Decode to f32 values regardless of on-disk representation: raw
+    /// moves out, q8 runs the `BlockQ8` decode.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            SectionData::F32(v) => Ok(v),
+            SectionData::Q8 { len, block, q, scales } => {
+                Ok(Payload::Q8 { len, block, q, scales }.decode())
+            }
+            other => anyhow::bail!("expected an f32/q8 section, found {other:?}"),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            SectionData::U32(v) => Ok(v),
+            other => anyhow::bail!("expected a u32 section, found {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<&[u64]> {
+        match self {
+            SectionData::U64(v) => Ok(v),
+            other => anyhow::bail!("expected a u64 section, found {other:?}"),
+        }
+    }
+
+    /// True for the quantized (lossy) representation.
+    pub fn is_q8(&self) -> bool {
+        matches!(self, SectionData::Q8 { .. })
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            SectionData::F32(v) => f32s_to_le(v, out),
+            SectionData::U32(v) => {
+                out.reserve(4 * v.len());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            SectionData::U64(v) => {
+                out.reserve(8 * v.len());
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            SectionData::Q8 { len, block, q, scales } => {
+                out.reserve(12 + q.len() + 4 * scales.len());
+                out.extend_from_slice(&(*len as u64).to_le_bytes());
+                out.extend_from_slice(&(*block as u32).to_le_bytes());
+                out.extend(q.iter().map(|&x| x as u8));
+                f32s_to_le(scales, out);
+            }
+        }
+    }
+
+    fn decode(kind: u8, bytes: &[u8]) -> Result<SectionData> {
+        match kind {
+            0 => {
+                anyhow::ensure!(bytes.len() % 4 == 0, "f32 section length not a multiple of 4");
+                Ok(SectionData::F32(le_to_f32s(bytes)))
+            }
+            2 => {
+                anyhow::ensure!(bytes.len() % 4 == 0, "u32 section length not a multiple of 4");
+                Ok(SectionData::U32(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ))
+            }
+            3 => {
+                anyhow::ensure!(bytes.len() % 8 == 0, "u64 section length not a multiple of 8");
+                Ok(SectionData::U64(
+                    bytes
+                        .chunks_exact(8)
+                        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ))
+            }
+            1 => {
+                anyhow::ensure!(bytes.len() >= 12, "q8 section shorter than its header");
+                let len64 = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+                let block = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+                anyhow::ensure!(block >= 1, "q8 section with zero block size");
+                let len = usize::try_from(len64)
+                    .map_err(|_| anyhow::anyhow!("q8 section claims {len64} lanes"))?;
+                let n_scales = len.div_ceil(block);
+                let want = n_scales
+                    .checked_mul(4)
+                    .and_then(|s| s.checked_add(len))
+                    .and_then(|s| s.checked_add(12))
+                    .ok_or_else(|| anyhow::anyhow!("q8 section size overflows"))?;
+                anyhow::ensure!(
+                    bytes.len() == want,
+                    "q8 section is {} bytes, header implies {want}",
+                    bytes.len()
+                );
+                let q: Vec<i8> = bytes[12..12 + len].iter().map(|&b| b as i8).collect();
+                let scales = le_to_f32s(&bytes[12 + len..]);
+                Ok(SectionData::Q8 { len, block, q, scales })
+            }
+            other => anyhow::bail!("unknown section kind {other}"),
+        }
+    }
+}
+
+/// A parsed (or to-be-written) section file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SectionFile {
+    pub sections: Vec<(String, SectionData)>,
+}
+
+impl SectionFile {
+    pub fn get(&self, name: &str) -> Option<&SectionData> {
+        self.sections.iter().find(|(n, _)| n == name).map(|(_, d)| d)
+    }
+
+    /// Required named section, moved out (load path — avoids cloning the
+    /// large float payloads).
+    pub fn take(&mut self, name: &str) -> Result<SectionData> {
+        let idx = self
+            .sections
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| anyhow::anyhow!("snapshot file is missing section '{name}'"))?;
+        Ok(self.sections.swap_remove(idx).1)
+    }
+
+    /// Serialize and write atomically (single bulk write to `<path>.tmp`,
+    /// then rename). Returns `(file_bytes, file_crc32)` for the manifest.
+    pub fn write_atomic(&self, path: &Path) -> Result<(u64, u32)> {
+        anyhow::ensure!(
+            self.sections.len() <= MAX_SECTIONS as usize,
+            "too many sections ({})",
+            self.sections.len()
+        );
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        let mut payload = Vec::new();
+        for (name, data) in &self.sections {
+            let nb = name.as_bytes();
+            anyhow::ensure!(
+                !nb.is_empty() && nb.len() <= MAX_NAME_LEN,
+                "bad section name '{name}'"
+            );
+            buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.push(data.kind());
+            payload.clear();
+            data.encode_into(&mut payload);
+            buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&payload);
+            buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+        }
+        let crc = crc32(&buf);
+        let tmp = tmp_path(path);
+        std::fs::write(&tmp, &buf)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("renaming {} into place: {e}", tmp.display()))?;
+        Ok((buf.len() as u64, crc))
+    }
+
+    /// Parse from raw bytes, validating every length header against the
+    /// remaining input before allocating, checking each section's CRC,
+    /// and rejecting trailing bytes after the last section.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SectionFile> {
+        let mut cur = Cursor { bytes, pos: 0 };
+        let magic = cur.take(8)?;
+        anyhow::ensure!(magic == MAGIC, "not a FRUGAL snapshot section file");
+        let version = cur.u32()?;
+        anyhow::ensure!(version == VERSION, "unsupported section-file version {version}");
+        let count = cur.u32()?;
+        anyhow::ensure!(count <= MAX_SECTIONS, "section count {count} exceeds the cap");
+        let mut sections = Vec::with_capacity(count.min(1024) as usize);
+        for i in 0..count {
+            let name_len = cur.u32()? as usize;
+            anyhow::ensure!(
+                (1..=MAX_NAME_LEN).contains(&name_len),
+                "section {i}: name length {name_len} out of range"
+            );
+            let name = String::from_utf8(cur.take(name_len)?.to_vec())
+                .map_err(|e| anyhow::anyhow!("section {i}: name not UTF-8: {e}"))?;
+            let kind = cur.u8()?;
+            let byte_len64 = cur.u64()?;
+            // The hostile-header guard: the claimed payload length must
+            // fit in the bytes that are actually left.
+            let remaining = (cur.bytes.len() - cur.pos) as u64;
+            anyhow::ensure!(
+                byte_len64.checked_add(4).is_some_and(|need| need <= remaining),
+                "section '{name}' claims {byte_len64} payload bytes but only {remaining} \
+                 remain (truncated or hostile header)"
+            );
+            let payload = cur.take(byte_len64 as usize)?;
+            let want_crc = cur.u32()?;
+            let got_crc = crc32(payload);
+            anyhow::ensure!(
+                got_crc == want_crc,
+                "section '{name}' CRC mismatch (stored {want_crc:#010x}, computed \
+                 {got_crc:#010x})"
+            );
+            let data = SectionData::decode(kind, payload)
+                .map_err(|e| anyhow::anyhow!("section '{name}': {e}"))?;
+            sections.push((name, data));
+        }
+        anyhow::ensure!(
+            cur.pos == cur.bytes.len(),
+            "{} trailing bytes after the last section",
+            cur.bytes.len() - cur.pos
+        );
+        Ok(SectionFile { sections })
+    }
+
+    /// Read a file whose size and whole-file CRC the manifest pinned.
+    pub fn read_verified(path: &Path, expect_bytes: u64, expect_crc: u32) -> Result<SectionFile> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() as u64 == expect_bytes,
+            "{}: {} bytes on disk, manifest says {expect_bytes}",
+            path.display(),
+            bytes.len()
+        );
+        let crc = crc32(&bytes);
+        anyhow::ensure!(
+            crc == expect_crc,
+            "{}: file CRC {crc:#010x} does not match the manifest ({expect_crc:#010x})",
+            path.display()
+        );
+        Self::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+}
+
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.bytes.len() - self.pos,
+            "unexpected end of file (need {n} bytes at offset {})",
+            self.pos
+        );
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Append `vals` to `out` as packed little-endian f32 bytes — the bulk
+/// conversion both checkpoint writers share (one `write_all` per buffer
+/// instead of one per element).
+pub fn f32s_to_le(vals: &[f32], out: &mut Vec<u8>) {
+    out.reserve(4 * vals.len());
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Decode packed little-endian f32 bytes (`bytes.len()` must be a
+/// multiple of 4).
+pub fn le_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SectionFile {
+        SectionFile {
+            sections: vec![
+                ("flat".into(), SectionData::F32(vec![1.0, -2.5, 0.0, 3.25])),
+                ("mask".into(), SectionData::U32(vec![0, 3, 7])),
+                ("rng".into(), SectionData::U64(vec![u64::MAX, 1, 2])),
+                (
+                    "m".into(),
+                    SectionData::Q8 {
+                        len: 5,
+                        block: 2,
+                        q: vec![127, -3, 0, 64, -127],
+                        scales: vec![0.5, 0.25, 1.0],
+                    },
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bitwise() {
+        let dir = std::env::temp_dir().join(format!("frugal_fmt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.bin");
+        let sf = sample();
+        let (bytes, crc) = sf.write_atomic(&path).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), bytes);
+        let back = SectionFile::read_verified(&path, bytes, crc).unwrap();
+        assert_eq!(back, sf);
+        // No .tmp litter left behind.
+        assert!(!tmp_path(&path).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hostile_length_header_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(b'm');
+        buf.push(0); // kind F32
+        buf.extend_from_slice(&u64::MAX.to_le_bytes()); // hostile byte_len
+        let err = SectionFile::from_bytes(&buf).unwrap_err();
+        assert!(format!("{err}").contains("hostile"), "{err}");
+    }
+
+    #[test]
+    fn corruption_truncation_and_trailing_bytes_are_rejected() {
+        let sf = sample();
+        let dir = std::env::temp_dir().join(format!("frugal_fmt2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.bin");
+        let (bytes, crc) = sf.write_atomic(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Flip one payload byte: section CRC catches it.
+        let mut bad = good.clone();
+        let idx = good.len() / 2;
+        bad[idx] ^= 0x40;
+        assert!(SectionFile::from_bytes(&bad).is_err());
+
+        // Truncate mid-payload.
+        assert!(SectionFile::from_bytes(&good[..good.len() - 5]).is_err());
+
+        // Trailing garbage after the last section.
+        let mut long = good.clone();
+        long.push(0xAB);
+        let err = SectionFile::from_bytes(&long).unwrap_err();
+        assert!(format!("{err}").contains("trailing"), "{err}");
+
+        // Manifest-pinned size/CRC checks.
+        assert!(SectionFile::read_verified(&path, bytes + 1, crc).is_err());
+        assert!(SectionFile::read_verified(&path, bytes, crc ^ 1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn q8_section_matches_wire_codec_decode() {
+        use crate::engine::{BlockQ8Codec, GradCodec};
+        let vals: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.01).collect();
+        let codec = BlockQ8Codec { block: 16 };
+        let enc = codec.encode(&vals, None);
+        let want = enc.decode();
+        let Payload::Q8 { len, block, q, scales } = enc else { panic!("not q8") };
+        let sec = SectionData::Q8 { len, block, q, scales };
+        assert_eq!(sec.into_f32().unwrap(), want);
+    }
+
+    #[test]
+    fn take_moves_sections_out() {
+        let mut sf = sample();
+        assert!(sf.take("flat").is_ok());
+        assert!(sf.take("flat").is_err());
+        assert!(sf.get("mask").is_some());
+    }
+}

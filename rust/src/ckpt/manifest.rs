@@ -1,0 +1,281 @@
+//! The snapshot manifest: one JSON file binding the shard set together.
+//!
+//! `manifest.json` is written **last** (atomically): its existence is
+//! what makes a snapshot directory valid, so a crash mid-save leaves an
+//! ignorable partial directory rather than a corrupt checkpoint. It pins
+//! every data file's byte count and whole-file CRC-32, the shard→lane
+//! mapping (shards are keyed by *lane range*, not worker identity —
+//! that is what lets a `workers = N` snapshot restore at `workers = M`),
+//! and the scalar training position (step, round / mask epoch, Adam
+//! bias-correction counter, codec ids).
+
+use std::path::Path;
+
+use crate::util::json::{escape, Json};
+use crate::Result;
+
+use super::MomentCodec;
+
+/// File name of the manifest inside a snapshot directory.
+pub const MANIFEST_NAME: &str = "manifest.json";
+/// The `format` marker inside the manifest.
+pub const FORMAT: &str = "frugal-ckpt";
+/// On-disk format version (v1 was the coordinator's single-blob format).
+pub const VERSION: u32 = 2;
+
+/// One per-worker shard file: which slice of the sorted state-full lane
+/// array it holds (`lane_start..lane_end`), and its pinned size + CRC.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardEntry {
+    pub file: String,
+    pub worker: usize,
+    pub lane_start: usize,
+    pub lane_end: usize,
+    pub bytes: u64,
+    pub crc32: u32,
+}
+
+/// A pinned non-shard file (the `meta.bin` replicated state).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FileEntry {
+    pub file: String,
+    pub bytes: u64,
+    pub crc32: u32,
+}
+
+/// The parsed snapshot manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptManifest {
+    pub version: u32,
+    /// Optimizer steps completed when the snapshot was taken.
+    pub step: u64,
+    /// Subspace round (= mask epoch) the run was in.
+    pub round: u64,
+    /// Round-local Adam bias-correction counter.
+    pub adam_t: u64,
+    pub update_freq: u64,
+    pub grad_accum: usize,
+    /// Worker count at save time (shards may re-partition on load).
+    pub workers: usize,
+    pub shard_granularity: usize,
+    pub flat_size: usize,
+    pub padded_size: usize,
+    /// K — lanes in the state-full subspace (the sharded lane set).
+    pub statefull_lanes: usize,
+    /// How Adam moment sections are stored (`q8` is ~4x smaller; `raw`
+    /// is the bit-exact escape hatch for mid-round snapshots).
+    pub moment_codec: MomentCodec,
+    pub codec_block: usize,
+    /// The reduce-tree codec the run used, mode + scale-block size
+    /// (informational).
+    pub wire_mode: String,
+    pub wire_block: usize,
+    /// Subspace-selection rule fingerprint (rho/policy/roles) — restore
+    /// rejects a mismatch, which would otherwise silently diverge.
+    pub subspace: String,
+    pub meta: FileEntry,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl CkptManifest {
+    /// Total bytes across the manifest, meta file and all shards.
+    pub fn data_bytes(&self) -> u64 {
+        self.meta.bytes + self.shards.iter().map(|s| s.bytes).sum::<u64>()
+    }
+
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"format\": \"{}\",", escape(FORMAT));
+        let _ = writeln!(out, "  \"version\": {},", self.version);
+        let _ = writeln!(out, "  \"step\": {},", self.step);
+        let _ = writeln!(out, "  \"round\": {},", self.round);
+        let _ = writeln!(out, "  \"adam_t\": {},", self.adam_t);
+        let _ = writeln!(out, "  \"update_freq\": {},", self.update_freq);
+        let _ = writeln!(out, "  \"grad_accum\": {},", self.grad_accum);
+        let _ = writeln!(out, "  \"workers\": {},", self.workers);
+        let _ = writeln!(out, "  \"shard_granularity\": {},", self.shard_granularity);
+        let _ = writeln!(out, "  \"flat_size\": {},", self.flat_size);
+        let _ = writeln!(out, "  \"padded_size\": {},", self.padded_size);
+        let _ = writeln!(out, "  \"statefull_lanes\": {},", self.statefull_lanes);
+        let _ = writeln!(out, "  \"moment_codec\": \"{}\",", self.moment_codec.as_str());
+        let _ = writeln!(out, "  \"codec_block\": {},", self.codec_block);
+        let _ = writeln!(out, "  \"wire_mode\": \"{}\",", escape(&self.wire_mode));
+        let _ = writeln!(out, "  \"wire_block\": {},", self.wire_block);
+        let _ = writeln!(out, "  \"subspace\": \"{}\",", escape(&self.subspace));
+        let _ = writeln!(
+            out,
+            "  \"meta\": {{\"file\": \"{}\", \"bytes\": {}, \"crc32\": {}}},",
+            escape(&self.meta.file),
+            self.meta.bytes,
+            self.meta.crc32
+        );
+        let _ = writeln!(out, "  \"shards\": [");
+        for (i, s) in self.shards.iter().enumerate() {
+            let comma = if i + 1 < self.shards.len() { "," } else { "" };
+            let _ = writeln!(
+                out,
+                "    {{\"file\": \"{}\", \"worker\": {}, \"lane_start\": {}, \
+                 \"lane_end\": {}, \"bytes\": {}, \"crc32\": {}}}{comma}",
+                escape(&s.file),
+                s.worker,
+                s.lane_start,
+                s.lane_end,
+                s.bytes,
+                s.crc32
+            );
+        }
+        let _ = writeln!(out, "  ]");
+        let _ = write!(out, "}}");
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<CkptManifest> {
+        let v = Json::parse(text)?;
+        let format = v.field("format")?.as_str()?;
+        anyhow::ensure!(
+            format == FORMAT,
+            "not a FRUGAL checkpoint manifest (format '{format}')"
+        );
+        let version = v.field("version")?.as_usize()? as u32;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads v{VERSION})"
+        );
+        let file_entry = |j: &Json| -> Result<FileEntry> {
+            Ok(FileEntry {
+                file: j.field("file")?.as_str()?.to_string(),
+                bytes: j.field("bytes")?.as_f64()? as u64,
+                crc32: j.field("crc32")?.as_f64()? as u32,
+            })
+        };
+        let mut shards = Vec::new();
+        for j in v.field("shards")?.as_arr()? {
+            shards.push(ShardEntry {
+                file: j.field("file")?.as_str()?.to_string(),
+                worker: j.field("worker")?.as_usize()?,
+                lane_start: j.field("lane_start")?.as_usize()?,
+                lane_end: j.field("lane_end")?.as_usize()?,
+                bytes: j.field("bytes")?.as_f64()? as u64,
+                crc32: j.field("crc32")?.as_f64()? as u32,
+            });
+        }
+        Ok(CkptManifest {
+            version,
+            step: v.field("step")?.as_f64()? as u64,
+            round: v.field("round")?.as_f64()? as u64,
+            adam_t: v.field("adam_t")?.as_f64()? as u64,
+            update_freq: v.field("update_freq")?.as_f64()? as u64,
+            grad_accum: v.field("grad_accum")?.as_usize()?,
+            workers: v.field("workers")?.as_usize()?,
+            shard_granularity: v.field("shard_granularity")?.as_usize()?,
+            flat_size: v.field("flat_size")?.as_usize()?,
+            padded_size: v.field("padded_size")?.as_usize()?,
+            statefull_lanes: v.field("statefull_lanes")?.as_usize()?,
+            moment_codec: MomentCodec::parse(v.field("moment_codec")?.as_str()?)?,
+            codec_block: v.field("codec_block")?.as_usize()?,
+            wire_mode: v.field("wire_mode")?.as_str()?.to_string(),
+            wire_block: v.field("wire_block")?.as_usize()?,
+            subspace: v.field("subspace")?.as_str()?.to_string(),
+            meta: file_entry(v.field("meta")?)?,
+            shards,
+        })
+    }
+
+    pub fn read(dir: &Path) -> Result<CkptManifest> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e:#}", path.display()))
+    }
+
+    /// Write `manifest.json` atomically (temp + rename) — the commit
+    /// point of a snapshot.
+    pub fn write_atomic(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(MANIFEST_NAME);
+        let tmp = dir.join("manifest.json.tmp");
+        std::fs::write(&tmp, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("committing {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CkptManifest {
+        CkptManifest {
+            version: VERSION,
+            step: 20,
+            round: 2,
+            adam_t: 10,
+            update_freq: 10,
+            grad_accum: 4,
+            workers: 2,
+            shard_granularity: 64,
+            flat_size: 900,
+            padded_size: 1024,
+            statefull_lanes: 300,
+            moment_codec: MomentCodec::Q8,
+            codec_block: 256,
+            wire_mode: "split".into(),
+            wire_block: 256,
+            subspace: "rho=0.25 policy=Blockwise(Random) full_roles=[Embed, Norm, Output] \
+                       free_roles=[]"
+                .into(),
+            meta: FileEntry { file: "meta.bin".into(), bytes: 4321, crc32: 0xDEAD_BEEF },
+            shards: vec![
+                ShardEntry {
+                    file: "shard_0000.bin".into(),
+                    worker: 0,
+                    lane_start: 0,
+                    lane_end: 192,
+                    bytes: 777,
+                    crc32: 1,
+                },
+                ShardEntry {
+                    file: "shard_0001.bin".into(),
+                    worker: 1,
+                    lane_start: 192,
+                    lane_end: 300,
+                    bytes: 555,
+                    crc32: u32::MAX,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let man = sample();
+        let back = CkptManifest::parse(&man.to_json()).unwrap();
+        assert_eq!(back, man);
+        assert_eq!(back.data_bytes(), 4321 + 777 + 555);
+    }
+
+    #[test]
+    fn rejects_wrong_format_and_version() {
+        let mut man = sample();
+        let json = man.to_json().replace("frugal-ckpt", "other-fmt");
+        assert!(CkptManifest::parse(&json).is_err());
+        man.version = 1;
+        assert!(CkptManifest::parse(&man.to_json()).is_err());
+        assert!(CkptManifest::parse("{\"format\": \"frugal-ckpt\"}").is_err());
+        assert!(CkptManifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn write_read_atomic() {
+        let dir = std::env::temp_dir().join(format!("frugal_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let man = sample();
+        man.write_atomic(&dir).unwrap();
+        assert_eq!(CkptManifest::read(&dir).unwrap(), man);
+        assert!(!dir.join("manifest.json.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,812 @@
+//! Fault-tolerant sharded checkpoint/resume for the data-parallel engine.
+//!
+//! FRUGAL's premise — optimizer state exists only on the K state-full
+//! lanes — makes its snapshots a fraction of a dense-Adam checkpoint:
+//! persist the sharded Adam moments over the current subspace, the mask,
+//! the EF residual banks, the data cursor (the global step — the data
+//! order is a pure function of it) and the RNG streams, and a run can be
+//! killed and resumed **bit-identically**. This module is format v2,
+//! replacing the orphaned single-blob v1 (`coordinator::checkpoint`).
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! <dir>/
+//!   manifest.json      versioned manifest (written LAST, atomically —
+//!                      the snapshot's commit point): step, round/mask
+//!                      epoch, worker count, shard plan, codec ids, and
+//!                      per-file byte counts + CRC-32s
+//!   meta.bin           replicated state: flat params (raw f32), the
+//!                      state-full lane ids (the mask), the MaskBuilder
+//!                      RNG stream + round/cursor, wire counters
+//!   shard_0000.bin     worker 0's slice: Adam m/v over its lane range
+//!   ...                (raw f32 or BlockQ8 per the codec id) plus its
+//!                      EF residual slots (`residual.<j>`, raw f32)
+//! ```
+//!
+//! Every file uses the section container of [`format`] (per-section and
+//! whole-file CRC-32, hostile-length-header and trailing-byte rejection)
+//! and is written to a temp name then renamed.
+//!
+//! # Elastic re-sharding
+//!
+//! Shard files are keyed by **lane range**, not worker identity: the
+//! state-full lane set is sorted and each shard holds a contiguous slice
+//! of it. On load the slices are concatenated back into lane order and
+//! re-partitioned for the *restoring* run's worker count, so a snapshot
+//! taken at `--workers N` restores bit-identically at `--workers M`
+//! (updates are lane-local — who computes them cannot change the math).
+//! EF residuals are keyed by micro-batch slot for the same reason.
+//!
+//! # Codecs and bit-identity
+//!
+//! Adam moment sections go through the engine's `BlockQ8` codec by
+//! default (~4x smaller) with `raw` f32 as the escape hatch. The flat
+//! parameter vector, mask, RNG streams and residuals are always raw.
+//! Because the paper's state-reset semantics drop all moments (and EF
+//! residuals) at every subspace re-selection, a snapshot taken **at a
+//! round barrier** (step divisible by `update_freq`) restores
+//! bit-identically under either codec — keep the orchestrator's
+//! `--save-every` a **multiple of** `update_freq` so every save lands on
+//! a barrier. A mid-round snapshot is bit-exact under `raw` and
+//! approximate (quantized moments) under `q8`.
+
+pub mod crc;
+pub mod format;
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use crate::engine::{BlockQ8Codec, GradCodec, Payload, ShardPlan};
+use crate::Result;
+
+pub use format::{SectionData, SectionFile};
+pub use manifest::{CkptManifest, FileEntry, ShardEntry, MANIFEST_NAME};
+
+/// How Adam moment sections are stored on disk.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MomentCodec {
+    /// Blockwise 8-bit absmax (the engine's `BlockQ8` wire codec) — ~4x
+    /// smaller; bit-exact restores only from round-barrier snapshots.
+    #[default]
+    Q8,
+    /// Raw f32 — bit-exact restores from any step.
+    Raw,
+}
+
+impl MomentCodec {
+    /// Parse the CLI/config spelling (`q8 | raw`).
+    pub fn parse(s: &str) -> Result<MomentCodec> {
+        match s {
+            "q8" => Ok(MomentCodec::Q8),
+            "raw" => Ok(MomentCodec::Raw),
+            other => anyhow::bail!("unknown checkpoint codec '{other}' (expected q8|raw)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MomentCodec::Q8 => "q8",
+            MomentCodec::Raw => "raw",
+        }
+    }
+}
+
+impl std::fmt::Display for MomentCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A complete, worker-count-independent image of the engine's training
+/// state after some completed step. `Engine::capture_state` produces it,
+/// [`save`] serializes it, [`load`] reads it back, and
+/// `Engine::restore_state` re-shards it onto the restoring run's workers.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// Optimizer steps completed — also the data cursor: micro-batch
+    /// indices are a pure function of it.
+    pub step: u64,
+    /// Subspace round (mask epoch).
+    pub round: u64,
+    /// Round-local Adam bias-correction counter (`AdamState::t`).
+    pub adam_t: u64,
+    pub update_freq: u64,
+    pub grad_accum: usize,
+    /// Worker count at capture time (save-side shard split only).
+    pub workers: usize,
+    pub shard_granularity: usize,
+    pub flat_size: usize,
+    pub padded_size: usize,
+    /// Reduce-tree codec of the run (informational): mode + scale-block
+    /// size — both change the transported bits, so restore notes any
+    /// mismatch (resume is valid, bit-identity holds per fixed codec).
+    pub wire_mode: String,
+    pub wire_block: usize,
+    /// Fingerprint of the subspace-selection hyper-parameters (rho,
+    /// policy, role routing). These are as much "part of the math" as
+    /// `update_freq`: a resume under a different selection rule would
+    /// silently diverge from the interrupted run at the next
+    /// re-selection, so restore hard-errors on a mismatch.
+    pub subspace: String,
+    /// The replicated flat parameter vector (always stored raw f32).
+    pub flat: Vec<f32>,
+    /// Sorted state-full lane ids — the round's mask.
+    pub full_lanes: Vec<u32>,
+    /// MaskBuilder RNG stream (xoshiro words + cached normal).
+    pub rng_words: [u64; 4],
+    pub rng_spare: Option<f32>,
+    /// MaskBuilder round / blockwise cursor.
+    pub builder_round: u64,
+    pub builder_cursor: u64,
+    /// Adam first/second moments in lane-sorted order over `full_lanes`.
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Per-micro-batch-slot EF residuals (`grad_accum` buffers), empty
+    /// when the wire codec carries no error feedback.
+    pub residuals: Vec<Vec<f32>>,
+    /// Lifetime wire-byte counters (kept continuous across resumes).
+    pub wire_bytes: u64,
+    pub wire_dense_bytes: u64,
+}
+
+impl TrainState {
+    /// Structural invariants every snapshot must satisfy — enforced both
+    /// before save and after load, so a tampered manifest cannot smuggle
+    /// an inconsistent state into the engine.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.step >= 1, "snapshot before the first step");
+        anyhow::ensure!(self.update_freq >= 1, "update_freq must be >= 1");
+        anyhow::ensure!(self.grad_accum >= 1, "grad_accum must be >= 1");
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.shard_granularity >= 1, "shard_granularity must be >= 1");
+        anyhow::ensure!(
+            self.flat_size <= self.padded_size,
+            "flat_size {} exceeds padded_size {}",
+            self.flat_size,
+            self.padded_size
+        );
+        anyhow::ensure!(
+            self.flat.len() == self.padded_size,
+            "flat vector has {} lanes, expected padded_size {}",
+            self.flat.len(),
+            self.padded_size
+        );
+        let want_adam_t = (self.step - 1) % self.update_freq + 1;
+        anyhow::ensure!(
+            self.adam_t == want_adam_t,
+            "adam_t {} inconsistent with step {} at T={} (want {want_adam_t})",
+            self.adam_t,
+            self.step,
+            self.update_freq
+        );
+        let want_round = (self.step - 1) / self.update_freq + 1;
+        anyhow::ensure!(
+            self.round == want_round,
+            "round {} inconsistent with step {} at T={} (want {want_round})",
+            self.round,
+            self.step,
+            self.update_freq
+        );
+        anyhow::ensure!(
+            self.full_lanes.windows(2).all(|w| w[0] < w[1]),
+            "state-full lane ids not strictly sorted"
+        );
+        if let Some(&last) = self.full_lanes.last() {
+            anyhow::ensure!(
+                (last as usize) < self.flat_size,
+                "state-full lane {last} out of range (flat_size {})",
+                self.flat_size
+            );
+        }
+        let k = self.full_lanes.len();
+        anyhow::ensure!(
+            self.m.len() == k && self.v.len() == k,
+            "moment arrays hold {}/{} floats for {k} state-full lanes",
+            self.m.len(),
+            self.v.len()
+        );
+        if !self.residuals.is_empty() {
+            anyhow::ensure!(
+                self.residuals.len() == self.grad_accum,
+                "{} EF residual slots for grad_accum {}",
+                self.residuals.len(),
+                self.grad_accum
+            );
+            let len = self.residuals[0].len();
+            anyhow::ensure!(
+                self.residuals.iter().all(|r| r.len() == len),
+                "EF residual slots have mixed lengths"
+            );
+        }
+        Ok(())
+    }
+
+    /// The state-free complement of `full_lanes` within the real lanes.
+    pub fn free_lanes(&self) -> Vec<u32> {
+        let mut is_full = vec![false; self.flat_size];
+        for &l in &self.full_lanes {
+            is_full[l as usize] = true;
+        }
+        (0..self.flat_size as u32).filter(|&l| !is_full[l as usize]).collect()
+    }
+}
+
+/// What [`save`] wrote.
+#[derive(Clone, Debug)]
+pub struct SaveReport {
+    pub dir: PathBuf,
+    /// All snapshot bytes (meta + shards; excludes the manifest text).
+    pub bytes: u64,
+    /// Of which encoded Adam moment payloads.
+    pub moment_bytes: u64,
+    pub files: usize,
+}
+
+fn encode_moments(vals: &[f32], codec: MomentCodec, block: usize) -> (SectionData, u64) {
+    match codec {
+        MomentCodec::Raw => (SectionData::F32(vals.to_vec()), 4 * vals.len() as u64),
+        MomentCodec::Q8 => {
+            let enc = BlockQ8Codec { block }.encode(vals, None);
+            let bytes = enc.wire_bytes() as u64;
+            let Payload::Q8 { len, block, q, scales } = enc else {
+                unreachable!("BlockQ8Codec always produces Q8 payloads")
+            };
+            (SectionData::Q8 { len, block, q, scales }, bytes)
+        }
+    }
+}
+
+/// Serialize `state` into `dir` (created if missing): shard files first,
+/// then `meta.bin`, then the manifest as the atomic commit point.
+pub fn save(
+    dir: &Path,
+    state: &TrainState,
+    codec: MomentCodec,
+    block: usize,
+) -> Result<SaveReport> {
+    state.validate()?;
+    let block = block.max(1);
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+
+    // Overwriting an existing snapshot: atomically invalidate it FIRST by
+    // dropping its manifest (load ignores a manifest-less directory), then
+    // clear the old data files. Without this, a crash mid-overwrite could
+    // leave the OLD manifest pinning NEW shard bytes — an unreadable
+    // directory that used to be a valid snapshot — and a re-save at a
+    // lower worker count would leave orphan shard files behind.
+    let manifest_path = dir.join(MANIFEST_NAME);
+    if manifest_path.exists() {
+        std::fs::remove_file(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("invalidating {}: {e}", manifest_path.display()))?;
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let stale = name == "meta.bin"
+            || (name.starts_with("shard_") && name.ends_with(".bin"))
+            || name.ends_with(".tmp");
+        if stale {
+            std::fs::remove_file(entry.path())?;
+        }
+    }
+
+    let plan =
+        ShardPlan::partition(state.full_lanes.clone(), state.workers, state.shard_granularity);
+    let mut shards = Vec::with_capacity(state.workers);
+    let mut total = 0u64;
+    let mut moment_bytes = 0u64;
+    let mut lane_cursor = 0usize;
+    for w in 0..state.workers {
+        let (lo, hi) = (lane_cursor, lane_cursor + plan.shard_len(w));
+        lane_cursor = hi;
+        let (m_sec, m_bytes) = encode_moments(&state.m[lo..hi], codec, block);
+        let (v_sec, v_bytes) = encode_moments(&state.v[lo..hi], codec, block);
+        moment_bytes += m_bytes + v_bytes;
+        let mut sections = vec![("m".to_string(), m_sec), ("v".to_string(), v_sec)];
+        if !state.residuals.is_empty() {
+            // Slot j lives on worker j % N — the same keying the engine's
+            // ResidualBank uses, so any restore worker count redistributes
+            // the identical buffers.
+            let mut j = w;
+            while j < state.grad_accum {
+                sections
+                    .push((format!("residual.{j}"), SectionData::F32(state.residuals[j].clone())));
+                j += state.workers;
+            }
+        }
+        let file = format!("shard_{w:04}.bin");
+        let (bytes, crc32) = SectionFile { sections }.write_atomic(&dir.join(&file))?;
+        total += bytes;
+        shards.push(ShardEntry { file, worker: w, lane_start: lo, lane_end: hi, bytes, crc32 });
+    }
+
+    let rng = vec![
+        state.rng_words[0],
+        state.rng_words[1],
+        state.rng_words[2],
+        state.rng_words[3],
+        state.rng_spare.is_some() as u64,
+        state.rng_spare.unwrap_or(0.0).to_bits() as u64,
+    ];
+    let meta_file = SectionFile {
+        sections: vec![
+            ("flat".to_string(), SectionData::F32(state.flat.clone())),
+            ("mask".to_string(), SectionData::U32(state.full_lanes.clone())),
+            ("rng".to_string(), SectionData::U64(rng)),
+            (
+                "builder".to_string(),
+                SectionData::U64(vec![state.builder_round, state.builder_cursor]),
+            ),
+            (
+                "counters".to_string(),
+                SectionData::U64(vec![state.wire_bytes, state.wire_dense_bytes]),
+            ),
+        ],
+    };
+    let (meta_bytes, meta_crc) = meta_file.write_atomic(&dir.join("meta.bin"))?;
+    total += meta_bytes;
+
+    let man = CkptManifest {
+        version: manifest::VERSION,
+        step: state.step,
+        round: state.round,
+        adam_t: state.adam_t,
+        update_freq: state.update_freq,
+        grad_accum: state.grad_accum,
+        workers: state.workers,
+        shard_granularity: state.shard_granularity,
+        flat_size: state.flat_size,
+        padded_size: state.padded_size,
+        statefull_lanes: state.full_lanes.len(),
+        moment_codec: codec,
+        codec_block: block,
+        wire_mode: state.wire_mode.clone(),
+        wire_block: state.wire_block,
+        subspace: state.subspace.clone(),
+        meta: FileEntry { file: "meta.bin".to_string(), bytes: meta_bytes, crc32: meta_crc },
+        shards,
+    };
+    man.write_atomic(dir)?;
+    Ok(SaveReport { dir: dir.to_path_buf(), bytes: total, moment_bytes, files: state.workers + 2 })
+}
+
+/// Read and fully validate a snapshot directory back into a
+/// [`TrainState`]: manifest, per-file CRCs, shard tiling of the lane
+/// range, residual slot completeness, and the structural invariants of
+/// [`TrainState::validate`].
+pub fn load(dir: &Path) -> Result<TrainState> {
+    let man = CkptManifest::read(dir)?;
+    anyhow::ensure!(
+        man.shards.len() == man.workers,
+        "manifest lists {} shards for {} workers",
+        man.shards.len(),
+        man.workers
+    );
+    // Hostile-manifest guard: every count that sizes an allocation below
+    // must be plausible before it is trusted (the same discipline the
+    // section reader applies to length headers).
+    anyhow::ensure!(
+        man.workers <= 1 << 16
+            && man.grad_accum <= 1 << 20
+            && man.padded_size <= 1 << 40
+            && man.flat_size <= man.padded_size
+            && man.statefull_lanes <= man.flat_size,
+        "manifest dimensions out of range (workers {}, grad_accum {}, lanes {}/{}/{})",
+        man.workers,
+        man.grad_accum,
+        man.statefull_lanes,
+        man.flat_size,
+        man.padded_size
+    );
+
+    // Manifest-named files must be plain basenames inside the snapshot
+    // directory — a hostile manifest must not be able to point the
+    // reader at /dev/stdin, a FIFO, or anything outside the directory.
+    for name in std::iter::once(man.meta.file.as_str())
+        .chain(man.shards.iter().map(|s| s.file.as_str()))
+    {
+        anyhow::ensure!(
+            !name.is_empty()
+                && !name.contains('/')
+                && !name.contains('\\')
+                && name != "."
+                && name != "..",
+            "manifest names a file outside the snapshot directory: '{name}'"
+        );
+    }
+
+    let mut meta =
+        SectionFile::read_verified(&dir.join(&man.meta.file), man.meta.bytes, man.meta.crc32)?;
+    let flat = meta.take("flat")?.into_f32()?;
+    let full_lanes = meta.take("mask")?.as_u32()?.to_vec();
+    anyhow::ensure!(
+        full_lanes.len() == man.statefull_lanes,
+        "mask section holds {} lanes, manifest says {}",
+        full_lanes.len(),
+        man.statefull_lanes
+    );
+    let rng = meta.take("rng")?;
+    let rng = rng.as_u64()?;
+    anyhow::ensure!(rng.len() == 6, "rng section holds {} words, expected 6", rng.len());
+    let rng_words = [rng[0], rng[1], rng[2], rng[3]];
+    let rng_spare = (rng[4] != 0).then_some(f32::from_bits(rng[5] as u32));
+    let builder = meta.take("builder")?;
+    let builder = builder.as_u64()?;
+    anyhow::ensure!(builder.len() == 2, "builder section holds {} words, expected 2",
+                    builder.len());
+    let counters = meta.take("counters")?;
+    let counters = counters.as_u64()?;
+    anyhow::ensure!(counters.len() == 2, "counters section holds {} words, expected 2",
+                    counters.len());
+
+    // Shards concatenate back into lane order; their ranges must tile
+    // 0..K exactly.
+    let mut shards = man.shards.clone();
+    shards.sort_by_key(|s| s.lane_start);
+    // Sized by data actually read (CRC-verified files), never by a
+    // manifest-claimed count alone.
+    let mut m = Vec::new();
+    let mut v = Vec::new();
+    let mut slots: Vec<Option<Vec<f32>>> = vec![None; man.grad_accum];
+    let mut cursor = 0usize;
+    for sh in &shards {
+        anyhow::ensure!(
+            sh.lane_start == cursor && sh.lane_end >= sh.lane_start,
+            "shard {} covers lanes {}..{} but the previous shard ended at {cursor}",
+            sh.file,
+            sh.lane_start,
+            sh.lane_end
+        );
+        cursor = sh.lane_end;
+        let n = sh.lane_end - sh.lane_start;
+        let mut sf = SectionFile::read_verified(&dir.join(&sh.file), sh.bytes, sh.crc32)?;
+        for take_name in ["m", "v"] {
+            let sec = sf.take(take_name)?;
+            anyhow::ensure!(
+                sec.is_q8() == (man.moment_codec == MomentCodec::Q8),
+                "{}: section '{take_name}' codec does not match the manifest ({})",
+                sh.file,
+                man.moment_codec
+            );
+            let vals = sec.into_f32()?;
+            anyhow::ensure!(
+                vals.len() == n,
+                "{}: section '{take_name}' holds {} floats for a {n}-lane shard",
+                sh.file,
+                vals.len()
+            );
+            if take_name == "m" {
+                m.extend_from_slice(&vals);
+            } else {
+                v.extend_from_slice(&vals);
+            }
+        }
+        for (name, data) in std::mem::take(&mut sf.sections) {
+            let Some(j) = name.strip_prefix("residual.") else {
+                anyhow::bail!("{}: unknown section '{name}'", sh.file);
+            };
+            let j: usize = j
+                .parse()
+                .map_err(|e| anyhow::anyhow!("{}: bad residual slot '{name}': {e}", sh.file))?;
+            anyhow::ensure!(
+                j < man.grad_accum,
+                "{}: residual slot {j} out of range (grad_accum {})",
+                sh.file,
+                man.grad_accum
+            );
+            anyhow::ensure!(slots[j].is_none(), "residual slot {j} appears twice");
+            let SectionData::F32(buf) = data else {
+                anyhow::bail!("{}: residual slot {j} is not raw f32", sh.file);
+            };
+            slots[j] = Some(buf);
+        }
+    }
+    anyhow::ensure!(
+        cursor == man.statefull_lanes,
+        "shards cover {cursor} lanes, manifest says {}",
+        man.statefull_lanes
+    );
+    let present = slots.iter().filter(|s| s.is_some()).count();
+    let residuals = if present == 0 {
+        Vec::new()
+    } else {
+        anyhow::ensure!(
+            present == man.grad_accum,
+            "only {present}/{} EF residual slots present",
+            man.grad_accum
+        );
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    };
+
+    let state = TrainState {
+        step: man.step,
+        round: man.round,
+        adam_t: man.adam_t,
+        update_freq: man.update_freq,
+        grad_accum: man.grad_accum,
+        workers: man.workers,
+        shard_granularity: man.shard_granularity,
+        flat_size: man.flat_size,
+        padded_size: man.padded_size,
+        wire_mode: man.wire_mode.clone(),
+        wire_block: man.wire_block,
+        subspace: man.subspace.clone(),
+        flat,
+        full_lanes,
+        rng_words,
+        rng_spare,
+        builder_round: builder[0],
+        builder_cursor: builder[1],
+        m,
+        v,
+        residuals,
+        wire_bytes: counters[0],
+        wire_dense_bytes: counters[1],
+    };
+    state.validate()?;
+    Ok(state)
+}
+
+/// Resolve a `--resume` argument: either a snapshot directory itself
+/// (contains `manifest.json`) or a checkpoint root holding `step_*`
+/// subdirectories, in which case the highest step wins.
+pub fn resolve_snapshot_dir(path: &Path) -> Result<PathBuf> {
+    if path.join(MANIFEST_NAME).is_file() {
+        return Ok(path.to_path_buf());
+    }
+    let mut best: Option<(u64, PathBuf)> = None;
+    let entries = std::fs::read_dir(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(step) = name.to_str().and_then(|n| n.strip_prefix("step_")) else {
+            continue;
+        };
+        let Ok(step) = step.parse::<u64>() else { continue };
+        let dir = entry.path();
+        if dir.join(MANIFEST_NAME).is_file()
+            && best.as_ref().map(|(s, _)| step > *s).unwrap_or(true)
+        {
+            best = Some((step, dir));
+        }
+    }
+    best.map(|(_, dir)| dir).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no snapshot under {} (expected {MANIFEST_NAME} or step_*/ subdirectories)",
+            path.display()
+        )
+    })
+}
+
+/// The subdirectory name [`save`] callers use for the snapshot at `step`.
+pub fn step_dir_name(step: u64) -> String {
+    format!("step_{step:06}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("frugal_ckpt_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    /// A small but structurally-complete synthetic state.
+    fn state(seed: u64, workers: usize, with_residuals: bool) -> TrainState {
+        let mut rng = Prng::seed_from_u64(seed);
+        let flat_size = 200 + rng.range(0, 100);
+        let padded_size = flat_size + rng.range(0, 64);
+        let full_lanes: Vec<u32> =
+            (0..flat_size as u32).filter(|_| rng.bool(0.3)).collect();
+        let k = full_lanes.len();
+        let update_freq = 1 + rng.range(0, 9) as u64;
+        let step = 1 + rng.range(0, 50) as u64;
+        let grad_accum = 1 + rng.range(0, 6);
+        TrainState {
+            step,
+            round: (step - 1) / update_freq + 1,
+            adam_t: (step - 1) % update_freq + 1,
+            update_freq,
+            grad_accum,
+            workers,
+            shard_granularity: 1 << rng.range(0, 5),
+            flat_size,
+            padded_size,
+            wire_mode: "split".into(),
+            wire_block: 64,
+            subspace: format!("rho=0.25 policy=test-{}", seed % 3),
+            flat: (0..padded_size).map(|_| rng.normal()).collect(),
+            full_lanes,
+            rng_words: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+            rng_spare: rng.bool(0.5).then(|| rng.normal()),
+            builder_round: rng.next_u64() % 100,
+            builder_cursor: rng.next_u64() % 16,
+            m: (0..k).map(|_| 0.01 * rng.normal()).collect(),
+            v: (0..k).map(|_| (0.001 * rng.normal()).abs()).collect(),
+            residuals: if with_residuals {
+                let len = 17 + rng.range(0, 40);
+                (0..grad_accum).map(|_| (0..len).map(|_| rng.normal()).collect()).collect()
+            } else {
+                Vec::new()
+            },
+            wire_bytes: rng.next_u64() >> 20,
+            wire_dense_bytes: rng.next_u64() >> 20,
+        }
+    }
+
+    #[test]
+    fn raw_roundtrip_is_bitwise() {
+        for seed in 0..10u64 {
+            let workers = 1 + (seed as usize % 5);
+            let st = state(seed, workers, seed % 2 == 0);
+            let dir = tmpdir(&format!("raw{seed}"));
+            save(&dir, &st, MomentCodec::Raw, 64).unwrap();
+            let back = load(&dir).unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back.flat), bits(&st.flat), "seed {seed}");
+            assert_eq!(bits(&back.m), bits(&st.m), "seed {seed}");
+            assert_eq!(bits(&back.v), bits(&st.v), "seed {seed}");
+            assert_eq!(back.full_lanes, st.full_lanes);
+            assert_eq!(back.rng_words, st.rng_words);
+            assert_eq!(
+                back.rng_spare.map(f32::to_bits),
+                st.rng_spare.map(f32::to_bits),
+                "seed {seed}"
+            );
+            assert_eq!(back.residuals.len(), st.residuals.len());
+            for (a, b) in back.residuals.iter().zip(&st.residuals) {
+                assert_eq!(bits(a), bits(b), "seed {seed}");
+            }
+            assert_eq!(
+                (back.step, back.round, back.adam_t, back.builder_round, back.builder_cursor),
+                (st.step, st.round, st.adam_t, st.builder_round, st.builder_cursor)
+            );
+            assert_eq!((back.wire_bytes, back.wire_dense_bytes),
+                       (st.wire_bytes, st.wire_dense_bytes));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn q8_roundtrip_is_exact_except_bounded_moment_error() {
+        for seed in 20..26u64 {
+            let st = state(seed, 3, true);
+            let dir = tmpdir(&format!("q8{seed}"));
+            let report = save(&dir, &st, MomentCodec::Q8, 32).unwrap();
+            let back = load(&dir).unwrap();
+            // Everything except the moments is still bit-exact.
+            assert_eq!(
+                back.flat.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                st.flat.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(back.full_lanes, st.full_lanes);
+            assert_eq!(back.rng_words, st.rng_words);
+            // Moments: per-element error within the q8 half-step of the
+            // worst block (scale <= global amax / 127).
+            for (got, want) in [(&back.m, &st.m), (&back.v, &st.v)] {
+                let amax = want.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let tol = 0.5001 * amax / 127.0 + 1e-12;
+                for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+                    assert!((g - w).abs() <= tol, "seed {seed} lane {i}: {g} vs {w}");
+                }
+            }
+            // And the quantized sections really are smaller.
+            let raw_dir = tmpdir(&format!("q8raw{seed}"));
+            let raw_report = save(&raw_dir, &st, MomentCodec::Raw, 32).unwrap();
+            if st.m.len() >= 64 {
+                assert!(
+                    report.moment_bytes * 3 < raw_report.moment_bytes,
+                    "q8 moments {}B not well under raw {}B",
+                    report.moment_bytes,
+                    raw_report.moment_bytes
+                );
+            }
+            std::fs::remove_dir_all(&dir).ok();
+            std::fs::remove_dir_all(&raw_dir).ok();
+        }
+    }
+
+    #[test]
+    fn save_splits_match_any_worker_count() {
+        // The same state saved at different worker counts loads back to
+        // identical lane-ordered arrays (shards are keyed by lane range).
+        let st = state(77, 4, true);
+        let mut images = Vec::new();
+        for workers in [1usize, 2, 3, 7] {
+            let mut s = st.clone();
+            s.workers = workers;
+            let dir = tmpdir(&format!("split{workers}"));
+            save(&dir, &s, MomentCodec::Raw, 64).unwrap();
+            let back = load(&dir).unwrap();
+            images.push((
+                back.m.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                back.v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                back.residuals.clone(),
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        for img in &images[1..] {
+            assert_eq!(img.0, images[0].0);
+            assert_eq!(img.1, images[0].1);
+            assert_eq!(img.2.len(), images[0].2.len());
+        }
+    }
+
+    #[test]
+    fn resave_overwrites_cleanly_and_leaves_no_orphan_shards() {
+        let st4 = state(33, 4, true);
+        let dir = tmpdir("resave");
+        save(&dir, &st4, MomentCodec::Raw, 64).unwrap();
+        assert!(dir.join("shard_0003.bin").exists());
+        // Re-save the same snapshot dir at a lower worker count: the old
+        // manifest is dropped first and the extra shards are cleared.
+        let mut st2 = st4.clone();
+        st2.workers = 2;
+        save(&dir, &st2, MomentCodec::Raw, 64).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.workers, 2);
+        assert!(!dir.join("shard_0002.bin").exists(), "orphan shard survived");
+        assert!(!dir.join("shard_0003.bin").exists(), "orphan shard survived");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_picks_the_highest_step() {
+        let root = tmpdir("resolve");
+        for step in [4u64, 20, 8] {
+            let st = state(step, 2, false);
+            save(&root.join(step_dir_name(step)), &st, MomentCodec::Raw, 64).unwrap();
+        }
+        std::fs::create_dir_all(root.join("step_junk")).unwrap();
+        std::fs::create_dir_all(root.join("step_000999")).unwrap(); // no manifest
+        let dir = resolve_snapshot_dir(&root).unwrap();
+        assert!(dir.ends_with(step_dir_name(20)));
+        // A snapshot dir resolves to itself.
+        assert_eq!(resolve_snapshot_dir(&dir).unwrap(), dir);
+        // An empty root is a clean error.
+        let empty = tmpdir("resolve_empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(resolve_snapshot_dir(&empty).is_err());
+        std::fs::remove_dir_all(&root).ok();
+        std::fs::remove_dir_all(&empty).ok();
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_states() {
+        let good = state(5, 2, true);
+        assert!(good.validate().is_ok());
+        let mut bad = good.clone();
+        bad.adam_t += 1;
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.m.pop();
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.full_lanes.reverse();
+        if bad.full_lanes.len() >= 2 {
+            assert!(bad.validate().is_err());
+        }
+        let mut bad = good.clone();
+        bad.residuals.push(Vec::new());
+        assert!(bad.validate().is_err(), "slot count != grad_accum must fail");
+        let mut bad = good;
+        bad.flat.pop();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn free_lanes_complement_full_lanes() {
+        let st = state(9, 1, false);
+        let free = st.free_lanes();
+        let mut all: Vec<u32> = st.full_lanes.iter().chain(free.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..st.flat_size as u32).collect::<Vec<_>>());
+    }
+}

@@ -6,6 +6,7 @@
 //! override a field.
 
 
+use crate::ckpt::MomentCodec;
 use crate::coordinator::LrSchedule;
 use crate::engine::{CompressMode, ParallelCfg};
 use crate::optim::adamw::AdamCfg;
@@ -49,11 +50,36 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Optional JSONL log path.
     pub log_path: Option<String>,
-    /// Optional checkpoint path (written at the end of the run).
-    pub checkpoint: Option<String>,
+    /// Snapshot/resume settings (`[checkpoint]` section / `--ckpt-dir`).
+    pub checkpoint: CheckpointCfg,
     /// Data-parallel engine settings (`[parallel]` section / `--workers`).
     /// `None` = legacy single-worker trainers.
     pub parallel: Option<ParallelCfg>,
+}
+
+/// The `[checkpoint]` run-config section (the sharded v2 subsystem,
+/// `crate::ckpt`): where snapshots go, how often, and how Adam moments
+/// are encoded.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointCfg {
+    /// Checkpoint root (snapshots land in `dir/step_<N>/`). `None`
+    /// disables checkpointing.
+    pub dir: Option<String>,
+    /// Save every N optimizer steps; 0 = only at the end of the run.
+    /// Keep it a multiple of `update_freq` so saves land on round
+    /// barriers — where `q8` snapshots restore bit-identically.
+    pub save_every: u64,
+    /// Moment encoding: `q8` (~4x smaller) or `raw` (bit-exact from any
+    /// step, not just round barriers).
+    pub codec: MomentCodec,
+    /// Lanes per q8 scale block.
+    pub block: usize,
+}
+
+impl Default for CheckpointCfg {
+    fn default() -> Self {
+        CheckpointCfg { dir: None, save_every: 0, codec: MomentCodec::Q8, block: 256 }
+    }
 }
 
 impl Default for TrainConfig {
@@ -76,7 +102,7 @@ impl Default for TrainConfig {
             seed: 0,
             artifacts_dir: "artifacts".into(),
             log_path: None,
-            checkpoint: None,
+            checkpoint: CheckpointCfg::default(),
             parallel: None,
         }
     }
@@ -103,11 +129,13 @@ impl TrainConfig {
             "threaded",
         ];
         const COMPRESS_KEYS: [&str; 2] = ["mode", "block"];
+        const CHECKPOINT_KEYS: [&str; 4] = ["dir", "save_every", "codec", "block"];
         for section in &kv.sections {
             anyhow::ensure!(
-                section == "parallel" || section == "parallel.compress",
+                section == "parallel" || section == "parallel.compress"
+                    || section == "checkpoint",
                 "unknown config section '[{section}]' (known sections: [parallel], \
-                 [parallel.compress])"
+                 [parallel.compress], [checkpoint])"
             );
         }
         for key in kv.entries.keys() {
@@ -117,11 +145,17 @@ impl TrainConfig {
                     "unknown key '{rest}' in [parallel.compress] (known keys: {})",
                     COMPRESS_KEYS.join(", ")
                 );
+            } else if let Some(rest) = key.strip_prefix("checkpoint.") {
+                anyhow::ensure!(
+                    CHECKPOINT_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [checkpoint] (known keys: {})",
+                    CHECKPOINT_KEYS.join(", ")
+                );
             } else if let Some((section, rest)) = key.split_once('.') {
                 anyhow::ensure!(
                     section == "parallel",
                     "unknown config section '[{section}]' (known sections: [parallel], \
-                     [parallel.compress])"
+                     [parallel.compress], [checkpoint])"
                 );
                 anyhow::ensure!(
                     PARALLEL_KEYS.contains(&rest),
@@ -132,6 +166,14 @@ impl TrainConfig {
                 // An engine key at top level means the [parallel] header
                 // is missing (or malformed) — don't silently ignore it.
                 anyhow::bail!("key '{key}' belongs under the [parallel] section");
+            } else if key == "checkpoint" {
+                // v1-era configs had a bare `checkpoint = "path"` key that
+                // nothing ever read; the sharded subsystem replaced it.
+                anyhow::bail!(
+                    "top-level 'checkpoint = \"…\"' has been replaced by the \
+                     [checkpoint] section: set dir = \"…\" (plus save_every, codec, \
+                     block) there"
+                );
             }
         }
         let mut cfg = TrainConfig::default();
@@ -183,8 +225,21 @@ impl TrainConfig {
         if let Some(v) = kv.get("log_path") {
             cfg.log_path = Some(v.to_string());
         }
-        if let Some(v) = kv.get("checkpoint") {
-            cfg.checkpoint = Some(v.to_string());
+        if kv.has_section("checkpoint") {
+            let mut c = CheckpointCfg::default();
+            if let Some(v) = kv.get("checkpoint.dir") {
+                c.dir = Some(v.to_string());
+            }
+            if let Some(v) = kv.get_u64("checkpoint.save_every")? {
+                c.save_every = v;
+            }
+            if let Some(v) = kv.get("checkpoint.codec") {
+                c.codec = MomentCodec::parse(v)?;
+            }
+            if let Some(v) = kv.get_u64("checkpoint.block")? {
+                c.block = v.max(1) as usize;
+            }
+            cfg.checkpoint = c;
         }
         if kv.has_section("parallel") || kv.has_section("parallel.compress") {
             let mut p = ParallelCfg::default();
@@ -250,9 +305,6 @@ impl TrainConfig {
         if let Some(p) = &self.log_path {
             let _ = writeln!(out, "log_path = \"{p}\"");
         }
-        if let Some(p) = &self.checkpoint {
-            let _ = writeln!(out, "checkpoint = \"{p}\"");
-        }
         match &self.schedule {
             LrSchedule::ConstantWarmup { warmup } => {
                 let _ = writeln!(out, "schedule = \"constant_warmup\"");
@@ -268,6 +320,15 @@ impl TrainConfig {
                 let _ = writeln!(out, "schedule = \"cosine_restarts\"");
                 let _ = writeln!(out, "schedule_cycle = {cycle}");
             }
+        }
+        if self.checkpoint != CheckpointCfg::default() {
+            let _ = writeln!(out, "\n[checkpoint]");
+            if let Some(d) = &self.checkpoint.dir {
+                let _ = writeln!(out, "dir = \"{d}\"");
+            }
+            let _ = writeln!(out, "save_every = {}", self.checkpoint.save_every);
+            let _ = writeln!(out, "codec = \"{}\"", self.checkpoint.codec);
+            let _ = writeln!(out, "block = {}", self.checkpoint.block);
         }
         if let Some(p) = &self.parallel {
             let _ = writeln!(out, "\n[parallel]");
@@ -473,6 +534,46 @@ mod tests {
         let text = cfg.to_toml();
         let back = TrainConfig::from_toml(&text).unwrap();
         assert_eq!(back.parallel, cfg.parallel);
+    }
+
+    #[test]
+    fn checkpoint_section_roundtrip() {
+        let mut cfg = TrainConfig::default();
+        cfg.checkpoint = CheckpointCfg {
+            dir: Some("ckpt/run1".into()),
+            save_every: 50,
+            codec: MomentCodec::Raw,
+            block: 128,
+        };
+        let text = cfg.to_toml();
+        let back = TrainConfig::from_toml(&text).unwrap();
+        assert_eq!(back.checkpoint, cfg.checkpoint);
+        // Defaults: no section emitted, default config parsed back.
+        let plain = TrainConfig::default().to_toml();
+        assert!(!plain.contains("[checkpoint]"));
+        assert_eq!(
+            TrainConfig::from_toml(&plain).unwrap().checkpoint,
+            CheckpointCfg::default()
+        );
+    }
+
+    #[test]
+    fn checkpoint_section_defaults_and_strictness() {
+        let cfg =
+            TrainConfig::from_toml("[checkpoint]\ndir = \"snaps\"\n").unwrap();
+        assert_eq!(cfg.checkpoint.dir.as_deref(), Some("snaps"));
+        assert_eq!(cfg.checkpoint.save_every, 0);
+        assert_eq!(cfg.checkpoint.codec, MomentCodec::Q8);
+        let err = TrainConfig::from_toml("[checkpoint]\nevery = 5\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown key 'every' in [checkpoint]"), "{err}");
+        let err = TrainConfig::from_toml("[checkpoint]\ncodec = \"zip\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown checkpoint codec 'zip'"), "{err}");
+    }
+
+    #[test]
+    fn legacy_top_level_checkpoint_key_is_a_migration_error() {
+        let err = TrainConfig::from_toml("checkpoint = \"final.bin\"\n").unwrap_err();
+        assert!(format!("{err}").contains("[checkpoint] section"), "{err}");
     }
 
     #[test]

@@ -1,5 +1,13 @@
-//! Checkpointing: flat params + optimizer buffers to a simple binary
-//! format (magic, version, named f32 sections). No external deps.
+//! Checkpointing v1: flat params + optimizer buffers in a single binary
+//! blob (magic, version, named f32 sections). No external deps.
+//!
+//! This is the legacy single-blob format kept for the single-device
+//! trainers; the data-parallel engine uses the sharded, CRC-checked v2
+//! subsystem in [`crate::ckpt`] (manifest + per-worker shard files,
+//! elastic re-sharding, q8 moment codec). The v1 reader validates every
+//! length header against the bytes actually remaining — a hostile header
+//! must produce an error, never an unbounded allocation — and rejects
+//! trailing bytes after the last section.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -28,22 +36,27 @@ impl Checkpoint {
         w.write_all(&VERSION.to_le_bytes())?;
         w.write_all(&self.step.to_le_bytes())?;
         w.write_all(&(self.sections.len() as u32).to_le_bytes())?;
+        let mut buf = Vec::new();
         for (name, data) in &self.sections {
             let nb = name.as_bytes();
             w.write_all(&(nb.len() as u32).to_le_bytes())?;
             w.write_all(nb)?;
             w.write_all(&(data.len() as u64).to_le_bytes())?;
-            // f32 little-endian
-            for v in data {
-                w.write_all(&v.to_le_bytes())?;
-            }
+            // One bulk write per section (the old per-element
+            // `to_le_bytes` loop issued a 4-byte write_all per float —
+            // see benches/checkpoint_io.rs for what that cost).
+            buf.clear();
+            crate::ckpt::format::f32s_to_le(data, &mut buf);
+            w.write_all(&buf)?;
         }
         w.flush()?;
         Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut r = BufReader::new(File::open(path)?);
+        let file = File::open(path)?;
+        let total = file.metadata()?.len();
+        let mut r = BufReader::new(file);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "not a FRUGAL checkpoint");
@@ -56,21 +69,48 @@ impl Checkpoint {
         let step = u64::from_le_bytes(buf8);
         r.read_exact(&mut buf4)?;
         let n_sections = u32::from_le_bytes(buf4);
-        let mut sections = Vec::with_capacity(n_sections as usize);
-        for _ in 0..n_sections {
+        // Bytes consumed so far: magic + version + step + section count.
+        let mut consumed: u64 = 8 + 4 + 8 + 4;
+        let mut sections = Vec::with_capacity(n_sections.min(1024) as usize);
+        for i in 0..n_sections {
             r.read_exact(&mut buf4)?;
-            let name_len = u32::from_le_bytes(buf4) as usize;
-            let mut name_buf = vec![0u8; name_len];
+            consumed += 4;
+            let name_len = u32::from_le_bytes(buf4) as u64;
+            // Every length header is capped by the bytes actually left in
+            // the file BEFORE the allocation — a hostile header errors
+            // instead of driving `vec![0u8; huge]`.
+            anyhow::ensure!(
+                name_len <= total.saturating_sub(consumed),
+                "section {i}: name length {name_len} exceeds the {} bytes remaining \
+                 (truncated or hostile header)",
+                total.saturating_sub(consumed)
+            );
+            let mut name_buf = vec![0u8; name_len as usize];
             r.read_exact(&mut name_buf)?;
+            consumed += name_len;
             let name = String::from_utf8(name_buf)?;
             r.read_exact(&mut buf8)?;
-            let len = u64::from_le_bytes(buf8) as usize;
-            let mut bytes = vec![0u8; len * 4];
+            consumed += 8;
+            let len = u64::from_le_bytes(buf8);
+            let byte_len = len.checked_mul(4).ok_or_else(|| {
+                anyhow::anyhow!("section '{name}': float count {len} overflows (hostile header)")
+            })?;
+            anyhow::ensure!(
+                byte_len <= total.saturating_sub(consumed),
+                "section '{name}' claims {len} floats ({byte_len} bytes) but only {} \
+                 bytes remain (truncated or hostile header)",
+                total.saturating_sub(consumed)
+            );
+            let mut bytes = vec![0u8; byte_len as usize];
             r.read_exact(&mut bytes)?;
-            let data =
-                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
-            sections.push((name, data));
+            consumed += byte_len;
+            sections.push((name, crate::ckpt::format::le_to_f32s(&bytes)));
         }
+        anyhow::ensure!(
+            consumed == total,
+            "{} trailing bytes after the last section",
+            total - consumed
+        );
         Ok(Checkpoint { step, sections })
     }
 }
@@ -103,6 +143,50 @@ mod tests {
         let path = std::env::temp_dir().join("frugal_ck_bad.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    /// A hostile section-length header must error before allocating —
+    /// the old loader ran `vec![0u8; len * 4]` straight off the wire.
+    #[test]
+    fn hostile_length_header_is_rejected() {
+        let path = std::env::temp_dir().join("frugal_ck_hostile.bin");
+        for hostile_len in [u64::MAX, 1u64 << 40] {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(MAGIC);
+            bytes.extend_from_slice(&VERSION.to_le_bytes());
+            bytes.extend_from_slice(&7u64.to_le_bytes()); // step
+            bytes.extend_from_slice(&1u32.to_le_bytes()); // one section
+            bytes.extend_from_slice(&1u32.to_le_bytes()); // name len
+            bytes.push(b'm');
+            bytes.extend_from_slice(&hostile_len.to_le_bytes());
+            std::fs::write(&path, &bytes).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err();
+            assert!(format!("{err}").contains("hostile"), "len {hostile_len}: {err}");
+        }
+        // A hostile NAME length is capped the same way.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&7u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let ck = Checkpoint { step: 1, sections: vec![("p".into(), vec![1.0, 2.0])] };
+        let path = std::env::temp_dir().join("frugal_ck_trailing.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        assert!(Checkpoint::load(&path).is_ok());
+        bytes.push(0xCC);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("trailing"), "{err}");
         std::fs::remove_file(path).ok();
     }
 }

@@ -38,6 +38,18 @@ pub struct MaskBuilder {
     rng: Prng,
 }
 
+/// The serializable position of a [`MaskBuilder`]'s selection stream —
+/// what the checkpoint subsystem persists so that a resumed run's next
+/// `advance()` produces exactly the mask the uninterrupted run would
+/// have picked (the RNG stream plus the round/cursor counters).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MaskBuilderState {
+    pub round: u64,
+    pub cursor: u64,
+    pub rng_words: [u64; 4],
+    pub rng_spare: Option<f32>,
+}
+
 impl MaskBuilder {
     pub fn new(layout: Layout, rho: f32, policy: SubspacePolicy, seed: u64) -> Self {
         MaskBuilder {
@@ -54,6 +66,32 @@ impl MaskBuilder {
 
     pub fn layout(&self) -> &Layout {
         &self.layout
+    }
+
+    /// Fingerprint of the selection *rule* (not the stream position):
+    /// rho, policy, and the role routing. Checkpoints persist it so a
+    /// resume under a different rule — which would silently diverge from
+    /// the interrupted run at the next re-selection — is rejected up
+    /// front instead.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "rho={} policy={:?} full_roles={:?} free_roles={:?}",
+            self.rho, self.policy, self.statefull_roles, self.statefree_roles
+        )
+    }
+
+    /// Snapshot the selection-stream position (checkpointing).
+    pub fn ckpt_state(&self) -> MaskBuilderState {
+        let (rng_words, rng_spare) = self.rng.state();
+        MaskBuilderState { round: self.round, cursor: self.cursor as u64, rng_words, rng_spare }
+    }
+
+    /// Reposition the selection stream at a [`MaskBuilderState`]: the
+    /// next `advance()` continues the interrupted stream bit-identically.
+    pub fn restore_ckpt_state(&mut self, st: &MaskBuilderState) {
+        self.round = st.round;
+        self.cursor = st.cursor as usize;
+        self.rng = Prng::from_state(st.rng_words, st.rng_spare);
     }
 
     /// Produce the next round's mask (length = padded_size; padding = 0).
@@ -314,6 +352,31 @@ mod tests {
         for (i, p) in l.params.iter().enumerate() {
             if p.role == Role::Linear {
                 assert!(seen[i], "block {} never active", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn ckpt_state_resumes_the_selection_stream_bitwise() {
+        // Across every policy (they consume the RNG/cursor differently),
+        // restoring mid-stream must reproduce the interrupted run's
+        // remaining masks exactly.
+        let l = layout();
+        for policy in [
+            SubspacePolicy::Blockwise(BlockPolicy::Random),
+            SubspacePolicy::Blockwise(BlockPolicy::Ascending),
+            SubspacePolicy::Columnwise,
+            SubspacePolicy::RandK,
+        ] {
+            let mut a = MaskBuilder::new(l.clone(), 0.25, policy, 13);
+            for _ in 0..3 {
+                a.advance();
+            }
+            let st = a.ckpt_state();
+            let mut b = MaskBuilder::new(l.clone(), 0.25, policy, 999);
+            b.restore_ckpt_state(&st);
+            for round in 0..4 {
+                assert_eq!(a.advance(), b.advance(), "{policy:?} round {round}");
             }
         }
     }

@@ -526,6 +526,207 @@ impl Engine {
         Ok(loss)
     }
 
+    /// Snapshot the complete training state after a completed step, in a
+    /// worker-count-independent layout: Adam moments concatenated in
+    /// lane-sorted order (shards are contiguous slices of the sorted
+    /// state-full lane set), EF residuals keyed by micro-batch slot, the
+    /// mask as its lane set, and the MaskBuilder RNG stream. See
+    /// [`crate::ckpt`] for the serialization.
+    pub fn capture_state(&self) -> Result<crate::ckpt::TrainState> {
+        anyhow::ensure!(
+            self.clock.step() >= 1,
+            "nothing to checkpoint before the first optimizer step"
+        );
+        let layout = self.mask_builder.layout();
+        let k = self.plan.total_lanes();
+        let mut m = Vec::with_capacity(k);
+        let mut v = Vec::with_capacity(k);
+        for (w, st) in self.states.iter().enumerate() {
+            debug_assert_eq!(st.m.len(), self.plan.shard_len(w));
+            debug_assert_eq!(st.t, self.clock.adam_t(), "worker {w} Adam counter diverged");
+            m.extend_from_slice(&st.m);
+            v.extend_from_slice(&st.v);
+        }
+        let residual_len = self.cplan.residual_len();
+        let residuals: Vec<Vec<f32>> = if residual_len > 0 {
+            (0..self.cfg.parallel.grad_accum)
+                .map(|j| {
+                    self.residuals
+                        .slot(j)
+                        .map(|r| r.to_vec())
+                        .ok_or_else(|| anyhow::anyhow!("EF residual slot {j} missing"))
+                })
+                .collect::<Result<_>>()?
+        } else {
+            Vec::new()
+        };
+        let builder = self.mask_builder.ckpt_state();
+        let state = crate::ckpt::TrainState {
+            step: self.clock.step(),
+            round: self.round,
+            adam_t: self.clock.adam_t(),
+            update_freq: self.cfg.update_freq,
+            grad_accum: self.cfg.parallel.grad_accum,
+            workers: self.cfg.parallel.workers,
+            shard_granularity: self.cfg.parallel.shard_granularity,
+            flat_size: layout.flat_size,
+            padded_size: layout.padded_size,
+            wire_mode: self.cfg.parallel.compress.mode.as_str().to_string(),
+            wire_block: self.cfg.parallel.compress.block,
+            subspace: self.mask_builder.fingerprint(),
+            flat: self.flat.clone(),
+            full_lanes: self.plan.lanes().to_vec(),
+            rng_words: builder.rng_words,
+            rng_spare: builder.rng_spare,
+            builder_round: builder.round,
+            builder_cursor: builder.cursor,
+            m,
+            v,
+            residuals,
+            wire_bytes: self.wire_bytes,
+            wire_dense_bytes: self.wire_dense_bytes,
+        };
+        state.validate()?;
+        Ok(state)
+    }
+
+    /// Restore a captured/loaded [`crate::ckpt::TrainState`] into this
+    /// (freshly built) engine, **elastically re-sharding**: the lane-keyed
+    /// moment arrays are re-partitioned for *this* engine's worker count,
+    /// so a `workers = N` snapshot resumes bit-identically at any
+    /// `workers = M` (updates are lane-local). The engine must have been
+    /// built with the same layout, `update_freq` and `grad_accum` as the
+    /// saved run; worker count, threading and shard granularity are free.
+    pub fn restore_state(&mut self, st: crate::ckpt::TrainState) -> Result<()> {
+        st.validate()?;
+        let layout = self.mask_builder.layout();
+        anyhow::ensure!(
+            layout.padded_size == st.padded_size && layout.flat_size == st.flat_size,
+            "snapshot is for a {}/{}-lane model, this engine has {}/{}",
+            st.flat_size,
+            st.padded_size,
+            layout.flat_size,
+            layout.padded_size
+        );
+        anyhow::ensure!(
+            self.cfg.update_freq == st.update_freq,
+            "snapshot was taken at update_freq {} but this run uses {} — the round \
+             cadence is part of the math",
+            st.update_freq,
+            self.cfg.update_freq
+        );
+        anyhow::ensure!(
+            self.cfg.parallel.grad_accum == st.grad_accum,
+            "snapshot was taken at grad_accum {} but this run uses {} — the global \
+             batch is part of the math",
+            st.grad_accum,
+            self.cfg.parallel.grad_accum
+        );
+        anyhow::ensure!(
+            self.clock.step() == 0,
+            "restore_state must run on a fresh engine (already at step {})",
+            self.clock.step()
+        );
+        let fingerprint = self.mask_builder.fingerprint();
+        anyhow::ensure!(
+            fingerprint == st.subspace,
+            "snapshot used subspace selection [{}] but this run uses [{fingerprint}] — \
+             the selection rule is part of the math (masks would diverge at the next \
+             re-selection)",
+            st.subspace
+        );
+        if self.cfg.parallel.compress.mode.as_str() != st.wire_mode
+            || self.cfg.parallel.compress.block != st.wire_block
+        {
+            eprintln!(
+                "note: snapshot ran --compress {} (block {}) and this run uses {} \
+                 (block {}); resuming is valid but the loss trace only stays \
+                 bit-identical within a fixed codec",
+                st.wire_mode,
+                st.wire_block,
+                self.cfg.parallel.compress.mode,
+                self.cfg.parallel.compress.block
+            );
+        }
+
+        let padded = layout.padded_size;
+        let workers = self.cfg.parallel.workers;
+        let gran = self.cfg.parallel.shard_granularity;
+        let free = st.free_lanes();
+
+        let mut mask = vec![0.0f32; padded];
+        for &lane in &st.full_lanes {
+            mask[lane as usize] = 1.0;
+        }
+        self.flat = st.flat;
+        self.mask = mask;
+        self.round = st.round;
+        self.mask_builder.restore_ckpt_state(&crate::coordinator::subspace::MaskBuilderState {
+            round: st.builder_round,
+            cursor: st.builder_cursor,
+            rng_words: st.rng_words,
+            rng_spare: st.rng_spare,
+        });
+        self.clock = crate::train::SubspaceClock::new(self.cfg.update_freq);
+        self.clock.restore_at(st.step, st.adam_t);
+
+        self.plan = ShardPlan::partition(st.full_lanes.clone(), workers, gran);
+        self.free_plan = ShardPlan::partition(free.clone(), workers, gran);
+        self.cplan =
+            CompressPlan::new(self.cfg.parallel.compress, st.full_lanes, free, padded);
+        debug_assert_eq!(self.plan.total_lanes(), st.m.len());
+
+        // Elastic re-shard: slice the lane-ordered moment arrays by this
+        // engine's (possibly different) shard plan.
+        let mut states = Vec::with_capacity(workers);
+        let mut cursor = 0usize;
+        for w in 0..workers {
+            let n = self.plan.shard_len(w);
+            let mut state = AdamState::new(n);
+            state.m.copy_from_slice(&st.m[cursor..cursor + n]);
+            state.v.copy_from_slice(&st.v[cursor..cursor + n]);
+            state.t = st.adam_t;
+            cursor += n;
+            states.push(state);
+        }
+        self.states = states;
+
+        // Residual slots redistribute by `j % workers` — the bank's own
+        // keying — so the buffers land wherever their slot now lives.
+        let residual_len = self.cplan.residual_len();
+        self.residuals.reset(workers, self.cfg.parallel.grad_accum, residual_len);
+        if residual_len > 0 {
+            if st.residuals.is_empty() {
+                eprintln!(
+                    "note: snapshot carries no EF residuals (saved under --compress {}); \
+                     starting them from zero",
+                    st.wire_mode
+                );
+            } else {
+                anyhow::ensure!(
+                    st.residuals[0].len() == residual_len,
+                    "snapshot EF residuals cover {} lanes, this run's codec plan wants {}",
+                    st.residuals[0].len(),
+                    residual_len
+                );
+                for (j, saved) in st.residuals.iter().enumerate() {
+                    self.residuals
+                        .slot_mut(j)
+                        .ok_or_else(|| anyhow::anyhow!("residual slot {j} unallocated"))?
+                        .copy_from_slice(saved);
+                }
+            }
+        }
+
+        self.wire_bytes = st.wire_bytes;
+        self.wire_dense_bytes = st.wire_dense_bytes;
+        // Open a report for the remainder of the interrupted round (its
+        // `first_step`/occupancy are informational; steps completed
+        // before the kill are not re-counted).
+        self.reports.push(RoundReport::new(self.round, st.step - st.adam_t + 1, &self.plan));
+        Ok(())
+    }
+
     /// Mean held-out loss over `batches` validation batches (computed on
     /// worker 0's source).
     pub fn eval_loss(

@@ -12,6 +12,7 @@
 
 use super::shard::ShardPlan;
 use super::Engine;
+use crate::ckpt::{self, MomentCodec};
 use crate::Result;
 
 /// Summary of one engine round (one subspace period).
@@ -73,17 +74,56 @@ impl RoundReport {
     }
 }
 
+/// When and how the orchestrator writes snapshots (`[checkpoint]` config
+/// / `--ckpt-dir` + `--save-every`). Snapshots land in
+/// `dir/step_<N>/` via [`ckpt::save`], each one atomically committed by
+/// its manifest.
+#[derive(Clone, Debug)]
+pub struct SavePolicy {
+    /// Checkpoint root; per-step snapshot subdirectories go under it.
+    pub dir: std::path::PathBuf,
+    /// Save every N optimizer steps; 0 = only at the end of the run.
+    /// For bit-exact `q8` restores keep this a multiple of `update_freq`
+    /// so saves land on round barriers (where moment state resets anyway
+    /// — see [`crate::ckpt`]); `raw` is exact from any step.
+    pub every: u64,
+    pub codec: MomentCodec,
+    pub block: usize,
+}
+
 /// Drives an [`Engine`] through a fixed number of steps with periodic
 /// held-out evaluation and (optionally) per-round console reporting.
 pub struct Orchestrator {
     pub engine: Engine,
     /// Print round summaries and eval lines to stdout.
     pub verbose: bool,
+    /// Periodic snapshotting; `None` = checkpointing off.
+    pub save: Option<SavePolicy>,
 }
 
 impl Orchestrator {
     pub fn new(engine: Engine) -> Orchestrator {
-        Orchestrator { engine, verbose: false }
+        Orchestrator { engine, verbose: false, save: None }
+    }
+
+    /// Write a snapshot of the engine's current state under the policy's
+    /// root, named by global step.
+    fn save_snapshot(&self, policy: &SavePolicy) -> Result<()> {
+        let step = self.engine.global_step();
+        let dir = policy.dir.join(ckpt::step_dir_name(step));
+        let state = self.engine.capture_state()?;
+        let report = ckpt::save(&dir, &state, policy.codec, policy.block)?;
+        if self.verbose {
+            println!(
+                "checkpoint: step {step} -> {} ({} files, {} bytes, moments {} via {})",
+                report.dir.display(),
+                report.files,
+                report.bytes,
+                report.moment_bytes,
+                policy.codec
+            );
+        }
+        Ok(())
     }
 
     /// Run `steps` optimizer steps. `train_fn` maps a global micro-batch
@@ -112,8 +152,18 @@ impl Orchestrator {
             let n_reports = self.engine.reports().len();
             if self.verbose && n_reports > finished_rounds + 1 {
                 let prev = &self.engine.reports()[n_reports - 2];
-                print_round(prev);
+                // A zero-step report is the placeholder a resume opens
+                // for its interrupted round — nothing ran locally.
+                if prev.steps > 0 {
+                    print_round(prev);
+                }
                 finished_rounds = n_reports - 1;
+            }
+            if let Some(policy) = &self.save {
+                let gs = self.engine.global_step();
+                if (policy.every > 0 && gs % policy.every == 0) || s + 1 == steps {
+                    self.save_snapshot(policy)?;
+                }
             }
             if (s + 1) % eval_every == 0 || s + 1 == steps {
                 last_val = self.engine.eval_loss(eval_batches, &mut *val_fn)?;
@@ -219,6 +269,33 @@ mod tests {
             assert_eq!(r.wire_bytes, r.wire_dense_bytes);
             assert!((r.wire_reduction() - 1.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn save_policy_snapshots_on_cadence_and_at_the_end() {
+        let (mut orch, model) = build(2, 3);
+        let dir = std::env::temp_dir()
+            .join(format!("frugal_orch_save_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        orch.save = Some(SavePolicy {
+            dir: dir.clone(),
+            every: 3,
+            codec: MomentCodec::Q8,
+            block: 64,
+        });
+        let train = batch_closure(&model);
+        let val = batch_closure(&model);
+        orch.run(7, &train, &mut |i| val(2000 + i), 100, 1).unwrap();
+        // Saves at steps 3 and 6 (cadence) plus 7 (end of run).
+        for step in [3u64, 6, 7] {
+            let snap = dir.join(ckpt::step_dir_name(step));
+            assert!(snap.join(ckpt::MANIFEST_NAME).is_file(), "missing snapshot {step}");
+            assert!(ckpt::load(&snap).is_ok(), "snapshot {step} unreadable");
+        }
+        // The root resolves to the newest snapshot.
+        let picked = ckpt::resolve_snapshot_dir(&dir).unwrap();
+        assert!(picked.ends_with(ckpt::step_dir_name(7)));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

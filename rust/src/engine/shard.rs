@@ -47,6 +47,12 @@ impl ShardPlan {
         self.bounds.len().saturating_sub(1)
     }
 
+    /// The full sorted lane set, i.e. all shards concatenated in worker
+    /// order — the lane-keyed layout checkpoints serialize.
+    pub fn lanes(&self) -> &[u32] {
+        &self.lanes
+    }
+
     /// Total lanes across all shards.
     pub fn total_lanes(&self) -> usize {
         self.lanes.len()
@@ -132,6 +138,15 @@ impl ResidualBank {
     /// Mutable per-worker slot lists — disjoint, one per OS thread.
     pub fn per_worker_mut(&mut self) -> &mut [Vec<Vec<f32>>] {
         &mut self.per_worker
+    }
+
+    /// Slot `j`'s buffer, read-only (checkpoint capture).
+    pub fn slot(&self, j: usize) -> Option<&[f32]> {
+        let n = self.per_worker.len();
+        if n == 0 {
+            return None;
+        }
+        self.per_worker[j % n].get(j / n).map(|v| v.as_slice())
     }
 
     /// Slot `j`'s buffer (logical-worker path); `None` when error

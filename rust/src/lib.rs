@@ -26,9 +26,15 @@
 //!   orchestrator, and a pure-Rust reference LM so the whole path runs
 //!   without PJRT artifacts. Invariant: `--workers N` is bit-identical
 //!   to `--workers 1` at a fixed global batch.
-//! - [`config`]: TOML experiment configuration (incl. `[parallel]`).
+//! - [`ckpt`]: fault-tolerant sharded checkpoint/resume — versioned
+//!   manifest + CRC-checked per-worker shard files (lane-keyed, so
+//!   snapshots restore bit-identically at any worker count), q8/raw
+//!   moment codecs, atomic writes. `--save-every` / `--resume`.
+//! - [`config`]: TOML experiment configuration (incl. `[parallel]` and
+//!   `[checkpoint]`).
 //! - [`toy`]: closed-form toy problems for the theory experiments.
 
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;

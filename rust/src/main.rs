@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   info      — show artifact manifest + platform
 //!   pretrain  — pre-train a model config on the synthetic corpus
-//!               (`--workers N` switches to the data-parallel engine)
+//!               (`--workers N` switches to the data-parallel engine;
+//!               `--ckpt-dir`/`--save-every`/`--resume` snapshot/restore)
+//!   ckpt      — inspect a sharded snapshot (manifest + CRC verify)
 //!   memory    — print the paper's Table 2 memory columns (analytic, §C)
 //!   toy       — Figure 3 toy quadratic (state re-projection)
 //!   angles    — Figure 2 principal-angle analysis
@@ -15,13 +17,15 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use frugal::ckpt::{self, MomentCodec};
 use frugal::coordinator::metrics::perplexity;
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::engine::orchestrator::SavePolicy;
 use frugal::engine::{CompressMode, Engine, EngineCfg, GradSource, Orchestrator, ParallelCfg,
                      RefLm, RefLmCfg, Sources};
-use frugal::optim::memory::{fmt_gib, lane_wire_bytes, optimizer_state_bytes, split_wire_report,
-                            ArchSpec, Method, WireCodec};
+use frugal::optim::memory::{checkpoint_bytes, fmt_gib, lane_wire_bytes, optimizer_state_bytes,
+                            split_wire_report, ArchSpec, Method, WireCodec};
 use frugal::runtime::{Manifest, Runtime};
 use frugal::train::{FusedTrainer, GradTrainer, PjrtGradSource};
 use frugal::util::Prng;
@@ -38,6 +42,9 @@ USAGE:
                   [--workers N] [--grad-accum M] [--backend auto|ref|pjrt]
                   [--compress none|sign-ef|q8|split] [--compress-block N]
                   [--straggler-ms N] [--timeout-ms N] [--sequential]
+                  [--ckpt-dir DIR] [--save-every N] [--ckpt-codec q8|raw]
+                  [--resume DIR]
+  frugal ckpt     inspect DIR
   frugal memory   [--model SCALE]
   frugal toy      [--steps N] [--rank R] [--update-freq T]
   frugal angles   [--artifacts DIR] [--model M] [--steps N]
@@ -51,6 +58,15 @@ fixed --grad-accum (the global batch).
 ships state-free lanes as 1-bit signs (+ error feedback) and state-full
 lanes as blockwise 8-bit — the bit-identity across worker counts holds
 within any fixed codec.
+
+`--ckpt-dir DIR` snapshots the sharded training state under DIR every
+--save-every steps (and at the end of the run); `--resume DIR` restores
+one (DIR may be a snapshot or a checkpoint root — newest step wins) and
+continues to --steps total. Shards are keyed by lane, so a snapshot
+taken at --workers N resumes bit-identically at any --workers M; keep
+--save-every a multiple of --update-freq for bit-exact q8 restores, or
+use --ckpt-codec raw. `frugal ckpt inspect DIR` prints a snapshot's
+manifest and verifies every file's CRC.
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -186,11 +202,33 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                 let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
                 p.compress.block = b.max(1) as usize;
             }
+            // Checkpoint/resume flags (engine path — the sharded v2
+            // subsystem snapshots engine state).
+            if let Some(d) = args.get("ckpt-dir") {
+                cfg.checkpoint.dir = Some(d.to_string());
+            }
+            if let Some(n) = args.get_u64("save-every")? {
+                cfg.checkpoint.save_every = n;
+            }
+            if let Some(c) = args.get("ckpt-codec") {
+                cfg.checkpoint.codec = MomentCodec::parse(c)?;
+            }
+            let resume = args.get("resume").map(|s| s.to_string());
             // --backend alone also opts into the engine (it has no
-            // meaning on the legacy paths and must not be ignored).
-            if args.get("backend").is_some() {
+            // meaning on the legacy paths and must not be ignored) — as
+            // do the checkpoint/resume flags and a [checkpoint] section.
+            if args.get("backend").is_some()
+                || resume.is_some()
+                || cfg.checkpoint.dir.is_some()
+            {
                 cfg.parallel.get_or_insert_with(ParallelCfg::default);
             }
+            anyhow::ensure!(
+                cfg.checkpoint.dir.is_some()
+                    || (cfg.checkpoint.save_every == 0 && args.get("ckpt-codec").is_none()),
+                "--save-every/--ckpt-codec need a checkpoint root: pass --ckpt-dir DIR \
+                 (or set dir in the [checkpoint] config section)"
+            );
             if cfg.parallel.is_some() {
                 anyhow::ensure!(
                     !args.has("fused"),
@@ -198,10 +236,20 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                      combine with the engine flags (--workers/--grad-accum/...)"
                 );
                 let backend = args.get("backend").unwrap_or("auto").to_string();
-                pretrain_parallel(cfg, &backend)
+                pretrain_parallel(cfg, &backend, resume.as_deref())
             } else {
                 pretrain(cfg, args.has("fused"))
             }
+        }
+        "ckpt" => {
+            let (Some(action), Some(dir)) = (rest.first(), rest.get(1)) else {
+                anyhow::bail!("usage: frugal ckpt inspect DIR");
+            };
+            anyhow::ensure!(
+                action.as_str() == "inspect",
+                "unknown ckpt action '{action}' (expected: inspect)"
+            );
+            ckpt_inspect(Path::new(dir))
         }
         "memory" => {
             let args = Args::parse(rest, &[])?;
@@ -248,6 +296,57 @@ fn info(artifacts: &Path) -> frugal::Result<()> {
         );
     }
     println!("optimizer kernels: {}", man.optim.len());
+    Ok(())
+}
+
+/// `frugal ckpt inspect DIR`: print the snapshot manifest, verify every
+/// data file's pinned size + CRC-32, and run the full structural
+/// validation a resume would.
+fn ckpt_inspect(path: &Path) -> frugal::Result<()> {
+    let dir = ckpt::resolve_snapshot_dir(path)?;
+    let man = ckpt::CkptManifest::read(&dir)?;
+    println!("snapshot: {}", dir.display());
+    println!(
+        "  format v{}  step {}  round {} (mask epoch)  adam_t {}",
+        man.version, man.step, man.round, man.adam_t
+    );
+    println!(
+        "  update_freq {}  grad_accum {}  workers {}  shard_granularity {}",
+        man.update_freq, man.grad_accum, man.workers, man.shard_granularity
+    );
+    println!(
+        "  model lanes {}/{} (flat/padded)  statefull {}  wire codec '{}' (block {})",
+        man.flat_size, man.padded_size, man.statefull_lanes, man.wire_mode, man.wire_block
+    );
+    println!("  subspace [{}]", man.subspace);
+    println!(
+        "  moment codec {} (block {})  data bytes {}",
+        man.moment_codec, man.codec_block, man.data_bytes()
+    );
+    println!(
+        "  {:<16} {:>7} {:>10} {:>10} {:>11}  lanes",
+        "file", "worker", "bytes", "crc32", ""
+    );
+    println!(
+        "  {:<16} {:>7} {:>10} {:#010x}",
+        man.meta.file, "-", man.meta.bytes, man.meta.crc32
+    );
+    for s in &man.shards {
+        println!(
+            "  {:<16} {:>7} {:>10} {:#010x}  {:>6}..{} ({} lanes)",
+            s.file,
+            s.worker,
+            s.bytes,
+            s.crc32,
+            s.lane_start,
+            s.lane_end,
+            s.lane_end - s.lane_start
+        );
+    }
+    // The deep check: re-reads every file against its pinned CRC and
+    // re-validates the assembled state (what a resume would do).
+    ckpt::load(&dir)?;
+    println!("ok: all files verified (crc32) and the state validates for resume");
     Ok(())
 }
 
@@ -338,7 +437,14 @@ fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
 ///   thread; the PJRT CPU client parallelizes internally).
 /// - `ref`:  the built-in pure-Rust reference LM on N OS threads.
 /// - `auto`: `pjrt` when artifacts are loadable, else `ref`.
-fn pretrain_parallel(mut cfg: TrainConfig, backend: &str) -> frugal::Result<()> {
+///
+/// `resume` restores a `ckpt` snapshot (elastically re-sharded to this
+/// run's worker count) and continues to `cfg.steps` total steps.
+fn pretrain_parallel(
+    mut cfg: TrainConfig,
+    backend: &str,
+    resume: Option<&str>,
+) -> frugal::Result<()> {
     // The engine implements the FRUGAL update (subspace-masked AdamW +
     // signSGD); a different --optimizer must not silently run as FRUGAL.
     match cfg.optimizer.as_str() {
@@ -441,11 +547,57 @@ fn pretrain_parallel(mut cfg: TrainConfig, backend: &str) -> frugal::Result<()> 
     let engine = Engine::new(mask_builder, engine_cfg, sources, init)?;
     let mut orch = Orchestrator::new(engine);
     orch.verbose = true;
+    if let Some(dir) = &cfg.checkpoint.dir {
+        orch.save = Some(SavePolicy {
+            dir: PathBuf::from(dir),
+            every: cfg.checkpoint.save_every,
+            codec: cfg.checkpoint.codec,
+            block: cfg.checkpoint.block,
+        });
+        if cfg.checkpoint.save_every > 0
+            && cfg.checkpoint.codec == MomentCodec::Q8
+            && cfg.checkpoint.save_every % cfg.update_freq != 0
+        {
+            println!(
+                "note: --save-every {} is not a multiple of --update-freq {}; q8 \
+                 snapshots taken mid-round restore approximately (use --ckpt-codec \
+                 raw for bit-exact mid-round restores)",
+                cfg.checkpoint.save_every, cfg.update_freq
+            );
+        }
+    }
+
+    // Resume: restore the snapshot into the fresh engine (elastic
+    // re-sharding happens inside) and run only the remaining steps.
+    let mut steps = cfg.steps;
+    if let Some(resume_path) = resume {
+        let snap = ckpt::resolve_snapshot_dir(Path::new(resume_path))?;
+        let man = ckpt::CkptManifest::read(&snap)?;
+        let state = ckpt::load(&snap)?;
+        println!(
+            "resume: {} — step {}, round {}, saved at workers={} (moments {}), \
+             restoring at workers={}",
+            snap.display(),
+            man.step,
+            man.round,
+            man.workers,
+            man.moment_codec,
+            cfg.parallel.as_ref().map(|p| p.workers).unwrap_or(1)
+        );
+        anyhow::ensure!(
+            man.step < cfg.steps,
+            "snapshot is already at step {} but --steps is {}; nothing to resume",
+            man.step,
+            cfg.steps
+        );
+        orch.engine.restore_state(state)?;
+        steps = cfg.steps - man.step;
+    }
 
     let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(vocab));
     let train_fn = |micro: u64| corpus.train_batch(batch, seq_len, micro).tokens;
     let mut val_fn = |idx: u64| corpus.val_batch(batch, seq_len, idx).tokens;
-    orch.run(cfg.steps, &train_fn, &mut val_fn, cfg.eval_every, cfg.eval_batches)?;
+    orch.run(steps, &train_fn, &mut val_fn, cfg.eval_every, cfg.eval_batches)?;
 
     let per_worker = orch.engine.state_floats_per_worker();
     println!(
@@ -547,6 +699,44 @@ fn memory_table(model: Option<&str>) -> frugal::Result<()> {
     println!(
         "(split overheads = per-slot EF residual + block scales, relative to \
          bytes-on-wire saved per message)"
+    );
+
+    // Snapshot accounting (the `ckpt` subsystem, analytic): raw-f32 flat
+    // params + mask lane ids + the sharded Adam moments through the
+    // checkpoint codec; split/sign-ef runs additionally persist one
+    // raw-f32 EF residual buffer per micro-batch slot over the
+    // state-free lanes, which dominates at large grad_accum.
+    println!(
+        "\nCheckpoint bytes per snapshot at rho={rho} (ckpt codec; flat f32 + mask + \
+         moments [+ EF residual slots]):"
+    );
+    print!("{:<22}", "codec");
+    for scale in &scales {
+        print!(" {scale:>8}");
+    }
+    println!();
+    let ckpt_rows: Vec<(&str, WireCodec, u64)> = vec![
+        ("ckpt raw-f32", WireCodec::F32, 0),
+        ("ckpt q8 moments", WireCodec::Q8 { block }, 0),
+        ("ckpt q8 + EF ga=4", WireCodec::Q8 { block }, 4),
+    ];
+    for (name, codec, ef_slots) in ckpt_rows {
+        print!("{name:<22}");
+        for scale in &scales {
+            let arch = ArchSpec::paper_llama(scale)?;
+            print!(" {:>8}", fmt_gib(checkpoint_bytes(&arch, rho, codec, ef_slots)));
+        }
+        println!();
+    }
+    print!("{:<22}", "dense AdamW blob");
+    for scale in &scales {
+        let arch = ArchSpec::paper_llama(scale)?;
+        print!(" {:>8}", fmt_gib(12 * arch.total_params()));
+    }
+    println!();
+    println!(
+        "(EF rows apply to --compress split|sign-ef runs; barrier-aligned saves could \
+         elide moments+EF entirely — see ROADMAP)"
     );
     Ok(())
 }

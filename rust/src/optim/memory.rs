@@ -185,6 +185,26 @@ impl SplitWireReport {
     }
 }
 
+/// Bytes of one engine snapshot (the `ckpt` subsystem) at density `rho`:
+/// the raw-f32 flat parameter vector, the u32 state-full lane ids (the
+/// mask), both Adam moment arrays stored through `moments` —
+/// [`WireCodec::F32`] models the `raw` checkpoint codec,
+/// [`WireCodec::Q8`] the `BlockQ8` one — and, when the run's wire codec
+/// carries error feedback (`sign-ef`/`split`), `ef_slots = grad_accum`
+/// raw-f32 residual buffers over the state-free lanes (pass 0 for
+/// `none`/`q8` wire modes). FRUGAL's point applies to snapshots too:
+/// only the K state-full lanes carry moments, so the EF-less checkpoint
+/// is a fraction of a dense-Adam blob (params + 2 full moments = 12
+/// bytes/param) — but note the residual banks scale with `grad_accum ×
+/// (1-rho)` and dominate split-mode snapshots at large global batches.
+pub fn checkpoint_bytes(arch: &ArchSpec, rho: f64, moments: WireCodec, ef_slots: u64) -> u64 {
+    let full = arch.statefull_lanes(rho);
+    4 * arch.total_params()
+        + 4 * full
+        + 2 * lane_wire_bytes(full, moments)
+        + ef_slots * 4 * arch.statefree_lanes(rho)
+}
+
 /// [`SplitWireReport`] for `arch` at density `rho` with `block`-lane
 /// scale blocks.
 pub fn split_wire_report(arch: &ArchSpec, rho: f64, block: u64) -> SplitWireReport {
@@ -318,6 +338,43 @@ mod tests {
         }
         assert_eq!(arch.statefree_lanes(1.0), 0);
         assert_eq!(arch.statefull_lanes(0.0), arch.non_linear_params());
+    }
+
+    #[test]
+    fn checkpoint_bytes_track_the_codec_and_beat_dense_adam() {
+        let block = 256u64;
+        for scale in ["60M", "130M", "350M", "1B"] {
+            let arch = ArchSpec::paper_llama(scale).unwrap();
+            let raw = checkpoint_bytes(&arch, 0.25, WireCodec::F32, 0);
+            let q8 = checkpoint_bytes(&arch, 0.25, WireCodec::Q8 { block }, 0);
+            let full = arch.statefull_lanes(0.25);
+            // q8 drops ~3 of each moment float's 4 bytes (x2 moments),
+            // minus the block-scale overhead.
+            let saved = raw - q8;
+            assert!(saved >= 5 * full, "{scale}: q8 only saved {saved}B over {full} lanes");
+            assert!(q8 < raw);
+            // q8 stays well under a dense-Adam snapshot (params + 2 full
+            // f32 moments = 12 bytes/param) at every scale.
+            let dense_adam = 12 * arch.total_params();
+            assert!(10 * q8 < 7 * dense_adam, "{scale}: q8 ckpt {q8} vs dense {dense_adam}");
+        }
+        // rho monotonicity: more state-full lanes, bigger snapshot.
+        let arch = ArchSpec::paper_llama("130M").unwrap();
+        let mut prev = 0;
+        for rho in [0.0, 0.25, 0.5, 1.0] {
+            let b = checkpoint_bytes(&arch, rho, WireCodec::Q8 { block }, 0);
+            assert!(b > prev);
+            prev = b;
+        }
+        // EF residual accounting: each slot adds exactly 4 bytes per
+        // state-free lane, and at rho=1 there are no free lanes to carry.
+        let base = checkpoint_bytes(&arch, 0.25, WireCodec::Q8 { block }, 0);
+        let with_ef = checkpoint_bytes(&arch, 0.25, WireCodec::Q8 { block }, 4);
+        assert_eq!(with_ef - base, 16 * arch.statefree_lanes(0.25));
+        assert_eq!(
+            checkpoint_bytes(&arch, 1.0, WireCodec::Q8 { block }, 4),
+            checkpoint_bytes(&arch, 1.0, WireCodec::Q8 { block }, 0)
+        );
     }
 
     #[test]

@@ -145,6 +145,14 @@ impl SubspaceClock {
         self.step
     }
 
+    /// Reposition the clock at a checkpointed position (`step` completed
+    /// steps, `adam_t` steps into the current subspace period) so a
+    /// resumed run ticks on exactly like the uninterrupted one.
+    pub fn restore_at(&mut self, step: u64, adam_t: u64) {
+        self.step = step;
+        self.adam_t = adam_t;
+    }
+
     /// 1-based Adam step within the current subspace period.
     pub fn adam_t(&self) -> u64 {
         self.adam_t
