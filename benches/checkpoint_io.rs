@@ -10,7 +10,7 @@
 //!
 //! Env knobs: FRUGAL_BENCH_STEPS (timed iterations per op, default 10).
 
-use frugal::ckpt::{self, MomentCodec};
+use frugal::ckpt::{self, MomentCodec, SaveOptions};
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::coordinator::LrSchedule;
 use frugal::engine::{
@@ -68,9 +68,10 @@ fn main() -> frugal::Result<()> {
         batch: 4,
     });
     let mut engine = build_engine(&model);
-    let batch_fn = |micro: u64| {
+    let batch_fn = |micro: u64, buf: &mut Vec<i32>| {
         let mut rng = frugal::util::Prng::seed_from_u64(0xBE4C ^ micro);
-        (0..4 * 64).map(|_| rng.range(0, 512) as i32).collect::<Vec<i32>>()
+        buf.clear();
+        buf.extend((0..4 * 64).map(|_| rng.range(0, 512) as i32));
     };
     // Mid-round (3 steps at T=10): moments and residuals are live, so
     // the snapshot is as large as it gets.
@@ -92,9 +93,9 @@ fn main() -> frugal::Result<()> {
     let mut bytes_by_codec = Vec::new();
     for codec in [MomentCodec::Raw, MomentCodec::Q8] {
         let sub = dir.join(codec.as_str());
-        let report = ckpt::save(&sub, &state, codec, 256)?;
+        let report = ckpt::save(&sub, &state, SaveOptions::exact(codec, 256))?;
         let save_t = time_fn(1, iters, || {
-            ckpt::save(&sub, &state, codec, 256).unwrap();
+            ckpt::save(&sub, &state, SaveOptions::exact(codec, 256)).unwrap();
         });
         let load_t = time_fn(1, iters, || {
             std::hint::black_box(ckpt::load(&sub).unwrap());

@@ -77,7 +77,9 @@ fn main() -> frugal::Result<()> {
     });
     let rcfg = model.cfg().clone();
     let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(rcfg.vocab));
-    let batch_fn = move |micro: u64| corpus.train_batch(rcfg.batch, rcfg.seq_len, micro).tokens;
+    let batch_fn = move |micro: u64, buf: &mut Vec<i32>| {
+        corpus.fill_train_batch(rcfg.batch, rcfg.seq_len, micro, buf);
+    };
 
     println!(
         "compress_reduce: {} params, workers={WORKERS}, grad_accum={GRAD_ACCUM}, \

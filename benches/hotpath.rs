@@ -1,185 +1,449 @@
-//! Hot-path performance harness (§Perf in EXPERIMENTS.md, paper Table 21's
-//! wall-clock column).
+//! Hot-path performance harness: the pooled/vectorized round loop vs its
+//! scalar history (ISSUE 4's perf trajectory seed).
 //!
-//! Measures, per layer:
-//!   L3: Rust optimizer step throughput (elements/s) for the full suite —
-//!       the paper's claim that FRUGAL adds ~0% step-time overhead while
-//!       SVD-based methods (GaLore refresh, Fira, LDAdam) pay heavily.
-//!   L1/runtime: fused PJRT train-step latency vs (grad PJRT + Rust
-//!       optimizer), plus the optimizer-only Pallas kernel artifact.
-//!   Marshalling: literal upload/download cost for the flat vector.
+//! Entirely PJRT-free — everything runs on the pure-Rust substrate, so
+//! CI's `bench-smoke` job can gate on it. Measures and emits
+//! `BENCH_hotpath.json` records for:
+//!
+//!   - **Optimizer step throughput** (Melem/s) for the suite's hot
+//!     members (frugal / frugal0 / adamw / signsgd), plus the fused
+//!     chunked Adam kernel vs a scalar two-pass reference baseline
+//!     (update-into-scratch + axpy — the pre-vectorization structure)
+//!     recorded in the same run.
+//!   - **Codec throughput** (GB/s of f32 input, encode and decode) for
+//!     SignEf and BlockQ8 vs their scalar reference implementations
+//!     (per-element loops with allocating outputs — the pre-PR code
+//!     shape), plus the `--compress none` memcpy-equivalent baseline for
+//!     context.
+//!   - **Save-handoff stall** (ms the training thread spends per
+//!     snapshot): synchronous serialize-and-commit vs background-writer
+//!     capture+submit.
+//!
+//! Self-relative perf gates (runner-speed-proof — both sides measured in
+//! the same process): SignEf and BlockQ8 encode+decode must be ≥ 1.5×
+//! their scalar baselines; the kernels must also match the baselines
+//! **bitwise** before any timing (a wrong fast kernel must fail loudly).
+//!
+//! Env knobs: FRUGAL_BENCH_STEPS (timed iterations, default 10).
 
-mod common;
-
-use common::*;
-use frugal::data::{CorpusConfig, SyntheticCorpus};
-use frugal::runtime::{lit_f32, lit_scalar1, to_vec_f32};
-use frugal::train::{init_flat, GradTrainer};
-use frugal::util::bench::{print_table, time_fn};
+use frugal::ckpt::{self, MomentCodec, SaveOptions, SnapshotWriter};
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::engine::{
+    BlockQ8Codec, CompressCfg, CompressMode, Engine, EngineCfg, GradCodec, GradSource,
+    ParallelCfg, Payload, RefLm, RefLmCfg, SignEfCodec, Sources,
+};
+use frugal::optim::adamw::{AdamCfg, AdamState};
+use frugal::optim::frugal::BlockPolicy;
+use frugal::optim::{Layout, Optimizer};
+use frugal::util::bench::{json_record, print_table, time_fn, write_json_records};
+use frugal::util::Prng;
 use frugal::TrainConfig;
 
+/// Lanes for the codec / kernel micro-benchmarks (16 MiB of f32).
+const CODEC_LANES: usize = 1 << 22;
+/// Scale-block size (the config default).
+const BLOCK: usize = 256;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Prng::seed_from_u64(seed);
+    (0..n).map(|_| 0.1 * rng.normal()).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementations — the pre-vectorization code shapes,
+// kept here as the same-run baseline the CI gate compares against.
+// ---------------------------------------------------------------------------
+
+/// Historical SignEf encode: materializes `e`, then per-element loops
+/// with `i / block` indexing and allocating outputs.
+fn scalar_sign_encode(vals: &[f32], block: usize) -> Payload {
+    let n = vals.len();
+    let e: Vec<f32> = vals.to_vec();
+    let mut scales = Vec::with_capacity(n.div_ceil(block));
+    for blk in e.chunks(block) {
+        let mut sum = 0.0f32;
+        for &x in blk {
+            sum += x.abs();
+        }
+        scales.push(sum / blk.len() as f32);
+    }
+    let mut bits = vec![0u64; n.div_ceil(64)];
+    for (i, &x) in e.iter().enumerate() {
+        if x >= 0.0 {
+            bits[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    Payload::Sign { len: n, block, bits, scales }
+}
+
+/// Historical per-element decode (fresh output vector, `i / block`
+/// scale lookup per lane).
+fn scalar_decode(payload: &Payload) -> Vec<f32> {
+    match payload {
+        Payload::F32(v) => v.clone(),
+        Payload::Sign { len, block, bits, scales } => {
+            let mut out = Vec::with_capacity(*len);
+            for i in 0..*len {
+                let s = scales[i / block];
+                let positive = (bits[i / 64] >> (i % 64)) & 1 == 1;
+                out.push(if positive { s } else { -s });
+            }
+            out
+        }
+        Payload::Q8 { len, block, q, scales } => {
+            let mut out = Vec::with_capacity(*len);
+            for i in 0..*len {
+                out.push(q[i] as f32 * scales[i / block]);
+            }
+            out
+        }
+    }
+}
+
+/// Historical BlockQ8 encode: per-element `push` into growing vectors.
+fn scalar_q8_encode(vals: &[f32], block: usize) -> Payload {
+    let n = vals.len();
+    let mut q = Vec::with_capacity(n);
+    let mut scales = Vec::with_capacity(n.div_ceil(block));
+    for blk in vals.chunks(block) {
+        let mut amax = 0.0f32;
+        for &x in blk {
+            amax = amax.max(x.abs());
+        }
+        if amax == 0.0 {
+            scales.push(0.0);
+            q.resize(q.len() + blk.len(), 0);
+            continue;
+        }
+        let scale = amax / 127.0;
+        scales.push(scale);
+        for &x in blk {
+            q.push((x / scale).round().clamp(-127.0, 127.0) as i8);
+        }
+    }
+    Payload::Q8 { len: n, block, q, scales }
+}
+
+/// Historical FRUGAL state-full update: memset scratch, update_into,
+/// then a second axpy sweep (the two-pass shape `apply_no_decay` fused).
+fn scalar_adam_two_pass(
+    st: &mut AdamState,
+    params: &mut [f32],
+    grads: &[f32],
+    lr: f32,
+    cfg: &AdamCfg,
+    scratch: &mut Vec<f32>,
+) {
+    scratch.clear();
+    scratch.resize(params.len(), 0.0);
+    st.t += 1;
+    let bc1 = 1.0 - cfg.beta1.powi(st.t as i32);
+    let bc2 = 1.0 - cfg.beta2.powi(st.t as i32);
+    for i in 0..grads.len() {
+        let g = grads[i];
+        let m = cfg.beta1 * st.m[i] + (1.0 - cfg.beta1) * g;
+        let v = cfg.beta2 * st.v[i] + (1.0 - cfg.beta2) * g * g;
+        st.m[i] = m;
+        st.v[i] = v;
+        scratch[i] = (m / bc1) / ((v / bc2).sqrt() + cfg.eps);
+    }
+    for i in 0..params.len() {
+        params[i] -= lr * scratch[i];
+    }
+}
+
+fn gb_per_s(lanes: usize, median_ns: f64) -> f64 {
+    (4 * lanes) as f64 / median_ns // bytes per ns == GB/s
+}
+
 fn main() -> frugal::Result<()> {
-    let (rt, man) = open()?;
-    let model = bench_model();
-    let entry = man.model(&model)?.clone();
-    let layout = entry.layout();
-    let n = layout.padded_size;
+    let iters: usize = std::env::var("FRUGAL_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let mut records = Vec::new();
 
     // ------------------------------------------------------------------
-    // L3 optimizer-step throughput (pure Rust, synthetic grads).
+    // Optimizer-step throughput (pure Rust, synthetic layout).
     // ------------------------------------------------------------------
-    println!("## L3 optimizer step throughput (n = {n} params)\n");
+    let layout = Layout::synthetic(512, 128, 512, 4);
+    let n = layout.padded_size;
+    println!("## optimizer step throughput (n = {n} lanes, {iters} iters)\n");
     let mut grads = vec![0.0f32; n];
     for (i, g) in grads.iter_mut().enumerate() {
         *g = ((i % 31) as f32 - 15.0) * 1e-3;
     }
     let mut rows = Vec::new();
-    for name in ["adamw", "signsgd", "frugal", "frugal0", "badam", "galore", "fira", "ldadam",
-                 "adamem", "lion", "adafactor"] {
+    for name in ["frugal", "frugal0", "adamw", "signsgd"] {
         let cfg = TrainConfig { optimizer: name.into(), update_freq: 50, ..Default::default() };
         let mut opt = cfg.build_optimizer(&layout)?;
         let mut params = vec![0.1f32; n];
         // Prime projection state outside the timed region.
         opt.step(&mut params, &grads, 1e-3);
-        let t = time_fn(2, 10, || {
+        let t = time_fn(2, iters, || {
             opt.step(&mut params, &grads, 1e-3);
         });
+        let melem_s = t.elements_per_s(n) / 1e6;
         rows.push(vec![
             name.to_string(),
             format!("{:.3}", t.per_iter_ms()),
-            format!("{:.1}M", t.elements_per_s(n) / 1e6),
+            format!("{melem_s:.1}M"),
         ]);
+        records.push(json_record(
+            "hotpath",
+            &format!("optimizer={name}"),
+            &[("lanes", n as f64), ("ms_per_step", t.per_iter_ms()), ("melem_per_s", melem_s)],
+        ));
+        println!("{}", records.last().unwrap());
     }
     print_table("optimizer.step() cost", &["optimizer", "ms/step", "Melem/s"], &rows);
 
-    // ------------------------------------------------------------------
-    // End-to-end step latency: fused vs grad+rust (the Table 21 analogue).
-    // ------------------------------------------------------------------
-    println!("\n## end-to-end step latency ({model})\n");
-    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
-    let batch = corpus.train_batch(entry.batch, entry.seq_len, 0);
-
-    use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
-    use frugal::coordinator::LrSchedule;
-    use frugal::optim::frugal::BlockPolicy;
-    use frugal::train::FusedTrainer;
-
-    let mut rows = Vec::new();
-    {
-        let mb = MaskBuilder::new(layout.clone(), 0.25,
-                                  SubspacePolicy::Blockwise(BlockPolicy::Random), 0);
-        let mut tr = FusedTrainer::new(&rt, &man, &model, mb,
-                                       LrSchedule::ConstantWarmup { warmup: 0 }, 1e-3, 1.0, 200,
-                                       0)?;
-        tr.step(&batch.tokens)?; // compile+warm
-        let t = time_fn(2, 10, || {
-            tr.step(&batch.tokens).unwrap();
-        });
-        rows.push(vec!["fused (FRUGAL kernel in HLO)".into(),
-                       format!("{:.2}", t.per_iter_ms())]);
-    }
-    for opt_name in ["adamw", "frugal", "galore", "fira", "ldadam"] {
-        let cfg =
-            TrainConfig { optimizer: opt_name.into(), update_freq: 200, ..Default::default() };
-        let opt = cfg.build_optimizer(&layout)?;
-        let mut tr = GradTrainer::new(&rt, &man, &model, opt,
-                                      LrSchedule::ConstantWarmup { warmup: 0 }, 1e-3, 0)?;
-        tr.step(&batch.tokens)?;
-        let t = time_fn(2, 10, || {
-            tr.step(&batch.tokens).unwrap();
-        });
-        rows.push(vec![format!("grad + rust {opt_name}"), format!("{:.2}", t.per_iter_ms())]);
-    }
-    print_table("per-step wall time", &["path", "ms/step"], &rows);
-
-    // ------------------------------------------------------------------
-    // Optimizer-only Pallas kernel artifact + marshalling costs.
-    // ------------------------------------------------------------------
-    println!("\n## L1 kernel artifact + marshalling (flat = 2^20 f32)\n");
+    // Fused chunked Adam kernel vs the scalar two-pass reference, same
+    // run, bitwise-checked first.
     let kn = 1 << 20;
-    let exe = rt.load(&man.optim_artifact(&format!("frugal_update_{kn}"))?)?;
-    let p = vec![0.1f32; kn];
-    let g = vec![0.01f32; kn];
-    let m = vec![0.0f32; kn];
-    let v = vec![0.0f32; kn];
-    let mask: Vec<f32> = (0..kn).map(|i| (i % 4 == 0) as u32 as f32).collect();
-    let run = || {
-        let out = exe
-            .run(&[lit_f32(&p), lit_f32(&g), lit_f32(&m), lit_f32(&v), lit_f32(&mask),
-                   lit_scalar1(1e-3), lit_scalar1(1e-3), lit_scalar1(1.0)])
-            .unwrap();
-        std::hint::black_box(out);
-    };
-    run();
-    let t_kernel = time_fn(2, 10, run);
-
-    let t_upload = time_fn(2, 10, || {
-        std::hint::black_box(lit_f32(&p));
-    });
-    let lit = lit_f32(&p);
-    let t_download = time_fn(2, 10, || {
-        std::hint::black_box(to_vec_f32(&lit).unwrap());
-    });
-    // Rust-native fused equivalent for roofline comparison.
-    let mut params = vec![0.1f32; kn];
-    let mut mbuf = vec![0.0f32; kn];
-    let mut vbuf = vec![0.0f32; kn];
-    let t_native = time_fn(2, 10, || {
-        for i in 0..kn {
-            let gi = g[i];
-            let on = mask[i] > 0.0;
-            let nm = 0.9 * mbuf[i] + 0.1 * gi;
-            let nv = 0.999 * vbuf[i] + 0.001 * gi * gi;
-            let upd = if on { 1e-3 * nm / (nv.sqrt() + 1e-8) } else { 1e-3 * gi.signum() };
-            params[i] -= upd;
-            mbuf[i] = if on { nm } else { 0.0 };
-            vbuf[i] = if on { nv } else { 0.0 };
+    let g = randvec(kn, 3);
+    {
+        let mut st_a = AdamState::new(kn);
+        let mut p_a = vec![0.1f32; kn];
+        let mut st_b = AdamState::new(kn);
+        let mut p_b = vec![0.1f32; kn];
+        let mut scratch = Vec::new();
+        let cfg = AdamCfg::default();
+        for _ in 0..2 {
+            st_a.apply_no_decay(&mut p_a, &g, 1e-3, &cfg);
+            scalar_adam_two_pass(&mut st_b, &mut p_b, &g, 1e-3, &cfg, &mut scratch);
         }
-        std::hint::black_box(&params);
+        assert_eq!(bits(&p_a), bits(&p_b), "fused Adam kernel is not bit-identical");
+        assert_eq!(bits(&st_a.m), bits(&st_b.m), "fused Adam kernel m diverged");
+        let t_fused = time_fn(2, iters, || {
+            st_a.apply_no_decay(&mut p_a, &g, 1e-3, &cfg);
+        });
+        let t_scalar = time_fn(2, iters, || {
+            scalar_adam_two_pass(&mut st_b, &mut p_b, &g, 1e-3, &cfg, &mut scratch);
+        });
+        let speedup = t_scalar.median_ns / t_fused.median_ns;
+        records.push(json_record(
+            "hotpath",
+            "kernel=adam_fused",
+            &[
+                ("lanes", kn as f64),
+                ("fused_melem_per_s", t_fused.elements_per_s(kn) / 1e6),
+                ("scalar_melem_per_s", t_scalar.elements_per_s(kn) / 1e6),
+                ("speedup_vs_scalar", speedup),
+            ],
+        ));
+        println!("{}", records.last().unwrap());
+    }
+
+    // ------------------------------------------------------------------
+    // Codec encode/decode throughput vs scalar references.
+    // ------------------------------------------------------------------
+    println!("\n## codec throughput ({CODEC_LANES} lanes, block {BLOCK})\n");
+    let vals = randvec(CODEC_LANES, 1);
+    let mut rows = Vec::new();
+
+    // memcpy-equivalent baseline: the `--compress none` payload copy.
+    let mut none_buf = Payload::F32(Vec::new());
+    let mut dec_buf: Vec<f32> = Vec::new();
+    let t_none = time_fn(2, iters, || {
+        frugal::engine::NoneCodec.encode_into(&vals, None, &mut none_buf);
+        none_buf.decode_into(&mut dec_buf);
+        std::hint::black_box(&dec_buf);
     });
+    let none_gb_s = 2.0 * gb_per_s(CODEC_LANES, t_none.median_ns); // enc + dec
+    records.push(json_record(
+        "hotpath",
+        "codec=none",
+        &[("lanes", CODEC_LANES as f64), ("roundtrip_gb_per_s", none_gb_s)],
+    ));
+    println!("{}", records.last().unwrap());
+    rows.push(vec!["none (memcpy)".into(), format!("{none_gb_s:.2}"), "-".into()]);
+
+    // SignEf (no EF residual: the shared encode math; EF adds one
+    // elementwise pass on both sides).
+    {
+        let codec = SignEfCodec { block: BLOCK };
+        let mut enc_buf = Payload::F32(Vec::new());
+        codec.encode_into(&vals, None, &mut enc_buf);
+        assert_eq!(enc_buf, scalar_sign_encode(&vals, BLOCK), "SignEf encode_into != scalar");
+        enc_buf.decode_into(&mut dec_buf);
+        assert_eq!(
+            bits(&dec_buf),
+            bits(&scalar_decode(&enc_buf)),
+            "SignEf decode_into != scalar"
+        );
+        let t_vec = time_fn(2, iters, || {
+            codec.encode_into(&vals, None, &mut enc_buf);
+            enc_buf.decode_into(&mut dec_buf);
+            std::hint::black_box(&dec_buf);
+        });
+        let t_scalar = time_fn(2, iters, || {
+            let enc = scalar_sign_encode(&vals, BLOCK);
+            std::hint::black_box(scalar_decode(&enc));
+        });
+        let speedup = t_scalar.median_ns / t_vec.median_ns;
+        let gb = 2.0 * gb_per_s(CODEC_LANES, t_vec.median_ns);
+        records.push(json_record(
+            "hotpath",
+            "codec=sign-ef",
+            &[
+                ("lanes", CODEC_LANES as f64),
+                ("roundtrip_gb_per_s", gb),
+                ("scalar_roundtrip_gb_per_s", 2.0 * gb_per_s(CODEC_LANES, t_scalar.median_ns)),
+                ("speedup_vs_scalar", speedup),
+            ],
+        ));
+        println!("{}", records.last().unwrap());
+        rows.push(vec!["sign-ef".into(), format!("{gb:.2}"), format!("{speedup:.2}x")]);
+        // The ISSUE-4 self-relative gate. If a future toolchain starts
+        // autovectorizing the scalar baselines themselves (eroding the
+        // margin with no product regression), retune the floor here
+        // rather than weakening the kernels.
+        assert!(
+            speedup >= 1.5,
+            "SignEf encode+decode only {speedup:.2}x over the scalar baseline (< 1.5x gate)"
+        );
+    }
+
+    // BlockQ8.
+    {
+        let codec = BlockQ8Codec { block: BLOCK };
+        let mut enc_buf = Payload::F32(Vec::new());
+        codec.encode_into(&vals, None, &mut enc_buf);
+        assert_eq!(enc_buf, scalar_q8_encode(&vals, BLOCK), "BlockQ8 encode_into != scalar");
+        enc_buf.decode_into(&mut dec_buf);
+        assert_eq!(
+            bits(&dec_buf),
+            bits(&scalar_decode(&enc_buf)),
+            "BlockQ8 decode_into != scalar"
+        );
+        let t_vec = time_fn(2, iters, || {
+            codec.encode_into(&vals, None, &mut enc_buf);
+            enc_buf.decode_into(&mut dec_buf);
+            std::hint::black_box(&dec_buf);
+        });
+        let t_scalar = time_fn(2, iters, || {
+            let enc = scalar_q8_encode(&vals, BLOCK);
+            std::hint::black_box(scalar_decode(&enc));
+        });
+        let speedup = t_scalar.median_ns / t_vec.median_ns;
+        let gb = 2.0 * gb_per_s(CODEC_LANES, t_vec.median_ns);
+        records.push(json_record(
+            "hotpath",
+            "codec=q8",
+            &[
+                ("lanes", CODEC_LANES as f64),
+                ("roundtrip_gb_per_s", gb),
+                ("scalar_roundtrip_gb_per_s", 2.0 * gb_per_s(CODEC_LANES, t_scalar.median_ns)),
+                ("speedup_vs_scalar", speedup),
+            ],
+        ));
+        println!("{}", records.last().unwrap());
+        rows.push(vec!["q8".into(), format!("{gb:.2}"), format!("{speedup:.2}x")]);
+        assert!(
+            speedup >= 1.5,
+            "BlockQ8 encode+decode only {speedup:.2}x over the scalar baseline (< 1.5x gate)"
+        );
+    }
     print_table(
-        "kernel + marshalling",
-        &["op", "ms"],
-        &[
-            vec!["frugal_update PJRT (incl. 5 uploads + download)".into(),
-                 format!("{:.3}", t_kernel.per_iter_ms())],
-            vec!["one literal upload (4 MiB)".into(), format!("{:.3}", t_upload.per_iter_ms())],
-            vec!["one literal download (4 MiB)".into(),
-                 format!("{:.3}", t_download.per_iter_ms())],
-            vec!["rust-native fused loop (roofline ref)".into(),
-                 format!("{:.3}", t_native.per_iter_ms())],
-        ],
+        "codec encode+decode (GB/s of f32 input; speedup vs same-run scalar baseline)",
+        &["codec", "GB/s", "speedup"],
+        &rows,
     );
 
     // ------------------------------------------------------------------
-    // Projection maintenance cost (the Table 21 "slowdown" driver).
+    // Save-handoff stall: sync serialize-and-commit vs background
+    // capture+submit, on a bench-scale engine state.
     // ------------------------------------------------------------------
-    println!("\n## projection maintenance (per refresh, middle-layer matrix)\n");
-    let target = layout.linears().next().unwrap().clone();
-    let (r_, c_) = target.dims();
-    let gm = frugal::tensor::Matrix::from_fn(r_, c_, |i, j| ((i * 7 + j) % 13) as f32 * 0.01);
-    let rank = (r_.min(c_) / 4).max(1);
-    let t_svd = time_fn(1, 5, || {
-        std::hint::black_box(frugal::optim::projection::MatrixProjector::from_svd(&gm, rank));
+    println!("\n## save-handoff stall (training-thread ms per snapshot)\n");
+    let model = RefLm::new(RefLmCfg {
+        vocab: 512,
+        d_model: 64,
+        d_ff: 128,
+        n_layers: 4,
+        seq_len: 64,
+        batch: 4,
     });
-    let q0 = frugal::linalg::random_semi_orthogonal(r_.min(c_), rank,
-                                                    &mut frugal::util::Prng::seed_from_u64(0));
-    let work = if r_ <= c_ { gm.clone() } else { gm.transpose() };
-    let t_power = time_fn(1, 5, || {
-        std::hint::black_box(frugal::linalg::power_iteration(&work, &q0, 1));
+    let sources = Sources::Threaded(
+        (0..2).map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let mask_builder = MaskBuilder::new(
+        model.layout().clone(),
+        0.25,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        0,
+    );
+    let ecfg = EngineCfg {
+        parallel: ParallelCfg {
+            workers: 2,
+            grad_accum: 4,
+            compress: CompressCfg { mode: CompressMode::Split, block: 256 },
+            ..Default::default()
+        },
+        schedule: LrSchedule::ConstantWarmup { warmup: 0 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: 1000, // mid-round: the snapshot carries full state
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    let mut engine = Engine::new(mask_builder, ecfg, sources, model.init_flat(0))?;
+    let batch_fn = |micro: u64, buf: &mut Vec<i32>| {
+        let mut rng = Prng::seed_from_u64(0xBE4C ^ micro);
+        buf.clear();
+        buf.extend((0..4 * 64).map(|_| rng.range(0, 512) as i32));
+    };
+    for _ in 0..3 {
+        engine.step(&batch_fn)?;
+    }
+    let dir = std::env::temp_dir().join(format!("frugal_hotpath_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let opts = SaveOptions::exact(MomentCodec::Q8, 256);
+    // Sync: the training thread pays capture + serialize + commit.
+    let mut sync_state = ckpt::TrainState::empty();
+    let t_sync = time_fn(1, iters, || {
+        engine.capture_state_into(&mut sync_state).unwrap();
+        ckpt::save(&dir.join("sync"), &sync_state, opts).unwrap();
     });
-    print_table(
-        "projection refresh",
-        &["method", "ms"],
+    // Background: the training thread pays capture + handoff; the write
+    // overlaps the next "step" (here: the next iteration's capture).
+    let mut writer = SnapshotWriter::new();
+    let mut i = 0u64;
+    let t_async = time_fn(1, iters, || {
+        let mut st = writer.take_recycled().unwrap_or_else(ckpt::TrainState::empty);
+        engine.capture_state_into(&mut st).unwrap();
+        writer.submit(dir.join(format!("async_{i}")), st, opts, None).unwrap();
+        i += 1;
+    });
+    writer.drain()?;
+    let stall_ratio = t_sync.median_ns / t_async.median_ns.max(1.0);
+    records.push(json_record(
+        "hotpath",
+        "save=handoff",
         &[
-            vec![format!("SVD rank-{rank} ({r_}x{c_}) [GaLore/Fira, every T]"),
-                 format!("{:.3}", t_svd.per_iter_ms())],
-            vec![format!("power iteration [LDAdam, EVERY step]"),
-                 format!("{:.3}", t_power.per_iter_ms())],
-            vec!["blockwise selection [FRUGAL] (index shuffle)".into(), "~0".into()],
+            ("sync_ms", t_sync.per_iter_ms()),
+            ("background_ms", t_async.per_iter_ms()),
+            ("writer_wait_ms", writer.stall_ms()),
+            ("overlap_speedup", stall_ratio),
+        ],
+    ));
+    println!("{}", records.last().unwrap());
+    print_table(
+        "save handoff (training-thread cost per snapshot)",
+        &["path", "ms"],
+        &[
+            vec!["sync capture+serialize+commit".into(), format!("{:.3}", t_sync.per_iter_ms())],
+            vec!["background capture+submit".into(), format!("{:.3}", t_async.per_iter_ms())],
         ],
     );
-    println!("\nshape: FRUGAL adds no per-step projection cost; SVD methods pay at refresh;");
-    println!("LDAdam pays every step (paper Table 21: 0% vs 10% vs 15% slowdown).");
+    std::fs::remove_dir_all(&dir).ok();
+
+    write_json_records("BENCH_hotpath.json", &records)?;
+    println!("\nwrote BENCH_hotpath.json ({} records)", records.len());
     Ok(())
 }

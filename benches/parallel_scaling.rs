@@ -61,7 +61,9 @@ fn main() -> frugal::Result<()> {
     let rcfg = model.cfg().clone();
     let tokens_per_step = (GRAD_ACCUM * rcfg.batch * rcfg.seq_len) as f64;
     let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(rcfg.vocab));
-    let batch_fn = move |micro: u64| corpus.train_batch(rcfg.batch, rcfg.seq_len, micro).tokens;
+    let batch_fn = move |micro: u64, buf: &mut Vec<i32>| {
+        corpus.fill_train_batch(rcfg.batch, rcfg.seq_len, micro, buf);
+    };
 
     println!(
         "parallel_scaling: {} params, grad_accum={GRAD_ACCUM}, {steps} timed steps/point",

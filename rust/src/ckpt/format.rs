@@ -57,15 +57,6 @@ pub enum SectionData {
 }
 
 impl SectionData {
-    fn kind(&self) -> u8 {
-        match self {
-            SectionData::F32(_) => 0,
-            SectionData::Q8 { .. } => 1,
-            SectionData::U32(_) => 2,
-            SectionData::U64(_) => 3,
-        }
-    }
-
     /// Decode to f32 values regardless of on-disk representation: raw
     /// moves out, q8 runs the `BlockQ8` decode.
     pub fn into_f32(self) -> Result<Vec<f32>> {
@@ -97,27 +88,14 @@ impl SectionData {
         matches!(self, SectionData::Q8 { .. })
     }
 
-    fn encode_into(&self, out: &mut Vec<u8>) {
+    /// Borrowed view for the shared section writer.
+    pub fn as_src(&self) -> SectionSrc<'_> {
         match self {
-            SectionData::F32(v) => f32s_to_le(v, out),
-            SectionData::U32(v) => {
-                out.reserve(4 * v.len());
-                for x in v {
-                    out.extend_from_slice(&x.to_le_bytes());
-                }
-            }
-            SectionData::U64(v) => {
-                out.reserve(8 * v.len());
-                for x in v {
-                    out.extend_from_slice(&x.to_le_bytes());
-                }
-            }
+            SectionData::F32(v) => SectionSrc::F32(v),
+            SectionData::U32(v) => SectionSrc::U32(v),
+            SectionData::U64(v) => SectionSrc::U64(v),
             SectionData::Q8 { len, block, q, scales } => {
-                out.reserve(12 + q.len() + 4 * scales.len());
-                out.extend_from_slice(&(*len as u64).to_le_bytes());
-                out.extend_from_slice(&(*block as u32).to_le_bytes());
-                out.extend(q.iter().map(|&x| x as u8));
-                f32s_to_le(scales, out);
+                SectionSrc::Q8 { len: *len, block: *block, q, scales }
             }
         }
     }
@@ -198,38 +176,9 @@ impl SectionFile {
     /// Serialize and write atomically (single bulk write to `<path>.tmp`,
     /// then rename). Returns `(file_bytes, file_crc32)` for the manifest.
     pub fn write_atomic(&self, path: &Path) -> Result<(u64, u32)> {
-        anyhow::ensure!(
-            self.sections.len() <= MAX_SECTIONS as usize,
-            "too many sections ({})",
-            self.sections.len()
-        );
-        let mut buf = Vec::new();
-        buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&VERSION.to_le_bytes());
-        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
-        let mut payload = Vec::new();
-        for (name, data) in &self.sections {
-            let nb = name.as_bytes();
-            anyhow::ensure!(
-                !nb.is_empty() && nb.len() <= MAX_NAME_LEN,
-                "bad section name '{name}'"
-            );
-            buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
-            buf.extend_from_slice(nb);
-            buf.push(data.kind());
-            payload.clear();
-            data.encode_into(&mut payload);
-            buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-            buf.extend_from_slice(&payload);
-            buf.extend_from_slice(&crc32(&payload).to_le_bytes());
-        }
-        let crc = crc32(&buf);
-        let tmp = tmp_path(path);
-        std::fs::write(&tmp, &buf)
-            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| anyhow::anyhow!("renaming {} into place: {e}", tmp.display()))?;
-        Ok((buf.len() as u64, crc))
+        let views: Vec<(&str, SectionSrc<'_>)> =
+            self.sections.iter().map(|(n, d)| (n.as_str(), d.as_src())).collect();
+        write_sections_atomic(path, &views)
     }
 
     /// Parse from raw bytes, validating every length header against the
@@ -300,6 +249,95 @@ impl SectionFile {
         );
         Self::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
     }
+}
+
+/// Borrowed view of one section's payload for the write path. The save
+/// path builds these straight over `TrainState`'s arrays, so writing a
+/// snapshot no longer clones the model-scale vectors into owned
+/// [`SectionData`] first — one of the "~3 transient copies per save" the
+/// background-checkpoint work removed. Byte layout (kind codes, payload
+/// encoding, CRCs) is identical to the owned writer — they share
+/// [`write_sections_atomic`].
+pub enum SectionSrc<'a> {
+    F32(&'a [f32]),
+    Q8 { len: usize, block: usize, q: &'a [i8], scales: &'a [f32] },
+    U32(&'a [u32]),
+    U64(&'a [u64]),
+}
+
+impl SectionSrc<'_> {
+    fn kind(&self) -> u8 {
+        match self {
+            SectionSrc::F32(_) => 0,
+            SectionSrc::Q8 { .. } => 1,
+            SectionSrc::U32(_) => 2,
+            SectionSrc::U64(_) => 3,
+        }
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            SectionSrc::F32(v) => f32s_to_le(v, out),
+            SectionSrc::U32(v) => {
+                out.reserve(4 * v.len());
+                for x in *v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            SectionSrc::U64(v) => {
+                out.reserve(8 * v.len());
+                for x in *v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            SectionSrc::Q8 { len, block, q, scales } => {
+                out.reserve(12 + q.len() + 4 * scales.len());
+                out.extend_from_slice(&(*len as u64).to_le_bytes());
+                out.extend_from_slice(&(*block as u32).to_le_bytes());
+                out.extend(q.iter().map(|&x| x as u8));
+                f32s_to_le(scales, out);
+            }
+        }
+    }
+}
+
+/// Serialize named borrowed sections and write them atomically (single
+/// bulk write to `<path>.tmp`, then rename). Returns
+/// `(file_bytes, file_crc32)` for the manifest. The single source of
+/// truth for the on-disk container format — [`SectionFile::write_atomic`]
+/// delegates here.
+pub fn write_sections_atomic(
+    path: &Path,
+    sections: &[(&str, SectionSrc<'_>)],
+) -> Result<(u64, u32)> {
+    anyhow::ensure!(
+        sections.len() <= MAX_SECTIONS as usize,
+        "too many sections ({})",
+        sections.len()
+    );
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    let mut payload = Vec::new();
+    for (name, data) in sections {
+        let nb = name.as_bytes();
+        anyhow::ensure!(!nb.is_empty() && nb.len() <= MAX_NAME_LEN, "bad section name '{name}'");
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.push(data.kind());
+        payload.clear();
+        data.encode_into(&mut payload);
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+    }
+    let crc = crc32(&buf);
+    let tmp = tmp_path(path);
+    std::fs::write(&tmp, &buf).map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("renaming {} into place: {e}", tmp.display()))?;
+    Ok((buf.len() as u64, crc))
 }
 
 fn tmp_path(path: &Path) -> std::path::PathBuf {
@@ -446,6 +484,27 @@ mod tests {
         let Payload::Q8 { len, block, q, scales } = enc else { panic!("not q8") };
         let sec = SectionData::Q8 { len, block, q, scales };
         assert_eq!(sec.into_f32().unwrap(), want);
+    }
+
+    #[test]
+    fn borrowed_writer_produces_identical_files() {
+        // The zero-copy save path must emit byte-identical containers to
+        // the owned SectionFile writer (same CRCs, same manifest pins).
+        let dir = std::env::temp_dir().join(format!("frugal_fmt3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sf = sample();
+        let owned_path = dir.join("owned.bin");
+        let (owned_bytes, owned_crc) = sf.write_atomic(&owned_path).unwrap();
+        let views: Vec<(&str, SectionSrc<'_>)> =
+            sf.sections.iter().map(|(n, d)| (n.as_str(), d.as_src())).collect();
+        let borrowed_path = dir.join("borrowed.bin");
+        let (bytes, crc) = write_sections_atomic(&borrowed_path, &views).unwrap();
+        assert_eq!((bytes, crc), (owned_bytes, owned_crc));
+        assert_eq!(
+            std::fs::read(&owned_path).unwrap(),
+            std::fs::read(&borrowed_path).unwrap()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -73,6 +73,12 @@ pub struct CkptManifest {
     /// Subspace-selection rule fingerprint (rho/policy/roles) — restore
     /// rejects a mismatch, which would otherwise silently diverge.
     pub subspace: String,
+    /// True for a snapshot taken at a round barrier whose Adam-moment
+    /// and EF-residual sections were **elided**: the resumed run's first
+    /// step re-selects the subspace and provably discards them, so the
+    /// snapshot stores no shard files at all and the loader zero-fills.
+    /// Bitwise-neutral by construction (see `ckpt` module docs).
+    pub barrier: bool,
     pub meta: FileEntry,
     pub shards: Vec<ShardEntry>,
 }
@@ -104,6 +110,7 @@ impl CkptManifest {
         let _ = writeln!(out, "  \"wire_mode\": \"{}\",", escape(&self.wire_mode));
         let _ = writeln!(out, "  \"wire_block\": {},", self.wire_block);
         let _ = writeln!(out, "  \"subspace\": \"{}\",", escape(&self.subspace));
+        let _ = writeln!(out, "  \"barrier\": {},", self.barrier);
         let _ = writeln!(
             out,
             "  \"meta\": {{\"file\": \"{}\", \"bytes\": {}, \"crc32\": {}}},",
@@ -178,6 +185,12 @@ impl CkptManifest {
             wire_mode: v.field("wire_mode")?.as_str()?.to_string(),
             wire_block: v.field("wire_block")?.as_usize()?,
             subspace: v.field("subspace")?.as_str()?.to_string(),
+            // Absent in pre-elision v2 manifests: default to a full
+            // (non-elided) snapshot.
+            barrier: match v.get("barrier") {
+                Some(j) => j.as_bool()?,
+                None => false,
+            },
             meta: file_entry(v.field("meta")?)?,
             shards,
         })
@@ -227,6 +240,7 @@ mod tests {
             subspace: "rho=0.25 policy=Blockwise(Random) full_roles=[Embed, Norm, Output] \
                        free_roles=[]"
                 .into(),
+            barrier: false,
             meta: FileEntry { file: "meta.bin".into(), bytes: 4321, crc32: 0xDEAD_BEEF },
             shards: vec![
                 ShardEntry {
@@ -255,6 +269,24 @@ mod tests {
         let back = CkptManifest::parse(&man.to_json()).unwrap();
         assert_eq!(back, man);
         assert_eq!(back.data_bytes(), 4321 + 777 + 555);
+    }
+
+    #[test]
+    fn barrier_flag_roundtrips_and_defaults_false() {
+        let mut man = sample();
+        man.barrier = true;
+        man.shards.clear();
+        let back = CkptManifest::parse(&man.to_json()).unwrap();
+        assert!(back.barrier);
+        assert!(back.shards.is_empty());
+        // A pre-elision manifest (no "barrier" line) parses as false.
+        let legacy: String = sample()
+            .to_json()
+            .lines()
+            .filter(|l| !l.contains("\"barrier\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(!CkptManifest::parse(&legacy).unwrap().barrier);
     }
 
     #[test]

@@ -50,17 +50,41 @@
 //! `--save-every` a **multiple of** `update_freq` so every save lands on
 //! a barrier. A mid-round snapshot is bit-exact under `raw` and
 //! approximate (quantized moments) under `q8`.
+//!
+//! # Barrier elision
+//!
+//! A barrier snapshot can go further than quantizing the moments: the
+//! resumed run's **first step re-selects the subspace and discards
+//! every Adam moment and EF residual anyway** (the same reset that makes
+//! q8 bit-exact there). With [`SaveOptions::barrier_elide`] (the
+//! default), a save landing on a barrier therefore writes **no shard
+//! files at all** — just `meta.bin` and a manifest flagged
+//! `barrier: true` — and [`load`] zero-fills the moment arrays. Bitwise
+//! identical to a full snapshot by construction, far smaller than even
+//! q8 buys. Mid-round saves are never elided.
+//!
+//! # Background writes
+//!
+//! [`SnapshotWriter`] moves serialization + CRC off the training
+//! thread: the orchestrator captures into a recycled [`TrainState`]
+//! (one copy, reused buffers — `Engine::capture_state_into`), hands it
+//! to the writer thread, and keeps training while the bytes hit disk.
+//! In-flight saves are capped at one (model-scale states must not pile
+//! up); the enqueue blocks — and meters the stall — only when the
+//! previous save is still writing.
 
 pub mod crc;
 pub mod format;
 pub mod manifest;
 
 use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Instant;
 
 use crate::engine::{BlockQ8Codec, GradCodec, Payload, ShardPlan};
 use crate::Result;
 
-pub use format::{SectionData, SectionFile};
+pub use format::{SectionData, SectionFile, SectionSrc};
 pub use manifest::{CkptManifest, FileEntry, ShardEntry, MANIFEST_NAME};
 
 /// How Adam moment sections are stored on disk.
@@ -95,6 +119,35 @@ impl MomentCodec {
 impl std::fmt::Display for MomentCodec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.as_str())
+    }
+}
+
+/// How [`save`] writes a snapshot: moment codec, quantizer block size,
+/// and whether round-barrier snapshots may elide their (provably
+/// discarded) moment/residual sections entirely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SaveOptions {
+    pub codec: MomentCodec,
+    /// Lanes per q8 scale block.
+    pub block: usize,
+    /// Elide Adam moments + EF residuals when the snapshot lands on a
+    /// round barrier (`step % update_freq == 0`) — bitwise-neutral (the
+    /// resumed run's first step discards them) and much smaller. Only
+    /// affects barrier saves; mid-round snapshots always carry full
+    /// state. Use [`SaveOptions::exact`] to force full sections (e.g.
+    /// for storage-level roundtrip tests).
+    pub barrier_elide: bool,
+}
+
+impl SaveOptions {
+    /// The production default: `barrier_elide` on.
+    pub fn new(codec: MomentCodec, block: usize) -> SaveOptions {
+        SaveOptions { codec, block: block.max(1), barrier_elide: true }
+    }
+
+    /// Full sections at every step — the storage-roundtrip-exact mode.
+    pub fn exact(codec: MomentCodec, block: usize) -> SaveOptions {
+        SaveOptions { codec, block: block.max(1), barrier_elide: false }
     }
 }
 
@@ -151,6 +204,36 @@ pub struct TrainState {
 }
 
 impl TrainState {
+    /// An all-empty placeholder for buffer reuse: `Engine::capture_state_into`
+    /// overwrites every field (and validates). Not itself a valid state.
+    pub fn empty() -> TrainState {
+        TrainState {
+            step: 0,
+            round: 0,
+            adam_t: 0,
+            update_freq: 1,
+            grad_accum: 1,
+            workers: 1,
+            shard_granularity: 1,
+            flat_size: 0,
+            padded_size: 0,
+            wire_mode: String::new(),
+            wire_block: 0,
+            subspace: String::new(),
+            flat: Vec::new(),
+            full_lanes: Vec::new(),
+            rng_words: [0; 4],
+            rng_spare: None,
+            builder_round: 0,
+            builder_cursor: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+            residuals: Vec::new(),
+            wire_bytes: 0,
+            wire_dense_bytes: 0,
+        }
+    }
+
     /// Structural invariants every snapshot must satisfy — enforced both
     /// before save and after load, so a tampered manifest cannot smuggle
     /// an inconsistent state into the engine.
@@ -243,30 +326,30 @@ pub struct SaveReport {
     pub files: usize,
 }
 
-fn encode_moments(vals: &[f32], codec: MomentCodec, block: usize) -> (SectionData, u64) {
-    match codec {
-        MomentCodec::Raw => (SectionData::F32(vals.to_vec()), 4 * vals.len() as u64),
-        MomentCodec::Q8 => {
-            let enc = BlockQ8Codec { block }.encode(vals, None);
-            let bytes = enc.wire_bytes() as u64;
-            let Payload::Q8 { len, block, q, scales } = enc else {
-                unreachable!("BlockQ8Codec always produces Q8 payloads")
-            };
-            (SectionData::Q8 { len, block, q, scales }, bytes)
-        }
-    }
+/// Quantize a moment slice through the engine's `BlockQ8` wire codec,
+/// returning the owned `(q, scales)` buffers the borrowed section writer
+/// points at.
+fn q8_encode(vals: &[f32], block: usize) -> (Vec<i8>, Vec<f32>) {
+    let enc = BlockQ8Codec { block }.encode(vals, None);
+    let Payload::Q8 { q, scales, .. } = enc else {
+        unreachable!("BlockQ8Codec always produces Q8 payloads")
+    };
+    (q, scales)
 }
 
 /// Serialize `state` into `dir` (created if missing): shard files first,
-/// then `meta.bin`, then the manifest as the atomic commit point.
-pub fn save(
-    dir: &Path,
-    state: &TrainState,
-    codec: MomentCodec,
-    block: usize,
-) -> Result<SaveReport> {
+/// then `meta.bin`, then the manifest as the atomic commit point. The
+/// model-scale arrays (flat params, raw moments, residuals) are
+/// serialized **borrowed** — no transient clones of the state.
+pub fn save(dir: &Path, state: &TrainState, opts: SaveOptions) -> Result<SaveReport> {
     state.validate()?;
-    let block = block.max(1);
+    let codec = opts.codec;
+    let block = opts.block.max(1);
+    // A save landing on a round barrier may skip moments + residuals
+    // entirely: the resumed run's first step re-selects the subspace and
+    // discards them (the paper's state-reset semantics), so the elision
+    // is bitwise-neutral.
+    let barrier = opts.barrier_elide && state.step % state.update_freq == 0;
     std::fs::create_dir_all(dir)
         .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
 
@@ -293,37 +376,75 @@ pub fn save(
         }
     }
 
-    let plan =
-        ShardPlan::partition(state.full_lanes.clone(), state.workers, state.shard_granularity);
-    let mut shards = Vec::with_capacity(state.workers);
+    let mut shards = Vec::new();
     let mut total = 0u64;
     let mut moment_bytes = 0u64;
-    let mut lane_cursor = 0usize;
-    for w in 0..state.workers {
-        let (lo, hi) = (lane_cursor, lane_cursor + plan.shard_len(w));
-        lane_cursor = hi;
-        let (m_sec, m_bytes) = encode_moments(&state.m[lo..hi], codec, block);
-        let (v_sec, v_bytes) = encode_moments(&state.v[lo..hi], codec, block);
-        moment_bytes += m_bytes + v_bytes;
-        let mut sections = vec![("m".to_string(), m_sec), ("v".to_string(), v_sec)];
-        if !state.residuals.is_empty() {
+    if !barrier {
+        let plan = ShardPlan::partition(
+            state.full_lanes.clone(),
+            state.workers,
+            state.shard_granularity,
+        );
+        let mut lane_cursor = 0usize;
+        for w in 0..state.workers {
+            let (lo, hi) = (lane_cursor, lane_cursor + plan.shard_len(w));
+            lane_cursor = hi;
+            let n = hi - lo;
+            // Owned quantized buffers under q8; raw moments are written
+            // borrowed straight from the state.
+            let q8_bufs = match codec {
+                MomentCodec::Raw => None,
+                MomentCodec::Q8 => Some((
+                    q8_encode(&state.m[lo..hi], block),
+                    q8_encode(&state.v[lo..hi], block),
+                )),
+            };
+            let (m_src, v_src) = match &q8_bufs {
+                Some(((mq, ms), (vq, vs))) => {
+                    moment_bytes += (mq.len() + 4 * ms.len() + vq.len() + 4 * vs.len()) as u64;
+                    (
+                        SectionSrc::Q8 { len: n, block, q: mq, scales: ms },
+                        SectionSrc::Q8 { len: n, block, q: vq, scales: vs },
+                    )
+                }
+                None => {
+                    moment_bytes += 8 * n as u64;
+                    (
+                        SectionSrc::F32(&state.m[lo..hi]),
+                        SectionSrc::F32(&state.v[lo..hi]),
+                    )
+                }
+            };
             // Slot j lives on worker j % N — the same keying the engine's
             // ResidualBank uses, so any restore worker count redistributes
             // the identical buffers.
-            let mut j = w;
-            while j < state.grad_accum {
-                sections
-                    .push((format!("residual.{j}"), SectionData::F32(state.residuals[j].clone())));
-                j += state.workers;
+            let res_slots: Vec<usize> = if state.residuals.is_empty() {
+                Vec::new()
+            } else {
+                (w..state.grad_accum).step_by(state.workers).collect()
+            };
+            let res_names: Vec<String> =
+                res_slots.iter().map(|j| format!("residual.{j}")).collect();
+            let mut sections: Vec<(&str, SectionSrc<'_>)> =
+                vec![("m", m_src), ("v", v_src)];
+            for (name, &j) in res_names.iter().zip(&res_slots) {
+                sections.push((name.as_str(), SectionSrc::F32(&state.residuals[j])));
             }
+            let file = format!("shard_{w:04}.bin");
+            let (bytes, crc32) = format::write_sections_atomic(&dir.join(&file), &sections)?;
+            total += bytes;
+            shards.push(ShardEntry {
+                file,
+                worker: w,
+                lane_start: lo,
+                lane_end: hi,
+                bytes,
+                crc32,
+            });
         }
-        let file = format!("shard_{w:04}.bin");
-        let (bytes, crc32) = SectionFile { sections }.write_atomic(&dir.join(&file))?;
-        total += bytes;
-        shards.push(ShardEntry { file, worker: w, lane_start: lo, lane_end: hi, bytes, crc32 });
     }
 
-    let rng = vec![
+    let rng = [
         state.rng_words[0],
         state.rng_words[1],
         state.rng_words[2],
@@ -331,22 +452,17 @@ pub fn save(
         state.rng_spare.is_some() as u64,
         state.rng_spare.unwrap_or(0.0).to_bits() as u64,
     ];
-    let meta_file = SectionFile {
-        sections: vec![
-            ("flat".to_string(), SectionData::F32(state.flat.clone())),
-            ("mask".to_string(), SectionData::U32(state.full_lanes.clone())),
-            ("rng".to_string(), SectionData::U64(rng)),
-            (
-                "builder".to_string(),
-                SectionData::U64(vec![state.builder_round, state.builder_cursor]),
-            ),
-            (
-                "counters".to_string(),
-                SectionData::U64(vec![state.wire_bytes, state.wire_dense_bytes]),
-            ),
-        ],
-    };
-    let (meta_bytes, meta_crc) = meta_file.write_atomic(&dir.join("meta.bin"))?;
+    let builder = [state.builder_round, state.builder_cursor];
+    let counters = [state.wire_bytes, state.wire_dense_bytes];
+    let meta_sections: [(&str, SectionSrc<'_>); 5] = [
+        ("flat", SectionSrc::F32(&state.flat)),
+        ("mask", SectionSrc::U32(&state.full_lanes)),
+        ("rng", SectionSrc::U64(&rng)),
+        ("builder", SectionSrc::U64(&builder)),
+        ("counters", SectionSrc::U64(&counters)),
+    ];
+    let (meta_bytes, meta_crc) =
+        format::write_sections_atomic(&dir.join("meta.bin"), &meta_sections)?;
     total += meta_bytes;
 
     let man = CkptManifest {
@@ -366,11 +482,13 @@ pub fn save(
         wire_mode: state.wire_mode.clone(),
         wire_block: state.wire_block,
         subspace: state.subspace.clone(),
+        barrier,
         meta: FileEntry { file: "meta.bin".to_string(), bytes: meta_bytes, crc32: meta_crc },
         shards,
     };
     man.write_atomic(dir)?;
-    Ok(SaveReport { dir: dir.to_path_buf(), bytes: total, moment_bytes, files: state.workers + 2 })
+    let files = if barrier { 2 } else { state.workers + 2 };
+    Ok(SaveReport { dir: dir.to_path_buf(), bytes: total, moment_bytes, files })
 }
 
 /// Read and fully validate a snapshot directory back into a
@@ -379,12 +497,26 @@ pub fn save(
 /// [`TrainState::validate`].
 pub fn load(dir: &Path) -> Result<TrainState> {
     let man = CkptManifest::read(dir)?;
-    anyhow::ensure!(
-        man.shards.len() == man.workers,
-        "manifest lists {} shards for {} workers",
-        man.shards.len(),
-        man.workers
-    );
+    if man.barrier {
+        anyhow::ensure!(
+            man.shards.is_empty(),
+            "barrier-elided snapshot lists {} shard files",
+            man.shards.len()
+        );
+        anyhow::ensure!(
+            man.update_freq >= 1 && man.step % man.update_freq == 0,
+            "manifest claims barrier elision but step {} is not a multiple of T={}",
+            man.step,
+            man.update_freq
+        );
+    } else {
+        anyhow::ensure!(
+            man.shards.len() == man.workers,
+            "manifest lists {} shards for {} workers",
+            man.shards.len(),
+            man.workers
+        );
+    }
     // Hostile-manifest guard: every count that sizes an allocation below
     // must be plausible before it is trusted (the same discipline the
     // section reader applies to length headers).
@@ -443,15 +575,24 @@ pub fn load(dir: &Path) -> Result<TrainState> {
                     counters.len());
 
     // Shards concatenate back into lane order; their ranges must tile
-    // 0..K exactly.
+    // 0..K exactly. A barrier-elided snapshot has no shards: the moments
+    // and residuals it skipped are exactly the state `begin_round`
+    // discards on the resumed run's first step, so zero-filling them is
+    // bitwise-neutral.
     let mut shards = man.shards.clone();
     shards.sort_by_key(|s| s.lane_start);
     // Sized by data actually read (CRC-verified files), never by a
-    // manifest-claimed count alone.
+    // manifest-claimed count alone (the barrier arm sizes by the mask
+    // section's verified length).
     let mut m = Vec::new();
     let mut v = Vec::new();
     let mut slots: Vec<Option<Vec<f32>>> = vec![None; man.grad_accum];
     let mut cursor = 0usize;
+    if man.barrier {
+        m.resize(full_lanes.len(), 0.0);
+        v.resize(full_lanes.len(), 0.0);
+        cursor = full_lanes.len();
+    }
     for sh in &shards {
         anyhow::ensure!(
             sh.lane_start == cursor && sh.lane_end >= sh.lane_start,
@@ -587,6 +728,230 @@ pub fn step_dir_name(step: u64) -> String {
     format!("step_{step:06}")
 }
 
+/// Retention: keep the newest `keep_last` `step_*` snapshots under
+/// `root` and delete the rest — except `protect` (the snapshot a resume
+/// came from), which is never pruned. `keep_last == 0` disables pruning.
+/// Each victim's manifest is removed first (atomically invalidating it —
+/// a crash mid-removal leaves an ignorable directory, never a corrupt
+/// "valid" one), then the directory. Returns the removed directories.
+pub fn prune_snapshots(
+    root: &Path,
+    keep_last: usize,
+    protect: Option<&Path>,
+) -> Result<Vec<PathBuf>> {
+    if keep_last == 0 {
+        return Ok(Vec::new());
+    }
+    let mut snaps: Vec<(u64, PathBuf)> = Vec::new();
+    let entries = std::fs::read_dir(root)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", root.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(step) = name.to_str().and_then(|n| n.strip_prefix("step_")) else {
+            continue;
+        };
+        let Ok(step) = step.parse::<u64>() else { continue };
+        let dir = entry.path();
+        if dir.join(MANIFEST_NAME).is_file() {
+            snaps.push((step, dir));
+        }
+    }
+    snaps.sort_by_key(|(step, _)| std::cmp::Reverse(*step));
+    let mut removed = Vec::new();
+    for (_, dir) in snaps.into_iter().skip(keep_last) {
+        if protect.is_some_and(|p| same_path(&dir, p)) {
+            continue;
+        }
+        std::fs::remove_file(dir.join(MANIFEST_NAME))
+            .map_err(|e| anyhow::anyhow!("invalidating {}: {e}", dir.display()))?;
+        std::fs::remove_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("pruning {}: {e}", dir.display()))?;
+        removed.push(dir);
+    }
+    Ok(removed)
+}
+
+/// Path equality that survives `..`/symlink spellings where possible.
+fn same_path(a: &Path, b: &Path) -> bool {
+    match (a.canonicalize(), b.canonicalize()) {
+        (Ok(x), Ok(y)) => x == y,
+        _ => a == b,
+    }
+}
+
+/// What the background writer needs to prune after a successful commit.
+#[derive(Clone, Debug)]
+pub struct PruneSpec {
+    pub root: PathBuf,
+    pub keep_last: usize,
+    pub protect: Option<PathBuf>,
+}
+
+struct WriterJob {
+    dir: PathBuf,
+    state: TrainState,
+    opts: SaveOptions,
+    prune: Option<PruneSpec>,
+}
+
+struct WriterDone {
+    state: TrainState,
+    // String (not anyhow::Error) so the message crosses the thread
+    // boundary without Send bounds on the error type.
+    result: std::result::Result<SaveReport, String>,
+}
+
+/// Background snapshot writer: one worker thread that serializes, CRCs
+/// and commits snapshots off the training thread. At most one save is in
+/// flight (model-scale captures must not pile up); [`SnapshotWriter::submit`]
+/// blocks — and meters the stall — only when the previous save is still
+/// writing. Completed captures are recycled via
+/// [`SnapshotWriter::take_recycled`] so the save loop reuses one
+/// `TrainState`'s buffers for the whole run.
+pub struct SnapshotWriter {
+    tx: Option<mpsc::Sender<WriterJob>>,
+    done_rx: mpsc::Receiver<WriterDone>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    in_flight: usize,
+    recycled: Vec<TrainState>,
+    stall_ns: u64,
+    saves: u64,
+    reports: Vec<SaveReport>,
+}
+
+impl SnapshotWriter {
+    pub fn new() -> SnapshotWriter {
+        let (tx, rx) = mpsc::channel::<WriterJob>();
+        let (done_tx, done_rx) = mpsc::channel::<WriterDone>();
+        let handle = std::thread::Builder::new()
+            .name("frugal-ckpt-writer".into())
+            .spawn(move || {
+                for job in rx {
+                    let result = save(&job.dir, &job.state, job.opts)
+                        .and_then(|report| {
+                            if let Some(p) = &job.prune {
+                                prune_snapshots(&p.root, p.keep_last, p.protect.as_deref())?;
+                            }
+                            Ok(report)
+                        })
+                        .map_err(|e| format!("{e:#}"));
+                    // The receiver only disappears on teardown; nothing
+                    // to do but stop.
+                    if done_tx.send(WriterDone { state: job.state, result }).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawning the checkpoint writer thread");
+        SnapshotWriter {
+            tx: Some(tx),
+            done_rx,
+            handle: Some(handle),
+            in_flight: 0,
+            recycled: Vec::new(),
+            stall_ns: 0,
+            saves: 0,
+            reports: Vec::new(),
+        }
+    }
+
+    fn wait_one(&mut self) -> Result<()> {
+        let done = self
+            .done_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread died"))?;
+        self.in_flight -= 1;
+        self.recycled.push(done.state);
+        match done.result {
+            Ok(report) => {
+                self.reports.push(report);
+                Ok(())
+            }
+            Err(e) => anyhow::bail!("background snapshot failed: {e}"),
+        }
+    }
+
+    /// Hand a captured state to the writer. Blocks only while a previous
+    /// save is still in flight (the handoff stall, metered in
+    /// [`SnapshotWriter::stall_ms`]); the write itself happens on the
+    /// worker thread.
+    pub fn submit(
+        &mut self,
+        dir: PathBuf,
+        state: TrainState,
+        opts: SaveOptions,
+        prune: Option<PruneSpec>,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        while self.in_flight >= 1 {
+            self.wait_one()?;
+        }
+        self.stall_ns += t0.elapsed().as_nanos() as u64;
+        self.tx
+            .as_ref()
+            .expect("writer already shut down")
+            .send(WriterJob { dir, state, opts, prune })
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread died"))?;
+        self.in_flight += 1;
+        self.saves += 1;
+        Ok(())
+    }
+
+    /// Wait for every submitted save to commit (or surface its error).
+    pub fn drain(&mut self) -> Result<()> {
+        while self.in_flight > 0 {
+            self.wait_one()?;
+        }
+        Ok(())
+    }
+
+    /// A recycled capture buffer from a completed save, if any.
+    pub fn take_recycled(&mut self) -> Option<TrainState> {
+        self.recycled.pop()
+    }
+
+    /// Total time [`SnapshotWriter::submit`] spent blocked on a prior
+    /// in-flight save — the training thread's entire exposure to
+    /// checkpoint I/O beyond the capture copy.
+    pub fn stall_ms(&self) -> f64 {
+        self.stall_ns as f64 / 1e6
+    }
+
+    pub fn saves_submitted(&self) -> u64 {
+        self.saves
+    }
+
+    /// Reports of completed saves, in completion order.
+    pub fn reports(&self) -> &[SaveReport] {
+        &self.reports
+    }
+
+    /// Take (and clear) the completed-save reports — for callers that
+    /// print them once per drain and must not re-report on a later one.
+    pub fn take_reports(&mut self) -> Vec<SaveReport> {
+        std::mem::take(&mut self.reports)
+    }
+}
+
+impl Default for SnapshotWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for SnapshotWriter {
+    fn drop(&mut self) {
+        // Close the job channel (ends the worker loop), then join.
+        // Pending results are intentionally dropped — callers that care
+        // about errors must drain() first.
+        self.tx.take();
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -647,7 +1012,7 @@ mod tests {
             let workers = 1 + (seed as usize % 5);
             let st = state(seed, workers, seed % 2 == 0);
             let dir = tmpdir(&format!("raw{seed}"));
-            save(&dir, &st, MomentCodec::Raw, 64).unwrap();
+            save(&dir, &st, SaveOptions::exact(MomentCodec::Raw, 64)).unwrap();
             let back = load(&dir).unwrap();
             let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&back.flat), bits(&st.flat), "seed {seed}");
@@ -679,7 +1044,7 @@ mod tests {
         for seed in 20..26u64 {
             let st = state(seed, 3, true);
             let dir = tmpdir(&format!("q8{seed}"));
-            let report = save(&dir, &st, MomentCodec::Q8, 32).unwrap();
+            let report = save(&dir, &st, SaveOptions::exact(MomentCodec::Q8, 32)).unwrap();
             let back = load(&dir).unwrap();
             // Everything except the moments is still bit-exact.
             assert_eq!(
@@ -699,7 +1064,7 @@ mod tests {
             }
             // And the quantized sections really are smaller.
             let raw_dir = tmpdir(&format!("q8raw{seed}"));
-            let raw_report = save(&raw_dir, &st, MomentCodec::Raw, 32).unwrap();
+            let raw_report = save(&raw_dir, &st, SaveOptions::exact(MomentCodec::Raw, 32)).unwrap();
             if st.m.len() >= 64 {
                 assert!(
                     report.moment_bytes * 3 < raw_report.moment_bytes,
@@ -723,7 +1088,7 @@ mod tests {
             let mut s = st.clone();
             s.workers = workers;
             let dir = tmpdir(&format!("split{workers}"));
-            save(&dir, &s, MomentCodec::Raw, 64).unwrap();
+            save(&dir, &s, SaveOptions::exact(MomentCodec::Raw, 64)).unwrap();
             let back = load(&dir).unwrap();
             images.push((
                 back.m.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
@@ -743,13 +1108,13 @@ mod tests {
     fn resave_overwrites_cleanly_and_leaves_no_orphan_shards() {
         let st4 = state(33, 4, true);
         let dir = tmpdir("resave");
-        save(&dir, &st4, MomentCodec::Raw, 64).unwrap();
+        save(&dir, &st4, SaveOptions::exact(MomentCodec::Raw, 64)).unwrap();
         assert!(dir.join("shard_0003.bin").exists());
         // Re-save the same snapshot dir at a lower worker count: the old
         // manifest is dropped first and the extra shards are cleared.
         let mut st2 = st4.clone();
         st2.workers = 2;
-        save(&dir, &st2, MomentCodec::Raw, 64).unwrap();
+        save(&dir, &st2, SaveOptions::exact(MomentCodec::Raw, 64)).unwrap();
         let back = load(&dir).unwrap();
         assert_eq!(back.workers, 2);
         assert!(!dir.join("shard_0002.bin").exists(), "orphan shard survived");
@@ -762,7 +1127,8 @@ mod tests {
         let root = tmpdir("resolve");
         for step in [4u64, 20, 8] {
             let st = state(step, 2, false);
-            save(&root.join(step_dir_name(step)), &st, MomentCodec::Raw, 64).unwrap();
+            save(&root.join(step_dir_name(step)), &st, SaveOptions::exact(MomentCodec::Raw, 64))
+                .unwrap();
         }
         std::fs::create_dir_all(root.join("step_junk")).unwrap();
         std::fs::create_dir_all(root.join("step_000999")).unwrap(); // no manifest
@@ -799,6 +1165,138 @@ mod tests {
         let mut bad = good;
         bad.flat.pop();
         assert!(bad.validate().is_err());
+    }
+
+    /// Move a synthetic state onto a round barrier (step ≡ 0 mod T) so
+    /// the elision rules apply.
+    fn at_barrier(mut st: TrainState) -> TrainState {
+        let t = st.update_freq;
+        st.step = 2 * t;
+        st.round = st.step / t;
+        st.adam_t = t;
+        st.validate().unwrap();
+        st
+    }
+
+    #[test]
+    fn barrier_elision_drops_shards_and_zero_fills_on_load() {
+        let st = at_barrier(state(61, 3, true));
+        let dir = tmpdir("barrier_elide");
+        let report = save(&dir, &st, SaveOptions::new(MomentCodec::Q8, 64)).unwrap();
+        // No shard files on disk; only meta + manifest.
+        assert_eq!(report.files, 2);
+        assert_eq!(report.moment_bytes, 0);
+        assert!(!dir.join("shard_0000.bin").exists(), "shard written despite elision");
+        let man = CkptManifest::read(&dir).unwrap();
+        assert!(man.barrier);
+        assert!(man.shards.is_empty());
+        let back = load(&dir).unwrap();
+        // Replicated state is bit-exact; moments zero-filled; residuals
+        // absent (the engine re-zeroes them with a note).
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.flat), bits(&st.flat));
+        assert_eq!(back.full_lanes, st.full_lanes);
+        assert_eq!(back.m, vec![0.0; st.full_lanes.len()]);
+        assert_eq!(back.v, vec![0.0; st.full_lanes.len()]);
+        assert!(back.residuals.is_empty());
+        // An elided snapshot is much smaller than the full one.
+        let full_dir = tmpdir("barrier_full");
+        let full = save(&full_dir, &st, SaveOptions::exact(MomentCodec::Q8, 64)).unwrap();
+        if st.full_lanes.len() >= 64 {
+            assert!(report.bytes < full.bytes, "elision did not shrink the snapshot");
+        }
+        // Mid-round states are never elided even with the flag on.
+        let mut mid = st.clone();
+        mid.step += 1;
+        mid.adam_t = 1;
+        mid.round += 1;
+        let mid_dir = tmpdir("barrier_mid");
+        save(&mid_dir, &mid, SaveOptions::new(MomentCodec::Q8, 64)).unwrap();
+        assert!(!CkptManifest::read(&mid_dir).unwrap().barrier);
+        assert!(mid_dir.join("shard_0000.bin").exists());
+        for d in [&dir, &full_dir, &mid_dir] {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn prune_keeps_newest_and_protects_resume_source() {
+        let root = tmpdir("prune");
+        for step in [4u64, 8, 12, 16, 20] {
+            let mut st = state(step, 2, false);
+            st.step = step;
+            st.update_freq = 3; // step never on a barrier → full snapshots
+            st.round = (step - 1) / 3 + 1;
+            st.adam_t = (step - 1) % 3 + 1;
+            save(&root.join(step_dir_name(step)), &st, SaveOptions::new(MomentCodec::Raw, 64))
+                .unwrap();
+        }
+        // keep_last = 0 is a no-op.
+        assert!(prune_snapshots(&root, 0, None).unwrap().is_empty());
+        // Keep 2, protect step 8 (the "resumed from" snapshot).
+        let protect = root.join(step_dir_name(8));
+        let removed = prune_snapshots(&root, 2, Some(&protect)).unwrap();
+        assert_eq!(removed.len(), 2, "{removed:?}"); // steps 4 and 12
+        for step in [16u64, 20, 8] {
+            assert!(
+                root.join(step_dir_name(step)).join(MANIFEST_NAME).is_file(),
+                "step {step} should have survived"
+            );
+        }
+        for step in [4u64, 12] {
+            assert!(!root.join(step_dir_name(step)).exists(), "step {step} not pruned");
+        }
+        // Survivors still load.
+        assert!(load(&root.join(step_dir_name(20))).is_ok());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn snapshot_writer_commits_identically_to_sync_save() {
+        let st = state(91, 2, true);
+        let sync_dir = tmpdir("writer_sync");
+        let async_dir = tmpdir("writer_async");
+        let opts = SaveOptions::exact(MomentCodec::Raw, 64);
+        save(&sync_dir, &st, opts).unwrap();
+        let mut writer = SnapshotWriter::new();
+        writer.submit(async_dir.clone(), st.clone(), opts, None).unwrap();
+        writer.drain().unwrap();
+        assert_eq!(writer.saves_submitted(), 1);
+        assert_eq!(writer.reports().len(), 1);
+        // The capture buffer comes back for reuse.
+        assert!(writer.take_recycled().is_some());
+        // Byte-identical snapshot directories (same files, same bytes).
+        for name in ["meta.bin", "shard_0000.bin", "shard_0001.bin", MANIFEST_NAME] {
+            let a = std::fs::read(sync_dir.join(name)).unwrap();
+            let b = std::fs::read(async_dir.join(name)).unwrap();
+            assert_eq!(a, b, "{name} differs between sync and background save");
+        }
+        // And the loaded states agree bitwise.
+        let la = load(&sync_dir).unwrap();
+        let lb = load(&async_dir).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&la.flat), bits(&lb.flat));
+        assert_eq!(bits(&la.m), bits(&lb.m));
+        std::fs::remove_dir_all(&sync_dir).ok();
+        std::fs::remove_dir_all(&async_dir).ok();
+    }
+
+    #[test]
+    fn snapshot_writer_surfaces_errors_on_drain() {
+        let st = state(93, 1, false);
+        // An impossible target directory (a *file* sits where the
+        // directory should go).
+        let root = tmpdir("writer_err");
+        std::fs::create_dir_all(&root).unwrap();
+        let blocker = root.join("not_a_dir");
+        std::fs::write(&blocker, b"x").unwrap();
+        let mut writer = SnapshotWriter::new();
+        writer
+            .submit(blocker.join("snap"), st, SaveOptions::new(MomentCodec::Raw, 64), None)
+            .unwrap();
+        let err = writer.drain().unwrap_err();
+        assert!(format!("{err}").contains("background snapshot failed"), "{err}");
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

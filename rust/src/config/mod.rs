@@ -74,11 +74,25 @@ pub struct CheckpointCfg {
     pub codec: MomentCodec,
     /// Lanes per q8 scale block.
     pub block: usize,
+    /// Serialize + commit snapshots on a background writer thread (the
+    /// training thread only pays the capture copy); `--ckpt-sync`
+    /// disables. Snapshot bytes are identical either way.
+    pub background: bool,
+    /// Keep only the newest N snapshots (0 = keep all); pruned after
+    /// each successful manifest commit, never the resume source.
+    pub keep_last: usize,
 }
 
 impl Default for CheckpointCfg {
     fn default() -> Self {
-        CheckpointCfg { dir: None, save_every: 0, codec: MomentCodec::Q8, block: 256 }
+        CheckpointCfg {
+            dir: None,
+            save_every: 0,
+            codec: MomentCodec::Q8,
+            block: 256,
+            background: true,
+            keep_last: 0,
+        }
     }
 }
 
@@ -124,12 +138,13 @@ impl TrainConfig {
         // or [parallel.compress] — would be read by nothing and silently
         // swallowed: a wrong-hyperparameter run with no diagnostic.
         // Reject both.
-        const PARALLEL_KEYS: [&str; 6] = [
+        const PARALLEL_KEYS: [&str; 7] = [
             "workers", "grad_accum", "shard_granularity", "straggler_ms", "timeout_ms",
-            "threaded",
+            "threaded", "pipeline",
         ];
         const COMPRESS_KEYS: [&str; 2] = ["mode", "block"];
-        const CHECKPOINT_KEYS: [&str; 4] = ["dir", "save_every", "codec", "block"];
+        const CHECKPOINT_KEYS: [&str; 6] =
+            ["dir", "save_every", "codec", "block", "background", "keep_last"];
         for section in &kv.sections {
             anyhow::ensure!(
                 section == "parallel" || section == "parallel.compress"
@@ -239,6 +254,12 @@ impl TrainConfig {
             if let Some(v) = kv.get_u64("checkpoint.block")? {
                 c.block = v.max(1) as usize;
             }
+            if let Some(v) = kv.get_bool("checkpoint.background")? {
+                c.background = v;
+            }
+            if let Some(v) = kv.get_u64("checkpoint.keep_last")? {
+                c.keep_last = v as usize;
+            }
             cfg.checkpoint = c;
         }
         if kv.has_section("parallel") || kv.has_section("parallel.compress") {
@@ -260,6 +281,9 @@ impl TrainConfig {
             }
             if let Some(v) = kv.get_bool("parallel.threaded")? {
                 p.threaded = v;
+            }
+            if let Some(v) = kv.get_bool("parallel.pipeline")? {
+                p.pipeline = v;
             }
             if let Some(v) = kv.get("parallel.compress.mode") {
                 p.compress.mode = CompressMode::parse(v)?;
@@ -329,6 +353,8 @@ impl TrainConfig {
             let _ = writeln!(out, "save_every = {}", self.checkpoint.save_every);
             let _ = writeln!(out, "codec = \"{}\"", self.checkpoint.codec);
             let _ = writeln!(out, "block = {}", self.checkpoint.block);
+            let _ = writeln!(out, "background = {}", self.checkpoint.background);
+            let _ = writeln!(out, "keep_last = {}", self.checkpoint.keep_last);
         }
         if let Some(p) = &self.parallel {
             let _ = writeln!(out, "\n[parallel]");
@@ -338,6 +364,7 @@ impl TrainConfig {
             let _ = writeln!(out, "straggler_ms = {}", p.straggler_ms);
             let _ = writeln!(out, "timeout_ms = {}", p.timeout_ms);
             let _ = writeln!(out, "threaded = {}", p.threaded);
+            let _ = writeln!(out, "pipeline = {}", p.pipeline);
             let _ = writeln!(out, "\n[parallel.compress]");
             let _ = writeln!(out, "mode = \"{}\"", p.compress.mode);
             let _ = writeln!(out, "block = {}", p.compress.block);
@@ -529,6 +556,7 @@ mod tests {
             straggler_ms: 3,
             timeout_ms: 250,
             threaded: false,
+            pipeline: false,
             compress: CompressCfg { mode: CompressMode::Split, block: 128 },
         });
         let text = cfg.to_toml();
@@ -544,6 +572,8 @@ mod tests {
             save_every: 50,
             codec: MomentCodec::Raw,
             block: 128,
+            background: false,
+            keep_last: 3,
         };
         let text = cfg.to_toml();
         let back = TrainConfig::from_toml(&text).unwrap();
@@ -568,6 +598,24 @@ mod tests {
         assert!(format!("{err}").contains("unknown key 'every' in [checkpoint]"), "{err}");
         let err = TrainConfig::from_toml("[checkpoint]\ncodec = \"zip\"\n").unwrap_err();
         assert!(format!("{err}").contains("unknown checkpoint codec 'zip'"), "{err}");
+    }
+
+    #[test]
+    fn pipeline_background_and_keep_last_keys_parse() {
+        let cfg = TrainConfig::from_toml(
+            "[parallel]\nworkers = 2\npipeline = false\n\n[checkpoint]\ndir = \"c\"\n\
+             background = false\nkeep_last = 4\n",
+        )
+        .unwrap();
+        let p = cfg.parallel.expect("parallel section present");
+        assert!(!p.pipeline);
+        assert!(!cfg.checkpoint.background);
+        assert_eq!(cfg.checkpoint.keep_last, 4);
+        // Defaults: pipeline + background on, retention off.
+        let cfg = TrainConfig::from_toml("[parallel]\n\n[checkpoint]\ndir = \"c\"\n").unwrap();
+        assert!(cfg.parallel.unwrap().pipeline);
+        assert!(cfg.checkpoint.background);
+        assert_eq!(cfg.checkpoint.keep_last, 0);
     }
 
     #[test]

@@ -99,10 +99,18 @@ impl SyntheticCorpus {
     /// Generate one sequence of `len` tokens from the stream keyed by
     /// `stream_seed` (use distinct seeds for train vs validation).
     pub fn sequence(&self, len: usize, stream_seed: u64) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        self.sequence_into(len, stream_seed, &mut out);
+        out
+    }
+
+    /// Append one sequence of `len` tokens into `out` — the fill-style
+    /// [`SyntheticCorpus::sequence`] (identical token stream), used by
+    /// the engine's allocation-free batch path.
+    fn sequence_into(&self, len: usize, stream_seed: u64, out: &mut Vec<i32>) {
         let mut rng = Prng::seed_from_u64(self.cfg.seed ^ stream_seed);
         let mut topic = rng.range(0, self.cfg.topics);
         let mut tok = sample_cdf(&self.zipf_cdf, rng.f64());
-        let mut out = Vec::with_capacity(len);
         out.push(tok as i32);
         for _ in 1..len {
             if rng.f64() < self.cfg.topic_switch {
@@ -119,7 +127,6 @@ impl SyntheticCorpus {
             };
             out.push(tok as i32);
         }
-        out
     }
 
     /// The `idx`-th training batch, deterministic in `idx`.
@@ -127,16 +134,36 @@ impl SyntheticCorpus {
         self.batch_from_stream(batch, seq_len, 0x7424_0000_0000 + idx)
     }
 
+    /// Fill `out` with the `idx`-th training batch's tokens — exactly
+    /// [`SyntheticCorpus::train_batch`]`.tokens` (same stream, same
+    /// values) with zero heap allocations once `out` has warmed its
+    /// capacity. The production closure behind `frugal pretrain`'s
+    /// engine path uses this so the steady-state step stays
+    /// allocation-free end to end.
+    pub fn fill_train_batch(&self, batch: usize, seq_len: usize, idx: u64, out: &mut Vec<i32>) {
+        self.fill_from_stream(batch, seq_len, 0x7424_0000_0000 + idx, out)
+    }
+
     /// The `idx`-th validation batch (disjoint stream).
     pub fn val_batch(&self, batch: usize, seq_len: usize, idx: u64) -> Batch {
         self.batch_from_stream(batch, seq_len, 0xEA11_57BE_A700_0000 ^ idx)
     }
 
+    fn fill_from_stream(&self, batch: usize, seq_len: usize, stream: u64, out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(batch * seq_len);
+        for b in 0..batch {
+            self.sequence_into(
+                seq_len,
+                stream.wrapping_mul(1315423911).wrapping_add(b as u64),
+                out,
+            );
+        }
+    }
+
     fn batch_from_stream(&self, batch: usize, seq_len: usize, stream: u64) -> Batch {
         let mut tokens = Vec::with_capacity(batch * seq_len);
-        for b in 0..batch {
-            tokens.extend(self.sequence(seq_len, stream.wrapping_mul(1315423911).wrapping_add(b as u64)));
-        }
+        self.fill_from_stream(batch, seq_len, stream, &mut tokens);
         Batch { tokens, batch, seq_len }
     }
 
@@ -260,5 +287,19 @@ mod tests {
         let c = corpus();
         let h = c.unigram_entropy(10_000);
         assert!(h > 1.0 && h < (256f64).ln() + 0.01, "h={h}");
+    }
+
+    /// The fill-style batch API is the allocating one, token for token —
+    /// including when the target buffer starts out dirty (the engine
+    /// recycles it every micro-step).
+    #[test]
+    fn fill_train_batch_matches_train_batch() {
+        let c = corpus();
+        let mut buf = vec![-7i32; 3]; // stale contents + wrong length
+        for idx in [0u64, 1, 17, 1000] {
+            let want = c.train_batch(4, 32, idx).tokens;
+            c.fill_train_batch(4, 32, idx, &mut buf);
+            assert_eq!(buf, want, "idx {idx}");
+        }
     }
 }

@@ -64,6 +64,18 @@ impl<T> ReduceTree<T> {
         self.n
     }
 
+    /// Re-arm the tree for a fresh reduction of `n` leaves, keeping the
+    /// allocated capacity of the pending map and the fed bitmap — the
+    /// engine reuses one tree per step, so after the first step a
+    /// reduction performs no heap allocation of its own.
+    pub fn reset(&mut self, n: usize) {
+        assert!(n > 0, "reduce tree needs at least one leaf");
+        self.n = n;
+        self.pending.clear();
+        self.fed.clear();
+        self.fed.resize(n, false);
+    }
+
     /// Feed leaf `idx`, combining subtrees with `combine(left, right)`
     /// (left = lower leaf index — the grouping **and** the argument order
     /// are fixed by the tree, never by arrival). Returns `Some(root)` on
@@ -257,5 +269,35 @@ mod tests {
         let mut tree = ReduceTree::new(3);
         tree.push(0, vec![1.0]);
         tree.push(0, vec![1.0]);
+    }
+
+    #[test]
+    fn reset_rearms_for_reuse_with_identical_bits() {
+        let leaves = random_leaves(9, 17, 5);
+        let want = tree_reduce(leaves.clone());
+        let mut tree = ReduceTree::new(9);
+        for (i, leaf) in leaves.iter().cloned().enumerate() {
+            tree.push(i, leaf);
+        }
+        // Second reduction on the same tree, different leaf count.
+        tree.reset(5);
+        let small = random_leaves(5, 17, 6);
+        let want_small = tree_reduce(small.clone());
+        let mut got = None;
+        for (i, leaf) in small.into_iter().enumerate() {
+            if let Some(r) = tree.push(i, leaf) {
+                got = Some(r);
+            }
+        }
+        assert_eq!(got.unwrap(), want_small);
+        // And back to the original size.
+        tree.reset(9);
+        let mut got = None;
+        for (i, leaf) in leaves.into_iter().enumerate() {
+            if let Some(r) = tree.push(i, leaf) {
+                got = Some(r);
+            }
+        }
+        assert_eq!(got.unwrap(), want);
     }
 }

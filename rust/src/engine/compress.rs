@@ -163,23 +163,42 @@ impl Payload {
 
     /// Decode back to fp32 values (length [`Payload::len`]).
     pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into a reusable buffer (cleared first) — the allocation-free
+    /// hot-path variant of [`Payload::decode`]. Per-lane arithmetic is
+    /// identical (per-block scales are hoisted, which changes no value:
+    /// each lane still decodes as `±scales[i/block]` / `q[i]·scales[i/block]`).
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        out.clear();
         match self {
-            Payload::F32(v) => v.clone(),
+            Payload::F32(v) => out.extend_from_slice(v),
             Payload::Sign { len, block, bits, scales } => {
-                let mut out = Vec::with_capacity(*len);
-                for i in 0..*len {
-                    let s = scales[i / block];
-                    let positive = (bits[i / 64] >> (i % 64)) & 1 == 1;
-                    out.push(if positive { s } else { -s });
+                let block = (*block).max(1);
+                out.resize(*len, 0.0);
+                for (b, chunk) in out.chunks_mut(block).enumerate() {
+                    let s = scales[b];
+                    let base = b * block;
+                    for (k, o) in chunk.iter_mut().enumerate() {
+                        let i = base + k;
+                        let positive = (bits[i / 64] >> (i % 64)) & 1 == 1;
+                        *o = if positive { s } else { -s };
+                    }
                 }
-                out
             }
             Payload::Q8 { len, block, q, scales } => {
-                let mut out = Vec::with_capacity(*len);
-                for i in 0..*len {
-                    out.push(q[i] as f32 * scales[i / block]);
+                let block = (*block).max(1);
+                out.resize(*len, 0.0);
+                for (b, chunk) in out.chunks_mut(block).enumerate() {
+                    let s = scales[b];
+                    let qblk = &q[b * block..b * block + chunk.len()];
+                    for (o, &qv) in chunk.iter_mut().zip(qblk) {
+                        *o = qv as f32 * s;
+                    }
                 }
-                out
             }
         }
     }
@@ -207,7 +226,18 @@ pub trait GradCodec {
     /// encoder compresses `vals + residual` and stores the compression
     /// error back into `residual` — over steps the transmitted values
     /// integrate to the true signal even though each message is lossy.
-    fn encode(&self, vals: &[f32], residual: Option<&mut [f32]>) -> Payload;
+    fn encode(&self, vals: &[f32], residual: Option<&mut [f32]>) -> Payload {
+        let mut out = Payload::F32(Vec::new());
+        self.encode_into(vals, residual, &mut out);
+        out
+    }
+
+    /// In-place encode: overwrite `out`, reusing its buffers when it
+    /// already carries this codec's payload variant (the pooled hot
+    /// path). Must produce bit-identical payloads to
+    /// [`GradCodec::encode`] — the pool is a storage optimization, never
+    /// a math change.
+    fn encode_into(&self, vals: &[f32], residual: Option<&mut [f32]>, out: &mut Payload);
 
     /// Decode a payload produced by any codec (payloads self-describe).
     fn decode(&self, payload: &Payload) -> Vec<f32> {
@@ -224,8 +254,57 @@ impl GradCodec for NoneCodec {
         "none"
     }
 
-    fn encode(&self, vals: &[f32], _residual: Option<&mut [f32]>) -> Payload {
-        Payload::F32(vals.to_vec())
+    fn encode_into(&self, vals: &[f32], _residual: Option<&mut [f32]>, out: &mut Payload) {
+        fill_f32(out, vals);
+    }
+}
+
+/// Overwrite `payload` with a raw-f32 copy of `vals`, reusing its vector
+/// when it is already the `F32` variant.
+fn fill_f32(payload: &mut Payload, vals: &[f32]) {
+    match payload {
+        Payload::F32(v) => {
+            v.clear();
+            v.extend_from_slice(vals);
+        }
+        other => *other = Payload::F32(vals.to_vec()),
+    }
+}
+
+/// `acc[i] += decode(p)[i]` without materializing the decode — each lane
+/// adds exactly the value [`Payload::decode`] would produce (same
+/// expression, same f32 add), so the fused form is bit-identical to
+/// decode-then-add.
+fn add_decoded(p: &Payload, acc: &mut [f32]) {
+    debug_assert_eq!(p.len(), acc.len(), "lane-group length mismatch");
+    match p {
+        Payload::F32(v) => {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        Payload::Sign { len: _, block, bits, scales } => {
+            let block = (*block).max(1);
+            for (b, chunk) in acc.chunks_mut(block).enumerate() {
+                let s = scales[b];
+                let base = b * block;
+                for (k, a) in chunk.iter_mut().enumerate() {
+                    let i = base + k;
+                    let positive = (bits[i / 64] >> (i % 64)) & 1 == 1;
+                    *a += if positive { s } else { -s };
+                }
+            }
+        }
+        Payload::Q8 { len: _, block, q, scales } => {
+            let block = (*block).max(1);
+            for (b, chunk) in acc.chunks_mut(block).enumerate() {
+                let s = scales[b];
+                let qblk = &q[b * block..b * block + chunk.len()];
+                for (a, &qv) in chunk.iter_mut().zip(qblk) {
+                    *a += qv as f32 * s;
+                }
+            }
+        }
     }
 }
 
@@ -244,38 +323,82 @@ impl GradCodec for SignEfCodec {
         "sign-ef"
     }
 
-    fn encode(&self, vals: &[f32], residual: Option<&mut [f32]>) -> Payload {
+    /// Three passes, all buffer-free: per-block scale (the one true
+    /// reduction, kept in exact sequential order), word-at-a-time bit
+    /// packing, then the EF residual update. The error-feedback signal
+    /// `e = v + r` is recomputed per pass instead of materialized —
+    /// identical values (`r` is only mutated in the final pass, after
+    /// every read), so the payload and residual bits match the
+    /// historical buffered implementation exactly.
+    fn encode_into(&self, vals: &[f32], residual: Option<&mut [f32]>, out: &mut Payload) {
         let block = self.block.max(1);
         let n = vals.len();
-        // Error feedback: compress vals + residual, not vals.
-        let e: Vec<f32> = match &residual {
-            Some(r) => {
-                assert_eq!(r.len(), n, "EF residual length mismatch");
-                vals.iter().zip(r.iter()).map(|(v, r)| v + r).collect()
+        let (bits, scales) = match out {
+            Payload::Sign { len, block: ob, bits, scales } => {
+                *len = n;
+                *ob = block;
+                (bits, scales)
             }
-            None => vals.to_vec(),
+            other => {
+                *other = Payload::Sign { len: n, block, bits: Vec::new(), scales: Vec::new() };
+                let Payload::Sign { bits, scales, .. } = other else { unreachable!() };
+                (bits, scales)
+            }
         };
-        let mut scales = Vec::with_capacity(n.div_ceil(block));
-        for blk in e.chunks(block) {
+        if let Some(r) = residual.as_deref() {
+            assert_eq!(r.len(), n, "EF residual length mismatch");
+        }
+        // Pass 1: scale = mean |e| per block (sequential f32 sum — the
+        // order is part of the bit-determinism contract).
+        scales.clear();
+        for (b, blk) in vals.chunks(block).enumerate() {
             let mut sum = 0.0f32;
-            for &x in blk {
-                sum += x.abs();
+            match residual.as_deref() {
+                Some(r) => {
+                    let rblk = &r[b * block..b * block + blk.len()];
+                    for (&v, &rr) in blk.iter().zip(rblk) {
+                        sum += (v + rr).abs();
+                    }
+                }
+                None => {
+                    for &x in blk {
+                        sum += x.abs();
+                    }
+                }
             }
             scales.push(sum / blk.len() as f32);
         }
-        let mut bits = vec![0u64; n.div_ceil(64)];
-        for (i, &x) in e.iter().enumerate() {
-            if x >= 0.0 {
-                bits[i / 64] |= 1u64 << (i % 64);
+        // Pass 2: sign bits, one 64-lane word at a time (elementwise —
+        // chunking changes nothing per lane).
+        bits.clear();
+        bits.resize(n.div_ceil(64), 0u64);
+        let r_ref = residual.as_deref();
+        for (w, word) in bits.iter_mut().enumerate() {
+            let start = w * 64;
+            let end = (start + 64).min(n);
+            let mut acc = 0u64;
+            for i in start..end {
+                let e = match r_ref {
+                    Some(r) => vals[i] + r[i],
+                    None => vals[i],
+                };
+                if e >= 0.0 {
+                    acc |= 1u64 << (i - start);
+                }
             }
+            *word = acc;
         }
+        // Pass 3 (last — it mutates r): residual = e − decode(e).
         if let Some(r) = residual {
-            for (i, &x) in e.iter().enumerate() {
-                let s = scales[i / block];
-                r[i] = x - if x >= 0.0 { s } else { -s };
+            for (b, rblk) in r.chunks_mut(block).enumerate() {
+                let s = scales[b];
+                let vblk = &vals[b * block..b * block + rblk.len()];
+                for (rr, &v) in rblk.iter_mut().zip(vblk) {
+                    let e = v + *rr;
+                    *rr = e - if e >= 0.0 { s } else { -s };
+                }
             }
         }
-        Payload::Sign { len: n, block, bits, scales }
     }
 }
 
@@ -293,28 +416,47 @@ impl GradCodec for BlockQ8Codec {
         "q8"
     }
 
-    fn encode(&self, vals: &[f32], _residual: Option<&mut [f32]>) -> Payload {
+    /// Blockwise, writing quantized lanes into pre-sized storage (no
+    /// per-element `push`): absmax reduction per block, then a pure
+    /// elementwise divide-round-clamp that autovectorizes. Per-lane math
+    /// (`(x / scale).round().clamp(…)`) is unchanged bit-for-bit.
+    fn encode_into(&self, vals: &[f32], _residual: Option<&mut [f32]>, out: &mut Payload) {
         let block = self.block.max(1);
         let n = vals.len();
-        let mut q = Vec::with_capacity(n);
-        let mut scales = Vec::with_capacity(n.div_ceil(block));
-        for blk in vals.chunks(block) {
+        let (q, scales) = match out {
+            Payload::Q8 { len, block: ob, q, scales } => {
+                *len = n;
+                *ob = block;
+                (q, scales)
+            }
+            other => {
+                *other = Payload::Q8 { len: n, block, q: Vec::new(), scales: Vec::new() };
+                let Payload::Q8 { q, scales, .. } = other else { unreachable!() };
+                (q, scales)
+            }
+        };
+        scales.clear();
+        q.clear();
+        q.resize(n, 0);
+        for (b, blk) in vals.chunks(block).enumerate() {
+            let qblk = &mut q[b * block..b * block + blk.len()];
             let mut amax = 0.0f32;
             for &x in blk {
                 amax = amax.max(x.abs());
             }
             if amax == 0.0 {
                 scales.push(0.0);
-                q.resize(q.len() + blk.len(), 0);
+                for qq in qblk.iter_mut() {
+                    *qq = 0;
+                }
                 continue;
             }
             let scale = amax / 127.0;
             scales.push(scale);
-            for &x in blk {
-                q.push((x / scale).round().clamp(-127.0, 127.0) as i8);
+            for (qq, &x) in qblk.iter_mut().zip(blk) {
+                *qq = (x / scale).round().clamp(-127.0, 127.0) as i8;
             }
         }
-        Payload::Q8 { len: n, block, q, scales }
     }
 }
 
@@ -386,10 +528,6 @@ impl CompressPlan {
         }
     }
 
-    fn gather(lanes: &[u32], grad: &[f32]) -> Vec<f32> {
-        lanes.iter().map(|&l| grad[l as usize]).collect()
-    }
-
     /// Encode one worker-computed micro-batch gradient (a leaf message),
     /// consuming it — the `None` codec moves the vector straight into the
     /// tree, copy-free like the pre-compression engine. `residual` is the
@@ -399,62 +537,123 @@ impl CompressPlan {
         if self.cfg.mode == CompressMode::None {
             return EncodedGrad::Dense(grad);
         }
-        let full_vals = Self::gather(&self.full, &grad);
-        let free_vals = Self::gather(&self.free, &grad);
-        let full = if self.cfg.mode.compresses_full() {
-            BlockQ8Codec { block: self.block() }.encode(&full_vals, None)
-        } else {
-            Payload::F32(full_vals)
-        };
-        let free = if self.cfg.mode.compresses_free() {
-            SignEfCodec { block: self.block() }.encode(&free_vals, residual)
-        } else {
-            Payload::F32(free_vals)
-        };
-        EncodedGrad::Split { full, free }
+        let mut out = EncodedGrad::Dense(Vec::new());
+        let mut gather = Vec::new();
+        self.encode_leaf_into(&grad, residual, &mut gather, &mut out);
+        out
     }
 
-    /// Decode, add, re-encode one lane group at an interior tree node.
-    /// Compressed groups re-encode as 8-bit blocks (see module docs for
-    /// why interior hops never re-sign); an uncompressed (F32) group's
-    /// values move in and out without copies.
-    fn combine_group(&self, a: Payload, b: Payload, compressed: bool) -> Payload {
-        let mut sum = a.into_values();
-        let other = b.into_values();
-        debug_assert_eq!(sum.len(), other.len(), "lane-group length mismatch");
-        for (x, y) in sum.iter_mut().zip(&other) {
-            *x += y;
+    /// In-place leaf encode: overwrite `out` (a pooled message buffer,
+    /// re-shaped as needed) from a borrowed gradient, using `gather` as
+    /// the lane-gather scratch. Bit-identical payloads to
+    /// [`CompressPlan::encode_leaf`]; zero allocations once `out` and
+    /// `gather` have this round's shapes.
+    pub fn encode_leaf_into(
+        &self,
+        grad: &[f32],
+        residual: Option<&mut [f32]>,
+        gather: &mut Vec<f32>,
+        out: &mut EncodedGrad,
+    ) {
+        debug_assert_eq!(grad.len(), self.padded, "gradient/plan size mismatch");
+        if self.cfg.mode == CompressMode::None {
+            match out {
+                EncodedGrad::Dense(v) => {
+                    v.clear();
+                    v.extend_from_slice(grad);
+                }
+                other => *other = EncodedGrad::Dense(grad.to_vec()),
+            }
+            return;
         }
-        if compressed {
-            BlockQ8Codec { block: self.block() }.encode(&sum, None)
+        if !matches!(out, EncodedGrad::Split { .. }) {
+            *out = EncodedGrad::Split {
+                full: Payload::F32(Vec::new()),
+                free: Payload::F32(Vec::new()),
+            };
+        }
+        let EncodedGrad::Split { full, free } = out else { unreachable!() };
+        gather.clear();
+        gather.extend(self.full.iter().map(|&l| grad[l as usize]));
+        if self.cfg.mode.compresses_full() {
+            BlockQ8Codec { block: self.block() }.encode_into(gather.as_slice(), None, full);
         } else {
-            Payload::F32(sum)
+            fill_f32(full, gather.as_slice());
+        }
+        gather.clear();
+        gather.extend(self.free.iter().map(|&l| grad[l as usize]));
+        if self.cfg.mode.compresses_free() {
+            SignEfCodec { block: self.block() }.encode_into(gather.as_slice(), residual, free);
+        } else {
+            fill_f32(free, gather.as_slice());
         }
     }
 
-    /// Combine two subtree messages into their parent's message. The
-    /// caller (the reduce tree) fixes the grouping; this is the
-    /// decode-combine-reencode step, pure in its inputs.
-    pub fn combine(&self, a: EncodedGrad, b: EncodedGrad) -> EncodedGrad {
+    /// Decode, add, re-encode one lane group at an interior tree node,
+    /// in place: `a` becomes the parent message (reusing its storage),
+    /// `b` is only read (the caller recycles it). Compressed groups
+    /// re-encode as 8-bit blocks (see module docs for why interior hops
+    /// never re-sign).
+    fn combine_group_into(
+        &self,
+        a: &mut Payload,
+        b: &Payload,
+        compressed: bool,
+        scratch: &mut Vec<f32>,
+    ) {
+        if !compressed {
+            // Uncompressed groups are F32 on both sides (leaf and
+            // interior encodes both produce F32 here): exact fp32
+            // addition in place, identical to the pre-compression engine.
+            let (Payload::F32(x), Payload::F32(y)) = (a, b) else {
+                panic!("uncompressed lane group carries a non-F32 payload (engine bug)")
+            };
+            debug_assert_eq!(x.len(), y.len(), "lane-group length mismatch");
+            for (xa, yb) in x.iter_mut().zip(y) {
+                *xa += yb;
+            }
+            return;
+        }
+        a.decode_into(scratch);
+        add_decoded(b, scratch);
+        BlockQ8Codec { block: self.block() }.encode_into(scratch.as_slice(), None, a);
+    }
+
+    /// Combine two subtree messages into their parent's message, in
+    /// place: `a` becomes the parent, `b` is read-only (the caller
+    /// returns its storage to the pool). The caller (the reduce tree)
+    /// fixes the grouping; this is the decode-combine-reencode step,
+    /// pure in its inputs — bit-identical to the consuming
+    /// [`CompressPlan::combine`].
+    pub fn combine_into(&self, a: &mut EncodedGrad, b: &EncodedGrad, scratch: &mut Vec<f32>) {
         match (a, b) {
-            (EncodedGrad::Dense(mut x), EncodedGrad::Dense(y)) => {
+            (EncodedGrad::Dense(x), EncodedGrad::Dense(y)) => {
                 // The None codec: exact fp32 addition, identical to the
                 // pre-compression engine.
                 debug_assert_eq!(x.len(), y.len(), "leaf length mismatch");
-                for (a, b) in x.iter_mut().zip(&y) {
-                    *a += b;
+                for (xa, yb) in x.iter_mut().zip(y) {
+                    *xa += yb;
                 }
-                EncodedGrad::Dense(x)
             }
             (
                 EncodedGrad::Split { full: af, free: ar },
                 EncodedGrad::Split { full: bf, free: br },
-            ) => EncodedGrad::Split {
-                full: self.combine_group(af, bf, self.cfg.mode.compresses_full()),
-                free: self.combine_group(ar, br, self.cfg.mode.compresses_free()),
-            },
+            ) => {
+                self.combine_group_into(af, bf, self.cfg.mode.compresses_full(), scratch);
+                self.combine_group_into(ar, br, self.cfg.mode.compresses_free(), scratch);
+            }
             _ => panic!("mixed encoded-grad variants in one reduce tree (engine bug)"),
         }
+    }
+
+    /// Combine two subtree messages, consuming both (the historical
+    /// API, kept for tests and one-shot callers; the engine uses
+    /// [`CompressPlan::combine_into`] + the buffer pool).
+    pub fn combine(&self, a: EncodedGrad, b: EncodedGrad) -> EncodedGrad {
+        let mut a = a;
+        let mut scratch = Vec::new();
+        self.combine_into(&mut a, &b, &mut scratch);
+        a
     }
 
     /// Decode the tree root back into the padded flat gradient (padding
@@ -462,15 +661,41 @@ impl CompressPlan {
     pub fn into_grad(&self, enc: EncodedGrad) -> Vec<f32> {
         match enc {
             EncodedGrad::Dense(v) => v,
-            EncodedGrad::Split { full, free } => {
-                let mut out = vec![0.0f32; self.padded];
-                for (lane, v) in self.full.iter().zip(full.into_values()) {
-                    out[*lane as usize] = v;
-                }
-                for (lane, v) in self.free.iter().zip(free.into_values()) {
-                    out[*lane as usize] = v;
-                }
+            split @ EncodedGrad::Split { .. } => {
+                let mut out = Vec::new();
+                let mut scratch = Vec::new();
+                self.decode_root_into(&split, &mut scratch, &mut out);
                 out
+            }
+        }
+    }
+
+    /// Decode the tree root into a reusable padded flat buffer (padding
+    /// lanes zeroed) — the allocation-free variant of
+    /// [`CompressPlan::into_grad`]. `scratch` holds one lane group's
+    /// decode at a time.
+    pub fn decode_root_into(
+        &self,
+        enc: &EncodedGrad,
+        scratch: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        out.resize(self.padded, 0.0);
+        match enc {
+            EncodedGrad::Dense(v) => {
+                debug_assert_eq!(v.len(), self.padded, "dense root size mismatch");
+                out.copy_from_slice(v);
+            }
+            EncodedGrad::Split { full, free } => {
+                full.decode_into(scratch);
+                for (lane, &v) in self.full.iter().zip(scratch.iter()) {
+                    out[*lane as usize] = v;
+                }
+                free.decode_into(scratch);
+                for (lane, &v) in self.free.iter().zip(scratch.iter()) {
+                    out[*lane as usize] = v;
+                }
             }
         }
     }
@@ -689,6 +914,110 @@ mod tests {
         let dense = EncodedGrad::Dense(vec![0.0; 32]);
         let split = p.encode_leaf(vec![0.0f32; 32], None);
         p.combine(dense, split);
+    }
+
+    /// The pooled in-place entry points are storage optimizations only:
+    /// every payload bit and every EF-residual bit must match the
+    /// allocating API, including when the target buffer is recycled from
+    /// a different shape/variant (what the pool hands out across rounds).
+    #[test]
+    fn encode_into_matches_encode_bitwise() {
+        let vals = randvec(300, 17);
+        for block in [1usize, 8, 64, 256] {
+            // SignEf, with and without error feedback.
+            let codec = SignEfCodec { block };
+            let mut r1 = vec![0.01f32; vals.len()];
+            let mut r2 = r1.clone();
+            let want = codec.encode(&vals, Some(&mut r1));
+            // Recycled target of a *different* variant and stale shape.
+            let mut got = Payload::Q8 { len: 7, block: 3, q: vec![1; 7], scales: vec![2.0; 3] };
+            codec.encode_into(&vals, Some(&mut r2), &mut got);
+            assert_eq!(got, want, "sign block={block}");
+            assert_eq!(
+                r1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                r2.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "EF residual diverged (block={block})"
+            );
+            // Re-encode into the now-matching variant (the steady state).
+            codec.encode_into(&vals, None, &mut got);
+            assert_eq!(got, codec.encode(&vals, None));
+
+            let codec = BlockQ8Codec { block };
+            let want = codec.encode(&vals, None);
+            let mut got = Payload::Sign { len: 3, block: 1, bits: vec![7], scales: vec![1.0; 3] };
+            codec.encode_into(&vals, None, &mut got);
+            assert_eq!(got, want, "q8 block={block}");
+        }
+        let codec = NoneCodec;
+        let mut got = Payload::F32(vec![9.0; 2]);
+        codec.encode_into(&vals, None, &mut got);
+        assert_eq!(got, codec.encode(&vals, None));
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        let vals = randvec(257, 23);
+        for payload in [
+            NoneCodec.encode(&vals, None),
+            SignEfCodec { block: 32 }.encode(&vals, None),
+            BlockQ8Codec { block: 32 }.encode(&vals, None),
+        ] {
+            let mut out = vec![5.0f32; 13]; // stale contents + wrong length
+            payload.decode_into(&mut out);
+            assert_eq!(
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                payload.decode().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn combine_into_and_decode_root_into_match_consuming_apis() {
+        for mode in CompressMode::ALL {
+            let p = plan(mode, 16, 120, 128);
+            let mk = |seed| {
+                let mut g = randvec(120, seed);
+                g.resize(128, 0.0);
+                g
+            };
+            let (ga, gb) = (mk(31), mk(32));
+            let want =
+                p.combine(p.encode_leaf(ga.clone(), None), p.encode_leaf(gb.clone(), None));
+            let mut a = p.encode_leaf(ga.clone(), None);
+            let b = p.encode_leaf(gb.clone(), None);
+            let mut scratch = Vec::new();
+            p.combine_into(&mut a, &b, &mut scratch);
+            assert_eq!(a, want, "{mode:?} combine_into != combine");
+            let mut out = Vec::new();
+            p.decode_root_into(&a, &mut scratch, &mut out);
+            let direct = p.into_grad(want);
+            assert_eq!(
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                direct.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{mode:?} decode_root_into != into_grad"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_leaf_into_matches_encode_leaf_bitwise() {
+        for mode in CompressMode::ALL {
+            let p = plan(mode, 32, 90, 96);
+            let mut grad = randvec(90, 41);
+            grad.resize(96, 0.0);
+            let res_len = p.residual_len();
+            let mut r1 = vec![0.02f32; res_len];
+            let mut r2 = r1.clone();
+            let slot1 = if res_len > 0 { Some(&mut r1[..]) } else { None };
+            let want = p.encode_leaf(grad.clone(), slot1);
+            let mut got = EncodedGrad::Dense(vec![1.0; 4]);
+            let mut gather = Vec::new();
+            let slot2 = if res_len > 0 { Some(&mut r2[..]) } else { None };
+            p.encode_leaf_into(&grad, slot2, &mut gather, &mut got);
+            assert_eq!(got, want, "{mode:?}");
+            assert_eq!(r1, r2, "{mode:?} EF residual diverged");
+            assert!(p.leaf_matches(&got), "{mode:?}");
+        }
     }
 
     #[test]

@@ -34,16 +34,31 @@
 //!    and EF-residual — lifecycle boundary: no cross-worker state
 //!    migration exists.
 //!
+//! 6. The steady-state round loop is **allocation-free**: reduce-tree
+//!    messages come from a recycling [`pool::BufferPool`], codecs
+//!    encode/decode in place into pooled storage, gradients land in
+//!    persistent per-worker buffers, and the per-step trees are reset
+//!    rather than rebuilt. After the first step of a round the grad path
+//!    performs zero heap allocations on the logical-worker path (pinned
+//!    by the `alloc_steady_state` integration test; the threaded path
+//!    additionally pays only small `mpsc` channel nodes). The
+//!    `[parallel] pipeline` flag selects between the overlapped
+//!    collector (combine micro-batch `j` while workers compute `j+1` —
+//!    the default) and a barrier collector that stages all `m` results
+//!    first; both feed the same index-keyed tree, so they are
+//!    bit-identical.
+//!
 //! Submodules: [`allreduce`] (the deterministic tree), [`compress`] (the
-//! split-aware codecs + per-round plan), [`shard`] (state partitioner,
-//! shard update kernels, EF residual bank), [`refmodel`] (a pure-Rust
-//! gradient source so everything runs without PJRT artifacts), and
-//! [`orchestrator`] (the round-based driver behind `frugal pretrain
-//! --workers N`).
+//! split-aware codecs + per-round plan), [`pool`] (the hot-path buffer
+//! recycler), [`shard`] (state partitioner, shard update kernels, EF
+//! residual bank), [`refmodel`] (a pure-Rust gradient source so
+//! everything runs without PJRT artifacts), and [`orchestrator`] (the
+//! round-based driver behind `frugal pretrain --workers N`).
 
 pub mod allreduce;
 pub mod compress;
 pub mod orchestrator;
+pub mod pool;
 pub mod refmodel;
 pub mod shard;
 
@@ -53,6 +68,7 @@ pub use compress::{
     Payload, SignEfCodec, WireStats,
 };
 pub use orchestrator::{Orchestrator, RoundReport};
+pub use pool::{BufferPool, PoolStats};
 pub use refmodel::{RefLm, RefLmCfg};
 pub use shard::{ResidualBank, ShardPlan};
 
@@ -76,6 +92,28 @@ pub trait GradSource {
     /// Mean loss over the micro-batch and its gradient (length
     /// `padded_size`, zero on padding lanes).
     fn loss_and_grad(&mut self, flat: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)>;
+
+    /// In-place variant: overwrite `grad` (length `padded_size`) with
+    /// the micro-batch gradient and return the loss. The engine's hot
+    /// path calls this with a persistent per-worker buffer; sources that
+    /// can fill it directly (e.g. [`RefLm`]) override the default, which
+    /// falls back to [`GradSource::loss_and_grad`] plus a copy.
+    fn loss_and_grad_into(
+        &mut self,
+        flat: &[f32],
+        tokens: &[i32],
+        grad: &mut [f32],
+    ) -> Result<f32> {
+        let (loss, g) = self.loss_and_grad(flat, tokens)?;
+        anyhow::ensure!(
+            g.len() == grad.len(),
+            "gradient has {} lanes, buffer holds {}",
+            g.len(),
+            grad.len()
+        );
+        grad.copy_from_slice(&g);
+        Ok(loss)
+    }
 
     /// Loss only (used for evaluation); default derives it from
     /// [`GradSource::loss_and_grad`].
@@ -109,6 +147,14 @@ pub struct ParallelCfg {
     /// Run workers on OS threads (true) or as logical workers on the
     /// caller thread (false). Either way the result is bit-identical.
     pub threaded: bool,
+    /// Overlap collection with production (threaded mode): combine
+    /// micro-batch `j`'s message into the tree while workers compute
+    /// `j+1` (true, the default), or stage all `m` messages behind a
+    /// barrier and feed them in index order (false — a measurement /
+    /// debugging knob). The tree grouping is index-keyed either way, so
+    /// the two are **bit-identical**; `false` only serializes the
+    /// wall-clock. `[parallel] pipeline` / `--no-pipeline`.
+    pub pipeline: bool,
     /// Reduce-tree gradient compression (`[parallel.compress]` section /
     /// `--compress`). Codecs are deterministic, so bit-identity across
     /// worker counts holds within any fixed mode.
@@ -124,6 +170,7 @@ impl Default for ParallelCfg {
             straggler_ms: 0,
             timeout_ms: 0,
             threaded: true,
+            pipeline: true,
             compress: CompressCfg::default(),
         }
     }
@@ -178,6 +225,22 @@ impl Sources {
 /// worker-side encode is the compressed wire hop).
 type MicroResult = (usize, usize, Result<(f32, EncodedGrad)>);
 
+/// One barrier-mode staging slot: `(token_count, loss, encoded_grad)`.
+type StagedMicro = Option<(usize, f32, EncodedGrad)>;
+
+/// Persistent per-worker working set: token buffer, gradient buffer,
+/// lane-gather scratch, the pooled messages pre-drawn for this step's
+/// owned micro-batch slots, and the shard-update gradient gather. All of
+/// it is reused every step — the worker side of the zero-allocation
+/// contract.
+#[derive(Debug, Default)]
+struct WorkerCtx {
+    tokens: Vec<i32>,
+    grad: Vec<f32>,
+    gather: Vec<f32>,
+    msgs: Vec<EncodedGrad>,
+}
+
 /// The data-parallel FRUGAL trainer.
 pub struct Engine {
     cfg: EngineCfg,
@@ -195,6 +258,21 @@ pub struct Engine {
     cplan: CompressPlan,
     /// Per-slot EF residuals (SignEf transport state; reset each round).
     residuals: ResidualBank,
+    /// Reduce-tree message recycler (see [`pool`]).
+    pool: BufferPool,
+    /// Persistent per-step tree accumulator (reset, never rebuilt).
+    acc: MicroAccumulator,
+    /// The decoded mean gradient of the current step (persistent).
+    grad_buf: Vec<f32>,
+    /// Collector-side decode/combine scratch (one lane group at a time).
+    combine_scratch: Vec<f32>,
+    /// Barrier staging area for `pipeline = false` (slot-indexed).
+    stage: Vec<StagedMicro>,
+    /// Per-worker reusable buffers (tokens/grads/messages/gathers).
+    workers_ctx: Vec<WorkerCtx>,
+    /// Per-worker post-update parameter values, shard order (persistent).
+    full_out: Vec<Vec<f32>>,
+    free_out: Vec<Vec<f32>>,
     wire_bytes: u64,
     wire_dense_bytes: u64,
     clock: SubspaceClock,
@@ -239,6 +317,11 @@ impl Engine {
             );
         }
         let clock = SubspaceClock::new(cfg.update_freq);
+        let workers = cfg.parallel.workers;
+        let grad_accum = cfg.parallel.grad_accum;
+        let workers_ctx = (0..workers)
+            .map(|_| WorkerCtx { grad: vec![0.0; padded], ..WorkerCtx::default() })
+            .collect();
         Ok(Engine {
             cfg,
             mask_builder,
@@ -250,6 +333,14 @@ impl Engine {
             states: Vec::new(),
             cplan: CompressPlan::default(),
             residuals: ResidualBank::default(),
+            pool: BufferPool::new(),
+            acc: MicroAccumulator::new(grad_accum),
+            grad_buf: vec![0.0; padded],
+            combine_scratch: Vec::new(),
+            stage: Vec::new(),
+            workers_ctx,
+            full_out: (0..workers).map(|_| Vec::new()).collect(),
+            free_out: (0..workers).map(|_| Vec::new()).collect(),
             wire_bytes: 0,
             wire_dense_bytes: 0,
             clock,
@@ -306,6 +397,12 @@ impl Engine {
         self.residuals.floats()
     }
 
+    /// Reduce-tree buffer-pool traffic counters (steady state: `misses`
+    /// constant while `grabs` grows — every message recycled).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
     /// Bytes shipped over reduce-tree edges so far (encoded).
     pub fn wire_bytes_total(&self) -> u64 {
         self.wire_bytes
@@ -339,12 +436,14 @@ impl Engine {
         self.reports.push(RoundReport::new(self.round, self.clock.step(), &self.plan));
     }
 
-    /// One data-parallel optimizer step. `batch_fn` maps a global
-    /// micro-batch index to its token buffer; the engine calls it with
-    /// indices `step*grad_accum .. (step+1)*grad_accum`.
+    /// One data-parallel optimizer step. `batch_fn` fills a reusable
+    /// token buffer for a global micro-batch index; the engine calls it
+    /// with indices `step*grad_accum .. (step+1)*grad_accum`. The
+    /// fill-style signature keeps the steady-state loop allocation-free
+    /// (see [`pool`]).
     pub fn step<F>(&mut self, batch_fn: &F) -> Result<f32>
     where
-        F: Fn(u64) -> Vec<i32> + Sync,
+        F: Fn(u64, &mut Vec<i32>) + Sync,
     {
         let (step, reselect) = self.clock.tick();
         if reselect {
@@ -355,22 +454,43 @@ impl Engine {
         let padded = self.mask_builder.layout().padded_size;
 
         // ---- gradient phase: compute M micro-batch grads, encode each
-        // as a leaf message, tree-reduce (decode-combine-reencode).
+        // as a leaf message (into pooled storage), tree-reduce
+        // (decode-combine-reencode in place).
         let use_threads = self.cfg.parallel.threaded
             && nw > 1
             && matches!(self.sources, Sources::Threaded(_));
-        let (loss_sum, mut grad, tokens_total, timeouts, wire) = if use_threads {
+        self.acc.begin(m);
+        let (loss_sum, tokens_total, timeouts, wire) = if use_threads {
+            // Hand each worker pooled message buffers for its owned
+            // slots (j ≡ w mod N) — its double-buffered production ring.
+            for w in 0..nw {
+                let owned = m.saturating_sub(w).div_ceil(nw);
+                while self.workers_ctx[w].msgs.len() < owned {
+                    let msg = self.pool.get_encoded();
+                    self.workers_ctx[w].msgs.push(msg);
+                }
+                self.workers_ctx[w].msgs.truncate(owned);
+                self.workers_ctx[w].grad.resize(padded, 0.0);
+            }
             let straggler_ms = self.cfg.parallel.straggler_ms;
             let straggler_worker = (self.round as usize + nw - 1) % nw;
             let timeout_ms = self.cfg.parallel.timeout_ms;
+            let pipeline = self.cfg.parallel.pipeline;
             let flat: &[f32] = &self.flat;
             let cplan: &CompressPlan = &self.cplan;
+            let acc = &mut self.acc;
+            let pool = &mut self.pool;
+            let scratch = &mut self.combine_scratch;
+            let stage = &mut self.stage;
+            let ctxs = &mut self.workers_ctx;
             let Sources::Threaded(srcs) = &mut self.sources else { unreachable!() };
             let banks = self.residuals.per_worker_mut();
             assert_eq!(banks.len(), nw, "residual bank not sized to the worker count");
             let (tx, rx) = mpsc::channel::<MicroResult>();
-            std::thread::scope(|scope| {
-                for ((w, src), wres) in srcs.iter_mut().enumerate().zip(banks.iter_mut()) {
+            let timeouts = std::thread::scope(|scope| {
+                for (w, ((src, ctx), wres)) in
+                    srcs.iter_mut().zip(ctxs.iter_mut()).zip(banks.iter_mut()).enumerate()
+                {
                     let tx = tx.clone();
                     scope.spawn(move || {
                         let mut j = w;
@@ -379,19 +499,27 @@ impl Engine {
                             if straggler_ms > 0 && w == straggler_worker {
                                 std::thread::sleep(Duration::from_millis(straggler_ms));
                             }
-                            let tokens = batch_fn(step * m as u64 + j as u64);
-                            let n_tok = tokens.len();
-                            let res = src.loss_and_grad(flat, &tokens).and_then(|(loss, grad)| {
-                                    anyhow::ensure!(
-                                        grad.len() == padded,
-                                        "micro-batch {j} gradient has {} lanes, expected \
-                                         {padded}",
-                                        grad.len()
-                                    );
+                            // Cleared here (not just by contract) so a
+                            // fill closure that only extends cannot grow
+                            // the buffer step over step.
+                            ctx.tokens.clear();
+                            batch_fn(step * m as u64 + j as u64, &mut ctx.tokens);
+                            let n_tok = ctx.tokens.len();
+                            let mut msg =
+                                ctx.msgs.pop().expect("worker message ring underflow");
+                            let res = src
+                                .loss_and_grad_into(flat, &ctx.tokens, &mut ctx.grad)
+                                .map(|loss| {
                                     // Slot j's EF residual lives at local
                                     // index j/N of this worker's bank.
                                     let slot = wres.get_mut(local).map(|r| r.as_mut_slice());
-                                    Ok((loss, cplan.encode_leaf(grad, slot)))
+                                    cplan.encode_leaf_into(
+                                        &ctx.grad,
+                                        slot,
+                                        &mut ctx.gather,
+                                        &mut msg,
+                                    );
+                                    (loss, msg)
                                 });
                             // A send error means the collector bailed;
                             // just stop producing.
@@ -404,114 +532,136 @@ impl Engine {
                     });
                 }
                 drop(tx);
-                collect_micro_grads(cplan, &rx, m, timeout_ms)
-            })?
+                collect_micro_grads(cplan, acc, pool, scratch, stage, &rx, m, timeout_ms,
+                                    pipeline)
+            })?;
+            let (loss_sum, tokens_total, wire) =
+                acc.finish_into(cplan, pool, scratch, &mut self.grad_buf)?;
+            (loss_sum, tokens_total, timeouts, wire)
         } else {
             // Logical workers: compute and feed the tree one micro-batch
             // at a time — only O(log m) partial sums are ever alive, so
             // peak memory stays far below m full gradients.
-            let mut acc = MicroAccumulator::new(&self.cplan, m);
             for j in 0..m {
-                let tokens = batch_fn(step * m as u64 + j as u64);
-                let n_tok = tokens.len();
-                let (loss, grad) =
-                    self.sources.get_mut(j % nw).loss_and_grad(&self.flat, &tokens)?;
-                anyhow::ensure!(
-                    grad.len() == padded,
-                    "micro-batch {j} gradient has {} lanes, expected {padded}",
-                    grad.len()
+                let w = j % nw;
+                let ctx = &mut self.workers_ctx[w];
+                ctx.grad.resize(padded, 0.0);
+                ctx.tokens.clear();
+                batch_fn(step * m as u64 + j as u64, &mut ctx.tokens);
+                let n_tok = ctx.tokens.len();
+                let src = self.sources.get_mut(w);
+                let loss = src.loss_and_grad_into(&self.flat, &ctx.tokens, &mut ctx.grad)?;
+                let mut msg = self.pool.get_encoded();
+                self.cplan.encode_leaf_into(
+                    &ctx.grad,
+                    self.residuals.slot_mut(j),
+                    &mut ctx.gather,
+                    &mut msg,
                 );
-                let enc = self.cplan.encode_leaf(grad, self.residuals.slot_mut(j));
-                acc.push(j, n_tok, loss, enc)?;
+                self.acc.push(
+                    &self.cplan,
+                    &mut self.pool,
+                    &mut self.combine_scratch,
+                    j,
+                    n_tok,
+                    loss,
+                    msg,
+                )?;
             }
-            let (loss, grad, tokens_total, wire) = acc.finish()?;
-            (loss, grad, tokens_total, 0, wire)
+            let (loss_sum, tokens_total, wire) = self.acc.finish_into(
+                &self.cplan,
+                &mut self.pool,
+                &mut self.combine_scratch,
+                &mut self.grad_buf,
+            )?;
+            (loss_sum, tokens_total, 0, wire)
         };
         self.wire_bytes += wire.bytes;
         self.wire_dense_bytes += wire.dense_bytes;
 
         // Mean over the global batch — the same scale at any worker count.
         let inv = 1.0 / m as f32;
-        for g in grad.iter_mut() {
+        for g in self.grad_buf.iter_mut() {
             *g *= inv;
         }
         let loss = loss_sum * inv;
         if let Some(max_norm) = self.cfg.clip {
-            clip_global_norm(&mut grad, max_norm);
+            clip_global_norm(&mut self.grad_buf, max_norm);
         }
 
         // ---- update phase: sharded FRUGAL update (Adam on state-full
-        // lanes, signSGD on state-free lanes), then gather.
+        // lanes, signSGD on state-free lanes) into persistent per-worker
+        // output buffers, then gather.
         let lr = self.cfg.schedule.lr(self.cfg.peak_lr, step) as f32;
         let lr_free = lr * self.cfg.lr_free_mult as f32;
         let adam = self.cfg.adam;
-        let (full_new, free_new) = {
+        {
             let plan = &self.plan;
             let free_plan = &self.free_plan;
             let flat: &[f32] = &self.flat;
-            let grad_ref: &[f32] = &grad;
+            let grad_ref: &[f32] = &self.grad_buf;
+            let shard_work = self
+                .states
+                .iter_mut()
+                .zip(self.full_out.iter_mut())
+                .zip(self.free_out.iter_mut())
+                .zip(self.workers_ctx.iter_mut())
+                .enumerate();
             if use_threads {
                 std::thread::scope(|scope| {
-                    let mut handles = Vec::with_capacity(nw);
-                    for (w, state) in self.states.iter_mut().enumerate() {
-                        handles.push(scope.spawn(move || {
-                            let full = shard::adam_shard_update(
+                    for (w, (((state, fo), fr), ctx)) in shard_work {
+                        scope.spawn(move || {
+                            shard::adam_shard_update_into(
                                 state,
                                 plan.lanes_of(w),
                                 flat,
                                 grad_ref,
                                 lr,
                                 &adam,
+                                &mut ctx.gather,
+                                fo,
                             );
-                            let free = shard::sign_shard_update(
+                            shard::sign_shard_update_into(
                                 free_plan.lanes_of(w),
                                 flat,
                                 grad_ref,
                                 lr_free,
+                                fr,
                             );
-                            (full, free)
-                        }));
+                        });
                     }
-                    let mut full_new = Vec::with_capacity(nw);
-                    let mut free_new = Vec::with_capacity(nw);
-                    for h in handles {
-                        let (full, free) = h.join().expect("shard worker panicked");
-                        full_new.push(full);
-                        free_new.push(free);
-                    }
-                    (full_new, free_new)
-                })
+                });
             } else {
-                let mut full_new = Vec::with_capacity(nw);
-                let mut free_new = Vec::with_capacity(nw);
-                for (w, state) in self.states.iter_mut().enumerate() {
-                    full_new.push(shard::adam_shard_update(
+                for (w, (((state, fo), fr), ctx)) in shard_work {
+                    shard::adam_shard_update_into(
                         state,
                         plan.lanes_of(w),
                         flat,
                         grad_ref,
                         lr,
                         &adam,
-                    ));
-                    free_new.push(shard::sign_shard_update(
+                        &mut ctx.gather,
+                        fo,
+                    );
+                    shard::sign_shard_update_into(
                         free_plan.lanes_of(w),
                         flat,
                         grad_ref,
                         lr_free,
-                    ));
+                        fr,
+                    );
                 }
-                (full_new, free_new)
             }
-        };
+        }
 
         // Gather: scatter each worker's shard back into the replicated
         // flat vector (disjoint lanes — order cannot matter).
         for w in 0..nw {
             for (k, &lane) in self.plan.lanes_of(w).iter().enumerate() {
-                self.flat[lane as usize] = full_new[w][k];
+                self.flat[lane as usize] = self.full_out[w][k];
             }
             for (k, &lane) in self.free_plan.lanes_of(w).iter().enumerate() {
-                self.flat[lane as usize] = free_new[w][k];
+                self.flat[lane as usize] = self.free_out[w][k];
             }
         }
 
@@ -533,61 +683,69 @@ impl Engine {
     /// mask as its lane set, and the MaskBuilder RNG stream. See
     /// [`crate::ckpt`] for the serialization.
     pub fn capture_state(&self) -> Result<crate::ckpt::TrainState> {
+        let mut st = crate::ckpt::TrainState::empty();
+        self.capture_state_into(&mut st)?;
+        Ok(st)
+    }
+
+    /// [`Engine::capture_state`] into a reusable [`crate::ckpt::TrainState`]
+    /// — every model-scale vector is overwritten in place (capacity
+    /// preserved), so a background-save loop recycling one capture
+    /// buffer copies the state exactly once per snapshot instead of
+    /// re-allocating it.
+    pub fn capture_state_into(&self, st: &mut crate::ckpt::TrainState) -> Result<()> {
         anyhow::ensure!(
             self.clock.step() >= 1,
             "nothing to checkpoint before the first optimizer step"
         );
         let layout = self.mask_builder.layout();
-        let k = self.plan.total_lanes();
-        let mut m = Vec::with_capacity(k);
-        let mut v = Vec::with_capacity(k);
-        for (w, st) in self.states.iter().enumerate() {
-            debug_assert_eq!(st.m.len(), self.plan.shard_len(w));
-            debug_assert_eq!(st.t, self.clock.adam_t(), "worker {w} Adam counter diverged");
-            m.extend_from_slice(&st.m);
-            v.extend_from_slice(&st.v);
+        st.step = self.clock.step();
+        st.round = self.round;
+        st.adam_t = self.clock.adam_t();
+        st.update_freq = self.cfg.update_freq;
+        st.grad_accum = self.cfg.parallel.grad_accum;
+        st.workers = self.cfg.parallel.workers;
+        st.shard_granularity = self.cfg.parallel.shard_granularity;
+        st.flat_size = layout.flat_size;
+        st.padded_size = layout.padded_size;
+        st.wire_mode.clear();
+        st.wire_mode.push_str(self.cfg.parallel.compress.mode.as_str());
+        st.wire_block = self.cfg.parallel.compress.block;
+        st.subspace = self.mask_builder.fingerprint();
+        st.flat.clear();
+        st.flat.extend_from_slice(&self.flat);
+        st.full_lanes.clear();
+        st.full_lanes.extend_from_slice(self.plan.lanes());
+        let builder = self.mask_builder.ckpt_state();
+        st.rng_words = builder.rng_words;
+        st.rng_spare = builder.rng_spare;
+        st.builder_round = builder.round;
+        st.builder_cursor = builder.cursor;
+        st.m.clear();
+        st.v.clear();
+        for (w, shard) in self.states.iter().enumerate() {
+            debug_assert_eq!(shard.m.len(), self.plan.shard_len(w));
+            debug_assert_eq!(shard.t, self.clock.adam_t(), "worker {w} Adam counter diverged");
+            st.m.extend_from_slice(&shard.m);
+            st.v.extend_from_slice(&shard.v);
         }
         let residual_len = self.cplan.residual_len();
-        let residuals: Vec<Vec<f32>> = if residual_len > 0 {
-            (0..self.cfg.parallel.grad_accum)
-                .map(|j| {
-                    self.residuals
-                        .slot(j)
-                        .map(|r| r.to_vec())
-                        .ok_or_else(|| anyhow::anyhow!("EF residual slot {j} missing"))
-                })
-                .collect::<Result<_>>()?
-        } else {
-            Vec::new()
-        };
-        let builder = self.mask_builder.ckpt_state();
-        let state = crate::ckpt::TrainState {
-            step: self.clock.step(),
-            round: self.round,
-            adam_t: self.clock.adam_t(),
-            update_freq: self.cfg.update_freq,
-            grad_accum: self.cfg.parallel.grad_accum,
-            workers: self.cfg.parallel.workers,
-            shard_granularity: self.cfg.parallel.shard_granularity,
-            flat_size: layout.flat_size,
-            padded_size: layout.padded_size,
-            wire_mode: self.cfg.parallel.compress.mode.as_str().to_string(),
-            wire_block: self.cfg.parallel.compress.block,
-            subspace: self.mask_builder.fingerprint(),
-            flat: self.flat.clone(),
-            full_lanes: self.plan.lanes().to_vec(),
-            rng_words: builder.rng_words,
-            rng_spare: builder.rng_spare,
-            builder_round: builder.round,
-            builder_cursor: builder.cursor,
-            m,
-            v,
-            residuals,
-            wire_bytes: self.wire_bytes,
-            wire_dense_bytes: self.wire_dense_bytes,
-        };
-        state.validate()?;
-        Ok(state)
+        let slots = if residual_len > 0 { self.cfg.parallel.grad_accum } else { 0 };
+        st.residuals.truncate(slots);
+        while st.residuals.len() < slots {
+            st.residuals.push(Vec::new());
+        }
+        for (j, dst) in st.residuals.iter_mut().enumerate() {
+            let src = self
+                .residuals
+                .slot(j)
+                .ok_or_else(|| anyhow::anyhow!("EF residual slot {j} missing"))?;
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        st.wire_bytes = self.wire_bytes;
+        st.wire_dense_bytes = self.wire_dense_bytes;
+        st.validate()
     }
 
     /// Restore a captured/loaded [`crate::ckpt::TrainState`] into this
@@ -747,26 +905,29 @@ impl Engine {
 /// feed encoded micro-batch results as they become available; only
 /// O(log m) partial messages are alive at any moment. Gradient leaves
 /// combine through the round's [`CompressPlan`]
-/// (decode-combine-reencode); losses stay raw fp32 (one float). The
+/// (decode-combine-reencode, in place into pooled storage); losses are
+/// reduced as raw fp32 through the same index-keyed grouping. The
 /// accumulator also meters the wire: every leaf send and every interior
 /// combine output is one tree-edge message.
-struct MicroAccumulator<'p> {
-    plan: &'p CompressPlan,
+///
+/// The accumulator is **persistent**: the engine owns one and re-arms it
+/// with [`MicroAccumulator::begin`] each step, so the trees' internal
+/// storage is reused instead of reallocated.
+struct MicroAccumulator {
     gtree: ReduceTree<EncodedGrad>,
-    ltree: ReduceTree<Vec<f32>>,
+    ltree: ReduceTree<f32>,
     grad_root: Option<EncodedGrad>,
-    loss_root: Option<Vec<f32>>,
+    loss_root: Option<f32>,
     tokens_total: usize,
     received: usize,
     wire: WireStats,
 }
 
-impl<'p> MicroAccumulator<'p> {
-    fn new(plan: &'p CompressPlan, m: usize) -> MicroAccumulator<'p> {
+impl MicroAccumulator {
+    fn new(m: usize) -> MicroAccumulator {
         MicroAccumulator {
-            plan,
-            gtree: ReduceTree::new(m),
-            ltree: ReduceTree::new(m),
+            gtree: ReduceTree::new(m.max(1)),
+            ltree: ReduceTree::new(m.max(1)),
             grad_root: None,
             loss_root: None,
             tokens_total: 0,
@@ -775,25 +936,48 @@ impl<'p> MicroAccumulator<'p> {
         }
     }
 
-    fn push(&mut self, j: usize, n_tok: usize, loss: f32, enc: EncodedGrad) -> Result<()> {
+    /// Re-arm for a fresh step of `m` micro-batches, keeping capacity.
+    fn begin(&mut self, m: usize) {
+        self.gtree.reset(m);
+        self.ltree.reset(m);
+        self.grad_root = None;
+        self.loss_root = None;
+        self.tokens_total = 0;
+        self.received = 0;
+        self.wire = WireStats::default();
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        plan: &CompressPlan,
+        pool: &mut BufferPool,
+        scratch: &mut Vec<f32>,
+        j: usize,
+        n_tok: usize,
+        loss: f32,
+        enc: EncodedGrad,
+    ) -> Result<()> {
         anyhow::ensure!(
-            self.plan.leaf_matches(&enc),
+            plan.leaf_matches(&enc),
             "micro-batch {j} leaf message does not match the round's compression plan"
         );
         self.tokens_total += n_tok;
         self.received += 1;
-        let dense = 4 * self.plan.padded_size() as u64;
-        self.wire.bytes += self.plan.wire_bytes(&enc) as u64;
+        let dense = 4 * plan.padded_size() as u64;
+        self.wire.bytes += plan.wire_bytes(&enc) as u64;
         self.wire.messages += 1;
         self.wire.dense_bytes += dense;
-        let plan = self.plan;
         let mut up_bytes = 0u64;
         let mut up_msgs = 0u64;
-        let root = self.gtree.push_with(j, enc, &mut |a, b| {
-            let parent = plan.combine(a, b);
-            up_bytes += plan.wire_bytes(&parent) as u64;
+        let root = self.gtree.push_with(j, enc, &mut |mut a, b| {
+            // In-place combine: `a` becomes the parent, `b`'s storage is
+            // recycled. Bit-identical to the consuming combine.
+            plan.combine_into(&mut a, &b, scratch);
+            pool.put_encoded(b);
+            up_bytes += plan.wire_bytes(&a) as u64;
             up_msgs += 1;
-            parent
+            a
         });
         if let Some(root) = root {
             self.grad_root = Some(root);
@@ -801,7 +985,7 @@ impl<'p> MicroAccumulator<'p> {
         self.wire.bytes += up_bytes;
         self.wire.messages += up_msgs;
         self.wire.dense_bytes += up_msgs * dense;
-        if let Some(root) = self.ltree.push(j, vec![loss]) {
+        if let Some(root) = self.ltree.push_with(j, loss, &mut |a, b| a + b) {
             self.loss_root = Some(root);
         }
         Ok(())
@@ -811,26 +995,57 @@ impl<'p> MicroAccumulator<'p> {
         self.received >= self.gtree.leaves()
     }
 
-    fn finish(self) -> Result<(f32, Vec<f32>, usize, WireStats)> {
-        let enc = self.grad_root.expect("grad tree incomplete");
-        let grad = self.plan.into_grad(enc);
-        let loss = self.loss_root.expect("loss tree incomplete")[0];
-        Ok((loss, grad, self.tokens_total, self.wire))
+    /// Decode the grad root into `out` (padding lanes zero), recycle its
+    /// storage, and return `(loss_sum, tokens_total, wire)`.
+    fn finish_into(
+        &mut self,
+        plan: &CompressPlan,
+        pool: &mut BufferPool,
+        scratch: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) -> Result<(f32, usize, WireStats)> {
+        let enc = self.grad_root.take().expect("grad tree incomplete");
+        plan.decode_root_into(&enc, scratch, out);
+        pool.put_encoded(enc);
+        let loss = self.loss_root.take().expect("loss tree incomplete");
+        Ok((loss, self.tokens_total, self.wire))
     }
 }
 
-/// Drain `m` micro-batch results from `rx`, tree-reducing encoded
-/// gradients and raw losses by micro-batch index. Returns (loss_sum,
-/// grad_sum, token_count, timeout_events, wire_stats).
+/// Drain `m` micro-batch results from `rx` into `acc`, tree-reducing
+/// encoded gradients and raw losses by micro-batch index. With
+/// `pipeline` the tree combines eagerly as messages arrive (overlapping
+/// with still-running workers); without it all `m` results are staged
+/// behind a barrier first and fed in index order — the grouping is
+/// index-keyed either way, so the bits are identical. Returns the
+/// timeout-event count; losses/gradients stay inside `acc` until
+/// `finish_into`.
+#[allow(clippy::too_many_arguments)]
 fn collect_micro_grads(
     plan: &CompressPlan,
+    acc: &mut MicroAccumulator,
+    pool: &mut BufferPool,
+    scratch: &mut Vec<f32>,
+    stage: &mut Vec<StagedMicro>,
     rx: &mpsc::Receiver<MicroResult>,
     m: usize,
     timeout_ms: u64,
-) -> Result<(f32, Vec<f32>, usize, u64, WireStats)> {
-    let mut acc = MicroAccumulator::new(plan, m);
+    pipeline: bool,
+) -> Result<u64> {
     let mut timeouts = 0u64;
-    while !acc.done() {
+    if !pipeline {
+        stage.clear();
+        stage.resize_with(m, || None);
+    }
+    let mut staged = 0usize;
+    let done = |acc: &MicroAccumulator, staged: usize| {
+        if pipeline {
+            acc.done()
+        } else {
+            staged >= m
+        }
+    };
+    while !done(acc, staged) {
         let (j, n_tok, res) = if timeout_ms > 0 {
             match rx.recv_timeout(Duration::from_millis(timeout_ms)) {
                 Ok(msg) => msg,
@@ -839,19 +1054,35 @@ fn collect_micro_grads(
                     continue;
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    anyhow::bail!("workers exited with {}/{m} micro-batches delivered",
-                                  acc.received);
+                    anyhow::bail!(
+                        "workers exited with {}/{m} micro-batches delivered",
+                        acc.received.max(staged)
+                    );
                 }
             }
         } else {
             rx.recv().map_err(|_| {
-                anyhow::anyhow!("workers exited with {}/{m} micro-batches delivered",
-                                acc.received)
+                anyhow::anyhow!(
+                    "workers exited with {}/{m} micro-batches delivered",
+                    acc.received.max(staged)
+                )
             })?
         };
         let (loss, enc) = res?;
-        acc.push(j, n_tok, loss, enc)?;
+        if pipeline {
+            acc.push(plan, pool, scratch, j, n_tok, loss, enc)?;
+        } else {
+            anyhow::ensure!(j < m && stage[j].is_none(), "duplicate micro-batch slot {j}");
+            stage[j] = Some((n_tok, loss, enc));
+            staged += 1;
+        }
     }
-    let (loss, grad, tokens_total, wire) = acc.finish()?;
-    Ok((loss, grad, tokens_total, timeouts, wire))
+    if !pipeline {
+        for (j, slot) in stage.iter_mut().enumerate().take(m) {
+            let (n_tok, loss, enc) =
+                slot.take().expect("barrier stage incomplete despite full count");
+            acc.push(plan, pool, scratch, j, n_tok, loss, enc)?;
+        }
+    }
+    Ok(timeouts)
 }

@@ -12,7 +12,7 @@
 
 use super::shard::ShardPlan;
 use super::Engine;
-use crate::ckpt::{self, MomentCodec};
+use crate::ckpt::{self, MomentCodec, PruneSpec, SaveOptions, SnapshotWriter, TrainState};
 use crate::Result;
 
 /// Summary of one engine round (one subspace period).
@@ -89,6 +89,33 @@ pub struct SavePolicy {
     pub every: u64,
     pub codec: MomentCodec,
     pub block: usize,
+    /// Serialize + commit on a background writer thread (the training
+    /// thread only pays the capture copy). `[checkpoint] background` /
+    /// `--ckpt-sync` to disable. Snapshot bytes are identical either
+    /// way — capture is synchronous.
+    pub background: bool,
+    /// Keep only the newest N snapshots under `dir` (0 = keep all),
+    /// pruning after each successful manifest commit.
+    pub keep_last: usize,
+    /// Never prune this snapshot (the one the run resumed from).
+    pub protect: Option<std::path::PathBuf>,
+}
+
+impl SavePolicy {
+    /// Policy with the production defaults: background writes on,
+    /// unlimited retention.
+    pub fn new(dir: impl Into<std::path::PathBuf>, every: u64, codec: MomentCodec,
+               block: usize) -> SavePolicy {
+        SavePolicy {
+            dir: dir.into(),
+            every,
+            codec,
+            block,
+            background: true,
+            keep_last: 0,
+            protect: None,
+        }
+    }
 }
 
 /// Drives an [`Engine`] through a fixed number of steps with periodic
@@ -99,37 +126,116 @@ pub struct Orchestrator {
     pub verbose: bool,
     /// Periodic snapshotting; `None` = checkpointing off.
     pub save: Option<SavePolicy>,
+    /// Background snapshot writer (lazily started on the first
+    /// background save).
+    writer: Option<SnapshotWriter>,
+    /// Recycled capture buffer for the synchronous save path.
+    capture_buf: Option<TrainState>,
+    /// Nanoseconds the training thread spent inside save handoffs
+    /// (capture copy + any wait on a still-writing previous snapshot).
+    save_handoff_ns: u64,
 }
 
 impl Orchestrator {
     pub fn new(engine: Engine) -> Orchestrator {
-        Orchestrator { engine, verbose: false, save: None }
+        Orchestrator {
+            engine,
+            verbose: false,
+            save: None,
+            writer: None,
+            capture_buf: None,
+            save_handoff_ns: 0,
+        }
     }
 
-    /// Write a snapshot of the engine's current state under the policy's
-    /// root, named by global step.
-    fn save_snapshot(&self, policy: &SavePolicy) -> Result<()> {
-        let step = self.engine.global_step();
-        let dir = policy.dir.join(ckpt::step_dir_name(step));
-        let state = self.engine.capture_state()?;
-        let report = ckpt::save(&dir, &state, policy.codec, policy.block)?;
-        if self.verbose {
-            println!(
-                "checkpoint: step {step} -> {} ({} files, {} bytes, moments {} via {})",
-                report.dir.display(),
-                report.files,
-                report.bytes,
-                report.moment_bytes,
-                policy.codec
-            );
+    /// Total time the *training thread* has spent on checkpointing —
+    /// the save-handoff stall the hot-path bench tracks. With background
+    /// writes this is the capture copy plus any wait for a still-running
+    /// previous save; without, it is the full serialize+commit.
+    pub fn save_handoff_ms(&self) -> f64 {
+        self.save_handoff_ns as f64 / 1e6
+    }
+
+    /// Wait for all in-flight background snapshots to commit, surfacing
+    /// any write error. Called at the end of [`Orchestrator::run`];
+    /// callers driving the engine manually should call it before
+    /// treating snapshots as durable.
+    pub fn finish_saves(&mut self) -> Result<()> {
+        if let Some(writer) = self.writer.as_mut() {
+            writer.drain()?;
+            // take_reports (not reports): a second run() segment on the
+            // same orchestrator must not re-print earlier commits.
+            for report in writer.take_reports() {
+                if self.verbose {
+                    println!(
+                        "checkpoint: {} committed ({} files, {} bytes)",
+                        report.dir.display(),
+                        report.files,
+                        report.bytes
+                    );
+                }
+            }
         }
         Ok(())
     }
 
-    /// Run `steps` optimizer steps. `train_fn` maps a global micro-batch
-    /// index to tokens; `val_fn` maps a validation batch index to tokens
-    /// and is consulted every `eval_every` steps. Returns the final
-    /// held-out loss.
+    /// Write a snapshot of the engine's current state under the policy's
+    /// root, named by global step.
+    fn save_snapshot(&mut self) -> Result<()> {
+        let Some(policy) = self.save.clone() else { return Ok(()) };
+        let step = self.engine.global_step();
+        let dir = policy.dir.join(ckpt::step_dir_name(step));
+        let opts = SaveOptions::new(policy.codec, policy.block);
+        let prune = (policy.keep_last > 0).then(|| PruneSpec {
+            root: policy.dir.clone(),
+            keep_last: policy.keep_last,
+            protect: policy.protect.clone(),
+        });
+        let t0 = std::time::Instant::now();
+        // Reuse a capture buffer: the recycled one from the writer, the
+        // sync path's stash, or a fresh one on the first save.
+        let mut state = self
+            .capture_buf
+            .take()
+            .or_else(|| self.writer.as_mut().and_then(|w| w.take_recycled()))
+            .unwrap_or_else(TrainState::empty);
+        self.engine.capture_state_into(&mut state)?;
+        if policy.background {
+            let writer = self.writer.get_or_insert_with(SnapshotWriter::new);
+            writer.submit(dir, state, opts, prune)?;
+            self.save_handoff_ns += t0.elapsed().as_nanos() as u64;
+            if self.verbose {
+                println!("checkpoint: step {step} handed to the background writer");
+            }
+        } else {
+            let report = ckpt::save(&dir, &state, opts)?;
+            if let Some(p) = &prune {
+                ckpt::prune_snapshots(&p.root, p.keep_last, p.protect.as_deref())?;
+            }
+            self.capture_buf = Some(state);
+            self.save_handoff_ns += t0.elapsed().as_nanos() as u64;
+            if self.verbose {
+                println!(
+                    "checkpoint: step {step} -> {} ({} files, {} bytes, moments {} via {})",
+                    report.dir.display(),
+                    report.files,
+                    report.bytes,
+                    report.moment_bytes,
+                    policy.codec
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Run `steps` optimizer steps. `train_fn` fills a reusable token
+    /// buffer for a global micro-batch index (the engine's
+    /// allocation-free contract); `val_fn` maps a validation batch index
+    /// to tokens and is consulted every `eval_every` steps. Any
+    /// background snapshots are drained before returning — on BOTH the
+    /// success and error paths (a training error must not silently
+    /// swallow a pending checkpoint-commit failure: the writer's Drop
+    /// discards results by design). Returns the final held-out loss.
     pub fn run<F, G>(
         &mut self,
         steps: u64,
@@ -139,7 +245,31 @@ impl Orchestrator {
         eval_batches: u64,
     ) -> Result<f64>
     where
-        F: Fn(u64) -> Vec<i32> + Sync,
+        F: Fn(u64, &mut Vec<i32>) + Sync,
+        G: FnMut(u64) -> Vec<i32>,
+    {
+        let result = self.run_inner(steps, train_fn, val_fn, eval_every, eval_batches);
+        if result.is_err() {
+            // Best-effort drain so a background save failure is at least
+            // reported before the (primary) training error propagates.
+            if let Err(save_err) = self.finish_saves() {
+                eprintln!("warning: while aborting, a background snapshot also failed: \
+                           {save_err:#}");
+            }
+        }
+        result
+    }
+
+    fn run_inner<F, G>(
+        &mut self,
+        steps: u64,
+        train_fn: &F,
+        val_fn: &mut G,
+        eval_every: u64,
+        eval_batches: u64,
+    ) -> Result<f64>
+    where
+        F: Fn(u64, &mut Vec<i32>) + Sync,
         G: FnMut(u64) -> Vec<i32>,
     {
         let eval_every = eval_every.max(1);
@@ -159,11 +289,12 @@ impl Orchestrator {
                 }
                 finished_rounds = n_reports - 1;
             }
-            if let Some(policy) = &self.save {
-                let gs = self.engine.global_step();
-                if (policy.every > 0 && gs % policy.every == 0) || s + 1 == steps {
-                    self.save_snapshot(policy)?;
-                }
+            let gs = self.engine.global_step();
+            let save_due = self.save.as_ref().is_some_and(|policy| {
+                (policy.every > 0 && gs % policy.every == 0) || s + 1 == steps
+            });
+            if save_due {
+                self.save_snapshot()?;
             }
             if (s + 1) % eval_every == 0 || s + 1 == steps {
                 last_val = self.engine.eval_loss(eval_batches, &mut *val_fn)?;
@@ -180,9 +311,14 @@ impl Orchestrator {
                 }
             }
         }
+        self.finish_saves()?;
         if self.verbose {
             if let Some(last) = self.engine.reports().last() {
                 print_round(last);
+            }
+            if self.save.is_some() {
+                println!("checkpoint: training-thread save handoff {:.1} ms total",
+                         self.save_handoff_ms());
             }
         }
         Ok(last_val)
@@ -246,10 +382,20 @@ mod tests {
         }
     }
 
+    /// Fill-style train closure (the engine's allocation-free contract).
+    fn fill_closure(model: &RefLm) -> impl Fn(u64, &mut Vec<i32>) + Sync + '_ {
+        let cfg = model.cfg().clone();
+        move |idx, buf: &mut Vec<i32>| {
+            let mut rng = Prng::seed_from_u64(0xBA7C4 ^ idx);
+            buf.clear();
+            buf.extend((0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32));
+        }
+    }
+
     #[test]
     fn rounds_align_with_update_freq() {
         let (mut orch, model) = build(2, 3);
-        let train = batch_closure(&model);
+        let train = fill_closure(&model);
         let val = batch_closure(&model);
         orch.run(7, &train, &mut |i| val(1000 + i), 100, 1).unwrap();
         // 7 steps at T=3 → rounds begin at steps 0, 3, 6 → 3 reports.
@@ -273,35 +419,93 @@ mod tests {
 
     #[test]
     fn save_policy_snapshots_on_cadence_and_at_the_end() {
+        // Background writes are the default; run() drains them, so every
+        // snapshot must be committed by the time it returns.
         let (mut orch, model) = build(2, 3);
         let dir = std::env::temp_dir()
             .join(format!("frugal_orch_save_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
-        orch.save = Some(SavePolicy {
-            dir: dir.clone(),
-            every: 3,
-            codec: MomentCodec::Q8,
-            block: 64,
-        });
-        let train = batch_closure(&model);
+        orch.save = Some(SavePolicy::new(dir.clone(), 3, MomentCodec::Q8, 64));
+        assert!(orch.save.as_ref().unwrap().background, "background is the default");
+        let train = fill_closure(&model);
         let val = batch_closure(&model);
         orch.run(7, &train, &mut |i| val(2000 + i), 100, 1).unwrap();
-        // Saves at steps 3 and 6 (cadence) plus 7 (end of run).
+        // Saves at steps 3 and 6 (cadence — round barriers at T=3, so
+        // barrier-elided) plus 7 (end of run, mid-round → full).
         for step in [3u64, 6, 7] {
             let snap = dir.join(ckpt::step_dir_name(step));
             assert!(snap.join(ckpt::MANIFEST_NAME).is_file(), "missing snapshot {step}");
             assert!(ckpt::load(&snap).is_ok(), "snapshot {step} unreadable");
         }
+        assert!(ckpt::CkptManifest::read(&dir.join(ckpt::step_dir_name(6))).unwrap().barrier);
+        assert!(!ckpt::CkptManifest::read(&dir.join(ckpt::step_dir_name(7))).unwrap().barrier);
         // The root resolves to the newest snapshot.
         let picked = ckpt::resolve_snapshot_dir(&dir).unwrap();
         assert!(picked.ends_with(ckpt::step_dir_name(7)));
+        // The training thread's handoff cost is metered.
+        assert!(orch.save_handoff_ms() >= 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sync_and_background_saves_commit_identical_snapshots() {
+        let dir_a = std::env::temp_dir()
+            .join(format!("frugal_orch_bg_{}", std::process::id()));
+        let dir_b = std::env::temp_dir()
+            .join(format!("frugal_orch_sync_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+        for (dir, background) in [(&dir_a, true), (&dir_b, false)] {
+            let (mut orch, model) = build(2, 3);
+            let mut policy = SavePolicy::new(dir.clone(), 3, MomentCodec::Q8, 64);
+            policy.background = background;
+            orch.save = Some(policy);
+            let train = fill_closure(&model);
+            let val = batch_closure(&model);
+            orch.run(7, &train, &mut |i| val(2000 + i), 100, 1).unwrap();
+        }
+        for step in [3u64, 6, 7] {
+            let name = ckpt::step_dir_name(step);
+            let a = std::fs::read(dir_a.join(&name).join("meta.bin")).unwrap();
+            let b = std::fs::read(dir_b.join(&name).join("meta.bin")).unwrap();
+            assert_eq!(a, b, "step {step}: background and sync saves differ");
+        }
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn keep_last_prunes_older_snapshots_after_commit() {
+        let (mut orch, model) = build(1, 2);
+        let dir = std::env::temp_dir()
+            .join(format!("frugal_orch_keep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut policy = SavePolicy::new(dir.clone(), 2, MomentCodec::Q8, 64);
+        policy.keep_last = 2;
+        orch.save = Some(policy);
+        let train = fill_closure(&model);
+        let val = batch_closure(&model);
+        // Saves at 2, 4, 6, 8 — only the newest two survive.
+        orch.run(8, &train, &mut |i| val(3000 + i), 100, 1).unwrap();
+        for step in [6u64, 8] {
+            assert!(
+                dir.join(ckpt::step_dir_name(step)).join(ckpt::MANIFEST_NAME).is_file(),
+                "snapshot {step} should be kept"
+            );
+        }
+        for step in [2u64, 4] {
+            assert!(
+                !dir.join(ckpt::step_dir_name(step)).exists(),
+                "snapshot {step} should have been pruned"
+            );
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn run_returns_final_val_loss() {
         let (mut orch, model) = build(1, 10);
-        let train = batch_closure(&model);
+        let train = fill_closure(&model);
         let val = batch_closure(&model);
         let v = orch.run(3, &train, &mut |i| val(500 + i), 2, 2).unwrap();
         assert!(v.is_finite() && v > 0.0);

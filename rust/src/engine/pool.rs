@@ -1,0 +1,112 @@
+//! Reusable buffer pool for the engine's gradient hot path.
+//!
+//! Every reduce-tree message ([`EncodedGrad`]) that a step produces is
+//! model-scale (or lane-group-scale) heap storage. Before this pool the
+//! round loop allocated every one of them fresh each micro-step — `m`
+//! leaf messages plus `m − 1` interior partial sums per optimizer step —
+//! and dropped them all at the root. The pool closes that loop:
+//!
+//! - At step start the engine draws `m` recycled messages (one per
+//!   micro-batch slot) and hands them to the workers, which
+//!   `encode_leaf_into` them in place (reusing the `Vec` storage).
+//! - Every interior tree combine keeps the left child's storage as the
+//!   parent message and returns the right child's to the pool.
+//! - Decoding the root returns the last message to the pool.
+//!
+//! Net flow per step is exactly balanced (`m` out, `m` back), so after
+//! the first step of a round the pool serves every request from recycled
+//! storage and the grad path performs **zero heap allocations** (the
+//! `alloc_steady_state` integration test pins this on the logical-worker
+//! path; the threaded path additionally pays only the `mpsc` channel's
+//! small per-message nodes — never model-scale buffers).
+//!
+//! Shapes may change at a round boundary (the mask re-selection changes
+//! the lane-group sizes): `encode_leaf_into` then re-shapes the recycled
+//! message in place, growing its vectors at most once per round — the
+//! allowed warm-up allocation.
+//!
+//! The pool is deliberately not thread-safe: it lives on the collector
+//! (training) thread. Workers never touch it — they receive their
+//! pre-drawn messages by value and send them back through the tree.
+
+use super::compress::EncodedGrad;
+
+/// Allocation-recycling pool for reduce-tree messages.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    encoded: Vec<EncodedGrad>,
+    grabs: u64,
+    misses: u64,
+}
+
+/// Pool traffic counters (for tests and the hot-path bench): `grabs` is
+/// total requests, `misses` is how many had to allocate a fresh (empty)
+/// message because the pool was dry. Steady state is `misses` constant
+/// while `grabs` keeps growing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub grabs: u64,
+    pub misses: u64,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// A recycled message of arbitrary shape (callers re-shape it in
+    /// place via `encode_leaf_into`), or a fresh empty one on a miss.
+    pub fn get_encoded(&mut self) -> EncodedGrad {
+        self.grabs += 1;
+        match self.encoded.pop() {
+            Some(e) => e,
+            None => {
+                self.misses += 1;
+                EncodedGrad::Dense(Vec::new())
+            }
+        }
+    }
+
+    /// Return a message's storage for reuse.
+    pub fn put_encoded(&mut self, e: EncodedGrad) {
+        self.encoded.push(e);
+    }
+
+    /// Messages currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.encoded.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats { grabs: self.grabs, misses: self.misses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_instead_of_allocating() {
+        let mut pool = BufferPool::new();
+        let a = pool.get_encoded();
+        assert_eq!(pool.stats(), PoolStats { grabs: 1, misses: 1 });
+        pool.put_encoded(a);
+        assert_eq!(pool.idle(), 1);
+        let _b = pool.get_encoded();
+        // Second grab is served from the pool: no new miss.
+        assert_eq!(pool.stats(), PoolStats { grabs: 2, misses: 1 });
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn preserves_storage_capacity_across_recycling() {
+        let mut pool = BufferPool::new();
+        pool.put_encoded(EncodedGrad::Dense(Vec::with_capacity(4096)));
+        let EncodedGrad::Dense(v) = pool.get_encoded() else {
+            panic!("variant changed in the pool")
+        };
+        assert!(v.capacity() >= 4096, "recycled capacity lost");
+        assert_eq!(pool.stats().misses, 0);
+    }
+}

@@ -52,8 +52,49 @@ struct LayerIdx {
     w_down: usize,
 }
 
+/// Per-call activation/backward scratch, sized once from the config and
+/// reused across calls (every buffer is fully overwritten per position
+/// before it is read, so stale contents can never leak into the math).
+/// Keeping it on the model makes `loss_and_grad_into` allocation-free —
+/// the property the engine's steady-state hot path is built on.
+#[derive(Clone, Debug, Default)]
+struct Scratch {
+    hs: Vec<Vec<f32>>,
+    acts_a: Vec<Vec<f32>>,
+    acts_u: Vec<Vec<f32>>,
+    fvec: Vec<f32>,
+    z: Vec<f32>,
+    prob: Vec<f32>,
+    dh: Vec<f32>,
+    df: Vec<f32>,
+    ds: Vec<f32>,
+    da: Vec<f32>,
+    du: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(cfg: &RefLmCfg) -> Scratch {
+        let (d, ff) = (cfg.d_model, cfg.d_ff);
+        Scratch {
+            hs: vec![vec![0.0; d]; cfg.n_layers + 1],
+            acts_a: vec![vec![0.0; ff]; cfg.n_layers],
+            acts_u: vec![vec![0.0; d]; cfg.n_layers],
+            fvec: vec![0.0; d],
+            z: vec![0.0; cfg.vocab],
+            prob: vec![0.0; cfg.vocab],
+            dh: vec![0.0; d],
+            df: vec![0.0; d],
+            ds: vec![0.0; ff],
+            da: vec![0.0; ff],
+            du: vec![0.0; d],
+        }
+    }
+}
+
 /// The reference LM: a [`Layout`] plus forward/backward over a flat
-/// parameter vector. Stateless between calls (clone one per worker).
+/// parameter vector. Carries only reusable scratch between calls —
+/// results are a pure function of `(flat, tokens)` (clone one per
+/// worker).
 #[derive(Clone)]
 pub struct RefLm {
     cfg: RefLmCfg,
@@ -62,6 +103,7 @@ pub struct RefLm {
     layers: Vec<LayerIdx>,
     final_norm: usize,
     output: usize,
+    scratch: Scratch,
 }
 
 impl RefLm {
@@ -92,7 +134,8 @@ impl RefLm {
                           vec![cfg.d_model, cfg.vocab]);
         let padded = (off + 1023) / 1024 * 1024;
         let layout = Layout::new(params, padded);
-        RefLm { cfg, layout, embed, layers, final_norm, output }
+        let scratch = Scratch::new(&cfg);
+        RefLm { cfg, layout, embed, layers, final_norm, output, scratch }
     }
 
     pub fn cfg(&self) -> &RefLmCfg {
@@ -121,17 +164,16 @@ impl RefLm {
         flat
     }
 
-    fn slice<'a>(&self, flat: &'a [f32], idx: usize) -> &'a [f32] {
-        let p = &self.layout.params[idx];
-        &flat[p.offset..p.offset + p.numel()]
-    }
-
     /// Forward + (optionally) backward over one `(batch, seq)` token
     /// buffer. Returns the mean next-token cross-entropy in nats; when
     /// `grad` is `Some`, accumulates the mean-loss gradient into it
-    /// (caller provides a zeroed buffer of `padded_size`).
-    fn run(&self, flat: &[f32], tokens: &[i32], mut grad: Option<&mut [f32]>) -> Result<f32> {
-        let RefLmCfg { vocab, d_model: d, d_ff: ff, n_layers, seq_len, batch } = self.cfg;
+    /// (caller provides a zeroed buffer of `padded_size`). `&mut self`
+    /// only for the reusable scratch — the math is a pure function of
+    /// the arguments.
+    fn run(&mut self, flat: &[f32], tokens: &[i32], mut grad: Option<&mut [f32]>) -> Result<f32> {
+        let RefLm { cfg, layout, layers, scratch, embed, final_norm, output } = self;
+        let (vocab, d, ff, n_layers, seq_len, batch) =
+            (cfg.vocab, cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.seq_len, cfg.batch);
         anyhow::ensure!(
             tokens.len() == batch * seq_len,
             "token buffer has {} elements, expected {}x{}",
@@ -139,27 +181,18 @@ impl RefLm {
             batch,
             seq_len
         );
-        anyhow::ensure!(flat.len() == self.layout.padded_size, "flat vector size mismatch");
+        anyhow::ensure!(flat.len() == layout.padded_size, "flat vector size mismatch");
         if let Some(g) = grad.as_deref() {
-            debug_assert_eq!(g.len(), self.layout.padded_size);
+            debug_assert_eq!(g.len(), layout.padded_size);
         }
 
-        let e_off = self.layout.params[self.embed].offset;
-        let fn_off = self.layout.params[self.final_norm].offset;
-        let o_off = self.layout.params[self.output].offset;
+        let e_off = layout.params[*embed].offset;
+        let fn_off = layout.params[*final_norm].offset;
+        let o_off = layout.params[*output].offset;
 
-        // Scratch (per position; tiny dims so per-call allocation is fine).
-        let mut hs = vec![vec![0.0f32; d]; n_layers + 1];
-        let mut acts_a = vec![vec![0.0f32; ff]; n_layers];
-        let mut acts_u = vec![vec![0.0f32; d]; n_layers];
-        let mut fvec = vec![0.0f32; d];
-        let mut z = vec![0.0f32; vocab];
-        let mut prob = vec![0.0f32; vocab];
-        let mut dh = vec![0.0f32; d];
-        let mut df = vec![0.0f32; d];
-        let mut ds = vec![0.0f32; ff];
-        let mut da = vec![0.0f32; ff];
-        let mut du = vec![0.0f32; d];
+        // Reusable scratch — every buffer is fully overwritten per
+        // position before use (see `Scratch`).
+        let Scratch { hs, acts_a, acts_u, fvec, z, prob, dh, df, ds, da, du } = scratch;
 
         let mut total = 0.0f64;
         let count = (batch * (seq_len - 1)) as f32;
@@ -172,10 +205,10 @@ impl RefLm {
 
                 // ---- forward
                 hs[0].copy_from_slice(&flat[e_off + x * d..e_off + (x + 1) * d]);
-                for (l, layer) in self.layers.iter().enumerate() {
-                    let g_gain = self.slice(flat, layer.norm);
-                    let w_up = self.slice(flat, layer.w_up);
-                    let w_down = self.slice(flat, layer.w_down);
+                for (l, layer) in layers.iter().enumerate() {
+                    let g_gain = pslice(layout, flat, layer.norm);
+                    let w_up = pslice(layout, flat, layer.w_up);
+                    let w_down = pslice(layout, flat, layer.w_down);
                     let (pre, post) = hs.split_at_mut(l + 1);
                     let h_in = &pre[l];
                     let h_out = &mut post[0];
@@ -250,10 +283,10 @@ impl RefLm {
                     dh[i] = df[i] * gf[i];
                 }
                 for l in (0..n_layers).rev() {
-                    let layer = &self.layers[l];
-                    let g_off = self.layout.params[layer.norm].offset;
-                    let up_off = self.layout.params[layer.w_up].offset;
-                    let dn_off = self.layout.params[layer.w_down].offset;
+                    let layer = &layers[l];
+                    let g_off = layout.params[layer.norm].offset;
+                    let up_off = layout.params[layer.w_up].offset;
+                    let dn_off = layout.params[layer.w_down].offset;
                     let g_gain = &flat[g_off..g_off + d];
                     let w_up = &flat[up_off..up_off + d * ff];
                     let w_down = &flat[dn_off..dn_off + ff * d];
@@ -289,18 +322,43 @@ impl RefLm {
         Ok((total / count as f64) as f32)
     }
 
-    /// Mean next-token loss (no gradient).
-    pub fn loss(&self, flat: &[f32], tokens: &[i32]) -> Result<f32> {
+    /// Mean next-token loss (no gradient). `&mut self` for the reusable
+    /// scratch only.
+    pub fn loss(&mut self, flat: &[f32], tokens: &[i32]) -> Result<f32> {
         self.run(flat, tokens, None)
     }
 
     /// Mean next-token loss and its gradient (length `padded_size`, zero
     /// on padding lanes).
-    pub fn loss_and_grad(&self, flat: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+    pub fn loss_and_grad(&mut self, flat: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
         let mut grad = vec![0.0f32; self.layout.padded_size];
         let loss = self.run(flat, tokens, Some(&mut grad))?;
         Ok((loss, grad))
     }
+
+    /// Allocation-free [`RefLm::loss_and_grad`]: overwrite `grad` (length
+    /// `padded_size`) with the mean-loss gradient and return the loss.
+    pub fn loss_and_grad_into(
+        &mut self,
+        flat: &[f32],
+        tokens: &[i32],
+        grad: &mut [f32],
+    ) -> Result<f32> {
+        anyhow::ensure!(
+            grad.len() == self.layout.padded_size,
+            "gradient buffer has {} lanes, layout wants {}",
+            grad.len(),
+            self.layout.padded_size
+        );
+        grad.fill(0.0);
+        self.run(flat, tokens, Some(grad))
+    }
+}
+
+/// `layout.params[idx]`'s slice of the flat vector.
+fn pslice<'a>(layout: &Layout, flat: &'a [f32], idx: usize) -> &'a [f32] {
+    let p = &layout.params[idx];
+    &flat[p.offset..p.offset + p.numel()]
 }
 
 impl GradSource for RefLm {
@@ -310,6 +368,15 @@ impl GradSource for RefLm {
 
     fn loss_and_grad(&mut self, flat: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
         RefLm::loss_and_grad(self, flat, tokens)
+    }
+
+    fn loss_and_grad_into(
+        &mut self,
+        flat: &[f32],
+        tokens: &[i32],
+        grad: &mut [f32],
+    ) -> Result<f32> {
+        RefLm::loss_and_grad_into(self, flat, tokens, grad)
     }
 
     fn loss(&mut self, flat: &[f32], tokens: &[i32]) -> Result<f32> {
@@ -351,7 +418,7 @@ mod tests {
 
     #[test]
     fn init_loss_is_near_uniform() {
-        let m = tiny();
+        let mut m = tiny();
         let flat = m.init_flat(0);
         let tokens = tiny_tokens(&m, 1);
         let loss = m.loss(&flat, &tokens).unwrap();
@@ -361,7 +428,7 @@ mod tests {
 
     #[test]
     fn forward_is_bit_deterministic() {
-        let m = tiny();
+        let mut m = tiny();
         let flat = m.init_flat(3);
         let tokens = tiny_tokens(&m, 4);
         let (l1, g1) = m.loss_and_grad(&flat, &tokens).unwrap();
@@ -375,7 +442,7 @@ mod tests {
 
     #[test]
     fn padding_grads_are_zero() {
-        let m = tiny();
+        let mut m = tiny();
         let flat = m.init_flat(5);
         let tokens = tiny_tokens(&m, 6);
         let (_, g) = m.loss_and_grad(&flat, &tokens).unwrap();
@@ -391,7 +458,7 @@ mod tests {
     /// differences, sampled across every parameter tensor.
     #[test]
     fn gradients_match_finite_differences() {
-        let m = tiny();
+        let mut m = tiny();
         let mut flat = m.init_flat(7);
         // Larger weights than init so the relu/softmax are exercised away
         // from zero.
@@ -429,7 +496,7 @@ mod tests {
 
     #[test]
     fn sign_sgd_training_reduces_loss() {
-        let m = tiny();
+        let mut m = tiny();
         let mut flat = m.init_flat(11);
         let tokens = tiny_tokens(&m, 12);
         let first = m.loss(&flat, &tokens).unwrap();
@@ -443,8 +510,28 @@ mod tests {
 
     #[test]
     fn bad_token_buffer_errors() {
-        let m = tiny();
+        let mut m = tiny();
         let flat = m.init_flat(0);
         assert!(m.loss(&flat, &[1, 2, 3]).is_err());
+    }
+
+    /// The in-place gradient entry point is the allocating one, bit for
+    /// bit — including when the target buffer starts out dirty (it is
+    /// recycled across micro-steps in the engine).
+    #[test]
+    fn loss_and_grad_into_matches_allocating_api() {
+        let mut m = tiny();
+        let flat = m.init_flat(13);
+        let tokens = tiny_tokens(&m, 14);
+        let (want_loss, want_grad) = m.loss_and_grad(&flat, &tokens).unwrap();
+        let mut grad = vec![7.0f32; m.layout().padded_size]; // dirty buffer
+        let loss = m.loss_and_grad_into(&flat, &tokens, &mut grad).unwrap();
+        assert_eq!(loss.to_bits(), want_loss.to_bits());
+        assert_eq!(
+            grad.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want_grad.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // Wrong-length buffer is a clean error.
+        assert!(m.loss_and_grad_into(&flat, &tokens, &mut [0.0; 3]).is_err());
     }
 }

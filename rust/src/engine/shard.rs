@@ -84,18 +84,61 @@ pub fn adam_shard_update(
     lr: f32,
     cfg: &AdamCfg,
 ) -> Vec<f32> {
-    let mut p: Vec<f32> = lanes.iter().map(|&l| flat[l as usize]).collect();
-    let g: Vec<f32> = lanes.iter().map(|&l| grad[l as usize]).collect();
-    state.apply(&mut p, &g, lr, cfg);
-    p
+    let mut gather = Vec::new();
+    let mut out = Vec::new();
+    adam_shard_update_into(state, lanes, flat, grad, lr, cfg, &mut gather, &mut out);
+    out
+}
+
+/// Allocation-free [`adam_shard_update`]: gathers the shard's gradient
+/// lanes into `gather` and its parameter lanes into `out` (both reused
+/// across steps), then runs the contiguous Adam kernel over them — the
+/// exact gather-gather-apply sequence of the allocating variant, so the
+/// bits match.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_shard_update_into(
+    state: &mut AdamState,
+    lanes: &[u32],
+    flat: &[f32],
+    grad: &[f32],
+    lr: f32,
+    cfg: &AdamCfg,
+    gather: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    gather.clear();
+    gather.extend(lanes.iter().map(|&l| grad[l as usize]));
+    out.clear();
+    out.extend(lanes.iter().map(|&l| flat[l as usize]));
+    state.apply(out.as_mut_slice(), gather.as_slice(), lr, cfg);
 }
 
 /// The state-free counterpart: signSGD over the owned lanes (zero state).
 pub fn sign_shard_update(lanes: &[u32], flat: &[f32], grad: &[f32], lr_free: f32) -> Vec<f32> {
-    let mut p: Vec<f32> = lanes.iter().map(|&l| flat[l as usize]).collect();
-    let g: Vec<f32> = lanes.iter().map(|&l| grad[l as usize]).collect();
-    sign_step(&mut p, &g, lr_free);
-    p
+    let mut out = Vec::new();
+    sign_shard_update_into(lanes, flat, grad, lr_free, &mut out);
+    out
+}
+
+/// Allocation-free [`sign_shard_update`]: writes the post-step parameter
+/// values for the owned lanes into `out` (reused across steps). Per lane
+/// this is `p − sign_delta(g, lr)` — value- and bit-identical to
+/// gathering then running [`sign_step`] (see `sign_delta`'s docs for the
+/// IEEE-754 argument; both paths share that one selection function).
+pub fn sign_shard_update_into(
+    lanes: &[u32],
+    flat: &[f32],
+    grad: &[f32],
+    lr_free: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(lanes.len());
+    for &l in lanes {
+        let p = flat[l as usize];
+        let g = grad[l as usize];
+        out.push(p - crate::optim::sgd::sign_delta(g, lr_free));
+    }
 }
 
 /// Per-worker error-feedback residual buffers, keyed by micro-batch slot.

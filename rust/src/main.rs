@@ -42,8 +42,9 @@ USAGE:
                   [--workers N] [--grad-accum M] [--backend auto|ref|pjrt]
                   [--compress none|sign-ef|q8|split] [--compress-block N]
                   [--straggler-ms N] [--timeout-ms N] [--sequential]
+                  [--no-pipeline]
                   [--ckpt-dir DIR] [--save-every N] [--ckpt-codec q8|raw]
-                  [--resume DIR]
+                  [--ckpt-sync] [--keep-last N] [--resume DIR]
   frugal ckpt     inspect DIR
   frugal memory   [--model SCALE]
   frugal toy      [--steps N] [--rank R] [--update-freq T]
@@ -65,8 +66,12 @@ one (DIR may be a snapshot or a checkpoint root — newest step wins) and
 continues to --steps total. Shards are keyed by lane, so a snapshot
 taken at --workers N resumes bit-identically at any --workers M; keep
 --save-every a multiple of --update-freq for bit-exact q8 restores, or
-use --ckpt-codec raw. `frugal ckpt inspect DIR` prints a snapshot's
-manifest and verifies every file's CRC.
+use --ckpt-codec raw. Snapshots serialize on a background writer thread
+(--ckpt-sync to write inline); saves landing on a round barrier elide
+the provably-discarded Adam/EF sections (bitwise-neutral, much smaller);
+--keep-last N prunes all but the newest N snapshots (never the resume
+source). `frugal ckpt inspect DIR` prints a snapshot's manifest and
+verifies every file's CRC.
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -140,7 +145,8 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             info(Path::new(args.get("artifacts").unwrap_or("artifacts")))
         }
         "pretrain" => {
-            let args = Args::parse(rest, &["fused", "sequential"])?;
+            let args =
+                Args::parse(rest, &["fused", "sequential", "no-pipeline", "ckpt-sync"])?;
             let mut cfg = match args.get("config") {
                 Some(p) => TrainConfig::from_toml_file(Path::new(p))?,
                 None => TrainConfig::default(),
@@ -194,6 +200,10 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                 let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
                 p.threaded = false;
             }
+            if args.has("no-pipeline") {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.pipeline = false;
+            }
             if let Some(c) = args.get("compress") {
                 let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
                 p.compress.mode = CompressMode::parse(c)?;
@@ -213,6 +223,12 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             if let Some(c) = args.get("ckpt-codec") {
                 cfg.checkpoint.codec = MomentCodec::parse(c)?;
             }
+            if args.has("ckpt-sync") {
+                cfg.checkpoint.background = false;
+            }
+            if let Some(n) = args.get_u64("keep-last")? {
+                cfg.checkpoint.keep_last = n as usize;
+            }
             let resume = args.get("resume").map(|s| s.to_string());
             // --backend alone also opts into the engine (it has no
             // meaning on the legacy paths and must not be ignored) — as
@@ -225,9 +241,12 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             }
             anyhow::ensure!(
                 cfg.checkpoint.dir.is_some()
-                    || (cfg.checkpoint.save_every == 0 && args.get("ckpt-codec").is_none()),
-                "--save-every/--ckpt-codec need a checkpoint root: pass --ckpt-dir DIR \
-                 (or set dir in the [checkpoint] config section)"
+                    || (cfg.checkpoint.save_every == 0
+                        && args.get("ckpt-codec").is_none()
+                        && args.get("keep-last").is_none()
+                        && !args.has("ckpt-sync")),
+                "--save-every/--ckpt-codec/--keep-last/--ckpt-sync need a checkpoint root: \
+                 pass --ckpt-dir DIR (or set dir in the [checkpoint] config section)"
             );
             if cfg.parallel.is_some() {
                 anyhow::ensure!(
@@ -320,8 +339,15 @@ fn ckpt_inspect(path: &Path) -> frugal::Result<()> {
     );
     println!("  subspace [{}]", man.subspace);
     println!(
-        "  moment codec {} (block {})  data bytes {}",
-        man.moment_codec, man.codec_block, man.data_bytes()
+        "  moment codec {} (block {})  data bytes {}{}",
+        man.moment_codec,
+        man.codec_block,
+        man.data_bytes(),
+        if man.barrier {
+            "  [barrier snapshot: moments/EF elided, zero-filled on load]"
+        } else {
+            ""
+        }
     );
     println!(
         "  {:<16} {:>7} {:>10} {:>10} {:>11}  lanes",
@@ -548,12 +574,15 @@ fn pretrain_parallel(
     let mut orch = Orchestrator::new(engine);
     orch.verbose = true;
     if let Some(dir) = &cfg.checkpoint.dir {
-        orch.save = Some(SavePolicy {
-            dir: PathBuf::from(dir),
-            every: cfg.checkpoint.save_every,
-            codec: cfg.checkpoint.codec,
-            block: cfg.checkpoint.block,
-        });
+        let mut policy = SavePolicy::new(
+            PathBuf::from(dir),
+            cfg.checkpoint.save_every,
+            cfg.checkpoint.codec,
+            cfg.checkpoint.block,
+        );
+        policy.background = cfg.checkpoint.background;
+        policy.keep_last = cfg.checkpoint.keep_last;
+        orch.save = Some(policy);
         if cfg.checkpoint.save_every > 0
             && cfg.checkpoint.codec == MomentCodec::Q8
             && cfg.checkpoint.save_every % cfg.update_freq != 0
@@ -591,11 +620,17 @@ fn pretrain_parallel(
             cfg.steps
         );
         orch.engine.restore_state(state)?;
+        // Retention must never delete the snapshot we just resumed from.
+        if let Some(policy) = orch.save.as_mut() {
+            policy.protect = Some(snap.clone());
+        }
         steps = cfg.steps - man.step;
     }
 
     let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(vocab));
-    let train_fn = |micro: u64| corpus.train_batch(batch, seq_len, micro).tokens;
+    let train_fn = |micro: u64, buf: &mut Vec<i32>| {
+        corpus.fill_train_batch(batch, seq_len, micro, buf);
+    };
     let mut val_fn = |idx: u64| corpus.val_batch(batch, seq_len, idx).tokens;
     orch.run(steps, &train_fn, &mut val_fn, cfg.eval_every, cfg.eval_batches)?;
 

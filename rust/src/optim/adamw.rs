@@ -61,18 +61,19 @@ impl AdamState {
         self.t += 1;
         let bc1 = 1.0 - cfg.beta1.powi(self.t as i32);
         let bc2 = 1.0 - cfg.beta2.powi(self.t as i32);
-        for i in 0..grads.len() {
-            let g = grads[i];
-            let mut m = cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * g;
-            let mut v = cfg.beta2 * self.v[i] + (1.0 - cfg.beta2) * g * g;
-            if cfg.bf16_state {
-                m = bf16_round(m);
-                v = bf16_round(v);
+        if cfg.bf16_state {
+            // Rare (ablation) path: keep the simple scalar loop.
+            for i in 0..grads.len() {
+                let g = grads[i];
+                let m = bf16_round(cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * g);
+                let v = bf16_round(cfg.beta2 * self.v[i] + (1.0 - cfg.beta2) * g * g);
+                self.m[i] = m;
+                self.v[i] = v;
+                out[i] = (m / bc1) / ((v / bc2).sqrt() + cfg.eps);
             }
-            self.m[i] = m;
-            self.v[i] = v;
-            out[i] = (m / bc1) / ((v / bc2).sqrt() + cfg.eps);
+            return;
         }
+        adam_update_kernel(&mut self.m, &mut self.v, grads, out, cfg, bc1, bc2);
     }
 
     /// Fused apply: `p -= lr * (adam_update + wd * p)` without a scratch
@@ -82,23 +83,172 @@ impl AdamState {
         self.t += 1;
         let bc1 = 1.0 - cfg.beta1.powi(self.t as i32);
         let bc2 = 1.0 - cfg.beta2.powi(self.t as i32);
-        for i in 0..grads.len() {
-            let g = grads[i];
-            let mut m = cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * g;
-            let mut v = cfg.beta2 * self.v[i] + (1.0 - cfg.beta2) * g * g;
-            if cfg.bf16_state {
-                m = bf16_round(m);
-                v = bf16_round(v);
+        if cfg.bf16_state {
+            for i in 0..grads.len() {
+                let g = grads[i];
+                let m = bf16_round(cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * g);
+                let v = bf16_round(cfg.beta2 * self.v[i] + (1.0 - cfg.beta2) * g * g);
+                self.m[i] = m;
+                self.v[i] = v;
+                let upd = (m / bc1) / ((v / bc2).sqrt() + cfg.eps) + cfg.weight_decay * params[i];
+                params[i] -= lr * upd;
             }
-            self.m[i] = m;
-            self.v[i] = v;
-            let upd = (m / bc1) / ((v / bc2).sqrt() + cfg.eps) + cfg.weight_decay * params[i];
-            params[i] -= lr * upd;
+            return;
         }
+        adam_apply_kernel(&mut self.m, &mut self.v, params, grads, lr, cfg, bc1, bc2, true);
+    }
+
+    /// Fused state-full step WITHOUT weight decay: exactly
+    /// [`AdamState::update_into`] followed by `p -= lr * out`, collapsed
+    /// into one pass (identical per-lane operations and order ⇒ identical
+    /// bits, with no scratch buffer and no second sweep over memory).
+    /// This is FRUGAL's state-full hot path — its historical two-pass
+    /// route never applied decay, so the fused form must not either.
+    pub fn apply_no_decay(&mut self, params: &mut [f32], grads: &[f32], lr: f32, cfg: &AdamCfg) {
+        debug_assert_eq!(grads.len(), self.m.len());
+        debug_assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - cfg.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - cfg.beta2.powi(self.t as i32);
+        if cfg.bf16_state {
+            for i in 0..grads.len() {
+                let g = grads[i];
+                let m = bf16_round(cfg.beta1 * self.m[i] + (1.0 - cfg.beta1) * g);
+                let v = bf16_round(cfg.beta2 * self.v[i] + (1.0 - cfg.beta2) * g * g);
+                self.m[i] = m;
+                self.v[i] = v;
+                params[i] -= lr * ((m / bc1) / ((v / bc2).sqrt() + cfg.eps));
+            }
+            return;
+        }
+        adam_apply_kernel(&mut self.m, &mut self.v, params, grads, lr, cfg, bc1, bc2, false);
     }
 
     pub fn floats(&self) -> usize {
         self.m.len() + self.v.len()
+    }
+}
+
+/// Lanes per fixed-width chunk in the Adam kernels. The inner loop over
+/// a chunk has a compile-time bound and no cross-lane dependence, so
+/// LLVM autovectorizes it; per-lane arithmetic and order are exactly the
+/// scalar loop's (same inputs ⇒ same bits — the determinism contract the
+/// engine's CI gates rely on).
+const ADAM_CHUNK: usize = 8;
+
+/// Chunked m/v advance + unscaled update write (the f32-state fast path
+/// of [`AdamState::update_into`]).
+fn adam_update_kernel(
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    out: &mut [f32],
+    cfg: &AdamCfg,
+    bc1: f32,
+    bc2: f32,
+) {
+    let (beta1, beta2, eps) = (cfg.beta1, cfg.beta2, cfg.eps);
+    let n = g.len();
+    let split = n - n % ADAM_CHUNK;
+    let (m_main, m_tail) = m.split_at_mut(split);
+    let (v_main, v_tail) = v.split_at_mut(split);
+    let (o_main, o_tail) = out.split_at_mut(split);
+    let (g_main, g_tail) = g.split_at(split);
+    for (((mc, vc), oc), gc) in m_main
+        .chunks_exact_mut(ADAM_CHUNK)
+        .zip(v_main.chunks_exact_mut(ADAM_CHUNK))
+        .zip(o_main.chunks_exact_mut(ADAM_CHUNK))
+        .zip(g_main.chunks_exact(ADAM_CHUNK))
+    {
+        for k in 0..ADAM_CHUNK {
+            let gk = gc[k];
+            let mk = beta1 * mc[k] + (1.0 - beta1) * gk;
+            let vk = beta2 * vc[k] + (1.0 - beta2) * gk * gk;
+            mc[k] = mk;
+            vc[k] = vk;
+            oc[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
+        }
+    }
+    for k in 0..m_tail.len() {
+        let gk = g_tail[k];
+        let mk = beta1 * m_tail[k] + (1.0 - beta1) * gk;
+        let vk = beta2 * v_tail[k] + (1.0 - beta2) * gk * gk;
+        m_tail[k] = mk;
+        v_tail[k] = vk;
+        o_tail[k] = (mk / bc1) / ((vk / bc2).sqrt() + eps);
+    }
+}
+
+/// Chunked fused Adam step (the f32-state fast path of
+/// [`AdamState::apply`] / [`AdamState::apply_no_decay`]). `decay`
+/// selects between `p -= lr·(upd + wd·p)` (the full-rank baseline's
+/// historical formula, applied even at wd = 0) and `p -= lr·upd` (the
+/// FRUGAL path, which never decayed); the branch is hoisted out of the
+/// lane loop.
+#[allow(clippy::too_many_arguments)]
+fn adam_apply_kernel(
+    m: &mut [f32],
+    v: &mut [f32],
+    p: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    cfg: &AdamCfg,
+    bc1: f32,
+    bc2: f32,
+    decay: bool,
+) {
+    let (beta1, beta2, eps, wd) = (cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay);
+    let n = g.len();
+    let split = n - n % ADAM_CHUNK;
+    let (m_main, m_tail) = m.split_at_mut(split);
+    let (v_main, v_tail) = v.split_at_mut(split);
+    let (p_main, p_tail) = p.split_at_mut(split);
+    let (g_main, g_tail) = g.split_at(split);
+    let chunks = m_main
+        .chunks_exact_mut(ADAM_CHUNK)
+        .zip(v_main.chunks_exact_mut(ADAM_CHUNK))
+        .zip(p_main.chunks_exact_mut(ADAM_CHUNK))
+        .zip(g_main.chunks_exact(ADAM_CHUNK));
+    if decay {
+        for (((mc, vc), pc), gc) in chunks {
+            for k in 0..ADAM_CHUNK {
+                let gk = gc[k];
+                let mk = beta1 * mc[k] + (1.0 - beta1) * gk;
+                let vk = beta2 * vc[k] + (1.0 - beta2) * gk * gk;
+                mc[k] = mk;
+                vc[k] = vk;
+                let upd = (mk / bc1) / ((vk / bc2).sqrt() + eps) + wd * pc[k];
+                pc[k] -= lr * upd;
+            }
+        }
+        for k in 0..m_tail.len() {
+            let gk = g_tail[k];
+            let mk = beta1 * m_tail[k] + (1.0 - beta1) * gk;
+            let vk = beta2 * v_tail[k] + (1.0 - beta2) * gk * gk;
+            m_tail[k] = mk;
+            v_tail[k] = vk;
+            let upd = (mk / bc1) / ((vk / bc2).sqrt() + eps) + wd * p_tail[k];
+            p_tail[k] -= lr * upd;
+        }
+    } else {
+        for (((mc, vc), pc), gc) in chunks {
+            for k in 0..ADAM_CHUNK {
+                let gk = gc[k];
+                let mk = beta1 * mc[k] + (1.0 - beta1) * gk;
+                let vk = beta2 * vc[k] + (1.0 - beta2) * gk * gk;
+                mc[k] = mk;
+                vc[k] = vk;
+                pc[k] -= lr * ((mk / bc1) / ((vk / bc2).sqrt() + eps));
+            }
+        }
+        for k in 0..m_tail.len() {
+            let gk = g_tail[k];
+            let mk = beta1 * m_tail[k] + (1.0 - beta1) * gk;
+            let vk = beta2 * v_tail[k] + (1.0 - beta2) * gk * gk;
+            m_tail[k] = mk;
+            v_tail[k] = vk;
+            p_tail[k] -= lr * ((mk / bc1) / ((vk / bc2).sqrt() + eps));
+        }
     }
 }
 
@@ -189,6 +339,71 @@ mod tests {
     fn state_floats_counts_m_and_v() {
         let opt = AdamW::new(100, AdamCfg::default());
         assert_eq!(opt.state_floats(), 200);
+    }
+
+    /// The chunked kernels are a loop-shape change only: across lengths
+    /// that exercise both the 8-lane body and the scalar tail, every m,
+    /// v, and parameter bit must equal the plain scalar recurrence.
+    #[test]
+    fn chunked_kernels_match_scalar_reference_bitwise() {
+        let cfg = AdamCfg { weight_decay: 0.01, ..Default::default() };
+        for n in [1usize, 7, 8, 9, 63, 64, 200] {
+            let g: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.17).collect();
+            // Scalar reference: the historical per-element loop.
+            let mut rm = vec![0.0f32; n];
+            let mut rv = vec![0.0f32; n];
+            let mut rp = vec![0.5f32; n];
+            let mut rt = 0u64;
+            for _ in 0..3 {
+                rt += 1;
+                let bc1 = 1.0 - cfg.beta1.powi(rt as i32);
+                let bc2 = 1.0 - cfg.beta2.powi(rt as i32);
+                for i in 0..n {
+                    let m = cfg.beta1 * rm[i] + (1.0 - cfg.beta1) * g[i];
+                    let v = cfg.beta2 * rv[i] + (1.0 - cfg.beta2) * g[i] * g[i];
+                    rm[i] = m;
+                    rv[i] = v;
+                    let upd =
+                        (m / bc1) / ((v / bc2).sqrt() + cfg.eps) + cfg.weight_decay * rp[i];
+                    rp[i] -= 0.01 * upd;
+                }
+            }
+            let mut st = AdamState::new(n);
+            let mut p = vec![0.5f32; n];
+            for _ in 0..3 {
+                st.apply(&mut p, &g, 0.01, &cfg);
+            }
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&p), bits(&rp), "params n={n}");
+            assert_eq!(bits(&st.m), bits(&rm), "m n={n}");
+            assert_eq!(bits(&st.v), bits(&rv), "v n={n}");
+        }
+    }
+
+    /// `apply_no_decay` must equal `update_into` + the explicit
+    /// `p -= lr * out` sweep bit-for-bit — it is the fused form of
+    /// FRUGAL's historical two-pass state-full update.
+    #[test]
+    fn fused_no_decay_matches_two_pass_bitwise() {
+        let cfg = AdamCfg { weight_decay: 0.1, ..Default::default() }; // decay must be IGNORED
+        let n = 37;
+        let g: Vec<f32> = (0..n).map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.3).collect();
+        let mut st_a = AdamState::new(n);
+        let mut p_a = vec![1.0f32; n];
+        let mut st_b = AdamState::new(n);
+        let mut p_b = vec![1.0f32; n];
+        let mut out = vec![0.0f32; n];
+        for _ in 0..4 {
+            st_a.apply_no_decay(&mut p_a, &g, 0.02, &cfg);
+            st_b.update_into(&g, &cfg, &mut out);
+            for i in 0..n {
+                p_b[i] -= 0.02 * out[i];
+            }
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&p_a), bits(&p_b));
+        assert_eq!(bits(&st_a.m), bits(&st_b.m));
+        assert_eq!(st_a.t, st_b.t);
     }
 
     #[test]

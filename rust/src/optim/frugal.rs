@@ -547,11 +547,24 @@ fn apply_full(
     lr: f32,
     scratch: &mut Vec<f32>,
 ) {
-    scratch.clear();
-    scratch.resize(params.len(), 0.0);
+    // AdamW fast path: one fused chunked pass, no scratch sweep — the
+    // exact per-lane math of update_into + `p -= lr·out` (FRUGAL's
+    // state-full rule never applied weight decay through this route, so
+    // the fused form must not either).
+    if let (FullState::Adam(st), StateFullKind::AdamW(cfg)) = (&mut *state, kind) {
+        st.apply_no_decay(params, grads, lr, cfg);
+        return;
+    }
+    // Other rules (Lion/SGDM): two-pass via scratch. update_into
+    // overwrites every element, so sizing without the historical
+    // zero-fill memset changes no value.
+    if scratch.len() != params.len() {
+        scratch.clear();
+        scratch.resize(params.len(), 0.0);
+    }
     state.update_into(kind, grads, scratch);
-    for i in 0..params.len() {
-        params[i] -= lr * scratch[i];
+    for (p, &u) in params.iter_mut().zip(scratch.iter()) {
+        *p -= lr * u;
     }
 }
 

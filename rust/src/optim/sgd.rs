@@ -26,17 +26,46 @@ impl Optimizer for Sgd {
 /// (zero gradient) never move.
 pub struct SignSgd;
 
+/// The per-lane sign-step delta: `p_new = p − sign_delta(g, lr)`. The
+/// SINGLE copy of the selection logic every sign-style update shares
+/// (`sign_step` here, `engine::shard::sign_shard_update_into`) — the
+/// bit-compatibility contract below is argued once, against this
+/// function. (`f32::signum(0.0)` is ±1, not 0, hence the explicit zero
+/// case.)
+#[inline(always)]
+pub fn sign_delta(g: f32, lr: f32) -> f32 {
+    if g > 0.0 {
+        lr
+    } else if g < 0.0 {
+        -lr
+    } else {
+        0.0
+    }
+}
+
 /// The elementwise sign step, shared with FRUGAL's state-free branch.
+///
+/// Written as a branch-free-value update over fixed 16-lane chunks so it
+/// autovectorizes: every lane computes `p -= d` with
+/// `d = sign_delta(g, lr) ∈ {lr, −lr, 0}`. Bit-compatibility with the
+/// historical branchy loop: `p − (−lr) = p + lr` exactly (IEEE-754
+/// negation is sign-flip), and `p − 0.0 = p` bit-for-bit for every
+/// non-NaN `p` including `−0.0` — so padding lanes (zero gradient)
+/// still never move.
 #[inline]
 pub fn sign_step(params: &mut [f32], grads: &[f32], lr: f32) {
-    for (p, g) in params.iter_mut().zip(grads) {
-        // f32::signum(0.0) == 0.0 is NOT true (it's 1.0 with sign of zero),
-        // so branch explicitly: padding lanes must stay fixed.
-        if *g > 0.0 {
-            *p -= lr;
-        } else if *g < 0.0 {
-            *p += lr;
+    const CHUNK: usize = 16;
+    let n = params.len().min(grads.len());
+    let split = n - n % CHUNK;
+    let (p_main, p_tail) = params[..n].split_at_mut(split);
+    let (g_main, g_tail) = grads[..n].split_at(split);
+    for (pc, gc) in p_main.chunks_exact_mut(CHUNK).zip(g_main.chunks_exact(CHUNK)) {
+        for k in 0..CHUNK {
+            pc[k] -= sign_delta(gc[k], lr);
         }
+    }
+    for (p, &g) in p_tail.iter_mut().zip(g_tail) {
+        *p -= sign_delta(g, lr);
     }
 }
 

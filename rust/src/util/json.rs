@@ -71,6 +71,13 @@ impl Json {
         Ok(self.as_f64()? as usize)
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
     /// Required object field.
     pub fn field<'a>(&'a self, key: &str) -> Result<&'a Json> {
         self.get(key).ok_or_else(|| anyhow::anyhow!("missing field '{key}'"))

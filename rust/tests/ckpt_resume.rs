@@ -10,7 +10,7 @@
 
 use std::path::PathBuf;
 
-use frugal::ckpt::{self, MomentCodec};
+use frugal::ckpt::{self, MomentCodec, SaveOptions};
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::coordinator::LrSchedule;
 use frugal::engine::{
@@ -61,10 +61,11 @@ fn engine_cfg(workers: usize, mode: CompressMode, grad_accum: usize, update_freq
     Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
 }
 
-fn batch_fn(micro: u64) -> Vec<i32> {
+fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
     let cfg = RefLmCfg::default();
     let mut rng = frugal::util::Prng::seed_from_u64(0xC4A7 ^ micro.wrapping_mul(0x9E37));
-    (0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32).collect()
+    buf.clear();
+    buf.extend((0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32));
 }
 
 fn run(engine: &mut Engine, steps: u64) -> Vec<u32> {
@@ -95,7 +96,7 @@ fn interrupt_and_resume(
     let mut first = engine(save_workers, mode);
     let mut trace = run(&mut first, k);
     let dir = tmpdir(tag);
-    ckpt::save(&dir, &first.capture_state().unwrap(), codec, 64).unwrap();
+    ckpt::save(&dir, &first.capture_state().unwrap(), SaveOptions::new(codec, 64)).unwrap();
     drop(first); // the "kill"
     let mut resumed = engine(resume_workers, mode);
     resumed.restore_state(ckpt::load(&dir).unwrap()).unwrap();
@@ -129,6 +130,43 @@ fn resume_at_round_barrier_is_bitwise_q8() {
             assert_eq!(trace, want_trace, "{mode:?} -> workers={resume_workers}");
             assert_eq!(flat, want_flat, "{mode:?} -> workers={resume_workers}");
         }
+    }
+}
+
+/// Barrier-save elision end-to-end: a snapshot taken at a round barrier
+/// with the production options writes NO shard files (Adam moments and
+/// EF residuals are provably discarded by the resumed run's first step),
+/// and the resumed run still bitwise-matches the continuous one — trace
+/// and parameters — for compress none and split.
+#[test]
+fn barrier_elided_snapshot_resumes_bitwise() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mut continuous = engine(1, mode);
+        let want_trace = run(&mut continuous, 16);
+        let want_flat = bits(&continuous.flat);
+
+        let mut first = engine(2, mode);
+        let mut trace = run(&mut first, 8); // step 8 = barrier at T=4
+        let dir = tmpdir(&format!("elide_{mode}"));
+        ckpt::save(
+            &dir,
+            &first.capture_state().unwrap(),
+            SaveOptions::new(MomentCodec::Q8, 64),
+        )
+        .unwrap();
+        drop(first);
+        // The elision actually happened: manifest flagged, no shards.
+        let man = ckpt::CkptManifest::read(&dir).unwrap();
+        assert!(man.barrier, "{mode:?}: barrier save not elided");
+        assert!(man.shards.is_empty());
+        assert!(!dir.join("shard_0000.bin").exists());
+
+        let mut resumed = engine(4, mode);
+        resumed.restore_state(ckpt::load(&dir).unwrap()).unwrap();
+        trace.extend(run(&mut resumed, 8));
+        assert_eq!(trace, want_trace, "{mode:?}: elided resume diverged");
+        assert_eq!(bits(&resumed.flat), want_flat, "{mode:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }
 
@@ -190,7 +228,7 @@ fn prop_engine_capture_roundtrips_through_disk() {
         run(&mut e, 1 + case);
         let st = e.capture_state().unwrap();
         let dir = tmpdir(&format!("prop{case}"));
-        ckpt::save(&dir, &st, MomentCodec::Raw, 32).unwrap();
+        ckpt::save(&dir, &st, SaveOptions::exact(MomentCodec::Raw, 32)).unwrap();
         let back = ckpt::load(&dir).unwrap();
         assert_eq!(bits(&back.flat), bits(&st.flat), "case {case}");
         assert_eq!(bits(&back.m), bits(&st.m), "case {case}");
@@ -209,7 +247,7 @@ fn corrupted_snapshots_are_rejected() {
     let mut e = engine(2, CompressMode::Split);
     run(&mut e, 3);
     let dir = tmpdir("corrupt");
-    ckpt::save(&dir, &e.capture_state().unwrap(), MomentCodec::Q8, 64).unwrap();
+    ckpt::save(&dir, &e.capture_state().unwrap(), SaveOptions::new(MomentCodec::Q8, 64)).unwrap();
     assert!(ckpt::load(&dir).is_ok());
 
     let corrupt_one = |file: &str, f: &dyn Fn(Vec<u8>) -> Vec<u8>| {
@@ -297,7 +335,8 @@ fn counters_and_rounds_continue_across_resume() {
     let mut first = engine(1, CompressMode::Split);
     run(&mut first, 8);
     let dir = tmpdir("counters");
-    ckpt::save(&dir, &first.capture_state().unwrap(), MomentCodec::Q8, 64).unwrap();
+    ckpt::save(&dir, &first.capture_state().unwrap(), SaveOptions::new(MomentCodec::Q8, 64))
+        .unwrap();
     let mut resumed = engine(1, CompressMode::Split);
     resumed.restore_state(ckpt::load(&dir).unwrap()).unwrap();
     run(&mut resumed, 4);

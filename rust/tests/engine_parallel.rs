@@ -50,11 +50,13 @@ fn engine(workers: usize, parallel: ParallelCfg, threaded: bool) -> Engine {
     Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
 }
 
-/// Deterministic micro-batch stream shared by all runs.
-fn batch_fn(micro: u64) -> Vec<i32> {
+/// Deterministic micro-batch stream shared by all runs (fill-style — the
+/// engine's allocation-free batch contract).
+fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
     let cfg = RefLmCfg::default();
     let mut rng = frugal::util::Prng::seed_from_u64(0xDA7A ^ micro.wrapping_mul(0x9E37));
-    (0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32).collect()
+    buf.clear();
+    buf.extend((0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32));
 }
 
 fn run(engine: &mut Engine, steps: u64) -> Vec<u32> {
@@ -286,6 +288,69 @@ fn split_codec_tracks_uncompressed_loss() {
         100.0 * gap
     );
     assert!(lu.iter().chain(lc.iter()).all(|l| l.is_finite()));
+}
+
+/// The `[parallel] pipeline` knob changes only the collector's schedule
+/// (overlapped vs barrier) — never the math: at workers 1/2/4 ×
+/// compress none/split, traces and final parameters are bitwise equal
+/// with pipelining on and off (the tree grouping is index-keyed either
+/// way). 8 steps at T=4 cross a subspace re-selection mid-run.
+#[test]
+fn pipeline_toggle_is_bit_identical() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mk = |pipeline: bool, workers: usize| {
+            engine(
+                workers,
+                ParallelCfg {
+                    grad_accum: 4,
+                    pipeline,
+                    compress: CompressCfg { mode, block: 64 },
+                    ..Default::default()
+                },
+                true,
+            )
+        };
+        let mut reference = mk(true, 1);
+        let want = run(&mut reference, 8);
+        let want_flat = bits(&reference.flat);
+        for workers in [1usize, 2, 4] {
+            for pipeline in [true, false] {
+                let mut e = mk(pipeline, workers);
+                assert_eq!(
+                    run(&mut e, 8),
+                    want,
+                    "{mode:?} workers={workers} pipeline={pipeline}"
+                );
+                assert_eq!(
+                    bits(&e.flat),
+                    want_flat,
+                    "{mode:?} workers={workers} pipeline={pipeline}"
+                );
+            }
+        }
+    }
+}
+
+/// The reduce-tree buffer pool reaches steady state: after the first
+/// step of a round every message grab is served from recycled storage
+/// (misses stop growing), across compression modes.
+#[test]
+fn buffer_pool_reaches_steady_state() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mut e = engine(2, compressed(mode), true);
+        e.step(&batch_fn).unwrap();
+        e.step(&batch_fn).unwrap(); // first steady-state step of round 1
+        let after_warm = e.pool_stats();
+        for _ in 0..3 {
+            e.step(&batch_fn).unwrap();
+        }
+        let now = e.pool_stats();
+        assert!(now.grabs > after_warm.grabs, "{mode:?}: pool unused");
+        assert_eq!(
+            now.misses, after_warm.misses,
+            "{mode:?}: steady-state steps still allocate fresh messages"
+        );
+    }
 }
 
 /// Wire accounting: the split codec ships ≥ 3× fewer reduce-tree bytes
