@@ -114,6 +114,64 @@ fn main() -> frugal::Result<()> {
     println!("shape: bit-identical final loss across worker counts: {}",
              if all_equal { "YES" } else { "NO" });
     assert!(all_equal, "engine invariant violated across worker counts");
+
+    // Variable-ρ scheduled run: the declining state-footprint /
+    // throughput curve, one record per mask epoch. RandK realizes the
+    // scheduled width exactly, so the per-epoch sharded Adam footprint
+    // (2·K floats) must be non-increasing under the decay — asserted,
+    // so BENCH_parallel_scaling.json tracks a machine-checked curve.
+    let sched = frugal::schedule::RhoSchedule::parse("linear:0.5:0.1:5").unwrap();
+    const SCHED_T: u64 = 4;
+    const SCHED_EPOCHS: u64 = 6;
+    let sources = Sources::Threaded(
+        (0..2).map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let mask_builder = MaskBuilder::with_schedule(
+        model.layout().clone(),
+        sched.clone(),
+        SubspacePolicy::RandK,
+        0,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg { workers: 2, grad_accum: GRAD_ACCUM, ..Default::default() },
+        schedule: LrSchedule::ConstantWarmup { warmup: 0 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: SCHED_T,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    let mut engine = Engine::new(mask_builder, cfg, sources, model.init_flat(0)).unwrap();
+    let mut prev_state = usize::MAX;
+    println!("\nvariable-rho schedule {sched} (T={SCHED_T}, {SCHED_EPOCHS} epochs):");
+    for epoch in 0..SCHED_EPOCHS {
+        let t0 = std::time::Instant::now();
+        for _ in 0..SCHED_T {
+            engine.step(&batch_fn).unwrap();
+        }
+        let ms_per_step = t0.elapsed().as_secs_f64() * 1e3 / SCHED_T as f64;
+        let state_floats = engine.state_floats();
+        assert!(
+            state_floats <= prev_state,
+            "epoch {epoch}: state footprint grew under a decaying rho \
+             ({state_floats} > {prev_state})"
+        );
+        prev_state = state_floats;
+        records.push(json_record(
+            "parallel_scaling",
+            &format!("rho_sched_epoch={epoch}"),
+            &[
+                ("epoch", epoch as f64),
+                ("rho", sched.rho_at(epoch)),
+                ("statefull_lanes", engine.plan().total_lanes() as f64),
+                ("state_floats", state_floats as f64),
+                ("residual_floats", engine.residual_floats() as f64),
+                ("ms_per_step", ms_per_step),
+            ],
+        ));
+        println!("{}", records.last().unwrap());
+    }
+
     write_json_records("BENCH_parallel_scaling.json", &records)?;
     println!("wrote BENCH_parallel_scaling.json ({} records)", records.len());
     Ok(())

@@ -70,9 +70,18 @@ pub struct CkptManifest {
     /// (informational).
     pub wire_mode: String,
     pub wire_block: usize,
-    /// Subspace-selection rule fingerprint (rho/policy/roles) — restore
-    /// rejects a mismatch, which would otherwise silently diverge.
+    /// Subspace-selection rule fingerprint (ρ-schedule/policy/roles) —
+    /// restore rejects a mismatch, which would otherwise silently
+    /// diverge.
     pub subspace: String,
+    /// Scheduled density ρ of the snapshot's mask epoch (informational;
+    /// variable-ρ runs record the decay, one value per snapshot).
+    pub rho: f64,
+    /// Model shape + split layout fingerprint
+    /// (`optim::Layout::fingerprint`); restore rejects a mismatch with
+    /// a clear error before the lane-count check. Empty in
+    /// pre-fingerprint manifests.
+    pub layout: String,
     /// True for a snapshot taken at a round barrier whose Adam-moment
     /// and EF-residual sections were **elided**: the resumed run's first
     /// step re-selects the subspace and provably discards them, so the
@@ -110,6 +119,8 @@ impl CkptManifest {
         let _ = writeln!(out, "  \"wire_mode\": \"{}\",", escape(&self.wire_mode));
         let _ = writeln!(out, "  \"wire_block\": {},", self.wire_block);
         let _ = writeln!(out, "  \"subspace\": \"{}\",", escape(&self.subspace));
+        let _ = writeln!(out, "  \"rho\": {},", self.rho);
+        let _ = writeln!(out, "  \"layout\": \"{}\",", escape(&self.layout));
         let _ = writeln!(out, "  \"barrier\": {},", self.barrier);
         let _ = writeln!(
             out,
@@ -185,6 +196,17 @@ impl CkptManifest {
             wire_mode: v.field("wire_mode")?.as_str()?.to_string(),
             wire_block: v.field("wire_block")?.as_usize()?,
             subspace: v.field("subspace")?.as_str()?.to_string(),
+            // rho/layout are absent in pre-variable-ρ v2 manifests:
+            // default to "unrecorded" (0.0 / empty fingerprint — the
+            // restore-time check skips empty fingerprints).
+            rho: match v.get("rho") {
+                Some(j) => j.as_f64()?,
+                None => 0.0,
+            },
+            layout: match v.get("layout") {
+                Some(j) => j.as_str()?.to_string(),
+                None => String::new(),
+            },
             // Absent in pre-elision v2 manifests: default to a full
             // (non-elided) snapshot.
             barrier: match v.get("barrier") {
@@ -240,6 +262,8 @@ mod tests {
             subspace: "rho=0.25 policy=Blockwise(Random) full_roles=[Embed, Norm, Output] \
                        free_roles=[]"
                 .into(),
+            rho: 0.25,
+            layout: "deadbeefdeadbeef-p42-f900-P1024".into(),
             barrier: false,
             meta: FileEntry { file: "meta.bin".into(), bytes: 4321, crc32: 0xDEAD_BEEF },
             shards: vec![
@@ -287,6 +311,28 @@ mod tests {
             .collect::<Vec<_>>()
             .join("\n");
         assert!(!CkptManifest::parse(&legacy).unwrap().barrier);
+    }
+
+    #[test]
+    fn rho_and_layout_roundtrip_and_default_for_legacy_manifests() {
+        let mut man = sample();
+        man.rho = 0.1;
+        man.layout = "abc123-p7-f64-P128".into();
+        let back = CkptManifest::parse(&man.to_json()).unwrap();
+        assert_eq!(back.rho.to_bits(), 0.1f64.to_bits());
+        assert_eq!(back.layout, man.layout);
+        // A pre-variable-ρ manifest (no rho/layout lines) parses with
+        // the "unrecorded" defaults; the restore-time fingerprint check
+        // skips empty layouts.
+        let legacy: String = sample()
+            .to_json()
+            .lines()
+            .filter(|l| !l.contains("\"rho\"") && !l.contains("\"layout\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let back = CkptManifest::parse(&legacy).unwrap();
+        assert_eq!(back.rho, 0.0);
+        assert!(back.layout.is_empty());
     }
 
     #[test]

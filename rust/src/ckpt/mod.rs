@@ -176,12 +176,20 @@ pub struct TrainState {
     /// mismatch (resume is valid, bit-identity holds per fixed codec).
     pub wire_mode: String,
     pub wire_block: usize,
-    /// Fingerprint of the subspace-selection hyper-parameters (rho,
-    /// policy, role routing). These are as much "part of the math" as
-    /// `update_freq`: a resume under a different selection rule would
-    /// silently diverge from the interrupted run at the next
+    /// Fingerprint of the subspace-selection hyper-parameters (the
+    /// ρ-schedule, policy, role routing). These are as much "part of
+    /// the math" as `update_freq`: a resume under a different selection
+    /// rule would silently diverge from the interrupted run at the next
     /// re-selection, so restore hard-errors on a mismatch.
     pub subspace: String,
+    /// Scheduled density ρ of the snapshot's mask epoch (informational;
+    /// under a variable-ρ schedule this declines across snapshots).
+    pub rho: f64,
+    /// Fingerprint of the model shape + split layout
+    /// (`optim::Layout::fingerprint`). Restore rejects a mismatch with
+    /// a clear error *before* any lane-count check; empty = legacy
+    /// snapshot without a fingerprint.
+    pub layout: String,
     /// The replicated flat parameter vector (always stored raw f32).
     pub flat: Vec<f32>,
     /// Sorted state-full lane ids — the round's mask.
@@ -220,6 +228,8 @@ impl TrainState {
             wire_mode: String::new(),
             wire_block: 0,
             subspace: String::new(),
+            rho: 0.0,
+            layout: String::new(),
             flat: Vec::new(),
             full_lanes: Vec::new(),
             rng_words: [0; 4],
@@ -254,6 +264,11 @@ impl TrainState {
             "flat vector has {} lanes, expected padded_size {}",
             self.flat.len(),
             self.padded_size
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.rho),
+            "snapshot rho {} outside [0, 1]",
+            self.rho
         );
         let want_adam_t = (self.step - 1) % self.update_freq + 1;
         anyhow::ensure!(
@@ -482,6 +497,8 @@ pub fn save(dir: &Path, state: &TrainState, opts: SaveOptions) -> Result<SaveRep
         wire_mode: state.wire_mode.clone(),
         wire_block: state.wire_block,
         subspace: state.subspace.clone(),
+        rho: state.rho,
+        layout: state.layout.clone(),
         barrier,
         meta: FileEntry { file: "meta.bin".to_string(), bytes: meta_bytes, crc32: meta_crc },
         shards,
@@ -675,6 +692,8 @@ pub fn load(dir: &Path) -> Result<TrainState> {
         wire_mode: man.wire_mode.clone(),
         wire_block: man.wire_block,
         subspace: man.subspace.clone(),
+        rho: man.rho,
+        layout: man.layout.clone(),
         flat,
         full_lanes,
         rng_words,
@@ -987,6 +1006,8 @@ mod tests {
             wire_mode: "split".into(),
             wire_block: 64,
             subspace: format!("rho=0.25 policy=test-{}", seed % 3),
+            rho: 0.25,
+            layout: format!("test-layout-{:04x}-f{flat_size}-P{padded_size}", seed * 77),
             flat: (0..padded_size).map(|_| rng.normal()).collect(),
             full_lanes,
             rng_words: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
@@ -1035,6 +1056,8 @@ mod tests {
             );
             assert_eq!((back.wire_bytes, back.wire_dense_bytes),
                        (st.wire_bytes, st.wire_dense_bytes));
+            assert_eq!(back.rho.to_bits(), st.rho.to_bits(), "seed {seed}");
+            assert_eq!(back.layout, st.layout, "seed {seed}");
             std::fs::remove_dir_all(&dir).ok();
         }
     }

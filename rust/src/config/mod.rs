@@ -15,6 +15,7 @@ use crate::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, State
 use crate::optim::galore::{GaLore, GaLoreCfg, StateHandling};
 use crate::optim::lion::LionCfg;
 use crate::optim::{Layout, Optimizer};
+use crate::schedule::RhoSchedule;
 use crate::Result;
 
 /// Everything needed to launch a training run.
@@ -33,6 +34,11 @@ pub struct TrainConfig {
     pub lr_free_mult: f64,
     /// Density ρ for projection methods.
     pub rho: f64,
+    /// Adaptive density: ρ as a function of the mask epoch
+    /// (`[schedule]` section / `--rho-schedule`). `None` = the constant
+    /// `rho` knob above. Engine + fused paths only (they share the
+    /// `MaskBuilder`).
+    pub rho_schedule: Option<RhoSchedule>,
     /// Subspace update frequency T.
     pub update_freq: u64,
     /// Block policy for blockwise selection: random | ascending | descending.
@@ -105,6 +111,7 @@ impl Default for TrainConfig {
             lr: 1e-3,
             lr_free_mult: 1.0,
             rho: 0.25,
+            rho_schedule: None,
             update_freq: 200,
             block_policy: "random".into(),
             clip: None,
@@ -145,12 +152,15 @@ impl TrainConfig {
         const COMPRESS_KEYS: [&str; 2] = ["mode", "block"];
         const CHECKPOINT_KEYS: [&str; 6] =
             ["dir", "save_every", "codec", "block", "background", "keep_last"];
+        const SCHEDULE_KEYS: [&str; 7] = [
+            "kind", "rho_start", "rho_end", "epochs", "step_every", "step_factor", "rho_min",
+        ];
         for section in &kv.sections {
             anyhow::ensure!(
                 section == "parallel" || section == "parallel.compress"
-                    || section == "checkpoint",
+                    || section == "checkpoint" || section == "schedule",
                 "unknown config section '[{section}]' (known sections: [parallel], \
-                 [parallel.compress], [checkpoint])"
+                 [parallel.compress], [checkpoint], [schedule])"
             );
         }
         for key in kv.entries.keys() {
@@ -166,11 +176,17 @@ impl TrainConfig {
                     "unknown key '{rest}' in [checkpoint] (known keys: {})",
                     CHECKPOINT_KEYS.join(", ")
                 );
+            } else if let Some(rest) = key.strip_prefix("schedule.") {
+                anyhow::ensure!(
+                    SCHEDULE_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [schedule] (known keys: {})",
+                    SCHEDULE_KEYS.join(", ")
+                );
             } else if let Some((section, rest)) = key.split_once('.') {
                 anyhow::ensure!(
                     section == "parallel",
                     "unknown config section '[{section}]' (known sections: [parallel], \
-                     [parallel.compress], [checkpoint])"
+                     [parallel.compress], [checkpoint], [schedule])"
                 );
                 anyhow::ensure!(
                     PARALLEL_KEYS.contains(&rest),
@@ -262,6 +278,64 @@ impl TrainConfig {
             }
             cfg.checkpoint = c;
         }
+        if kv.has_section("schedule") {
+            let kind = kv.get("schedule.kind").unwrap_or("constant");
+            // Strictness is per KIND, not just per section: a key the
+            // chosen kind never reads (epochs under "step", step_factor
+            // under "linear", …) would be silently ignored — the same
+            // wrong-hyperparameter-run-with-no-diagnostic failure the
+            // section validation exists to prevent.
+            let reject_unused = |keys: &[&str]| -> Result<()> {
+                for k in keys {
+                    anyhow::ensure!(
+                        kv.get(&format!("schedule.{k}")).is_none(),
+                        "[schedule] key '{k}' does not apply to kind \"{kind}\" and \
+                         would be silently ignored — remove it"
+                    );
+                }
+                Ok(())
+            };
+            match kind {
+                "constant" => {
+                    reject_unused(&["rho_end", "epochs", "step_every", "step_factor",
+                                    "rho_min"])?
+                }
+                "linear" | "cosine" => {
+                    reject_unused(&["step_every", "step_factor", "rho_min"])?
+                }
+                "step" => reject_unused(&["rho_end", "epochs"])?,
+                _ => {}
+            }
+            // rho_start defaults to the scalar rho knob, so a section
+            // that only names an end point "anneals from the configured
+            // density".
+            let start = kv.get_f64("schedule.rho_start")?.unwrap_or(cfg.rho);
+            let sched = match kind {
+                "constant" => RhoSchedule::Constant { rho: start },
+                "linear" => RhoSchedule::Linear {
+                    start,
+                    end: kv.get_f64("schedule.rho_end")?.unwrap_or(start),
+                    epochs: kv.get_u64("schedule.epochs")?.unwrap_or(1),
+                },
+                "cosine" => RhoSchedule::Cosine {
+                    start,
+                    end: kv.get_f64("schedule.rho_end")?.unwrap_or(start),
+                    epochs: kv.get_u64("schedule.epochs")?.unwrap_or(1),
+                },
+                "step" => RhoSchedule::Step {
+                    start,
+                    factor: kv.get_f64("schedule.step_factor")?.unwrap_or(0.5),
+                    every: kv.get_u64("schedule.step_every")?.unwrap_or(1),
+                    min: kv.get_f64("schedule.rho_min")?.unwrap_or(0.0),
+                },
+                other => anyhow::bail!(
+                    "unknown [schedule] kind '{other}' (expected constant | linear | \
+                     cosine | step)"
+                ),
+            };
+            sched.validate()?;
+            cfg.rho_schedule = Some(sched);
+        }
         if kv.has_section("parallel") || kv.has_section("parallel.compress") {
             let mut p = ParallelCfg::default();
             if let Some(v) = kv.get_u64("parallel.workers")? {
@@ -343,6 +417,34 @@ impl TrainConfig {
             LrSchedule::CosineRestarts { cycle, .. } => {
                 let _ = writeln!(out, "schedule = \"cosine_restarts\"");
                 let _ = writeln!(out, "schedule_cycle = {cycle}");
+            }
+        }
+        if let Some(s) = &self.rho_schedule {
+            let _ = writeln!(out, "\n[schedule]");
+            match s {
+                RhoSchedule::Constant { rho } => {
+                    let _ = writeln!(out, "kind = \"constant\"");
+                    let _ = writeln!(out, "rho_start = {rho}");
+                }
+                RhoSchedule::Linear { start, end, epochs } => {
+                    let _ = writeln!(out, "kind = \"linear\"");
+                    let _ = writeln!(out, "rho_start = {start}");
+                    let _ = writeln!(out, "rho_end = {end}");
+                    let _ = writeln!(out, "epochs = {epochs}");
+                }
+                RhoSchedule::Cosine { start, end, epochs } => {
+                    let _ = writeln!(out, "kind = \"cosine\"");
+                    let _ = writeln!(out, "rho_start = {start}");
+                    let _ = writeln!(out, "rho_end = {end}");
+                    let _ = writeln!(out, "epochs = {epochs}");
+                }
+                RhoSchedule::Step { start, factor, every, min } => {
+                    let _ = writeln!(out, "kind = \"step\"");
+                    let _ = writeln!(out, "rho_start = {start}");
+                    let _ = writeln!(out, "step_factor = {factor}");
+                    let _ = writeln!(out, "step_every = {every}");
+                    let _ = writeln!(out, "rho_min = {min}");
+                }
             }
         }
         if self.checkpoint != CheckpointCfg::default() {
@@ -616,6 +718,71 @@ mod tests {
         assert!(cfg.parallel.unwrap().pipeline);
         assert!(cfg.checkpoint.background);
         assert_eq!(cfg.checkpoint.keep_last, 0);
+    }
+
+    #[test]
+    fn schedule_section_roundtrips_every_kind() {
+        use crate::schedule::RhoSchedule;
+        for sched in [
+            RhoSchedule::Constant { rho: 0.3 },
+            RhoSchedule::Linear { start: 0.5, end: 0.1, epochs: 8 },
+            RhoSchedule::Cosine { start: 0.5, end: 0.1, epochs: 8 },
+            RhoSchedule::Step { start: 0.4, factor: 0.5, every: 2, min: 0.05 },
+        ] {
+            let mut cfg = TrainConfig::default();
+            cfg.rho_schedule = Some(sched.clone());
+            let text = cfg.to_toml();
+            assert!(text.contains("[schedule]"), "{text}");
+            let back = TrainConfig::from_toml(&text).unwrap();
+            assert_eq!(back.rho_schedule, Some(sched));
+        }
+        // No section = no schedule (the scalar rho knob).
+        assert_eq!(TrainConfig::from_toml("steps = 5\n").unwrap().rho_schedule, None);
+    }
+
+    #[test]
+    fn schedule_section_defaults_start_from_the_rho_knob() {
+        use crate::schedule::RhoSchedule;
+        let cfg = TrainConfig::from_toml(
+            "rho = 0.4\n\n[schedule]\nkind = \"linear\"\nrho_end = 0.1\nepochs = 4\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.rho_schedule,
+            Some(RhoSchedule::Linear { start: 0.4, end: 0.1, epochs: 4 })
+        );
+        // A bare section is the constant schedule at the rho knob.
+        let cfg = TrainConfig::from_toml("rho = 0.3\n\n[schedule]\n").unwrap();
+        assert_eq!(cfg.rho_schedule, Some(RhoSchedule::Constant { rho: 0.3 }));
+    }
+
+    #[test]
+    fn schedule_section_is_strict_about_keys_kinds_and_ranges() {
+        let err = TrainConfig::from_toml("[schedule]\nkinds = \"linear\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown key 'kinds' in [schedule]"), "{err}");
+        let err = TrainConfig::from_toml("[schedule]\nkind = \"exp\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown [schedule] kind 'exp'"), "{err}");
+        // Out-of-range densities are a config-time error, not a clamp.
+        let err = TrainConfig::from_toml(
+            "[schedule]\nkind = \"linear\"\nrho_start = 1.5\nrho_end = 0.1\nepochs = 4\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("outside [0, 1]"), "{err}");
+        // Keys the chosen kind never reads are rejected, not silently
+        // ignored: `epochs` under "step", `step_factor` under "linear".
+        let err = TrainConfig::from_toml(
+            "[schedule]\nkind = \"step\"\nstep_every = 2\nepochs = 4\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("does not apply to kind \"step\""), "{err}");
+        let err = TrainConfig::from_toml(
+            "[schedule]\nkind = \"linear\"\nrho_end = 0.1\nepochs = 4\nstep_factor = 0.9\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("does not apply to kind \"linear\""), "{err}");
+        // And a kind-less section with a non-constant key is caught too.
+        let err = TrainConfig::from_toml("[schedule]\nrho_end = 0.1\n").unwrap_err();
+        assert!(format!("{err}").contains("does not apply to kind \"constant\""), "{err}");
     }
 
     #[test]

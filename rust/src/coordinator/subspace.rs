@@ -14,6 +14,7 @@ use crate::util::Prng;
 use crate::optim::frugal::BlockPolicy;
 use crate::optim::projection::{column_subset, randk_indices};
 use crate::optim::{Layout, Role};
+use crate::schedule::RhoSchedule;
 
 /// How Linear lanes are selected into the state-full subspace.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,7 +27,14 @@ pub enum SubspacePolicy {
 /// Builds per-round masks over the flat vector.
 pub struct MaskBuilder {
     layout: Layout,
+    /// Density of the **current** mask epoch — refreshed from the
+    /// schedule at every [`MaskBuilder::advance`]. Constant-schedule
+    /// builders behave exactly like the historical fixed-ρ ones.
     pub rho: f32,
+    /// ρ as a function of the mask epoch (the builder's own `round`
+    /// counter, which checkpoints restore — so a resumed run continues
+    /// the schedule from the right epoch automatically).
+    schedule: RhoSchedule,
     pub policy: SubspacePolicy,
     /// Roles that are always state-full (paper default: non-Linear).
     pub statefull_roles: Vec<Role>,
@@ -52,9 +60,32 @@ pub struct MaskBuilderState {
 
 impl MaskBuilder {
     pub fn new(layout: Layout, rho: f32, policy: SubspacePolicy, seed: u64) -> Self {
+        // Promote through the f32's shortest decimal form, not a raw
+        // cast: the constant schedule's canonical spec — and so the
+        // checkpoint fingerprint — then prints exactly what the
+        // historical fixed-ρ fingerprint printed ("0.1", never
+        // "0.10000000149011612"), keeping pre-schedule snapshots
+        // resumable. The density math is unchanged: `rho_at(e) as f32`
+        // round-trips to the original value (shortest-repr guarantee).
+        let rho64: f64 = format!("{rho}").parse().expect("f32 Display parses as f64");
+        Self::with_schedule(layout, RhoSchedule::constant(rho64), policy, seed)
+    }
+
+    /// A builder whose density follows `schedule` across mask epochs
+    /// (variable-ρ training). Masks still come from the same RNG
+    /// stream as a fixed-ρ builder — only the per-epoch target width
+    /// changes.
+    pub fn with_schedule(
+        layout: Layout,
+        schedule: RhoSchedule,
+        policy: SubspacePolicy,
+        seed: u64,
+    ) -> Self {
+        let rho = schedule.rho_at(0) as f32;
         MaskBuilder {
             layout,
             rho,
+            schedule,
             policy,
             statefull_roles: vec![Role::Embed, Role::Norm, Role::Output],
             statefree_roles: vec![],
@@ -68,15 +99,27 @@ impl MaskBuilder {
         &self.layout
     }
 
+    /// The density schedule this builder follows.
+    pub fn schedule(&self) -> &RhoSchedule {
+        &self.schedule
+    }
+
+    /// Scheduled density of the 0-based mask epoch `epoch`.
+    pub fn scheduled_rho(&self, epoch: u64) -> f64 {
+        self.schedule.rho_at(epoch)
+    }
+
     /// Fingerprint of the selection *rule* (not the stream position):
-    /// rho, policy, and the role routing. Checkpoints persist it so a
-    /// resume under a different rule — which would silently diverge from
-    /// the interrupted run at the next re-selection — is rejected up
-    /// front instead.
+    /// the ρ-schedule, policy, and the role routing. Checkpoints persist
+    /// it so a resume under a different rule — which would silently
+    /// diverge from the interrupted run at the next re-selection — is
+    /// rejected up front instead. The schedule (not the current ρ) goes
+    /// in, so the fingerprint is stable across mask epochs of one
+    /// variable-ρ run while any *schedule* change still mismatches.
     pub fn fingerprint(&self) -> String {
         format!(
             "rho={} policy={:?} full_roles={:?} free_roles={:?}",
-            self.rho, self.policy, self.statefull_roles, self.statefree_roles
+            self.schedule, self.policy, self.statefull_roles, self.statefree_roles
         )
     }
 
@@ -96,6 +139,11 @@ impl MaskBuilder {
 
     /// Produce the next round's mask (length = padded_size; padding = 0).
     pub fn advance(&mut self) -> Vec<f32> {
+        // The epoch about to be selected is the pre-increment `round`
+        // (0-based); its scheduled density drives every policy's target
+        // width below. Restoring `round` from a checkpoint therefore
+        // resumes the schedule at exactly the interrupted epoch.
+        self.rho = self.schedule.rho_at(self.round) as f32;
         self.round += 1;
         let mut mask = vec![0.0f32; self.layout.padded_size];
 
@@ -377,6 +425,79 @@ mod tests {
             b.restore_ckpt_state(&st);
             for round in 0..4 {
                 assert_eq!(a.advance(), b.advance(), "{policy:?} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_drives_mask_width_per_epoch() {
+        // Variable-ρ: each advance() consults the schedule at the
+        // builder's own epoch counter; RandK realizes the target almost
+        // exactly, so the measured density must track ρ(epoch).
+        let l = layout();
+        let sched = RhoSchedule::parse("linear:0.5:0.1:4").unwrap();
+        let mut mb =
+            MaskBuilder::with_schedule(l.clone(), sched.clone(), SubspacePolicy::RandK, 7);
+        let mut prev_k = usize::MAX;
+        for epoch in 0..6u64 {
+            let mask = mb.advance();
+            let want = sched.rho_at(epoch) as f32;
+            assert!((mb.rho - want).abs() < 1e-6, "epoch {epoch}: rho {} vs {want}", mb.rho);
+            let d = mb.linear_density(&mask);
+            assert!((d - want).abs() < 0.02, "epoch {epoch}: density {d} vs {want}");
+            let k = statefull_lanes(&mask, l.flat_size).len();
+            assert!(k <= prev_k, "epoch {epoch}: K grew under a decaying schedule");
+            prev_k = k;
+        }
+    }
+
+    #[test]
+    fn schedule_fingerprint_is_epoch_stable_but_schedule_sensitive() {
+        let l = layout();
+        let sched = RhoSchedule::parse("step:0.5:0.5:2:0.1").unwrap();
+        let mut mb = MaskBuilder::with_schedule(
+            l.clone(),
+            sched,
+            SubspacePolicy::Blockwise(BlockPolicy::Random),
+            7,
+        );
+        let fp0 = mb.fingerprint();
+        for _ in 0..5 {
+            mb.advance();
+        }
+        // ρ changed across those epochs; the fingerprint must not (it
+        // names the rule, and the schedule IS the rule).
+        assert_eq!(mb.fingerprint(), fp0);
+        assert!(fp0.contains("step:0.5:0.5:2:0.1"), "{fp0}");
+        // A fixed-ρ builder fingerprints differently — resume under a
+        // different schedule must mismatch.
+        let fixed =
+            MaskBuilder::new(l, 0.5, SubspacePolicy::Blockwise(BlockPolicy::Random), 7);
+        assert_ne!(fixed.fingerprint(), fp0);
+    }
+
+    #[test]
+    fn schedule_ckpt_state_resumes_mid_schedule_bitwise() {
+        // Restoring a mid-schedule stream position must reproduce both
+        // the remaining masks AND the remaining ρ(epoch) values exactly
+        // — the invariant behind resume ≡ continuous under variable ρ.
+        let l = layout();
+        let sched = RhoSchedule::parse("cosine:0.5:0.1:6").unwrap();
+        for policy in [
+            SubspacePolicy::Blockwise(BlockPolicy::Random),
+            SubspacePolicy::Columnwise,
+            SubspacePolicy::RandK,
+        ] {
+            let mut a = MaskBuilder::with_schedule(l.clone(), sched.clone(), policy, 13);
+            for _ in 0..3 {
+                a.advance();
+            }
+            let st = a.ckpt_state();
+            let mut b = MaskBuilder::with_schedule(l.clone(), sched.clone(), policy, 999);
+            b.restore_ckpt_state(&st);
+            for round in 0..5 {
+                assert_eq!(a.advance(), b.advance(), "{policy:?} round {round}");
+                assert_eq!(a.rho.to_bits(), b.rho.to_bits(), "{policy:?} round {round}");
             }
         }
     }

@@ -32,7 +32,12 @@
 //!    shared [`MaskBuilder`] and all shard state is released + fresh
 //!    (the paper's state-reset semantics), which doubles as the shard —
 //!    and EF-residual — lifecycle boundary: no cross-worker state
-//!    migration exists.
+//!    migration exists. Under a variable-ρ schedule
+//!    (`crate::schedule::RhoSchedule`, `--rho-schedule`) the target
+//!    density itself changes here, so the state-full lane count
+//!    K(epoch) shrinks over training and every plan/pool is elastically
+//!    re-provisioned at the same boundary — the bit-identity invariants
+//!    are unaffected because ρ(epoch) is a pure function of the epoch.
 //!
 //! 6. The steady-state round loop is **allocation-free**: reduce-tree
 //!    messages come from a recycling [`pool::BufferPool`], codecs
@@ -413,11 +418,24 @@ impl Engine {
         self.wire_dense_bytes
     }
 
-    /// Start a new round: re-select the subspace, release all shard
+    /// Start a new round: re-select the subspace at the clock's mask
+    /// epoch — under a variable-ρ schedule the target density (and so
+    /// the state-full lane count K) changes here — release all shard
     /// state (Adam moments *and* EF residuals), re-partition the fresh
-    /// lane sets, and rebuild the codec plan over them.
+    /// lane sets, and rebuild the codec plan over them. This is the
+    /// elastic re-provisioning boundary: every K(epoch) change
+    /// re-provisions the shard plans, compression plan, Adam moment
+    /// pools and residual bank in one place.
     fn begin_round(&mut self) {
         self.round += 1;
+        // The SubspaceClock names the epoch; the MaskBuilder's schedule
+        // supplies ρ(epoch). The two counters advance in lock-step
+        // (one per `update_freq` steps), checked here.
+        debug_assert_eq!(
+            self.clock.epoch() + 1,
+            self.round,
+            "round/mask-epoch counters diverged"
+        );
         self.mask = self.mask_builder.advance();
         let flat_size = self.mask_builder.layout().flat_size;
         let padded = self.mask_builder.layout().padded_size;
@@ -433,7 +451,12 @@ impl Engine {
         // reset on the same boundary.
         self.states = (0..workers).map(|w| AdamState::new(self.plan.shard_len(w))).collect();
         self.residuals.reset(workers, self.cfg.parallel.grad_accum, self.cplan.residual_len());
-        self.reports.push(RoundReport::new(self.round, self.clock.step(), &self.plan));
+        self.reports.push(RoundReport::new(
+            self.round,
+            self.clock.step(),
+            &self.plan,
+            self.mask_builder.rho,
+        ));
     }
 
     /// One data-parallel optimizer step. `batch_fn` fills a reusable
@@ -712,6 +735,12 @@ impl Engine {
         st.wire_mode.push_str(self.cfg.parallel.compress.mode.as_str());
         st.wire_block = self.cfg.parallel.compress.block;
         st.subspace = self.mask_builder.fingerprint();
+        // ρ(epoch) of the snapshot's mask epoch (informational — the
+        // schedule inside `subspace` is what restore checks) and the
+        // layout fingerprint restore rejects mismatches against.
+        st.rho = self.mask_builder.rho as f64;
+        st.layout.clear();
+        st.layout.push_str(&layout.fingerprint());
         st.flat.clear();
         st.flat.extend_from_slice(&self.flat);
         st.full_lanes.clear();
@@ -758,6 +787,21 @@ impl Engine {
     pub fn restore_state(&mut self, st: crate::ckpt::TrainState) -> Result<()> {
         st.validate()?;
         let layout = self.mask_builder.layout();
+        // The artifact/layout fingerprint is checked FIRST — before any
+        // lane-count comparison — so resuming against a different model
+        // config fails with the real diagnosis (wrong model / split
+        // layout), not a downstream size mismatch. Empty fingerprints
+        // (pre-fingerprint snapshots) fall through to the lane check.
+        let layout_fp = layout.fingerprint();
+        if !st.layout.is_empty() {
+            anyhow::ensure!(
+                st.layout == layout_fp,
+                "snapshot was taken for model layout [{}] but this run builds \
+                 [{layout_fp}] — the parameter shapes / split layout differ, so the \
+                 snapshot cannot resume here",
+                st.layout
+            );
+        }
         anyhow::ensure!(
             layout.padded_size == st.padded_size && layout.flat_size == st.flat_size,
             "snapshot is for a {}/{}-lane model, this engine has {}/{}",
@@ -793,19 +837,18 @@ impl Engine {
              re-selection)",
             st.subspace
         );
-        if self.cfg.parallel.compress.mode.as_str() != st.wire_mode
-            || self.cfg.parallel.compress.block != st.wire_block
-        {
-            eprintln!(
-                "note: snapshot ran --compress {} (block {}) and this run uses {} \
-                 (block {}); resuming is valid but the loss trace only stays \
-                 bit-identical within a fixed codec",
-                st.wire_mode,
-                st.wire_block,
-                self.cfg.parallel.compress.mode,
-                self.cfg.parallel.compress.block
-            );
-        }
+        anyhow::ensure!(
+            self.cfg.parallel.compress.mode.as_str() == st.wire_mode
+                && self.cfg.parallel.compress.block == st.wire_block,
+            "snapshot ran --compress {} (block {}) but this run uses {} (block {}) — \
+             the reduce-tree codec changes the transported bits (EF residuals, \
+             quantized partial sums), so the loss trace is only defined within a \
+             fixed codec; resume with a matching --compress/--compress-block",
+            st.wire_mode,
+            st.wire_block,
+            self.cfg.parallel.compress.mode,
+            self.cfg.parallel.compress.block
+        );
 
         let padded = layout.padded_size;
         let workers = self.cfg.parallel.workers;
@@ -825,6 +868,11 @@ impl Engine {
             rng_words: st.rng_words,
             rng_spare: st.rng_spare,
         });
+        // The interrupted epoch's scheduled density (informational until
+        // the next re-selection refreshes it — the restored mask itself
+        // carries the epoch's realized lane set).
+        let epoch_rho = self.mask_builder.scheduled_rho(st.round.saturating_sub(1)) as f32;
+        self.mask_builder.rho = epoch_rho;
         self.clock = crate::train::SubspaceClock::new(self.cfg.update_freq);
         self.clock.restore_at(st.step, st.adam_t);
 
@@ -881,7 +929,12 @@ impl Engine {
         // Open a report for the remainder of the interrupted round (its
         // `first_step`/occupancy are informational; steps completed
         // before the kill are not re-counted).
-        self.reports.push(RoundReport::new(self.round, st.step - st.adam_t + 1, &self.plan));
+        self.reports.push(RoundReport::new(
+            self.round,
+            st.step - st.adam_t + 1,
+            &self.plan,
+            self.mask_builder.rho,
+        ));
         Ok(())
     }
 

@@ -26,6 +26,9 @@ pub struct RoundReport {
     pub steps: u64,
     /// Sum of per-step mean losses (divide by `steps` for the mean).
     pub loss_sum: f64,
+    /// Scheduled density ρ of this round's mask epoch (constant-ρ runs
+    /// repeat the config knob; variable-ρ runs show the decay).
+    pub rho: f32,
     /// State-full lanes selected this round (K).
     pub statefull_lanes: usize,
     /// Largest per-worker shard (ceil(K/N) + granularity padding).
@@ -41,12 +44,13 @@ pub struct RoundReport {
 }
 
 impl RoundReport {
-    pub fn new(round: u64, first_step: u64, plan: &ShardPlan) -> RoundReport {
+    pub fn new(round: u64, first_step: u64, plan: &ShardPlan, rho: f32) -> RoundReport {
         RoundReport {
             round,
             first_step,
             steps: 0,
             loss_sum: 0.0,
+            rho,
             statefull_lanes: plan.total_lanes(),
             max_shard_lanes: plan.max_shard_len(),
             straggler_timeouts: 0,
@@ -328,9 +332,9 @@ impl Orchestrator {
 fn print_round(r: &RoundReport) {
     let wire_kb = r.wire_bytes as f64 / r.steps.max(1) as f64 / 1024.0;
     println!(
-        "round {:>4}  steps {:>4}  mean-loss {:.4}  statefull {:>8} lanes  \
+        "round {:>4}  rho {:.3}  steps {:>4}  mean-loss {:.4}  statefull {:>8} lanes  \
          max-shard {:>7}  wire {:>8.1}KB/step (x{:.1} vs fp32)  timeouts {}",
-        r.round, r.steps, r.mean_loss(), r.statefull_lanes, r.max_shard_lanes,
+        r.round, r.rho, r.steps, r.mean_loss(), r.statefull_lanes, r.max_shard_lanes,
         wire_kb, r.wire_reduction(), r.straggler_timeouts
     );
 }

@@ -30,8 +30,13 @@
 //!   manifest + CRC-checked per-worker shard files (lane-keyed, so
 //!   snapshots restore bit-identically at any worker count), q8/raw
 //!   moment codecs, atomic writes. `--save-every` / `--resume`.
-//! - [`config`]: TOML experiment configuration (incl. `[parallel]` and
-//!   `[checkpoint]`).
+//! - [`config`]: TOML experiment configuration (incl. `[parallel]`,
+//!   `[checkpoint]` and `[schedule]`).
+//! - [`schedule`]: adaptive density schedules — ρ(mask epoch) for
+//!   variable-ρ training (`--rho-schedule`), consulted by the
+//!   `MaskBuilder` at every subspace re-selection so the state-full
+//!   lane count shrinks over training while the bitwise determinism
+//!   invariants keep holding.
 //! - [`toy`]: closed-form toy problems for the theory experiments.
 
 pub mod ckpt;
@@ -42,6 +47,7 @@ pub mod engine;
 pub mod linalg;
 pub mod optim;
 pub mod runtime;
+pub mod schedule;
 pub mod tensor;
 pub mod toy;
 pub mod train;

@@ -26,7 +26,9 @@ use frugal::engine::{CompressMode, Engine, EngineCfg, GradSource, Orchestrator, 
                      RefLm, RefLmCfg, Sources};
 use frugal::optim::memory::{checkpoint_bytes, fmt_gib, lane_wire_bytes, optimizer_state_bytes,
                             split_wire_report, ArchSpec, Method, WireCodec};
+use frugal::optim::memory::scheduled_state_table;
 use frugal::runtime::{Manifest, Runtime};
+use frugal::schedule::RhoSchedule;
 use frugal::train::{FusedTrainer, GradTrainer, PjrtGradSource};
 use frugal::util::Prng;
 use frugal::TrainConfig;
@@ -37,8 +39,8 @@ frugal — FRUGAL memory-efficient training framework
 USAGE:
   frugal info     [--artifacts DIR]
   frugal pretrain [--config FILE] [--model M] [--optimizer O] [--steps N]
-                  [--lr F] [--rho F] [--update-freq N] [--seed N] [--fused]
-                  [--log FILE] [--artifacts DIR]
+                  [--lr F] [--rho F] [--rho-schedule SPEC] [--update-freq N]
+                  [--seed N] [--fused] [--log FILE] [--artifacts DIR]
                   [--workers N] [--grad-accum M] [--backend auto|ref|pjrt]
                   [--compress none|sign-ef|q8|split] [--compress-block N]
                   [--straggler-ms N] [--timeout-ms N] [--sequential]
@@ -46,7 +48,7 @@ USAGE:
                   [--ckpt-dir DIR] [--save-every N] [--ckpt-codec q8|raw]
                   [--ckpt-sync] [--keep-last N] [--resume DIR]
   frugal ckpt     inspect DIR
-  frugal memory   [--model SCALE]
+  frugal memory   [--model SCALE] [--rho-schedule SPEC] [--epochs N]
   frugal toy      [--steps N] [--rank R] [--update-freq T]
   frugal angles   [--artifacts DIR] [--model M] [--steps N]
 
@@ -59,6 +61,16 @@ fixed --grad-accum (the global batch).
 ships state-free lanes as 1-bit signs (+ error feedback) and state-full
 lanes as blockwise 8-bit — the bit-identity across worker counts holds
 within any fixed codec.
+
+`--rho-schedule SPEC` anneals the density per mask epoch (one epoch =
+--update-freq steps), shrinking the state-full lane count — and so the
+sharded Adam footprint — over training. SPEC is one of
+  constant:RHO | linear:START:END:EPOCHS | cosine:START:END:EPOCHS |
+  step:START:FACTOR:EVERY:MIN
+(also the `[schedule]` config section). rho(epoch) is a pure function
+of the epoch, so `workers 1 == workers N` and `resume == continuous`
+stay bitwise under a changing rho; snapshots record the schedule and a
+resume under a different one is rejected.
 
 `--ckpt-dir DIR` snapshots the sharded training state under DIR every
 --save-every steps (and at the end of the run); `--resume DIR` restores
@@ -165,6 +177,20 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             }
             if let Some(r) = args.get_f64("rho")? {
                 cfg.rho = r;
+                // A [schedule] section already baked the config-file rho
+                // into its densities at parse time; silently annealing
+                // from the OLD rho would be exactly the
+                // wrong-hyperparameter-run-with-no-diagnostic failure
+                // the strict config exists to prevent.
+                anyhow::ensure!(
+                    cfg.rho_schedule.is_none() || args.get("rho-schedule").is_some(),
+                    "--rho cannot override the [schedule] config section (its \
+                     densities were already derived from the config-file rho); \
+                     edit the section or pass --rho-schedule"
+                );
+            }
+            if let Some(s) = args.get("rho-schedule") {
+                cfg.rho_schedule = Some(RhoSchedule::parse(s)?);
             }
             if let Some(t) = args.get_u64("update-freq")? {
                 cfg.update_freq = t;
@@ -272,7 +298,13 @@ fn run(argv: &[String]) -> frugal::Result<()> {
         }
         "memory" => {
             let args = Args::parse(rest, &[])?;
-            memory_table(args.get("model"))
+            let sched = args.get("rho-schedule").map(RhoSchedule::parse).transpose()?;
+            let epochs = args.get_u64("epochs")?;
+            anyhow::ensure!(
+                epochs.is_none() || sched.is_some(),
+                "--epochs only sizes the scheduled-rho table: pass --rho-schedule SPEC"
+            );
+            memory_table(args.get("model"), sched.as_ref(), epochs.unwrap_or(8))
         }
         "toy" => {
             let args = Args::parse(rest, &[])?;
@@ -337,7 +369,10 @@ fn ckpt_inspect(path: &Path) -> frugal::Result<()> {
         "  model lanes {}/{} (flat/padded)  statefull {}  wire codec '{}' (block {})",
         man.flat_size, man.padded_size, man.statefull_lanes, man.wire_mode, man.wire_block
     );
-    println!("  subspace [{}]", man.subspace);
+    println!("  subspace [{}]  rho(epoch) {}", man.subspace, man.rho);
+    if !man.layout.is_empty() {
+        println!("  layout fingerprint [{}]", man.layout);
+    }
     println!(
         "  moment codec {} (block {})  data bytes {}{}",
         man.moment_codec,
@@ -388,9 +423,13 @@ fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
 
     let eval_every = cfg.eval_every.max(1);
     if fused {
-        let mb = MaskBuilder::new(
+        let sched = cfg
+            .rho_schedule
+            .clone()
+            .unwrap_or_else(|| RhoSchedule::constant(cfg.rho));
+        let mb = MaskBuilder::with_schedule(
             entry.layout(),
-            cfg.rho as f32,
+            sched,
             SubspacePolicy::Blockwise(cfg.block_policy()),
             cfg.seed,
         );
@@ -426,6 +465,13 @@ fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
             tr.metrics.write_jsonl(Path::new(path))?;
         }
     } else {
+        // The optimizer-suite path has no shared MaskBuilder to consult
+        // a schedule (each optimizer owns its projection logic).
+        anyhow::ensure!(
+            cfg.rho_schedule.is_none(),
+            "--rho-schedule needs a masked-update path: use the engine \
+             (--workers N) or --fused"
+        );
         let layout = entry.layout();
         let opt = cfg.build_optimizer(&layout)?;
         let mut tr =
@@ -541,23 +587,27 @@ fn pretrain_parallel(
         }
     };
 
+    let rho_schedule = cfg
+        .rho_schedule
+        .clone()
+        .unwrap_or_else(|| RhoSchedule::constant(cfg.rho));
     println!(
         "pretrain[engine]: optimizer={} workers={} grad_accum={} global_batch={} seqs \
-         rho={} T={} steps={} lr={} compress={}",
+         rho_schedule={} T={} steps={} lr={} compress={}",
         cfg.optimizer,
         pcfg.workers,
         pcfg.grad_accum,
         pcfg.grad_accum * batch,
-        cfg.rho,
+        rho_schedule,
         cfg.update_freq,
         cfg.steps,
         cfg.lr,
         pcfg.compress.mode
     );
 
-    let mask_builder = MaskBuilder::new(
+    let mask_builder = MaskBuilder::with_schedule(
         layout,
-        cfg.rho as f32,
+        rho_schedule,
         SubspacePolicy::Blockwise(cfg.block_policy()),
         cfg.seed,
     );
@@ -656,7 +706,11 @@ fn pretrain_parallel(
     Ok(())
 }
 
-fn memory_table(model: Option<&str>) -> frugal::Result<()> {
+fn memory_table(
+    model: Option<&str>,
+    rho_schedule: Option<&RhoSchedule>,
+    epochs: u64,
+) -> frugal::Result<()> {
     // A bad --model must surface as a CLI error, not a panic.
     let scales: Vec<&str> = match model {
         Some(name) => {
@@ -770,9 +824,46 @@ fn memory_table(model: Option<&str>) -> frugal::Result<()> {
     }
     println!();
     println!(
-        "(EF rows apply to --compress split|sign-ef runs; barrier-aligned saves could \
-         elide moments+EF entirely — see ROADMAP)"
+        "(EF rows apply to --compress split|sign-ef runs; barrier-aligned saves \
+         elide moments+EF entirely)"
     );
+
+    // Peak-vs-scheduled: the declining state footprint of a variable-ρ
+    // run, one row per mask epoch (--rho-schedule SPEC [--epochs N]).
+    if let Some(sched) = rho_schedule {
+        let epochs = epochs.max(1);
+        println!(
+            "\nScheduled-rho FRUGAL state footprint per mask epoch \
+             (schedule {sched}, analytic):"
+        );
+        print!("{:<14} {:>8}", "epoch", "rho");
+        for scale in &scales {
+            print!(" {scale:>8}");
+        }
+        println!();
+        let mut tables = Vec::new();
+        for scale in &scales {
+            let arch = ArchSpec::paper_llama(scale)?;
+            tables.push(scheduled_state_table(&arch, sched, epochs, 4));
+        }
+        for e in 0..epochs as usize {
+            print!("{:<14} {:>8.4}", format!("epoch {e}"), tables[0][e].rho);
+            for table in &tables {
+                print!(" {:>8}", fmt_gib(table[e].state_bytes));
+            }
+            println!();
+        }
+        print!("{:<14} {:>8}", "peak", "");
+        for table in &tables {
+            print!(" {:>8}", fmt_gib(frugal::optim::memory::peak_scheduled_state_bytes(table)));
+        }
+        println!();
+        println!(
+            "(peak = what must be provisioned; every epoch after the decay runs \
+             lighter — the state-full subspace, its Adam shards, and their \
+             checkpoints all shrink with rho(epoch))"
+        );
+    }
     Ok(())
 }
 

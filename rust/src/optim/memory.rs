@@ -205,6 +205,49 @@ pub fn checkpoint_bytes(arch: &ArchSpec, rho: f64, moments: WireCodec, ef_slots:
         + ef_slots * 4 * arch.statefree_lanes(rho)
 }
 
+/// One epoch row of the scheduled-memory table: the analytic FRUGAL
+/// optimizer-state footprint at that mask epoch's scheduled ρ.
+#[derive(Clone, Debug)]
+pub struct ScheduledStateRow {
+    pub epoch: u64,
+    pub rho: f64,
+    pub state_bytes: u64,
+}
+
+/// Per-epoch FRUGAL optimizer-state bytes under a variable-ρ schedule —
+/// the analytic "declining state footprint" of adaptive-density
+/// training. Epoch 0 is the first mask epoch; a decaying schedule
+/// yields a non-increasing column, and the peak (what must actually be
+/// provisioned) is [`peak_scheduled_state_bytes`].
+pub fn scheduled_state_table(
+    arch: &ArchSpec,
+    schedule: &crate::schedule::RhoSchedule,
+    epochs: u64,
+    bytes_per_float: u64,
+) -> Vec<ScheduledStateRow> {
+    (0..epochs.max(1))
+        .map(|epoch| {
+            let rho = schedule.rho_at(epoch);
+            ScheduledStateRow {
+                epoch,
+                rho,
+                state_bytes: optimizer_state_bytes(
+                    arch,
+                    &Method::Frugal { rho },
+                    bytes_per_float,
+                ),
+            }
+        })
+        .collect()
+}
+
+/// The epoch-max of a [`scheduled_state_table`] — the provisioning peak
+/// a variable-ρ run pays (for a decaying schedule: epoch 0's footprint;
+/// every later epoch runs strictly lighter).
+pub fn peak_scheduled_state_bytes(table: &[ScheduledStateRow]) -> u64 {
+    table.iter().map(|r| r.state_bytes).max().unwrap_or(0)
+}
+
 /// [`SplitWireReport`] for `arch` at density `rho` with `block`-lane
 /// scale blocks.
 pub fn split_wire_report(arch: &ArchSpec, rho: f64, block: u64) -> SplitWireReport {
@@ -394,6 +437,40 @@ mod tests {
             // residual is bounded by the state-free lane count.
             assert!(r.scale_bytes * 20 < r.wire_bytes, "{scale}: scale overhead too big");
             assert_eq!(r.residual_floats, arch.statefree_lanes(0.25));
+        }
+    }
+
+    #[test]
+    fn scheduled_state_table_declines_with_rho_and_peaks_at_epoch_zero() {
+        use crate::schedule::RhoSchedule;
+        let arch = ArchSpec::paper_llama("130M").unwrap();
+        let sched = RhoSchedule::parse("linear:0.5:0.0:8").unwrap();
+        let table = scheduled_state_table(&arch, &sched, 10, 4);
+        assert_eq!(table.len(), 10);
+        // Declining footprint: non-increasing, strictly smaller by the
+        // end (the whole point of annealing ρ).
+        for w in table.windows(2) {
+            assert!(w[1].state_bytes <= w[0].state_bytes, "footprint grew");
+        }
+        assert!(table[9].state_bytes < table[0].state_bytes);
+        // Endpoints match the fixed-ρ analytic model exactly.
+        assert_eq!(
+            table[0].state_bytes,
+            optimizer_state_bytes(&arch, &Method::Frugal { rho: 0.5 }, 4)
+        );
+        assert_eq!(
+            table[9].state_bytes,
+            optimizer_state_bytes(&arch, &Method::Frugal { rho: 0.0 }, 4)
+        );
+        // Peak = what must be provisioned = epoch 0 for a decay.
+        assert_eq!(peak_scheduled_state_bytes(&table), table[0].state_bytes);
+        // A constant schedule reproduces the scalar knob at every epoch.
+        let flat = scheduled_state_table(&arch, &RhoSchedule::constant(0.25), 4, 4);
+        for row in &flat {
+            assert_eq!(
+                row.state_bytes,
+                optimizer_state_bytes(&arch, &Method::Frugal { rho: 0.25 }, 4)
+            );
         }
     }
 

@@ -99,6 +99,35 @@ impl Layout {
         self.linears().map(|p| p.numel()).sum()
     }
 
+    /// Stable fingerprint of the model shape + split layout: parameter
+    /// names, roles, offsets, shapes, and the flat/padded sizes.
+    /// Checkpoint manifests persist it so a resume against a different
+    /// model config is rejected with the real diagnosis *before* any
+    /// lane-count check (FNV-1a over the canonical description — no
+    /// external hasher, so `optim` stays dependency-free).
+    pub fn fingerprint(&self) -> String {
+        fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+            h
+        }
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for p in &self.params {
+            h = fnv(h, p.name.as_bytes());
+            h = fnv(h, format!("{:?}", p.role).as_bytes());
+            h = fnv(h, &(p.offset as u64).to_le_bytes());
+            for &d in &p.shape {
+                h = fnv(h, &(d as u64).to_le_bytes());
+            }
+            h = fnv(h, b";");
+        }
+        h = fnv(h, &(self.flat_size as u64).to_le_bytes());
+        h = fnv(h, &(self.padded_size as u64).to_le_bytes());
+        format!("{h:016x}-p{}-f{}-P{}", self.params.len(), self.flat_size, self.padded_size)
+    }
+
     /// A tiny synthetic layout for tests/benches: `n_layers` layers of
     /// (d×d) attention-ish and (d×ff) MLP-ish matrices plus embed/norm/out.
     pub fn synthetic(vocab: usize, d: usize, ff: usize, n_layers: usize) -> Layout {
@@ -162,6 +191,25 @@ mod tests {
             off += p.numel();
         }
         assert_eq!(off, l.flat_size);
+    }
+
+    #[test]
+    fn layout_fingerprint_is_stable_and_shape_sensitive() {
+        let a = Layout::synthetic(64, 16, 40, 3);
+        let b = Layout::synthetic(64, 16, 40, 3);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same shape, same fingerprint");
+        // Any shape change — depth, width, vocab — moves the hash.
+        for other in [
+            Layout::synthetic(64, 16, 40, 2),
+            Layout::synthetic(64, 24, 40, 3),
+            Layout::synthetic(128, 16, 40, 3),
+        ] {
+            assert_ne!(a.fingerprint(), other.fingerprint());
+        }
+        // Human-auditable suffix: param count + flat/padded sizes.
+        let fp = a.fingerprint();
+        assert!(fp.contains(&format!("-f{}", a.flat_size)), "{fp}");
+        assert!(fp.contains(&format!("-P{}", a.padded_size)), "{fp}");
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Adaptive density schedules: ρ as a function of the mask epoch.
+//!
+//! FRUGAL treats the state-full fraction ρ as a fixed knob; this module
+//! lets it *decay* over training the way AdaRankGrad anneals gradient
+//! rank — full-rank updates early (large state-full subspace), cheap
+//! near-signSGD updates late. A [`RhoSchedule`] maps the 0-based **mask
+//! epoch** (the subspace re-selection round counter — one epoch per
+//! `update_freq` steps) to a density in `[0, 1]`; the `MaskBuilder`
+//! consults it at every `advance()`, so the state-full lane count
+//! K(epoch) shrinks and the engine elastically re-provisions its shard /
+//! compression plans and Adam moment pools on every epoch whose K
+//! changes.
+//!
+//! Determinism contract: `rho_at` is a pure function of the epoch (plain
+//! f64 arithmetic, no RNG), so the headline invariants — `workers 1 ≡
+//! workers N` and `resume ≡ continuous`, bitwise — hold under a changing
+//! ρ exactly as they do under a fixed one. The canonical spec string
+//! (the [`std::fmt::Display`] form, accepted back by
+//! [`RhoSchedule::parse`]) doubles as the schedule's checkpoint
+//! fingerprint: a resume under a different schedule is rejected up
+//! front instead of silently diverging at the next re-selection.
+//!
+//! Spec grammar (CLI `--rho-schedule` and the `[schedule]` config
+//! section compile to the same values):
+//!
+//! ```text
+//! RHO (or constant:RHO)         fixed density (the classic FRUGAL knob)
+//! linear:START:END:EPOCHS       linear START → END over EPOCHS epochs, then hold END
+//! cosine:START:END:EPOCHS       half-cosine START → END over EPOCHS epochs, then hold
+//! step:START:FACTOR:EVERY:MIN   multiply by FACTOR every EVERY epochs, floored at MIN
+//! ```
+//!
+//! The canonical (Display) form of a constant schedule is the bare
+//! number — exactly what the pre-schedule fixed-ρ fingerprint recorded
+//! — so snapshots taken before this subsystem existed keep resuming
+//! under an equal constant ρ.
+
+use crate::Result;
+
+/// A density schedule over mask epochs (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RhoSchedule {
+    /// Fixed ρ — the behavior of the scalar `rho` config knob.
+    Constant { rho: f64 },
+    /// Linear interpolation `start → end` over `epochs` epochs; epochs at
+    /// or past `epochs` hold `end`.
+    Linear { start: f64, end: f64, epochs: u64 },
+    /// Half-cosine `start → end` over `epochs` epochs, then hold `end`.
+    Cosine { start: f64, end: f64, epochs: u64 },
+    /// Geometric decay: `start · factor^(epoch / every)`, floored at
+    /// `min`.
+    Step { start: f64, factor: f64, every: u64, min: f64 },
+}
+
+impl RhoSchedule {
+    /// The constant schedule at `rho` — what a scalar `rho` config knob
+    /// compiles to.
+    pub fn constant(rho: f64) -> RhoSchedule {
+        RhoSchedule::Constant { rho }
+    }
+
+    /// Parse the canonical spec string (see module docs for the
+    /// grammar). [`std::fmt::Display`] emits the same form, so
+    /// `parse(format!("{s}"))` round-trips every schedule exactly.
+    pub fn parse(spec: &str) -> Result<RhoSchedule> {
+        let num = |s: &str| -> Result<f64> {
+            s.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad number '{s}' in rho schedule '{spec}': {e}"))
+        };
+        let int = |s: &str| -> Result<u64> {
+            s.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("bad count '{s}' in rho schedule '{spec}': {e}"))
+        };
+        let parts: Vec<&str> = spec.split(':').collect();
+        let sched = match parts.as_slice() {
+            // A bare number is the constant schedule (and its canonical
+            // Display form — identical to the legacy fixed-ρ knob).
+            &[r] if r.parse::<f64>().is_ok() => RhoSchedule::Constant { rho: num(r)? },
+            &["constant", r] => RhoSchedule::Constant { rho: num(r)? },
+            &["linear", s, e, n] => {
+                RhoSchedule::Linear { start: num(s)?, end: num(e)?, epochs: int(n)? }
+            }
+            &["cosine", s, e, n] => {
+                RhoSchedule::Cosine { start: num(s)?, end: num(e)?, epochs: int(n)? }
+            }
+            &["step", s, f, n, m] => RhoSchedule::Step {
+                start: num(s)?,
+                factor: num(f)?,
+                every: int(n)?,
+                min: num(m)?,
+            },
+            _ => anyhow::bail!(
+                "unknown rho schedule '{spec}' (expected constant:RHO | \
+                 linear:START:END:EPOCHS | cosine:START:END:EPOCHS | \
+                 step:START:FACTOR:EVERY:MIN)"
+            ),
+        };
+        sched.validate()?;
+        Ok(sched)
+    }
+
+    /// Reject out-of-range parameters with a config-time error (a bad ρ
+    /// must not surface as a silently-clamped mask mid-run).
+    pub fn validate(&self) -> Result<()> {
+        let rho_ok = |name: &str, r: f64| -> Result<()> {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&r),
+                "rho schedule {name} {r} outside [0, 1]"
+            );
+            Ok(())
+        };
+        match *self {
+            RhoSchedule::Constant { rho } => rho_ok("value", rho)?,
+            RhoSchedule::Linear { start, end, epochs }
+            | RhoSchedule::Cosine { start, end, epochs } => {
+                rho_ok("start", start)?;
+                rho_ok("end", end)?;
+                anyhow::ensure!(epochs >= 1, "rho schedule needs epochs >= 1");
+            }
+            RhoSchedule::Step { start, factor, every, min } => {
+                rho_ok("start", start)?;
+                rho_ok("min", min)?;
+                anyhow::ensure!(
+                    factor > 0.0 && factor <= 1.0,
+                    "rho schedule step factor {factor} outside (0, 1]"
+                );
+                anyhow::ensure!(every >= 1, "rho schedule needs step_every >= 1");
+                anyhow::ensure!(
+                    min <= start,
+                    "rho schedule floor {min} exceeds its start {start}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Density of the 0-based mask epoch `epoch` — a pure f64 function
+    /// (no RNG, no state), always in `[0, 1]`.
+    pub fn rho_at(&self, epoch: u64) -> f64 {
+        let r = match *self {
+            RhoSchedule::Constant { rho } => rho,
+            RhoSchedule::Linear { start, end, epochs } => {
+                if epoch >= epochs {
+                    end
+                } else {
+                    start + (end - start) * (epoch as f64 / epochs as f64)
+                }
+            }
+            RhoSchedule::Cosine { start, end, epochs } => {
+                if epoch >= epochs {
+                    end
+                } else {
+                    let t = epoch as f64 / epochs as f64;
+                    end + (start - end) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+                }
+            }
+            RhoSchedule::Step { start, factor, every, min } => {
+                // powi is O(log k), so the exponent only needs clamping
+                // to its i32 domain; factor < 1 underflows toward 0 for
+                // huge epochs, which the floor absorbs.
+                let k = (epoch / every.max(1)).min(i32::MAX as u64) as i32;
+                (start * factor.powi(k)).max(min)
+            }
+        };
+        r.clamp(0.0, 1.0)
+    }
+
+}
+
+impl std::fmt::Display for RhoSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            // Bare number: byte-identical to the legacy fixed-ρ
+            // fingerprint, so pre-schedule snapshots keep resuming.
+            RhoSchedule::Constant { rho } => write!(f, "{rho}"),
+            RhoSchedule::Linear { start, end, epochs } => {
+                write!(f, "linear:{start}:{end}:{epochs}")
+            }
+            RhoSchedule::Cosine { start, end, epochs } => {
+                write!(f, "cosine:{start}:{end}:{epochs}")
+            }
+            RhoSchedule::Step { start, factor, every, min } => {
+                write!(f, "step:{start}:{factor}:{every}:{min}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip_every_kind() {
+        for spec in [
+            "0.25",
+            "linear:0.5:0.1:8",
+            "cosine:0.5:0.1:8",
+            "step:0.4:0.5:2:0.05",
+        ] {
+            let s = RhoSchedule::parse(spec).unwrap();
+            assert_eq!(format!("{s}"), spec, "display must be canonical");
+            let back = RhoSchedule::parse(&format!("{s}")).unwrap();
+            assert_eq!(back, s);
+            for e in 0..20u64 {
+                assert_eq!(back.rho_at(e).to_bits(), s.rho_at(e).to_bits(), "epoch {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_holds_and_matches_the_legacy_fingerprint_form() {
+        let s = RhoSchedule::constant(0.25);
+        for e in [0u64, 1, 7, 1000] {
+            assert_eq!(s.rho_at(e), 0.25);
+        }
+        // Canonical form is the bare number — exactly what pre-schedule
+        // fixed-ρ fingerprints recorded — and the explicit `constant:`
+        // spelling parses to the same schedule.
+        assert_eq!(format!("{s}"), "0.25");
+        assert_eq!(RhoSchedule::parse("constant:0.25").unwrap(), s);
+        assert_eq!(RhoSchedule::parse("0.25").unwrap(), s);
+    }
+
+    #[test]
+    fn linear_hits_endpoints_and_holds() {
+        let s = RhoSchedule::parse("linear:0.5:0.1:4").unwrap();
+        assert_eq!(s.rho_at(0), 0.5);
+        assert!((s.rho_at(2) - 0.3).abs() < 1e-12);
+        assert_eq!(s.rho_at(4), 0.1);
+        assert_eq!(s.rho_at(100), 0.1);
+    }
+
+    #[test]
+    fn cosine_hits_endpoints_and_midpoint() {
+        let s = RhoSchedule::parse("cosine:0.5:0.1:4").unwrap();
+        assert_eq!(s.rho_at(0), 0.5);
+        // cos(pi/2) = 0 -> midpoint of start/end.
+        assert!((s.rho_at(2) - 0.3).abs() < 1e-12);
+        assert_eq!(s.rho_at(4), 0.1);
+        assert_eq!(s.rho_at(10), 0.1);
+    }
+
+    #[test]
+    fn step_decays_on_cadence_and_floors() {
+        let s = RhoSchedule::parse("step:0.4:0.5:2:0.05").unwrap();
+        assert_eq!(s.rho_at(0), 0.4);
+        assert_eq!(s.rho_at(1), 0.4);
+        assert_eq!(s.rho_at(2), 0.2);
+        assert_eq!(s.rho_at(3), 0.2);
+        assert_eq!(s.rho_at(4), 0.1);
+        assert_eq!(s.rho_at(6), 0.05);
+        assert_eq!(s.rho_at(1000), 0.05, "floored, even at huge epochs");
+    }
+
+    #[test]
+    fn decaying_schedules_are_monotone_non_increasing() {
+        for spec in ["linear:0.6:0.1:9", "cosine:0.6:0.1:9", "step:0.6:0.7:3:0.1"] {
+            let s = RhoSchedule::parse(spec).unwrap();
+            let mut prev = f64::INFINITY;
+            for e in 0..30u64 {
+                let r = s.rho_at(e);
+                assert!((0.0..=1.0).contains(&r), "{spec} epoch {e}: {r}");
+                assert!(r <= prev + 1e-15, "{spec} epoch {e}: {r} > {prev}");
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for spec in [
+            "bogus:0.5",
+            "linear:0.5:0.1",          // missing epochs
+            "linear:0.5:0.1:0",        // zero epochs
+            "linear:1.5:0.1:4",        // rho out of range
+            "constant:-0.1",
+            "constant:abc",
+            "step:0.4:0.0:2:0.05",     // zero factor
+            "step:0.4:1.5:2:0.05",     // factor > 1
+            "step:0.4:0.5:0:0.05",     // zero cadence
+            "step:0.1:0.5:2:0.4",      // floor above start
+            "",
+        ] {
+            assert!(RhoSchedule::parse(spec).is_err(), "'{spec}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn edge_densities_zero_and_one_are_valid() {
+        // The K=0 / K=total endpoints the engine must provision for.
+        let zero = RhoSchedule::parse("constant:0").unwrap();
+        assert_eq!(zero.rho_at(3), 0.0);
+        let full = RhoSchedule::parse("constant:1").unwrap();
+        assert_eq!(full.rho_at(3), 1.0);
+        let to_zero = RhoSchedule::parse("linear:1:0:4").unwrap();
+        assert_eq!(to_zero.rho_at(0), 1.0);
+        assert_eq!(to_zero.rho_at(9), 0.0);
+    }
+}

@@ -145,6 +145,15 @@ impl SubspaceClock {
         self.step
     }
 
+    /// 0-based mask epoch of the most recently ticked step: step `s`
+    /// (0-based) belongs to epoch `s / T`. The engine consults this at
+    /// every `begin_round` — it is the index a variable-ρ schedule is
+    /// evaluated at, and it advances in lock-step with the
+    /// `MaskBuilder`'s own round counter by construction.
+    pub fn epoch(&self) -> u64 {
+        self.step.saturating_sub(1) / self.update_freq
+    }
+
     /// Reposition the clock at a checkpointed position (`step` completed
     /// steps, `adam_t` steps into the current subspace period) so a
     /// resumed run ticks on exactly like the uninterrupted one.

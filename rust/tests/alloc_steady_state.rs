@@ -151,3 +151,81 @@ fn grad_path_is_allocation_free_after_warmup() {
         }
     }
 }
+
+/// Variable-ρ (ISSUE 5): under a per-epoch decaying schedule the lane
+/// groups change shape at every round boundary — fresh Adam shards,
+/// re-formed codec plans, re-shaped pooled messages. The boundary step
+/// is allowed to (re)allocate; every later step of the epoch must be
+/// allocation-free again, i.e. the pool steady state re-pins
+/// immediately (well inside the two-round budget), and the pool itself
+/// never mints new messages (misses stay flat: shrinking/growing lane
+/// groups reuse the same recycled buffers).
+#[test]
+fn variable_rho_re_pins_steady_state_each_epoch() {
+    const T: u64 = 6;
+    let m = RefLm::new(RefLmCfg::default());
+    let layout = m.layout().clone();
+    let sources = Sources::Local(
+        (0..2).map(|_| Box::new(m.clone()) as Box<dyn GradSource>).collect(),
+    );
+    let sched = frugal::schedule::RhoSchedule::parse("linear:0.5:0.1:8").unwrap();
+    let mask_builder = MaskBuilder::with_schedule(
+        layout,
+        sched,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        SEED,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg {
+            workers: 2,
+            grad_accum: 4,
+            threaded: false,
+            compress: CompressCfg { mode: CompressMode::Split, block: 64 },
+            ..Default::default()
+        },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: T,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    let mut e = Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap();
+    // Warm-up: rounds 1-6 (36 steps). ρ has already decayed four times
+    // by then, and the metrics log is past its next Vec-doubling
+    // boundary (capacity 64 covers the 48 steps this test runs).
+    for _ in 0..36 {
+        e.step(&batch_fn).unwrap();
+    }
+    let misses_before = e.pool_stats().misses;
+    for round in [7u64, 8] {
+        // K changes on this boundary step — (re)allocation allowed here.
+        e.step(&batch_fn).unwrap();
+        // Every remaining step of the epoch: zero heap traffic.
+        ENABLED.with(|flag| flag.set(true));
+        ALLOCS.with(|c| c.set(0));
+        REALLOCS.with(|c| c.set(0));
+        for _ in 1..T {
+            e.step(&batch_fn).unwrap();
+        }
+        ENABLED.with(|flag| flag.set(false));
+        let allocs = ALLOCS.with(|c| c.get());
+        let reallocs = REALLOCS.with(|c| c.get());
+        assert_eq!(
+            allocs, 0,
+            "round {round}: {allocs} allocations after the epoch's re-provisioning step"
+        );
+        assert_eq!(
+            reallocs, 0,
+            "round {round}: {reallocs} reallocations after the epoch's re-provisioning step"
+        );
+    }
+    // The pool never minted a new message across two K changes: every
+    // reshaped buffer was a recycled one.
+    assert_eq!(
+        e.pool_stats().misses,
+        misses_before,
+        "variable-rho rounds forced fresh pool messages"
+    );
+    assert_eq!(e.round(), 8);
+}

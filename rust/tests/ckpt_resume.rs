@@ -347,3 +347,173 @@ fn counters_and_rounds_continue_across_resume() {
     assert_eq!(resumed.wire_dense_bytes_total(), continuous.wire_dense_bytes_total());
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------------------
+// Mid-schedule restarts (variable-ρ) + resume-time fingerprints
+// ---------------------------------------------------------------------------
+
+/// Like [`engine_cfg`] but with a variable-ρ schedule driving the mask
+/// builder (same RNG stream, per-epoch target widths).
+fn engine_sched(
+    workers: usize,
+    mode: CompressMode,
+    spec: &str,
+) -> Engine {
+    let m = model();
+    let layout = m.layout().clone();
+    let sources = Sources::Threaded(
+        (0..workers).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let sched = frugal::schedule::RhoSchedule::parse(spec).unwrap();
+    let mask_builder = MaskBuilder::with_schedule(
+        layout,
+        sched,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        SEED,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg {
+            workers,
+            grad_accum: GRAD_ACCUM,
+            compress: CompressCfg { mode, block: 64 },
+            ..Default::default()
+        },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: UPDATE_FREQ,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+}
+
+/// A 2-step decay at T=4: epochs 0-1 run rho 0.4, epochs 2+ run 0.2
+/// (steps 1-8 vs 9-16) — the save points below sit exactly on and just
+/// after the ρ-change boundary.
+const SCHED: &str = "step:0.4:0.5:2:0.05";
+
+/// Acceptance criterion, checkpoint half: a snapshot saved AT the
+/// epoch boundary where ρ drops (step 8, a round barrier — the save is
+/// barrier-elided) resumes bitwise across the ρ decrease, at workers
+/// 4 → 2 and 4 → 1, for compress none and split, against the
+/// uninterrupted workers=1 run. The resumed run's first step performs
+/// the K-shrinking re-provisioning from restored RNG state alone.
+#[test]
+fn mid_schedule_save_at_epoch_boundary_resumes_bitwise() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mut continuous = engine_sched(1, mode, SCHED);
+        let want_trace = run(&mut continuous, 16);
+        let want_flat = bits(&continuous.flat);
+
+        let mut first = engine_sched(4, mode, SCHED);
+        let trace = run(&mut first, 8); // step 8: barrier AND rho boundary
+        let dir = tmpdir(&format!("sched_barrier_{mode}"));
+        ckpt::save(&dir, &first.capture_state().unwrap(), SaveOptions::new(MomentCodec::Q8, 64))
+            .unwrap();
+        drop(first); // the kill
+        // The boundary save is barrier-elided; the manifest records the
+        // (pre-drop) epoch's rho and the layout fingerprint.
+        let man = ckpt::CkptManifest::read(&dir).unwrap();
+        assert!(man.barrier, "{mode:?}: boundary save should elide");
+        assert!((man.rho - 0.4).abs() < 1e-6, "{mode:?}: manifest rho {}", man.rho);
+        assert!(!man.layout.is_empty(), "{mode:?}: manifest must carry a layout fingerprint");
+        assert!(man.subspace.contains(SCHED), "{mode:?}: schedule not in fingerprint");
+
+        for resume_workers in [2usize, 1] {
+            let mut resumed = engine_sched(resume_workers, mode, SCHED);
+            resumed.restore_state(ckpt::load(&dir).unwrap()).unwrap();
+            let tail = run(&mut resumed, 8);
+            let mut full = trace.clone();
+            full.extend(tail);
+            assert_eq!(full, want_trace, "{mode:?} -> workers={resume_workers}");
+            assert_eq!(bits(&resumed.flat), want_flat, "{mode:?} -> workers={resume_workers}");
+            // The resumed run really did shrink: epoch 2+ reports run at
+            // the decayed density.
+            let last = resumed.reports().last().unwrap();
+            assert!((last.rho - 0.2).abs() < 1e-6, "{mode:?}: resumed rho {}", last.rho);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Mid-epoch kill AFTER the ρ decrease (step 10, two steps into the
+/// rho-0.2 epoch: live Adam moments over the shrunken lane set, live EF
+/// residuals): bit-exact under the raw moment codec at workers 4 → 2,
+/// for compress none and split.
+#[test]
+fn mid_schedule_mid_epoch_resume_is_bitwise_raw() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mut continuous = engine_sched(1, mode, SCHED);
+        let want_trace = run(&mut continuous, 16);
+        let want_flat = bits(&continuous.flat);
+
+        let mut first = engine_sched(4, mode, SCHED);
+        let mut trace = run(&mut first, 10); // mid-epoch, post-decrease
+        let dir = tmpdir(&format!("sched_mid_{mode}"));
+        ckpt::save(&dir, &first.capture_state().unwrap(), SaveOptions::new(MomentCodec::Raw, 64))
+            .unwrap();
+        drop(first);
+        let man = ckpt::CkptManifest::read(&dir).unwrap();
+        assert!(!man.barrier);
+        assert!((man.rho - 0.2).abs() < 1e-6, "{mode:?}: manifest rho {}", man.rho);
+
+        let mut resumed = engine_sched(2, mode, SCHED);
+        resumed.restore_state(ckpt::load(&dir).unwrap()).unwrap();
+        assert_eq!(resumed.global_step(), 10);
+        trace.extend(run(&mut resumed, 6));
+        assert_eq!(trace, want_trace, "{mode:?}");
+        assert_eq!(bits(&resumed.flat), want_flat, "{mode:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Resume-time fingerprints: each mismatch class is rejected with its
+/// own clear error — (a) a different model shape fails on the LAYOUT
+/// fingerprint (not a downstream lane-count message), (b) a different
+/// ρ-schedule fails on the subspace fingerprint, (c) a different wire
+/// codec fails on the codec check.
+#[test]
+fn resume_fingerprints_reject_shape_rho_and_codec_mismatches() {
+    let mut e = engine(2, CompressMode::None);
+    run(&mut e, 4);
+    let st = e.capture_state().unwrap();
+
+    // (a) Shape mismatch: a wider reference model. The layout check
+    // must fire first — its message names the layout fingerprints.
+    let big = RefLm::new(RefLmCfg { d_model: 24, ..RefLmCfg::default() });
+    let sources = Sources::Threaded(vec![
+        Box::new(big.clone()) as Box<dyn GradSource + Send>,
+    ]);
+    let mask_builder = MaskBuilder::new(
+        big.layout().clone(),
+        0.25,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        SEED,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg { workers: 1, grad_accum: GRAD_ACCUM, ..Default::default() },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: UPDATE_FREQ,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    let mut wrong_shape = Engine::new(mask_builder, cfg, sources, big.init_flat(SEED)).unwrap();
+    let err = wrong_shape.restore_state(st.clone()).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("model layout"), "want the layout diagnosis, got: {msg}");
+
+    // (b) ρ-schedule mismatch: same model, different schedule — the
+    // masks would silently diverge at the next re-selection.
+    let mut wrong_sched = engine_sched(2, CompressMode::None, "linear:0.4:0.1:4");
+    let err = wrong_sched.restore_state(st.clone()).unwrap_err();
+    assert!(format!("{err}").contains("subspace selection"), "{err}");
+
+    // (c) Wire-codec mismatch: the transported bits differ, so resume
+    // under a different --compress is rejected, not merely noted.
+    let mut wrong_codec = engine(2, CompressMode::Split);
+    let err = wrong_codec.restore_state(st).unwrap_err();
+    assert!(format!("{err}").contains("--compress"), "{err}");
+}

@@ -382,3 +382,204 @@ fn split_codec_cuts_wire_bytes_3x() {
     let report = split.reports().last().unwrap();
     assert!(report.wire_reduction() >= 3.0);
 }
+
+// ---------------------------------------------------------------------------
+// Adaptive density (variable-ρ): elastic state re-provisioning
+// ---------------------------------------------------------------------------
+
+/// Engine over an explicit MaskBuilder (variable-ρ schedules, demoted
+/// roles, tiny-K cases) — the builder's layout must match `m`'s.
+fn engine_with_builder(
+    m: &RefLm,
+    mb: MaskBuilder,
+    workers: usize,
+    parallel: ParallelCfg,
+    update_freq: u64,
+) -> Engine {
+    let sources = Sources::Threaded(
+        (0..workers).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg { workers, ..parallel },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    Engine::new(mb, cfg, sources, m.init_flat(SEED)).unwrap()
+}
+
+/// The tentpole invariant: `workers 1 ≡ workers N`, bitwise, under a
+/// *changing* ρ — a 2-step decay crossing two K changes in 16 steps at
+/// T=4 — for compress none and split. Every epoch whose K shrinks
+/// forces the engine to rebuild its shard/compress plans and release +
+/// re-allocate the Adam moment shards; none of that may move a bit.
+#[test]
+fn variable_rho_schedule_is_bit_identical_across_workers() {
+    let sched = frugal::schedule::RhoSchedule::parse("step:0.5:0.5:2:0.05").unwrap();
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let parallel = ParallelCfg {
+            grad_accum: 4,
+            compress: CompressCfg { mode, block: 64 },
+            ..Default::default()
+        };
+        let m = model();
+        let build = |workers: usize| {
+            let mb = MaskBuilder::with_schedule(
+                m.layout().clone(),
+                sched.clone(),
+                SubspacePolicy::Blockwise(BlockPolicy::Random),
+                SEED,
+            );
+            engine_with_builder(&m, mb, workers, parallel.clone(), 4)
+        };
+        let mut e1 = build(1);
+        let t1 = run(&mut e1, 16);
+        for workers in [2usize, 4] {
+            let mut e = build(workers);
+            assert_eq!(run(&mut e, 16), t1, "{mode:?} workers={workers}");
+            assert_eq!(bits(&e.flat), bits(&e1.flat), "{mode:?} workers={workers}");
+        }
+    }
+}
+
+/// The declining footprint is real, not just analytic: under a decaying
+/// schedule with the exact-width RandK policy, each epoch's sharded
+/// Adam state is exactly 2·K(epoch) floats, K never grows, and it
+/// strictly shrinks across the decay. Round reports record ρ(epoch).
+#[test]
+fn rho_decay_shrinks_sharded_state_per_epoch() {
+    let sched = frugal::schedule::RhoSchedule::parse("linear:0.5:0.1:4").unwrap();
+    let m = model();
+    let flat_size = m.layout().flat_size;
+    let mb = MaskBuilder::with_schedule(
+        m.layout().clone(),
+        sched.clone(),
+        SubspacePolicy::RandK,
+        SEED,
+    );
+    let parallel = ParallelCfg { grad_accum: 2, ..Default::default() };
+    let mut e = engine_with_builder(&m, mb, 2, parallel, 3);
+    let mut per_epoch_k = Vec::new();
+    for step in 0..15 {
+        e.step(&batch_fn).unwrap();
+        if step % 3 == 0 {
+            // First step of each round: fresh plan + fresh moments.
+            let k = statefull_lanes(e.mask(), flat_size).len();
+            assert_eq!(e.plan().total_lanes(), k);
+            assert_eq!(e.state_floats(), 2 * k, "state must re-provision to 2*K");
+            per_epoch_k.push(k);
+        }
+    }
+    assert_eq!(per_epoch_k.len(), 5);
+    for w in per_epoch_k.windows(2) {
+        assert!(w[1] <= w[0], "K grew under a decaying schedule: {per_epoch_k:?}");
+    }
+    assert!(
+        per_epoch_k[4] < per_epoch_k[0],
+        "decay never shrank K: {per_epoch_k:?}"
+    );
+    // Reports carry the schedule: rho column matches rho_at(epoch).
+    for (i, r) in e.reports().iter().enumerate() {
+        let want = sched.rho_at(i as u64) as f32;
+        assert!((r.rho - want).abs() < 1e-6, "round {}: rho {} vs {want}", r.round, r.rho);
+    }
+}
+
+/// ρ edge cases: an all-state-free epoch (K = 0) and an all-state-full
+/// epoch (K = every real lane) must produce valid empty/full shard
+/// plans — no `rho: 0.0` special-casing anywhere — and both stay
+/// bit-identical across worker counts, compressed or not.
+#[test]
+fn k_zero_and_k_full_epochs_produce_valid_plans() {
+    use frugal::optim::Role;
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let parallel = ParallelCfg {
+            grad_accum: 2,
+            compress: CompressCfg { mode, block: 64 },
+            ..Default::default()
+        };
+        // K = 0: rho 0 with every role demoted to state-free.
+        let m = model();
+        let build_zero = |workers: usize| {
+            let mut mb =
+                MaskBuilder::new(m.layout().clone(), 0.0, SubspacePolicy::RandK, SEED);
+            mb.statefree_roles = vec![Role::Embed, Role::Norm, Role::Output];
+            engine_with_builder(&m, mb, workers, parallel.clone(), 4)
+        };
+        let mut z1 = build_zero(1);
+        let tz = run(&mut z1, 6);
+        assert_eq!(z1.plan().total_lanes(), 0, "{mode:?}: K must be 0");
+        assert_eq!(z1.state_floats(), 0, "{mode:?}: no Adam state at K=0");
+        assert!(tz.iter().all(|b| f32::from_bits(*b).is_finite()));
+        // The pure-signSGD epoch still trains (params moved).
+        assert_ne!(bits(&z1.flat), bits(&m.init_flat(SEED)), "{mode:?}");
+        let mut z2 = build_zero(2);
+        assert_eq!(run(&mut z2, 6), tz, "{mode:?}: K=0 not worker-invariant");
+
+        // K = total: rho 1 — every real lane state-full, no free lanes.
+        let build_full = |workers: usize| {
+            let mb = MaskBuilder::new(m.layout().clone(), 1.0, SubspacePolicy::RandK, SEED);
+            engine_with_builder(&m, mb, workers, parallel.clone(), 4)
+        };
+        let mut f1 = build_full(1);
+        let tf = run(&mut f1, 6);
+        assert_eq!(f1.plan().total_lanes(), m.layout().flat_size, "{mode:?}");
+        assert_eq!(f1.state_floats(), 2 * m.layout().flat_size, "{mode:?}");
+        // No state-free lanes → the sign/EF group is empty.
+        assert_eq!(f1.residual_floats(), 0, "{mode:?}");
+        let mut f2 = build_full(3);
+        assert_eq!(run(&mut f2, 6), tf, "{mode:?}: K=full not worker-invariant");
+        assert_eq!(bits(&f2.flat), bits(&f1.flat), "{mode:?}");
+    }
+}
+
+/// Worker starvation: more workers than state-full lanes. A 1-lane
+/// shard plan parks the lane on worker 0 and leaves the rest empty —
+/// updates still land, empty shards are no-ops, and the engine-level
+/// run (workers > K) is bit-identical to workers = 1.
+#[test]
+fn worker_starvation_more_workers_than_lanes() {
+    // Unit level: a single lane across 4 workers.
+    let plan = ShardPlan::partition(vec![7], 4, 64);
+    assert_eq!(plan.total_lanes(), 1);
+    assert_eq!(plan.shard_len(0), 1);
+    for w in 1..4 {
+        assert_eq!(plan.shard_len(w), 0, "worker {w} should be empty");
+        assert!(plan.lanes_of(w).is_empty());
+    }
+    // Engine level: a tiny model where RandK rounds to K = 2 linear
+    // lanes, run at workers = 4 > K.
+    let cfg = RefLmCfg { vocab: 32, d_model: 8, d_ff: 16, n_layers: 1, seq_len: 8, batch: 2 };
+    let m = RefLm::new(cfg.clone());
+    let tiny_batch = move |micro: u64, buf: &mut Vec<i32>| {
+        let mut rng = frugal::util::Prng::seed_from_u64(0x71AB ^ micro.wrapping_mul(0x9E37));
+        buf.clear();
+        buf.extend((0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32));
+    };
+    let build = |workers: usize| {
+        use frugal::optim::Role;
+        // Largest linears are 8x16 = 128 lanes: rho 0.008 -> k = 1 for
+        // those, 0 for the 64-lane ones.
+        let mut mb =
+            MaskBuilder::new(m.layout().clone(), 0.008, SubspacePolicy::RandK, SEED);
+        mb.statefree_roles = vec![Role::Embed, Role::Norm, Role::Output];
+        let parallel = ParallelCfg { grad_accum: 2, shard_granularity: 1, ..Default::default() };
+        engine_with_builder(&m, mb, workers, parallel, 4)
+    };
+    let mut e1 = build(1);
+    let mut e4 = build(4);
+    let t1: Vec<u32> = (0..6).map(|_| e1.step(&tiny_batch).unwrap().to_bits()).collect();
+    let t4: Vec<u32> = (0..6).map(|_| e4.step(&tiny_batch).unwrap().to_bits()).collect();
+    let k = e4.plan().total_lanes();
+    assert!(k >= 1 && k < 4, "expected 1..4 state-full lanes, got {k}");
+    assert!(
+        e4.state_floats_per_worker().iter().filter(|&&f| f == 0).count() >= 4 - k,
+        "at least {} workers should hold no state (K={k})",
+        4 - k
+    );
+    assert_eq!(t4, t1, "starved workers changed the math");
+    assert_eq!(bits(&e4.flat), bits(&e1.flat));
+}

@@ -447,3 +447,111 @@ fn prop_corpus_stream() {
         assert!(b1.tokens.iter().all(|&t| (t as usize) < vocab), "case {case}");
     }
 }
+
+/// Arbitrary ρ-schedules are valid, canonical-spec round-trippable, and
+/// bounded: rho_at ∈ [0, 1] everywhere, parse(display(s)) reproduces
+/// rho_at bit-for-bit (the spec string is the checkpoint fingerprint, so
+/// this IS the resume invariant), and decaying parameterizations are
+/// monotone non-increasing.
+#[test]
+fn prop_rho_schedules_roundtrip_and_bound() {
+    use frugal::schedule::RhoSchedule;
+    for case in 0..40u64 {
+        let mut rng = Prng::seed_from_u64(8000 + case);
+        let hi = 0.2 + 0.8 * rng.f64();
+        let lo = rng.f64() * hi;
+        let epochs = 1 + rng.range(0, 12) as u64;
+        let sched = match case % 4 {
+            0 => RhoSchedule::Constant { rho: hi },
+            1 => RhoSchedule::Linear { start: hi, end: lo, epochs },
+            2 => RhoSchedule::Cosine { start: hi, end: lo, epochs },
+            _ => RhoSchedule::Step {
+                start: hi,
+                factor: 0.3 + 0.7 * rng.f64(),
+                every: 1 + rng.range(0, 4) as u64,
+                min: lo,
+            },
+        };
+        sched.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let back = RhoSchedule::parse(&format!("{sched}"))
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let mut prev = f64::INFINITY;
+        for epoch in 0..3 * epochs + 4 {
+            let r = sched.rho_at(epoch);
+            assert!((0.0..=1.0).contains(&r), "case {case} epoch {epoch}: {r}");
+            assert_eq!(
+                back.rho_at(epoch).to_bits(),
+                r.to_bits(),
+                "case {case} epoch {epoch}: spec roundtrip drifted"
+            );
+            // All four kinds here decay (start >= end/min by
+            // construction): non-increasing everywhere.
+            assert!(r <= prev + 1e-15, "case {case} epoch {epoch}: {r} > {prev}");
+            prev = r;
+        }
+    }
+}
+
+/// Elastic re-provisioning invariants under arbitrary decaying
+/// ρ-schedules: (a) each epoch's mask width matches K(epoch) — the
+/// RandK policy realizes round(rho·n) per Linear param exactly; (b) the
+/// state-full/state-free lane sets partition the real lanes and both
+/// shard plans partition their sets exactly, at every worker count.
+#[test]
+fn prop_variable_rho_masks_and_shard_plans() {
+    use frugal::coordinator::subspace::lane_partition;
+    use frugal::schedule::RhoSchedule;
+    for case in 0..12u64 {
+        let mut rng = Prng::seed_from_u64(8600 + case);
+        let layout = random_layout(&mut rng);
+        let hi = 0.3 + 0.7 * rng.f64();
+        let lo = rng.f64() * hi;
+        let epochs = 1 + rng.range(0, 5) as u64;
+        let sched = if case % 2 == 0 {
+            RhoSchedule::Linear { start: hi, end: lo, epochs }
+        } else {
+            RhoSchedule::Cosine { start: hi, end: lo, epochs }
+        };
+        let mut mb = MaskBuilder::with_schedule(
+            layout.clone(),
+            sched.clone(),
+            SubspacePolicy::RandK,
+            case,
+        );
+        let workers = 1 + rng.range(0, 6);
+        let gran = 1 + rng.range(0, 64);
+        for epoch in 0..6u64 {
+            let mask = mb.advance();
+            // (a) Mask width = K(epoch): role lanes plus the per-param
+            // RandK pick count at this epoch's scheduled density.
+            let rho_e = sched.rho_at(epoch) as f32;
+            let mut want_linear = 0usize;
+            let mut role_lanes = 0usize;
+            for p in &layout.params {
+                if p.role == frugal::optim::Role::Linear {
+                    let n = p.numel();
+                    want_linear += ((rho_e * n as f32).round() as usize).min(n);
+                } else {
+                    role_lanes += p.numel();
+                }
+            }
+            let (full, free) = lane_partition(&mask, layout.flat_size);
+            assert_eq!(
+                full.len(),
+                role_lanes + want_linear,
+                "case {case} epoch {epoch}: K mismatch at rho {rho_e}"
+            );
+            // (b) Partition exactness: full ∪ free = real lanes, and
+            // each shard plan tiles its lane set in order.
+            assert_eq!(full.len() + free.len(), layout.flat_size, "case {case}");
+            for lanes in [&full, &free] {
+                let plan = ShardPlan::partition(lanes.clone(), workers, gran);
+                let mut recovered = Vec::new();
+                for w in 0..workers {
+                    recovered.extend_from_slice(plan.lanes_of(w));
+                }
+                assert_eq!(&recovered, lanes, "case {case} epoch {epoch}");
+            }
+        }
+    }
+}
