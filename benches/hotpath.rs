@@ -18,6 +18,10 @@
 //!   - **Save-handoff stall** (ms the training thread spends per
 //!     snapshot): synchronous serialize-and-commit vs background-writer
 //!     capture+submit.
+//!   - **Telemetry overhead** (ms per engine step): the same engine
+//!     stepping with the span flight recorder on (the default) vs off,
+//!     so the recorder's clock-read + histogram cost stays visible in
+//!     every bench-smoke run.
 //!
 //! Self-relative perf gates (runner-speed-proof — both sides measured in
 //! the same process): SignEf and BlockQ8 encode+decode must be ≥ 1.5×
@@ -442,6 +446,44 @@ fn main() -> frugal::Result<()> {
         ],
     );
     std::fs::remove_dir_all(&dir).ok();
+
+    // ------------------------------------------------------------------
+    // Telemetry overhead: the same engine stepping with the span
+    // recorder on (the default) vs off. The deterministic counter plane
+    // runs in both cases — it IS the wire/round accounting — so the
+    // delta isolates the flight recorder's clock reads + histogram
+    // updates (expected: noise-level; the recorder allocates nothing).
+    // ------------------------------------------------------------------
+    println!("\n## telemetry span-recorder overhead (ms per engine step)\n");
+    engine.telemetry_mut().recorder.set_enabled(true);
+    let t_spans = time_fn(2, iters, || {
+        engine.step(&batch_fn).unwrap();
+    });
+    engine.telemetry_mut().recorder.set_enabled(false);
+    let t_plain = time_fn(2, iters, || {
+        engine.step(&batch_fn).unwrap();
+    });
+    engine.telemetry_mut().recorder.set_enabled(true);
+    let overhead_pct =
+        100.0 * (t_spans.median_ns - t_plain.median_ns) / t_plain.median_ns.max(1.0);
+    records.push(json_record(
+        "hotpath",
+        "telemetry=spans",
+        &[
+            ("spans_on_ms_per_step", t_spans.per_iter_ms()),
+            ("spans_off_ms_per_step", t_plain.per_iter_ms()),
+            ("overhead_pct", overhead_pct),
+        ],
+    ));
+    println!("{}", records.last().unwrap());
+    print_table(
+        "telemetry span-recorder overhead (engine step)",
+        &["spans", "ms/step"],
+        &[
+            vec!["on (default)".into(), format!("{:.3}", t_spans.per_iter_ms())],
+            vec!["off".into(), format!("{:.3}", t_plain.per_iter_ms())],
+        ],
+    );
 
     write_json_records("BENCH_hotpath.json", &records)?;
     println!("\nwrote BENCH_hotpath.json ({} records)", records.len());

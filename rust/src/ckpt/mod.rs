@@ -209,6 +209,11 @@ pub struct TrainState {
     /// Lifetime wire-byte counters (kept continuous across resumes).
     pub wire_bytes: u64,
     pub wire_dense_bytes: u64,
+    /// The full deterministic telemetry plane
+    /// (`telemetry::Telemetry::deterministic_words`, array order) —
+    /// captured so a resumed run continues, not restarts, its counter
+    /// totals. Empty = legacy snapshot carrying only the wire words.
+    pub telemetry: Vec<u64>,
 }
 
 impl TrainState {
@@ -241,6 +246,7 @@ impl TrainState {
             residuals: Vec::new(),
             wire_bytes: 0,
             wire_dense_bytes: 0,
+            telemetry: Vec::new(),
         }
     }
 
@@ -315,6 +321,27 @@ impl TrainState {
             anyhow::ensure!(
                 self.residuals.iter().all(|r| r.len() == len),
                 "EF residual slots have mixed lengths"
+            );
+        }
+        if !self.telemetry.is_empty() {
+            anyhow::ensure!(
+                self.telemetry.len() == crate::telemetry::DET_COUNTERS,
+                "telemetry plane holds {} words, expected {}",
+                self.telemetry.len(),
+                crate::telemetry::DET_COUNTERS
+            );
+            // The legacy wire words and the registry plane are two views
+            // of the same counters — they must agree.
+            let wire = crate::telemetry::Counter::WireBytes as usize;
+            let dense = crate::telemetry::Counter::WireDenseBytes as usize;
+            anyhow::ensure!(
+                self.telemetry[wire] == self.wire_bytes
+                    && self.telemetry[dense] == self.wire_dense_bytes,
+                "wire counters ({}, {}) disagree with the telemetry plane ({}, {})",
+                self.wire_bytes,
+                self.wire_dense_bytes,
+                self.telemetry[wire],
+                self.telemetry[dense]
             );
         }
         Ok(())
@@ -468,7 +495,11 @@ pub fn save(dir: &Path, state: &TrainState, opts: SaveOptions) -> Result<SaveRep
         state.rng_spare.unwrap_or(0.0).to_bits() as u64,
     ];
     let builder = [state.builder_round, state.builder_cursor];
-    let counters = [state.wire_bytes, state.wire_dense_bytes];
+    // "counters" layout: the two legacy wire words, then (when the state
+    // carries a telemetry plane) the full deterministic counter vector —
+    // loaders accept both widths, so old snapshots stay readable.
+    let mut counters = vec![state.wire_bytes, state.wire_dense_bytes];
+    counters.extend_from_slice(&state.telemetry);
     let meta_sections: [(&str, SectionSrc<'_>); 5] = [
         ("flat", SectionSrc::F32(&state.flat)),
         ("mask", SectionSrc::U32(&state.full_lanes)),
@@ -588,8 +619,15 @@ pub fn load(dir: &Path) -> Result<TrainState> {
                     builder.len());
     let counters = meta.take("counters")?;
     let counters = counters.as_u64()?;
-    anyhow::ensure!(counters.len() == 2, "counters section holds {} words, expected 2",
-                    counters.len());
+    // Two accepted widths: legacy (wire words only) and current (wire
+    // words + the deterministic telemetry plane).
+    let full_width = 2 + crate::telemetry::DET_COUNTERS;
+    anyhow::ensure!(
+        counters.len() == 2 || counters.len() == full_width,
+        "counters section holds {} words, expected 2 (legacy) or {full_width}",
+        counters.len()
+    );
+    let telemetry = counters.get(2..).unwrap_or_default().to_vec();
 
     // Shards concatenate back into lane order; their ranges must tile
     // 0..K exactly. A barrier-elided snapshot has no shards: the moments
@@ -705,6 +743,7 @@ pub fn load(dir: &Path) -> Result<TrainState> {
         residuals,
         wire_bytes: counters[0],
         wire_dense_bytes: counters[1],
+        telemetry,
     };
     state.validate()?;
     Ok(state)
@@ -1024,14 +1063,34 @@ mod tests {
             },
             wire_bytes: rng.next_u64() >> 20,
             wire_dense_bytes: rng.next_u64() >> 20,
+            telemetry: Vec::new(),
         }
+    }
+
+    /// Populate the deterministic telemetry plane consistently with the
+    /// legacy wire words (validate() cross-checks them).
+    fn with_telemetry(mut st: TrainState, seed: u64) -> TrainState {
+        let mut rng = Prng::seed_from_u64(seed ^ 0x7e1e_7e1e);
+        st.telemetry = (0..crate::telemetry::DET_COUNTERS)
+            .map(|_| rng.next_u64() >> 20)
+            .collect();
+        st.telemetry[crate::telemetry::Counter::WireBytes as usize] = st.wire_bytes;
+        st.telemetry[crate::telemetry::Counter::WireDenseBytes as usize] =
+            st.wire_dense_bytes;
+        st
     }
 
     #[test]
     fn raw_roundtrip_is_bitwise() {
         for seed in 0..10u64 {
             let workers = 1 + (seed as usize % 5);
-            let st = state(seed, workers, seed % 2 == 0);
+            // Odd seeds carry the full deterministic telemetry plane so the
+            // widened counters section roundtrips; even seeds stay legacy
+            // (2-word) to keep that path covered.
+            let mut st = state(seed, workers, seed % 2 == 0);
+            if seed % 2 == 1 {
+                st = with_telemetry(st, seed);
+            }
             let dir = tmpdir(&format!("raw{seed}"));
             save(&dir, &st, SaveOptions::exact(MomentCodec::Raw, 64)).unwrap();
             let back = load(&dir).unwrap();
@@ -1056,6 +1115,7 @@ mod tests {
             );
             assert_eq!((back.wire_bytes, back.wire_dense_bytes),
                        (st.wire_bytes, st.wire_dense_bytes));
+            assert_eq!(back.telemetry, st.telemetry, "seed {seed}");
             assert_eq!(back.rho.to_bits(), st.rho.to_bits(), "seed {seed}");
             assert_eq!(back.layout, st.layout, "seed {seed}");
             std::fs::remove_dir_all(&dir).ok();

@@ -61,6 +61,8 @@ pub struct TrainConfig {
     /// Data-parallel engine settings (`[parallel]` section / `--workers`).
     /// `None` = legacy single-worker trainers.
     pub parallel: Option<ParallelCfg>,
+    /// Observability settings (`[telemetry]` section / `--trace-dir`).
+    pub telemetry: TelemetryCfg,
 }
 
 /// The `[checkpoint]` run-config section (the sharded v2 subsystem,
@@ -87,6 +89,34 @@ pub struct CheckpointCfg {
     /// Keep only the newest N snapshots (0 = keep all); pruned after
     /// each successful manifest commit, never the resume source.
     pub keep_last: usize,
+}
+
+/// The `[telemetry]` run-config section (the unified observability
+/// plane, `crate::telemetry`): where run traces are exported and how the
+/// span flight recorder behaves. Deterministic counters are always on —
+/// they are part of the engine's bookkeeping, not an opt-in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryCfg {
+    /// Trace output directory: at the end of a run the engine writes
+    /// `counters.json`, `phases.jsonl`, `spans.jsonl` and `metrics.jsonl`
+    /// there (`frugal trace <dir>` renders them). `None` = no export.
+    pub dir: Option<String>,
+    /// Flight-recorder ring capacity (span records kept; oldest evicted
+    /// first). Allocated once at startup.
+    pub ring_capacity: usize,
+    /// Record wall-clock phase spans. Off = the recorder never reads the
+    /// clock; counters and `counters.json` are unaffected.
+    pub spans: bool,
+}
+
+impl Default for TelemetryCfg {
+    fn default() -> Self {
+        TelemetryCfg {
+            dir: None,
+            ring_capacity: crate::telemetry::DEFAULT_RING_CAPACITY,
+            spans: true,
+        }
+    }
 }
 
 impl Default for CheckpointCfg {
@@ -125,6 +155,7 @@ impl Default for TrainConfig {
             log_path: None,
             checkpoint: CheckpointCfg::default(),
             parallel: None,
+            telemetry: TelemetryCfg::default(),
         }
     }
 }
@@ -155,12 +186,14 @@ impl TrainConfig {
         const SCHEDULE_KEYS: [&str; 7] = [
             "kind", "rho_start", "rho_end", "epochs", "step_every", "step_factor", "rho_min",
         ];
+        const TELEMETRY_KEYS: [&str; 3] = ["dir", "ring_capacity", "spans"];
         for section in &kv.sections {
             anyhow::ensure!(
                 section == "parallel" || section == "parallel.compress"
-                    || section == "checkpoint" || section == "schedule",
+                    || section == "checkpoint" || section == "schedule"
+                    || section == "telemetry",
                 "unknown config section '[{section}]' (known sections: [parallel], \
-                 [parallel.compress], [checkpoint], [schedule])"
+                 [parallel.compress], [checkpoint], [schedule], [telemetry])"
             );
         }
         for key in kv.entries.keys() {
@@ -182,11 +215,17 @@ impl TrainConfig {
                     "unknown key '{rest}' in [schedule] (known keys: {})",
                     SCHEDULE_KEYS.join(", ")
                 );
+            } else if let Some(rest) = key.strip_prefix("telemetry.") {
+                anyhow::ensure!(
+                    TELEMETRY_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [telemetry] (known keys: {})",
+                    TELEMETRY_KEYS.join(", ")
+                );
             } else if let Some((section, rest)) = key.split_once('.') {
                 anyhow::ensure!(
                     section == "parallel",
                     "unknown config section '[{section}]' (known sections: [parallel], \
-                     [parallel.compress], [checkpoint], [schedule])"
+                     [parallel.compress], [checkpoint], [schedule], [telemetry])"
                 );
                 anyhow::ensure!(
                     PARALLEL_KEYS.contains(&rest),
@@ -367,6 +406,19 @@ impl TrainConfig {
             }
             cfg.parallel = Some(p);
         }
+        if kv.has_section("telemetry") {
+            let mut t = TelemetryCfg::default();
+            if let Some(v) = kv.get("telemetry.dir") {
+                t.dir = Some(v.to_string());
+            }
+            if let Some(v) = kv.get_u64("telemetry.ring_capacity")? {
+                t.ring_capacity = v as usize;
+            }
+            if let Some(v) = kv.get_bool("telemetry.spans")? {
+                t.spans = v;
+            }
+            cfg.telemetry = t;
+        }
         let cycle = kv.get_u64("schedule_cycle")?.unwrap_or(10_000);
         let total = kv.get_u64("schedule_total")?.unwrap_or(cfg.steps);
         let warmup = kv.get_u64("schedule_warmup")?.unwrap_or(total / 10);
@@ -457,6 +509,14 @@ impl TrainConfig {
             let _ = writeln!(out, "block = {}", self.checkpoint.block);
             let _ = writeln!(out, "background = {}", self.checkpoint.background);
             let _ = writeln!(out, "keep_last = {}", self.checkpoint.keep_last);
+        }
+        if self.telemetry != TelemetryCfg::default() {
+            let _ = writeln!(out, "\n[telemetry]");
+            if let Some(d) = &self.telemetry.dir {
+                let _ = writeln!(out, "dir = \"{d}\"");
+            }
+            let _ = writeln!(out, "ring_capacity = {}", self.telemetry.ring_capacity);
+            let _ = writeln!(out, "spans = {}", self.telemetry.spans);
         }
         if let Some(p) = &self.parallel {
             let _ = writeln!(out, "\n[parallel]");
@@ -783,6 +843,35 @@ mod tests {
         // And a kind-less section with a non-constant key is caught too.
         let err = TrainConfig::from_toml("[schedule]\nrho_end = 0.1\n").unwrap_err();
         assert!(format!("{err}").contains("does not apply to kind \"constant\""), "{err}");
+    }
+
+    #[test]
+    fn telemetry_section_roundtrips_and_is_strict() {
+        let mut cfg = TrainConfig::default();
+        cfg.telemetry = TelemetryCfg {
+            dir: Some("traces/run1".into()),
+            ring_capacity: 4096,
+            spans: false,
+        };
+        let text = cfg.to_toml();
+        assert!(text.contains("[telemetry]"), "{text}");
+        let back = TrainConfig::from_toml(&text).unwrap();
+        assert_eq!(back.telemetry, cfg.telemetry);
+        // Defaults: no section emitted, defaults parsed back.
+        let plain = TrainConfig::default().to_toml();
+        assert!(!plain.contains("[telemetry]"));
+        assert_eq!(
+            TrainConfig::from_toml(&plain).unwrap().telemetry,
+            TelemetryCfg::default()
+        );
+        // A bare section keeps the defaults (spans on, default ring).
+        let cfg = TrainConfig::from_toml("[telemetry]\ndir = \"t\"\n").unwrap();
+        assert_eq!(cfg.telemetry.dir.as_deref(), Some("t"));
+        assert_eq!(cfg.telemetry.ring_capacity, crate::telemetry::DEFAULT_RING_CAPACITY);
+        assert!(cfg.telemetry.spans);
+        // Typo'd keys are rejected, not silently swallowed.
+        let err = TrainConfig::from_toml("[telemetry]\nring = 64\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown key 'ring' in [telemetry]"), "{err}");
     }
 
     #[test]

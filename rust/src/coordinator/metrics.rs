@@ -18,24 +18,37 @@ pub struct Metrics {
     pub ema_beta: f64,
     ema: Option<f64>,
     records: Vec<StepRecord>,
-    start: Instant,
+    /// Throughput clock. `None` until training actually starts: the
+    /// old `Instant::now()` at construction folded setup time (model
+    /// init, corpus build) into every `tokens_per_s` record, deflating
+    /// the early readings.
+    start: Option<Instant>,
     tokens_seen: u64,
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Metrics { ema_beta: 0.98, ema: None, records: Vec::new(), start: Instant::now(),
-                  tokens_seen: 0 }
+        Metrics { ema_beta: 0.98, ema: None, records: Vec::new(), start: None, tokens_seen: 0 }
+    }
+
+    /// Start the throughput clock (idempotent). Trainers call this at
+    /// the top of the first step so `tokens_per_s` measures training
+    /// time only; a bare `record` with no prior call starts it then.
+    pub fn start_clock(&mut self) {
+        if self.start.is_none() {
+            self.start = Some(Instant::now());
+        }
     }
 
     pub fn record(&mut self, step: u64, loss: f32, lr: f64, tokens: u64) {
+        self.start_clock();
         self.tokens_seen += tokens;
         let ema = match self.ema {
             Some(e) => self.ema_beta * e + (1.0 - self.ema_beta) * loss as f64,
             None => loss as f64,
         };
         self.ema = Some(ema);
-        let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
+        let elapsed = self.start.expect("clock started above").elapsed().as_secs_f64().max(1e-9);
         self.records.push(StepRecord {
             step,
             loss,
@@ -136,10 +149,39 @@ mod tests {
     fn jsonl_roundtrip() {
         let mut m = Metrics::new();
         m.record(1, 2.5, 1e-4, 512);
-        let dir = std::env::temp_dir().join("frugal_metrics_test.jsonl");
+        // Unique path per process + instance: the old fixed name raced
+        // when several `cargo test` binaries/processes ran concurrently.
+        let dir = std::env::temp_dir().join(format!(
+            "frugal_metrics_test_{}_{:x}.jsonl",
+            std::process::id(),
+            &m as *const _ as usize
+        ));
         m.write_jsonl(&dir).unwrap();
         let text = std::fs::read_to_string(&dir).unwrap();
         assert!(text.contains("\"loss\":2.5"));
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn tokens_per_s_excludes_setup_time() {
+        // Regression: with `start` pinned at construction, 80 ms of
+        // "setup" between new() and the first record would deflate the
+        // measured rate by orders of magnitude. The clock must start at
+        // `start_clock()` / the first `record()`, not at construction.
+        let mut m = Metrics::new();
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        m.start_clock();
+        m.record(1, 1.0, 1e-3, 1_000_000);
+        let rate = m.last().unwrap().tokens_per_s;
+        // Elapsed since start_clock is far below 40 ms here; the buggy
+        // clock would cap the rate at 1e6 / 0.08 = 1.25e7.
+        assert!(
+            rate > 1_000_000.0 / 0.04,
+            "tokens_per_s {rate} still includes pre-training setup time"
+        );
+        // start_clock is idempotent: a second call must not reset it.
+        let t0 = m.start;
+        m.start_clock();
+        assert_eq!(m.start, t0);
     }
 }

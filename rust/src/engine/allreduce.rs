@@ -126,6 +126,16 @@ impl<T> ReduceTree<T> {
     }
 }
 
+/// Interior combines a complete reduction of `n` leaves performs:
+/// always `n − 1`, independent of tree shape (every combine merges two
+/// subtrees into one, so `n` subtrees take exactly `n − 1` merges to
+/// become the root). This is why the engine's `combine_calls` telemetry
+/// counter sits in the **deterministic** plane: per step it advances by
+/// `expected_combines(grad_accum)` at any worker count.
+pub fn expected_combines(n: usize) -> u64 {
+    n.saturating_sub(1) as u64
+}
+
 impl ReduceTree<Vec<f32>> {
     /// [`ReduceTree::push_with`] specialized to elementwise fp32 addition
     /// — the uncompressed gradient tree.
@@ -260,6 +270,23 @@ mod tests {
                 }
             }
             assert_eq!(got.expect("incomplete"), want, "order {order:?}");
+        }
+    }
+
+    #[test]
+    fn combine_count_is_leaves_minus_one_for_any_shape() {
+        for n in 1..=17 {
+            let mut combines = 0u64;
+            let mut tree = ReduceTree::new(n);
+            let mut root = None;
+            for i in 0..n {
+                root = tree.push_with(i, vec![1.0f32], &mut |a, b| {
+                    combines += 1;
+                    add_assign_vec(a, b)
+                });
+            }
+            assert_eq!(root.expect("incomplete"), vec![n as f32]);
+            assert_eq!(combines, expected_combines(n), "n={n}");
         }
     }
 

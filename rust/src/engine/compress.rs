@@ -478,6 +478,15 @@ pub struct WireStats {
     pub messages: u64,
     /// What the same messages would have cost at raw fp32.
     pub dense_bytes: u64,
+    /// Leaf sends alone (= micro-batches reduced).
+    pub leaves: u64,
+    /// Interior combine outputs alone (= `messages - leaves`).
+    pub combines: u64,
+    /// Encoded bytes attributable to the state-full lane group
+    /// (split-layout messages only; dense messages carry no groups).
+    pub full_bytes: u64,
+    /// Encoded bytes attributable to the state-free lane group.
+    pub free_bytes: u64,
 }
 
 /// The per-round compression plan: lane groups (from the round's subspace
@@ -708,6 +717,17 @@ impl CompressPlan {
         }
     }
 
+    /// Per-lane-group wire bytes of `enc`: `Some((full, free))` for
+    /// split-layout messages, `None` for dense ones (a dense message has
+    /// no group structure on the wire). The telemetry registry uses this
+    /// for the per-codec/lane-group byte counters.
+    pub fn wire_bytes_by_group(&self, enc: &EncodedGrad) -> Option<(usize, usize)> {
+        match enc {
+            EncodedGrad::Dense(_) => None,
+            EncodedGrad::Split { full, free } => Some((full.wire_bytes(), free.wire_bytes())),
+        }
+    }
+
     /// True when a worker-produced leaf message matches this plan (shape
     /// validation at the collector).
     pub fn leaf_matches(&self, enc: &EncodedGrad) -> bool {
@@ -739,6 +759,26 @@ mod tests {
         let full: Vec<u32> = (0..flat as u32).filter(|l| l % 3 == 0).collect();
         let free: Vec<u32> = (0..flat as u32).filter(|l| l % 3 != 0).collect();
         CompressPlan::new(CompressCfg { mode, block }, full, free, padded)
+    }
+
+    #[test]
+    fn wire_bytes_by_group_partitions_the_total() {
+        let p = plan(CompressMode::Split, 16, 96, 128);
+        let grad = {
+            let mut g = randvec(96, 3);
+            g.resize(128, 0.0);
+            g
+        };
+        let mut residual = vec![0.0f32; p.residual_len()];
+        let enc = p.encode_leaf(grad.clone(), Some(&mut residual));
+        let (fb, rb) = p.wire_bytes_by_group(&enc).unwrap();
+        assert!(fb > 0 && rb > 0);
+        assert_eq!(fb + rb, p.wire_bytes(&enc), "group bytes must partition the message");
+        // Dense messages have no group structure on the wire.
+        let pn = plan(CompressMode::None, 16, 96, 128);
+        let dense = pn.encode_leaf(grad, None);
+        assert!(pn.wire_bytes_by_group(&dense).is_none());
+        assert_eq!(pn.wire_bytes(&dense), 4 * 128);
     }
 
     #[test]

@@ -78,13 +78,14 @@ pub use refmodel::{RefLm, RefLmCfg};
 pub use shard::{ResidualBank, ShardPlan};
 
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::clip::clip_global_norm;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::subspace::{lane_partition, MaskBuilder};
 use crate::coordinator::LrSchedule;
 use crate::optim::adamw::{AdamCfg, AdamState};
+use crate::telemetry::{Counter, Phase, Telemetry};
 use crate::train::SubspaceClock;
 use crate::Result;
 
@@ -278,12 +279,31 @@ pub struct Engine {
     /// Per-worker post-update parameter values, shard order (persistent).
     full_out: Vec<Vec<f32>>,
     free_out: Vec<Vec<f32>>,
-    wire_bytes: u64,
-    wire_dense_bytes: u64,
+    /// The unified telemetry registry (see [`crate::telemetry`]): the
+    /// single owner of every counter the engine, round reports, and
+    /// checkpoints read. All deterministic increments happen on this
+    /// (the collector/training) thread.
+    tel: Telemetry,
+    /// Registry values at the current round's start — round reports are
+    /// deltas against these, never separately-maintained sums.
+    round_base: RoundBase,
+    /// Pool grabs restored from a snapshot (this process's pool starts
+    /// its own count at zero; the registry reports the continued total).
+    pool_grabs_base: u64,
     clock: SubspaceClock,
     round: u64,
     reports: Vec<RoundReport>,
     pub metrics: Metrics,
+}
+
+/// Deterministic-counter snapshot taken at a round boundary (the base
+/// the in-progress [`RoundReport`] subtracts from the registry).
+#[derive(Clone, Copy, Debug, Default)]
+struct RoundBase {
+    wire_bytes: u64,
+    wire_dense_bytes: u64,
+    micro_batches: u64,
+    combine_calls: u64,
 }
 
 impl Engine {
@@ -346,8 +366,9 @@ impl Engine {
             workers_ctx,
             full_out: (0..workers).map(|_| Vec::new()).collect(),
             free_out: (0..workers).map(|_| Vec::new()).collect(),
-            wire_bytes: 0,
-            wire_dense_bytes: 0,
+            tel: Telemetry::new(),
+            round_base: RoundBase::default(),
+            pool_grabs_base: 0,
             clock,
             round: 0,
             reports: Vec::new(),
@@ -408,14 +429,26 @@ impl Engine {
         self.pool.stats()
     }
 
-    /// Bytes shipped over reduce-tree edges so far (encoded).
+    /// The unified telemetry registry (counters + flight recorder).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    /// Mutable registry access — for the orchestrator's checkpoint
+    /// spans/counters and for applying `[telemetry]` config at startup.
+    pub fn telemetry_mut(&mut self) -> &mut Telemetry {
+        &mut self.tel
+    }
+
+    /// Bytes shipped over reduce-tree edges so far (encoded) — a read
+    /// of the one registry counter every other surface also reads.
     pub fn wire_bytes_total(&self) -> u64 {
-        self.wire_bytes
+        self.tel.get(Counter::WireBytes)
     }
 
     /// What the same reduce-tree traffic would have cost at raw fp32.
     pub fn wire_dense_bytes_total(&self) -> u64 {
-        self.wire_dense_bytes
+        self.tel.get(Counter::WireDenseBytes)
     }
 
     /// Start a new round: re-select the subspace at the clock's mask
@@ -451,12 +484,30 @@ impl Engine {
         // reset on the same boundary.
         self.states = (0..workers).map(|w| AdamState::new(self.plan.shard_len(w))).collect();
         self.residuals.reset(workers, self.cfg.parallel.grad_accum, self.cplan.residual_len());
+        self.tel.add(Counter::Reprovisions, 1);
+        if self.cplan.residual_len() > 0 {
+            // An EF reset only exists where EF transport state exists —
+            // a pure function of the codec mode, so still deterministic.
+            self.tel.add(Counter::EfResets, 1);
+        }
+        self.sync_round_base();
         self.reports.push(RoundReport::new(
             self.round,
             self.clock.step(),
             &self.plan,
             self.mask_builder.rho,
         ));
+    }
+
+    /// Snapshot the registry counters the in-progress round report is a
+    /// delta against (round boundaries and restores).
+    fn sync_round_base(&mut self) {
+        self.round_base = RoundBase {
+            wire_bytes: self.tel.get(Counter::WireBytes),
+            wire_dense_bytes: self.tel.get(Counter::WireDenseBytes),
+            micro_batches: self.tel.get(Counter::MicroBatches),
+            combine_calls: self.tel.get(Counter::CombineCalls),
+        };
     }
 
     /// One data-parallel optimizer step. `batch_fn` fills a reusable
@@ -468,6 +519,9 @@ impl Engine {
     where
         F: Fn(u64, &mut Vec<i32>) + Sync,
     {
+        // The throughput clock starts at the first step, not at engine
+        // construction, so setup time never deflates tokens/s.
+        self.metrics.start_clock();
         let (step, reselect) = self.clock.tick();
         if reselect {
             self.begin_round();
@@ -475,6 +529,25 @@ impl Engine {
         let m = self.cfg.parallel.grad_accum;
         let nw = self.cfg.parallel.workers;
         let padded = self.mask_builder.layout().padded_size;
+
+        // Wall-clock spans (the non-deterministic telemetry plane):
+        // phase durations accumulate into locals and are recorded once
+        // per step — no heap traffic, and no clock reads when disabled.
+        let spans_on = self.tel.recorder.enabled();
+        let mark = |on: bool| on.then(Instant::now);
+        let lap = |acc: &mut u64, from: Option<Instant>| {
+            from.map(|t0| {
+                let now = Instant::now();
+                *acc += now.duration_since(t0).as_nanos() as u64;
+                now
+            })
+        };
+        let mut ns_fill = 0u64;
+        let mut ns_grad = 0u64;
+        let mut ns_encode = 0u64;
+        let mut ns_reduce = 0u64;
+        let mut ns_decode = 0u64;
+        let mut ns_kernel = 0u64;
 
         // ---- gradient phase: compute M micro-batch grads, encode each
         // as a leaf message (into pooled storage), tree-reduce
@@ -510,6 +583,11 @@ impl Engine {
             let banks = self.residuals.per_worker_mut();
             assert_eq!(banks.len(), nw, "residual bank not sized to the worker count");
             let (tx, rx) = mpsc::channel::<MicroResult>();
+            // Threaded mode: fill/grad/encode run on worker threads and
+            // are not separable from the collector, so `reduce` covers
+            // the whole collect (worker wait included) — see
+            // [`crate::telemetry::Phase`].
+            let t_reduce = mark(spans_on);
             let timeouts = std::thread::scope(|scope| {
                 for (w, ((src, ctx), wres)) in
                     srcs.iter_mut().zip(ctxs.iter_mut()).zip(banks.iter_mut()).enumerate()
@@ -558,8 +636,11 @@ impl Engine {
                 collect_micro_grads(cplan, acc, pool, scratch, stage, &rx, m, timeout_ms,
                                     pipeline)
             })?;
+            lap(&mut ns_reduce, t_reduce);
+            let t_decode = mark(spans_on);
             let (loss_sum, tokens_total, wire) =
                 acc.finish_into(cplan, pool, scratch, &mut self.grad_buf)?;
+            lap(&mut ns_decode, t_decode);
             (loss_sum, tokens_total, timeouts, wire)
         } else {
             // Logical workers: compute and feed the tree one micro-batch
@@ -570,10 +651,13 @@ impl Engine {
                 let ctx = &mut self.workers_ctx[w];
                 ctx.grad.resize(padded, 0.0);
                 ctx.tokens.clear();
+                let mut t = mark(spans_on);
                 batch_fn(step * m as u64 + j as u64, &mut ctx.tokens);
+                t = lap(&mut ns_fill, t);
                 let n_tok = ctx.tokens.len();
                 let src = self.sources.get_mut(w);
                 let loss = src.loss_and_grad_into(&self.flat, &ctx.tokens, &mut ctx.grad)?;
+                t = lap(&mut ns_grad, t);
                 let mut msg = self.pool.get_encoded();
                 self.cplan.encode_leaf_into(
                     &ctx.grad,
@@ -581,6 +665,7 @@ impl Engine {
                     &mut ctx.gather,
                     &mut msg,
                 );
+                t = lap(&mut ns_encode, t);
                 self.acc.push(
                     &self.cplan,
                     &mut self.pool,
@@ -590,17 +675,35 @@ impl Engine {
                     loss,
                     msg,
                 )?;
+                lap(&mut ns_reduce, t);
             }
+            let t_decode = mark(spans_on);
             let (loss_sum, tokens_total, wire) = self.acc.finish_into(
                 &self.cplan,
                 &mut self.pool,
                 &mut self.combine_scratch,
                 &mut self.grad_buf,
             )?;
+            lap(&mut ns_decode, t_decode);
             (loss_sum, tokens_total, 0, wire)
         };
-        self.wire_bytes += wire.bytes;
-        self.wire_dense_bytes += wire.dense_bytes;
+        // ---- deterministic-counter accrual: everything the reduce
+        // metered this step lands in the registry here, on the training
+        // thread — the single `+=` site all surfaces read from.
+        self.tel.add(Counter::Steps, 1);
+        self.tel.add(Counter::MicroBatches, wire.leaves);
+        self.tel.add(Counter::WireBytes, wire.bytes);
+        self.tel.add(Counter::WireDenseBytes, wire.dense_bytes);
+        self.tel.add(Counter::WireMessages, wire.messages);
+        self.tel.add(Counter::WireFullBytes, wire.full_bytes);
+        self.tel.add(Counter::WireFreeBytes, wire.free_bytes);
+        self.tel.add(Counter::EncodeLeafCalls, wire.leaves);
+        self.tel.add(Counter::CombineCalls, wire.combines);
+        self.tel.add(Counter::DecodeRootCalls, 1);
+        self.tel.add(Counter::StragglerTimeouts, timeouts);
+        let pool_stats = self.pool.stats();
+        self.tel.set(Counter::PoolGrabs, self.pool_grabs_base + pool_stats.grabs);
+        self.tel.set(Counter::PoolMisses, pool_stats.misses);
 
         // Mean over the global batch — the same scale at any worker count.
         let inv = 1.0 / m as f32;
@@ -618,6 +721,7 @@ impl Engine {
         let lr = self.cfg.schedule.lr(self.cfg.peak_lr, step) as f32;
         let lr_free = lr * self.cfg.lr_free_mult as f32;
         let adam = self.cfg.adam;
+        let t_kernel = mark(spans_on);
         {
             let plan = &self.plan;
             let free_plan = &self.free_plan;
@@ -687,13 +791,39 @@ impl Engine {
                 self.flat[lane as usize] = self.free_out[w][k];
             }
         }
+        lap(&mut ns_kernel, t_kernel);
+
+        if spans_on {
+            let s = step + 1;
+            for (phase, ns) in [
+                (Phase::BatchFill, ns_fill),
+                (Phase::Grad, ns_grad),
+                (Phase::Encode, ns_encode),
+                (Phase::Reduce, ns_reduce),
+                (Phase::Decode, ns_decode),
+                (Phase::StepKernel, ns_kernel),
+            ] {
+                // Worker-side phases stay zero in threaded mode — skip
+                // rather than pollute the histograms with empty spans.
+                if ns > 0 {
+                    self.tel.record_ns(phase, s, ns);
+                }
+            }
+        }
 
         if let Some(report) = self.reports.last_mut() {
             report.steps += 1;
             report.loss_sum += loss as f64;
             report.straggler_timeouts += timeouts;
-            report.wire_bytes += wire.bytes;
-            report.wire_dense_bytes += wire.dense_bytes;
+            // Wire traffic (and the enrichment counts) are registry
+            // deltas against the round base — not a second counter.
+            report.wire_bytes = self.tel.get(Counter::WireBytes) - self.round_base.wire_bytes;
+            report.wire_dense_bytes =
+                self.tel.get(Counter::WireDenseBytes) - self.round_base.wire_dense_bytes;
+            report.micro_batches =
+                self.tel.get(Counter::MicroBatches) - self.round_base.micro_batches;
+            report.combine_calls =
+                self.tel.get(Counter::CombineCalls) - self.round_base.combine_calls;
         }
         self.metrics.record(step + 1, loss, lr as f64, tokens_total as u64);
         Ok(loss)
@@ -772,8 +902,12 @@ impl Engine {
             dst.clear();
             dst.extend_from_slice(src);
         }
-        st.wire_bytes = self.wire_bytes;
-        st.wire_dense_bytes = self.wire_dense_bytes;
+        // Both wire fields and the full deterministic-counter vector are
+        // registry reads — the surfaces cannot drift apart.
+        st.wire_bytes = self.tel.get(Counter::WireBytes);
+        st.wire_dense_bytes = self.tel.get(Counter::WireDenseBytes);
+        st.telemetry.clear();
+        st.telemetry.extend_from_slice(&self.tel.deterministic_words());
         st.validate()
     }
 
@@ -924,8 +1058,16 @@ impl Engine {
             }
         }
 
-        self.wire_bytes = st.wire_bytes;
-        self.wire_dense_bytes = st.wire_dense_bytes;
+        // Resume the deterministic counters where the snapshot left off
+        // (continue, not restart). Legacy snapshots carry only the two
+        // wire words; the rest stay zero.
+        self.tel.load_deterministic(&st.telemetry);
+        if st.telemetry.is_empty() {
+            self.tel.set(Counter::WireBytes, st.wire_bytes);
+            self.tel.set(Counter::WireDenseBytes, st.wire_dense_bytes);
+        }
+        self.pool_grabs_base = self.tel.get(Counter::PoolGrabs);
+        self.sync_round_base();
         // Open a report for the remainder of the interrupted round (its
         // `first_step`/occupancy are informational; steps completed
         // before the kill are not re-counted).
@@ -1020,9 +1162,16 @@ impl MicroAccumulator {
         let dense = 4 * plan.padded_size() as u64;
         self.wire.bytes += plan.wire_bytes(&enc) as u64;
         self.wire.messages += 1;
+        self.wire.leaves += 1;
         self.wire.dense_bytes += dense;
+        if let Some((fb, rb)) = plan.wire_bytes_by_group(&enc) {
+            self.wire.full_bytes += fb as u64;
+            self.wire.free_bytes += rb as u64;
+        }
         let mut up_bytes = 0u64;
         let mut up_msgs = 0u64;
+        let mut up_full = 0u64;
+        let mut up_free = 0u64;
         let root = self.gtree.push_with(j, enc, &mut |mut a, b| {
             // In-place combine: `a` becomes the parent, `b`'s storage is
             // recycled. Bit-identical to the consuming combine.
@@ -1030,6 +1179,10 @@ impl MicroAccumulator {
             pool.put_encoded(b);
             up_bytes += plan.wire_bytes(&a) as u64;
             up_msgs += 1;
+            if let Some((fb, rb)) = plan.wire_bytes_by_group(&a) {
+                up_full += fb as u64;
+                up_free += rb as u64;
+            }
             a
         });
         if let Some(root) = root {
@@ -1037,7 +1190,10 @@ impl MicroAccumulator {
         }
         self.wire.bytes += up_bytes;
         self.wire.messages += up_msgs;
+        self.wire.combines += up_msgs;
         self.wire.dense_bytes += up_msgs * dense;
+        self.wire.full_bytes += up_full;
+        self.wire.free_bytes += up_free;
         if let Some(root) = self.ltree.push_with(j, loss, &mut |a, b| a + b) {
             self.loss_root = Some(root);
         }

@@ -13,6 +13,7 @@
 use super::shard::ShardPlan;
 use super::Engine;
 use crate::ckpt::{self, MomentCodec, PruneSpec, SaveOptions, SnapshotWriter, TrainState};
+use crate::telemetry::{Counter, Phase};
 use crate::Result;
 
 /// Summary of one engine round (one subspace period).
@@ -36,11 +37,16 @@ pub struct RoundReport {
     /// Receive-timeout events counted while waiting on workers
     /// (straggler detection; informational — nothing is dropped).
     pub straggler_timeouts: u64,
-    /// Bytes shipped over reduce-tree edges this round (encoded — see
-    /// `engine::compress`).
+    /// Bytes shipped over reduce-tree edges this round (encoded — a
+    /// telemetry-registry delta against the round's start, not a
+    /// separately-maintained sum; see `crate::telemetry`).
     pub wire_bytes: u64,
     /// What the same tree traffic would have cost at raw fp32.
     pub wire_dense_bytes: u64,
+    /// Micro-batch gradients reduced this round (registry delta).
+    pub micro_batches: u64,
+    /// Interior tree combines performed this round (registry delta).
+    pub combine_calls: u64,
 }
 
 impl RoundReport {
@@ -56,6 +62,8 @@ impl RoundReport {
             straggler_timeouts: 0,
             wire_bytes: 0,
             wire_dense_bytes: 0,
+            micro_batches: 0,
+            combine_calls: 0,
         }
     }
 
@@ -170,6 +178,10 @@ impl Orchestrator {
             // take_reports (not reports): a second run() segment on the
             // same orchestrator must not re-print earlier commits.
             for report in writer.take_reports() {
+                let tel = self.engine.telemetry_mut();
+                tel.add(Counter::SnapshotBytes, report.bytes);
+                tel.add(Counter::SnapshotFiles, report.files as u64);
+                tel.add(Counter::SnapshotsCommitted, 1);
                 if self.verbose {
                     println!(
                         "checkpoint: {} committed ({} files, {} bytes)",
@@ -207,7 +219,9 @@ impl Orchestrator {
         if policy.background {
             let writer = self.writer.get_or_insert_with(SnapshotWriter::new);
             writer.submit(dir, state, opts, prune)?;
-            self.save_handoff_ns += t0.elapsed().as_nanos() as u64;
+            let handoff_ns = t0.elapsed().as_nanos() as u64;
+            self.save_handoff_ns += handoff_ns;
+            self.engine.telemetry_mut().record_ns(Phase::CkptHandoff, step, handoff_ns);
             if self.verbose {
                 println!("checkpoint: step {step} handed to the background writer");
             }
@@ -217,7 +231,13 @@ impl Orchestrator {
                 ckpt::prune_snapshots(&p.root, p.keep_last, p.protect.as_deref())?;
             }
             self.capture_buf = Some(state);
-            self.save_handoff_ns += t0.elapsed().as_nanos() as u64;
+            let handoff_ns = t0.elapsed().as_nanos() as u64;
+            self.save_handoff_ns += handoff_ns;
+            let tel = self.engine.telemetry_mut();
+            tel.record_ns(Phase::CkptHandoff, step, handoff_ns);
+            tel.add(Counter::SnapshotBytes, report.bytes);
+            tel.add(Counter::SnapshotFiles, report.files as u64);
+            tel.add(Counter::SnapshotsCommitted, 1);
             if self.verbose {
                 println!(
                     "checkpoint: step {step} -> {} ({} files, {} bytes, moments {} via {})",

@@ -43,6 +43,15 @@ pub struct BufferPool {
 /// total requests, `misses` is how many had to allocate a fresh (empty)
 /// message because the pool was dry. Steady state is `misses` constant
 /// while `grabs` keeps growing.
+///
+/// Telemetry plane split (see `crate::telemetry`): `grabs` is a pure
+/// function of the work done — one per micro-batch slot per step — so
+/// the engine mirrors it into the **deterministic** counter plane
+/// (`PoolGrabs`). `misses` depends on how draws interleave with
+/// recycling (threaded workers pre-draw a whole step's ring; logical
+/// workers draw one at a time), which differs across worker counts and
+/// execution paths, so it is mirrored as a **process**-plane counter
+/// (`PoolMisses`) and excluded from bit-identity manifests.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
     pub grabs: u64,

@@ -37,6 +37,11 @@
 //!   `MaskBuilder` at every subspace re-selection so the state-full
 //!   lane count shrinks over training while the bitwise determinism
 //!   invariants keep holding.
+//! - [`telemetry`]: the unified observability plane — a deterministic
+//!   counter registry (bit-identical across worker counts and resumes,
+//!   exported as a canonical JSON manifest CI diffs) plus a
+//!   fixed-capacity flight recorder for per-step phase timings, both
+//!   threaded through the engine without steady-state allocations.
 //! - [`toy`]: closed-form toy problems for the theory experiments.
 
 pub mod ckpt;
@@ -48,6 +53,7 @@ pub mod linalg;
 pub mod optim;
 pub mod runtime;
 pub mod schedule;
+pub mod telemetry;
 pub mod tensor;
 pub mod toy;
 pub mod train;

@@ -6,6 +6,8 @@
 //!               (`--workers N` switches to the data-parallel engine;
 //!               `--ckpt-dir`/`--save-every`/`--resume` snapshot/restore)
 //!   ckpt      — inspect a sharded snapshot (manifest + CRC verify)
+//!   trace     — render an exported run trace (counters + phase spans);
+//!               two directories diff their counter manifests
 //!   memory    — print the paper's Table 2 memory columns (analytic, §C)
 //!   toy       — Figure 3 toy quadratic (state re-projection)
 //!   angles    — Figure 2 principal-angle analysis
@@ -47,7 +49,9 @@ USAGE:
                   [--no-pipeline]
                   [--ckpt-dir DIR] [--save-every N] [--ckpt-codec q8|raw]
                   [--ckpt-sync] [--keep-last N] [--resume DIR]
+                  [--trace-dir DIR]
   frugal ckpt     inspect DIR
+  frugal trace    DIR [DIR2]
   frugal memory   [--model SCALE] [--rho-schedule SPEC] [--epochs N]
   frugal toy      [--steps N] [--rank R] [--update-freq T]
   frugal angles   [--artifacts DIR] [--model M] [--steps N]
@@ -84,6 +88,14 @@ the provably-discarded Adam/EF sections (bitwise-neutral, much smaller);
 --keep-last N prunes all but the newest N snapshots (never the resume
 source). `frugal ckpt inspect DIR` prints a snapshot's manifest and
 verifies every file's CRC.
+
+`--trace-dir DIR` exports the run's telemetry (also the `[telemetry]`
+config section): counters.json (the canonical counter manifest —
+deterministic plane bit-identical across worker counts and resumes),
+phases.jsonl / spans.jsonl (the wall-clock flight recorder) and
+metrics.jsonl (the step log). `frugal trace DIR` renders the phase
+breakdown (p50/p99) and counters; `frugal trace DIR DIR2` additionally
+diffs the two counter manifests plane by plane.
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -255,13 +267,18 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             if let Some(n) = args.get_u64("keep-last")? {
                 cfg.checkpoint.keep_last = n as usize;
             }
+            if let Some(d) = args.get("trace-dir") {
+                cfg.telemetry.dir = Some(d.to_string());
+            }
             let resume = args.get("resume").map(|s| s.to_string());
             // --backend alone also opts into the engine (it has no
             // meaning on the legacy paths and must not be ignored) — as
-            // do the checkpoint/resume flags and a [checkpoint] section.
+            // do the checkpoint/resume flags, a [checkpoint] section,
+            // and a trace export (only the engine carries telemetry).
             if args.get("backend").is_some()
                 || resume.is_some()
                 || cfg.checkpoint.dir.is_some()
+                || cfg.telemetry.dir.is_some()
             {
                 cfg.parallel.get_or_insert_with(ParallelCfg::default);
             }
@@ -295,6 +312,12 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                 "unknown ckpt action '{action}' (expected: inspect)"
             );
             ckpt_inspect(Path::new(dir))
+        }
+        "trace" => {
+            let Some(dir) = rest.first() else {
+                anyhow::bail!("usage: frugal trace DIR [DIR2]");
+            };
+            trace(Path::new(dir), rest.get(1).map(Path::new))
         }
         "memory" => {
             let args = Args::parse(rest, &[])?;
@@ -623,6 +646,10 @@ fn pretrain_parallel(
     let engine = Engine::new(mask_builder, engine_cfg, sources, init)?;
     let mut orch = Orchestrator::new(engine);
     orch.verbose = true;
+    orch.engine
+        .telemetry_mut()
+        .recorder
+        .configure(cfg.telemetry.ring_capacity, cfg.telemetry.spans);
     if let Some(dir) = &cfg.checkpoint.dir {
         let mut policy = SavePolicy::new(
             PathBuf::from(dir),
@@ -702,6 +729,121 @@ fn pretrain_parallel(
     );
     if let Some(path) = &cfg.log_path {
         orch.engine.metrics.write_jsonl(Path::new(path))?;
+    }
+    if let Some(dir) = &cfg.telemetry.dir {
+        let dir = Path::new(dir);
+        orch.engine.telemetry().write_run_dir(dir)?;
+        orch.engine.metrics.write_jsonl(&dir.join("metrics.jsonl"))?;
+        println!("trace: exported run telemetry to {} (frugal trace {})",
+                 dir.display(), dir.display());
+    }
+    Ok(())
+}
+
+/// `frugal trace DIR [DIR2]`: render an exported run trace — the phase
+/// breakdown (count/p50/p99/max from `phases.jsonl`) and the counter
+/// manifest (`counters.json`). With a second directory, diff the two
+/// manifests plane by plane instead of listing the first.
+fn trace(dir: &Path, other: Option<&Path>) -> frugal::Result<()> {
+    use frugal::util::json::Json;
+
+    let load = |dir: &Path| -> frugal::Result<Json> {
+        let path = dir.join("counters.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Json::parse(&text)
+    };
+    // Sorted (key, value) rows of one manifest plane.
+    let plane = |man: &Json, name: &str| -> frugal::Result<Vec<(String, u64)>> {
+        let mut rows: Vec<(String, u64)> = man
+            .field(name)?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_f64()? as u64)))
+            .collect::<frugal::Result<_>>()?;
+        rows.sort();
+        Ok(rows)
+    };
+
+    let man = load(dir)?;
+    println!("trace: {}", dir.display());
+
+    let phases_path = dir.join("phases.jsonl");
+    if let Ok(text) = std::fs::read_to_string(&phases_path) {
+        let ms = |ns: f64| ns / 1e6;
+        println!(
+            "  {:<14} {:>7} {:>12} {:>10} {:>10} {:>10}",
+            "phase", "count", "total_ms", "p50_ms", "p99_ms", "max_ms"
+        );
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let v = Json::parse(line)?;
+            let count = v.field("count")?.as_f64()?;
+            if count == 0.0 {
+                continue; // phase never observed (e.g. threaded path)
+            }
+            println!(
+                "  {:<14} {:>7} {:>12.2} {:>10.3} {:>10.3} {:>10.3}",
+                v.field("phase")?.as_str()?,
+                count,
+                ms(v.field("total_ns")?.as_f64()?),
+                ms(v.field("p50_ns")?.as_f64()?),
+                ms(v.field("p99_ns")?.as_f64()?),
+                ms(v.field("max_ns")?.as_f64()?)
+            );
+        }
+    } else {
+        println!("  (no phases.jsonl — spans disabled or trace incomplete)");
+    }
+
+    let Some(other_dir) = other else {
+        for plane_name in ["deterministic", "process"] {
+            println!("  [{plane_name}]");
+            for (k, v) in plane(&man, plane_name)? {
+                println!("    {k:<22} {v}");
+            }
+        }
+        return Ok(());
+    };
+
+    // Two run dirs: diff the counter manifests.
+    let other_man = load(other_dir)?;
+    println!("counter diff: {} vs {}", dir.display(), other_dir.display());
+    for plane_name in ["deterministic", "process"] {
+        let a = plane(&man, plane_name)?;
+        let b = plane(&other_man, plane_name)?;
+        if a == b {
+            println!("  [{plane_name}] identical ({} counters)", a.len());
+            continue;
+        }
+        println!(
+            "  [{plane_name}] {:<22} {:>14} {:>14} {:>15}",
+            "counter", "left", "right", "delta"
+        );
+        // Union of keys, sorted (a manifest from an older schema may
+        // lack counters the other has).
+        let mut keys: Vec<&String> = a.iter().chain(&b).map(|(k, _)| k).collect();
+        keys.sort();
+        keys.dedup();
+        for k in keys {
+            let va = a.iter().find(|(n, _)| n == k).map(|&(_, v)| v);
+            let vb = b.iter().find(|(n, _)| n == k).map(|&(_, v)| v);
+            if va == vb {
+                continue;
+            }
+            let fmt = |v: Option<u64>| v.map_or("-".to_string(), |v| v.to_string());
+            let delta = match (va, vb) {
+                (Some(x), Some(y)) => format!("{:+}", y as i128 - x as i128),
+                _ => "n/a".to_string(),
+            };
+            println!("  {:<24} {:<22} {:>14} {:>14} {:>15}", "", k, fmt(va), fmt(vb), delta);
+        }
+    }
+    // The headline check scripts care about: is the deterministic plane
+    // bit-identical between the two runs?
+    if plane(&man, "deterministic")? == plane(&other_man, "deterministic")? {
+        println!("deterministic plane: IDENTICAL");
+    } else {
+        println!("deterministic plane: DIVERGED");
     }
     Ok(())
 }

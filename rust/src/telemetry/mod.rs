@@ -1,0 +1,673 @@
+//! Unified telemetry: deterministic counters + wall-clock flight recorder.
+//!
+//! One [`Telemetry`] registry is threaded through the engine, the
+//! orchestrator, the reduce-tree metering, the buffer pool, and the
+//! checkpoint writer. It keeps two strictly separated planes:
+//!
+//! 1. **Deterministic counters** ([`Counter::deterministic`]): pure
+//!    functions of the training math — wire bytes per codec/lane-group,
+//!    encode/combine/decode invocation counts, pool grabs, mask-epoch
+//!    re-provision events, EF-residual resets, micro-batch counts. They
+//!    are bit-identical across `workers 1 ≡ N` and across
+//!    `resume ≡ continuous`, are captured into checkpoints so resumed
+//!    runs continue (not restart) their totals, and are exported as a
+//!    canonical sorted-key JSON manifest that CI diffs exactly.
+//! 2. **Process counters + wall-clock spans**: values that depend on the
+//!    execution strategy or on this process's lifetime — pool misses
+//!    (threaded vs logical paths interleave grab/recycle differently),
+//!    snapshot bytes (a resumed run does not re-write its predecessor's
+//!    snapshots), straggler timeouts — plus per-step phase timings in a
+//!    fixed-capacity ring-buffer [`FlightRecorder`] with power-of-two
+//!    histograms. Nothing in this plane may feed back into training
+//!    decisions that must replay deterministically.
+//!
+//! The steady-state allocation pin (the counting-allocator test) holds
+//! with telemetry enabled: counters are plain `u64` adds, span capture
+//! is two `Instant::now` calls writing into a preallocated ring, and
+//! the ring only (re)allocates when reconfigured at startup.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::util::json::escape;
+
+/// Every counter the registry tracks. The discriminant is the index
+/// into the backing array; deterministic-plane counters come first so
+/// the checkpointed word vector is a prefix-ordered slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    // ---- deterministic plane (persisted, identity-gated) ----
+    /// Optimizer steps completed.
+    Steps,
+    /// Micro-batch gradients pushed into the reduce tree (leaf messages).
+    MicroBatches,
+    /// Encoded bytes that crossed reduce-tree edges.
+    WireBytes,
+    /// What the same messages would have cost at raw fp32.
+    WireDenseBytes,
+    /// Tree messages: leaf sends plus interior combine outputs.
+    WireMessages,
+    /// Encoded bytes attributable to the state-full lane group
+    /// (split-layout messages only; dense messages have no groups).
+    WireFullBytes,
+    /// Encoded bytes attributable to the state-free lane group.
+    WireFreeBytes,
+    /// Leaf encode invocations (one per micro-batch message).
+    EncodeLeafCalls,
+    /// Interior decode-combine-reencode invocations.
+    CombineCalls,
+    /// Root decodes back to the padded flat gradient (one per step).
+    DecodeRootCalls,
+    /// Pooled message buffers drawn (`BufferPool` grabs; the draw
+    /// count is a pure function of `grad_accum`, so it is deterministic
+    /// even though *misses* are not).
+    PoolGrabs,
+    /// Mask-epoch re-provision events (subspace re-selection rounds).
+    Reprovisions,
+    /// EF-residual bank resets at round boundaries (0 when EF is off).
+    EfResets,
+    // ---- process plane (not persisted, not identity-gated) ----
+    /// Pool grabs that minted a fresh buffer (execution-strategy
+    /// dependent: threaded pre-draw vs logical interleaving).
+    PoolMisses,
+    /// Snapshot payload bytes written by this process.
+    SnapshotBytes,
+    /// Snapshot files written by this process.
+    SnapshotFiles,
+    /// Snapshots committed (manifest published) by this process.
+    SnapshotsCommitted,
+    /// Straggler micro-batches dropped after a collect timeout.
+    StragglerTimeouts,
+}
+
+/// Counters in the deterministic plane (array prefix).
+pub const DET_COUNTERS: usize = 13;
+/// Total registry width.
+pub const NUM_COUNTERS: usize = 18;
+
+impl Counter {
+    /// Every counter, in array order.
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::Steps,
+        Counter::MicroBatches,
+        Counter::WireBytes,
+        Counter::WireDenseBytes,
+        Counter::WireMessages,
+        Counter::WireFullBytes,
+        Counter::WireFreeBytes,
+        Counter::EncodeLeafCalls,
+        Counter::CombineCalls,
+        Counter::DecodeRootCalls,
+        Counter::PoolGrabs,
+        Counter::Reprovisions,
+        Counter::EfResets,
+        Counter::PoolMisses,
+        Counter::SnapshotBytes,
+        Counter::SnapshotFiles,
+        Counter::SnapshotsCommitted,
+        Counter::StragglerTimeouts,
+    ];
+
+    /// Canonical snake_case key (manifest JSON, trace rendering).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Steps => "steps",
+            Counter::MicroBatches => "micro_batches",
+            Counter::WireBytes => "wire_bytes",
+            Counter::WireDenseBytes => "wire_dense_bytes",
+            Counter::WireMessages => "wire_messages",
+            Counter::WireFullBytes => "wire_full_bytes",
+            Counter::WireFreeBytes => "wire_free_bytes",
+            Counter::EncodeLeafCalls => "encode_leaf_calls",
+            Counter::CombineCalls => "combine_calls",
+            Counter::DecodeRootCalls => "decode_root_calls",
+            Counter::PoolGrabs => "pool_grabs",
+            Counter::Reprovisions => "reprovisions",
+            Counter::EfResets => "ef_resets",
+            Counter::PoolMisses => "pool_misses",
+            Counter::SnapshotBytes => "snapshot_bytes",
+            Counter::SnapshotFiles => "snapshot_files",
+            Counter::SnapshotsCommitted => "snapshots_committed",
+            Counter::StragglerTimeouts => "straggler_timeouts",
+        }
+    }
+
+    /// True for deterministic-plane counters (persisted in checkpoints,
+    /// bit-identity gated in CI).
+    pub fn deterministic(self) -> bool {
+        (self as usize) < DET_COUNTERS
+    }
+}
+
+/// Per-step phases the flight recorder times on the training thread.
+///
+/// On the logical-worker path every phase is observed directly. On the
+/// threaded path `batch_fill`/`grad`/`encode` run on worker threads and
+/// are not separable from the collector; there `reduce` covers the whole
+/// collect (worker wait included) and the worker-side phases stay zero.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    #[default]
+    BatchFill,
+    Grad,
+    Encode,
+    Reduce,
+    Decode,
+    StepKernel,
+    CkptHandoff,
+}
+
+/// Number of [`Phase`] variants.
+pub const NUM_PHASES: usize = 7;
+
+impl Phase {
+    /// Every phase, in array order.
+    pub const ALL: [Phase; NUM_PHASES] = [
+        Phase::BatchFill,
+        Phase::Grad,
+        Phase::Encode,
+        Phase::Reduce,
+        Phase::Decode,
+        Phase::StepKernel,
+        Phase::CkptHandoff,
+    ];
+
+    /// Canonical snake_case key.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::BatchFill => "batch_fill",
+            Phase::Grad => "grad",
+            Phase::Encode => "encode",
+            Phase::Reduce => "reduce",
+            Phase::Decode => "decode",
+            Phase::StepKernel => "step_kernel",
+            Phase::CkptHandoff => "ckpt_handoff",
+        }
+    }
+}
+
+/// Power-of-two histogram buckets: bucket 0 holds 0 ns, bucket `b`
+/// holds `[2^(b-1), 2^b)` ns, bucket 63 is the overflow tail.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Fixed-bucket duration histogram for one phase.
+#[derive(Clone, Debug)]
+pub struct PhaseHist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for PhaseHist {
+    fn default() -> Self {
+        PhaseHist { buckets: [0; HIST_BUCKETS], count: 0, total_ns: 0, max_ns: 0 }
+    }
+}
+
+impl PhaseHist {
+    #[inline]
+    fn record(&mut self, ns: u64) {
+        self.buckets[bucket_of(ns)] += 1;
+        self.count += 1;
+        self.total_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Quantile estimate: the inclusive upper bound of the bucket where
+    /// the cumulative count first reaches `q * count` (0 when empty).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return bucket_upper_ns(b).min(self.max_ns.max(1));
+            }
+        }
+        self.max_ns
+    }
+}
+
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        (64 - ns.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `b` in nanoseconds.
+fn bucket_upper_ns(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// One recorded span: a phase's duration within one optimizer step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanRecord {
+    pub step: u64,
+    pub phase: Phase,
+    pub ns: u64,
+}
+
+/// Rendered summary of one phase (for traces and benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseSummary {
+    pub count: u64,
+    pub total_ns: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+/// Fixed-capacity ring-buffer flight recorder for wall-clock spans.
+///
+/// The ring and histograms are preallocated; recording a span is
+/// bucket math plus one slot overwrite — zero heap traffic, so the
+/// engine's steady-state allocation pin holds with spans enabled.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    enabled: bool,
+    ring: Vec<SpanRecord>,
+    head: usize,
+    len: usize,
+    hists: [PhaseHist; NUM_PHASES],
+}
+
+/// Default ring capacity (spans, not steps: one step records several).
+pub const DEFAULT_RING_CAPACITY: usize = 1024;
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            enabled: true,
+            ring: vec![SpanRecord::default(); capacity.max(1)],
+            head: 0,
+            len: 0,
+            hists: Default::default(),
+        }
+    }
+
+    /// Re-provision the ring (startup / config application only — this
+    /// allocates).
+    pub fn configure(&mut self, capacity: usize, enabled: bool) {
+        self.ring = vec![SpanRecord::default(); capacity.max(1)];
+        self.head = 0;
+        self.len = 0;
+        self.enabled = enabled;
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.len()
+    }
+
+    #[inline]
+    pub fn record(&mut self, phase: Phase, step: u64, ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.hists[phase as usize].record(ns);
+        self.ring[self.head] = SpanRecord { step, phase, ns };
+        self.head = (self.head + 1) % self.ring.len();
+        self.len = (self.len + 1).min(self.ring.len());
+    }
+
+    pub fn hist(&self, phase: Phase) -> &PhaseHist {
+        &self.hists[phase as usize]
+    }
+
+    pub fn summary(&self, phase: Phase) -> PhaseSummary {
+        let h = self.hist(phase);
+        PhaseSummary {
+            count: h.count(),
+            total_ns: h.total_ns(),
+            p50_ns: h.quantile_ns(0.50),
+            p99_ns: h.quantile_ns(0.99),
+            max_ns: h.max_ns(),
+        }
+    }
+
+    /// Retained spans, oldest first.
+    pub fn spans(&self) -> impl Iterator<Item = SpanRecord> + '_ {
+        let cap = self.ring.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(move |i| self.ring[(start + i) % cap])
+    }
+}
+
+/// An in-flight span measurement (None when spans are disabled, so a
+/// disabled recorder costs one branch and no clock reads).
+#[derive(Debug)]
+pub struct SpanTimer(Option<Instant>);
+
+impl SpanTimer {
+    /// A timer that records nothing (for pre-checked disabled paths).
+    pub fn disabled() -> SpanTimer {
+        SpanTimer(None)
+    }
+
+    /// Elapsed nanoseconds so far (0 when disabled).
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.map(|t0| t0.elapsed().as_nanos() as u64).unwrap_or(0)
+    }
+}
+
+/// The telemetry registry: deterministic counter array + flight
+/// recorder. Owned by the engine; all deterministic increments happen
+/// on the collector/training thread (never on worker threads), which is
+/// what makes `workers 1 ≡ N` hold bit-exactly.
+#[derive(Debug)]
+pub struct Telemetry {
+    counters: [u64; NUM_COUNTERS],
+    pub recorder: FlightRecorder,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry {
+            counters: [0; NUM_COUNTERS],
+            recorder: FlightRecorder::new(DEFAULT_RING_CAPACITY),
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Counter, n: u64) {
+        self.counters[c as usize] += n;
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: Counter, v: u64) {
+        self.counters[c as usize] = v;
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// Start a span (no clock read when the recorder is disabled).
+    #[inline]
+    pub fn begin(&self) -> SpanTimer {
+        SpanTimer(self.recorder.enabled().then(Instant::now))
+    }
+
+    /// Close a span and record it under `phase` for `step`.
+    #[inline]
+    pub fn end(&mut self, timer: SpanTimer, phase: Phase, step: u64) {
+        if let Some(t0) = timer.0 {
+            self.recorder.record(phase, step, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Record a pre-measured duration (for spans timed elsewhere, e.g.
+    /// the checkpoint handoff stall).
+    #[inline]
+    pub fn record_ns(&mut self, phase: Phase, step: u64, ns: u64) {
+        self.recorder.record(phase, step, ns);
+    }
+
+    /// The deterministic plane as checkpoint words (array-prefix order).
+    pub fn deterministic_words(&self) -> Vec<u64> {
+        self.counters[..DET_COUNTERS].to_vec()
+    }
+
+    /// Seed the deterministic plane from checkpoint words (shorter
+    /// legacy vectors leave the tail at its current value).
+    pub fn load_deterministic(&mut self, words: &[u64]) {
+        for (slot, &w) in self.counters[..DET_COUNTERS].iter_mut().zip(words) {
+            *slot = w;
+        }
+    }
+
+    /// Canonical counter manifest: sorted keys, two top-level planes.
+    /// CI diffs `.deterministic` exactly between runs; `.process` is
+    /// informational.
+    pub fn manifest_json(&self) -> String {
+        let mut det = BTreeMap::new();
+        let mut proc = BTreeMap::new();
+        for c in Counter::ALL {
+            let target = if c.deterministic() { &mut det } else { &mut proc };
+            target.insert(c.name(), self.get(c));
+        }
+        let obj = |m: &BTreeMap<&str, u64>| {
+            m.iter()
+                .map(|(k, v)| format!("\"{}\":{}", escape(k), v))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        format!(
+            "{{\"deterministic\":{{{}}},\"process\":{{{}}},\"schema\":1}}",
+            obj(&det),
+            obj(&proc)
+        )
+    }
+
+    /// Per-phase summaries as JSONL (one object per phase, fixed order).
+    pub fn phases_jsonl(&self) -> String {
+        let mut out = String::new();
+        for p in Phase::ALL {
+            let s = self.recorder.summary(p);
+            let _ = writeln!(
+                out,
+                "{{\"phase\":\"{}\",\"count\":{},\"total_ns\":{},\"p50_ns\":{},\
+                 \"p99_ns\":{},\"max_ns\":{}}}",
+                p.name(),
+                s.count,
+                s.total_ns,
+                s.p50_ns,
+                s.p99_ns,
+                s.max_ns
+            );
+        }
+        out
+    }
+
+    /// Retained ring spans as JSONL, oldest first — the same record
+    /// style as `coordinator/metrics.rs` step records (flat JSON object
+    /// per line, parseable by `util::json`).
+    pub fn spans_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in self.recorder.spans() {
+            let _ = writeln!(
+                out,
+                "{{\"step\":{},\"phase\":\"{}\",\"ns\":{}}}",
+                s.step,
+                s.phase.name(),
+                s.ns
+            );
+        }
+        out
+    }
+
+    /// Write the exportable run trace into `dir`:
+    /// `counters.json` (canonical manifest), `phases.jsonl` (per-phase
+    /// summaries), `spans.jsonl` (retained flight-recorder ring). The
+    /// caller adds `metrics.jsonl` via `Metrics::write_jsonl` to
+    /// complete the run directory `frugal trace` renders.
+    pub fn write_run_dir(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("counters.json"), self.manifest_json())?;
+        std::fs::write(dir.join("phases.jsonl"), self.phases_jsonl())?;
+        std::fs::write(dir.join("spans.jsonl"), self.spans_jsonl())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn counter_names_unique_and_ordered() {
+        let names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), NUM_COUNTERS, "duplicate counter names");
+        // Array index == discriminant, deterministic prefix contiguous.
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i);
+            assert_eq!(c.deterministic(), i < DET_COUNTERS);
+        }
+    }
+
+    #[test]
+    fn manifest_is_canonical_sorted_json() {
+        let mut t = Telemetry::new();
+        t.add(Counter::WireBytes, 123);
+        t.add(Counter::PoolMisses, 7);
+        let text = t.manifest_json();
+        let v = Json::parse(&text).unwrap();
+        let det = v.field("deterministic").unwrap().as_obj().unwrap();
+        assert_eq!(det.len(), DET_COUNTERS);
+        assert_eq!(det["wire_bytes"].as_f64().unwrap(), 123.0);
+        let proc = v.field("process").unwrap().as_obj().unwrap();
+        assert_eq!(proc["pool_misses"].as_f64().unwrap(), 7.0);
+        // Canonical: same counters -> byte-identical text; keys sorted.
+        let mut t2 = Telemetry::new();
+        t2.add(Counter::PoolMisses, 7);
+        t2.add(Counter::WireBytes, 123);
+        assert_eq!(text, t2.manifest_json());
+        let det_section = text.split("\"process\"").next().unwrap();
+        let keys: Vec<usize> = Counter::ALL
+            .iter()
+            .filter(|c| c.deterministic())
+            .map(|c| det_section.find(&format!("\"{}\"", c.name())).unwrap())
+            .collect();
+        let mut names: Vec<&str> =
+            Counter::ALL.iter().filter(|c| c.deterministic()).map(|c| c.name()).collect();
+        names.sort_unstable();
+        let sorted_pos: Vec<usize> = names
+            .iter()
+            .map(|n| det_section.find(&format!("\"{n}\"")).unwrap())
+            .collect();
+        let mut expect = keys.clone();
+        expect.sort_unstable();
+        assert_eq!(sorted_pos, expect, "manifest keys not sorted");
+    }
+
+    #[test]
+    fn deterministic_words_roundtrip() {
+        let mut t = Telemetry::new();
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            t.set(*c, (i as u64 + 1) * 10);
+        }
+        let words = t.deterministic_words();
+        assert_eq!(words.len(), DET_COUNTERS);
+        let mut fresh = Telemetry::new();
+        fresh.load_deterministic(&words);
+        for c in Counter::ALL {
+            if c.deterministic() {
+                assert_eq!(fresh.get(c), t.get(c), "{}", c.name());
+            } else {
+                assert_eq!(fresh.get(c), 0, "{} leaked into det plane", c.name());
+            }
+        }
+        // Legacy (shorter) vectors seed a prefix and leave the rest.
+        let mut partial = Telemetry::new();
+        partial.load_deterministic(&words[..2]);
+        assert_eq!(partial.get(Counter::Steps), words[0]);
+        assert_eq!(partial.get(Counter::MicroBatches), words[1]);
+        assert_eq!(partial.get(Counter::WireBytes), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        let mut h = PhaseHist::default();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        for _ in 0..99 {
+            h.record(100); // bucket 7, upper bound 127
+        }
+        h.record(1_000_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_ns(0.50), 127);
+        assert!(h.quantile_ns(0.99) <= 127);
+        assert!(h.quantile_ns(1.0) >= 1_000_000 / 2);
+        assert_eq!(h.max_ns(), 1_000_000);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_newest() {
+        let mut r = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            r.record(Phase::Reduce, i, i * 100);
+        }
+        let spans: Vec<SpanRecord> = r.spans().collect();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans.first().unwrap().step, 6);
+        assert_eq!(spans.last().unwrap().step, 9);
+        assert_eq!(r.hist(Phase::Reduce).count(), 10, "hist sees all spans, ring the tail");
+        // Disabled recorder: no clock reads, no records.
+        r.set_enabled(false);
+        r.record(Phase::Reduce, 99, 1);
+        assert_eq!(r.hist(Phase::Reduce).count(), 10);
+    }
+
+    #[test]
+    fn spans_and_phases_jsonl_parse() {
+        let mut t = Telemetry::new();
+        t.record_ns(Phase::Decode, 3, 500);
+        t.record_ns(Phase::StepKernel, 3, 1500);
+        for line in t.phases_jsonl().lines().chain(t.spans_jsonl().lines()) {
+            Json::parse(line).unwrap();
+        }
+        assert_eq!(t.phases_jsonl().lines().count(), NUM_PHASES);
+        assert_eq!(t.spans_jsonl().lines().count(), 2);
+    }
+
+    #[test]
+    fn span_timer_disabled_is_free() {
+        let mut t = Telemetry::new();
+        t.recorder.set_enabled(false);
+        let timer = t.begin();
+        assert_eq!(timer.elapsed_ns(), 0);
+        t.end(timer, Phase::Grad, 1);
+        assert_eq!(t.recorder.hist(Phase::Grad).count(), 0);
+    }
+}

@@ -16,6 +16,12 @@
 //! on the test thread, so only its allocations are counted, and
 //! const-initialized TLS cells make the counter itself allocation-free
 //! (no lazy-init recursion inside `alloc`).
+//!
+//! Telemetry (ISSUE 6) runs INSIDE the pinned region: the span flight
+//! recorder is enabled by default (asserted below), so the zero
+//! assertions prove the counter accrual and span capture allocate
+//! nothing in steady state — counters are plain `u64` adds and spans
+//! write into the preallocated ring/histograms.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -115,6 +121,12 @@ fn grad_path_is_allocation_free_after_warmup() {
     for mode in [CompressMode::None, CompressMode::Split] {
         for workers in [1usize, 2] {
             let mut e = engine(workers, mode);
+            // The pin must cover telemetry: spans default ON, so the
+            // measured steps record every phase into the flight recorder.
+            assert!(
+                e.telemetry().recorder.enabled(),
+                "span recorder must be enabled for this pin to cover telemetry"
+            );
             // Warm-up: the round's shapes settle on step 1; the extra
             // steps also grow the metrics log past the next Vec-doubling
             // boundary (40 records -> capacity 64 > 48).

@@ -1,0 +1,250 @@
+//! Integration tests for the unified telemetry subsystem (ISSUE 6).
+//!
+//! The headline invariants:
+//! - the **deterministic counter plane** of the manifest is bit-identical
+//!   at `workers 1` vs `workers 4` (compress none and split) and across a
+//!   kill/resume at a save barrier vs the uninterrupted run;
+//! - counters **continue** (not restart) across a resume — totals are
+//!   strictly monotone over the restored values;
+//! - the three wire-byte surfaces (engine total, per-round
+//!   `RoundReport.wire_bytes`, captured `TrainState.wire_bytes`) agree
+//!   after a multi-round run, because all of them read the one registry
+//!   counter.
+
+use std::path::PathBuf;
+
+use frugal::ckpt::{self, MomentCodec, SaveOptions};
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::engine::{
+    CompressCfg, CompressMode, Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg,
+    Sources,
+};
+use frugal::optim::adamw::AdamCfg;
+use frugal::optim::frugal::BlockPolicy;
+use frugal::telemetry::{Counter, Phase, DET_COUNTERS};
+use frugal::util::json::Json;
+
+const SEED: u64 = 42;
+const UPDATE_FREQ: u64 = 4;
+const GRAD_ACCUM: usize = 4;
+
+fn engine(workers: usize, mode: CompressMode) -> Engine {
+    let m = RefLm::new(RefLmCfg::default());
+    let layout = m.layout().clone();
+    let sources = Sources::Threaded(
+        (0..workers).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let mask_builder =
+        MaskBuilder::new(layout, 0.25, SubspacePolicy::Blockwise(BlockPolicy::Random), SEED);
+    let cfg = EngineCfg {
+        parallel: ParallelCfg {
+            workers,
+            grad_accum: GRAD_ACCUM,
+            compress: CompressCfg { mode, block: 64 },
+            ..Default::default()
+        },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: UPDATE_FREQ,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+}
+
+fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
+    let cfg = RefLmCfg::default();
+    let mut rng = frugal::util::Prng::seed_from_u64(0xC4A7 ^ micro.wrapping_mul(0x9E37));
+    buf.clear();
+    buf.extend((0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32));
+}
+
+fn run(engine: &mut Engine, steps: u64) {
+    for _ in 0..steps {
+        engine.step(&batch_fn).unwrap();
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("frugal_tel_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// The `.deterministic` plane of a manifest, parsed (CI jq-diffs the same
+/// object; HashMap equality is order-insensitive content equality).
+fn det_plane(manifest: &str) -> Json {
+    Json::parse(manifest).unwrap().field("deterministic").unwrap().clone()
+}
+
+/// Acceptance criterion: the deterministic counter plane is bit-identical
+/// at workers 1 vs 4, for compress none and split — both as raw words and
+/// through the canonical JSON manifest.
+#[test]
+fn deterministic_plane_is_identical_across_worker_counts() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mut one = engine(1, mode);
+        let mut four = engine(4, mode);
+        run(&mut one, 10);
+        run(&mut four, 10);
+        assert_eq!(
+            one.telemetry().deterministic_words(),
+            four.telemetry().deterministic_words(),
+            "{mode:?}: deterministic words diverged between workers 1 and 4"
+        );
+        assert_eq!(
+            det_plane(&one.telemetry().manifest_json()),
+            det_plane(&four.telemetry().manifest_json()),
+            "{mode:?}: manifest .deterministic diverged"
+        );
+        // Sanity: the run actually metered something on every counter
+        // that must move in steady state.
+        let t = one.telemetry();
+        assert_eq!(t.get(Counter::Steps), 10);
+        assert_eq!(t.get(Counter::MicroBatches), 10 * GRAD_ACCUM as u64);
+        assert_eq!(t.get(Counter::EncodeLeafCalls), t.get(Counter::MicroBatches));
+        assert_eq!(t.get(Counter::DecodeRootCalls), 10);
+        assert_eq!(t.get(Counter::PoolGrabs), t.get(Counter::MicroBatches));
+        assert!(t.get(Counter::WireBytes) > 0);
+        assert!(t.get(Counter::WireMessages) >= t.get(Counter::MicroBatches));
+        // grad_accum=4 leaves reduce through 3 interior combines per step.
+        assert_eq!(t.get(Counter::CombineCalls), 10 * (GRAD_ACCUM as u64 - 1));
+        // Rounds at T=4 over 10 steps: re-provisioned at steps 1, 5, 9.
+        assert_eq!(t.get(Counter::Reprovisions), 3);
+        if mode == CompressMode::Split {
+            assert!(t.get(Counter::EfResets) > 0, "split runs EF");
+            let full = t.get(Counter::WireFullBytes);
+            let free = t.get(Counter::WireFreeBytes);
+            assert_eq!(full + free, t.get(Counter::WireBytes), "lane-group split must partition");
+        } else {
+            assert_eq!(t.get(Counter::EfResets), 0);
+            assert_eq!(t.get(Counter::WireFullBytes), 0, "dense messages have no groups");
+        }
+    }
+}
+
+/// Acceptance criterion: kill at a save barrier, resume — the resumed
+/// run's deterministic plane bitwise-matches the uninterrupted run, and
+/// every counter continued monotonically from its restored value.
+#[test]
+fn deterministic_plane_survives_kill_and_resume() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mut continuous = engine(1, mode);
+        run(&mut continuous, 16);
+
+        let mut first = engine(4, mode);
+        run(&mut first, 8); // round barrier at T=4
+        let st = first.capture_state().unwrap();
+        assert_eq!(st.telemetry.len(), DET_COUNTERS, "capture persists the full det plane");
+        let dir = tmpdir(&format!("resume_{mode}"));
+        ckpt::save(&dir, &st, SaveOptions::new(MomentCodec::Q8, 64)).unwrap();
+        let at_save = first.telemetry().deterministic_words();
+        drop(first); // the kill
+
+        let mut resumed = engine(2, mode);
+        resumed.restore_state(ckpt::load(&dir).unwrap()).unwrap();
+        assert_eq!(
+            resumed.telemetry().deterministic_words(),
+            at_save,
+            "{mode:?}: restore must seed counters from the snapshot"
+        );
+        run(&mut resumed, 8);
+
+        assert_eq!(
+            resumed.telemetry().deterministic_words(),
+            continuous.telemetry().deterministic_words(),
+            "{mode:?}: resumed deterministic plane != continuous"
+        );
+        assert_eq!(
+            det_plane(&resumed.telemetry().manifest_json()),
+            det_plane(&continuous.telemetry().manifest_json()),
+            "{mode:?}"
+        );
+        // Monotone continuation: nothing reset to zero and restarted.
+        for (c, &before) in Counter::ALL.iter().zip(&at_save).take(DET_COUNTERS) {
+            assert!(
+                resumed.telemetry().get(*c) >= before,
+                "{mode:?}: counter {} went backwards across resume",
+                c.name()
+            );
+        }
+        assert!(
+            resumed.telemetry().get(Counter::WireBytes)
+                > at_save[Counter::WireBytes as usize],
+            "{mode:?}: wire bytes did not advance after resume"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Satellite: the three wire-byte surfaces — engine total, the sum of
+/// per-round `RoundReport.wire_bytes`, and the captured
+/// `TrainState.wire_bytes` — agree after a multi-round run. All three
+/// are reads of the one registry counter; a second `+=` site anywhere
+/// would break this.
+#[test]
+fn wire_byte_surfaces_agree() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        let mut e = engine(2, mode);
+        run(&mut e, 11); // 3 rounds at T=4, last one partial
+        let total = e.wire_bytes_total();
+        assert!(total > 0);
+        assert_eq!(total, e.telemetry().get(Counter::WireBytes), "{mode:?}");
+        let report_sum: u64 = e.reports().iter().map(|r| r.wire_bytes).sum();
+        assert_eq!(report_sum, total, "{mode:?}: round reports don't partition the total");
+        let dense_sum: u64 = e.reports().iter().map(|r| r.wire_dense_bytes).sum();
+        assert_eq!(dense_sum, e.wire_dense_bytes_total(), "{mode:?}");
+        let micro_sum: u64 = e.reports().iter().map(|r| r.micro_batches).sum();
+        assert_eq!(micro_sum, e.telemetry().get(Counter::MicroBatches), "{mode:?}");
+        let st = e.capture_state().unwrap();
+        assert_eq!(st.wire_bytes, total, "{mode:?}: captured state disagrees");
+        assert_eq!(st.wire_dense_bytes, e.wire_dense_bytes_total(), "{mode:?}");
+    }
+}
+
+/// The flight recorder observes the per-step phases and the exported run
+/// directory is complete and parseable (what `frugal trace` consumes).
+#[test]
+fn spans_record_and_run_dir_exports() {
+    let mut e = engine(2, CompressMode::Split);
+    e.telemetry_mut().recorder.configure(64, true);
+    run(&mut e, 6);
+    // Threaded path: reduce covers the whole collect; decode and the
+    // step kernel are timed on the training thread.
+    for phase in [Phase::Reduce, Phase::Decode, Phase::StepKernel] {
+        let s = e.telemetry().recorder.summary(phase);
+        assert_eq!(s.count, 6, "{}", phase.name());
+        assert!(s.p50_ns <= s.p99_ns && s.p99_ns <= s.max_ns.max(1), "{}", phase.name());
+    }
+    let dir = tmpdir("rundir");
+    e.telemetry().write_run_dir(&dir).unwrap();
+    for file in ["counters.json", "phases.jsonl", "spans.jsonl"] {
+        let text = std::fs::read_to_string(dir.join(file)).unwrap();
+        for chunk in text.lines().filter(|l| !l.trim().is_empty()) {
+            Json::parse(chunk).unwrap_or_else(|e| panic!("{file}: {e}"));
+        }
+    }
+    let manifest = std::fs::read_to_string(dir.join("counters.json")).unwrap();
+    assert_eq!(manifest, e.telemetry().manifest_json(), "export is the canonical manifest");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Disabling spans changes nothing about the deterministic plane (the
+/// two telemetry planes are strictly separated).
+#[test]
+fn spans_toggle_does_not_touch_counters() {
+    let mut with = engine(1, CompressMode::Split);
+    with.telemetry_mut().recorder.configure(256, true);
+    let mut without = engine(1, CompressMode::Split);
+    without.telemetry_mut().recorder.set_enabled(false);
+    run(&mut with, 8);
+    run(&mut without, 8);
+    assert_eq!(
+        with.telemetry().deterministic_words(),
+        without.telemetry().deterministic_words()
+    );
+    assert_eq!(without.telemetry().recorder.summary(Phase::Reduce).count, 0);
+    assert!(with.telemetry().recorder.summary(Phase::Reduce).count > 0);
+}
