@@ -50,7 +50,13 @@ fn build_engine(model: &RefLm) -> Engine {
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, model.init_flat(0)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(model.init_flat(0))
+        .build()
+        .unwrap()
 }
 
 fn main() -> frugal::Result<()> {

@@ -52,7 +52,13 @@ fn build_engine(model: &RefLm, mode: CompressMode) -> Engine {
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, model.init_flat(0)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(model.init_flat(0))
+        .build()
+        .unwrap()
 }
 
 fn tail_mean(losses: &[f32]) -> f64 {
@@ -96,8 +102,9 @@ fn main() -> frugal::Result<()> {
             losses.push(engine.step(&batch_fn).unwrap());
         });
         let ran_steps = engine.global_step().max(1);
-        let bytes_per_step = engine.wire_bytes_total() as f64 / ran_steps as f64;
-        let dense_per_step = engine.wire_dense_bytes_total() as f64 / ran_steps as f64;
+        let ws = engine.wire_stats();
+        let bytes_per_step = ws.bytes as f64 / ran_steps as f64;
+        let dense_per_step = ws.dense_bytes as f64 / ran_steps as f64;
         let reduction = dense_per_step / bytes_per_step;
         let tail = tail_mean(&losses);
         let (base_bytes, base_tail) = *baseline.get_or_insert((bytes_per_step, tail));

@@ -396,7 +396,12 @@ fn main() -> frugal::Result<()> {
         adam: AdamCfg::default(),
         clip: None,
     };
-    let mut engine = Engine::new(mask_builder, ecfg, sources, model.init_flat(0))?;
+    let mut engine = Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(ecfg)
+        .sources(sources)
+        .init_flat(model.init_flat(0))
+        .build()?;
     let batch_fn = |micro: u64, buf: &mut Vec<i32>| {
         let mut rng = Prng::seed_from_u64(0xBE4C ^ micro);
         buf.clear();

@@ -12,19 +12,28 @@
 //!
 //! Env knobs: FRUGAL_BENCH_STEPS (default 30).
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::coordinator::LrSchedule;
 use frugal::data::{CorpusConfig, SyntheticCorpus};
-use frugal::engine::{Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg, Sources};
+use frugal::engine::{
+    spawn_ref_workers, Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg, Sources,
+    TransportCfg, TransportKind, WorkerOpts,
+};
 use frugal::optim::adamw::AdamCfg;
 use frugal::optim::frugal::BlockPolicy;
 use frugal::util::bench::{json_record, print_table, time_fn, write_json_records};
 
 const GRAD_ACCUM: usize = 8;
 
-fn build_engine(model: &RefLm, workers: usize) -> Engine {
+fn build_engine(model: &RefLm, workers: usize, transport: TransportCfg) -> Engine {
+    // Socket transports compute gradients in the worker peers; the
+    // engine keeps only worker 0's source for evaluation.
+    let n_local = if transport.kind == TransportKind::Memory { workers } else { 1 };
     let sources = Sources::Threaded(
-        (0..workers).map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>).collect(),
+        (0..n_local).map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>).collect(),
     );
     let mask_builder = MaskBuilder::new(
         model.layout().clone(),
@@ -41,7 +50,14 @@ fn build_engine(model: &RefLm, workers: usize) -> Engine {
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, model.init_flat(0)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(model.init_flat(0))
+        .transport(transport)
+        .build()
+        .unwrap()
 }
 
 fn main() -> frugal::Result<()> {
@@ -74,7 +90,7 @@ fn main() -> frugal::Result<()> {
     let mut base_steps_per_s = None;
     let mut final_losses: Vec<u32> = Vec::new();
     for workers in [1usize, 2, 4, 8] {
-        let mut engine = build_engine(&model, workers);
+        let mut engine = build_engine(&model, workers, TransportCfg::default());
         let mut last_loss = 0.0f32;
         let timing = time_fn(1, steps, || {
             last_loss = engine.step(&batch_fn).unwrap();
@@ -141,7 +157,13 @@ fn main() -> frugal::Result<()> {
         adam: AdamCfg::default(),
         clip: None,
     };
-    let mut engine = Engine::new(mask_builder, cfg, sources, model.init_flat(0)).unwrap();
+    let mut engine = Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(model.init_flat(0))
+        .build()
+        .unwrap();
     let mut prev_state = usize::MAX;
     println!("\nvariable-rho schedule {sched} (T={SCHED_T}, {SCHED_EPOCHS} epochs):");
     for epoch in 0..SCHED_EPOCHS {
@@ -171,6 +193,111 @@ fn main() -> frugal::Result<()> {
         ));
         println!("{}", records.last().unwrap());
     }
+
+    // Per-transport records (ISSUE 7): the same fixed-global-batch run
+    // over every wire — in-memory channels, Unix-domain sockets, TCP —
+    // plus the two lifecycle latencies the coordinator owns: fleet join
+    // (bind + admit until the target worker count) and eviction (a
+    // worker dying mid-round surfacing as `WorkerLost`). Socket workers
+    // here are protocol-faithful threads (`spawn_ref_workers`), so the
+    // bench needs no child binaries; they serve the stock reference
+    // model, which is why this section uses `RefLmCfg::default()`.
+    let t_steps = steps.clamp(1, 10);
+    let tmodel = RefLm::new(RefLmCfg::default());
+    let tcfg_model = tmodel.cfg().clone();
+    let tcorpus = Arc::new(SyntheticCorpus::new(CorpusConfig::default_for_vocab(tcfg_model.vocab)));
+    let t_batch_fn = move |micro: u64, buf: &mut Vec<i32>| {
+        tcorpus.fill_train_batch(tcfg_model.batch, tcfg_model.seq_len, micro, buf);
+    };
+    let mut transport_losses: Vec<(TransportKind, u32)> = Vec::new();
+    println!("\ntransport comparison (workers=2, grad_accum={GRAD_ACCUM}, {t_steps} steps):");
+    for kind in [TransportKind::Memory, TransportKind::Uds, TransportKind::Tcp] {
+        let socket = kind != TransportKind::Memory;
+        let make_addr = || match kind {
+            // Port 0 only works when the coordinator relays the bound
+            // address to children it spawns; threaded workers connect
+            // up-front, so pick a pid-derived port instead.
+            TransportKind::Tcp => {
+                format!("127.0.0.1:{}", 21_000 + (std::process::id() % 30_000) as u16)
+            }
+            _ => frugal::engine::transport::default_addr(kind),
+        };
+        let mut tcfg = TransportCfg { kind, spawn: false, ..Default::default() };
+        let mut handles = Vec::new();
+        if socket {
+            let addr = make_addr();
+            // Workers first: they retry-connect until the engine binds.
+            handles = spawn_ref_workers(
+                kind,
+                addr.clone(),
+                2,
+                t_batch_fn.clone(),
+                vec![WorkerOpts::default(); 2],
+            );
+            tcfg.addr = Some(addr);
+        }
+        let t_join = Instant::now();
+        let mut engine = build_engine(&tmodel, 2, tcfg);
+        let join_ms = t_join.elapsed().as_secs_f64() * 1e3;
+        let mut last_loss = 0.0f32;
+        let t0 = Instant::now();
+        for _ in 0..t_steps {
+            last_loss = engine.step(&t_batch_fn).unwrap();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        transport_losses.push((kind, last_loss.to_bits()));
+        let ws = engine.wire_stats();
+        let wire_mb_per_s = ws.bytes as f64 / 1e6 / elapsed.max(1e-9);
+        drop(engine); // boundary Shutdown to the fleet
+        for h in handles {
+            h.join().expect("worker thread panicked").unwrap();
+        }
+        // Eviction latency: one worker crashes on its first step; time
+        // from `step()` to the surfaced `WorkerLost`.
+        let evict_ms = if socket {
+            let addr = make_addr();
+            let mut opts = vec![WorkerOpts::default(); 2];
+            opts[1].fault_step = Some(1);
+            let handles = spawn_ref_workers(kind, addr.clone(), 2, t_batch_fn.clone(), opts);
+            let mut faulty = build_engine(
+                &tmodel,
+                2,
+                TransportCfg { kind, addr: Some(addr), spawn: false, ..Default::default() },
+            );
+            let t0 = Instant::now();
+            let err = faulty.step(&t_batch_fn).unwrap_err();
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            assert!(
+                format!("{err:#}").contains("lost in round"),
+                "expected WorkerLost, got: {err:#}"
+            );
+            drop(faulty);
+            for h in handles {
+                let _ = h.join().expect("worker thread panicked");
+            }
+            ms
+        } else {
+            0.0
+        };
+        records.push(json_record(
+            "parallel_scaling",
+            &format!("transport={kind}"),
+            &[
+                ("workers", 2.0),
+                ("ms_per_step", elapsed * 1e3 / t_steps as f64),
+                ("wire_mb_per_s", wire_mb_per_s),
+                ("join_ms", join_ms),
+                ("evict_ms", evict_ms),
+            ],
+        ));
+        println!("{}", records.last().unwrap());
+    }
+    // The wire is not allowed to change the math: every transport must
+    // land on the bit-identical final loss.
+    assert!(
+        transport_losses.windows(2).all(|w| w[0].1 == w[1].1),
+        "transports disagree on the loss trace: {transport_losses:?}"
+    );
 
     write_json_records("BENCH_parallel_scaling.json", &records)?;
     println!("wrote BENCH_parallel_scaling.json ({} records)", records.len());

@@ -8,7 +8,7 @@
 
 use crate::ckpt::MomentCodec;
 use crate::coordinator::LrSchedule;
-use crate::engine::{CompressMode, ParallelCfg};
+use crate::engine::{CompressMode, ParallelCfg, TransportKind};
 use crate::optim::adamw::AdamCfg;
 use crate::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, StateFreeKind,
                            StateFullKind};
@@ -181,6 +181,8 @@ impl TrainConfig {
             "threaded", "pipeline",
         ];
         const COMPRESS_KEYS: [&str; 2] = ["mode", "block"];
+        const TRANSPORT_KEYS: [&str; 6] =
+            ["kind", "addr", "warmup_ms", "max_round_ms", "heartbeat_ms", "spawn"];
         const CHECKPOINT_KEYS: [&str; 6] =
             ["dir", "save_every", "codec", "block", "background", "keep_last"];
         const SCHEDULE_KEYS: [&str; 7] = [
@@ -190,10 +192,11 @@ impl TrainConfig {
         for section in &kv.sections {
             anyhow::ensure!(
                 section == "parallel" || section == "parallel.compress"
-                    || section == "checkpoint" || section == "schedule"
-                    || section == "telemetry",
+                    || section == "parallel.transport" || section == "checkpoint"
+                    || section == "schedule" || section == "telemetry",
                 "unknown config section '[{section}]' (known sections: [parallel], \
-                 [parallel.compress], [checkpoint], [schedule], [telemetry])"
+                 [parallel.compress], [parallel.transport], [checkpoint], [schedule], \
+                 [telemetry])"
             );
         }
         for key in kv.entries.keys() {
@@ -202,6 +205,12 @@ impl TrainConfig {
                     COMPRESS_KEYS.contains(&rest),
                     "unknown key '{rest}' in [parallel.compress] (known keys: {})",
                     COMPRESS_KEYS.join(", ")
+                );
+            } else if let Some(rest) = key.strip_prefix("parallel.transport.") {
+                anyhow::ensure!(
+                    TRANSPORT_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [parallel.transport] (known keys: {})",
+                    TRANSPORT_KEYS.join(", ")
                 );
             } else if let Some(rest) = key.strip_prefix("checkpoint.") {
                 anyhow::ensure!(
@@ -375,7 +384,9 @@ impl TrainConfig {
             sched.validate()?;
             cfg.rho_schedule = Some(sched);
         }
-        if kv.has_section("parallel") || kv.has_section("parallel.compress") {
+        if kv.has_section("parallel") || kv.has_section("parallel.compress")
+            || kv.has_section("parallel.transport")
+        {
             let mut p = ParallelCfg::default();
             if let Some(v) = kv.get_u64("parallel.workers")? {
                 p.workers = v.max(1) as usize;
@@ -403,6 +414,24 @@ impl TrainConfig {
             }
             if let Some(v) = kv.get_u64("parallel.compress.block")? {
                 p.compress.block = v.max(1) as usize;
+            }
+            if let Some(v) = kv.get("parallel.transport.kind") {
+                p.transport.kind = TransportKind::parse(v)?;
+            }
+            if let Some(v) = kv.get("parallel.transport.addr") {
+                p.transport.addr = Some(v.to_string());
+            }
+            if let Some(v) = kv.get_u64("parallel.transport.warmup_ms")? {
+                p.transport.warmup_ms = v;
+            }
+            if let Some(v) = kv.get_u64("parallel.transport.max_round_ms")? {
+                p.transport.max_round_ms = v;
+            }
+            if let Some(v) = kv.get_u64("parallel.transport.heartbeat_ms")? {
+                p.transport.heartbeat_ms = v;
+            }
+            if let Some(v) = kv.get_bool("parallel.transport.spawn")? {
+                p.transport.spawn = v;
             }
             cfg.parallel = Some(p);
         }
@@ -530,6 +559,17 @@ impl TrainConfig {
             let _ = writeln!(out, "\n[parallel.compress]");
             let _ = writeln!(out, "mode = \"{}\"", p.compress.mode);
             let _ = writeln!(out, "block = {}", p.compress.block);
+            if p.transport != crate::engine::TransportCfg::default() {
+                let _ = writeln!(out, "\n[parallel.transport]");
+                let _ = writeln!(out, "kind = \"{}\"", p.transport.kind);
+                if let Some(a) = &p.transport.addr {
+                    let _ = writeln!(out, "addr = \"{a}\"");
+                }
+                let _ = writeln!(out, "warmup_ms = {}", p.transport.warmup_ms);
+                let _ = writeln!(out, "max_round_ms = {}", p.transport.max_round_ms);
+                let _ = writeln!(out, "heartbeat_ms = {}", p.transport.heartbeat_ms);
+                let _ = writeln!(out, "spawn = {}", p.transport.spawn);
+            }
         }
         out
     }
@@ -691,7 +731,7 @@ impl TrainConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::CompressCfg;
+    use crate::engine::{CompressCfg, TransportCfg};
 
     #[test]
     fn toml_roundtrip() {
@@ -720,6 +760,14 @@ mod tests {
             threaded: false,
             pipeline: false,
             compress: CompressCfg { mode: CompressMode::Split, block: 128 },
+            transport: TransportCfg {
+                kind: TransportKind::Uds,
+                addr: Some("/tmp/frugal_test.sock".into()),
+                warmup_ms: 2_000,
+                max_round_ms: 30_000,
+                heartbeat_ms: 100,
+                spawn: false,
+            },
         });
         let text = cfg.to_toml();
         let back = TrainConfig::from_toml(&text).unwrap();
@@ -914,6 +962,42 @@ mod tests {
         assert!(format!("{err}").contains("unknown compress mode 'zstd'"));
         let err = TrainConfig::from_toml("[parallel.zip]\nmode = \"split\"\n").unwrap_err();
         assert!(format!("{err}").contains("unknown config section '[parallel.zip]'"));
+    }
+
+    #[test]
+    fn transport_section_parses_and_defaults_fill_in() {
+        let cfg = TrainConfig::from_toml(
+            "[parallel]\nworkers = 4\n\n[parallel.transport]\nkind = \"uds\"\n\
+             warmup_ms = 1500\n",
+        )
+        .unwrap();
+        let t = cfg.parallel.expect("engine section present").transport;
+        assert_eq!(t.kind, TransportKind::Uds);
+        assert_eq!(t.warmup_ms, 1500);
+        assert_eq!(t.addr, None);
+        assert_eq!(t.heartbeat_ms, TransportCfg::default().heartbeat_ms);
+        assert!(t.spawn);
+        // A bare transport section alone still opts into the engine.
+        let cfg = TrainConfig::from_toml("[parallel.transport]\nkind = \"tcp\"\n").unwrap();
+        let p = cfg.parallel.expect("engine section present");
+        assert_eq!(p.workers, ParallelCfg::default().workers);
+        assert_eq!(p.transport.kind, TransportKind::Tcp);
+        // No section = in-memory transport.
+        let cfg = TrainConfig::from_toml("[parallel]\nworkers = 2\n").unwrap();
+        assert_eq!(cfg.parallel.unwrap().transport, TransportCfg::default());
+    }
+
+    #[test]
+    fn typoed_transport_key_or_kind_is_rejected() {
+        let err =
+            TrainConfig::from_toml("[parallel.transport]\nkinds = \"uds\"\n").unwrap_err();
+        assert!(
+            format!("{err}").contains("unknown key 'kinds' in [parallel.transport]"),
+            "{err}"
+        );
+        let err =
+            TrainConfig::from_toml("[parallel.transport]\nkind = \"rdma\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown transport 'rdma'"), "{err}");
     }
 
     #[test]

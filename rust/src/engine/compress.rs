@@ -203,6 +203,42 @@ impl Payload {
         }
     }
 
+    /// Overwrite `self` with `src`'s contents, reusing `self`'s vector
+    /// capacity when the variants match (clone otherwise). Lets the
+    /// socket collector copy a decoded network frame into a pooled
+    /// message without giving up the pool's recycled storage.
+    pub fn copy_from(&mut self, src: &Payload) {
+        match (self, src) {
+            (Payload::F32(dst), Payload::F32(s)) => {
+                dst.clear();
+                dst.extend_from_slice(s);
+            }
+            (
+                Payload::Sign { len, block, bits, scales },
+                Payload::Sign { len: sl, block: sb, bits: sbits, scales: ss },
+            ) => {
+                *len = *sl;
+                *block = *sb;
+                bits.clear();
+                bits.extend_from_slice(sbits);
+                scales.clear();
+                scales.extend_from_slice(ss);
+            }
+            (
+                Payload::Q8 { len, block, q, scales },
+                Payload::Q8 { len: sl, block: sb, q: sq, scales: ss },
+            ) => {
+                *len = *sl;
+                *block = *sb;
+                q.clear();
+                q.extend_from_slice(sq);
+                scales.clear();
+                scales.extend_from_slice(ss);
+            }
+            (dst, src) => *dst = src.clone(),
+        }
+    }
+
     /// Decode, consuming the payload — the F32 case moves its values out
     /// instead of cloning them.
     pub fn into_values(self) -> Vec<f32> {
@@ -467,6 +503,30 @@ pub enum EncodedGrad {
     Dense(Vec<f32>),
     /// Gathered lane groups, one payload each, in the plan's lane order.
     Split { full: Payload, free: Payload },
+}
+
+impl EncodedGrad {
+    /// Overwrite `self` with `src`'s contents, reusing `self`'s storage
+    /// where the shapes line up (see [`Payload::copy_from`]). The socket
+    /// collector uses this to move each decoded network gradient into a
+    /// pooled message, keeping the per-step pool flow balanced (`m` out,
+    /// `m` back) exactly as on the in-memory path.
+    pub fn copy_from(&mut self, src: &EncodedGrad) {
+        match (self, src) {
+            (EncodedGrad::Dense(dst), EncodedGrad::Dense(s)) => {
+                dst.clear();
+                dst.extend_from_slice(s);
+            }
+            (
+                EncodedGrad::Split { full, free },
+                EncodedGrad::Split { full: sf, free: sr },
+            ) => {
+                full.copy_from(sf);
+                free.copy_from(sr);
+            }
+            (dst, src) => *dst = src.clone(),
+        }
+    }
 }
 
 /// Bytes that crossed reduce-tree edges during one optimizer step.

@@ -1,0 +1,717 @@
+//! Socket-backend coordinator: the round-lifecycle state machine that
+//! turns "worker threads in one process" into "worker processes on a
+//! network" without touching the training math.
+//!
+//! Modeled on Psyche's coordinator vocabulary (warmup window,
+//! `min_clients`, `max_round_train_time`): workers join during a
+//! **warmup** window at launch (and any time later — late joiners wait
+//! in a pending list), membership only ever changes at **round
+//! boundaries** (the subspace re-selection barrier, where all shard
+//! state is released anyway), and a worker that dies mid-round or
+//! overruns the round deadline surfaces as a targeted
+//! [`WorkerLost`](super::transport::WorkerLost) error. Membership
+//! changes flow through the engine's existing elastic re-provisioning:
+//! a new worker count N is just another input to `begin_round`'s
+//! re-partition, exactly like a density-schedule K change.
+//!
+//! Protocol (all frames from [`super::transport`]):
+//!
+//! ```text
+//! worker                         coordinator
+//!   | -- Hello ------------------> |        (admission)
+//!   | <------------------ Welcome  |        id + run config
+//!   | <---------------- RoundBegin |        per round: rank/N/codec plan
+//!   | <----------------- StepBegin |        per step: params
+//!   | -- Micro (per owned slot) -> |        leaf = compressed payload
+//!   | -- Leave (optional) -------> |        drop me at the next boundary
+//!   | <----------------- Shutdown  |        boundary or teardown
+//! ```
+//!
+//! Determinism: the coordinator holds all optimizer state and performs
+//! the sharded update locally; workers are stateless gradient servers
+//! (plus their per-slot EF residuals, which reset at every boundary).
+//! Because the reduce tree keys combines by micro-batch index and the
+//! frame codec is bit-exact, a socket run's loss trace is bitwise
+//! identical to the in-memory engine at any worker count.
+
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use super::compress::{CompressCfg, CompressMode, CompressPlan, EncodedGrad};
+use super::transport::{
+    default_addr, worker_connect_retry, Frame, FrameIo, Listener, Membership, RecvEvent,
+    Transport, TransportCfg, TransportKind, WorkerLost,
+};
+use super::GradSource;
+use crate::Result;
+
+/// Everything a round boundary broadcasts to the fleet: the codec plan
+/// over the fresh lane partition, plus (after a mid-round restore) the
+/// slot-keyed EF residuals to resume from.
+#[derive(Clone, Debug)]
+pub struct RoundInfo {
+    pub round: u64,
+    pub grad_accum: u32,
+    pub padded: u32,
+    pub mode: CompressMode,
+    pub block: u32,
+    pub full: Vec<u32>,
+    pub free: Vec<u32>,
+    pub residuals: Vec<Vec<f32>>,
+}
+
+enum ReaderMsg {
+    Frame { conn: u64, frame: Frame, bytes: u64 },
+    Eof { conn: u64 },
+    Err { conn: u64, error: String },
+}
+
+struct Member {
+    id: u64,
+    conn: u64,
+    writer: FrameIo,
+    alive: bool,
+    leaving: bool,
+}
+
+/// The collector-side socket endpoint: owns the listener, one reader
+/// thread per admitted worker, the rank-ordered membership list, and
+/// (when spawning) the `frugal worker` child processes.
+pub struct Coordinator {
+    cfg: TransportCfg,
+    kind: TransportKind,
+    addr: String,
+    worker_config: String,
+    target_workers: usize,
+    worker_args: Vec<Vec<String>>,
+    pending_rx: mpsc::Receiver<super::transport::Stream>,
+    events_rx: mpsc::Receiver<ReaderMsg>,
+    events_tx: mpsc::Sender<ReaderMsg>,
+    members: Vec<Member>,
+    next_conn: u64,
+    next_id: u64,
+    announced_round: u64,
+    round_deadline: Option<Instant>,
+    /// Actual serialized traffic both directions (frames, bytes) since
+    /// the last [`Coordinator::take_transport_counters`] — framing
+    /// overhead and control broadcasts included, which is exactly what
+    /// distinguishes this from the deterministic `WireBytes` plane.
+    tally_frames: u64,
+    tally_bytes: u64,
+    children: Vec<Child>,
+    accept_stop: Arc<AtomicBool>,
+    uds_cleanup: Option<String>,
+    launched: bool,
+}
+
+impl Coordinator {
+    /// Create a coordinator for `cfg`. Call [`Transport::connect`] (the
+    /// builder does) to bind, spawn and admit the initial fleet.
+    pub fn new(
+        cfg: TransportCfg,
+        workers: usize,
+        worker_config: String,
+        worker_args: Vec<Vec<String>>,
+    ) -> Result<Coordinator> {
+        anyhow::ensure!(
+            cfg.kind != TransportKind::Memory,
+            "the in-memory transport needs no coordinator"
+        );
+        anyhow::ensure!(workers >= 1, "socket transport needs at least one worker");
+        // Dummy channels until connect() binds the real ones.
+        let (_ptx, pending_rx) = mpsc::channel();
+        let (events_tx, events_rx) = mpsc::channel();
+        Ok(Coordinator {
+            kind: cfg.kind,
+            addr: String::new(),
+            cfg,
+            worker_config,
+            target_workers: workers,
+            worker_args,
+            pending_rx,
+            events_rx,
+            events_tx,
+            members: Vec::new(),
+            next_conn: 0,
+            next_id: 0,
+            announced_round: 0,
+            round_deadline: None,
+            tally_frames: 0,
+            tally_bytes: 0,
+            children: Vec::new(),
+            accept_stop: Arc::new(AtomicBool::new(false)),
+            uds_cleanup: None,
+            launched: false,
+        })
+    }
+
+    /// The address workers connect to (resolved after `connect`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn announced_round(&self) -> u64 {
+        self.announced_round
+    }
+
+    /// The round's eviction deadline (`max_round_ms`), if configured.
+    pub fn step_deadline(&self) -> Option<Instant> {
+        self.round_deadline
+    }
+
+    /// Drain and reset the serialized-traffic counters (frames, bytes).
+    pub fn take_transport_counters(&mut self) -> (u64, u64) {
+        let t = (self.tally_frames, self.tally_bytes);
+        self.tally_frames = 0;
+        self.tally_bytes = 0;
+        t
+    }
+
+    fn tally(&mut self, bytes: u64) {
+        self.tally_frames += 1;
+        self.tally_bytes += bytes;
+    }
+
+    fn rank_of(&self, conn: u64) -> Option<usize> {
+        self.members.iter().position(|m| m.conn == conn)
+    }
+
+    /// Admit one connection: expect `Hello`, assign the next stable id,
+    /// send `Welcome`, and start its reader thread.
+    fn admit(&mut self, stream: super::transport::Stream) -> Result<()> {
+        let conn = self.next_conn;
+        self.next_conn += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        // The handshake read happens on this thread: bound it so a
+        // connect-and-stall client cannot wedge the warmup loop.
+        stream
+            .set_read_timeout(Some(Duration::from_millis(self.cfg.warmup_ms.max(1_000))))
+            .map_err(|e| anyhow::anyhow!("handshake timeout setup: {e}"))?;
+        let writer_stream =
+            stream.try_clone().map_err(|e| anyhow::anyhow!("split connection: {e}"))?;
+        let mut reader = FrameIo::new(stream);
+        match reader.recv()? {
+            Some(Frame::Hello) => {}
+            Some(f) => anyhow::bail!("worker handshake: expected Hello, got {f:?}"),
+            None => anyhow::bail!("worker handshake: connection closed before Hello"),
+        }
+        reader
+            .stream()
+            .set_read_timeout(None)
+            .map_err(|e| anyhow::anyhow!("handshake timeout teardown: {e}"))?;
+        let mut writer = FrameIo::new(writer_stream);
+        let n =
+            writer.send(&Frame::Welcome { worker: id, config: self.worker_config.clone() })?;
+        self.tally(n);
+        let tx = self.events_tx.clone();
+        std::thread::spawn(move || {
+            let mut seen = 0u64;
+            loop {
+                match reader.recv() {
+                    Ok(Some(frame)) => {
+                        let bytes = reader.recv_bytes - seen;
+                        seen = reader.recv_bytes;
+                        if tx.send(ReaderMsg::Frame { conn, frame, bytes }).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(None) => {
+                        tx.send(ReaderMsg::Eof { conn }).ok();
+                        return;
+                    }
+                    Err(e) => {
+                        tx.send(ReaderMsg::Err { conn, error: format!("{e:#}") }).ok();
+                        return;
+                    }
+                }
+            }
+        });
+        self.members.push(Member { id, conn, writer, alive: true, leaving: false });
+        Ok(())
+    }
+
+    fn note_event(&mut self, msg: ReaderMsg) {
+        match msg {
+            ReaderMsg::Frame { conn, frame, bytes } => {
+                self.tally(bytes);
+                if let Some(rank) = self.rank_of(conn) {
+                    if matches!(frame, Frame::Leave { .. }) {
+                        self.members[rank].leaving = true;
+                    }
+                }
+            }
+            ReaderMsg::Eof { conn } => {
+                if let Some(rank) = self.rank_of(conn) {
+                    self.members[rank].alive = false;
+                }
+            }
+            ReaderMsg::Err { conn, error } => {
+                if let Some(rank) = self.rank_of(conn) {
+                    eprintln!("transport: worker rank {rank} read error: {error}");
+                    self.members[rank].alive = false;
+                }
+            }
+        }
+    }
+
+    /// Round-boundary membership sync: process queued leaves/deaths,
+    /// admit pending joiners, compact ranks, and return the new worker
+    /// count N for `begin_round`'s elastic re-provision. Errors only
+    /// when the fleet is empty.
+    pub fn sync_membership(&mut self) -> Result<usize> {
+        while let Ok(msg) = self.events_rx.try_recv() {
+            self.note_event(msg);
+        }
+        while let Ok(stream) = self.pending_rx.try_recv() {
+            if let Err(e) = self.admit(stream) {
+                eprintln!("transport: rejecting joiner: {e:#}");
+            }
+        }
+        let mut i = 0;
+        while i < self.members.len() {
+            if !self.members[i].alive || self.members[i].leaving {
+                let mut m = self.members.remove(i);
+                if m.alive {
+                    // An orderly leave: release the worker explicitly.
+                    if let Ok(n) = m.writer.send(&Frame::Shutdown) {
+                        self.tally(n);
+                    }
+                }
+                m.writer.shutdown();
+            } else {
+                i += 1;
+            }
+        }
+        anyhow::ensure!(
+            !self.members.is_empty(),
+            "all workers left or died — no membership to run the next round"
+        );
+        Ok(self.members.len())
+    }
+
+    /// Broadcast the round plan, telling each worker its rank, and arm
+    /// the round's eviction deadline.
+    pub fn announce_round(&mut self, info: RoundInfo) -> Result<()> {
+        let workers = self.members.len() as u32;
+        for rank in 0..self.members.len() {
+            let frame = Frame::RoundBegin {
+                round: info.round,
+                rank: rank as u32,
+                workers,
+                grad_accum: info.grad_accum,
+                padded: info.padded,
+                mode: info.mode,
+                block: info.block,
+                full: info.full.clone(),
+                free: info.free.clone(),
+                residuals: info.residuals.clone(),
+            };
+            match self.members[rank].writer.send(&frame) {
+                Ok(n) => self.tally(n),
+                Err(_) => {
+                    self.members[rank].alive = false;
+                    return Err(WorkerLost {
+                        worker: rank,
+                        round: info.round,
+                        delivered: 0,
+                        expected: info.grad_accum as usize,
+                    }
+                    .into_error());
+                }
+            }
+        }
+        self.announced_round = info.round;
+        self.round_deadline = (self.cfg.max_round_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(self.cfg.max_round_ms));
+        Ok(())
+    }
+
+    /// Broadcast this step's parameters. Fails fast with [`WorkerLost`]
+    /// if any member died mid-round (its slots could never arrive).
+    pub fn begin_step(&mut self, step: u64, flat: &[f32], round: u64, m: usize) -> Result<()> {
+        if let Some(rank) = self.members.iter().position(|mb| !mb.alive) {
+            return Err(WorkerLost { worker: rank, round, delivered: 0, expected: m }
+                .into_error());
+        }
+        let frame = Frame::StepBegin { step, flat: flat.to_vec() };
+        for rank in 0..self.members.len() {
+            match self.members[rank].writer.send(&frame) {
+                Ok(n) => self.tally(n),
+                Err(_) => {
+                    self.members[rank].alive = false;
+                    return Err(WorkerLost { worker: rank, round, delivered: 0, expected: m }
+                        .into_error());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Transport for Coordinator {
+    /// Bind the listener, spawn the worker fleet (when configured), and
+    /// run the warmup join window until `workers` members are admitted.
+    fn connect(&mut self) -> Result<()> {
+        if self.launched {
+            return Ok(());
+        }
+        let addr = self.cfg.addr.clone().unwrap_or_else(|| default_addr(self.kind));
+        let (listener, actual) = Listener::bind(self.kind, &addr)?;
+        if self.kind == TransportKind::Uds {
+            self.uds_cleanup = Some(actual.clone());
+        }
+        self.addr = actual;
+        let (ptx, prx) = mpsc::channel();
+        self.pending_rx = prx;
+        let stop = self.accept_stop.clone();
+        std::thread::spawn(move || loop {
+            match listener.accept() {
+                Ok(s) => {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    if ptx.send(s).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        });
+        if self.cfg.spawn {
+            let exe = std::env::current_exe()
+                .map_err(|e| anyhow::anyhow!("locate frugal binary for workers: {e}"))?;
+            for w in 0..self.target_workers {
+                let mut cmd = Command::new(&exe);
+                cmd.arg("worker").arg("--connect").arg(&self.addr);
+                if self.kind == TransportKind::Tcp {
+                    cmd.arg("--tcp");
+                }
+                for a in self.worker_args.get(w).into_iter().flatten() {
+                    cmd.arg(a);
+                }
+                let child = cmd
+                    .spawn()
+                    .map_err(|e| anyhow::anyhow!("spawn worker {w} ({}): {e}", exe.display()))?;
+                self.children.push(child);
+            }
+        }
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.warmup_ms.max(1));
+        while self.members.len() < self.target_workers {
+            let now = Instant::now();
+            anyhow::ensure!(
+                now < deadline,
+                "transport warmup: only {}/{} workers joined within {}ms at {} {}",
+                self.members.len(),
+                self.target_workers,
+                self.cfg.warmup_ms,
+                self.kind,
+                self.addr
+            );
+            match self.pending_rx.recv_timeout(deadline - now) {
+                Ok(stream) => {
+                    if let Err(e) = self.admit(stream) {
+                        eprintln!("transport: rejecting joiner during warmup: {e:#}");
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("transport: accept loop died during warmup")
+                }
+            }
+        }
+        self.launched = true;
+        Ok(())
+    }
+
+    fn send_frame(&mut self, rank: usize, frame: &Frame) -> Result<()> {
+        anyhow::ensure!(rank < self.members.len(), "no worker at rank {rank}");
+        let n = self.members[rank].writer.send(frame)?;
+        self.tally(n);
+        Ok(())
+    }
+
+    fn recv_frame(&mut self, timeout: Option<Duration>) -> RecvEvent {
+        loop {
+            let msg = match timeout {
+                Some(d) => match self.events_rx.recv_timeout(d) {
+                    Ok(m) => m,
+                    Err(mpsc::RecvTimeoutError::Timeout) => return RecvEvent::Timeout,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return RecvEvent::Closed { worker: None }
+                    }
+                },
+                None => match self.events_rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return RecvEvent::Closed { worker: None },
+                },
+            };
+            match msg {
+                ReaderMsg::Frame { conn, frame, bytes } => {
+                    self.tally(bytes);
+                    let Some(rank) = self.rank_of(conn) else { continue };
+                    match frame {
+                        Frame::Micro { slot, n_tok, loss, grad, .. } => {
+                            return RecvEvent::Micro {
+                                worker: rank,
+                                slot: slot as usize,
+                                n_tok: n_tok as usize,
+                                loss,
+                                grad,
+                            }
+                        }
+                        Frame::Failed { message, .. } => {
+                            return RecvEvent::Failed { worker: rank, message }
+                        }
+                        Frame::Leave { .. } => {
+                            self.members[rank].leaving = true;
+                            return RecvEvent::Leave { worker: rank };
+                        }
+                        _ => continue,
+                    }
+                }
+                ReaderMsg::Eof { conn } | ReaderMsg::Err { conn, .. } => {
+                    let Some(rank) = self.rank_of(conn) else { continue };
+                    self.members[rank].alive = false;
+                    return RecvEvent::Closed { worker: Some(rank) };
+                }
+            }
+        }
+    }
+
+    fn membership(&self) -> Membership {
+        Membership { ids: self.members.iter().map(|m| m.id).collect() }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.accept_stop.store(true, Ordering::Relaxed);
+        for m in &mut self.members {
+            m.writer.send(&Frame::Shutdown).ok();
+            m.writer.shutdown();
+        }
+        self.members.clear();
+        // Wake the accept thread so it observes the stop flag.
+        if !self.addr.is_empty() {
+            match self.kind {
+                TransportKind::Uds => {
+                    std::os::unix::net::UnixStream::connect(&self.addr).ok();
+                }
+                TransportKind::Tcp => {
+                    std::net::TcpStream::connect(&self.addr).ok();
+                }
+                TransportKind::Memory => {}
+            }
+        }
+        // Workers exit on Shutdown/EOF; give them a moment, then insist.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        for c in &mut self.children {
+            loop {
+                match c.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        c.kill().ok();
+                        c.wait().ok();
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(path) = self.uds_cleanup.take() {
+            super::transport::remove_uds_path(&path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// Worker-loop knobs. The fault knobs exist for the determinism CI and
+/// conformance tests: deterministic failure injection beats flaky
+/// kill-by-signal timing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerOpts {
+    /// Crash (close the socket without a word) on receiving this
+    /// 1-based global step — before computing anything, so the step's
+    /// slots go missing mid-round.
+    pub fault_step: Option<u64>,
+    /// After completing this many steps, send [`Frame::Leave`] and keep
+    /// serving until the coordinator's boundary `Shutdown`.
+    pub leave_after_steps: Option<u64>,
+    /// Sleep this long before each owned slot (arrival-order scrambling
+    /// for the out-of-order conformance test).
+    pub slot_delay_ms: u64,
+}
+
+/// Send `Hello`, await `Welcome`; returns `(worker id, run config)`.
+pub fn worker_handshake(io: &mut FrameIo) -> Result<(u64, String)> {
+    io.send(&Frame::Hello)?;
+    match io.recv()? {
+        Some(Frame::Welcome { worker, config }) => Ok((worker, config)),
+        Some(f) => anyhow::bail!("worker handshake: expected Welcome, got {f:?}"),
+        None => anyhow::bail!("worker handshake: coordinator closed the connection"),
+    }
+}
+
+/// The worker protocol driver: serve `RoundBegin`/`StepBegin` frames
+/// until `Shutdown` (or coordinator EOF). Used by the `frugal worker`
+/// subcommand (one OS process per worker) and — over real sockets, on
+/// threads — by the conformance tests and benches.
+///
+/// The worker is a stateless gradient server: it rebuilds its codec
+/// plan from each `RoundBegin`, keeps EF residuals only for its owned
+/// slots (`j ≡ rank mod N`), and computes against the parameters each
+/// `StepBegin` carries. `batch_fn` must be the same pure function of
+/// the global micro-batch index the coordinator's reference run uses —
+/// that, plus the bit-exact frame codec, is the whole determinism
+/// contract.
+pub fn run_worker(
+    io: &mut FrameIo,
+    my_id: u64,
+    src: &mut dyn GradSource,
+    batch_fn: &(dyn Fn(u64, &mut Vec<i32>) + Sync),
+    opts: WorkerOpts,
+) -> Result<()> {
+    struct RoundState {
+        rank: usize,
+        workers: usize,
+        m: usize,
+        plan: CompressPlan,
+        /// One EF residual per owned slot, local order (slot j lives at
+        /// local index j / workers).
+        residuals: Vec<Vec<f32>>,
+    }
+    let mut round: Option<RoundState> = None;
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut grad: Vec<f32> = Vec::new();
+    let mut gather: Vec<f32> = Vec::new();
+    let mut msg = EncodedGrad::Dense(Vec::new());
+    let mut steps_done = 0u64;
+    let mut left = false;
+    loop {
+        let frame = match io.recv()? {
+            Some(f) => f,
+            // Coordinator gone (teardown without Shutdown): exit clean.
+            None => return Ok(()),
+        };
+        match frame {
+            Frame::RoundBegin {
+                rank,
+                workers,
+                grad_accum,
+                padded,
+                mode,
+                block,
+                full,
+                free,
+                residuals,
+                ..
+            } => {
+                let nw = (workers as usize).max(1);
+                let rk = rank as usize;
+                let m = grad_accum as usize;
+                let plan =
+                    CompressPlan::new(CompressCfg { mode, block: block as usize }, full, free,
+                                      padded as usize);
+                let nres = plan.residual_len();
+                let mut local = Vec::new();
+                let mut j = rk;
+                while j < m {
+                    let mut r = vec![0.0f32; nres];
+                    // A restore ships slot-keyed residuals; adopt ours.
+                    if let Some(saved) = residuals.get(j) {
+                        if saved.len() == nres {
+                            r.copy_from_slice(saved);
+                        }
+                    }
+                    local.push(r);
+                    j += nw;
+                }
+                round = Some(RoundState { rank: rk, workers: nw, m, plan, residuals: local });
+            }
+            Frame::StepBegin { step, flat } => {
+                if opts.fault_step == Some(step + 1) {
+                    // Injected crash: vanish mid-round, no goodbye.
+                    io.shutdown();
+                    return Ok(());
+                }
+                let st = round
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("StepBegin before any RoundBegin"))?;
+                grad.resize(st.plan.padded_size(), 0.0);
+                let mut j = st.rank;
+                let mut local = 0usize;
+                while j < st.m {
+                    if opts.slot_delay_ms > 0 {
+                        std::thread::sleep(Duration::from_millis(opts.slot_delay_ms));
+                    }
+                    tokens.clear();
+                    batch_fn(step * st.m as u64 + j as u64, &mut tokens);
+                    let n_tok = tokens.len() as u32;
+                    match src.loss_and_grad_into(&flat, &tokens, &mut grad) {
+                        Ok(loss) => {
+                            let slot =
+                                st.residuals.get_mut(local).map(|r| r.as_mut_slice());
+                            st.plan.encode_leaf_into(&grad, slot, &mut gather, &mut msg);
+                            io.send_micro(my_id, j as u32, n_tok, loss, &msg)?;
+                        }
+                        Err(e) => {
+                            io.send(&Frame::Failed {
+                                worker: my_id,
+                                message: format!("{e:#}"),
+                            })?;
+                        }
+                    }
+                    j += st.workers;
+                    local += 1;
+                }
+                steps_done += 1;
+                if !left && opts.leave_after_steps == Some(steps_done) {
+                    io.send(&Frame::Leave { worker: my_id })?;
+                    left = true;
+                }
+            }
+            Frame::Shutdown => return Ok(()),
+            // Stray frames (duplicate Welcome, echoes) are ignored.
+            _ => {}
+        }
+    }
+}
+
+/// Spawn `n` in-process worker *threads* speaking the real socket
+/// protocol against `addr` — the test/bench harness for socket runs
+/// without child processes. Each worker serves gradients from a fresh
+/// [`super::RefLm`] (a pure function of the broadcast parameters, so
+/// any instance is equivalent) and the caller's `batch_fn`.
+pub fn spawn_ref_workers<F>(
+    kind: TransportKind,
+    addr: String,
+    n: usize,
+    batch_fn: F,
+    opts: Vec<WorkerOpts>,
+) -> Vec<std::thread::JoinHandle<Result<()>>>
+where
+    F: Fn(u64, &mut Vec<i32>) + Send + Sync + Clone + 'static,
+{
+    (0..n)
+        .map(|w| {
+            let addr = addr.clone();
+            let batch_fn = batch_fn.clone();
+            let o = opts.get(w).copied().unwrap_or_default();
+            std::thread::spawn(move || -> Result<()> {
+                let stream = worker_connect_retry(kind, &addr, Duration::from_secs(10))?;
+                let mut io = FrameIo::new(stream);
+                let (id, _config) = worker_handshake(&mut io)?;
+                let mut model = super::refmodel::RefLm::new(super::refmodel::RefLmCfg::default());
+                run_worker(&mut io, id, &mut model, &batch_fn, o)
+            })
+        })
+        .collect()
+}

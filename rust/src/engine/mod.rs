@@ -62,22 +62,27 @@
 
 pub mod allreduce;
 pub mod compress;
+pub mod coordinator;
 pub mod orchestrator;
 pub mod pool;
 pub mod refmodel;
 pub mod shard;
+pub mod transport;
 
 pub use allreduce::{tree_reduce, tree_reduce_with, ReduceTree};
 pub use compress::{
     BlockQ8Codec, CompressCfg, CompressMode, CompressPlan, EncodedGrad, GradCodec, NoneCodec,
     Payload, SignEfCodec, WireStats,
 };
+pub use coordinator::{run_worker, spawn_ref_workers, worker_handshake, Coordinator, WorkerOpts};
 pub use orchestrator::{Orchestrator, RoundReport};
 pub use pool::{BufferPool, PoolStats};
 pub use refmodel::{RefLm, RefLmCfg};
 pub use shard::{ResidualBank, ShardPlan};
+pub use transport::{
+    Frame, InMemory, Membership, RecvEvent, Transport, TransportCfg, TransportKind, WorkerLost,
+};
 
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::clip::clip_global_norm;
@@ -143,7 +148,7 @@ pub struct ParallelCfg {
     /// this many ms before **each micro-batch it processes**, so its
     /// per-step skew is `straggler_ms × ceil(grad_accum/workers)`. 0
     /// disables. Threaded execution only — logical workers have no
-    /// concurrency to skew ([`Engine::new`] prints a note if set).
+    /// concurrency to skew ([`EngineBuilder::build`] prints a note if set).
     pub straggler_ms: u64,
     /// Straggler *detection*: receive timeout after which a waiting
     /// orchestrator counts a timeout event in the round report. 0
@@ -165,6 +170,11 @@ pub struct ParallelCfg {
     /// `--compress`). Codecs are deterministic, so bit-identity across
     /// worker counts holds within any fixed mode.
     pub compress: CompressCfg,
+    /// Worker transport (`[parallel.transport]` section / `--transport`):
+    /// in-memory worker threads (the default), or one OS process per
+    /// worker over a Unix-domain/TCP socket. The tree grouping is
+    /// index-keyed, so every transport is bit-identical.
+    pub transport: TransportCfg,
 }
 
 impl Default for ParallelCfg {
@@ -178,12 +188,13 @@ impl Default for ParallelCfg {
             threaded: true,
             pipeline: true,
             compress: CompressCfg::default(),
+            transport: TransportCfg::default(),
         }
     }
 }
 
 /// Engine hyper-parameters (the optimizer/schedule half; the subspace
-/// half lives in the [`MaskBuilder`] passed to [`Engine::new`]).
+/// half lives in the [`MaskBuilder`] passed to [`EngineBuilder::mask_builder`]).
 #[derive(Clone, Debug)]
 pub struct EngineCfg {
     pub parallel: ParallelCfg,
@@ -225,11 +236,6 @@ impl Sources {
         }
     }
 }
-
-/// What one worker sends back per micro-batch: the slot index, token
-/// count, and the loss + **encoded** gradient (the leaf message — the
-/// worker-side encode is the compressed wire hop).
-type MicroResult = (usize, usize, Result<(f32, EncodedGrad)>);
 
 /// One barrier-mode staging slot: `(token_count, loss, encoded_grad)`.
 type StagedMicro = Option<(usize, f32, EncodedGrad)>;
@@ -274,6 +280,12 @@ pub struct Engine {
     combine_scratch: Vec<f32>,
     /// Barrier staging area for `pipeline = false` (slot-indexed).
     stage: Vec<StagedMicro>,
+    /// Delivered-slot bitmask for the collect loop (persistent so the
+    /// steady-state path never allocates it).
+    seen: Vec<u64>,
+    /// The socket coordinator, when this engine drives worker
+    /// *processes* instead of threads (`transport.kind != memory`).
+    link: Option<Coordinator>,
     /// Per-worker reusable buffers (tokens/grads/messages/gathers).
     workers_ctx: Vec<WorkerCtx>,
     /// Per-worker post-update parameter values, shard order (persistent).
@@ -306,25 +318,109 @@ struct RoundBase {
     combine_calls: u64,
 }
 
-impl Engine {
-    /// `init_flat` must match the mask-builder layout's `padded_size`;
-    /// `sources` must hold one gradient source per worker.
-    pub fn new(
-        mask_builder: MaskBuilder,
-        cfg: EngineCfg,
-        sources: Sources,
-        init_flat: Vec<f32>,
-    ) -> Result<Engine> {
+/// Typed constructor for [`Engine`] (`Engine::builder()`): named setters
+/// for the required pieces (mask builder, config, sources, initial
+/// parameters) and the optional ones (transport override, a
+/// pre-configured telemetry registry, the config/args shipped to socket
+/// workers). `build()` validates everything at once and — for socket
+/// transports — binds the coordinator, spawns the worker fleet, and
+/// runs the warmup join window.
+#[derive(Default)]
+pub struct EngineBuilder {
+    mask_builder: Option<MaskBuilder>,
+    cfg: Option<EngineCfg>,
+    sources: Option<Sources>,
+    init_flat: Option<Vec<f32>>,
+    transport: Option<TransportCfg>,
+    telemetry: Option<Telemetry>,
+    worker_config: String,
+    worker_args: Vec<Vec<String>>,
+}
+
+impl EngineBuilder {
+    /// The shared subspace selector (required).
+    pub fn mask_builder(mut self, mb: MaskBuilder) -> Self {
+        self.mask_builder = Some(mb);
+        self
+    }
+
+    /// Optimizer/schedule/parallel configuration (required).
+    pub fn cfg(mut self, cfg: EngineCfg) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Gradient sources: one per worker for the in-memory transport; at
+    /// least one (the evaluation source) for socket transports, whose
+    /// training gradients come from worker processes (required).
+    pub fn sources(mut self, sources: Sources) -> Self {
+        self.sources = Some(sources);
+        self
+    }
+
+    /// Initial flat parameter vector, layout `padded_size` (required).
+    pub fn init_flat(mut self, flat: Vec<f32>) -> Self {
+        self.init_flat = Some(flat);
+        self
+    }
+
+    /// Override `cfg.parallel.transport` (convenience for call sites
+    /// that take the config from a file but the transport from a flag).
+    pub fn transport(mut self, transport: TransportCfg) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Adopt a pre-configured telemetry registry (ring size, span
+    /// enablement) instead of the default one.
+    pub fn telemetry(mut self, tel: Telemetry) -> Self {
+        self.telemetry = Some(tel);
+        self
+    }
+
+    /// The run-config TOML shipped to socket workers in `Welcome`.
+    pub fn worker_config(mut self, toml: String) -> Self {
+        self.worker_config = toml;
+        self
+    }
+
+    /// Extra CLI args appended per spawned `frugal worker` process
+    /// (fault injection for the determinism CI, mainly).
+    pub fn worker_args(mut self, args: Vec<Vec<String>>) -> Self {
+        self.worker_args = args;
+        self
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let mask_builder =
+            self.mask_builder.ok_or_else(|| anyhow::anyhow!("EngineBuilder: mask_builder unset"))?;
+        let mut cfg = self.cfg.ok_or_else(|| anyhow::anyhow!("EngineBuilder: cfg unset"))?;
+        let sources = self.sources.ok_or_else(|| anyhow::anyhow!("EngineBuilder: sources unset"))?;
+        let init_flat =
+            self.init_flat.ok_or_else(|| anyhow::anyhow!("EngineBuilder: init_flat unset"))?;
+        if let Some(t) = self.transport {
+            cfg.parallel.transport = t;
+        }
+        let socket = cfg.parallel.transport.kind != TransportKind::Memory;
         let padded = mask_builder.layout().padded_size;
         anyhow::ensure!(cfg.parallel.workers >= 1, "parallel.workers must be >= 1");
         anyhow::ensure!(cfg.parallel.grad_accum >= 1, "parallel.grad_accum must be >= 1");
         anyhow::ensure!(cfg.parallel.compress.block >= 1, "parallel.compress.block must be >= 1");
-        anyhow::ensure!(
-            sources.len() == cfg.parallel.workers,
-            "need one gradient source per worker ({} sources for {} workers)",
-            sources.len(),
-            cfg.parallel.workers
-        );
+        if socket {
+            // Worker processes compute the training gradients; the local
+            // sources only serve evaluation (worker 0's source).
+            anyhow::ensure!(
+                !sources.is_empty(),
+                "socket transports still need one local gradient source for evaluation"
+            );
+        } else {
+            anyhow::ensure!(
+                sources.len() == cfg.parallel.workers,
+                "need one gradient source per worker ({} sources for {} workers)",
+                sources.len(),
+                cfg.parallel.workers
+            );
+        }
         anyhow::ensure!(
             init_flat.len() == padded,
             "init vector has {} lanes, layout wants {padded}",
@@ -335,12 +431,25 @@ impl Engine {
         let threaded_exec = cfg.parallel.threaded
             && cfg.parallel.workers > 1
             && matches!(sources, Sources::Threaded(_));
-        if !threaded_exec && (cfg.parallel.straggler_ms > 0 || cfg.parallel.timeout_ms > 0) {
+        if !socket && !threaded_exec && (cfg.parallel.straggler_ms > 0 || cfg.parallel.timeout_ms > 0)
+        {
             eprintln!(
                 "note: straggler_ms/timeout_ms are inert on logical (non-threaded) \
                  workers; run threaded sources with workers > 1 to exercise them"
             );
         }
+        let link = if socket {
+            let mut co = Coordinator::new(
+                cfg.parallel.transport.clone(),
+                cfg.parallel.workers,
+                self.worker_config,
+                self.worker_args,
+            )?;
+            co.connect()?;
+            Some(co)
+        } else {
+            None
+        };
         let clock = SubspaceClock::new(cfg.update_freq);
         let workers = cfg.parallel.workers;
         let grad_accum = cfg.parallel.grad_accum;
@@ -363,10 +472,12 @@ impl Engine {
             grad_buf: vec![0.0; padded],
             combine_scratch: Vec::new(),
             stage: Vec::new(),
+            seen: Vec::new(),
+            link,
             workers_ctx,
             full_out: (0..workers).map(|_| Vec::new()).collect(),
             free_out: (0..workers).map(|_| Vec::new()).collect(),
-            tel: Telemetry::new(),
+            tel: self.telemetry.unwrap_or_default(),
             round_base: RoundBase::default(),
             pool_grabs_base: 0,
             clock,
@@ -374,6 +485,33 @@ impl Engine {
             reports: Vec::new(),
             metrics: Metrics::new(),
         })
+    }
+}
+
+impl Engine {
+    /// Start building an engine (see [`EngineBuilder`]).
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// `init_flat` must match the mask-builder layout's `padded_size`;
+    /// `sources` must hold one gradient source per worker.
+    #[deprecated(
+        since = "0.7.0",
+        note = "use Engine::builder() — named setters plus transport/telemetry options"
+    )]
+    pub fn new(
+        mask_builder: MaskBuilder,
+        cfg: EngineCfg,
+        sources: Sources,
+        init_flat: Vec<f32>,
+    ) -> Result<Engine> {
+        Engine::builder()
+            .mask_builder(mask_builder)
+            .cfg(cfg)
+            .sources(sources)
+            .init_flat(init_flat)
+            .build()
     }
 
     pub fn cfg(&self) -> &EngineCfg {
@@ -440,15 +578,21 @@ impl Engine {
         &mut self.tel
     }
 
-    /// Bytes shipped over reduce-tree edges so far (encoded) — a read
-    /// of the one registry counter every other surface also reads.
-    pub fn wire_bytes_total(&self) -> u64 {
-        self.tel.get(Counter::WireBytes)
-    }
-
-    /// What the same reduce-tree traffic would have cost at raw fp32.
-    pub fn wire_dense_bytes_total(&self) -> u64 {
-        self.tel.get(Counter::WireDenseBytes)
+    /// One snapshot of all run-to-date wire accounting — a read of the
+    /// registry counters every other surface (round reports, `memory`,
+    /// `trace`, checkpoints) also reads, so the numbers cannot drift
+    /// apart. Replaces the old per-counter accessor sprawl
+    /// (`wire_bytes_total`, `wire_dense_bytes_total`, …).
+    pub fn wire_stats(&self) -> WireStats {
+        WireStats {
+            bytes: self.tel.get(Counter::WireBytes),
+            messages: self.tel.get(Counter::WireMessages),
+            dense_bytes: self.tel.get(Counter::WireDenseBytes),
+            leaves: self.tel.get(Counter::EncodeLeafCalls),
+            combines: self.tel.get(Counter::CombineCalls),
+            full_bytes: self.tel.get(Counter::WireFullBytes),
+            free_bytes: self.tel.get(Counter::WireFreeBytes),
+        }
     }
 
     /// Start a new round: re-select the subspace at the clock's mask
@@ -499,6 +643,28 @@ impl Engine {
         ));
     }
 
+    /// Adopt a new worker count N at a round boundary (socket
+    /// membership change: join, leave, or replacement). Only the
+    /// replicated per-worker buffers are resized here — every piece of
+    /// sharded state (plans, moments, residuals, codec plan) is rebuilt
+    /// from `cfg.parallel.workers` by the [`Engine::begin_round`] that
+    /// must follow, i.e. N changes ride the same elastic
+    /// re-provisioning path as density-schedule K changes.
+    fn apply_worker_count(&mut self, n: usize) {
+        if n == self.cfg.parallel.workers {
+            return;
+        }
+        let padded = self.mask_builder.layout().padded_size;
+        self.cfg.parallel.workers = n;
+        while self.workers_ctx.len() < n {
+            self.workers_ctx
+                .push(WorkerCtx { grad: vec![0.0; padded], ..WorkerCtx::default() });
+        }
+        self.workers_ctx.truncate(n);
+        self.full_out.resize_with(n, Vec::new);
+        self.free_out.resize_with(n, Vec::new);
+    }
+
     /// Snapshot the registry counters the in-progress round report is a
     /// delta against (round boundaries and restores).
     fn sync_round_base(&mut self) {
@@ -524,6 +690,13 @@ impl Engine {
         self.metrics.start_clock();
         let (step, reselect) = self.clock.tick();
         if reselect {
+            // Socket transports apply membership changes here, at the
+            // round boundary — the only place shard state is released —
+            // so the boundary's begin_round re-partitions for the new N.
+            if let Some(co) = self.link.as_mut() {
+                let n = co.sync_membership()?;
+                self.apply_worker_count(n);
+            }
             self.begin_round();
         }
         let m = self.cfg.parallel.grad_accum;
@@ -552,11 +725,79 @@ impl Engine {
         // ---- gradient phase: compute M micro-batch grads, encode each
         // as a leaf message (into pooled storage), tree-reduce
         // (decode-combine-reencode in place).
-        let use_threads = self.cfg.parallel.threaded
+        let use_threads = self.link.is_none()
+            && self.cfg.parallel.threaded
             && nw > 1
             && matches!(self.sources, Sources::Threaded(_));
         self.acc.begin(m);
-        let (loss_sum, tokens_total, timeouts, wire) = if use_threads {
+        let (loss_sum, tokens_total, timeouts, wire) = if self.link.is_some() {
+            // Socket transport: broadcast the round plan (once per
+            // round) and this step's parameters, then collect the
+            // workers' leaf frames through the same index-keyed tree.
+            // Decoded network gradients are copied into pooled messages
+            // (`pooled_recv`), so pool flow — and the deterministic
+            // PoolGrabs counter — matches the in-memory path exactly.
+            let timeout_ms = self.cfg.parallel.timeout_ms;
+            let pipeline = self.cfg.parallel.pipeline;
+            let round = self.round;
+            let t_reduce = mark(spans_on);
+            let co = self.link.as_mut().expect("socket branch without a coordinator");
+            if co.announced_round() != round {
+                let residual_len = self.cplan.residual_len();
+                // Residual slots are zero at a fresh boundary (the bank
+                // just reset); ship them only when a mid-round restore
+                // left real EF state to hand back to the workers.
+                let ship = residual_len > 0
+                    && (0..m).any(|j| {
+                        self.residuals.slot(j).is_some_and(|s| s.iter().any(|&x| x != 0.0))
+                    });
+                let residuals: Vec<Vec<f32>> = if ship {
+                    (0..m)
+                        .map(|j| self.residuals.slot(j).map(|s| s.to_vec()).unwrap_or_default())
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                co.announce_round(coordinator::RoundInfo {
+                    round,
+                    grad_accum: m as u32,
+                    padded: padded as u32,
+                    mode: self.cplan.mode(),
+                    block: self.cplan.block() as u32,
+                    full: self.plan.lanes().to_vec(),
+                    free: self.free_plan.lanes().to_vec(),
+                    residuals,
+                })?;
+            }
+            co.begin_step(step, &self.flat, round, m)?;
+            let deadline = co.step_deadline();
+            let timeouts = collect_micro_grads(
+                &self.cplan,
+                &mut self.acc,
+                &mut self.pool,
+                &mut self.combine_scratch,
+                &mut self.stage,
+                &mut self.seen,
+                co,
+                m,
+                nw,
+                round,
+                timeout_ms,
+                deadline,
+                pipeline,
+                true,
+            )?;
+            lap(&mut ns_reduce, t_reduce);
+            let t_decode = mark(spans_on);
+            let (loss_sum, tokens_total, wire) = self.acc.finish_into(
+                &self.cplan,
+                &mut self.pool,
+                &mut self.combine_scratch,
+                &mut self.grad_buf,
+            )?;
+            lap(&mut ns_decode, t_decode);
+            (loss_sum, tokens_total, timeouts, wire)
+        } else if use_threads {
             // Hand each worker pooled message buffers for its owned
             // slots (j ≡ w mod N) — its double-buffered production ring.
             for w in 0..nw {
@@ -572,17 +813,22 @@ impl Engine {
             let straggler_worker = (self.round as usize + nw - 1) % nw;
             let timeout_ms = self.cfg.parallel.timeout_ms;
             let pipeline = self.cfg.parallel.pipeline;
+            let round = self.round;
             let flat: &[f32] = &self.flat;
             let cplan: &CompressPlan = &self.cplan;
             let acc = &mut self.acc;
             let pool = &mut self.pool;
             let scratch = &mut self.combine_scratch;
             let stage = &mut self.stage;
+            let seen = &mut self.seen;
             let ctxs = &mut self.workers_ctx;
             let Sources::Threaded(srcs) = &mut self.sources else { unreachable!() };
             let banks = self.residuals.per_worker_mut();
             assert_eq!(banks.len(), nw, "residual bank not sized to the worker count");
-            let (tx, rx) = mpsc::channel::<MicroResult>();
+            // Worker threads speak [`Frame`]s over the in-memory
+            // transport — the same frames the socket backend serializes,
+            // moved by value here (no codec, no extra copies).
+            let mut link = InMemory::new(nw);
             // Threaded mode: fill/grad/encode run on worker threads and
             // are not separable from the collector, so `reduce` covers
             // the whole collect (worker wait included) — see
@@ -592,7 +838,7 @@ impl Engine {
                 for (w, ((src, ctx), wres)) in
                     srcs.iter_mut().zip(ctxs.iter_mut()).zip(banks.iter_mut()).enumerate()
                 {
-                    let tx = tx.clone();
+                    let sender = link.sender();
                     scope.spawn(move || {
                         let mut j = w;
                         let mut local = 0usize;
@@ -608,9 +854,10 @@ impl Engine {
                             let n_tok = ctx.tokens.len();
                             let mut msg =
                                 ctx.msgs.pop().expect("worker message ring underflow");
-                            let res = src
+                            let frame = match src
                                 .loss_and_grad_into(flat, &ctx.tokens, &mut ctx.grad)
-                                .map(|loss| {
+                            {
+                                Ok(loss) => {
                                     // Slot j's EF residual lives at local
                                     // index j/N of this worker's bank.
                                     let slot = wres.get_mut(local).map(|r| r.as_mut_slice());
@@ -620,11 +867,22 @@ impl Engine {
                                         &mut ctx.gather,
                                         &mut msg,
                                     );
-                                    (loss, msg)
-                                });
+                                    Frame::Micro {
+                                        worker: w as u64,
+                                        slot: j as u32,
+                                        n_tok: n_tok as u32,
+                                        loss,
+                                        grad: msg,
+                                    }
+                                }
+                                Err(e) => Frame::Failed {
+                                    worker: w as u64,
+                                    message: format!("{e:#}"),
+                                },
+                            };
                             // A send error means the collector bailed;
                             // just stop producing.
-                            if tx.send((j, n_tok, res)).is_err() {
+                            if !sender.send_frame(frame) {
                                 return;
                             }
                             j += nw;
@@ -632,9 +890,11 @@ impl Engine {
                         }
                     });
                 }
-                drop(tx);
-                collect_micro_grads(cplan, acc, pool, scratch, stage, &rx, m, timeout_ms,
-                                    pipeline)
+                link.seal();
+                collect_micro_grads(
+                    cplan, acc, pool, scratch, stage, seen, &mut link, m, nw, round,
+                    timeout_ms, None, pipeline, false,
+                )
             })?;
             lap(&mut ns_reduce, t_reduce);
             let t_decode = mark(spans_on);
@@ -704,6 +964,14 @@ impl Engine {
         let pool_stats = self.pool.stats();
         self.tel.set(Counter::PoolGrabs, self.pool_grabs_base + pool_stats.grabs);
         self.tel.set(Counter::PoolMisses, pool_stats.misses);
+        if let Some(co) = self.link.as_mut() {
+            // Actual serialized traffic, attributed to the transport —
+            // process plane (framing + control overhead; stays 0 under
+            // the in-memory transport, where frames are never encoded).
+            let (frames, bytes) = co.take_transport_counters();
+            self.tel.add(Counter::TransportFrames, frames);
+            self.tel.add(Counter::TransportBytes, bytes);
+        }
 
         // Mean over the global batch — the same scale at any worker count.
         let inv = 1.0 / m as f32;
@@ -850,6 +1118,19 @@ impl Engine {
         anyhow::ensure!(
             self.clock.step() >= 1,
             "nothing to checkpoint before the first optimizer step"
+        );
+        // Under a socket transport the EF residuals live worker-side
+        // during a round (each worker owns its slots' transport state),
+        // so a mid-round snapshot cannot capture them. Boundary
+        // snapshots are complete: the next step's re-selection resets
+        // residuals before they are ever read.
+        anyhow::ensure!(
+            self.link.is_none()
+                || self.cplan.residual_len() == 0
+                || self.clock.step() % self.cfg.update_freq == 0,
+            "socket-transport snapshots with EF compression are only supported at round \
+             boundaries (save_every a multiple of update_freq): mid-round EF residuals \
+             live in the worker processes"
         );
         let layout = self.mask_builder.layout();
         st.step = self.clock.step();
@@ -1221,14 +1502,29 @@ impl MicroAccumulator {
     }
 }
 
-/// Drain `m` micro-batch results from `rx` into `acc`, tree-reducing
+/// Drain `m` micro-batch frames from `link` into `acc`, tree-reducing
 /// encoded gradients and raw losses by micro-batch index. With
 /// `pipeline` the tree combines eagerly as messages arrive (overlapping
 /// with still-running workers); without it all `m` results are staged
 /// behind a barrier first and fed in index order — the grouping is
-/// index-keyed either way, so the bits are identical. Returns the
-/// timeout-event count; losses/gradients stay inside `acc` until
-/// `finish_into`.
+/// index-keyed either way, so the bits are identical.
+///
+/// `seen` is the delivered-slot bitmask (persistent caller storage): it
+/// guards against duplicate slots on every path and, when a worker is
+/// lost, attributes the loss — the first undelivered slot `j` belongs
+/// to rank `j % nw`. A channel closure (or, with `pooled_recv`, a
+/// per-worker socket closure) before all slots arrive surfaces as the
+/// targeted [`WorkerLost`] error instead of the old ambiguous "workers
+/// exited" catch-all, which conflated a dead worker with orderly
+/// shutdown.
+///
+/// With `pooled_recv` each received gradient is copied into a pooled
+/// message (reusing recycled storage) before entering the tree — the
+/// socket path's decoded frames are fresh network allocations, and
+/// absorbing them directly would grow the pool by `m` buffers every
+/// step. `deadline` is the round's eviction deadline (socket
+/// `max_round_ms`). Returns the straggler-timeout event count;
+/// losses/gradients stay inside `acc` until `finish_into`.
 #[allow(clippy::too_many_arguments)]
 fn collect_micro_grads(
     plan: &CompressPlan,
@@ -1236,54 +1532,112 @@ fn collect_micro_grads(
     pool: &mut BufferPool,
     scratch: &mut Vec<f32>,
     stage: &mut Vec<StagedMicro>,
-    rx: &mpsc::Receiver<MicroResult>,
+    seen: &mut Vec<u64>,
+    link: &mut dyn Transport,
     m: usize,
+    nw: usize,
+    round: u64,
     timeout_ms: u64,
+    deadline: Option<Instant>,
     pipeline: bool,
+    pooled_recv: bool,
 ) -> Result<u64> {
     let mut timeouts = 0u64;
     if !pipeline {
         stage.clear();
         stage.resize_with(m, || None);
     }
-    let mut staged = 0usize;
-    let done = |acc: &MicroAccumulator, staged: usize| {
-        if pipeline {
-            acc.done()
+    seen.clear();
+    seen.resize(m.div_ceil(64), 0);
+    let mut delivered = 0usize;
+    let is_seen = |seen: &[u64], j: usize| seen[j / 64] >> (j % 64) & 1 == 1;
+    let first_missing =
+        |seen: &[u64]| (0..m).find(|&j| !is_seen(seen, j)).unwrap_or(0);
+    while delivered < m {
+        // Straggler detection (`timeout_ms`) sets the poll period when
+        // on; otherwise a round deadline is polled at a bounded period;
+        // otherwise block until a frame or closure arrives.
+        let wait = if timeout_ms > 0 {
+            Some(Duration::from_millis(timeout_ms))
+        } else if let Some(dl) = deadline {
+            let now = Instant::now();
+            if now >= dl {
+                let j = first_missing(seen);
+                return Err(
+                    WorkerLost { worker: j % nw.max(1), round, delivered, expected: m }
+                        .into_error(),
+                );
+            }
+            Some((dl - now).min(Duration::from_millis(200)))
         } else {
-            staged >= m
-        }
-    };
-    while !done(acc, staged) {
-        let (j, n_tok, res) = if timeout_ms > 0 {
-            match rx.recv_timeout(Duration::from_millis(timeout_ms)) {
-                Ok(msg) => msg,
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    timeouts += 1;
-                    continue;
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    anyhow::bail!(
-                        "workers exited with {}/{m} micro-batches delivered",
-                        acc.received.max(staged)
-                    );
+            None
+        };
+        match link.recv_frame(wait) {
+            RecvEvent::Micro { worker: _, slot: j, n_tok, loss, grad } => {
+                anyhow::ensure!(
+                    j < m && !is_seen(seen, j),
+                    "duplicate micro-batch slot {j}"
+                );
+                seen[j / 64] |= 1 << (j % 64);
+                delivered += 1;
+                let enc = if pooled_recv {
+                    let mut pooled = pool.get_encoded();
+                    pooled.copy_from(&grad);
+                    pooled
+                } else {
+                    grad
+                };
+                if pipeline {
+                    acc.push(plan, pool, scratch, j, n_tok, loss, enc)?;
+                } else {
+                    stage[j] = Some((n_tok, loss, enc));
                 }
             }
-        } else {
-            rx.recv().map_err(|_| {
-                anyhow::anyhow!(
-                    "workers exited with {}/{m} micro-batches delivered",
-                    acc.received.max(staged)
-                )
-            })?
-        };
-        let (loss, enc) = res?;
-        if pipeline {
-            acc.push(plan, pool, scratch, j, n_tok, loss, enc)?;
-        } else {
-            anyhow::ensure!(j < m && stage[j].is_none(), "duplicate micro-batch slot {j}");
-            stage[j] = Some((n_tok, loss, enc));
-            staged += 1;
+            RecvEvent::Failed { worker, message } => {
+                anyhow::bail!("worker {worker} failed computing a micro-batch: {message}");
+            }
+            // An orderly leave takes effect at the round boundary; the
+            // leaving worker keeps serving this round's slots.
+            RecvEvent::Leave { .. } => continue,
+            RecvEvent::Timeout => {
+                if timeout_ms > 0 {
+                    timeouts += 1;
+                }
+                if let Some(dl) = deadline {
+                    if Instant::now() >= dl {
+                        let j = first_missing(seen);
+                        return Err(WorkerLost {
+                            worker: j % nw.max(1),
+                            round,
+                            delivered,
+                            expected: m,
+                        }
+                        .into_error());
+                    }
+                }
+            }
+            RecvEvent::Closed { worker } => {
+                // Attribute the loss: a per-worker closure names its
+                // rank directly; a whole-channel closure is pinned on
+                // the owner of the first undelivered slot.
+                let rank = match worker {
+                    Some(w) => {
+                        // A closed worker that already delivered all its
+                        // slots (e.g. teardown racing the last frame)
+                        // costs nothing this step.
+                        let owes =
+                            (w..m).step_by(nw.max(1)).any(|j| !is_seen(seen, j));
+                        if !owes {
+                            continue;
+                        }
+                        w
+                    }
+                    None => first_missing(seen) % nw.max(1),
+                };
+                return Err(
+                    WorkerLost { worker: rank, round, delivered, expected: m }.into_error()
+                );
+            }
         }
     }
     if !pipeline {
@@ -1294,4 +1648,83 @@ fn collect_micro_grads(
         }
     }
     Ok(timeouts)
+}
+
+#[cfg(test)]
+mod collect_tests {
+    use super::*;
+
+    /// Regression for the old `Disconnected` arm: a dead worker must
+    /// surface as a targeted `WorkerLost` naming the rank and round,
+    /// not as an ambiguous "workers exited" shutdown message.
+    #[test]
+    fn dead_worker_surfaces_as_worker_lost() {
+        let m = 4;
+        let nw = 2;
+        let plan = CompressPlan::new(CompressCfg::default(), vec![], vec![0, 1, 2, 3], 4);
+        let mut acc = MicroAccumulator::new(m);
+        acc.begin(m);
+        let mut pool = BufferPool::new();
+        let mut scratch = Vec::new();
+        let mut stage = Vec::new();
+        let mut seen = Vec::new();
+        let mut link = InMemory::new(nw);
+        let sender = link.sender();
+        // Worker 0 delivers its slots (0, 2); worker 1 dies silently.
+        for j in [0usize, 2] {
+            sender.send_frame(Frame::Micro {
+                worker: 0,
+                slot: j as u32,
+                n_tok: 8,
+                loss: 1.0,
+                grad: EncodedGrad::Dense(vec![0.0; 4]),
+            });
+        }
+        drop(sender);
+        link.seal();
+        let err = collect_micro_grads(
+            &plan, &mut acc, &mut pool, &mut scratch, &mut stage, &mut seen, &mut link, m,
+            nw, 3, 0, None, true, false,
+        )
+        .expect_err("losing a worker mid-round must error");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("worker 1 lost in round 3"),
+            "error must name the lost rank and round: {msg}"
+        );
+        assert!(msg.contains("2/4"), "error must report delivery progress: {msg}");
+    }
+
+    /// The duplicate-slot guard now covers the pipelined path too (it
+    /// used to exist only behind the barrier).
+    #[test]
+    fn duplicate_slot_is_rejected() {
+        let m = 2;
+        let plan = CompressPlan::new(CompressCfg::default(), vec![], vec![0, 1], 2);
+        let mut acc = MicroAccumulator::new(m);
+        acc.begin(m);
+        let mut pool = BufferPool::new();
+        let mut scratch = Vec::new();
+        let mut stage = Vec::new();
+        let mut seen = Vec::new();
+        let mut link = InMemory::new(1);
+        let sender = link.sender();
+        for _ in 0..2 {
+            sender.send_frame(Frame::Micro {
+                worker: 0,
+                slot: 1,
+                n_tok: 8,
+                loss: 1.0,
+                grad: EncodedGrad::Dense(vec![0.0; 2]),
+            });
+        }
+        drop(sender);
+        link.seal();
+        let err = collect_micro_grads(
+            &plan, &mut acc, &mut pool, &mut scratch, &mut stage, &mut seen, &mut link, m, 1,
+            1, 0, None, true, false,
+        )
+        .expect_err("duplicate slots must error");
+        assert!(format!("{err:#}").contains("duplicate micro-batch slot 1"));
+    }
 }

@@ -394,7 +394,13 @@ mod tests {
             clip: None,
         };
         let init = model.init_flat(0);
-        let engine = Engine::new(mb, cfg, sources, init).unwrap();
+        let engine = Engine::builder()
+            .mask_builder(mb)
+            .cfg(cfg)
+            .sources(sources)
+            .init_flat(init)
+            .build()
+            .unwrap();
         (Orchestrator::new(engine), model)
     }
 

@@ -1,0 +1,1044 @@
+//! Transport abstraction for the engine's worker communication.
+//!
+//! The deterministic tree all-reduce keys its combine grouping by
+//! micro-batch index, never by arrival order, so the engine's
+//! `--workers 1 ≡ --workers N` bit-identity is transport-independent:
+//! any channel that delivers each leaf message bit-exactly produces the
+//! same reduced gradient. This module makes that a first-class contract
+//! — a [`Transport`] trait ([`connect`](Transport::connect) /
+//! [`send_frame`](Transport::send_frame) /
+//! [`recv_frame`](Transport::recv_frame) /
+//! [`membership`](Transport::membership)) over length-prefixed
+//! [`Frame`]s whose gradient payloads reuse the
+//! [`compress`](super::compress) encodings **verbatim** — with two
+//! backends:
+//!
+//! - [`InMemory`]: wraps the engine's historical `mpsc` channel between
+//!   worker threads and the collector. Frames are moved, never
+//!   serialized, so this is bit- and allocation-identical to the
+//!   pre-trait engine.
+//! - Sockets (UDS by default, TCP opt-in): each worker is its own OS
+//!   process (`frugal worker`), speaking the binary frame codec below.
+//!   The coordinator side lives in [`super::coordinator`].
+//!
+//! # Framing
+//!
+//! Every frame is `[u32 LE body length][u8 tag][body]`. Scalars are
+//! little-endian; vectors are a `u32` element count followed by the
+//! elements; strings are `u32` byte length + UTF-8. Gradient payloads
+//! serialize the [`Payload`] variants field by field (sign words as
+//! `u64` LE, q8 values as raw `i8`, scales as `f32` LE), so a decoded
+//! frame carries exactly the bits the encoder held.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::compress::{CompressMode, EncodedGrad, Payload};
+use crate::Result;
+
+/// Which wire the engine's workers speak
+/// (`[parallel.transport] kind` / `frugal pretrain --transport`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Worker threads in this process over in-memory channels (the
+    /// historical engine; bit- and allocation-identical to it).
+    #[default]
+    Memory,
+    /// Unix-domain socket, one `frugal worker` OS process per worker —
+    /// the multi-process default.
+    Uds,
+    /// TCP (loopback or real network) — opt-in via an explicit
+    /// `addr = "host:port"`.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse the CLI/config spelling (`memory | uds | tcp`).
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "memory" => Ok(TransportKind::Memory),
+            "uds" => Ok(TransportKind::Uds),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => anyhow::bail!("unknown transport '{other}' (expected memory|uds|tcp)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Memory => "memory",
+            TransportKind::Uds => "uds",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The `[parallel.transport]` run-config section.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportCfg {
+    pub kind: TransportKind,
+    /// Socket address: a filesystem path for `uds`, `host:port` for
+    /// `tcp`. Defaults: a fresh path under the system temp dir (uds),
+    /// `127.0.0.1:0` (tcp).
+    pub addr: Option<String>,
+    /// Join window: the coordinator waits this long for all `workers`
+    /// processes to connect before giving up.
+    pub warmup_ms: u64,
+    /// Evict-the-round deadline: if a round's collect exceeds this, the
+    /// slowest worker is declared lost (0 = no deadline).
+    pub max_round_ms: u64,
+    /// Liveness poll granularity while waiting on the wire (also the
+    /// receive timeout used to notice closed connections promptly).
+    pub heartbeat_ms: u64,
+    /// Spawn `frugal worker` child processes automatically (true), or
+    /// expect externally launched workers to connect (false).
+    pub spawn: bool,
+}
+
+impl Default for TransportCfg {
+    fn default() -> Self {
+        TransportCfg {
+            kind: TransportKind::Memory,
+            addr: None,
+            warmup_ms: 10_000,
+            max_round_ms: 0,
+            heartbeat_ms: 250,
+            spawn: true,
+        }
+    }
+}
+
+/// Everything that crosses a transport, control and data alike. The
+/// gradient payload of [`Frame::Micro`] is the round codec's
+/// [`EncodedGrad`] unchanged — compression *is* the wire format.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker → coordinator, once per connection: request admission.
+    Hello,
+    /// Coordinator → worker: admission, with a stable worker id and the
+    /// run config (TOML) the worker should build its sources from.
+    Welcome { worker: u64, config: String },
+    /// Coordinator → worker at every round boundary: the round's
+    /// membership view (this worker's `rank` of `workers`), codec plan
+    /// (mode/block over the `full`/`free` lane sets), and — after a
+    /// mid-round restore — the slot-keyed EF residuals to resume from
+    /// (empty otherwise; workers start their slots at zero).
+    RoundBegin {
+        round: u64,
+        rank: u32,
+        workers: u32,
+        grad_accum: u32,
+        padded: u32,
+        mode: CompressMode,
+        block: u32,
+        full: Vec<u32>,
+        free: Vec<u32>,
+        residuals: Vec<Vec<f32>>,
+    },
+    /// Coordinator → worker: compute your slots of this step against
+    /// these parameters (`step` is 0-based; micro-batch `j`'s global
+    /// data index is `step * grad_accum + j`).
+    StepBegin { step: u64, flat: Vec<f32> },
+    /// Worker → coordinator: one micro-batch result (the tree leaf).
+    Micro { worker: u64, slot: u32, n_tok: u32, loss: f32, grad: EncodedGrad },
+    /// Worker → coordinator: a gradient computation failed.
+    Failed { worker: u64, message: String },
+    /// Worker → coordinator: please drop me at the next round boundary.
+    /// The worker keeps serving steps until [`Frame::Shutdown`] arrives
+    /// — membership only ever changes at boundaries.
+    Leave { worker: u64 },
+    /// Coordinator → worker: the run (or this worker's membership) is
+    /// over; exit cleanly.
+    Shutdown,
+}
+
+/// What a collector-side [`Transport::recv_frame`] yields.
+#[derive(Debug)]
+pub enum RecvEvent {
+    /// A micro-batch leaf arrived. `worker` is the sender's current
+    /// rank (its slot-ownership index), not its stable id.
+    Micro { worker: usize, slot: usize, n_tok: usize, loss: f32, grad: EncodedGrad },
+    /// A worker reported a gradient failure.
+    Failed { worker: usize, message: String },
+    /// A worker asked to leave at the next round boundary.
+    Leave { worker: usize },
+    /// A connection closed. `Some(rank)` when attributable to one
+    /// worker (sockets); `None` when the whole channel shut down
+    /// (in-memory: every sender dropped).
+    Closed { worker: Option<usize> },
+    /// `recv_frame`'s timeout elapsed with nothing to deliver.
+    Timeout,
+}
+
+/// Membership view: the stable ids of the currently-admitted workers,
+/// in rank order (rank `r` owns micro-batch slots `j ≡ r mod N`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Membership {
+    pub ids: Vec<u64>,
+}
+
+impl Membership {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// Collector-side endpoint of a worker channel. The engine's collect
+/// loop is written against this trait, so the in-memory and socket
+/// backends drain through identical logic (and stay bit-identical —
+/// the tree grouping is index-keyed, so arrival order is free).
+pub trait Transport {
+    /// Establish the endpoint: bind/spawn/admit for sockets, a no-op
+    /// in memory.
+    fn connect(&mut self) -> Result<()>;
+
+    /// Send a control frame to the worker at `rank`. In-memory workers
+    /// share the collector's address space and read engine state
+    /// directly, so this is a no-op there.
+    fn send_frame(&mut self, rank: usize, frame: &Frame) -> Result<()>;
+
+    /// The next inbound event, waiting at most `timeout` (`None` =
+    /// block until something arrives or the channel closes).
+    fn recv_frame(&mut self, timeout: Option<Duration>) -> RecvEvent;
+
+    /// The current membership view.
+    fn membership(&self) -> Membership;
+}
+
+/// A worker died while the collector still needed its micro-batches —
+/// the targeted replacement for the old "workers exited" catch-all
+/// (which conflated a dead worker with orderly shutdown), and the
+/// socket backend's eviction signal. The vendored `anyhow` shim has no
+/// downcast, so the rendered message is the stable detection surface:
+/// it always contains `"worker <rank> lost in round <round>"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerLost {
+    /// Rank of the lost worker (its slot-ownership index this round).
+    pub worker: usize,
+    /// 1-based round in which it was lost.
+    pub round: u64,
+    /// Micro-batches delivered before the loss was detected.
+    pub delivered: usize,
+    /// Micro-batches the step needed.
+    pub expected: usize,
+}
+
+impl std::fmt::Display for WorkerLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "worker {} lost in round {} with {}/{} micro-batches delivered",
+            self.worker, self.round, self.delivered, self.expected
+        )
+    }
+}
+
+impl WorkerLost {
+    pub fn into_error(self) -> anyhow::Error {
+        anyhow::anyhow!("{self}")
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-memory backend
+// ---------------------------------------------------------------------
+
+/// The in-memory backend: today's worker-thread `mpsc` channel behind
+/// the [`Transport`] trait. Frames are moved by value — no
+/// serialization, no extra copies — so the engine's threaded path is
+/// bit- and allocation-identical to its pre-trait behavior (the channel
+/// nodes are the same small `mpsc` allocations as before).
+pub struct InMemory {
+    rx: mpsc::Receiver<Frame>,
+    /// Held only to mint worker senders; dropped by [`InMemory::seal`]
+    /// so a fully-drained channel reports `Closed` once all workers
+    /// finish.
+    tx: Option<mpsc::Sender<Frame>>,
+    workers: usize,
+}
+
+/// A worker's sending half of an [`InMemory`] channel.
+#[derive(Clone)]
+pub struct InMemorySender {
+    tx: mpsc::Sender<Frame>,
+}
+
+impl InMemorySender {
+    /// Send a frame to the collector. Returns false when the collector
+    /// bailed (workers should just stop producing).
+    pub fn send_frame(&self, frame: Frame) -> bool {
+        self.tx.send(frame).is_ok()
+    }
+}
+
+impl InMemory {
+    pub fn new(workers: usize) -> InMemory {
+        let (tx, rx) = mpsc::channel();
+        InMemory { rx, tx: Some(tx), workers }
+    }
+
+    /// Mint a worker's sending half.
+    pub fn sender(&self) -> InMemorySender {
+        InMemorySender { tx: self.tx.as_ref().expect("sealed channel").clone() }
+    }
+
+    /// Drop the collector's own sender so the channel reports `Closed`
+    /// once every worker's half is gone (mirrors the historical
+    /// `drop(tx)` before the collect loop).
+    pub fn seal(&mut self) {
+        self.tx = None;
+    }
+
+    fn translate(frame: Frame) -> RecvEvent {
+        match frame {
+            Frame::Micro { worker, slot, n_tok, loss, grad } => RecvEvent::Micro {
+                worker: worker as usize,
+                slot: slot as usize,
+                n_tok: n_tok as usize,
+                loss,
+                grad,
+            },
+            Frame::Failed { worker, message } => {
+                RecvEvent::Failed { worker: worker as usize, message }
+            }
+            Frame::Leave { worker } => RecvEvent::Leave { worker: worker as usize },
+            // Control frames never travel worker → collector in memory.
+            _ => RecvEvent::Closed { worker: None },
+        }
+    }
+}
+
+impl Transport for InMemory {
+    fn connect(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn send_frame(&mut self, _rank: usize, _frame: &Frame) -> Result<()> {
+        Ok(())
+    }
+
+    fn recv_frame(&mut self, timeout: Option<Duration>) -> RecvEvent {
+        match timeout {
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(f) => Self::translate(f),
+                Err(mpsc::RecvTimeoutError::Timeout) => RecvEvent::Timeout,
+                Err(mpsc::RecvTimeoutError::Disconnected) => RecvEvent::Closed { worker: None },
+            },
+            None => match self.rx.recv() {
+                Ok(f) => Self::translate(f),
+                Err(_) => RecvEvent::Closed { worker: None },
+            },
+        }
+    }
+
+    fn membership(&self) -> Membership {
+        Membership { ids: (0..self.workers as u64).collect() }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Binary frame codec
+// ---------------------------------------------------------------------
+
+const TAG_HELLO: u8 = 0;
+const TAG_WELCOME: u8 = 1;
+const TAG_ROUND_BEGIN: u8 = 2;
+const TAG_STEP_BEGIN: u8 = 3;
+const TAG_MICRO: u8 = 4;
+const TAG_FAILED: u8 = 5;
+const TAG_LEAVE: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+
+const PAYLOAD_F32: u8 = 0;
+const PAYLOAD_SIGN: u8 = 1;
+const PAYLOAD_Q8: u8 = 2;
+
+const GRAD_DENSE: u8 = 0;
+const GRAD_SPLIT: u8 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_u32s(out: &mut Vec<u8>, v: &[u32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_u32(out, x);
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_f32(out, x);
+    }
+}
+
+fn mode_tag(mode: CompressMode) -> u8 {
+    match mode {
+        CompressMode::None => 0,
+        CompressMode::SignEf => 1,
+        CompressMode::Q8 => 2,
+        CompressMode::Split => 3,
+    }
+}
+
+fn mode_from_tag(tag: u8) -> Result<CompressMode> {
+    Ok(match tag {
+        0 => CompressMode::None,
+        1 => CompressMode::SignEf,
+        2 => CompressMode::Q8,
+        3 => CompressMode::Split,
+        other => anyhow::bail!("frame decode: unknown compress-mode tag {other}"),
+    })
+}
+
+fn put_payload(out: &mut Vec<u8>, p: &Payload) {
+    match p {
+        Payload::F32(v) => {
+            out.push(PAYLOAD_F32);
+            put_f32s(out, v);
+        }
+        Payload::Sign { len, block, bits, scales } => {
+            out.push(PAYLOAD_SIGN);
+            put_u32(out, *len as u32);
+            put_u32(out, *block as u32);
+            put_u32(out, bits.len() as u32);
+            for &w in bits {
+                put_u64(out, w);
+            }
+            put_f32s(out, scales);
+        }
+        Payload::Q8 { len, block, q, scales } => {
+            out.push(PAYLOAD_Q8);
+            put_u32(out, *len as u32);
+            put_u32(out, *block as u32);
+            put_u32(out, q.len() as u32);
+            out.extend(q.iter().map(|&x| x as u8));
+            put_f32s(out, scales);
+        }
+    }
+}
+
+fn put_grad(out: &mut Vec<u8>, g: &EncodedGrad) {
+    match g {
+        EncodedGrad::Dense(v) => {
+            out.push(GRAD_DENSE);
+            put_f32s(out, v);
+        }
+        EncodedGrad::Split { full, free } => {
+            out.push(GRAD_SPLIT);
+            put_payload(out, full);
+            put_payload(out, free);
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over one frame body.
+struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    fn new(buf: &'a [u8]) -> FrameReader<'a> {
+        FrameReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "frame decode: truncated body (wanted {n} bytes at offset {}, have {})",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)
+            .map_err(|_| anyhow::anyhow!("frame decode: invalid UTF-8 string"))?
+            .to_string())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn payload(&mut self) -> Result<Payload> {
+        match self.u8()? {
+            PAYLOAD_F32 => Ok(Payload::F32(self.f32s()?)),
+            PAYLOAD_SIGN => {
+                let len = self.u32()? as usize;
+                let block = self.u32()? as usize;
+                let nwords = self.u32()? as usize;
+                let bytes = self.take(nwords * 8)?;
+                let bits = bytes
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let scales = self.f32s()?;
+                Ok(Payload::Sign { len, block, bits, scales })
+            }
+            PAYLOAD_Q8 => {
+                let len = self.u32()? as usize;
+                let block = self.u32()? as usize;
+                let nq = self.u32()? as usize;
+                let q = self.take(nq)?.iter().map(|&b| b as i8).collect();
+                let scales = self.f32s()?;
+                Ok(Payload::Q8 { len, block, q, scales })
+            }
+            other => anyhow::bail!("frame decode: unknown payload tag {other}"),
+        }
+    }
+
+    fn grad(&mut self) -> Result<EncodedGrad> {
+        match self.u8()? {
+            GRAD_DENSE => Ok(EncodedGrad::Dense(self.f32s()?)),
+            GRAD_SPLIT => {
+                let full = self.payload()?;
+                let free = self.payload()?;
+                Ok(EncodedGrad::Split { full, free })
+            }
+            other => anyhow::bail!("frame decode: unknown grad tag {other}"),
+        }
+    }
+}
+
+/// Serialize `frame` (tag + body, no length prefix) into `out`.
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    out.clear();
+    match frame {
+        Frame::Hello => out.push(TAG_HELLO),
+        Frame::Welcome { worker, config } => {
+            out.push(TAG_WELCOME);
+            put_u64(out, *worker);
+            put_str(out, config);
+        }
+        Frame::RoundBegin {
+            round,
+            rank,
+            workers,
+            grad_accum,
+            padded,
+            mode,
+            block,
+            full,
+            free,
+            residuals,
+        } => {
+            out.push(TAG_ROUND_BEGIN);
+            put_u64(out, *round);
+            put_u32(out, *rank);
+            put_u32(out, *workers);
+            put_u32(out, *grad_accum);
+            put_u32(out, *padded);
+            out.push(mode_tag(*mode));
+            put_u32(out, *block);
+            put_u32s(out, full);
+            put_u32s(out, free);
+            put_u32(out, residuals.len() as u32);
+            for r in residuals {
+                put_f32s(out, r);
+            }
+        }
+        Frame::StepBegin { step, flat } => {
+            out.push(TAG_STEP_BEGIN);
+            put_u64(out, *step);
+            put_f32s(out, flat);
+        }
+        Frame::Micro { worker, slot, n_tok, loss, grad } => {
+            out.push(TAG_MICRO);
+            put_u64(out, *worker);
+            put_u32(out, *slot);
+            put_u32(out, *n_tok);
+            put_f32(out, *loss);
+            put_grad(out, grad);
+        }
+        Frame::Failed { worker, message } => {
+            out.push(TAG_FAILED);
+            put_u64(out, *worker);
+            put_str(out, message);
+        }
+        Frame::Leave { worker } => {
+            out.push(TAG_LEAVE);
+            put_u64(out, *worker);
+        }
+        Frame::Shutdown => out.push(TAG_SHUTDOWN),
+    }
+}
+
+/// Decode one frame body (tag + body, as produced by [`encode_frame`]).
+pub fn decode_frame(body: &[u8]) -> Result<Frame> {
+    let mut r = FrameReader::new(body);
+    let frame = match r.u8()? {
+        TAG_HELLO => Frame::Hello,
+        TAG_WELCOME => Frame::Welcome { worker: r.u64()?, config: r.string()? },
+        TAG_ROUND_BEGIN => {
+            let round = r.u64()?;
+            let rank = r.u32()?;
+            let workers = r.u32()?;
+            let grad_accum = r.u32()?;
+            let padded = r.u32()?;
+            let mode = mode_from_tag(r.u8()?)?;
+            let block = r.u32()?;
+            let full = r.u32s()?;
+            let free = r.u32s()?;
+            let nres = r.u32()? as usize;
+            let mut residuals = Vec::with_capacity(nres);
+            for _ in 0..nres {
+                residuals.push(r.f32s()?);
+            }
+            Frame::RoundBegin {
+                round,
+                rank,
+                workers,
+                grad_accum,
+                padded,
+                mode,
+                block,
+                full,
+                free,
+                residuals,
+            }
+        }
+        TAG_STEP_BEGIN => Frame::StepBegin { step: r.u64()?, flat: r.f32s()? },
+        TAG_MICRO => Frame::Micro {
+            worker: r.u64()?,
+            slot: r.u32()?,
+            n_tok: r.u32()?,
+            loss: r.f32()?,
+            grad: r.grad()?,
+        },
+        TAG_FAILED => Frame::Failed { worker: r.u64()?, message: r.string()? },
+        TAG_LEAVE => Frame::Leave { worker: r.u64()? },
+        TAG_SHUTDOWN => Frame::Shutdown,
+        other => anyhow::bail!("frame decode: unknown frame tag {other}"),
+    };
+    anyhow::ensure!(
+        r.pos == body.len(),
+        "frame decode: {} trailing bytes after a well-formed frame",
+        body.len() - r.pos
+    );
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------
+// Socket streams + framed IO
+// ---------------------------------------------------------------------
+
+/// One socket connection (either flavor), read/write passthrough.
+#[derive(Debug)]
+pub enum Stream {
+    Unix(std::os::unix::net::UnixStream),
+    Tcp(std::net::TcpStream),
+}
+
+impl Stream {
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+        })
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(d),
+            Stream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub fn shutdown(&self) {
+        match self {
+            Stream::Unix(s) => {
+                s.shutdown(std::net::Shutdown::Both).ok();
+            }
+            Stream::Tcp(s) => {
+                s.shutdown(std::net::Shutdown::Both).ok();
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Listening socket of either flavor.
+pub enum Listener {
+    Unix(std::os::unix::net::UnixListener),
+    Tcp(std::net::TcpListener),
+}
+
+impl Listener {
+    /// Bind `kind` at `addr` (a path for uds, host:port for tcp).
+    /// Returns the listener and the *actual* address (tcp port 0 is
+    /// resolved to the assigned port).
+    pub fn bind(kind: TransportKind, addr: &str) -> Result<(Listener, String)> {
+        match kind {
+            TransportKind::Uds => {
+                // A stale socket file from a crashed run blocks rebinding.
+                std::fs::remove_file(addr).ok();
+                let l = std::os::unix::net::UnixListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("bind uds {addr}: {e}"))?;
+                Ok((Listener::Unix(l), addr.to_string()))
+            }
+            TransportKind::Tcp => {
+                let l = std::net::TcpListener::bind(addr)
+                    .map_err(|e| anyhow::anyhow!("bind tcp {addr}: {e}"))?;
+                let actual = l.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.into());
+                Ok((Listener::Tcp(l), actual))
+            }
+            TransportKind::Memory => anyhow::bail!("the in-memory transport has no listener"),
+        }
+    }
+
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+/// The default socket address for `kind`: a fresh temp-dir path (uds)
+/// or an ephemeral loopback port (tcp).
+pub fn default_addr(kind: TransportKind) -> String {
+    match kind {
+        TransportKind::Tcp => "127.0.0.1:0".to_string(),
+        _ => {
+            use std::sync::atomic::{AtomicU64, Ordering};
+            static SEQ: AtomicU64 = AtomicU64::new(0);
+            let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+            std::env::temp_dir()
+                .join(format!("frugal_{}_{seq}.sock", std::process::id()))
+                .to_string_lossy()
+                .into_owned()
+        }
+    }
+}
+
+/// Connect to a coordinator at `addr`, retrying until `timeout` (the
+/// listener may not be bound yet when a worker starts).
+pub fn worker_connect_retry(kind: TransportKind, addr: &str, timeout: Duration) -> Result<Stream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let attempt = match kind {
+            TransportKind::Uds => {
+                std::os::unix::net::UnixStream::connect(addr).map(Stream::Unix)
+            }
+            TransportKind::Tcp => std::net::TcpStream::connect(addr).map(Stream::Tcp),
+            TransportKind::Memory => {
+                anyhow::bail!("the in-memory transport has no socket to connect")
+            }
+        };
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    anyhow::bail!("connect {kind} {addr}: {e} (gave up after {timeout:?})");
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Framed, metered IO over one [`Stream`]: length-prefixed frames in
+/// both directions, with byte/frame counters for the transport
+/// telemetry plane.
+pub struct FrameIo {
+    stream: Stream,
+    wbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+    pub sent_frames: u64,
+    pub sent_bytes: u64,
+    pub recv_frames: u64,
+    pub recv_bytes: u64,
+}
+
+impl FrameIo {
+    pub fn new(stream: Stream) -> FrameIo {
+        FrameIo {
+            stream,
+            wbuf: Vec::new(),
+            rbuf: Vec::new(),
+            sent_frames: 0,
+            sent_bytes: 0,
+            recv_frames: 0,
+            recv_bytes: 0,
+        }
+    }
+
+    pub fn stream(&self) -> &Stream {
+        &self.stream
+    }
+
+    /// Serialize and send one frame (`[u32 LE length][tag][body]`).
+    /// Returns the bytes written (prefix included).
+    pub fn send(&mut self, frame: &Frame) -> Result<u64> {
+        encode_frame(frame, &mut self.wbuf);
+        self.send_encoded()
+    }
+
+    /// Send a [`Frame::Micro`] from a *borrowed* gradient — the hot
+    /// path: the worker keeps one persistent [`EncodedGrad`] buffer and
+    /// re-encodes into it every slot.
+    pub fn send_micro(
+        &mut self,
+        worker: u64,
+        slot: u32,
+        n_tok: u32,
+        loss: f32,
+        grad: &EncodedGrad,
+    ) -> Result<u64> {
+        self.wbuf.clear();
+        self.wbuf.push(TAG_MICRO);
+        put_u64(&mut self.wbuf, worker);
+        put_u32(&mut self.wbuf, slot);
+        put_u32(&mut self.wbuf, n_tok);
+        put_f32(&mut self.wbuf, loss);
+        put_grad(&mut self.wbuf, grad);
+        self.send_encoded()
+    }
+
+    fn send_encoded(&mut self) -> Result<u64> {
+        let len = (self.wbuf.len() as u32).to_le_bytes();
+        self.stream.write_all(&len).map_err(|e| anyhow::anyhow!("frame send: {e}"))?;
+        self.stream.write_all(&self.wbuf).map_err(|e| anyhow::anyhow!("frame send: {e}"))?;
+        self.stream.flush().map_err(|e| anyhow::anyhow!("frame send: {e}"))?;
+        let n = 4 + self.wbuf.len() as u64;
+        self.sent_frames += 1;
+        self.sent_bytes += n;
+        Ok(n)
+    }
+
+    /// Receive the next frame; `Ok(None)` on a clean EOF at a frame
+    /// boundary (the peer closed).
+    pub fn recv(&mut self) -> Result<Option<Frame>> {
+        let mut len = [0u8; 4];
+        match read_exact_or_eof(&mut self.stream, &mut len) {
+            Ok(false) => return Ok(None),
+            Ok(true) => {}
+            Err(e) => anyhow::bail!("frame recv: {e}"),
+        }
+        let n = u32::from_le_bytes(len) as usize;
+        self.rbuf.clear();
+        self.rbuf.resize(n, 0);
+        self.stream
+            .read_exact(&mut self.rbuf)
+            .map_err(|e| anyhow::anyhow!("frame recv: truncated frame: {e}"))?;
+        self.recv_frames += 1;
+        self.recv_bytes += 4 + n as u64;
+        decode_frame(&self.rbuf).map(Some)
+    }
+
+    pub fn shutdown(&self) {
+        self.stream.shutdown();
+    }
+}
+
+/// `read_exact`, but distinguishing a clean EOF before the first byte
+/// (`Ok(false)`) from a mid-buffer truncation (`Err`).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Clean up a UDS socket file (coordinator teardown).
+pub fn remove_uds_path(path: &str) {
+    let p = PathBuf::from(path);
+    std::fs::remove_file(p).ok();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: &Frame) {
+        let mut bytes = Vec::new();
+        encode_frame(frame, &mut bytes);
+        let back = decode_frame(&bytes).unwrap();
+        assert_eq!(&back, frame);
+        // Re-encoding the decoded frame reproduces the same bytes —
+        // the codec is canonical.
+        let mut again = Vec::new();
+        encode_frame(&back, &mut again);
+        assert_eq!(bytes, again);
+    }
+
+    #[test]
+    fn frame_codec_roundtrips_every_variant() {
+        roundtrip(&Frame::Hello);
+        roundtrip(&Frame::Welcome { worker: 3, config: "steps = 4\n".into() });
+        roundtrip(&Frame::RoundBegin {
+            round: 7,
+            rank: 1,
+            workers: 4,
+            grad_accum: 8,
+            padded: 128,
+            mode: CompressMode::Split,
+            block: 64,
+            full: vec![0, 5, 9],
+            free: vec![1, 2, 3],
+            residuals: vec![vec![0.25, -1.5], vec![]],
+        });
+        roundtrip(&Frame::StepBegin { step: 11, flat: vec![1.0, -0.0, f32::MIN_POSITIVE] });
+        roundtrip(&Frame::Micro {
+            worker: 2,
+            slot: 5,
+            n_tok: 64,
+            loss: 3.25,
+            grad: EncodedGrad::Dense(vec![0.5, -2.0]),
+        });
+        roundtrip(&Frame::Micro {
+            worker: 0,
+            slot: 0,
+            n_tok: 1,
+            loss: -0.5,
+            grad: EncodedGrad::Split {
+                full: Payload::Q8 { len: 3, block: 2, q: vec![-127, 0, 5], scales: vec![0.1, 0.2] },
+                free: Payload::Sign {
+                    len: 9,
+                    block: 4,
+                    bits: vec![0b1_0110_1001],
+                    scales: vec![1.0, 2.0, 3.0],
+                },
+            },
+        });
+        roundtrip(&Frame::Failed { worker: 1, message: "boom".into() });
+        roundtrip(&Frame::Leave { worker: 9 });
+        roundtrip(&Frame::Shutdown);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_frame(&[]).is_err());
+        assert!(decode_frame(&[200]).is_err());
+        // Truncated Welcome: claims an 8-byte id but the body ends.
+        assert!(decode_frame(&[TAG_WELCOME, 1, 2]).is_err());
+        // Trailing junk after a well-formed Hello.
+        assert!(decode_frame(&[TAG_HELLO, 0]).is_err());
+    }
+
+    #[test]
+    fn worker_lost_message_is_detectable() {
+        let e = WorkerLost { worker: 2, round: 5, delivered: 3, expected: 8 }.into_error();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("worker 2 lost in round 5"), "{msg}");
+        assert!(msg.contains("3/8"), "{msg}");
+    }
+
+    #[test]
+    fn in_memory_transport_delivers_and_reports_closure() {
+        let mut t = InMemory::new(2);
+        let s = t.sender();
+        assert_eq!(t.membership().len(), 2);
+        s.send_frame(Frame::Micro {
+            worker: 1,
+            slot: 3,
+            n_tok: 10,
+            loss: 0.5,
+            grad: EncodedGrad::Dense(vec![1.0]),
+        });
+        drop(s);
+        t.seal();
+        match t.recv_frame(None) {
+            RecvEvent::Micro { worker: 1, slot: 3, n_tok: 10, .. } => {}
+            other => panic!("unexpected event {other:?}"),
+        }
+        match t.recv_frame(Some(Duration::from_millis(10))) {
+            RecvEvent::Closed { worker: None } => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+}

@@ -4,7 +4,10 @@
 //!   info      — show artifact manifest + platform
 //!   pretrain  — pre-train a model config on the synthetic corpus
 //!               (`--workers N` switches to the data-parallel engine;
+//!               `--transport uds|tcp` runs one OS process per worker;
 //!               `--ckpt-dir`/`--save-every`/`--resume` snapshot/restore)
+//!   worker    — gradient-server process the socket transports spawn
+//!               (or `--transport-addr` + spawn = false runs join manually)
 //!   ckpt      — inspect a sharded snapshot (manifest + CRC verify)
 //!   trace     — render an exported run trace (counters + phase spans);
 //!               two directories diff their counter manifests
@@ -24,8 +27,9 @@ use frugal::coordinator::metrics::perplexity;
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::data::{CorpusConfig, SyntheticCorpus};
 use frugal::engine::orchestrator::SavePolicy;
-use frugal::engine::{CompressMode, Engine, EngineCfg, GradSource, Orchestrator, ParallelCfg,
-                     RefLm, RefLmCfg, Sources};
+use frugal::engine::{run_worker, worker_handshake, CompressMode, Engine, EngineCfg, GradSource,
+                     Orchestrator, ParallelCfg, RefLm, RefLmCfg, Sources, TransportKind,
+                     WorkerOpts};
 use frugal::optim::memory::{checkpoint_bytes, fmt_gib, lane_wire_bytes, optimizer_state_bytes,
                             split_wire_report, ArchSpec, Method, WireCodec};
 use frugal::optim::memory::scheduled_state_table;
@@ -47,9 +51,13 @@ USAGE:
                   [--compress none|sign-ef|q8|split] [--compress-block N]
                   [--straggler-ms N] [--timeout-ms N] [--sequential]
                   [--no-pipeline]
+                  [--transport memory|uds|tcp] [--transport-addr ADDR]
+                  [--worker-fault W:S]
                   [--ckpt-dir DIR] [--save-every N] [--ckpt-codec q8|raw]
                   [--ckpt-sync] [--keep-last N] [--resume DIR]
                   [--trace-dir DIR]
+  frugal worker   --connect ADDR [--tcp] [--fault-step N] [--leave-after N]
+                  [--slot-delay-ms N]
   frugal ckpt     inspect DIR
   frugal trace    DIR [DIR2]
   frugal memory   [--model SCALE] [--rho-schedule SPEC] [--epochs N]
@@ -65,6 +73,18 @@ fixed --grad-accum (the global batch).
 ships state-free lanes as 1-bit signs (+ error feedback) and state-full
 lanes as blockwise 8-bit — the bit-identity across worker counts holds
 within any fixed codec.
+
+`--transport uds|tcp` moves the workers out of process: the coordinator
+binds a socket (a fresh temp-dir path for uds, `--transport-addr` to
+pin one; `host:port` for tcp), spawns one `frugal worker` OS process
+per worker, and streams the same length-prefixed frames the in-memory
+backend exchanges — the per-step loss trace stays bit-identical to
+`--transport memory` (the default). Socket runs use the built-in
+reference model (`--backend ref`). `[parallel.transport]` is the config
+section; `--worker-fault W:S` makes worker W crash at global step S
+(deterministic failure injection for the resume CI: the run fails with
+`worker W lost in round R`, and a `--resume` from the last snapshot
+matches the uninterrupted run bitwise).
 
 `--rho-schedule SPEC` anneals the density per mask epoch (one epoch =
 --update-freq steps), shrinking the state-full lane count — and so the
@@ -250,6 +270,26 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                 let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
                 p.compress.block = b.max(1) as usize;
             }
+            if let Some(t) = args.get("transport") {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.transport.kind = TransportKind::parse(t)?;
+            }
+            if let Some(a) = args.get("transport-addr") {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.transport.addr = Some(a.to_string());
+            }
+            let worker_fault = args
+                .get("worker-fault")
+                .map(|s| -> frugal::Result<(usize, u64)> {
+                    let (w, step) = s.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("--worker-fault expects WORKER:STEP (e.g. 1:15)")
+                    })?;
+                    Ok((
+                        w.parse().map_err(|e| anyhow::anyhow!("--worker-fault worker: {e}"))?,
+                        step.parse().map_err(|e| anyhow::anyhow!("--worker-fault step: {e}"))?,
+                    ))
+                })
+                .transpose()?;
             // Checkpoint/resume flags (engine path — the sharded v2
             // subsystem snapshots engine state).
             if let Some(d) = args.get("ckpt-dir") {
@@ -298,10 +338,30 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                      combine with the engine flags (--workers/--grad-accum/...)"
                 );
                 let backend = args.get("backend").unwrap_or("auto").to_string();
-                pretrain_parallel(cfg, &backend, resume.as_deref())
+                pretrain_parallel(cfg, &backend, resume.as_deref(), worker_fault)
             } else {
+                anyhow::ensure!(
+                    worker_fault.is_none(),
+                    "--worker-fault needs the data-parallel engine (--workers N)"
+                );
                 pretrain(cfg, args.has("fused"))
             }
+        }
+        "worker" => {
+            let args = Args::parse(rest, &["tcp"])?;
+            let addr = args.get("connect").ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: frugal worker --connect ADDR [--tcp] [--fault-step N] \
+                     [--leave-after N] [--slot-delay-ms N]"
+                )
+            })?;
+            let kind = if args.has("tcp") { TransportKind::Tcp } else { TransportKind::Uds };
+            let opts = WorkerOpts {
+                fault_step: args.get_u64("fault-step")?,
+                leave_after_steps: args.get_u64("leave-after")?,
+                slot_delay_ms: args.get_u64("slot-delay-ms")?.unwrap_or(0),
+            };
+            worker(kind, addr, opts)
         }
         "ckpt" => {
             let (Some(action), Some(dir)) = (rest.first(), rest.get(1)) else {
@@ -434,6 +494,27 @@ fn ckpt_inspect(path: &Path) -> frugal::Result<()> {
     Ok(())
 }
 
+/// `frugal worker --connect ADDR`: the gradient-server process the
+/// socket transports talk to. Connects (with retry — the coordinator
+/// may still be binding), handshakes for a stable worker id, then
+/// serves `RoundBegin`/`StepBegin` frames until the coordinator's
+/// `Shutdown`. The batch function is the same pure function of the
+/// global micro-batch index the in-memory engine uses — that, plus the
+/// bit-exact frame codec, is the whole determinism contract.
+fn worker(kind: TransportKind, addr: &str, opts: WorkerOpts) -> frugal::Result<()> {
+    use frugal::engine::transport::{worker_connect_retry, FrameIo};
+    let stream = worker_connect_retry(kind, addr, std::time::Duration::from_secs(10))?;
+    let mut io = FrameIo::new(stream);
+    let (id, _config) = worker_handshake(&mut io)?;
+    let mut model = RefLm::new(RefLmCfg::default());
+    let rcfg = model.cfg().clone();
+    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(rcfg.vocab));
+    let batch_fn = move |micro: u64, buf: &mut Vec<i32>| {
+        corpus.fill_train_batch(rcfg.batch, rcfg.seq_len, micro, buf);
+    };
+    run_worker(&mut io, id, &mut model, &batch_fn, opts)
+}
+
 fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
     let rt = Runtime::cpu()?;
     let man = Manifest::load(Path::new(&cfg.artifacts_dir))?;
@@ -539,6 +620,7 @@ fn pretrain_parallel(
     mut cfg: TrainConfig,
     backend: &str,
     resume: Option<&str>,
+    worker_fault: Option<(usize, u64)>,
 ) -> frugal::Result<()> {
     // The engine implements the FRUGAL update (subspace-masked AdamW +
     // signSGD); a different --optimizer must not silently run as FRUGAL.
@@ -553,6 +635,27 @@ fn pretrain_parallel(
         ),
     }
     let pcfg = cfg.parallel.clone().expect("parallel config present");
+    let socket = pcfg.transport.kind != TransportKind::Memory;
+    if let Some((w, s)) = worker_fault {
+        anyhow::ensure!(
+            socket,
+            "--worker-fault injects a crash into a spawned worker process: it needs \
+             a socket transport (--transport uds|tcp)"
+        );
+        anyhow::ensure!(
+            w < pcfg.workers,
+            "--worker-fault worker {w} out of range (workers {})",
+            pcfg.workers
+        );
+        anyhow::ensure!(s >= 1, "--worker-fault step is 1-based (got 0)");
+    }
+    if socket {
+        anyhow::ensure!(
+            backend != "pjrt",
+            "socket transports run the built-in reference model in each worker \
+             process; drop --backend pjrt (ref or auto)"
+        );
+    }
 
     // Resolve the backend.
     enum Built {
@@ -582,6 +685,7 @@ fn pretrain_parallel(
     let built = match backend {
         "pjrt" => try_pjrt()?,
         "ref" => Built::Reference(RefLm::new(RefLmCfg::default())),
+        "auto" if socket => Built::Reference(RefLm::new(RefLmCfg::default())),
         "auto" => match try_pjrt() {
             Ok(b) => b,
             Err(e) => {
@@ -601,8 +705,12 @@ fn pretrain_parallel(
             let rcfg = model.cfg().clone();
             let layout = model.layout().clone();
             let init = model.init_flat(cfg.seed);
+            // Socket runs compute training gradients in worker
+            // processes; the engine only needs worker 0's source for
+            // held-out evaluation.
+            let n_local = if socket { 1 } else { pcfg.workers };
             let sources = Sources::Threaded(
-                (0..pcfg.workers)
+                (0..n_local)
                     .map(|_| Box::new(model.clone()) as Box<dyn GradSource + Send>)
                     .collect(),
             );
@@ -616,7 +724,7 @@ fn pretrain_parallel(
         .unwrap_or_else(|| RhoSchedule::constant(cfg.rho));
     println!(
         "pretrain[engine]: optimizer={} workers={} grad_accum={} global_batch={} seqs \
-         rho_schedule={} T={} steps={} lr={} compress={}",
+         rho_schedule={} T={} steps={} lr={} compress={} transport={}",
         cfg.optimizer,
         pcfg.workers,
         pcfg.grad_accum,
@@ -625,7 +733,8 @@ fn pretrain_parallel(
         cfg.update_freq,
         cfg.steps,
         cfg.lr,
-        pcfg.compress.mode
+        pcfg.compress.mode,
+        pcfg.transport.kind
     );
 
     let mask_builder = MaskBuilder::with_schedule(
@@ -643,7 +752,18 @@ fn pretrain_parallel(
         adam: cfg.adam_cfg(),
         clip: cfg.clip.map(|c| c as f32),
     };
-    let engine = Engine::new(mask_builder, engine_cfg, sources, init)?;
+    let mut worker_args: Vec<Vec<String>> = vec![Vec::new(); pcfg.workers];
+    if let Some((w, s)) = worker_fault {
+        worker_args[w] = vec!["--fault-step".into(), s.to_string()];
+    }
+    let engine = Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(engine_cfg)
+        .sources(sources)
+        .init_flat(init)
+        .worker_config(cfg.to_toml())
+        .worker_args(worker_args)
+        .build()?;
     let mut orch = Orchestrator::new(engine);
     orch.verbose = true;
     orch.engine
@@ -719,12 +839,13 @@ fn pretrain_parallel(
         orch.engine.plan().total_lanes()
     );
     let steps = orch.engine.global_step().max(1);
+    let ws = orch.engine.wire_stats();
     println!(
         "reduce-tree wire: {} bytes/step encoded vs {} fp32 (x{:.1} reduction), \
          EF residual {} f32s",
-        orch.engine.wire_bytes_total() / steps,
-        orch.engine.wire_dense_bytes_total() / steps,
-        orch.engine.wire_dense_bytes_total() as f64 / orch.engine.wire_bytes_total().max(1) as f64,
+        ws.bytes / steps,
+        ws.dense_bytes / steps,
+        ws.dense_bytes as f64 / ws.bytes.max(1) as f64,
         orch.engine.residual_floats()
     );
     if let Some(path) = &cfg.log_path {

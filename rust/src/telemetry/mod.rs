@@ -80,12 +80,21 @@ pub enum Counter {
     SnapshotsCommitted,
     /// Straggler micro-batches dropped after a collect timeout.
     StragglerTimeouts,
+    /// Serialized frames that crossed a socket transport, both
+    /// directions (0 under the in-memory transport: frames are moved,
+    /// never serialized). Process plane: framing and control traffic
+    /// depend on membership timing, not on the training math.
+    TransportFrames,
+    /// Serialized bytes that crossed a socket transport, length
+    /// prefixes and control frames included — the actual wire cost, as
+    /// opposed to the deterministic `WireBytes` payload accounting.
+    TransportBytes,
 }
 
 /// Counters in the deterministic plane (array prefix).
 pub const DET_COUNTERS: usize = 13;
 /// Total registry width.
-pub const NUM_COUNTERS: usize = 18;
+pub const NUM_COUNTERS: usize = 20;
 
 impl Counter {
     /// Every counter, in array order.
@@ -108,6 +117,8 @@ impl Counter {
         Counter::SnapshotFiles,
         Counter::SnapshotsCommitted,
         Counter::StragglerTimeouts,
+        Counter::TransportFrames,
+        Counter::TransportBytes,
     ];
 
     /// Canonical snake_case key (manifest JSON, trace rendering).
@@ -131,6 +142,8 @@ impl Counter {
             Counter::SnapshotFiles => "snapshot_files",
             Counter::SnapshotsCommitted => "snapshots_committed",
             Counter::StragglerTimeouts => "straggler_timeouts",
+            Counter::TransportFrames => "transport_frames",
+            Counter::TransportBytes => "transport_bytes",
         }
     }
 

@@ -104,7 +104,13 @@ fn engine(workers: usize, mode: CompressMode) -> Engine {
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .build()
+        .unwrap()
 }
 
 /// Fill-style batch closure that never allocates: the PRNG is stack-only
@@ -202,7 +208,13 @@ fn variable_rho_re_pins_steady_state_each_epoch() {
         adam: AdamCfg::default(),
         clip: None,
     };
-    let mut e = Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap();
+    let mut e = Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .build()
+        .unwrap();
     // Warm-up: rounds 1-6 (36 steps). ρ has already decayed four times
     // by then, and the metrics log is past its next Vec-doubling
     // boundary (capacity 64 covers the 48 steps this test runs).

@@ -58,7 +58,13 @@ fn engine_cfg(workers: usize, mode: CompressMode, grad_accum: usize, update_freq
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .build()
+        .unwrap()
 }
 
 fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
@@ -343,8 +349,8 @@ fn counters_and_rounds_continue_across_resume() {
 
     assert_eq!(resumed.global_step(), continuous.global_step());
     assert_eq!(resumed.round(), continuous.round());
-    assert_eq!(resumed.wire_bytes_total(), continuous.wire_bytes_total());
-    assert_eq!(resumed.wire_dense_bytes_total(), continuous.wire_dense_bytes_total());
+    assert_eq!(resumed.wire_stats().bytes, continuous.wire_stats().bytes);
+    assert_eq!(resumed.wire_stats().dense_bytes, continuous.wire_stats().dense_bytes);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -385,7 +391,13 @@ fn engine_sched(
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .build()
+        .unwrap()
 }
 
 /// A 2-step decay at T=4: epochs 0-1 run rho 0.4, epochs 2+ run 0.2
@@ -500,7 +512,13 @@ fn resume_fingerprints_reject_shape_rho_and_codec_mismatches() {
         adam: AdamCfg::default(),
         clip: None,
     };
-    let mut wrong_shape = Engine::new(mask_builder, cfg, sources, big.init_flat(SEED)).unwrap();
+    let mut wrong_shape = Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(big.init_flat(SEED))
+        .build()
+        .unwrap();
     let err = wrong_shape.restore_state(st.clone()).unwrap_err();
     let msg = format!("{err}");
     assert!(msg.contains("model layout"), "want the layout diagnosis, got: {msg}");

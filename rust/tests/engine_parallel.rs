@@ -47,7 +47,44 @@ fn engine(workers: usize, parallel: ParallelCfg, threaded: bool) -> Engine {
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .build()
+        .unwrap()
+}
+
+/// The deprecated positional constructor still delegates to the builder
+/// (one-release migration shim) — pinned so its removal is a deliberate
+/// act, and bit-identical to the builder it wraps.
+#[test]
+#[allow(deprecated)]
+fn deprecated_engine_new_shim_matches_the_builder() {
+    let parallel = ParallelCfg { grad_accum: 4, ..Default::default() };
+    let m = model();
+    let cfg = EngineCfg {
+        parallel: ParallelCfg { workers: 2, ..parallel.clone() },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: 4,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    let sources = Sources::Threaded(
+        (0..2).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let mask_builder = MaskBuilder::new(
+        m.layout().clone(),
+        0.25,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        SEED,
+    );
+    let mut old = Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap();
+    let mut new = engine(2, parallel, true);
+    assert_eq!(run(&mut old, 6), run(&mut new, 6));
 }
 
 /// Deterministic micro-batch stream shared by all runs (fill-style — the
@@ -364,14 +401,16 @@ fn split_codec_cuts_wire_bytes_3x() {
         dense.step(&batch_fn).unwrap();
         split.step(&batch_fn).unwrap();
     }
-    assert_eq!(dense.wire_bytes_total(), dense.wire_dense_bytes_total());
+    let dw = dense.wire_stats();
+    let sw = split.wire_stats();
+    assert_eq!(dw.bytes, dw.dense_bytes);
     assert_eq!(dense.residual_floats(), 0);
-    assert_eq!(split.wire_dense_bytes_total(), dense.wire_dense_bytes_total());
+    assert_eq!(sw.dense_bytes, dw.dense_bytes);
     assert!(
-        dense.wire_bytes_total() >= 3 * split.wire_bytes_total(),
+        dw.bytes >= 3 * sw.bytes,
         "split wire bytes {} not 3x under dense {}",
-        split.wire_bytes_total(),
-        dense.wire_bytes_total()
+        sw.bytes,
+        dw.bytes
     );
     // EF residuals: one buffer per micro-batch slot, state-free lanes
     // each, released and re-sized with the round's lane sets.
@@ -408,7 +447,13 @@ fn engine_with_builder(
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mb, cfg, sources, m.init_flat(SEED)).unwrap()
+    Engine::builder()
+        .mask_builder(mb)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .build()
+        .unwrap()
 }
 
 /// The tentpole invariant: `workers 1 ≡ workers N`, bitwise, under a

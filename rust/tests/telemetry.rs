@@ -51,7 +51,13 @@ fn engine(workers: usize, mode: CompressMode) -> Engine {
         adam: AdamCfg::default(),
         clip: None,
     };
-    Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap()
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .build()
+        .unwrap()
 }
 
 fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
@@ -179,8 +185,8 @@ fn deterministic_plane_survives_kill_and_resume() {
     }
 }
 
-/// Satellite: the three wire-byte surfaces — engine total, the sum of
-/// per-round `RoundReport.wire_bytes`, and the captured
+/// Satellite: the three wire-byte surfaces — `Engine::wire_stats()`, the
+/// sum of per-round `RoundReport.wire_bytes`, and the captured
 /// `TrainState.wire_bytes` — agree after a multi-round run. All three
 /// are reads of the one registry counter; a second `+=` site anywhere
 /// would break this.
@@ -189,18 +195,26 @@ fn wire_byte_surfaces_agree() {
     for mode in [CompressMode::None, CompressMode::Split] {
         let mut e = engine(2, mode);
         run(&mut e, 11); // 3 rounds at T=4, last one partial
-        let total = e.wire_bytes_total();
-        assert!(total > 0);
-        assert_eq!(total, e.telemetry().get(Counter::WireBytes), "{mode:?}");
+        let ws = e.wire_stats();
+        assert!(ws.bytes > 0);
+        assert_eq!(ws.bytes, e.telemetry().get(Counter::WireBytes), "{mode:?}");
+        assert_eq!(ws.messages, e.telemetry().get(Counter::WireMessages), "{mode:?}");
         let report_sum: u64 = e.reports().iter().map(|r| r.wire_bytes).sum();
-        assert_eq!(report_sum, total, "{mode:?}: round reports don't partition the total");
+        assert_eq!(report_sum, ws.bytes, "{mode:?}: round reports don't partition the total");
         let dense_sum: u64 = e.reports().iter().map(|r| r.wire_dense_bytes).sum();
-        assert_eq!(dense_sum, e.wire_dense_bytes_total(), "{mode:?}");
+        assert_eq!(dense_sum, ws.dense_bytes, "{mode:?}");
         let micro_sum: u64 = e.reports().iter().map(|r| r.micro_batches).sum();
         assert_eq!(micro_sum, e.telemetry().get(Counter::MicroBatches), "{mode:?}");
+        // Split-layout messages partition their bytes into lane groups;
+        // dense messages have no groups and meter zero there.
+        if mode == CompressMode::Split {
+            assert_eq!(ws.full_bytes + ws.free_bytes, ws.bytes, "{mode:?}");
+        } else {
+            assert_eq!(ws.full_bytes + ws.free_bytes, 0, "{mode:?}");
+        }
         let st = e.capture_state().unwrap();
-        assert_eq!(st.wire_bytes, total, "{mode:?}: captured state disagrees");
-        assert_eq!(st.wire_dense_bytes, e.wire_dense_bytes_total(), "{mode:?}");
+        assert_eq!(st.wire_bytes, ws.bytes, "{mode:?}: captured state disagrees");
+        assert_eq!(st.wire_dense_bytes, ws.dense_bytes, "{mode:?}");
     }
 }
 

@@ -1,0 +1,275 @@
+//! Transport conformance suite (ISSUE 7).
+//!
+//! The contract under test: the wire is not allowed to change the math.
+//! Whatever carries the frames — in-process channels, Unix-domain
+//! sockets, TCP — a run is the same run:
+//!
+//! - length-prefixed frames roundtrip canonically over *real* streams
+//!   (both socket flavors), not just through the in-memory codec;
+//! - the loss trace and the deterministic telemetry plane are bitwise
+//!   identical between the in-memory and socket backends at workers
+//!   1/2/4 for compress none and split;
+//! - arrival order is irrelevant: workers delayed by different amounts
+//!   scramble slot arrival, and nothing changes;
+//! - a worker dying mid-round surfaces as a targeted `WorkerLost` error
+//!   (not a generic disconnect), naming the round;
+//! - a worker leaving at a round boundary re-shards the fleet live
+//!   (PR 5's elastic re-provisioning) without perturbing the trace —
+//!   gradient math is worker-count independent.
+//!
+//! Socket workers here are protocol-faithful threads
+//! ([`spawn_ref_workers`]) speaking the same frames as the `frugal
+//! worker` subcommand, so the suite runs without child binaries.
+
+use std::time::Duration;
+
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::engine::transport::{default_addr, worker_connect_retry, FrameIo, Listener};
+use frugal::engine::{
+    spawn_ref_workers, CompressCfg, CompressMode, EncodedGrad, Engine, EngineCfg, Frame,
+    GradSource, ParallelCfg, RefLm, RefLmCfg, Sources, TransportCfg, TransportKind, WorkerOpts,
+};
+use frugal::optim::adamw::AdamCfg;
+use frugal::optim::frugal::BlockPolicy;
+
+const SEED: u64 = 11;
+const T: u64 = 4;
+const GRAD_ACCUM: usize = 4;
+
+type WorkerHandles = Vec<std::thread::JoinHandle<frugal::Result<()>>>;
+
+/// Stateless batch filler: a pure function of the global micro-batch
+/// index, so remote workers and in-memory sources draw identical data.
+fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
+    let cfg = RefLmCfg::default();
+    let mut rng = frugal::util::Prng::seed_from_u64(0x7A95 ^ micro.wrapping_mul(0x9E37));
+    buf.clear();
+    buf.extend((0..cfg.batch * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32));
+}
+
+fn engine(workers: usize, mode: CompressMode, transport: TransportCfg) -> Engine {
+    let m = RefLm::new(RefLmCfg::default());
+    // Socket runs keep a single local source (evaluation only); the
+    // in-memory transport needs one per worker.
+    let n_local = if transport.kind == TransportKind::Memory { workers } else { 1 };
+    let sources = Sources::Threaded(
+        (0..n_local).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    let mask_builder = MaskBuilder::new(
+        m.layout().clone(),
+        0.25,
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        SEED,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg {
+            workers,
+            grad_accum: GRAD_ACCUM,
+            compress: CompressCfg { mode, block: 64 },
+            ..Default::default()
+        },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: T,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .transport(transport)
+        .build()
+        .unwrap()
+}
+
+/// Spawn `opts.len()` worker threads against a fresh UDS address and an
+/// engine targeting `workers` of them. Workers start first and
+/// retry-connect; the engine's build blocks until the fleet joined.
+fn socket_engine(
+    workers: usize,
+    mode: CompressMode,
+    opts: Vec<WorkerOpts>,
+) -> (Engine, WorkerHandles) {
+    let addr = default_addr(TransportKind::Uds);
+    let handles = spawn_ref_workers(TransportKind::Uds, addr.clone(), opts.len(), batch_fn, opts);
+    let tcfg = TransportCfg {
+        kind: TransportKind::Uds,
+        addr: Some(addr),
+        spawn: false,
+        ..Default::default()
+    };
+    (engine(workers, mode, tcfg), handles)
+}
+
+fn trace(e: &mut Engine, steps: u64) -> Vec<u32> {
+    (0..steps).map(|_| e.step(&batch_fn).unwrap().to_bits()).collect()
+}
+
+/// Join worker threads, requiring a clean protocol exit.
+fn finish(handles: WorkerHandles) {
+    for h in handles {
+        h.join().expect("worker thread panicked").expect("worker errored");
+    }
+}
+
+/// Frames survive real sockets — UDS and TCP — byte-for-byte, in both
+/// directions, and a peer shutdown reads as a clean end-of-stream.
+#[test]
+fn frames_roundtrip_over_real_streams() {
+    for kind in [TransportKind::Uds, TransportKind::Tcp] {
+        let (listener, addr) = Listener::bind(kind, &default_addr(kind)).unwrap();
+        let welcome = Frame::Welcome { worker: 1, config: "steps = 1\n".into() };
+        let expected = welcome.clone();
+        let client = std::thread::spawn(move || {
+            let stream = worker_connect_retry(kind, &addr, Duration::from_secs(5)).unwrap();
+            let mut io = FrameIo::new(stream);
+            io.send(&Frame::Hello).unwrap();
+            io.send(&Frame::Micro {
+                worker: 1,
+                slot: 2,
+                n_tok: 64,
+                loss: 0.5,
+                grad: EncodedGrad::Dense(vec![1.0, -2.5, f32::MIN_POSITIVE]),
+            })
+            .unwrap();
+            assert_eq!(io.recv().unwrap().unwrap(), expected);
+            io.send(&Frame::Shutdown).unwrap();
+            // Close without another frame: the server must see a clean
+            // end-of-stream, not an error.
+        });
+        let mut io = FrameIo::new(listener.accept().unwrap());
+        assert_eq!(io.recv().unwrap().unwrap(), Frame::Hello);
+        match io.recv().unwrap().unwrap() {
+            Frame::Micro { worker: 1, slot: 2, n_tok: 64, loss, grad } => {
+                assert_eq!(loss.to_bits(), 0.5f32.to_bits(), "{kind}");
+                assert_eq!(grad, EncodedGrad::Dense(vec![1.0, -2.5, f32::MIN_POSITIVE]));
+            }
+            other => panic!("{kind}: unexpected frame {other:?}"),
+        }
+        io.send(&welcome).unwrap();
+        assert_eq!(io.recv().unwrap().unwrap(), Frame::Shutdown);
+        client.join().unwrap();
+        assert!(io.recv().unwrap().is_none(), "{kind}: peer close must read as EOF");
+    }
+}
+
+/// Acceptance criterion: the socket backend is bitwise-indistinguishable
+/// from the in-memory one — loss trace AND the deterministic telemetry
+/// plane — at every worker count and codec.
+#[test]
+fn socket_run_is_bitwise_identical_to_in_memory() {
+    for mode in [CompressMode::None, CompressMode::Split] {
+        for workers in [1usize, 2, 4] {
+            let mut mem = engine(workers, mode, TransportCfg::default());
+            let mem_trace = trace(&mut mem, 10);
+
+            let (mut sock, handles) =
+                socket_engine(workers, mode, vec![WorkerOpts::default(); workers]);
+            let sock_trace = trace(&mut sock, 10);
+
+            assert_eq!(
+                mem_trace, sock_trace,
+                "{mode:?} workers={workers}: socket loss trace diverged from in-memory"
+            );
+            assert_eq!(
+                mem.telemetry().deterministic_words(),
+                sock.telemetry().deterministic_words(),
+                "{mode:?} workers={workers}: deterministic plane diverged across transports"
+            );
+            // The transport plane is where the backends MAY differ:
+            // sockets serialize frames, in-memory never does.
+            let sock_frames = sock.telemetry().get(frugal::telemetry::Counter::TransportFrames);
+            let mem_frames = mem.telemetry().get(frugal::telemetry::Counter::TransportFrames);
+            assert!(sock_frames > 0, "{mode:?} workers={workers}: socket metered no frames");
+            assert_eq!(mem_frames, 0, "in-memory runs must not meter transport frames");
+            drop(sock);
+            finish(handles);
+        }
+    }
+}
+
+/// Arrival order is not part of the math: workers delayed by different
+/// amounts deliver their slots interleaved arbitrarily, and the trace
+/// still matches the undelayed in-memory run (reduce order is keyed by
+/// micro-batch index, never by arrival).
+#[test]
+fn scrambled_arrival_order_does_not_change_the_trace() {
+    let mut mem = engine(4, CompressMode::Split, TransportCfg::default());
+    let mem_trace = trace(&mut mem, 8);
+
+    let opts: Vec<WorkerOpts> = [11u64, 0, 7, 3]
+        .iter()
+        .map(|&ms| WorkerOpts { slot_delay_ms: ms, ..Default::default() })
+        .collect();
+    let (mut sock, handles) = socket_engine(4, CompressMode::Split, opts);
+    let sock_trace = trace(&mut sock, 8);
+
+    assert_eq!(mem_trace, sock_trace, "arrival order leaked into the reduction");
+    assert_eq!(
+        mem.telemetry().deterministic_words(),
+        sock.telemetry().deterministic_words(),
+        "deterministic plane is arrival-order dependent"
+    );
+    drop(sock);
+    finish(handles);
+}
+
+/// A worker dying mid-round surfaces as the targeted `WorkerLost` error
+/// naming the round — not as a generic disconnect/shutdown (the old
+/// collector conflated the two).
+#[test]
+fn worker_death_mid_round_surfaces_worker_lost() {
+    let mut opts = vec![WorkerOpts::default(); 2];
+    // 1-based global step 6 = 0-based step 5: the second step of round
+    // 2 at T=4, safely mid-round.
+    opts[1].fault_step = Some(6);
+    let (mut e, handles) = socket_engine(2, CompressMode::Split, opts);
+    for _ in 0..5 {
+        e.step(&batch_fn).unwrap();
+    }
+    let err = e.step(&batch_fn).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("lost in round 2"), "untargeted death error: {msg}");
+    assert!(msg.contains("micro-batches delivered"), "missing delivery context: {msg}");
+    drop(e);
+    // The dying worker exits by protocol design; the survivor may be
+    // cut off mid-send when the coordinator aborts — only require that
+    // no thread panicked.
+    for h in handles {
+        let _ = h.join().expect("worker thread panicked");
+    }
+}
+
+/// A worker announcing `Leave` keeps serving until the round boundary,
+/// where the fleet re-shards live (elastic re-provisioning) — the
+/// config reflects the new count and the trace never flinches, because
+/// the math is worker-count independent.
+#[test]
+fn leave_at_round_boundary_resharding_preserves_the_trace() {
+    let mut mem = engine(3, CompressMode::Split, TransportCfg::default());
+    let mem_trace = trace(&mut mem, 12);
+
+    let mut opts = vec![WorkerOpts::default(); 3];
+    opts[2].leave_after_steps = Some(4); // departs at the first T=4 boundary
+    let (mut sock, handles) = socket_engine(3, CompressMode::Split, opts);
+    assert_eq!(sock.cfg().parallel.workers, 3);
+    let sock_trace = trace(&mut sock, 12);
+
+    assert_eq!(mem_trace, sock_trace, "membership change perturbed the loss trace");
+    assert_eq!(
+        sock.cfg().parallel.workers,
+        2,
+        "boundary re-sharding did not shrink the fleet"
+    );
+    assert_eq!(
+        mem.telemetry().deterministic_words(),
+        sock.telemetry().deterministic_words(),
+        "deterministic plane diverged across a membership change"
+    );
+    drop(sock);
+    finish(handles);
+}
