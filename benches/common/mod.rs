@@ -70,9 +70,10 @@ pub fn pretrain_run(
         .map(|f| ((steps as f64 * f).round() as u64).max(1))
         .collect();
     let t0 = std::time::Instant::now();
+    let mut tokens = Vec::new();
     for step in 0..steps {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-        tr.step(&batch.tokens)?;
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+        tr.step(&tokens)?;
         if check_steps.contains(&(step + 1)) {
             let val = tr.session.eval_loss(&tr.flat, 8, |i| {
                 corpus.val_batch(entry.batch, entry.seq_len, i).tokens

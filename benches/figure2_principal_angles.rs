@@ -65,16 +65,17 @@ fn main() -> frugal::Result<()> {
     let snapshots = 5usize;
     let every = (steps / snapshots as u64).max(1);
     let mut projections: Vec<(u64, MatrixProjector)> = Vec::new();
+    let mut tokens = Vec::new();
     for step in 0..steps {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
         if step % every == 0 {
-            let (_, grads) = tr.loss_and_grad(&batch.tokens)?;
+            let (_, grads) = tr.loss_and_grad(&tokens)?;
             let g = Matrix::from_vec(rows, cols,
                                      grads[target.offset..target.offset + target.numel()]
                                          .to_vec());
             projections.push((step, MatrixProjector::from_svd(&g, r)));
         }
-        tr.step(&batch.tokens)?;
+        tr.step(&tokens)?;
     }
 
     println!("principal-angle cosine histograms, P_t vs P_t' ({} rank-{} of {}):",

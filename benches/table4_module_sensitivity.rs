@@ -49,9 +49,10 @@ fn main() -> frugal::Result<()> {
             LrSchedule::Cosine { total: steps, warmup: steps / 10, min_frac: 0.1 },
             1e-3, 1.0, 1 << 30, 0,
         )?;
+        let mut tokens = Vec::new();
         for step in 0..steps {
-            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-            tr.step(&batch.tokens)?;
+            corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+            tr.step(&tokens)?;
         }
         let val = tr.session.eval_loss(&tr.flat, 8, |i| {
             corpus.val_batch(entry.batch, entry.seq_len, i).tokens

@@ -44,9 +44,10 @@ fn main() -> frugal::Result<()> {
         LrSchedule::Cosine { total: pretrain_steps, warmup: pretrain_steps / 10, min_frac: 0.1 },
         1e-3, 1.0, 1 << 30, 0,
     )?;
+    let mut tokens = Vec::new();
     for step in 0..pretrain_steps {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-        tr.step(&batch.tokens)?;
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+        tr.step(&tokens)?;
     }
     let base_flat = tr.flat.clone();
     println!("  backbone train loss: {:.4}", tr.metrics.last().unwrap().loss);

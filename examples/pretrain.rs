@@ -70,9 +70,10 @@ fn main() -> frugal::Result<()> {
         )?;
         println!("--- {label} ---");
         let t0 = std::time::Instant::now();
+        let mut tokens = Vec::new();
         for step in 0..steps {
-            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-            let loss = tr.step(&batch.tokens)?;
+            corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+            let loss = tr.step(&tokens)?;
             if (step + 1) % eval_every == 0 || step + 1 == steps {
                 println!("  step {:>5}  loss {:.4}  tok/s {:.0}", step + 1, loss,
                          tr.metrics.last().map(|r| r.tokens_per_s).unwrap_or(0.0));

@@ -49,9 +49,10 @@ fn main() -> frugal::Result<()> {
     )?;
 
     let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
+    let mut tokens = Vec::new();
     for step in 0..steps {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-        let loss = trainer.step(&batch.tokens)?;
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+        let loss = trainer.step(&tokens)?;
         if (step + 1) % 50 == 0 {
             let val = trainer.session.eval_loss(&trainer.flat, 4, |i| {
                 corpus.val_batch(entry.batch, entry.seq_len, i).tokens

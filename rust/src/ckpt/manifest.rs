@@ -55,6 +55,11 @@ pub struct CkptManifest {
     pub adam_t: u64,
     pub update_freq: u64,
     pub grad_accum: usize,
+    /// Canonical batch-size warmup spec (`BatchSchedule` Display form);
+    /// empty when the run had none. Restore rejects a mismatch — the
+    /// warmup timeline re-times every future batch-size change. Absent
+    /// in pre-warmup manifests (parses as empty).
+    pub batch_schedule: String,
     /// Worker count at save time (shards may re-partition on load).
     pub workers: usize,
     pub shard_granularity: usize,
@@ -109,6 +114,7 @@ impl CkptManifest {
         let _ = writeln!(out, "  \"adam_t\": {},", self.adam_t);
         let _ = writeln!(out, "  \"update_freq\": {},", self.update_freq);
         let _ = writeln!(out, "  \"grad_accum\": {},", self.grad_accum);
+        let _ = writeln!(out, "  \"batch_schedule\": \"{}\",", escape(&self.batch_schedule));
         let _ = writeln!(out, "  \"workers\": {},", self.workers);
         let _ = writeln!(out, "  \"shard_granularity\": {},", self.shard_granularity);
         let _ = writeln!(out, "  \"flat_size\": {},", self.flat_size);
@@ -186,6 +192,11 @@ impl CkptManifest {
             adam_t: v.field("adam_t")?.as_f64()? as u64,
             update_freq: v.field("update_freq")?.as_f64()? as u64,
             grad_accum: v.field("grad_accum")?.as_usize()?,
+            // Absent in pre-warmup v2 manifests: no schedule recorded.
+            batch_schedule: match v.get("batch_schedule") {
+                Some(j) => j.as_str()?.to_string(),
+                None => String::new(),
+            },
             workers: v.field("workers")?.as_usize()?,
             shard_granularity: v.field("shard_granularity")?.as_usize()?,
             flat_size: v.field("flat_size")?.as_usize()?,
@@ -250,6 +261,7 @@ mod tests {
             adam_t: 10,
             update_freq: 10,
             grad_accum: 4,
+            batch_schedule: "linear:1:4:20000".into(),
             workers: 2,
             shard_granularity: 64,
             flat_size: 900,
@@ -333,6 +345,22 @@ mod tests {
         let back = CkptManifest::parse(&legacy).unwrap();
         assert_eq!(back.rho, 0.0);
         assert!(back.layout.is_empty());
+    }
+
+    #[test]
+    fn batch_schedule_roundtrips_and_defaults_empty_for_legacy_manifests() {
+        let back = CkptManifest::parse(&sample().to_json()).unwrap();
+        assert_eq!(back.batch_schedule, "linear:1:4:20000");
+        // A pre-warmup manifest (no batch_schedule line) parses as "no
+        // schedule recorded" — restore then only accepts schedule-less
+        // runs.
+        let legacy: String = sample()
+            .to_json()
+            .lines()
+            .filter(|l| !l.contains("\"batch_schedule\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(CkptManifest::parse(&legacy).unwrap().batch_schedule.is_empty());
     }
 
     #[test]

@@ -166,6 +166,12 @@ pub struct TrainState {
     pub adam_t: u64,
     pub update_freq: u64,
     pub grad_accum: usize,
+    /// Canonical batch-size warmup spec (`BatchSchedule` Display form),
+    /// empty when the run has none. Restore rejects a mismatch — the
+    /// warmup timeline is part of the math. Empty in legacy snapshots,
+    /// which therefore resume only into schedule-less runs (vacuously
+    /// true for snapshots that predate the knob).
+    pub batch_schedule: String,
     /// Worker count at capture time (save-side shard split only).
     pub workers: usize,
     pub shard_granularity: usize,
@@ -226,6 +232,7 @@ impl TrainState {
             adam_t: 0,
             update_freq: 1,
             grad_accum: 1,
+            batch_schedule: String::new(),
             workers: 1,
             shard_granularity: 1,
             flat_size: 0,
@@ -518,6 +525,7 @@ pub fn save(dir: &Path, state: &TrainState, opts: SaveOptions) -> Result<SaveRep
         adam_t: state.adam_t,
         update_freq: state.update_freq,
         grad_accum: state.grad_accum,
+        batch_schedule: state.batch_schedule.clone(),
         workers: state.workers,
         shard_granularity: state.shard_granularity,
         flat_size: state.flat_size,
@@ -723,6 +731,7 @@ pub fn load(dir: &Path) -> Result<TrainState> {
         adam_t: man.adam_t,
         update_freq: man.update_freq,
         grad_accum: man.grad_accum,
+        batch_schedule: man.batch_schedule.clone(),
         workers: man.workers,
         shard_granularity: man.shard_granularity,
         flat_size: man.flat_size,
@@ -1038,6 +1047,11 @@ mod tests {
             adam_t: (step - 1) % update_freq + 1,
             update_freq,
             grad_accum,
+            batch_schedule: if rng.bool(0.5) {
+                format!("linear:1:{grad_accum}:{}", 1000 + rng.range(0, 5000))
+            } else {
+                String::new()
+            },
             workers,
             shard_granularity: 1 << rng.range(0, 5),
             flat_size,

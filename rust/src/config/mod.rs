@@ -15,7 +15,7 @@ use crate::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, State
 use crate::optim::galore::{GaLore, GaLoreCfg, StateHandling};
 use crate::optim::lion::LionCfg;
 use crate::optim::{Layout, Optimizer};
-use crate::schedule::RhoSchedule;
+use crate::schedule::{BatchSchedule, RhoSchedule};
 use crate::Result;
 
 /// Everything needed to launch a training run.
@@ -39,6 +39,12 @@ pub struct TrainConfig {
     /// `rho` knob above. Engine + fused paths only (they share the
     /// `MaskBuilder`).
     pub rho_schedule: Option<RhoSchedule>,
+    /// Linear global-batch-size warmup (`[schedule.batch]` section /
+    /// `--batch-schedule`). `None` = the full `grad_accum` from step 1.
+    /// When set, `parallel.grad_accum` must equal the schedule's peak
+    /// (state is provisioned at the peak; the schedule only gates how
+    /// many micro-slots a round actually runs).
+    pub batch_schedule: Option<BatchSchedule>,
     /// Subspace update frequency T.
     pub update_freq: u64,
     /// Block policy for blockwise selection: random | ascending | descending.
@@ -63,6 +69,28 @@ pub struct TrainConfig {
     pub parallel: Option<ParallelCfg>,
     /// Observability settings (`[telemetry]` section / `--trace-dir`).
     pub telemetry: TelemetryCfg,
+    /// Streaming data plane (`[data]` section / `--data`). Default =
+    /// synthetic corpus, no prefetch thread.
+    pub data: DataCfg,
+}
+
+/// The `[data]` run-config section (the streaming data plane,
+/// `crate::data::stream`): where packed shards live and how deep the
+/// prefetch pipeline runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataCfg {
+    /// Packed corpus directory (`index.json` + `FRGLDAT1` shards, as
+    /// written by `frugal data pack`). `None` = synthetic corpus.
+    pub dir: Option<String>,
+    /// Prefetch ring depth (batches buffered ahead of the engine);
+    /// 0 disables the background reader and fills synchronously.
+    pub prefetch: usize,
+}
+
+impl Default for DataCfg {
+    fn default() -> Self {
+        DataCfg { dir: None, prefetch: 8 }
+    }
 }
 
 /// The `[checkpoint]` run-config section (the sharded v2 subsystem,
@@ -142,6 +170,7 @@ impl Default for TrainConfig {
             lr_free_mult: 1.0,
             rho: 0.25,
             rho_schedule: None,
+            batch_schedule: None,
             update_freq: 200,
             block_policy: "random".into(),
             clip: None,
@@ -156,6 +185,7 @@ impl Default for TrainConfig {
             checkpoint: CheckpointCfg::default(),
             parallel: None,
             telemetry: TelemetryCfg::default(),
+            data: DataCfg::default(),
         }
     }
 }
@@ -189,18 +219,35 @@ impl TrainConfig {
             "kind", "rho_start", "rho_end", "epochs", "step_every", "step_factor", "rho_min",
         ];
         const TELEMETRY_KEYS: [&str; 3] = ["dir", "ring_capacity", "spans"];
+        const BATCH_KEYS: [&str; 3] =
+            ["global_batch_size_start", "global_batch_size_end", "warmup_tokens"];
+        const DATA_KEYS: [&str; 2] = ["dir", "prefetch"];
         for section in &kv.sections {
             anyhow::ensure!(
                 section == "parallel" || section == "parallel.compress"
                     || section == "parallel.transport" || section == "checkpoint"
-                    || section == "schedule" || section == "telemetry",
+                    || section == "schedule" || section == "schedule.batch"
+                    || section == "telemetry" || section == "data",
                 "unknown config section '[{section}]' (known sections: [parallel], \
                  [parallel.compress], [parallel.transport], [checkpoint], [schedule], \
-                 [telemetry])"
+                 [schedule.batch], [telemetry], [data])"
             );
         }
         for key in kv.entries.keys() {
-            if let Some(rest) = key.strip_prefix("parallel.compress.") {
+            if let Some(rest) = key.strip_prefix("schedule.batch.") {
+                // Must precede the broader "schedule." arm below.
+                anyhow::ensure!(
+                    BATCH_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [schedule.batch] (known keys: {})",
+                    BATCH_KEYS.join(", ")
+                );
+            } else if let Some(rest) = key.strip_prefix("data.") {
+                anyhow::ensure!(
+                    DATA_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [data] (known keys: {})",
+                    DATA_KEYS.join(", ")
+                );
+            } else if let Some(rest) = key.strip_prefix("parallel.compress.") {
                 anyhow::ensure!(
                     COMPRESS_KEYS.contains(&rest),
                     "unknown key '{rest}' in [parallel.compress] (known keys: {})",
@@ -234,7 +281,8 @@ impl TrainConfig {
                 anyhow::ensure!(
                     section == "parallel",
                     "unknown config section '[{section}]' (known sections: [parallel], \
-                     [parallel.compress], [checkpoint], [schedule], [telemetry])"
+                     [parallel.compress], [checkpoint], [schedule], [schedule.batch], \
+                     [telemetry], [data])"
                 );
                 anyhow::ensure!(
                     PARALLEL_KEYS.contains(&rest),
@@ -384,6 +432,27 @@ impl TrainConfig {
             sched.validate()?;
             cfg.rho_schedule = Some(sched);
         }
+        if kv.has_section("schedule.batch") {
+            // The peak is the anchor (it must equal parallel.grad_accum);
+            // start defaults to it, so a section naming only the end is a
+            // constant schedule spelled verbosely.
+            let end = kv.get_u64("schedule.batch.global_batch_size_end")?.ok_or_else(|| {
+                anyhow::anyhow!("[schedule.batch] needs global_batch_size_end (the peak)")
+            })?;
+            let start = kv.get_u64("schedule.batch.global_batch_size_start")?.unwrap_or(end);
+            let warmup = kv.get_u64("schedule.batch.warmup_tokens")?.unwrap_or(0);
+            let sched = if start == end || warmup == 0 {
+                BatchSchedule::constant(end as usize)
+            } else {
+                BatchSchedule::Linear {
+                    start: start as usize,
+                    end: end as usize,
+                    warmup_tokens: warmup,
+                }
+            };
+            sched.validate()?;
+            cfg.batch_schedule = Some(sched);
+        }
         if kv.has_section("parallel") || kv.has_section("parallel.compress")
             || kv.has_section("parallel.transport")
         {
@@ -447,6 +516,16 @@ impl TrainConfig {
                 t.spans = v;
             }
             cfg.telemetry = t;
+        }
+        if kv.has_section("data") {
+            let mut d = DataCfg::default();
+            if let Some(v) = kv.get("data.dir") {
+                d.dir = Some(v.to_string());
+            }
+            if let Some(v) = kv.get_u64("data.prefetch")? {
+                d.prefetch = v as usize;
+            }
+            cfg.data = d;
         }
         let cycle = kv.get_u64("schedule_cycle")?.unwrap_or(10_000);
         let total = kv.get_u64("schedule_total")?.unwrap_or(cfg.steps);
@@ -528,6 +607,18 @@ impl TrainConfig {
                 }
             }
         }
+        if let Some(bs) = &self.batch_schedule {
+            let _ = writeln!(out, "\n[schedule.batch]");
+            let (start, end, warmup) = match bs {
+                BatchSchedule::Constant { batch } => (*batch, *batch, 0),
+                BatchSchedule::Linear { start, end, warmup_tokens } => {
+                    (*start, *end, *warmup_tokens)
+                }
+            };
+            let _ = writeln!(out, "global_batch_size_start = {start}");
+            let _ = writeln!(out, "global_batch_size_end = {end}");
+            let _ = writeln!(out, "warmup_tokens = {warmup}");
+        }
         if self.checkpoint != CheckpointCfg::default() {
             let _ = writeln!(out, "\n[checkpoint]");
             if let Some(d) = &self.checkpoint.dir {
@@ -546,6 +637,13 @@ impl TrainConfig {
             }
             let _ = writeln!(out, "ring_capacity = {}", self.telemetry.ring_capacity);
             let _ = writeln!(out, "spans = {}", self.telemetry.spans);
+        }
+        if self.data != DataCfg::default() {
+            let _ = writeln!(out, "\n[data]");
+            if let Some(d) = &self.data.dir {
+                let _ = writeln!(out, "dir = \"{d}\"");
+            }
+            let _ = writeln!(out, "prefetch = {}", self.data.prefetch);
         }
         if let Some(p) = &self.parallel {
             let _ = writeln!(out, "\n[parallel]");
@@ -920,6 +1018,66 @@ mod tests {
         // Typo'd keys are rejected, not silently swallowed.
         let err = TrainConfig::from_toml("[telemetry]\nring = 64\n").unwrap_err();
         assert!(format!("{err}").contains("unknown key 'ring' in [telemetry]"), "{err}");
+    }
+
+    #[test]
+    fn batch_schedule_section_roundtrips_and_is_strict() {
+        let mut cfg = TrainConfig::default();
+        cfg.batch_schedule =
+            Some(BatchSchedule::Linear { start: 2, end: 8, warmup_tokens: 40_000 });
+        let text = cfg.to_toml();
+        assert!(text.contains("[schedule.batch]"), "{text}");
+        let back = TrainConfig::from_toml(&text).unwrap();
+        assert_eq!(back.batch_schedule, cfg.batch_schedule);
+        // Constant collapses: start == end (and warmup 0) parse back as
+        // Constant regardless of how the warmup was spelled.
+        cfg.batch_schedule = Some(BatchSchedule::constant(4));
+        let back = TrainConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.batch_schedule, Some(BatchSchedule::constant(4)));
+        let only_end =
+            TrainConfig::from_toml("[schedule.batch]\nglobal_batch_size_end = 6\n").unwrap();
+        assert_eq!(only_end.batch_schedule, Some(BatchSchedule::constant(6)));
+        // The peak is mandatory; typo'd keys and bad ranges are errors.
+        let err = TrainConfig::from_toml("[schedule.batch]\nwarmup_tokens = 5\n").unwrap_err();
+        assert!(format!("{err}").contains("global_batch_size_end"), "{err}");
+        let err = TrainConfig::from_toml("[schedule.batch]\nglobal_batch = 4\n").unwrap_err();
+        assert!(
+            format!("{err}").contains("unknown key 'global_batch' in [schedule.batch]"),
+            "{err}"
+        );
+        let err = TrainConfig::from_toml(
+            "[schedule.batch]\nglobal_batch_size_start = 9\nglobal_batch_size_end = 2\n\
+             warmup_tokens = 10\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("start"), "{err}");
+        // [schedule] (ρ) and [schedule.batch] coexist without key bleed.
+        let both = TrainConfig::from_toml(
+            "[schedule]\nkind = \"linear\"\nrho_end = 0.1\nepochs = 4\n\n\
+             [schedule.batch]\nglobal_batch_size_start = 1\nglobal_batch_size_end = 4\n\
+             warmup_tokens = 1000\n",
+        )
+        .unwrap();
+        assert!(both.rho_schedule.is_some());
+        assert_eq!(
+            both.batch_schedule,
+            Some(BatchSchedule::Linear { start: 1, end: 4, warmup_tokens: 1000 })
+        );
+    }
+
+    #[test]
+    fn data_section_roundtrips_and_is_strict() {
+        let mut cfg = TrainConfig::default();
+        cfg.data = DataCfg { dir: Some("corpus/packed".into()), prefetch: 16 };
+        let text = cfg.to_toml();
+        assert!(text.contains("[data]"), "{text}");
+        assert_eq!(TrainConfig::from_toml(&text).unwrap().data, cfg.data);
+        // Defaults: no section emitted, defaults parsed back.
+        let plain = TrainConfig::default().to_toml();
+        assert!(!plain.contains("[data]"));
+        assert_eq!(TrainConfig::from_toml(&plain).unwrap().data, DataCfg::default());
+        let err = TrainConfig::from_toml("[data]\npath = \"x\"\n").unwrap_err();
+        assert!(format!("{err}").contains("unknown key 'path' in [data]"), "{err}");
     }
 
     #[test]

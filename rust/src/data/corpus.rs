@@ -10,7 +10,19 @@
 //!   (loss descends well below the unigram entropy).
 //! - **Determinism**: the whole corpus is a pure function of the seed;
 //!   train/validation streams use disjoint seeds.
-
+//!
+//! # Batch API
+//!
+//! Training batches use the **fill-style contract** (see
+//! [`crate::data::Corpus`]): [`SyntheticCorpus::fill_train_batch`]
+//! clears and refills a caller-owned buffer, so the engine's
+//! steady-state loop performs zero heap allocations once the buffer's
+//! capacity is warm. The old allocating `train_batch` path is gone —
+//! [`SyntheticStream`] (this corpus bound to a batch geometry) is the
+//! [`crate::data::Corpus`] implementation production paths use.
+//! Validation batches ([`SyntheticCorpus::val_batch`]) remain
+//! allocating by design: evaluation is cold-path and `eval_loss`
+//! consumes owned vectors.
 
 use crate::util::Prng;
 
@@ -129,24 +141,23 @@ impl SyntheticCorpus {
         }
     }
 
-    /// The `idx`-th training batch, deterministic in `idx`.
-    pub fn train_batch(&self, batch: usize, seq_len: usize, idx: u64) -> Batch {
-        self.batch_from_stream(batch, seq_len, 0x7424_0000_0000 + idx)
-    }
-
-    /// Fill `out` with the `idx`-th training batch's tokens — exactly
-    /// [`SyntheticCorpus::train_batch`]`.tokens` (same stream, same
-    /// values) with zero heap allocations once `out` has warmed its
-    /// capacity. The production closure behind `frugal pretrain`'s
-    /// engine path uses this so the steady-state step stays
-    /// allocation-free end to end.
+    /// Fill `out` with the `idx`-th training batch's tokens (the
+    /// fill-style contract: cleared, then extended — zero heap
+    /// allocations once `out` has warmed its capacity). The token
+    /// stream is unchanged from the pre-fill `train_batch` API, so
+    /// every historical loss trace replays bit-identically. The
+    /// production closure behind `frugal pretrain`'s engine path uses
+    /// this so the steady-state step stays allocation-free end to end.
     pub fn fill_train_batch(&self, batch: usize, seq_len: usize, idx: u64, out: &mut Vec<i32>) {
         self.fill_from_stream(batch, seq_len, 0x7424_0000_0000 + idx, out)
     }
 
-    /// The `idx`-th validation batch (disjoint stream).
+    /// The `idx`-th validation batch (disjoint stream). Allocating by
+    /// design — evaluation is cold-path (see the module docs).
     pub fn val_batch(&self, batch: usize, seq_len: usize, idx: u64) -> Batch {
-        self.batch_from_stream(batch, seq_len, 0xEA11_57BE_A700_0000 ^ idx)
+        let mut tokens = Vec::with_capacity(batch * seq_len);
+        self.fill_from_stream(batch, seq_len, 0xEA11_57BE_A700_0000 ^ idx, &mut tokens);
+        Batch { tokens, batch, seq_len }
     }
 
     fn fill_from_stream(&self, batch: usize, seq_len: usize, stream: u64, out: &mut Vec<i32>) {
@@ -159,12 +170,6 @@ impl SyntheticCorpus {
                 out,
             );
         }
-    }
-
-    fn batch_from_stream(&self, batch: usize, seq_len: usize, stream: u64) -> Batch {
-        let mut tokens = Vec::with_capacity(batch * seq_len);
-        self.fill_from_stream(batch, seq_len, stream, &mut tokens);
-        Batch { tokens, batch, seq_len }
     }
 
     /// Empirical unigram entropy (nats) of the stream — an upper bound for
@@ -184,6 +189,45 @@ impl SyntheticCorpus {
                 -p * p.ln()
             })
             .sum()
+    }
+}
+
+/// [`SyntheticCorpus`] bound to a batch geometry — the synthetic
+/// implementation of the shared [`crate::data::Corpus`] contract. The
+/// token streams are exactly the corpus's own (`fill_train_batch` /
+/// `val_batch` with the same geometry), so migrating a call site from
+/// the inherent methods to the trait is bit-identical.
+pub struct SyntheticStream {
+    corpus: SyntheticCorpus,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl SyntheticStream {
+    pub fn new(corpus: SyntheticCorpus, batch: usize, seq_len: usize) -> SyntheticStream {
+        SyntheticStream { corpus, batch, seq_len }
+    }
+
+    pub fn corpus(&self) -> &SyntheticCorpus {
+        &self.corpus
+    }
+}
+
+impl crate::data::Corpus for SyntheticStream {
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn fill_train_batch(&self, micro: u64, out: &mut Vec<i32>) {
+        self.corpus.fill_train_batch(self.batch, self.seq_len, micro, out)
+    }
+
+    fn val_batch(&self, idx: u64) -> Vec<i32> {
+        self.corpus.val_batch(self.batch, self.seq_len, idx).tokens
     }
 }
 
@@ -211,27 +255,33 @@ mod tests {
         SyntheticCorpus::new(CorpusConfig::default_for_vocab(256))
     }
 
+    fn train(c: &SyntheticCorpus, batch: usize, seq_len: usize, idx: u64) -> Vec<i32> {
+        let mut out = Vec::new();
+        c.fill_train_batch(batch, seq_len, idx, &mut out);
+        out
+    }
+
     #[test]
     fn deterministic() {
         let c1 = corpus();
         let c2 = corpus();
         assert_eq!(c1.sequence(128, 1), c2.sequence(128, 1));
-        assert_eq!(c1.train_batch(4, 32, 7).tokens, c2.train_batch(4, 32, 7).tokens);
+        assert_eq!(train(&c1, 4, 32, 7), train(&c2, 4, 32, 7));
     }
 
     #[test]
     fn tokens_in_range() {
         let c = corpus();
-        let b = c.train_batch(8, 64, 0);
-        assert_eq!(b.tokens.len(), 8 * 64);
-        assert!(b.tokens.iter().all(|&t| (t as usize) < 256 && t >= 0));
+        let b = train(&c, 8, 64, 0);
+        assert_eq!(b.len(), 8 * 64);
+        assert!(b.iter().all(|&t| (t as usize) < 256 && t >= 0));
     }
 
     #[test]
     fn train_and_val_streams_differ() {
         let c = corpus();
-        assert_ne!(c.train_batch(2, 64, 0).tokens, c.val_batch(2, 64, 0).tokens);
-        assert_ne!(c.train_batch(2, 64, 0).tokens, c.train_batch(2, 64, 1).tokens);
+        assert_ne!(train(&c, 2, 64, 0), c.val_batch(2, 64, 0).tokens);
+        assert_ne!(train(&c, 2, 64, 0), train(&c, 2, 64, 1));
     }
 
     #[test]
@@ -289,17 +339,31 @@ mod tests {
         assert!(h > 1.0 && h < (256f64).ln() + 0.01, "h={h}");
     }
 
-    /// The fill-style batch API is the allocating one, token for token —
-    /// including when the target buffer starts out dirty (the engine
-    /// recycles it every micro-step).
+    /// The fill contract handles a dirty target buffer (the engine
+    /// recycles it every micro-step): cleared, then refilled exactly.
     #[test]
-    fn fill_train_batch_matches_train_batch() {
+    fn fill_train_batch_resets_a_dirty_buffer() {
         let c = corpus();
+        let want = train(&c, 4, 32, 17);
         let mut buf = vec![-7i32; 3]; // stale contents + wrong length
+        c.fill_train_batch(4, 32, 17, &mut buf);
+        assert_eq!(buf, want);
+    }
+
+    /// [`SyntheticStream`]'s trait methods are bit-identical to the
+    /// inherent corpus APIs at the same geometry — migrating a call site
+    /// to `dyn Corpus` cannot move any loss trace.
+    #[test]
+    fn stream_trait_is_bit_identical_to_inherent_paths() {
+        use crate::data::Corpus as _;
+        let stream = SyntheticStream::new(corpus(), 4, 32);
+        let direct = corpus();
+        let mut got = Vec::new();
         for idx in [0u64, 1, 17, 1000] {
-            let want = c.train_batch(4, 32, idx).tokens;
-            c.fill_train_batch(4, 32, idx, &mut buf);
-            assert_eq!(buf, want, "idx {idx}");
+            stream.fill_train_batch(idx, &mut got);
+            assert_eq!(got, train(&direct, 4, 32, idx), "train idx {idx}");
+            assert_eq!(stream.val_batch(idx), direct.val_batch(4, 32, idx).tokens, "val {idx}");
         }
+        assert_eq!(stream.tokens_per_micro(), 4 * 32);
     }
 }

@@ -1,4 +1,5 @@
-//! Data substrate: synthetic corpora and fine-tuning task suites.
+//! Data substrate: synthetic corpora, streaming shard corpora, and
+//! fine-tuning task suites.
 //!
 //! Substitution (DESIGN.md §3): the paper pre-trains on C4 and fine-tunes
 //! on GLUE / Commonsense170K — none of which fit a CPU testbed. What the
@@ -7,9 +8,61 @@
 //! structure at several difficulty scales, and (b) label-supervised
 //! sequence tasks where a pre-trained backbone plus a classification head
 //! can be fine-tuned. Both are generated deterministically from seeds.
+//! Real tokenized data enters through [`stream`]: CRC-pinned shard files
+//! packed by `frugal data pack` and streamed through the same batch
+//! contract as the synthetic corpus.
+//!
+//! # The batch contract ([`Corpus`])
+//!
+//! Every provider — synthetic or streaming — speaks the engine's
+//! fill-style contract: `fill_train_batch(micro, &mut Vec<i32>)` clears
+//! and refills a caller-owned buffer with the global micro-batch
+//! `micro`'s tokens. The micro index is a pure function of the optimizer
+//! step (`step * grad_accum + j`), so the data any run sees is a pure
+//! function of (step, slot, seed) — never of the worker count, thread
+//! interleaving, or transport. After the buffer's capacity warms up a
+//! fill performs **zero heap allocations** (the engine's steady-state
+//! allocation pin covers the whole path). Validation batches are
+//! cold-path and allocating by design (`eval_loss` consumes owned
+//! vectors).
 
 mod corpus;
+pub mod stream;
 mod tasks;
 
-pub use corpus::{Batch, CorpusConfig, SyntheticCorpus};
+pub use corpus::{Batch, CorpusConfig, SyntheticCorpus, SyntheticStream};
+pub use stream::{
+    DataIndex, Prefetcher, SequenceAssigner, ShardMeta, StreamingCorpus, INDEX_NAME,
+};
 pub use tasks::{ClassificationTask, TaskConfig, TaskExample, TaskSuite};
+
+/// A deterministic batch provider bound to a fixed geometry
+/// (`batch` sequences × `seq_len` tokens per micro-batch).
+///
+/// Implementors: [`SyntheticStream`] (the synthetic corpus bound to a
+/// model's batch shape) and [`StreamingCorpus`] (tokenized shard files).
+/// `Send + Sync` because the engine's threaded workers call
+/// `fill_train_batch` concurrently for different micro indices.
+pub trait Corpus: Send + Sync {
+    /// Tokens per sequence.
+    fn seq_len(&self) -> usize;
+
+    /// Sequences per training micro-batch.
+    fn batch(&self) -> usize;
+
+    /// Fill `out` with the tokens of global training micro-batch
+    /// `micro` (shape `batch × seq_len`, row-major). Fill-style: clears
+    /// `out`, then extends — no allocation once capacity is warm. Must
+    /// be a pure function of `micro` (and the provider's seed).
+    fn fill_train_batch(&self, micro: u64, out: &mut Vec<i32>);
+
+    /// The `idx`-th validation batch (allocating — evaluation is
+    /// cold-path). Drawn from a stream disjoint from training for the
+    /// synthetic corpus; the streaming corpus documents its overlap.
+    fn val_batch(&self, idx: u64) -> Vec<i32>;
+
+    /// Tokens per training micro-batch (`batch × seq_len`).
+    fn tokens_per_micro(&self) -> u64 {
+        (self.batch() * self.seq_len()) as u64
+    }
+}

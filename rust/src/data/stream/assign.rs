@@ -1,0 +1,135 @@
+//! Deterministic sequence assignment: (global micro-batch, row) →
+//! corpus sequence, as a pure function of the run seed.
+//!
+//! The engine's data invariant is that the tokens any micro-batch sees
+//! are a function of its *global index* alone — never of which worker
+//! computes it, how many workers there are, or what order leaves arrive
+//! in. The assigner extends that to shard data: row `k` of global
+//! micro-batch `micro` reads corpus sequence
+//! `seq_for(micro * batch + k)`, so `workers 1 ≡ workers N` holds for
+//! streamed data *by construction*, and a resume replays exactly the
+//! sequences the continuous run would have read (the position is a pure
+//! function of the step counter already in the checkpoint manifest).
+//!
+//! Within each epoch (one full pass over the `total` sequences) the
+//! assigner visits every sequence exactly once, in an order shuffled by
+//! an affine permutation `q ↦ (a·q + b) mod total` with `gcd(a, total)
+//! = 1` — a bijection evaluable at any position in O(1), no shuffle
+//! table to allocate or checkpoint. `a` and `b` are drawn per epoch
+//! from the seed, so consecutive epochs traverse different orders.
+
+use crate::util::Prng;
+
+/// Stateless (seed, total) → permutation evaluator. `Sync` and
+/// allocation-free: the engine's worker threads call
+/// [`SequenceAssigner::seq_for`] concurrently from the hot batch path.
+#[derive(Clone, Copy, Debug)]
+pub struct SequenceAssigner {
+    seed: u64,
+    total: u64,
+}
+
+impl SequenceAssigner {
+    /// `total` is the corpus sequence count (must be >= 1).
+    pub fn new(seed: u64, total: u64) -> SequenceAssigner {
+        assert!(total >= 1, "assigner needs at least one sequence");
+        SequenceAssigner { seed, total }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The corpus sequence for global sample position `pos`
+    /// (`micro * batch + row`). Positions past the corpus wrap into a
+    /// fresh epoch with a fresh permutation.
+    pub fn seq_for(&self, pos: u64) -> u64 {
+        if self.total == 1 {
+            return 0;
+        }
+        let epoch = pos / self.total;
+        let q = pos % self.total;
+        let (a, b) = self.epoch_params(epoch);
+        // u128 keeps a·q exact for any u64 total.
+        ((a as u128 * q as u128 + b as u128) % self.total as u128) as u64
+    }
+
+    /// Per-epoch affine coefficients: `a` uniform-ish in `[1, total)`
+    /// nudged up to the next value coprime with `total` (a coprime
+    /// always exists — 1 is), `b` uniform in `[0, total)`.
+    fn epoch_params(&self, epoch: u64) -> (u64, u64) {
+        let mut rng =
+            Prng::seed_from_u64(self.seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xDA7A);
+        let mut a = 1 + rng.next_u64() % (self.total - 1);
+        while gcd(a, self.total) != 1 {
+            a += 1;
+            if a == self.total {
+                a = 1;
+            }
+        }
+        let b = rng.next_u64() % self.total;
+        (a, b)
+    }
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_epoch_is_a_bijection() {
+        for total in [1u64, 2, 3, 7, 8, 12, 97, 360] {
+            let asg = SequenceAssigner::new(0xBEEF, total);
+            for epoch in 0..4u64 {
+                let mut seen = vec![false; total as usize];
+                for q in 0..total {
+                    let s = asg.seq_for(epoch * total + q);
+                    assert!(s < total, "total {total} epoch {epoch}: out of range {s}");
+                    assert!(!seen[s as usize], "total {total} epoch {epoch}: repeat {s}");
+                    seen[s as usize] = true;
+                }
+                assert!(seen.iter().all(|&v| v), "total {total} epoch {epoch}: incomplete");
+            }
+        }
+    }
+
+    #[test]
+    fn pure_function_of_seed_and_position() {
+        let a = SequenceAssigner::new(42, 100);
+        let b = SequenceAssigner::new(42, 100);
+        for p in (0..5000).step_by(7) {
+            assert_eq!(a.seq_for(p), b.seq_for(p));
+        }
+        // A different seed gives a different traversal (statistically
+        // certain for 100 positions).
+        let c = SequenceAssigner::new(43, 100);
+        assert!((0..100).any(|p| a.seq_for(p) != c.seq_for(p)));
+    }
+
+    #[test]
+    fn consecutive_epochs_traverse_different_orders() {
+        let asg = SequenceAssigner::new(7, 256);
+        let e0: Vec<u64> = (0..256).map(|q| asg.seq_for(q)).collect();
+        let e1: Vec<u64> = (0..256).map(|q| asg.seq_for(256 + q)).collect();
+        assert_ne!(e0, e1);
+    }
+
+    #[test]
+    fn assignment_is_not_the_identity_walk() {
+        // The permutation should actually shuffle — guard against a
+        // degenerate a=1, b=0 draw on a representative geometry.
+        let asg = SequenceAssigner::new(0x5EED, 1000);
+        let walk: Vec<u64> = (0..1000).map(|q| asg.seq_for(q)).collect();
+        let identity: Vec<u64> = (0..1000).collect();
+        assert_ne!(walk, identity);
+    }
+}

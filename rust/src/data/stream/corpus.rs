@@ -1,0 +1,284 @@
+//! [`StreamingCorpus`]: tokenized shard files behind the engine's
+//! fill-style batch contract.
+//!
+//! Open-time validation is cheap (index parse + per-shard header and
+//! file-length checks); each shard's payload faults in lazily on first
+//! touch through a [`OnceLock`], CRC-verified against the index entry.
+//! After a shard is resident, serving a batch from it is lock-free and
+//! allocation-free — `fill_train_batch` is pure slice copies, so the
+//! engine's steady-state zero-allocation pin holds once the working set
+//! has faulted in.
+//!
+//! The batch→sequence mapping delegates to [`SequenceAssigner`], so the
+//! tokens of micro-batch `micro` are a pure function of `(seed, micro)`
+//! — identical at any worker count and across kill/resume.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use super::assign::SequenceAssigner;
+use super::shard::{read_shard_header, read_shard_verified, DataIndex};
+use crate::Result;
+
+/// A packed corpus directory, opened read-only at a fixed batch
+/// geometry.
+pub struct StreamingCorpus {
+    dir: PathBuf,
+    index: DataIndex,
+    batch: usize,
+    assigner: SequenceAssigner,
+    /// Validation stream seed (kept distinct from the assigner's train
+    /// domain).
+    seed: u64,
+    /// `cum[i]` = sequences in shards `< i`; `cum.last()` = total. The
+    /// shard owning sequence `s` is found by binary search.
+    cum: Vec<u64>,
+    /// Lazily-loaded shard payloads (row-major tokens), one per shard.
+    payloads: Vec<OnceLock<Vec<i32>>>,
+}
+
+impl StreamingCorpus {
+    /// Open `dir` (an `index.json` + shard files as written by
+    /// `frugal data pack`). Validates the index and every shard header
+    /// against its real file length up front; payload bytes are read —
+    /// and CRC-pinned — on first use.
+    pub fn open(dir: &Path, batch: usize, seed: u64) -> Result<StreamingCorpus> {
+        anyhow::ensure!(batch >= 1, "streaming corpus needs batch >= 1");
+        let index = DataIndex::read(dir)?;
+        anyhow::ensure!(!index.shards.is_empty(), "{}: index lists no shards", dir.display());
+        let mut cum = Vec::with_capacity(index.shards.len() + 1);
+        cum.push(0u64);
+        for meta in &index.shards {
+            let path = dir.join(&meta.file);
+            let h = read_shard_header(&path)?;
+            anyhow::ensure!(
+                h.seq_len as usize == index.seq_len && h.vocab as usize == index.vocab,
+                "{}: shard geometry ({} × vocab {}) disagrees with the index ({} × vocab {})",
+                path.display(),
+                h.seq_len,
+                h.vocab,
+                index.seq_len,
+                index.vocab
+            );
+            anyhow::ensure!(
+                h.n_seqs as u64 == meta.seqs,
+                "{}: shard holds {} sequences, index says {}",
+                path.display(),
+                h.n_seqs,
+                meta.seqs
+            );
+            let bytes = std::fs::metadata(&path)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?
+                .len();
+            anyhow::ensure!(
+                bytes == meta.bytes,
+                "{}: file is {bytes} bytes, index says {}",
+                path.display(),
+                meta.bytes
+            );
+            cum.push(cum.last().unwrap() + meta.seqs);
+        }
+        let total = *cum.last().unwrap();
+        anyhow::ensure!(total >= 1, "{}: corpus has no sequences", dir.display());
+        let payloads = index.shards.iter().map(|_| OnceLock::new()).collect();
+        Ok(StreamingCorpus {
+            dir: dir.to_path_buf(),
+            assigner: SequenceAssigner::new(seed, total),
+            index,
+            batch,
+            seed,
+            cum,
+            payloads,
+        })
+    }
+
+    pub fn index(&self) -> &DataIndex {
+        &self.index
+    }
+
+    pub fn total_seqs(&self) -> u64 {
+        *self.cum.last().unwrap()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.index.vocab
+    }
+
+    /// The shard payload, faulting it in (with CRC verification against
+    /// the index) on first touch. Panics if the shard fails to load —
+    /// the fill contract is infallible by design, and open-time checks
+    /// already pinned the directory's shape, so a failure here means
+    /// the bytes changed (or rotted) under a running job.
+    fn payload(&self, shard: usize) -> &[i32] {
+        self.payloads[shard].get_or_init(|| {
+            let meta = &self.index.shards[shard];
+            let path = self.dir.join(&meta.file);
+            match read_shard_verified(&path, meta.crc32) {
+                Ok((_, tokens)) => tokens,
+                Err(e) => panic!("streaming corpus: shard unusable mid-run: {e:#}"),
+            }
+        })
+    }
+
+    /// Append sequence `seq`'s tokens to `out`.
+    fn extend_with_seq(&self, seq: u64, out: &mut Vec<i32>) {
+        // First cum entry > seq, minus one, owns it.
+        let shard = self.cum.partition_point(|&c| c <= seq) - 1;
+        let row = (seq - self.cum[shard]) as usize;
+        let len = self.index.seq_len;
+        out.extend_from_slice(&self.payload(shard)[row * len..(row + 1) * len]);
+    }
+}
+
+impl crate::data::Corpus for StreamingCorpus {
+    fn seq_len(&self) -> usize {
+        self.index.seq_len
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn fill_train_batch(&self, micro: u64, out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(self.batch * self.index.seq_len);
+        let base = micro * self.batch as u64;
+        for k in 0..self.batch as u64 {
+            self.extend_with_seq(self.assigner.seq_for(base + k), out);
+        }
+    }
+
+    /// Validation batches draw sequences uniformly over the *whole*
+    /// corpus from a hash domain disjoint from the training assigner.
+    /// They may therefore overlap training data — carving a held-out
+    /// split is the packer's job (pack a separate directory for eval);
+    /// this accessor exists for loss *tracking*, not held-out
+    /// measurement.
+    fn val_batch(&self, idx: u64) -> Vec<i32> {
+        let mut rng = crate::util::Prng::seed_from_u64(
+            self.seed ^ 0xEA11_57BE ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut out = Vec::with_capacity(self.batch * self.index.seq_len);
+        for _ in 0..self.batch {
+            self.extend_with_seq(rng.next_u64() % self.total_seqs(), &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::shard::pack_corpus;
+    use super::*;
+    use crate::data::Corpus as _;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("frugal_scorp_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// 30 sequences of 8 tokens: sequence s is [s*8 .. s*8+8) mod 240,
+    /// so each token identifies its source sequence exactly.
+    fn pack_demo(dir: &Path) -> DataIndex {
+        let tokens: Vec<i32> = (0..30 * 8).collect();
+        pack_corpus(dir, 8, 240, 7, &tokens).unwrap()
+    }
+
+    #[test]
+    fn fill_is_pure_and_instances_agree() {
+        let dir = tmpdir("pure");
+        pack_demo(&dir);
+        let a = StreamingCorpus::open(&dir, 4, 99).unwrap();
+        let b = StreamingCorpus::open(&dir, 4, 99).unwrap();
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        for micro in [0u64, 1, 5, 17, 1000] {
+            a.fill_train_batch(micro, &mut ba);
+            b.fill_train_batch(micro, &mut bb);
+            assert_eq!(ba, bb, "micro {micro}");
+            assert_eq!(ba.len(), 4 * 8);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn one_epoch_covers_every_sequence_exactly_once() {
+        let dir = tmpdir("cover");
+        pack_demo(&dir);
+        let c = StreamingCorpus::open(&dir, 3, 7).unwrap();
+        assert_eq!(c.total_seqs(), 30);
+        // 10 micros × 3 rows = one epoch. Every sequence's lead token
+        // (s*8) must appear exactly once.
+        let mut counts = vec![0u32; 30];
+        let mut buf = Vec::new();
+        for micro in 0..10u64 {
+            c.fill_train_batch(micro, &mut buf);
+            for row in buf.chunks_exact(8) {
+                assert_eq!(row[0] % 8, 0, "rows must be sequence-aligned");
+                // Rows are contiguous token runs — shard boundaries
+                // must not shear a sequence.
+                for (i, &t) in row.iter().enumerate() {
+                    assert_eq!(t, row[0] + i as i32);
+                }
+                counts[(row[0] / 8) as usize] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == 1), "coverage {counts:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn val_batches_are_deterministic_and_shaped() {
+        let dir = tmpdir("val");
+        pack_demo(&dir);
+        let c = StreamingCorpus::open(&dir, 2, 5).unwrap();
+        let v0 = c.val_batch(0);
+        assert_eq!(v0.len(), 2 * 8);
+        assert_eq!(v0, StreamingCorpus::open(&dir, 2, 5).unwrap().val_batch(0));
+        assert_ne!(v0, c.val_batch(1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_rejects_geometry_drift_and_missing_shards() {
+        let dir = tmpdir("drift");
+        let idx = pack_demo(&dir);
+        // Index claims a different seq_len than the shard headers.
+        let mut bad = idx.clone();
+        bad.seq_len = 16;
+        bad.write_atomic(&dir).unwrap();
+        assert!(StreamingCorpus::open(&dir, 2, 0).is_err());
+        idx.write_atomic(&dir).unwrap();
+        assert!(StreamingCorpus::open(&dir, 2, 0).is_ok());
+        // A listed shard vanishes.
+        std::fs::remove_file(dir.join(&idx.shards[1].file)).unwrap();
+        assert!(StreamingCorpus::open(&dir, 2, 0).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_payload_panics_at_first_touch() {
+        let dir = tmpdir("rot");
+        let idx = pack_demo(&dir);
+        // Flip a payload byte in shard 0 and restamp its internal CRC so
+        // only the index pin can catch the swap.
+        let path = dir.join(&idx.shards[0].file);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[40] ^= 0x11;
+        let crc = crate::ckpt::crc::crc32(&bytes[32..bytes.len() - 4]);
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let c = StreamingCorpus::open(&dir, 2, 0).unwrap(); // headers still fine
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut buf = Vec::new();
+            // Walk enough micros to touch shard 0 for sure.
+            for micro in 0..15u64 {
+                c.fill_train_batch(micro, &mut buf);
+            }
+        }));
+        assert!(got.is_err(), "index CRC pin must catch the restamped shard");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

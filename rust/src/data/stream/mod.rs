@@ -1,0 +1,38 @@
+//! Streaming data plane: tokenized shard files behind the engine's
+//! deterministic batch contract.
+//!
+//! Pipeline, disk to engine:
+//!
+//! 1. [`shard`] — the on-disk format. `frugal data pack` writes
+//!    CRC-pinned `FRGLDAT1` shard files plus an `index.json` manifest;
+//!    hostile inputs (truncated payloads, over-long header lengths,
+//!    trailing bytes, bad CRCs) are rejected at read time.
+//! 2. [`assign`] — [`SequenceAssigner`] maps a global sample position
+//!    to a corpus sequence as a pure function of the run seed, so the
+//!    data any micro-batch sees is independent of worker count,
+//!    transport, and kill/resume.
+//! 3. [`corpus`] — [`StreamingCorpus`] implements
+//!    [`crate::data::Corpus`] over an opened directory with lazy,
+//!    CRC-verified shard residency.
+//! 4. [`prefetch`] — [`Prefetcher`] overlaps disk reads with compute
+//!    behind a bounded recycled-buffer ring (bit-identical by
+//!    construction: it is a cache over the corpus, with backpressure
+//!    and a direct-fill fallback).
+//! 5. [`serve`] — `frugal dataserve` exports any corpus over the
+//!    transport layer's frame codec; [`RemoteCorpus`] is the matching
+//!    client for workers that cannot see the shard directory.
+
+mod assign;
+mod corpus;
+mod prefetch;
+mod serve;
+mod shard;
+
+pub use assign::SequenceAssigner;
+pub use corpus::StreamingCorpus;
+pub use prefetch::{PrefetchStats, Prefetcher};
+pub use serve::{DataServer, RemoteCorpus, VAL_DOMAIN_BIT};
+pub use shard::{
+    pack_corpus, read_shard, read_shard_header, read_shard_verified, write_shard, DataIndex,
+    ShardHeader, ShardMeta, INDEX_NAME,
+};

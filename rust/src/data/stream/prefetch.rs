@@ -1,0 +1,459 @@
+//! Bounded read-ahead over a [`Corpus`]: a producer thread fills
+//! micro-batches in global-index order into a recycled buffer ring; the
+//! engine's batch closure drains it by index.
+//!
+//! # Contract
+//!
+//! [`Prefetcher::fill`] is a drop-in body for the engine's fill-style
+//! `batch_fn`: bit-identical to calling the corpus directly (the ring
+//! only ever holds what `Corpus::fill_train_batch` produced; on any
+//! miss it falls back to the corpus itself), just overlapped with
+//! compute. Determinism is therefore untouched — the prefetcher is a
+//! cache, not a scheduler.
+//!
+//! # Concurrency + backpressure
+//!
+//! The producer runs ahead at most `capacity` batches (backpressure: it
+//! sleeps on a condvar when the ring is full, recycles consumer-returned
+//! buffers, and allocates nothing new in steady state on the consumer
+//! side — the engine's zero-allocation pin covers `fill`). Worker
+//! threads request *different* micro indices concurrently; requests that
+//! outrun the producer wait briefly (evicting un-awaited entries if the
+//! ring is full so the producer can advance) and fall back to a direct
+//! corpus fill rather than stall the step — e.g. across a round
+//! boundary, where a batch-size warmup makes the index sequence jump.
+//! A rewind (engine restore) resyncs the producer to the requested
+//! index.
+//!
+//! Stall time is recorded per micro index in a bounded internal ring;
+//! [`Prefetcher::record_spans`] exports it post-run as
+//! [`Phase::PrefetchStall`] spans (process plane — never part of the
+//! deterministic counters).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::Corpus;
+use crate::telemetry::{Phase, Telemetry};
+
+/// How long one wait-for-producer slice lasts before re-checking.
+const WAIT_SLICE: Duration = Duration::from_millis(20);
+/// Total patience before a waiting consumer direct-fills instead.
+const WAIT_BUDGET: Duration = Duration::from_millis(500);
+/// Bounded stall-record capacity (oldest dropped beyond this).
+const STALL_RING: usize = 4096;
+
+/// Aggregate prefetch effectiveness (for benches and traces).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Requests served straight from the ring.
+    pub hits: u64,
+    /// Requests that waited for the producer before being served.
+    pub waits: u64,
+    /// Requests filled directly from the corpus (timeout, rewind, or
+    /// producer death).
+    pub direct_fills: u64,
+    /// Total nanoseconds consumers spent not-hitting.
+    pub stall_ns: u64,
+}
+
+struct Ring {
+    /// Produced batches awaiting consumption, ascending micro index.
+    filled: VecDeque<(u64, Vec<i32>)>,
+    /// Recycled buffers for the producer to refill.
+    free: Vec<Vec<i32>>,
+    /// Next micro index the producer will fill.
+    next_micro: u64,
+    /// Micro indices consumers are currently waiting on (never evicted).
+    waiting: Vec<u64>,
+    stop: bool,
+    producer_live: bool,
+}
+
+struct StallLog {
+    stats: PrefetchStats,
+    /// (micro, ns) per non-hit request, bounded to [`STALL_RING`].
+    events: VecDeque<(u64, u64)>,
+}
+
+struct Shared {
+    corpus: Arc<dyn Corpus>,
+    capacity: usize,
+    ring: Mutex<Ring>,
+    /// Signaled when a batch lands in `filled` (or the producer exits).
+    avail: Condvar,
+    /// Signaled when ring space frees up (recycle/evict/resync/stop).
+    space: Condvar,
+    log: Mutex<StallLog>,
+}
+
+/// The producer thread + shared ring. Dropping stops and joins the
+/// producer.
+pub struct Prefetcher {
+    shared: Arc<Shared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Start prefetching `corpus` from global micro index `start`,
+    /// keeping at most `capacity` (>= 2) batches in flight.
+    pub fn new(corpus: Arc<dyn Corpus>, capacity: usize, start: u64) -> Prefetcher {
+        assert!(capacity >= 2, "prefetch capacity must be >= 2 (got {capacity})");
+        let shared = Arc::new(Shared {
+            corpus,
+            capacity,
+            ring: Mutex::new(Ring {
+                filled: VecDeque::with_capacity(capacity),
+                free: Vec::with_capacity(capacity + 1),
+                next_micro: start,
+                waiting: Vec::with_capacity(16),
+                stop: false,
+                producer_live: true,
+            }),
+            avail: Condvar::new(),
+            space: Condvar::new(),
+            log: Mutex::new(StallLog {
+                stats: PrefetchStats::default(),
+                events: VecDeque::with_capacity(STALL_RING),
+            }),
+        });
+        let producer = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("frugal-prefetch".into())
+            .spawn(move || Prefetcher::produce(&producer))
+            .expect("spawning the prefetch thread");
+        Prefetcher { shared, handle: Some(handle) }
+    }
+
+    /// Producer loop: claim the next index under the lock, fill outside
+    /// it, publish if the claim is still current (a consumer resync can
+    /// invalidate an in-flight fill).
+    fn produce(sh: &Shared) {
+        // If the fill panics (a shard rotted mid-run), still flip
+        // `producer_live` so consumers fall back to direct fills — where
+        // the same panic surfaces on the engine thread with context.
+        struct LiveGuard<'a>(&'a Shared);
+        impl Drop for LiveGuard<'_> {
+            fn drop(&mut self) {
+                self.0.ring.lock().unwrap().producer_live = false;
+                self.0.avail.notify_all();
+            }
+        }
+        let _guard = LiveGuard(sh);
+        let mut buf: Vec<i32> = Vec::new();
+        loop {
+            let micro;
+            {
+                let mut ring = sh.ring.lock().unwrap();
+                while !ring.stop && ring.filled.len() >= sh.capacity {
+                    ring = sh.space.wait(ring).unwrap();
+                }
+                if ring.stop {
+                    return;
+                }
+                micro = ring.next_micro;
+                ring.next_micro += 1;
+                if let Some(recycled) = ring.free.pop() {
+                    buf = recycled;
+                }
+            }
+            sh.corpus.fill_train_batch(micro, &mut buf);
+            let mut ring = sh.ring.lock().unwrap();
+            if ring.stop {
+                return;
+            }
+            if micro + 1 == ring.next_micro {
+                let full = std::mem::take(&mut buf);
+                ring.filled.push_back((micro, full));
+                sh.avail.notify_all();
+            } else {
+                // A resync moved the cursor while we filled; recycle.
+                ring.free.push(std::mem::take(&mut buf));
+            }
+        }
+    }
+
+    /// Serve global micro-batch `micro` into `out` — the engine's
+    /// `batch_fn` body. Bit-identical to `corpus.fill_train_batch`.
+    pub fn fill(&self, micro: u64, out: &mut Vec<i32>) {
+        let sh = &*self.shared;
+        let t0 = Instant::now();
+        let mut ring = sh.ring.lock().unwrap();
+
+        if let Some(buf) = take_filled(&mut ring, micro) {
+            drop(ring);
+            out.clear();
+            out.extend_from_slice(&buf);
+            let mut ring = sh.ring.lock().unwrap();
+            ring.free.push(buf);
+            drop(ring);
+            sh.space.notify_all();
+            sh.log.lock().unwrap().stats.hits += 1;
+            return;
+        }
+
+        if micro < ring.next_micro {
+            // The producer already passed this index (engine rewind
+            // after a restore, or an evicted entry): fill directly and
+            // resync the producer to continue from here.
+            resync(&mut ring, micro + 1);
+            drop(ring);
+            sh.space.notify_all();
+            sh.corpus.fill_train_batch(micro, out);
+            self.note_stall(micro, t0, |s| s.direct_fills += 1);
+            return;
+        }
+
+        // Future index: wait for the producer, evicting un-awaited
+        // entries if the ring is full so it can advance.
+        ring.waiting.push(micro);
+        let deadline = t0 + WAIT_BUDGET;
+        loop {
+            if ring.filled.len() >= sh.capacity {
+                let waiting = std::mem::take(&mut ring.waiting);
+                if let Some(pos) =
+                    ring.filled.iter().position(|(i, _)| !waiting.contains(i))
+                {
+                    let (_, buf) = ring.filled.remove(pos).unwrap();
+                    ring.free.push(buf);
+                    sh.space.notify_all();
+                }
+                ring.waiting = waiting;
+            }
+            let live = ring.producer_live;
+            if !live || Instant::now() >= deadline {
+                unwait(&mut ring, micro);
+                if micro < ring.next_micro {
+                    // It may have landed and been consumed is impossible
+                    // (only we wait on it) — but a resync can have
+                    // skipped it; treat uniformly as a direct fill.
+                } else if !live {
+                    // Producer is gone; advance the cursor ourselves so
+                    // later rewind logic stays coherent.
+                    resync(&mut ring, micro + 1);
+                }
+                drop(ring);
+                sh.corpus.fill_train_batch(micro, out);
+                self.note_stall(micro, t0, |s| s.direct_fills += 1);
+                return;
+            }
+            let (r, _) = sh.avail.wait_timeout(ring, WAIT_SLICE).unwrap();
+            ring = r;
+            if let Some(buf) = take_filled(&mut ring, micro) {
+                unwait(&mut ring, micro);
+                drop(ring);
+                out.clear();
+                out.extend_from_slice(&buf);
+                let mut ring = sh.ring.lock().unwrap();
+                ring.free.push(buf);
+                drop(ring);
+                sh.space.notify_all();
+                self.note_stall(micro, t0, |s| s.waits += 1);
+                return;
+            }
+            if micro < ring.next_micro {
+                // Another consumer resynced past us while we waited.
+                unwait(&mut ring, micro);
+                drop(ring);
+                sh.corpus.fill_train_batch(micro, out);
+                self.note_stall(micro, t0, |s| s.direct_fills += 1);
+                return;
+            }
+        }
+    }
+
+    fn note_stall(&self, micro: u64, t0: Instant, bump: impl FnOnce(&mut PrefetchStats)) {
+        let ns = t0.elapsed().as_nanos() as u64;
+        let mut log = self.shared.log.lock().unwrap();
+        bump(&mut log.stats);
+        log.stats.stall_ns += ns;
+        if log.events.len() == STALL_RING {
+            log.events.pop_front();
+        }
+        log.events.push_back((micro, ns));
+    }
+
+    /// Aggregate effectiveness so far.
+    pub fn stats(&self) -> PrefetchStats {
+        self.shared.log.lock().unwrap().stats
+    }
+
+    /// Export the recorded stalls as [`Phase::PrefetchStall`] spans
+    /// (the span's `step` field carries the *micro* index). Call after
+    /// the run, before writing the trace directory.
+    pub fn record_spans(&self, tel: &mut Telemetry) {
+        let log = self.shared.log.lock().unwrap();
+        for &(micro, ns) in &log.events {
+            tel.record_ns(Phase::PrefetchStall, micro, ns);
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        {
+            let mut ring = self.shared.ring.lock().unwrap();
+            ring.stop = true;
+        }
+        self.shared.space.notify_all();
+        self.shared.avail.notify_all();
+        if let Some(h) = self.handle.take() {
+            // A panicking producer already surfaced its error via the
+            // consumer's direct-fill path; don't double-panic the drop.
+            let _ = h.join();
+        }
+    }
+}
+
+fn take_filled(ring: &mut Ring, micro: u64) -> Option<Vec<i32>> {
+    let pos = ring.filled.iter().position(|(i, _)| *i == micro)?;
+    Some(ring.filled.remove(pos).unwrap().1)
+}
+
+fn unwait(ring: &mut Ring, micro: u64) {
+    if let Some(p) = ring.waiting.iter().position(|&w| w == micro) {
+        ring.waiting.swap_remove(p);
+    }
+}
+
+/// Drop all read-ahead and restart the producer cursor at `next`.
+fn resync(ring: &mut Ring, next: u64) {
+    while let Some((_, buf)) = ring.filled.pop_front() {
+        ring.free.push(buf);
+    }
+    ring.next_micro = next;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A corpus whose batch content encodes its micro index, with an
+    /// optional per-fill delay to exercise waiting.
+    struct Echo {
+        delay: Duration,
+    }
+
+    impl Corpus for Echo {
+        fn seq_len(&self) -> usize {
+            4
+        }
+
+        fn batch(&self) -> usize {
+            2
+        }
+
+        fn fill_train_batch(&self, micro: u64, out: &mut Vec<i32>) {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            out.clear();
+            out.extend((0..8).map(|i| (micro * 100 + i) as i32));
+        }
+
+        fn val_batch(&self, idx: u64) -> Vec<i32> {
+            let mut v = Vec::new();
+            self.fill_train_batch(idx, &mut v);
+            v
+        }
+    }
+
+    fn expect(micro: u64) -> Vec<i32> {
+        (0..8).map(|i| (micro * 100 + i) as i32).collect()
+    }
+
+    #[test]
+    fn sequential_consumption_is_bit_identical_and_hits() {
+        let pf = Prefetcher::new(Arc::new(Echo { delay: Duration::ZERO }), 4, 0);
+        let mut buf = Vec::new();
+        for micro in 0..32u64 {
+            pf.fill(micro, &mut buf);
+            assert_eq!(buf, expect(micro), "micro {micro}");
+        }
+        let st = pf.stats();
+        assert_eq!(st.hits + st.waits + st.direct_fills, 32);
+        assert!(st.hits > 0, "a sequential reader should mostly hit: {st:?}");
+    }
+
+    #[test]
+    fn out_of_order_and_concurrent_consumers_get_their_batches() {
+        let pf = Arc::new(Prefetcher::new(Arc::new(Echo { delay: Duration::ZERO }), 3, 0));
+        std::thread::scope(|s| {
+            for w in 0..4u64 {
+                let pf = Arc::clone(&pf);
+                s.spawn(move || {
+                    let mut buf = Vec::new();
+                    // Worker w consumes micros w, w+4, w+8, ... (the
+                    // engine's slot striping).
+                    for step in 0..6u64 {
+                        let micro = step * 4 + w;
+                        pf.fill(micro, &mut buf);
+                        assert_eq!(buf, expect(micro), "micro {micro}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn rewind_resyncs_and_still_serves() {
+        let pf = Prefetcher::new(Arc::new(Echo { delay: Duration::ZERO }), 4, 0);
+        let mut buf = Vec::new();
+        for micro in 0..10u64 {
+            pf.fill(micro, &mut buf);
+        }
+        // Rewind (as after a checkpoint restore): earlier index again.
+        pf.fill(3, &mut buf);
+        assert_eq!(buf, expect(3));
+        // And the stream continues from there.
+        for micro in 4..8u64 {
+            pf.fill(micro, &mut buf);
+            assert_eq!(buf, expect(micro), "micro {micro}");
+        }
+        assert!(pf.stats().direct_fills >= 1);
+    }
+
+    #[test]
+    fn index_jump_does_not_wedge_the_ring() {
+        // A far-future jump (much larger than capacity) forces eviction
+        // of everything read ahead; the request must still be served.
+        let pf = Prefetcher::new(Arc::new(Echo { delay: Duration::from_millis(1) }), 2, 0);
+        let mut buf = Vec::new();
+        pf.fill(0, &mut buf);
+        pf.fill(1000, &mut buf);
+        assert_eq!(buf, expect(1000));
+        pf.fill(1001, &mut buf);
+        assert_eq!(buf, expect(1001));
+    }
+
+    #[test]
+    fn steady_state_consumer_does_not_allocate_unboundedly() {
+        // Structural proxy for the alloc pin: after warmup the ring
+        // recycles a fixed buffer set; free+filled never exceeds
+        // capacity + 1 in-flight.
+        let pf = Prefetcher::new(Arc::new(Echo { delay: Duration::ZERO }), 3, 0);
+        let mut buf = Vec::new();
+        for micro in 0..64u64 {
+            pf.fill(micro, &mut buf);
+            let ring = pf.shared.ring.lock().unwrap();
+            assert!(ring.filled.len() + ring.free.len() <= 4 + 1);
+        }
+    }
+
+    #[test]
+    fn spans_and_stats_export() {
+        let mut tel = Telemetry::new();
+        let pf = Prefetcher::new(Arc::new(Echo { delay: Duration::from_millis(2) }), 2, 0);
+        let mut buf = Vec::new();
+        for micro in 0..6u64 {
+            pf.fill(micro, &mut buf);
+        }
+        pf.record_spans(&mut tel);
+        let st = pf.stats();
+        if st.waits + st.direct_fills > 0 {
+            assert!(st.stall_ns > 0);
+            assert!(tel.spans_jsonl().contains("prefetch_stall"));
+        }
+    }
+}

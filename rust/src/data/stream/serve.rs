@@ -1,0 +1,280 @@
+//! `frugal dataserve`: a corpus served over the PR-7 transport layer,
+//! plus the matching [`RemoteCorpus`] client.
+//!
+//! The wire is the engine's own length-prefixed [`Frame`] codec with
+//! two data-plane frames: [`Frame::DataRequest`] (give me global micro
+//! `m`) and [`Frame::DataBatch`] (its tokens, verbatim from the serving
+//! corpus's fill contract). Because the server evaluates the *same*
+//! pure (seed, micro) → tokens function a local open would, a run
+//! pulling batches remotely is bit-identical to one reading the shard
+//! directory itself — the transport carries bits, never decides them.
+//!
+//! Validation batches share the connection through a reserved index
+//! domain: requests with [`VAL_DOMAIN_BIT`] set are answered from
+//! `Corpus::val_batch` of the low bits. Training micro indices live far
+//! below 2^63 (a u64 token budget runs out first), so the domains can
+//! never collide.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::transport::{
+    remove_uds_path, worker_connect_retry, Frame, FrameIo, Listener, TransportKind,
+};
+use crate::data::Corpus;
+use crate::Result;
+
+/// High bit of a [`Frame::DataRequest`] index: set = validation batch.
+pub const VAL_DOMAIN_BIT: u64 = 1 << 63;
+
+/// A running data server (accept loop + one thread per connection).
+/// Dropping stops the accept loop; in-flight connections finish on
+/// their own when clients hang up.
+pub struct DataServer {
+    kind: TransportKind,
+    addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DataServer {
+    /// Bind `addr` (a path for uds, host:port for tcp) and start
+    /// serving `corpus`. Returns once the listener is live; use
+    /// [`DataServer::addr`] for the resolved address (tcp port 0).
+    pub fn start(kind: TransportKind, addr: &str, corpus: Arc<dyn Corpus>) -> Result<DataServer> {
+        anyhow::ensure!(
+            kind != TransportKind::Memory,
+            "dataserve needs a socket transport (uds|tcp)"
+        );
+        let (listener, actual) = Listener::bind(kind, addr)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("frugal-dataserve".into())
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok(stream) => {
+                        if accept_stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let corpus = Arc::clone(&corpus);
+                        let _ = std::thread::Builder::new()
+                            .name("frugal-dataconn".into())
+                            .spawn(move || serve_connection(FrameIo::new(stream), &*corpus));
+                    }
+                    Err(_) => {
+                        if accept_stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawning the dataserve accept loop: {e}"))?;
+        Ok(DataServer { kind, addr: actual, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (tcp port 0 resolved to the real port).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Serve until the process dies (the CLI foreground mode).
+    pub fn run_forever(mut self) -> ! {
+        // Keep the accept thread; just park this one.
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        unreachable!("dataserve accept loop never returns without stop")
+    }
+}
+
+impl Drop for DataServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = worker_connect_retry(self.kind, &self.addr, Duration::from_millis(200));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        if self.kind == TransportKind::Uds {
+            remove_uds_path(&self.addr);
+        }
+    }
+}
+
+/// One client connection: answer data requests until the peer hangs up.
+fn serve_connection(mut io: FrameIo, corpus: &dyn Corpus) {
+    let mut tokens: Vec<i32> = Vec::new();
+    loop {
+        match io.recv() {
+            Ok(Some(Frame::DataRequest { micro })) => {
+                if micro & VAL_DOMAIN_BIT != 0 {
+                    tokens = corpus.val_batch(micro & !VAL_DOMAIN_BIT);
+                } else {
+                    corpus.fill_train_batch(micro, &mut tokens);
+                }
+                let frame = Frame::DataBatch { micro, tokens: std::mem::take(&mut tokens) };
+                if io.send(&frame).is_err() {
+                    return;
+                }
+                // Reclaim the buffer for the next request.
+                if let Frame::DataBatch { tokens: t, .. } = frame {
+                    tokens = t;
+                }
+            }
+            Ok(Some(Frame::Shutdown)) | Ok(None) => return,
+            Ok(Some(_)) => continue, // stray frames: ignore
+            Err(_) => return,
+        }
+    }
+}
+
+/// A [`Corpus`] whose batches come from a remote [`DataServer`]. The
+/// geometry is declared by the caller (it must match the server's
+/// corpus; every reply is length-checked against it). The connection is
+/// behind a mutex — the engine's worker threads serialize their
+/// requests, which is correct if slower than a local open; `--data DIR`
+/// on a shared filesystem is the fast path, this is the fallback when
+/// workers cannot see the shards.
+pub struct RemoteCorpus {
+    io: Mutex<FrameIo>,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl RemoteCorpus {
+    pub fn connect(
+        kind: TransportKind,
+        addr: &str,
+        batch: usize,
+        seq_len: usize,
+        timeout: Duration,
+    ) -> Result<RemoteCorpus> {
+        anyhow::ensure!(batch >= 1 && seq_len >= 1, "remote corpus needs a real geometry");
+        let stream = worker_connect_retry(kind, addr, timeout)?;
+        Ok(RemoteCorpus { io: Mutex::new(FrameIo::new(stream)), batch, seq_len })
+    }
+
+    /// Round-trip one request. Panics on a lost server — the fill
+    /// contract is infallible, and a vanished data server mid-run is
+    /// not a recoverable state for the training loop.
+    fn fetch(&self, micro: u64, out: &mut Vec<i32>) {
+        let mut io = self.io.lock().unwrap();
+        if io.send(&Frame::DataRequest { micro }).is_err() {
+            panic!("data server connection lost sending request for micro {micro}");
+        }
+        loop {
+            match io.recv() {
+                Ok(Some(Frame::DataBatch { micro: m, tokens })) if m == micro => {
+                    assert_eq!(
+                        tokens.len(),
+                        self.batch * self.seq_len,
+                        "data server returned {} tokens for micro {micro}, geometry says {}",
+                        tokens.len(),
+                        self.batch * self.seq_len
+                    );
+                    out.clear();
+                    out.extend_from_slice(&tokens);
+                    return;
+                }
+                Ok(Some(_)) => continue, // stale reply from a prior life
+                Ok(None) | Err(_) => {
+                    panic!("data server connection lost awaiting micro {micro}")
+                }
+            }
+        }
+    }
+}
+
+impl Corpus for RemoteCorpus {
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn fill_train_batch(&self, micro: u64, out: &mut Vec<i32>) {
+        assert!(micro & VAL_DOMAIN_BIT == 0, "micro index collides with the val domain");
+        self.fetch(micro, out);
+    }
+
+    fn val_batch(&self, idx: u64) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.fetch(idx | VAL_DOMAIN_BIT, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusConfig, SyntheticCorpus, SyntheticStream};
+
+    fn uds_addr(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("frugal_ds_{tag}_{}.sock", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn stream() -> SyntheticStream {
+        SyntheticStream::new(SyntheticCorpus::new(CorpusConfig::default_for_vocab(64)), 2, 16)
+    }
+
+    #[test]
+    fn remote_batches_are_bit_identical_to_local() {
+        let addr = uds_addr("bits");
+        let server = DataServer::start(TransportKind::Uds, &addr, Arc::new(stream())).unwrap();
+        let remote = RemoteCorpus::connect(
+            TransportKind::Uds,
+            server.addr(),
+            2,
+            16,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let local = stream();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        for micro in [0u64, 1, 7, 123] {
+            local.fill_train_batch(micro, &mut want);
+            remote.fill_train_batch(micro, &mut got);
+            assert_eq!(got, want, "micro {micro}");
+        }
+        assert_eq!(remote.val_batch(3), local.val_batch(3));
+    }
+
+    #[test]
+    fn multiple_clients_share_one_server() {
+        let addr = uds_addr("multi");
+        let server = DataServer::start(TransportKind::Uds, &addr, Arc::new(stream())).unwrap();
+        let addr = server.addr().to_string();
+        std::thread::scope(|s| {
+            for w in 0..3u64 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let remote = RemoteCorpus::connect(
+                        TransportKind::Uds,
+                        &addr,
+                        2,
+                        16,
+                        Duration::from_secs(5),
+                    )
+                    .unwrap();
+                    let local = stream();
+                    let (mut want, mut got) = (Vec::new(), Vec::new());
+                    for step in 0..4u64 {
+                        let micro = step * 3 + w;
+                        local.fill_train_batch(micro, &mut want);
+                        remote.fill_train_batch(micro, &mut got);
+                        assert_eq!(got, want, "micro {micro}");
+                    }
+                });
+            }
+        });
+        drop(server);
+    }
+}

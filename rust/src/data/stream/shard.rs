@@ -1,0 +1,449 @@
+//! Tokenized shard files + the corpus index manifest.
+//!
+//! A packed corpus directory holds one `index.json` plus N shard files
+//! produced by `frugal data pack`. Shard layout (all integers
+//! little-endian), following the [`crate::ckpt::format`] conventions —
+//! sizes validated against the actual file length *before* any
+//! payload-sized allocation, CRC-pinned payload, atomic writes:
+//!
+//! ```text
+//! magic        8B   "FRGLDAT1"
+//! version      u32  1
+//! seq_len      u32  tokens per sequence (>= 1)
+//! n_seqs       u32  sequences in this shard (>= 1)
+//! vocab        u32  exclusive upper bound on token ids (>= 1)
+//! payload_len  u64  must equal seq_len * n_seqs * 4
+//! payload      u32-LE token ids, row-major (n_seqs × seq_len)
+//! crc32        u32  of the payload bytes
+//! ```
+//!
+//! The file length must be exactly `32 + payload_len + 4`: truncated
+//! payloads, header length fields pointing past EOF, and trailing bytes
+//! are all rejected. `index.json` lists every shard with its sequence
+//! count, byte size, and payload CRC, so a reader can cheaply verify a
+//! directory's shape at open time and pin each payload at first load.
+
+use std::path::Path;
+
+use crate::ckpt::crc::crc32;
+use crate::util::json::{escape, Json};
+use crate::Result;
+
+/// The corpus index manifest's file name inside a packed directory.
+pub const INDEX_NAME: &str = "index.json";
+
+const MAGIC: &[u8; 8] = b"FRGLDAT1";
+const VERSION: u32 = 1;
+/// Fixed header bytes before the payload.
+const HEADER_LEN: usize = 32;
+/// Trailing CRC bytes after the payload.
+const TRAILER_LEN: usize = 4;
+
+/// One shard's decoded header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub seq_len: u32,
+    pub n_seqs: u32,
+    pub vocab: u32,
+    pub payload_len: u64,
+}
+
+/// One shard's entry in the index manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// File name relative to the corpus directory.
+    pub file: String,
+    /// Sequences in the shard.
+    pub seqs: u64,
+    /// Total file bytes (header + payload + CRC).
+    pub bytes: u64,
+    /// CRC-32 of the payload bytes (duplicates the shard trailer so a
+    /// swapped-in file with internally-consistent CRC still fails).
+    pub crc32: u32,
+}
+
+/// The parsed `index.json`: corpus geometry + per-shard metadata.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DataIndex {
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub shards: Vec<ShardMeta>,
+}
+
+impl DataIndex {
+    /// Total sequences across all shards.
+    pub fn total_seqs(&self) -> u64 {
+        self.shards.iter().map(|s| s.seqs).sum()
+    }
+
+    /// Serialize deterministically (fixed key order, shards in listed
+    /// order).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"format\": \"frugal-data\",\n");
+        out.push_str("  \"version\": 1,\n");
+        out.push_str(&format!("  \"seq_len\": {},\n", self.seq_len));
+        out.push_str(&format!("  \"vocab\": {},\n", self.vocab));
+        out.push_str("  \"shards\": [\n");
+        for (i, s) in self.shards.iter().enumerate() {
+            let comma = if i + 1 == self.shards.len() { "" } else { "," };
+            out.push_str(&format!(
+                "    {{\"file\": \"{}\", \"seqs\": {}, \"bytes\": {}, \"crc32\": {}}}{comma}\n",
+                escape(&s.file),
+                s.seqs,
+                s.bytes,
+                s.crc32
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `dir/index.json` atomically (full buffer to `.tmp`, then
+    /// rename — a crash mid-write never leaves a half-valid index).
+    pub fn write_atomic(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(INDEX_NAME);
+        let tmp = dir.join(format!("{INDEX_NAME}.tmp"));
+        std::fs::write(&tmp, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("renaming {} into place: {e}", tmp.display()))?;
+        Ok(())
+    }
+
+    /// Read and validate `dir/index.json`.
+    pub fn read(dir: &Path) -> Result<DataIndex> {
+        let path = dir.join(INDEX_NAME);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:#}", path.display()))?;
+        let format = v.field("format")?.as_str()?;
+        anyhow::ensure!(format == "frugal-data", "not a frugal data index (format '{format}')");
+        let version = v.field("version")?.as_usize()?;
+        anyhow::ensure!(version == 1, "unsupported data index version {version}");
+        let seq_len = v.field("seq_len")?.as_usize()?;
+        let vocab = v.field("vocab")?.as_usize()?;
+        anyhow::ensure!(seq_len >= 1, "data index with zero seq_len");
+        anyhow::ensure!(vocab >= 1, "data index with zero vocab");
+        let mut shards = Vec::new();
+        for s in v.field("shards")?.as_arr()? {
+            let file = s.field("file")?.as_str()?.to_string();
+            anyhow::ensure!(
+                !file.contains('/') && !file.contains("..") && !file.is_empty(),
+                "data index shard file '{file}' is not a bare file name"
+            );
+            shards.push(ShardMeta {
+                file,
+                seqs: s.field("seqs")?.as_f64()? as u64,
+                bytes: s.field("bytes")?.as_f64()? as u64,
+                crc32: s.field("crc32")?.as_f64()? as u32,
+            });
+        }
+        Ok(DataIndex { seq_len, vocab, shards })
+    }
+}
+
+/// Write one shard atomically. `tokens` is row-major `n_seqs × seq_len`
+/// (length must divide evenly); every token must lie in `[0, vocab)`.
+/// Returns the shard's index entry.
+pub fn write_shard(path: &Path, seq_len: usize, vocab: usize, tokens: &[i32]) -> Result<ShardMeta> {
+    anyhow::ensure!(seq_len >= 1, "shard needs seq_len >= 1");
+    anyhow::ensure!(vocab >= 1 && vocab <= i32::MAX as usize, "shard vocab {vocab} out of range");
+    anyhow::ensure!(!tokens.is_empty(), "shard needs at least one sequence");
+    anyhow::ensure!(
+        tokens.len() % seq_len == 0,
+        "shard token count {} is not a multiple of seq_len {seq_len}",
+        tokens.len()
+    );
+    let n_seqs = tokens.len() / seq_len;
+    anyhow::ensure!(
+        n_seqs <= u32::MAX as usize && seq_len <= u32::MAX as usize,
+        "shard dimensions exceed u32"
+    );
+    let mut payload = Vec::with_capacity(tokens.len() * 4);
+    for (i, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0 && (t as usize) < vocab,
+            "token {t} at offset {i} outside [0, {vocab})"
+        );
+        payload.extend_from_slice(&(t as u32).to_le_bytes());
+    }
+    let crc = crc32(&payload);
+
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(seq_len as u32).to_le_bytes());
+    buf.extend_from_slice(&(n_seqs as u32).to_le_bytes());
+    buf.extend_from_slice(&(vocab as u32).to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    buf.extend_from_slice(&crc.to_le_bytes());
+
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, &buf).map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("renaming {} into place: {e}", tmp.display()))?;
+
+    let file = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("shard path {} has no file name", path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    Ok(ShardMeta { file, seqs: n_seqs as u64, bytes: buf.len() as u64, crc32: crc })
+}
+
+/// Parse and validate a shard header against the true byte length of
+/// the file — the length checks run *before* any payload-sized work, so
+/// a hostile `payload_len` cannot drive an unbounded allocation, and a
+/// file longer than the header claims (trailing bytes) is an error.
+fn parse_header(buf: &[u8], file_len: u64, what: &str) -> Result<ShardHeader> {
+    anyhow::ensure!(buf.len() >= HEADER_LEN, "{what}: shorter than a shard header");
+    anyhow::ensure!(&buf[..8] == MAGIC, "{what}: not a FRUGAL data shard");
+    let u32_at = |off: usize| u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+    let version = u32_at(8);
+    anyhow::ensure!(version == VERSION, "{what}: unsupported shard version {version}");
+    let h = ShardHeader {
+        seq_len: u32_at(12),
+        n_seqs: u32_at(16),
+        vocab: u32_at(20),
+        payload_len: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+    };
+    anyhow::ensure!(h.seq_len >= 1, "{what}: zero seq_len");
+    anyhow::ensure!(h.n_seqs >= 1, "{what}: zero sequences");
+    anyhow::ensure!(h.vocab >= 1 && h.vocab <= i32::MAX as u32, "{what}: bad vocab {}", h.vocab);
+    let want = (h.seq_len as u64)
+        .checked_mul(h.n_seqs as u64)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| anyhow::anyhow!("{what}: payload size overflows"))?;
+    anyhow::ensure!(
+        h.payload_len == want,
+        "{what}: payload_len {} does not match {} × {} tokens",
+        h.payload_len,
+        h.n_seqs,
+        h.seq_len
+    );
+    let want_file = (HEADER_LEN as u64)
+        .checked_add(h.payload_len)
+        .and_then(|n| n.checked_add(TRAILER_LEN as u64))
+        .ok_or_else(|| anyhow::anyhow!("{what}: file size overflows"))?;
+    anyhow::ensure!(
+        file_len == want_file,
+        "{what}: file is {file_len} bytes, header implies {want_file} \
+         (truncated payload or trailing bytes)"
+    );
+    Ok(h)
+}
+
+/// Read just the header (plus the file-length consistency check) —
+/// the cheap open-time validation, no payload IO.
+pub fn read_shard_header(path: &Path) -> Result<ShardHeader> {
+    let what = path.display().to_string();
+    let file_len = std::fs::metadata(path)
+        .map_err(|e| anyhow::anyhow!("{what}: {e}"))?
+        .len();
+    let mut buf = [0u8; HEADER_LEN];
+    let mut f = std::fs::File::open(path).map_err(|e| anyhow::anyhow!("{what}: {e}"))?;
+    std::io::Read::read_exact(&mut f, &mut buf)
+        .map_err(|e| anyhow::anyhow!("{what}: reading header: {e}"))?;
+    parse_header(&buf, file_len, &what)
+}
+
+/// Read and fully validate one shard (header geometry, exact file
+/// length, payload CRC, every token inside `[0, vocab)`).
+pub fn read_shard(path: &Path) -> Result<(ShardHeader, Vec<i32>)> {
+    read_shard_impl(path, None)
+}
+
+/// [`read_shard`], additionally pinning the payload CRC to the index
+/// manifest's expectation — mirrors `ckpt`'s `read_verified`: a shard
+/// file swapped in whole (internally consistent, wrong content) still
+/// fails against the index.
+pub fn read_shard_verified(path: &Path, expect_crc: u32) -> Result<(ShardHeader, Vec<i32>)> {
+    read_shard_impl(path, Some(expect_crc))
+}
+
+fn read_shard_impl(path: &Path, expect_crc: Option<u32>) -> Result<(ShardHeader, Vec<i32>)> {
+    let what = path.display().to_string();
+    let buf = std::fs::read(path).map_err(|e| anyhow::anyhow!("{what}: {e}"))?;
+    let h = parse_header(&buf, buf.len() as u64, &what)?;
+    let payload = &buf[HEADER_LEN..HEADER_LEN + h.payload_len as usize];
+    let stored = u32::from_le_bytes(buf[buf.len() - TRAILER_LEN..].try_into().unwrap());
+    let actual = crc32(payload);
+    anyhow::ensure!(
+        stored == actual,
+        "{what}: payload CRC mismatch (stored {stored:#010x}, computed {actual:#010x})"
+    );
+    if let Some(want) = expect_crc {
+        anyhow::ensure!(
+            actual == want,
+            "{what}: payload CRC {actual:#010x} does not match the index's {want:#010x} \
+             (shard file replaced since the index was written?)"
+        );
+    }
+    let mut tokens = Vec::with_capacity(payload.len() / 4);
+    for (i, c) in payload.chunks_exact(4).enumerate() {
+        let t = u32::from_le_bytes(c.try_into().unwrap());
+        anyhow::ensure!(t < h.vocab, "{what}: token {t} at row offset {i} outside the vocab");
+        tokens.push(t as i32);
+    }
+    Ok((h, tokens))
+}
+
+/// Pack a token stream into a corpus directory: shards of `shard_seqs`
+/// sequences each (the last may be shorter), named `shard_NNNNN.bin`,
+/// plus the index manifest. `tokens.len()` must be a positive multiple
+/// of `seq_len`. Returns the written index. Used by `frugal data pack`
+/// and the test/CI harnesses.
+pub fn pack_corpus(
+    dir: &Path,
+    seq_len: usize,
+    vocab: usize,
+    shard_seqs: usize,
+    tokens: &[i32],
+) -> Result<DataIndex> {
+    anyhow::ensure!(shard_seqs >= 1, "pack needs shard_seqs >= 1");
+    anyhow::ensure!(seq_len >= 1, "pack needs seq_len >= 1");
+    anyhow::ensure!(
+        !tokens.is_empty() && tokens.len() % seq_len == 0,
+        "pack needs a positive multiple of seq_len tokens (got {})",
+        tokens.len()
+    );
+    std::fs::create_dir_all(dir).map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+    let mut shards = Vec::new();
+    for (i, chunk) in tokens.chunks(shard_seqs * seq_len).enumerate() {
+        let name = format!("shard_{i:05}.bin");
+        shards.push(write_shard(&dir.join(&name), seq_len, vocab, chunk)?);
+    }
+    let index = DataIndex { seq_len, vocab, shards };
+    index.write_atomic(dir)?;
+    Ok(index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("frugal_shard_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn demo_tokens(n_seqs: usize, seq_len: usize) -> Vec<i32> {
+        (0..n_seqs * seq_len).map(|i| (i % 97) as i32).collect()
+    }
+
+    #[test]
+    fn shard_roundtrips_bit_exactly() {
+        let dir = tmpdir("rt");
+        let path = dir.join("s0.bin");
+        let tokens = demo_tokens(6, 16);
+        let meta = write_shard(&path, 16, 128, &tokens).unwrap();
+        assert_eq!(meta.seqs, 6);
+        assert_eq!(meta.bytes, std::fs::metadata(&path).unwrap().len());
+        let (h, back) = read_shard(&path).unwrap();
+        assert_eq!((h.seq_len, h.n_seqs, h.vocab), (16, 6, 128));
+        assert_eq!(back, tokens);
+        let hdr = read_shard_header(&path).unwrap();
+        assert_eq!(hdr, h);
+        // No .tmp litter.
+        assert!(!dir.join("s0.bin.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_rejects_bad_geometry_and_tokens() {
+        let dir = tmpdir("badwrite");
+        let path = dir.join("s.bin");
+        // Length not a multiple of seq_len.
+        assert!(write_shard(&path, 16, 128, &demo_tokens(1, 15)).is_err());
+        // Empty shard.
+        assert!(write_shard(&path, 16, 128, &[]).is_err());
+        // Token outside the vocab / negative.
+        assert!(write_shard(&path, 2, 4, &[0, 4]).is_err());
+        assert!(write_shard(&path, 2, 4, &[0, -1]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hostile_files_are_rejected() {
+        let dir = tmpdir("hostile");
+        let path = dir.join("s.bin");
+        write_shard(&path, 8, 64, &demo_tokens(4, 8)).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Truncated payload.
+        std::fs::write(&path, &good[..good.len() - 9]).unwrap();
+        assert!(read_shard(&path).is_err());
+        assert!(read_shard_header(&path).is_err());
+
+        // Trailing bytes after a well-formed shard.
+        let mut long = good.clone();
+        long.extend_from_slice(b"junk");
+        std::fs::write(&path, &long).unwrap();
+        assert!(read_shard(&path).is_err());
+        assert!(read_shard_header(&path).is_err());
+
+        // Flipped payload byte: header still consistent, CRC catches it.
+        let mut flipped = good.clone();
+        flipped[40] ^= 0x5A;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(read_shard(&path).unwrap_err().to_string().contains("CRC"));
+
+        // Over-long payload_len header field (points past EOF) — caught
+        // by the length check before any payload-sized allocation.
+        let mut overlong = good.clone();
+        overlong[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &overlong).unwrap();
+        assert!(read_shard(&path).is_err());
+        assert!(read_shard_header(&path).is_err());
+
+        // Wrong magic / future version.
+        let mut magic = good.clone();
+        magic[0] ^= 1;
+        std::fs::write(&path, &magic).unwrap();
+        assert!(read_shard(&path).is_err());
+        let mut ver = good.clone();
+        ver[8] = 99;
+        std::fs::write(&path, &ver).unwrap();
+        assert!(read_shard(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn index_roundtrips_and_validates() {
+        let dir = tmpdir("index");
+        let idx = DataIndex {
+            seq_len: 32,
+            vocab: 512,
+            shards: vec![
+                ShardMeta { file: "a.bin".into(), seqs: 10, bytes: 1316, crc32: 7 },
+                ShardMeta { file: "b.bin".into(), seqs: 3, bytes: 420, crc32: 9 },
+            ],
+        };
+        idx.write_atomic(&dir).unwrap();
+        assert!(!dir.join("index.json.tmp").exists());
+        let back = DataIndex::read(&dir).unwrap();
+        assert_eq!(back, idx);
+        assert_eq!(back.total_seqs(), 13);
+
+        // Foreign JSON and path-traversal shard names are rejected.
+        std::fs::write(dir.join(INDEX_NAME), "{\"format\": \"other\"}").unwrap();
+        assert!(DataIndex::read(&dir).is_err());
+        std::fs::write(
+            dir.join(INDEX_NAME),
+            "{\"format\": \"frugal-data\", \"version\": 1, \"seq_len\": 8, \"vocab\": 4, \
+             \"shards\": [{\"file\": \"../x\", \"seqs\": 1, \"bytes\": 1, \"crc32\": 0}]}",
+        )
+        .unwrap();
+        assert!(DataIndex::read(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -90,6 +90,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::subspace::{lane_partition, MaskBuilder};
 use crate::coordinator::LrSchedule;
 use crate::optim::adamw::{AdamCfg, AdamState};
+use crate::schedule::BatchPlan;
 use crate::telemetry::{Counter, Phase, Telemetry};
 use crate::train::SubspaceClock;
 use crate::Result;
@@ -306,6 +307,17 @@ pub struct Engine {
     round: u64,
     reports: Vec<RoundReport>,
     pub metrics: Metrics,
+    /// Optional batch-size warmup ([`crate::schedule::BatchSchedule`]
+    /// bound to this run's geometry). `cfg.parallel.grad_accum` stays
+    /// the provisioning bound (`plan.peak()`, enforced at build);
+    /// `active_accum` is the micro count the current round actually
+    /// runs — re-derived at every round boundary and on restore as a
+    /// pure function of the round number.
+    batch_plan: Option<BatchPlan>,
+    active_accum: usize,
+    /// Sequences per training micro-batch, as declared by the data
+    /// plane (0 = undeclared; the `SequencesAssigned` counter stays 0).
+    seqs_per_micro: u64,
 }
 
 /// Deterministic-counter snapshot taken at a round boundary (the base
@@ -335,6 +347,8 @@ pub struct EngineBuilder {
     telemetry: Option<Telemetry>,
     worker_config: String,
     worker_args: Vec<Vec<String>>,
+    batch_plan: Option<BatchPlan>,
+    seqs_per_micro: u64,
 }
 
 impl EngineBuilder {
@@ -388,6 +402,23 @@ impl EngineBuilder {
     /// (fault injection for the determinism CI, mainly).
     pub fn worker_args(mut self, args: Vec<Vec<String>>) -> Self {
         self.worker_args = args;
+        self
+    }
+
+    /// Batch-size warmup plan. Must be consistent with the static
+    /// config: `plan.peak() == parallel.grad_accum` (the engine
+    /// provisions residual slots and checkpoints at the peak) and
+    /// `plan.steps_per_round == update_freq` (the schedule advances at
+    /// round boundaries). Both are checked in `build()`.
+    pub fn batch_plan(mut self, plan: BatchPlan) -> Self {
+        self.batch_plan = Some(plan);
+        self
+    }
+
+    /// Declare the data plane's sequences-per-micro-batch so the
+    /// engine's `SequencesAssigned` deterministic counter accrues.
+    pub fn seqs_per_micro(mut self, seqs: u64) -> Self {
+        self.seqs_per_micro = seqs;
         self
     }
 
@@ -453,6 +484,25 @@ impl EngineBuilder {
         let clock = SubspaceClock::new(cfg.update_freq);
         let workers = cfg.parallel.workers;
         let grad_accum = cfg.parallel.grad_accum;
+        if let Some(plan) = &self.batch_plan {
+            // Residual slots and checkpoints are provisioned at the
+            // schedule's peak; grad_accum IS that peak by contract.
+            anyhow::ensure!(
+                plan.peak() == grad_accum,
+                "batch plan peaks at {} micro-steps but parallel.grad_accum is {}; \
+                 set grad_accum to the schedule's end value",
+                plan.peak(),
+                grad_accum
+            );
+            anyhow::ensure!(
+                plan.steps_per_round == cfg.update_freq,
+                "batch plan advances every {} steps but update_freq is {}",
+                plan.steps_per_round,
+                cfg.update_freq
+            );
+        }
+        let active_accum =
+            self.batch_plan.as_ref().map(|p| p.accum_for_round(1)).unwrap_or(grad_accum);
         let workers_ctx = (0..workers)
             .map(|_| WorkerCtx { grad: vec![0.0; padded], ..WorkerCtx::default() })
             .collect();
@@ -484,6 +534,9 @@ impl EngineBuilder {
             round: 0,
             reports: Vec::new(),
             metrics: Metrics::new(),
+            batch_plan: self.batch_plan,
+            active_accum,
+            seqs_per_micro: self.seqs_per_micro,
         })
     }
 }
@@ -605,6 +658,13 @@ impl Engine {
     /// pools and residual bank in one place.
     fn begin_round(&mut self) {
         self.round += 1;
+        // Batch-size warmup advances at the same boundary as ρ: the
+        // micro count for this round is a pure function of the round
+        // number (a token replay), so workers 1 ≡ N and resume ≡
+        // continuous hold by construction.
+        if let Some(plan) = &self.batch_plan {
+            self.active_accum = plan.accum_for_round(self.round);
+        }
         // The SubspaceClock names the epoch; the MaskBuilder's schedule
         // supplies ρ(epoch). The two counters advance in lock-step
         // (one per `update_freq` steps), checked here.
@@ -699,7 +759,9 @@ impl Engine {
             }
             self.begin_round();
         }
-        let m = self.cfg.parallel.grad_accum;
+        // The micro count this round actually runs — grad_accum when no
+        // batch plan is set, the warmup schedule's value otherwise.
+        let m = self.active_accum;
         let nw = self.cfg.parallel.workers;
         let padded = self.mask_builder.layout().padded_size;
 
@@ -961,6 +1023,12 @@ impl Engine {
         self.tel.add(Counter::CombineCalls, wire.combines);
         self.tel.add(Counter::DecodeRootCalls, 1);
         self.tel.add(Counter::StragglerTimeouts, timeouts);
+        // Data-plane counters: pure functions of batch geometry, so
+        // identical at any worker count and over any transport.
+        self.tel.add(Counter::TokensConsumed, tokens_total as u64);
+        if self.seqs_per_micro > 0 {
+            self.tel.add(Counter::SequencesAssigned, self.seqs_per_micro * wire.leaves);
+        }
         let pool_stats = self.pool.stats();
         self.tel.set(Counter::PoolGrabs, self.pool_grabs_base + pool_stats.grabs);
         self.tel.set(Counter::PoolMisses, pool_stats.misses);
@@ -1138,6 +1206,10 @@ impl Engine {
         st.adam_t = self.clock.adam_t();
         st.update_freq = self.cfg.update_freq;
         st.grad_accum = self.cfg.parallel.grad_accum;
+        st.batch_schedule.clear();
+        if let Some(plan) = &self.batch_plan {
+            st.batch_schedule.push_str(&plan.schedule.to_string());
+        }
         st.workers = self.cfg.parallel.workers;
         st.shard_granularity = self.cfg.parallel.shard_granularity;
         st.flat_size = layout.flat_size;
@@ -1239,6 +1311,20 @@ impl Engine {
             st.grad_accum,
             self.cfg.parallel.grad_accum
         );
+        // The warmup schedule replays consumed tokens from the round
+        // number, so changing it mid-run silently re-times every future
+        // batch-size change — reject like any other math-bearing knob.
+        // Both sides empty = no schedule then, none now (legacy
+        // snapshots restore fine into schedule-less runs).
+        let batch_spec =
+            self.batch_plan.as_ref().map(|p| p.schedule.to_string()).unwrap_or_default();
+        anyhow::ensure!(
+            batch_spec == st.batch_schedule,
+            "snapshot ran batch schedule [{}] but this run uses [{}] — the warmup \
+             timeline is part of the math; resume with a matching --batch-schedule",
+            if st.batch_schedule.is_empty() { "none" } else { &st.batch_schedule },
+            if batch_spec.is_empty() { "none" } else { &batch_spec }
+        );
         anyhow::ensure!(
             self.clock.step() == 0,
             "restore_state must run on a fresh engine (already at step {})",
@@ -1277,6 +1363,11 @@ impl Engine {
         self.flat = st.flat;
         self.mask = mask;
         self.round = st.round;
+        // Re-derive the interrupted round's micro count — same pure
+        // replay begin_round would have done on the continuous run.
+        if let Some(plan) = &self.batch_plan {
+            self.active_accum = plan.accum_for_round(st.round);
+        }
         self.mask_builder.restore_ckpt_state(&crate::coordinator::subspace::MaskBuilderState {
             round: st.builder_round,
             cursor: st.builder_cursor,

@@ -157,6 +157,14 @@ pub enum Frame {
     /// Coordinator → worker: the run (or this worker's membership) is
     /// over; exit cleanly.
     Shutdown,
+    /// Data client → data server (`frugal dataserve`): send me the
+    /// tokens of global training micro-batch `micro`.
+    DataRequest { micro: u64 },
+    /// Data server → client: the requested micro-batch's tokens
+    /// (row-major `batch × seq_len`, same layout the fill contract
+    /// produces — the client copies them into the engine's recycled
+    /// batch buffer unchanged).
+    DataBatch { micro: u64, tokens: Vec<i32> },
 }
 
 /// What a collector-side [`Transport::recv_frame`] yields.
@@ -359,6 +367,8 @@ const TAG_MICRO: u8 = 4;
 const TAG_FAILED: u8 = 5;
 const TAG_LEAVE: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
+const TAG_DATA_REQUEST: u8 = 8;
+const TAG_DATA_BATCH: u8 = 9;
 
 const PAYLOAD_F32: u8 = 0;
 const PAYLOAD_SIGN: u8 = 1;
@@ -395,6 +405,13 @@ fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
     put_u32(out, v.len() as u32);
     for &x in v {
         put_f32(out, x);
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
     }
 }
 
@@ -516,6 +533,12 @@ impl<'a> FrameReader<'a> {
         Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
     fn payload(&mut self) -> Result<Payload> {
         match self.u8()? {
             PAYLOAD_F32 => Ok(Payload::F32(self.f32s()?)),
@@ -616,6 +639,15 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             put_u64(out, *worker);
         }
         Frame::Shutdown => out.push(TAG_SHUTDOWN),
+        Frame::DataRequest { micro } => {
+            out.push(TAG_DATA_REQUEST);
+            put_u64(out, *micro);
+        }
+        Frame::DataBatch { micro, tokens } => {
+            out.push(TAG_DATA_BATCH);
+            put_u64(out, *micro);
+            put_i32s(out, tokens);
+        }
     }
 }
 
@@ -664,6 +696,8 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
         TAG_FAILED => Frame::Failed { worker: r.u64()?, message: r.string()? },
         TAG_LEAVE => Frame::Leave { worker: r.u64()? },
         TAG_SHUTDOWN => Frame::Shutdown,
+        TAG_DATA_REQUEST => Frame::DataRequest { micro: r.u64()? },
+        TAG_DATA_BATCH => Frame::DataBatch { micro: r.u64()?, tokens: r.i32s()? },
         other => anyhow::bail!("frame decode: unknown frame tag {other}"),
     };
     anyhow::ensure!(
@@ -998,6 +1032,9 @@ mod tests {
         roundtrip(&Frame::Failed { worker: 1, message: "boom".into() });
         roundtrip(&Frame::Leave { worker: 9 });
         roundtrip(&Frame::Shutdown);
+        roundtrip(&Frame::DataRequest { micro: u64::MAX });
+        roundtrip(&Frame::DataBatch { micro: 42, tokens: vec![0, -1, i32::MAX, 7] });
+        roundtrip(&Frame::DataBatch { micro: 0, tokens: vec![] });
     }
 
     #[test]

@@ -2,12 +2,17 @@
 //!
 //! Subcommands:
 //!   info      — show artifact manifest + platform
-//!   pretrain  — pre-train a model config on the synthetic corpus
+//!   pretrain  — pre-train a model config on the synthetic corpus, or a
+//!               packed shard directory via `--data DIR`
 //!               (`--workers N` switches to the data-parallel engine;
 //!               `--transport uds|tcp` runs one OS process per worker;
 //!               `--ckpt-dir`/`--save-every`/`--resume` snapshot/restore)
 //!   worker    — gradient-server process the socket transports spawn
 //!               (or `--transport-addr` + spawn = false runs join manually)
+//!   data      — pack token streams into FRGLDAT1 shard files / inspect
+//!               a packed directory (CRC verify)
+//!   dataserve — serve a corpus over uds/tcp for workers that cannot
+//!               see the shard directory
 //!   ckpt      — inspect a sharded snapshot (manifest + CRC verify)
 //!   trace     — render an exported run trace (counters + phase spans);
 //!               two directories diff their counter manifests
@@ -21,11 +26,16 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use frugal::ckpt::{self, MomentCodec};
 use frugal::coordinator::metrics::perplexity;
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
-use frugal::data::{CorpusConfig, SyntheticCorpus};
+use frugal::data::stream::{
+    pack_corpus, read_shard_verified, DataIndex, DataServer, Prefetcher, RemoteCorpus,
+    StreamingCorpus,
+};
+use frugal::data::{Corpus, CorpusConfig, SyntheticCorpus, SyntheticStream};
 use frugal::engine::orchestrator::SavePolicy;
 use frugal::engine::{run_worker, worker_handshake, CompressMode, Engine, EngineCfg, GradSource,
                      Orchestrator, ParallelCfg, RefLm, RefLmCfg, Sources, TransportKind,
@@ -34,7 +44,7 @@ use frugal::optim::memory::{checkpoint_bytes, fmt_gib, lane_wire_bytes, optimize
                             split_wire_report, ArchSpec, Method, WireCodec};
 use frugal::optim::memory::scheduled_state_table;
 use frugal::runtime::{Manifest, Runtime};
-use frugal::schedule::RhoSchedule;
+use frugal::schedule::{BatchPlan, BatchSchedule, RhoSchedule};
 use frugal::train::{FusedTrainer, GradTrainer, PjrtGradSource};
 use frugal::util::Prng;
 use frugal::TrainConfig;
@@ -56,8 +66,13 @@ USAGE:
                   [--ckpt-dir DIR] [--save-every N] [--ckpt-codec q8|raw]
                   [--ckpt-sync] [--keep-last N] [--resume DIR]
                   [--trace-dir DIR]
+                  [--data DIR] [--prefetch N] [--batch-schedule SPEC]
   frugal worker   --connect ADDR [--tcp] [--fault-step N] [--leave-after N]
-                  [--slot-delay-ms N]
+                  [--slot-delay-ms N] [--data DIR] [--data-addr ADDR]
+  frugal data     pack --out DIR --seq-len N [--vocab V] [--shard-seqs N]
+                  (--tokens FILE | --synthetic-seqs N [--seed S])
+  frugal data     inspect DIR
+  frugal dataserve --data DIR --batch N [--addr ADDR] [--tcp] [--seed S]
   frugal ckpt     inspect DIR
   frugal trace    DIR [DIR2]
   frugal memory   [--model SCALE] [--rho-schedule SPEC] [--epochs N]
@@ -116,6 +131,25 @@ phases.jsonl / spans.jsonl (the wall-clock flight recorder) and
 metrics.jsonl (the step log). `frugal trace DIR` renders the phase
 breakdown (p50/p99) and counters; `frugal trace DIR DIR2` additionally
 diffs the two counter manifests plane by plane.
+
+`--data DIR` trains on a packed shard directory (`frugal data pack`)
+instead of the synthetic corpus (also the `[data]` config section).
+Batch→sequence assignment is a pure function of --seed, so the loss
+trace stays bit-identical at any --workers and across kill/resume; the
+corpus seq_len must match the model's. `--prefetch N` buffers N batches
+ahead on a background reader thread (0 = synchronous fills). Spawned
+socket workers read the same directory via the handshake config (shared
+filesystem); `frugal dataserve` + worker `--data-addr` covers the rest.
+
+`--batch-schedule SPEC` warms the global batch size (micro-steps per
+optimizer step) up linearly over training tokens; SPEC is
+  M | constant:M | linear:START:END:WARMUP_TOKENS
+(also the `[schedule.batch]` config section). The schedule advances at
+round boundaries as a pure replay of consumed tokens, so workers 1 == N
+and resume == continuous stay bitwise; --grad-accum must equal the
+schedule's end value (it defaults to it), and state is provisioned at
+that peak. Snapshots record the spec; a resume under a different one is
+rejected.
 ";
 
 /// Minimal flag parser: `--key value` pairs plus boolean `--key` flags.
@@ -310,15 +344,35 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             if let Some(d) = args.get("trace-dir") {
                 cfg.telemetry.dir = Some(d.to_string());
             }
+            if let Some(d) = args.get("data") {
+                cfg.data.dir = Some(d.to_string());
+            }
+            if let Some(n) = args.get_u64("prefetch")? {
+                cfg.data.prefetch = n as usize;
+            }
+            if let Some(s) = args.get("batch-schedule") {
+                cfg.batch_schedule = Some(BatchSchedule::parse(s)?);
+            }
+            if let Some(bs) = &cfg.batch_schedule {
+                // The engine provisions at the schedule's peak; an
+                // unset --grad-accum defaults to it, an explicit one
+                // must match (checked again at engine build).
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                if p.grad_accum == 1 {
+                    p.grad_accum = bs.peak();
+                }
+            }
             let resume = args.get("resume").map(|s| s.to_string());
             // --backend alone also opts into the engine (it has no
             // meaning on the legacy paths and must not be ignored) — as
             // do the checkpoint/resume flags, a [checkpoint] section,
-            // and a trace export (only the engine carries telemetry).
+            // a trace export (only the engine carries telemetry), and
+            // the streaming data plane (only the engine consumes it).
             if args.get("backend").is_some()
                 || resume.is_some()
                 || cfg.checkpoint.dir.is_some()
                 || cfg.telemetry.dir.is_some()
+                || cfg.data.dir.is_some()
             {
                 cfg.parallel.get_or_insert_with(ParallelCfg::default);
             }
@@ -352,7 +406,8 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             let addr = args.get("connect").ok_or_else(|| {
                 anyhow::anyhow!(
                     "usage: frugal worker --connect ADDR [--tcp] [--fault-step N] \
-                     [--leave-after N] [--slot-delay-ms N]"
+                     [--leave-after N] [--slot-delay-ms N] [--data DIR] \
+                     [--data-addr ADDR]"
                 )
             })?;
             let kind = if args.has("tcp") { TransportKind::Tcp } else { TransportKind::Uds };
@@ -361,7 +416,35 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                 leave_after_steps: args.get_u64("leave-after")?,
                 slot_delay_ms: args.get_u64("slot-delay-ms")?.unwrap_or(0),
             };
-            worker(kind, addr, opts)
+            worker(
+                kind,
+                addr,
+                opts,
+                args.get("data").map(|s| s.to_string()),
+                args.get("data-addr").map(|s| s.to_string()),
+            )
+        }
+        "data" => {
+            let Some(action) = rest.first() else {
+                anyhow::bail!(
+                    "usage: frugal data pack --out DIR --seq-len N ... | frugal data \
+                     inspect DIR"
+                );
+            };
+            match action.as_str() {
+                "pack" => data_pack(&Args::parse(&rest[1..], &[])?),
+                "inspect" => {
+                    let Some(dir) = rest.get(1) else {
+                        anyhow::bail!("usage: frugal data inspect DIR");
+                    };
+                    data_inspect(Path::new(dir))
+                }
+                other => anyhow::bail!("unknown data action '{other}' (expected: pack | inspect)"),
+            }
+        }
+        "dataserve" => {
+            let args = Args::parse(rest, &["tcp"])?;
+            dataserve(&args)
         }
         "ckpt" => {
             let (Some(action), Some(dir)) = (rest.first(), rest.get(1)) else {
@@ -456,6 +539,9 @@ fn ckpt_inspect(path: &Path) -> frugal::Result<()> {
     if !man.layout.is_empty() {
         println!("  layout fingerprint [{}]", man.layout);
     }
+    if !man.batch_schedule.is_empty() {
+        println!("  batch schedule [{}]", man.batch_schedule);
+    }
     println!(
         "  moment codec {} (block {})  data bytes {}{}",
         man.moment_codec,
@@ -494,6 +580,149 @@ fn ckpt_inspect(path: &Path) -> frugal::Result<()> {
     Ok(())
 }
 
+/// `frugal data pack`: write a tokenized shard corpus. Tokens come from
+/// a raw little-endian u32 file (`--tokens`) or a seeded synthetic
+/// stream (`--synthetic-seqs`, for tests/CI that need real shard files
+/// without real data).
+fn data_pack(args: &Args) -> frugal::Result<()> {
+    let out = args.get("out").ok_or_else(|| anyhow::anyhow!("data pack needs --out DIR"))?;
+    let seq_len = args
+        .get_u64("seq-len")?
+        .ok_or_else(|| anyhow::anyhow!("data pack needs --seq-len N"))? as usize;
+    anyhow::ensure!(seq_len >= 1, "--seq-len must be >= 1");
+    let shard_seqs = args.get_u64("shard-seqs")?.unwrap_or(1024) as usize;
+    let tokens: Vec<i32>;
+    let vocab: usize;
+    match (args.get("tokens"), args.get_u64("synthetic-seqs")?) {
+        (Some(path), None) => {
+            let bytes = std::fs::read(path)
+                .map_err(|e| anyhow::anyhow!("reading token file {path}: {e}"))?;
+            anyhow::ensure!(
+                !bytes.is_empty() && bytes.len() % 4 == 0,
+                "token file {path} is {} bytes — expected a non-empty multiple of 4 \
+                 (raw little-endian u32 tokens)",
+                bytes.len()
+            );
+            tokens = bytes
+                .chunks_exact(4)
+                .map(|c| {
+                    let t = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    anyhow::ensure!(t <= i32::MAX as u32, "token {t} overflows i32");
+                    Ok(t as i32)
+                })
+                .collect::<frugal::Result<Vec<i32>>>()?;
+            anyhow::ensure!(
+                tokens.len() % seq_len == 0,
+                "token file holds {} tokens — not a multiple of --seq-len {}",
+                tokens.len(),
+                seq_len
+            );
+            let max = tokens.iter().copied().max().unwrap_or(0);
+            vocab = match args.get_u64("vocab")? {
+                Some(v) => {
+                    anyhow::ensure!(
+                        (max as u64) < v,
+                        "token {max} out of range for --vocab {v}"
+                    );
+                    v as usize
+                }
+                None => max as usize + 1,
+            };
+        }
+        (None, Some(n_seqs)) => {
+            anyhow::ensure!(n_seqs >= 1, "--synthetic-seqs must be >= 1");
+            vocab = args.get_u64("vocab")?.unwrap_or(256) as usize;
+            anyhow::ensure!(vocab >= 2, "--vocab must be >= 2");
+            let seed = args.get_u64("seed")?.unwrap_or(0);
+            let mut rng = Prng::seed_from_u64(seed ^ 0xDA7A_5EED);
+            tokens = (0..n_seqs as usize * seq_len)
+                .map(|_| rng.range(0, vocab) as i32)
+                .collect();
+        }
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--tokens and --synthetic-seqs are alternatives, not both")
+        }
+        (None, None) => {
+            anyhow::bail!("data pack needs a source: --tokens FILE or --synthetic-seqs N")
+        }
+    }
+    let index = pack_corpus(Path::new(out), seq_len, vocab, shard_seqs, &tokens)?;
+    println!(
+        "packed {}: {} seqs × {} tokens (vocab {}) into {} shard(s)",
+        out,
+        index.total_seqs(),
+        index.seq_len,
+        index.vocab,
+        index.shards.len()
+    );
+    Ok(())
+}
+
+/// `frugal data inspect DIR`: print the index manifest and re-verify
+/// every shard's header geometry and payload CRC against it — the same
+/// deep check `StreamingCorpus::open` runs, plus a per-shard table.
+fn data_inspect(dir: &Path) -> frugal::Result<()> {
+    let index = DataIndex::read(dir)?;
+    println!("corpus: {}", dir.display());
+    println!(
+        "  seq_len {}  vocab {}  {} seqs in {} shard(s)",
+        index.seq_len,
+        index.vocab,
+        index.total_seqs(),
+        index.shards.len()
+    );
+    println!("  {:<16} {:>8} {:>12} {:>10}", "file", "seqs", "bytes", "crc32");
+    for s in &index.shards {
+        println!(
+            "  {:<16} {:>8} {:>12} {:#010x}",
+            s.file, s.seqs, s.bytes, s.crc32
+        );
+        let (h, _) = read_shard_verified(&dir.join(&s.file), s.crc32)?;
+        anyhow::ensure!(
+            h.seq_len as usize == index.seq_len
+                && h.vocab as usize == index.vocab
+                && u64::from(h.n_seqs) == s.seqs,
+            "shard {} header ({} seqs × {}, vocab {}) disagrees with the index",
+            s.file,
+            h.n_seqs,
+            h.seq_len,
+            h.vocab
+        );
+    }
+    println!("ok: all shards verified (header + crc32) against the index");
+    Ok(())
+}
+
+/// `frugal dataserve --data DIR --batch N`: serve fill-contract batches
+/// over the worker Transport, for deployments where worker processes
+/// cannot see the shard directory.
+fn dataserve(args: &Args) -> frugal::Result<()> {
+    let dir = args.get("data").ok_or_else(|| anyhow::anyhow!("dataserve needs --data DIR"))?;
+    let batch = args
+        .get_u64("batch")?
+        .ok_or_else(|| anyhow::anyhow!("dataserve needs --batch N (the model batch)"))?
+        as usize;
+    let seed = args.get_u64("seed")?.unwrap_or(0);
+    let kind = if args.has("tcp") { TransportKind::Tcp } else { TransportKind::Uds };
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => frugal::engine::transport::default_addr(kind),
+    };
+    let corpus = StreamingCorpus::open(Path::new(dir), batch, seed)?;
+    println!(
+        "dataserve: {} ({} seqs × {} tokens, vocab {}) batch {} seed {}",
+        dir,
+        corpus.total_seqs(),
+        corpus.seq_len(),
+        corpus.vocab(),
+        batch,
+        seed
+    );
+    let server = DataServer::start(kind, &addr, Arc::new(corpus))?;
+    println!("listening on {} ({kind}) — workers connect with --data-addr", server.addr());
+    server.run_forever()
+}
+
 /// `frugal worker --connect ADDR`: the gradient-server process the
 /// socket transports talk to. Connects (with retry — the coordinator
 /// may still be binding), handshakes for a stable worker id, then
@@ -501,17 +730,54 @@ fn ckpt_inspect(path: &Path) -> frugal::Result<()> {
 /// `Shutdown`. The batch function is the same pure function of the
 /// global micro-batch index the in-memory engine uses — that, plus the
 /// bit-exact frame codec, is the whole determinism contract.
-fn worker(kind: TransportKind, addr: &str, opts: WorkerOpts) -> frugal::Result<()> {
+fn worker(
+    kind: TransportKind,
+    addr: &str,
+    opts: WorkerOpts,
+    data_dir: Option<String>,
+    data_addr: Option<String>,
+) -> frugal::Result<()> {
     use frugal::engine::transport::{worker_connect_retry, FrameIo};
+    anyhow::ensure!(
+        data_dir.is_none() || data_addr.is_none(),
+        "--data and --data-addr are alternatives (shared filesystem vs data server)"
+    );
     let stream = worker_connect_retry(kind, addr, std::time::Duration::from_secs(10))?;
     let mut io = FrameIo::new(stream);
-    let (id, _config) = worker_handshake(&mut io)?;
+    let (id, config) = worker_handshake(&mut io)?;
     let mut model = RefLm::new(RefLmCfg::default());
     let rcfg = model.cfg().clone();
-    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(rcfg.vocab));
-    let batch_fn = move |micro: u64, buf: &mut Vec<i32>| {
-        corpus.fill_train_batch(rcfg.batch, rcfg.seq_len, micro, buf);
+    // The coordinator's run config rides the handshake: its [data]
+    // section (or an explicit --data/--data-addr here) points this
+    // worker at the same corpus the in-memory engine would read, so the
+    // batch bits are identical by construction.
+    let run_cfg = TrainConfig::from_toml(&config)?;
+    let data_dir = data_dir.or_else(|| run_cfg.data.dir.clone());
+    let corpus: Box<dyn Corpus> = if let Some(daddr) = &data_addr {
+        Box::new(RemoteCorpus::connect(
+            kind,
+            daddr,
+            rcfg.batch,
+            rcfg.seq_len,
+            std::time::Duration::from_secs(10),
+        )?)
+    } else if let Some(dir) = &data_dir {
+        let sc = StreamingCorpus::open(Path::new(dir), rcfg.batch, run_cfg.seed)?;
+        anyhow::ensure!(
+            sc.index().seq_len == rcfg.seq_len,
+            "corpus seq_len {} != model seq_len {}",
+            sc.index().seq_len,
+            rcfg.seq_len
+        );
+        Box::new(sc)
+    } else {
+        Box::new(SyntheticStream::new(
+            SyntheticCorpus::new(CorpusConfig::default_for_vocab(rcfg.vocab)),
+            rcfg.batch,
+            rcfg.seq_len,
+        ))
     };
+    let batch_fn = move |micro: u64, buf: &mut Vec<i32>| corpus.fill_train_batch(micro, buf);
     run_worker(&mut io, id, &mut model, &batch_fn, opts)
 }
 
@@ -548,9 +814,10 @@ fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
             cfg.update_freq,
             cfg.seed,
         )?;
+        let mut tokens = Vec::new();
         for step in 0..cfg.steps {
-            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-            let loss = tr.step(&batch.tokens)?;
+            corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+            let loss = tr.step(&tokens)?;
             if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
                 let val = tr.session.eval_loss(&tr.flat, cfg.eval_batches, |i| {
                     corpus.val_batch(entry.batch, entry.seq_len, i).tokens
@@ -581,9 +848,10 @@ fn pretrain(cfg: TrainConfig, fused: bool) -> frugal::Result<()> {
         let mut tr =
             GradTrainer::new(&rt, &man, &cfg.model, opt, cfg.schedule.clone(), cfg.lr, cfg.seed)?;
         tr.clip = cfg.clip.map(|c| c as f32);
+        let mut tokens = Vec::new();
         for step in 0..cfg.steps {
-            let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-            let loss = tr.step(&batch.tokens)?;
+            corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+            let loss = tr.step(&tokens)?;
             if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
                 let val = tr.session.eval_loss(&tr.flat, cfg.eval_batches, |i| {
                     corpus.val_batch(entry.batch, entry.seq_len, i).tokens
@@ -743,8 +1011,23 @@ fn pretrain_parallel(
         SubspacePolicy::Blockwise(cfg.block_policy()),
         cfg.seed,
     );
+    // Batch-size warmup: bind the schedule to this run's geometry (one
+    // micro-batch = batch × seq_len tokens, one round = update_freq
+    // steps). grad_accum is the provisioning peak; the plan decides how
+    // many of those slots each round actually runs.
+    let tokens_per_micro = (batch * seq_len) as u64;
+    let batch_plan = cfg
+        .batch_schedule
+        .clone()
+        .map(|s| BatchPlan::new(s, tokens_per_micro, cfg.update_freq));
+    if let Some(plan) = &batch_plan {
+        println!(
+            "batch schedule: {} ({} tokens/micro, advances every {} steps)",
+            plan.schedule, tokens_per_micro, cfg.update_freq
+        );
+    }
     let engine_cfg = EngineCfg {
-        parallel: pcfg,
+        parallel: pcfg.clone(),
         schedule: cfg.schedule.clone(),
         peak_lr: cfg.lr,
         lr_free_mult: cfg.lr_free_mult,
@@ -756,14 +1039,18 @@ fn pretrain_parallel(
     if let Some((w, s)) = worker_fault {
         worker_args[w] = vec!["--fault-step".into(), s.to_string()];
     }
-    let engine = Engine::builder()
+    let mut builder = Engine::builder()
         .mask_builder(mask_builder)
         .cfg(engine_cfg)
         .sources(sources)
         .init_flat(init)
         .worker_config(cfg.to_toml())
         .worker_args(worker_args)
-        .build()?;
+        .seqs_per_micro(batch as u64);
+    if let Some(plan) = batch_plan.clone() {
+        builder = builder.batch_plan(plan);
+    }
+    let engine = builder.build()?;
     let mut orch = Orchestrator::new(engine);
     orch.verbose = true;
     orch.engine
@@ -824,12 +1111,78 @@ fn pretrain_parallel(
         steps = cfg.steps - man.step;
     }
 
-    let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(vocab));
-    let train_fn = |micro: u64, buf: &mut Vec<i32>| {
-        corpus.fill_train_batch(batch, seq_len, micro, buf);
+    // Data plane: streaming shard corpus when `[data] dir` / `--data` is
+    // set, the synthetic corpus otherwise. Both speak the same fill-style
+    // contract, so the engine cannot tell them apart.
+    let corpus: Arc<dyn Corpus> = match &cfg.data.dir {
+        Some(dir) => {
+            let sc = StreamingCorpus::open(Path::new(dir), batch, cfg.seed)?;
+            anyhow::ensure!(
+                sc.seq_len() == seq_len,
+                "shard corpus {} holds {}-token sequences but the model runs seq_len {}",
+                dir,
+                sc.seq_len(),
+                seq_len
+            );
+            anyhow::ensure!(
+                sc.vocab() <= vocab,
+                "shard corpus {} uses vocab {} but the model embeds only {}",
+                dir,
+                sc.vocab(),
+                vocab
+            );
+            println!(
+                "data: streaming {} ({} seqs × {} tokens, vocab {})",
+                dir,
+                sc.total_seqs(),
+                sc.seq_len(),
+                sc.vocab()
+            );
+            Arc::new(sc)
+        }
+        None => Arc::new(SyntheticStream::new(
+            SyntheticCorpus::new(CorpusConfig::default_for_vocab(vocab)),
+            batch,
+            seq_len,
+        )),
     };
-    let mut val_fn = |idx: u64| corpus.val_batch(batch, seq_len, idx).tokens;
+    // Prefetch pipeline (streaming only): a background reader keeps the
+    // next `prefetch` micro-batches resident so steady-state fills are
+    // buffer swaps, not shard reads. Start at the first micro this run
+    // will actually request (resume- and warmup-aware: micro = step ×
+    // that round's active accum).
+    let prefetcher = if cfg.data.dir.is_some() && cfg.data.prefetch > 0 {
+        let first_step = cfg.steps - steps;
+        let first_accum = batch_plan
+            .as_ref()
+            .map(|p| p.accum_for_round(first_step / cfg.update_freq + 1))
+            .unwrap_or(pcfg.grad_accum);
+        let start = first_step * first_accum as u64;
+        Some(Prefetcher::new(
+            Arc::clone(&corpus),
+            cfg.data.prefetch.max(2),
+            start,
+        ))
+    } else {
+        None
+    };
+    let train_fn = |micro: u64, buf: &mut Vec<i32>| match &prefetcher {
+        Some(p) => p.fill(micro, buf),
+        None => corpus.fill_train_batch(micro, buf),
+    };
+    let mut val_fn = |idx: u64| corpus.val_batch(idx);
     orch.run(steps, &train_fn, &mut val_fn, cfg.eval_every, cfg.eval_batches)?;
+    if let Some(p) = &prefetcher {
+        let s = p.stats();
+        println!(
+            "prefetch: {} hits, {} waits, {} direct fills, {:.1} ms stalled",
+            s.hits,
+            s.waits,
+            s.direct_fills,
+            s.stall_ns as f64 / 1e6
+        );
+        p.record_spans(orch.engine.telemetry_mut());
+    }
 
     let per_worker = orch.engine.state_floats_per_worker();
     println!(
@@ -1176,10 +1529,11 @@ fn angles(artifacts: &Path, model: &str, steps: u64) -> frugal::Result<()> {
     let r = (rows.min(cols) / 4).max(2);
     let mut projections: Vec<MatrixProjector> = Vec::new();
     let snapshot_every = (steps / 4).max(1);
+    let mut tokens = Vec::new();
     for step in 0..steps {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
         if step % snapshot_every == 0 {
-            let (_, grads) = tr.loss_and_grad(&batch.tokens)?;
+            let (_, grads) = tr.loss_and_grad(&tokens)?;
             let g = Matrix::from_vec(
                 rows,
                 cols,
@@ -1187,7 +1541,7 @@ fn angles(artifacts: &Path, model: &str, steps: u64) -> frugal::Result<()> {
             );
             projections.push(MatrixProjector::from_svd(&g, r));
         }
-        tr.step(&batch.tokens)?;
+        tr.step(&tokens)?;
     }
     println!("Figure 2: principal-angle cosines between SVD projections of {}", target.name);
     for i in 1..projections.len() {

@@ -1,0 +1,300 @@
+//! Linear batch-size warmup: the global batch as a function of tokens
+//! consumed.
+//!
+//! Psyche-style `global_batch_size_start/end/warmup_tokens`: the global
+//! batch (micro-batches per optimizer step, `grad_accum`) increases
+//! linearly from `start` to `end` over the first `warmup_tokens` training
+//! tokens, then holds `end`. The engine applies the schedule at **round
+//! boundaries** (one round = `update_freq` steps) — the same boundary
+//! where the subspace re-selects and all shard state re-provisions — so
+//! a changing batch composes with variable-ρ re-provisioning without a
+//! second lifecycle.
+//!
+//! Determinism contract, mirroring [`super::RhoSchedule`]:
+//! [`BatchSchedule::size_at`] is a pure function of the token count and
+//! [`BatchPlan::accum_for_round`] is a pure function of the round number
+//! — the token count it feeds from is *reconstructed* from the round
+//! counter, never read back from a telemetry counter — so `workers 1 ≡
+//! workers N` and `resume ≡ continuous` stay bitwise under a warming
+//! batch. The canonical spec string (the [`std::fmt::Display`] form,
+//! accepted back by [`BatchSchedule::parse`]) is the schedule's
+//! checkpoint fingerprint: a resume under a different batch schedule is
+//! rejected up front instead of silently replaying different data.
+//!
+//! Spec grammar (CLI `--batch-schedule` and the `[schedule.batch]`
+//! config section compile to the same values):
+//!
+//! ```text
+//! M (or constant:M)        fixed global batch (the classic grad_accum knob)
+//! linear:START:END:TOKENS  linear START → END micro-batches over TOKENS
+//!                          training tokens, then hold END
+//! ```
+
+use crate::Result;
+
+/// A global-batch schedule over tokens consumed (see the module docs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BatchSchedule {
+    /// Fixed global batch — the behavior of the scalar `grad_accum` knob.
+    Constant { batch: usize },
+    /// Linear interpolation `start → end` micro-batches over
+    /// `warmup_tokens` tokens; token counts at or past `warmup_tokens`
+    /// hold `end`. `start ≤ end` (the batch only grows), so global
+    /// micro-batch indices stay strictly increasing across rounds.
+    Linear { start: usize, end: usize, warmup_tokens: u64 },
+}
+
+impl BatchSchedule {
+    /// The constant schedule at `batch` — what a scalar `grad_accum`
+    /// config knob compiles to.
+    pub fn constant(batch: usize) -> BatchSchedule {
+        BatchSchedule::Constant { batch }
+    }
+
+    /// Parse the canonical spec string (see module docs for the
+    /// grammar). [`std::fmt::Display`] emits the same form, so
+    /// `parse(format!("{s}"))` round-trips every schedule exactly.
+    pub fn parse(spec: &str) -> Result<BatchSchedule> {
+        let int = |s: &str| -> Result<u64> {
+            s.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("bad count '{s}' in batch schedule '{spec}': {e}"))
+        };
+        let parts: Vec<&str> = spec.split(':').collect();
+        let sched = match parts.as_slice() {
+            // A bare number is the constant schedule (and its canonical
+            // Display form — identical to the legacy grad_accum knob).
+            &[m] if m.parse::<u64>().is_ok() => {
+                BatchSchedule::Constant { batch: int(m)? as usize }
+            }
+            &["constant", m] => BatchSchedule::Constant { batch: int(m)? as usize },
+            &["linear", s, e, t] => BatchSchedule::Linear {
+                start: int(s)? as usize,
+                end: int(e)? as usize,
+                warmup_tokens: int(t)?,
+            },
+            _ => anyhow::bail!(
+                "unknown batch schedule '{spec}' (expected constant:M | \
+                 linear:START:END:TOKENS)"
+            ),
+        };
+        sched.validate()?;
+        Ok(sched)
+    }
+
+    /// Reject out-of-range parameters with a config-time error (a bad
+    /// batch must not surface as a zero-micro-batch step mid-run).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            BatchSchedule::Constant { batch } => {
+                anyhow::ensure!(batch >= 1, "batch schedule needs batch >= 1");
+            }
+            BatchSchedule::Linear { start, end, warmup_tokens } => {
+                anyhow::ensure!(start >= 1, "batch schedule needs start >= 1");
+                anyhow::ensure!(
+                    start <= end,
+                    "batch schedule start {start} exceeds end {end} — the global batch \
+                     only warms up (shrinking it would fold micro-batch indices back \
+                     onto already-consumed data)"
+                );
+                anyhow::ensure!(
+                    warmup_tokens >= 1,
+                    "batch schedule needs warmup_tokens >= 1 (write a bare constant \
+                     instead of a zero-length warmup)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Global batch (micro-batches per step) after `tokens` training
+    /// tokens — a pure integer function (no floats, no state).
+    pub fn size_at(&self, tokens: u64) -> usize {
+        match *self {
+            BatchSchedule::Constant { batch } => batch,
+            BatchSchedule::Linear { start, end, warmup_tokens } => {
+                if tokens >= warmup_tokens {
+                    end
+                } else {
+                    // Integer floor interpolation; u128 keeps the product
+                    // exact for any u64 token count.
+                    let span = (end - start) as u128;
+                    start + (span * tokens as u128 / warmup_tokens as u128) as usize
+                }
+            }
+        }
+    }
+
+    /// The largest batch the schedule ever reaches — what the engine
+    /// provisions for (residual slots, checkpoint `grad_accum`).
+    pub fn peak(&self) -> usize {
+        match *self {
+            BatchSchedule::Constant { batch } => batch,
+            BatchSchedule::Linear { end, .. } => end,
+        }
+    }
+}
+
+impl std::fmt::Display for BatchSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            // Bare number: matches the legacy fixed-grad_accum spelling,
+            // so constant schedules fingerprint as the plain knob.
+            BatchSchedule::Constant { batch } => write!(f, "{batch}"),
+            BatchSchedule::Linear { start, end, warmup_tokens } => {
+                write!(f, "linear:{start}:{end}:{warmup_tokens}")
+            }
+        }
+    }
+}
+
+/// A [`BatchSchedule`] bound to a run's geometry: how many tokens one
+/// micro-batch carries and how many steps one round lasts. This is what
+/// the engine consults at every round boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub schedule: BatchSchedule,
+    /// Tokens per micro-batch (model batch × seq_len).
+    pub tokens_per_micro: u64,
+    /// Steps per round (`update_freq`).
+    pub steps_per_round: u64,
+}
+
+impl BatchPlan {
+    pub fn new(schedule: BatchSchedule, tokens_per_micro: u64, steps_per_round: u64) -> BatchPlan {
+        BatchPlan { schedule, tokens_per_micro, steps_per_round }
+    }
+
+    /// `grad_accum` for the 1-based round `round` — a pure function of
+    /// the round number: the token count entering each round is
+    /// reconstructed by replaying the schedule round by round, never
+    /// read back from a counter, so a restore recomputes the active
+    /// batch from the manifest's round alone. O(round) integer work,
+    /// called once per round boundary.
+    pub fn accum_for_round(&self, round: u64) -> usize {
+        let mut tokens = 0u64;
+        for _ in 1..round {
+            let ga = self.schedule.size_at(tokens) as u64;
+            tokens = tokens
+                .saturating_add(self.steps_per_round.saturating_mul(ga).saturating_mul(
+                    self.tokens_per_micro,
+                ));
+        }
+        self.schedule.size_at(tokens)
+    }
+
+    /// The largest `grad_accum` any round uses (provisioning bound).
+    pub fn peak(&self) -> usize {
+        self.schedule.peak()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip_every_kind() {
+        for spec in ["8", "linear:2:8:4096"] {
+            let s = BatchSchedule::parse(spec).unwrap();
+            assert_eq!(format!("{s}"), spec, "display must be canonical");
+            let back = BatchSchedule::parse(&format!("{s}")).unwrap();
+            assert_eq!(back, s);
+            for t in [0u64, 1, 100, 4096, u64::MAX] {
+                assert_eq!(back.size_at(t), s.size_at(t), "tokens {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_holds_and_matches_the_legacy_knob_form() {
+        let s = BatchSchedule::constant(8);
+        for t in [0u64, 1, 1 << 40] {
+            assert_eq!(s.size_at(t), 8);
+        }
+        assert_eq!(format!("{s}"), "8");
+        assert_eq!(BatchSchedule::parse("constant:8").unwrap(), s);
+        assert_eq!(BatchSchedule::parse("8").unwrap(), s);
+        assert_eq!(s.peak(), 8);
+    }
+
+    #[test]
+    fn linear_hits_endpoints_floors_and_holds() {
+        let s = BatchSchedule::parse("linear:2:8:600").unwrap();
+        assert_eq!(s.size_at(0), 2);
+        assert_eq!(s.size_at(99), 2); // floor: 2 + 6*99/600 = 2
+        assert_eq!(s.size_at(100), 3);
+        assert_eq!(s.size_at(300), 5);
+        assert_eq!(s.size_at(599), 7); // 2 + 6*599/600 = 7 (floor)
+        assert_eq!(s.size_at(600), 8);
+        assert_eq!(s.size_at(u64::MAX), 8);
+        assert_eq!(s.peak(), 8);
+    }
+
+    #[test]
+    fn warmup_is_monotone_non_decreasing() {
+        let s = BatchSchedule::parse("linear:1:16:1000").unwrap();
+        let mut prev = 0usize;
+        for t in 0..1100u64 {
+            let b = s.size_at(t);
+            assert!(b >= prev, "tokens {t}: {b} < {prev}");
+            assert!((1..=16).contains(&b), "tokens {t}: {b}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for spec in [
+            "bogus:4",
+            "linear:2:8",       // missing tokens
+            "linear:2:8:0",     // zero-length warmup
+            "linear:0:8:100",   // zero start
+            "linear:8:2:100",   // shrinking batch
+            "constant:0",
+            "constant:abc",
+            "linear:2:8:-1",
+            "",
+        ] {
+            assert!(BatchSchedule::parse(spec).is_err(), "'{spec}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn plan_replays_tokens_round_by_round() {
+        // tokens_per_micro 10, 5 steps/round, warmup 2→4 over 400 tokens:
+        // round 1 @ ga 2 consumes 5*2*10 = 100 → round 2 @ size_at(100)
+        // = 2 + 2*100/400 = 2; round 2 consumes another 100 → round 3 @
+        // size_at(200) = 3; round 3 consumes 150 → round 4 @ size_at(350)
+        // = 3; round 4 → size_at(500) = 4; held thereafter.
+        let plan = BatchPlan::new(BatchSchedule::parse("linear:2:4:400").unwrap(), 10, 5);
+        assert_eq!(plan.accum_for_round(1), 2);
+        assert_eq!(plan.accum_for_round(2), 2);
+        assert_eq!(plan.accum_for_round(3), 3);
+        assert_eq!(plan.accum_for_round(4), 3);
+        assert_eq!(plan.accum_for_round(5), 4);
+        assert_eq!(plan.accum_for_round(100), 4);
+        assert_eq!(plan.peak(), 4);
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_the_round() {
+        // Same round → same answer, in any query order (no hidden state).
+        let plan = BatchPlan::new(BatchSchedule::parse("linear:1:8:5000").unwrap(), 64, 10);
+        let forward: Vec<usize> = (1..20).map(|r| plan.accum_for_round(r)).collect();
+        let backward: Vec<usize> = (1..20).rev().map(|r| plan.accum_for_round(r)).collect();
+        let reversed: Vec<usize> = backward.into_iter().rev().collect();
+        assert_eq!(forward, reversed);
+        // Monotone non-decreasing round over round.
+        for w in forward.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn constant_plan_matches_the_plain_knob() {
+        let plan = BatchPlan::new(BatchSchedule::constant(4), 128, 50);
+        for r in [1u64, 2, 17, 1000] {
+            assert_eq!(plan.accum_for_round(r), 4);
+        }
+    }
+}

@@ -37,6 +37,10 @@
 
 use crate::Result;
 
+mod batch;
+
+pub use batch::{BatchPlan, BatchSchedule};
+
 /// A density schedule over mask epochs (see the module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum RhoSchedule {

@@ -68,6 +68,14 @@ pub enum Counter {
     Reprovisions,
     /// EF-residual bank resets at round boundaries (0 when EF is off).
     EfResets,
+    /// Training tokens consumed (summed micro-batch token counts — a
+    /// pure function of the data plane's batch geometry, identical at
+    /// any worker count; the batch-warmup schedule is *checked against*
+    /// this total in tests but never reads it back).
+    TokensConsumed,
+    /// Sequences assigned to training micro-batches (0 when the driver
+    /// does not declare its per-micro sequence count).
+    SequencesAssigned,
     // ---- process plane (not persisted, not identity-gated) ----
     /// Pool grabs that minted a fresh buffer (execution-strategy
     /// dependent: threaded pre-draw vs logical interleaving).
@@ -92,9 +100,9 @@ pub enum Counter {
 }
 
 /// Counters in the deterministic plane (array prefix).
-pub const DET_COUNTERS: usize = 13;
+pub const DET_COUNTERS: usize = 15;
 /// Total registry width.
-pub const NUM_COUNTERS: usize = 20;
+pub const NUM_COUNTERS: usize = 22;
 
 impl Counter {
     /// Every counter, in array order.
@@ -112,6 +120,8 @@ impl Counter {
         Counter::PoolGrabs,
         Counter::Reprovisions,
         Counter::EfResets,
+        Counter::TokensConsumed,
+        Counter::SequencesAssigned,
         Counter::PoolMisses,
         Counter::SnapshotBytes,
         Counter::SnapshotFiles,
@@ -137,6 +147,8 @@ impl Counter {
             Counter::PoolGrabs => "pool_grabs",
             Counter::Reprovisions => "reprovisions",
             Counter::EfResets => "ef_resets",
+            Counter::TokensConsumed => "tokens_consumed",
+            Counter::SequencesAssigned => "sequences_assigned",
             Counter::PoolMisses => "pool_misses",
             Counter::SnapshotBytes => "snapshot_bytes",
             Counter::SnapshotFiles => "snapshot_files",
@@ -171,10 +183,15 @@ pub enum Phase {
     Decode,
     StepKernel,
     CkptHandoff,
+    /// Time a batch fill spent waiting on the streaming-data prefetcher
+    /// (process plane: ring occupancy depends on IO timing). Recorded
+    /// post-run from the prefetcher's stall ring, keyed by micro-batch
+    /// index rather than step.
+    PrefetchStall,
 }
 
 /// Number of [`Phase`] variants.
-pub const NUM_PHASES: usize = 7;
+pub const NUM_PHASES: usize = 8;
 
 impl Phase {
     /// Every phase, in array order.
@@ -186,6 +203,7 @@ impl Phase {
         Phase::Decode,
         Phase::StepKernel,
         Phase::CkptHandoff,
+        Phase::PrefetchStall,
     ];
 
     /// Canonical snake_case key.
@@ -198,6 +216,7 @@ impl Phase {
             Phase::Decode => "decode",
             Phase::StepKernel => "step_kernel",
             Phase::CkptHandoff => "ckpt_handoff",
+            Phase::PrefetchStall => "prefetch_stall",
         }
     }
 }

@@ -253,3 +253,55 @@ fn variable_rho_re_pins_steady_state_each_epoch() {
     );
     assert_eq!(e.round(), 8);
 }
+
+/// Streaming data plane (ISSUE 8): with a shard corpus behind the
+/// prefetch ring, the consumer side of `Prefetcher::fill` — ring pop,
+/// buffer swap, recycle — is allocation-free once capacities are warm.
+/// The producer thread does the shard I/O, but it is a *different*
+/// thread, invisible to this thread-local pin by construction; what the
+/// pin proves is that the engine's hot loop stays zero-allocation when
+/// its batches come off disk instead of a PRNG.
+#[test]
+fn streaming_prefetch_consumer_is_allocation_free_after_warmup() {
+    use std::sync::Arc;
+
+    use frugal::data::stream::{pack_corpus, Prefetcher, StreamingCorpus};
+    use frugal::data::Corpus;
+
+    let mcfg = RefLmCfg::default();
+    let dir = std::env::temp_dir()
+        .join(format!("frugal_alloc_stream_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut rng = frugal::util::Prng::seed_from_u64(0xA110C);
+    let tokens: Vec<i32> =
+        (0..96 * mcfg.seq_len).map(|_| rng.range(0, mcfg.vocab) as i32).collect();
+    pack_corpus(&dir, mcfg.seq_len, mcfg.vocab, 32, &tokens).unwrap();
+    let corpus =
+        Arc::new(StreamingCorpus::open(&dir, mcfg.batch, SEED).unwrap()) as Arc<dyn Corpus>;
+    let pf = Prefetcher::new(Arc::clone(&corpus), 8, 0);
+    let stream_fn = |micro: u64, buf: &mut Vec<i32>| pf.fill(micro, buf);
+
+    let mut e = engine(2, CompressMode::Split);
+    for _ in 0..40 {
+        e.step(&stream_fn).unwrap();
+    }
+    ENABLED.with(|flag| flag.set(true));
+    ALLOCS.with(|c| c.set(0));
+    REALLOCS.with(|c| c.set(0));
+    for _ in 0..8 {
+        e.step(&stream_fn).unwrap();
+    }
+    ENABLED.with(|flag| flag.set(false));
+    let allocs = ALLOCS.with(|c| c.get());
+    let reallocs = REALLOCS.with(|c| c.get());
+    assert_eq!(
+        allocs, 0,
+        "streaming+prefetch: {allocs} heap allocations across 8 steady-state steps"
+    );
+    assert_eq!(
+        reallocs, 0,
+        "streaming+prefetch: {reallocs} reallocations across 8 steady-state steps"
+    );
+    drop(pf);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,310 @@
+//! Integration tests for the streaming data plane + batch-size warmup.
+//!
+//! The headline invariants, at the engine level:
+//!
+//! - a packed shard corpus feeds the engine through the same fill-style
+//!   contract as the synthetic corpus, and `workers 1 ≡ workers 2` stays
+//!   bitwise (loss trace and parameters) on streamed data, with and
+//!   without the prefetch pipeline in front;
+//! - a linear batch warmup is a pure function of the round counter:
+//!   kill/resume mid-warmup reproduces the continuous run bitwise at
+//!   workers 1/2/4, and the schedule composes with a variable-ρ mask
+//!   schedule (both re-provision at the same round boundary);
+//! - the canonical schedule string is a checkpoint fingerprint: a resume
+//!   under a different (or missing) batch schedule is rejected up front;
+//! - the data server serves bit-identical batches to a local open of the
+//!   same shard directory.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use frugal::ckpt::{self, MomentCodec, SaveOptions};
+use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
+use frugal::coordinator::LrSchedule;
+use frugal::data::stream::{
+    pack_corpus, read_shard_verified, DataIndex, DataServer, Prefetcher, RemoteCorpus,
+    StreamingCorpus,
+};
+use frugal::data::{Corpus, CorpusConfig, SyntheticCorpus, SyntheticStream};
+use frugal::engine::transport::{default_addr, TransportKind};
+use frugal::engine::{Engine, EngineCfg, GradSource, ParallelCfg, RefLm, RefLmCfg, Sources};
+use frugal::optim::adamw::AdamCfg;
+use frugal::optim::frugal::BlockPolicy;
+use frugal::schedule::{BatchPlan, BatchSchedule, RhoSchedule};
+use frugal::telemetry::Counter;
+use frugal::util::Prng;
+
+const SEED: u64 = 42;
+/// RefLm default geometry: 4 seqs × 16 tokens per micro-batch.
+const TOKENS_PER_MICRO: u64 = 64;
+const UPDATE_FREQ: u64 = 4;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("frugal_dstream_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Pack a small deterministic corpus matching the RefLm geometry.
+fn packed_dir(tag: &str, n_seqs: usize) -> PathBuf {
+    let cfg = RefLmCfg::default();
+    let dir = tmpdir(tag);
+    let mut rng = Prng::seed_from_u64(0xC0FFEE);
+    let tokens: Vec<i32> =
+        (0..n_seqs * cfg.seq_len).map(|_| rng.range(0, cfg.vocab) as i32).collect();
+    pack_corpus(&dir, cfg.seq_len, cfg.vocab, 20, &tokens).unwrap();
+    dir
+}
+
+fn engine(workers: usize, grad_accum: usize, plan: Option<BatchPlan>) -> Engine {
+    let m = RefLm::new(RefLmCfg::default());
+    let layout = m.layout().clone();
+    let sources = Sources::Threaded(
+        (0..workers).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
+    );
+    // A ρ-schedule that actually moves across the epochs these runs
+    // span, so warmup boundaries and mask re-selections interleave.
+    let mask_builder = MaskBuilder::with_schedule(
+        layout,
+        RhoSchedule::Linear { start: 1.0, end: 0.25, epochs: 3 },
+        SubspacePolicy::Blockwise(BlockPolicy::Random),
+        SEED,
+    );
+    let cfg = EngineCfg {
+        parallel: ParallelCfg { workers, grad_accum, ..Default::default() },
+        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
+        peak_lr: 1e-3,
+        lr_free_mult: 1.0,
+        update_freq: UPDATE_FREQ,
+        adam: AdamCfg::default(),
+        clip: None,
+    };
+    let mut b = Engine::builder()
+        .mask_builder(mask_builder)
+        .cfg(cfg)
+        .sources(sources)
+        .init_flat(m.init_flat(SEED))
+        .seqs_per_micro(RefLmCfg::default().batch as u64);
+    if let Some(plan) = plan {
+        b = b.batch_plan(plan);
+    }
+    b.build().unwrap()
+}
+
+/// `linear:1:4:768` at 64 tokens/micro and T=4: rounds run grad_accum
+/// 1, 2, 4, 4, ... — the warmup spans two round boundaries (and two
+/// ρ-epoch re-selections of the schedule above).
+fn warmup_plan() -> BatchPlan {
+    BatchPlan::new(
+        BatchSchedule::Linear { start: 1, end: 4, warmup_tokens: 768 },
+        TOKENS_PER_MICRO,
+        UPDATE_FREQ,
+    )
+}
+
+fn run<F>(engine: &mut Engine, steps: u64, batch_fn: &F) -> Vec<u32>
+where
+    F: Fn(u64, &mut Vec<i32>) + Sync,
+{
+    (0..steps).map(|_| engine.step(batch_fn).unwrap().to_bits()).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// `frugal data pack`'s library path round-trips: the written index is
+/// what `DataIndex::read` returns, every shard re-verifies against its
+/// pinned CRC, and an opened corpus reports the packed geometry.
+#[test]
+fn pack_read_verify_roundtrip() {
+    let dir = packed_dir("roundtrip", 48);
+    let index = DataIndex::read(&dir).unwrap();
+    assert_eq!(index.seq_len, 16);
+    assert_eq!(index.vocab, 64);
+    assert_eq!(index.total_seqs(), 48);
+    assert_eq!(index.shards.len(), 3, "48 seqs at 20/shard");
+    for s in &index.shards {
+        let (h, payload) = read_shard_verified(&dir.join(&s.file), s.crc32).unwrap();
+        assert_eq!(u64::from(h.n_seqs), s.seqs);
+        assert_eq!(payload.len() as u64, s.seqs * 16);
+    }
+    let sc = StreamingCorpus::open(&dir, 4, SEED).unwrap();
+    assert_eq!((sc.seq_len(), sc.batch(), sc.vocab(), sc.total_seqs()), (16, 4, 64, 48));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Workers 1 vs 2 on a streamed shard corpus: identical loss-trace bits
+/// and parameters, with the prefetcher in front on one side — the
+/// prefetch ring is a cache, never a reordering.
+#[test]
+fn streaming_workers_1_and_2_bitwise_with_and_without_prefetch() {
+    let dir = packed_dir("bitwise", 48);
+    let direct = Arc::new(StreamingCorpus::open(&dir, 4, SEED).unwrap()) as Arc<dyn Corpus>;
+    let behind = Arc::new(StreamingCorpus::open(&dir, 4, SEED).unwrap()) as Arc<dyn Corpus>;
+    let pf = Prefetcher::new(Arc::clone(&behind), 4, 0);
+
+    let direct_fn = |micro: u64, buf: &mut Vec<i32>| direct.fill_train_batch(micro, buf);
+    let prefetch_fn = |micro: u64, buf: &mut Vec<i32>| pf.fill(micro, buf);
+
+    let mut e1 = engine(1, 4, None);
+    let mut e2 = engine(2, 4, None);
+    let t1 = run(&mut e1, 10, &direct_fn);
+    let t2 = run(&mut e2, 10, &prefetch_fn);
+    assert_eq!(t1, t2, "loss traces diverged across workers / prefetch");
+    assert_eq!(bits(&e1.flat), bits(&e2.flat), "parameters diverged");
+    assert_eq!(
+        e1.telemetry().get(Counter::TokensConsumed),
+        e2.telemetry().get(Counter::TokensConsumed),
+        "token accounting must be worker-count independent"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The warmup plan is consulted at round boundaries: 12 steps at T=4
+/// run rounds with grad_accum 1, 2, 4 — pinned through the
+/// deterministic token/sequence counters.
+#[test]
+fn warmup_token_accounting_follows_the_plan() {
+    let plan = warmup_plan();
+    assert_eq!(
+        (1..=3).map(|r| plan.accum_for_round(r)).collect::<Vec<_>>(),
+        vec![1, 2, 4],
+        "the test geometry must cross the warmup mid-schedule"
+    );
+    let corpus = SyntheticStream::new(SyntheticCorpus::new(CorpusConfig::default_for_vocab(64)), 4, 16);
+    let batch_fn = |micro: u64, buf: &mut Vec<i32>| corpus.fill_train_batch(micro, buf);
+    let mut e = engine(1, 4, Some(plan));
+    run(&mut e, 12, &batch_fn);
+    // 4 steps × (1 + 2 + 4) micros × 64 tokens.
+    assert_eq!(e.telemetry().get(Counter::TokensConsumed), 4 * 7 * TOKENS_PER_MICRO);
+    assert_eq!(e.telemetry().get(Counter::SequencesAssigned), 4 * 7 * 4);
+}
+
+/// Kill/resume mid-warmup at workers 1/2/4 reproduces the continuous
+/// workers=1 run bitwise — the active batch is recomputed from the
+/// restored round, never carried as mutable state.
+#[test]
+fn resume_mid_warmup_is_bitwise_at_any_worker_count() {
+    let dir = packed_dir("resume", 64);
+    let corpus = Arc::new(StreamingCorpus::open(&dir, 4, SEED).unwrap()) as Arc<dyn Corpus>;
+    let batch_fn = |micro: u64, buf: &mut Vec<i32>| corpus.fill_train_batch(micro, buf);
+
+    let mut continuous = engine(1, 4, Some(warmup_plan()));
+    let want_trace = run(&mut continuous, 12, &batch_fn);
+    let want_flat = bits(&continuous.flat);
+
+    // Save at step 8 — the round-2→3 barrier, still inside the warmup
+    // (round 3 is the first at the peak batch).
+    let ck = tmpdir("resume_ck");
+    for resume_workers in [1usize, 2, 4] {
+        let mut first = engine(1, 4, Some(warmup_plan()));
+        let mut trace = run(&mut first, 8, &batch_fn);
+        ckpt::save(&ck, &first.capture_state().unwrap(), SaveOptions::new(MomentCodec::Raw, 64))
+            .unwrap();
+        drop(first); // the "kill"
+        let mut resumed = engine(resume_workers, 4, Some(warmup_plan()));
+        resumed.restore_state(ckpt::load(&ck).unwrap()).unwrap();
+        trace.extend(run(&mut resumed, 4, &batch_fn));
+        assert_eq!(trace, want_trace, "trace diverged at resume workers={resume_workers}");
+        assert_eq!(
+            bits(&resumed.flat),
+            want_flat,
+            "parameters diverged at resume workers={resume_workers}"
+        );
+        std::fs::remove_dir_all(&ck).ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The schedule string in the manifest is a fingerprint: resuming under
+/// a different schedule — or dropping/adding one — is rejected.
+#[test]
+fn restore_rejects_batch_schedule_mismatch() {
+    let corpus = SyntheticStream::new(SyntheticCorpus::new(CorpusConfig::default_for_vocab(64)), 4, 16);
+    let batch_fn = |micro: u64, buf: &mut Vec<i32>| corpus.fill_train_batch(micro, buf);
+    let mut scheduled = engine(1, 4, Some(warmup_plan()));
+    run(&mut scheduled, 4, &batch_fn);
+    let st_sched = scheduled.capture_state().unwrap();
+
+    let mut plain = engine(1, 4, None);
+    run(&mut plain, 4, &batch_fn);
+    let st_plain = plain.capture_state().unwrap();
+
+    // Scheduled snapshot into a schedule-less engine (and vice versa).
+    let err = engine(1, 4, None).restore_state(st_sched.clone()).unwrap_err();
+    assert!(err.to_string().contains("batch schedule"), "got: {err:#}");
+    let err = engine(1, 4, Some(warmup_plan())).restore_state(st_plain).unwrap_err();
+    assert!(err.to_string().contains("batch schedule"), "got: {err:#}");
+    // A *different* warmup is just as wrong as a missing one.
+    let other = BatchPlan::new(
+        BatchSchedule::Linear { start: 2, end: 4, warmup_tokens: 768 },
+        TOKENS_PER_MICRO,
+        UPDATE_FREQ,
+    );
+    let err = engine(1, 4, Some(other)).restore_state(st_sched).unwrap_err();
+    assert!(err.to_string().contains("batch schedule"), "got: {err:#}");
+}
+
+/// The fingerprint survives the on-disk manifest: save → load carries
+/// the canonical schedule string byte-for-byte.
+#[test]
+fn manifest_carries_the_schedule_fingerprint() {
+    let corpus = SyntheticStream::new(SyntheticCorpus::new(CorpusConfig::default_for_vocab(64)), 4, 16);
+    let batch_fn = |micro: u64, buf: &mut Vec<i32>| corpus.fill_train_batch(micro, buf);
+    let mut e = engine(1, 4, Some(warmup_plan()));
+    run(&mut e, 4, &batch_fn);
+    let dir = tmpdir("manifest");
+    ckpt::save(&dir, &e.capture_state().unwrap(), SaveOptions::new(MomentCodec::Raw, 64)).unwrap();
+    let man = ckpt::CkptManifest::read(&dir).unwrap();
+    assert_eq!(man.batch_schedule, "linear:1:4:768");
+    assert_eq!(ckpt::load(&dir).unwrap().batch_schedule, "linear:1:4:768");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Data server smoke: a uds server over a packed directory returns
+/// batches bit-identical to a local open, train and val.
+#[test]
+fn dataserve_uds_matches_local_open() {
+    let dir = packed_dir("serve", 48);
+    let local = StreamingCorpus::open(&dir, 4, SEED).unwrap();
+    let served = Arc::new(StreamingCorpus::open(&dir, 4, SEED).unwrap()) as Arc<dyn Corpus>;
+    let addr = default_addr(TransportKind::Uds);
+    let server = DataServer::start(TransportKind::Uds, &addr, served).unwrap();
+    let remote = RemoteCorpus::connect(
+        TransportKind::Uds,
+        server.addr(),
+        4,
+        16,
+        std::time::Duration::from_secs(5),
+    )
+    .unwrap();
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    for micro in [0u64, 3, 17, 2] {
+        local.fill_train_batch(micro, &mut a);
+        remote.fill_train_batch(micro, &mut b);
+        assert_eq!(a, b, "train micro {micro} diverged over the wire");
+    }
+    for idx in [0u64, 5] {
+        assert_eq!(local.val_batch(idx), remote.val_batch(idx), "val {idx} diverged");
+    }
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The synthetic corpus behind the `Corpus` trait is bit-identical to
+/// its inherent fill path — the trait migration changed no bits.
+#[test]
+fn synthetic_trait_path_is_bit_identical_to_inherent_fill() {
+    let inherent = SyntheticCorpus::new(CorpusConfig::default_for_vocab(64));
+    let stream = SyntheticStream::new(SyntheticCorpus::new(CorpusConfig::default_for_vocab(64)), 4, 16);
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    for micro in [0u64, 1, 7, 100, 12345] {
+        inherent.fill_train_batch(4, 16, micro, &mut a);
+        stream.fill_train_batch(micro, &mut b);
+        assert_eq!(a, b, "micro {micro}");
+    }
+    for idx in [0u64, 9] {
+        assert_eq!(inherent.val_batch(4, 16, idx).tokens, stream.val_batch(idx), "val {idx}");
+    }
+}

@@ -68,8 +68,9 @@ fn grad_artifact_padding_is_zero() {
     let layout = entry.layout();
     let opt = cfg.build_optimizer(&layout).unwrap();
     let tr = GradTrainer::new(&rt, &man, "test", opt, cfg.schedule.clone(), 1e-3, 0).unwrap();
-    let batch = corpus.train_batch(entry.batch, entry.seq_len, 0);
-    let (_, grads) = tr.loss_and_grad(&batch.tokens).unwrap();
+    let mut tokens = Vec::new();
+    corpus.fill_train_batch(entry.batch, entry.seq_len, 0, &mut tokens);
+    let (_, grads) = tr.loss_and_grad(&tokens).unwrap();
     assert_eq!(grads.len(), entry.padded_size);
     for lane in entry.flat_size..entry.padded_size {
         assert_eq!(grads[lane], 0.0, "padding grad at {lane}");
@@ -87,7 +88,8 @@ fn fused_step_matches_grad_plus_kernel_composition() {
     let entry = man.model("test").unwrap().clone();
     let n = entry.padded_size;
     let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
-    let batch = corpus.train_batch(entry.batch, entry.seq_len, 3);
+    let mut tokens = Vec::new();
+    corpus.fill_train_batch(entry.batch, entry.seq_len, 3, &mut tokens);
 
     let flat = init_flat(&entry, 5);
     let m = vec![0.02f32; n];
@@ -104,7 +106,7 @@ fn fused_step_matches_grad_plus_kernel_composition() {
             lit_f32(&m),
             lit_f32(&v),
             lit_f32(&mask),
-            lit_i32_2d(&batch.tokens, entry.batch, entry.seq_len).unwrap(),
+            lit_i32_2d(&tokens, entry.batch, entry.seq_len).unwrap(),
             lit_scalar1(lr_full),
             lit_scalar1(lr_free),
             lit_scalar1(step_t),
@@ -119,7 +121,7 @@ fn fused_step_matches_grad_plus_kernel_composition() {
     let grad_exe = rt.load(&man.artifact_path("test", "grad").unwrap()).unwrap();
     let gout = grad_exe
         .run(&[lit_f32(&flat),
-               lit_i32_2d(&batch.tokens, entry.batch, entry.seq_len).unwrap()])
+               lit_i32_2d(&tokens, entry.batch, entry.seq_len).unwrap()])
         .unwrap();
     let loss_b = to_scalar_f32(&gout[0]).unwrap();
     let grads = to_vec_f32(&gout[1]).unwrap();
@@ -193,9 +195,10 @@ fn fused_training_reduces_loss() {
         .unwrap();
     let mut first = None;
     let mut last = 0.0;
+    let mut tokens = Vec::new();
     for step in 0..40 {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-        last = tr.step(&batch.tokens).unwrap();
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+        last = tr.step(&tokens).unwrap();
         first.get_or_insert(last);
     }
     assert!(last < first.unwrap(), "loss did not decrease: {first:?} -> {last}");
@@ -215,9 +218,10 @@ fn grad_training_reduces_loss() {
                                   LrSchedule::ConstantWarmup { warmup: 5 }, 2e-3, 0).unwrap();
     let mut first = None;
     let mut last = 0.0;
+    let mut tokens = Vec::new();
     for step in 0..40 {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-        last = tr.step(&batch.tokens).unwrap();
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+        last = tr.step(&tokens).unwrap();
         first.get_or_insert(last);
     }
     assert!(last < first.unwrap(), "loss did not decrease: {first:?} -> {last}");
@@ -236,11 +240,12 @@ fn predict_artifact_shape_and_causality() {
     }
     let flat = init_flat(&entry, 1);
     let corpus = SyntheticCorpus::new(CorpusConfig::default_for_vocab(entry.vocab));
-    let batch = corpus.train_batch(entry.batch, entry.seq_len, 0);
-    let logits1 = session.predict(&flat, &batch.tokens).unwrap();
+    let mut tokens = Vec::new();
+    corpus.fill_train_batch(entry.batch, entry.seq_len, 0, &mut tokens);
+    let logits1 = session.predict(&flat, &tokens).unwrap();
     assert_eq!(logits1.len(), entry.batch * entry.vocab);
     // Change the last token of every row: predictions must not change.
-    let mut tokens2 = batch.tokens.clone();
+    let mut tokens2 = tokens.clone();
     for b in 0..entry.batch {
         let idx = b * entry.seq_len + entry.seq_len - 1;
         tokens2[idx] = (tokens2[idx] + 1) % entry.vocab as i32;
@@ -264,9 +269,10 @@ fn checkpoint_roundtrip_restores_training() {
     let opt = cfg.build_optimizer(&layout).unwrap();
     let mut tr = GradTrainer::new(&rt, &man, "test", opt,
                                   LrSchedule::ConstantWarmup { warmup: 0 }, 1e-3, 0).unwrap();
+    let mut tokens = Vec::new();
     for step in 0..5 {
-        let batch = corpus.train_batch(entry.batch, entry.seq_len, step);
-        tr.step(&batch.tokens).unwrap();
+        corpus.fill_train_batch(entry.batch, entry.seq_len, step, &mut tokens);
+        tr.step(&tokens).unwrap();
     }
     let ck = Checkpoint { step: 5, sections: vec![("params".into(), tr.flat.clone())] };
     let path = std::env::temp_dir().join("frugal_integration_ck.bin");

@@ -441,10 +441,11 @@ fn prop_corpus_stream() {
         cfg.seed = case;
         let c1 = SyntheticCorpus::new(cfg.clone());
         let c2 = SyntheticCorpus::new(cfg);
-        let b1 = c1.train_batch(2, 64, case);
-        let b2 = c2.train_batch(2, 64, case);
-        assert_eq!(b1.tokens, b2.tokens, "case {case}");
-        assert!(b1.tokens.iter().all(|&t| (t as usize) < vocab), "case {case}");
+        let (mut b1, mut b2) = (Vec::new(), Vec::new());
+        c1.fill_train_batch(2, 64, case, &mut b1);
+        c2.fill_train_batch(2, 64, case, &mut b2);
+        assert_eq!(b1, b2, "case {case}");
+        assert!(b1.iter().all(|&t| (t as usize) < vocab), "case {case}");
     }
 }
 
