@@ -8,7 +8,7 @@
 
 use crate::ckpt::MomentCodec;
 use crate::coordinator::LrSchedule;
-use crate::engine::{CompressMode, ParallelCfg, TransportKind};
+use crate::engine::{CompressMode, FaultCfg, ParallelCfg, TransportKind};
 use crate::optim::adamw::AdamCfg;
 use crate::optim::frugal::{BlockPolicy, Frugal, FrugalCfg, ProjectionKind, StateFreeKind,
                            StateFullKind};
@@ -211,8 +211,12 @@ impl TrainConfig {
             "threaded", "pipeline",
         ];
         const COMPRESS_KEYS: [&str; 2] = ["mode", "block"];
-        const TRANSPORT_KEYS: [&str; 6] =
-            ["kind", "addr", "warmup_ms", "max_round_ms", "heartbeat_ms", "spawn"];
+        const TRANSPORT_KEYS: [&str; 7] = [
+            "kind", "addr", "warmup_ms", "max_round_ms", "heartbeat_ms", "spawn",
+            "connect_timeout_ms",
+        ];
+        const FAULT_KEYS: [&str; 4] =
+            ["max_round_retries", "min_workers", "respawn", "respawn_backoff_ms"];
         const CHECKPOINT_KEYS: [&str; 6] =
             ["dir", "save_every", "codec", "block", "background", "keep_last"];
         const SCHEDULE_KEYS: [&str; 7] = [
@@ -225,12 +229,13 @@ impl TrainConfig {
         for section in &kv.sections {
             anyhow::ensure!(
                 section == "parallel" || section == "parallel.compress"
-                    || section == "parallel.transport" || section == "checkpoint"
-                    || section == "schedule" || section == "schedule.batch"
-                    || section == "telemetry" || section == "data",
+                    || section == "parallel.transport" || section == "parallel.fault"
+                    || section == "checkpoint" || section == "schedule"
+                    || section == "schedule.batch" || section == "telemetry"
+                    || section == "data",
                 "unknown config section '[{section}]' (known sections: [parallel], \
-                 [parallel.compress], [parallel.transport], [checkpoint], [schedule], \
-                 [schedule.batch], [telemetry], [data])"
+                 [parallel.compress], [parallel.transport], [parallel.fault], \
+                 [checkpoint], [schedule], [schedule.batch], [telemetry], [data])"
             );
         }
         for key in kv.entries.keys() {
@@ -258,6 +263,12 @@ impl TrainConfig {
                     TRANSPORT_KEYS.contains(&rest),
                     "unknown key '{rest}' in [parallel.transport] (known keys: {})",
                     TRANSPORT_KEYS.join(", ")
+                );
+            } else if let Some(rest) = key.strip_prefix("parallel.fault.") {
+                anyhow::ensure!(
+                    FAULT_KEYS.contains(&rest),
+                    "unknown key '{rest}' in [parallel.fault] (known keys: {})",
+                    FAULT_KEYS.join(", ")
                 );
             } else if let Some(rest) = key.strip_prefix("checkpoint.") {
                 anyhow::ensure!(
@@ -454,7 +465,7 @@ impl TrainConfig {
             cfg.batch_schedule = Some(sched);
         }
         if kv.has_section("parallel") || kv.has_section("parallel.compress")
-            || kv.has_section("parallel.transport")
+            || kv.has_section("parallel.transport") || kv.has_section("parallel.fault")
         {
             let mut p = ParallelCfg::default();
             if let Some(v) = kv.get_u64("parallel.workers")? {
@@ -501,6 +512,21 @@ impl TrainConfig {
             }
             if let Some(v) = kv.get_bool("parallel.transport.spawn")? {
                 p.transport.spawn = v;
+            }
+            if let Some(v) = kv.get_u64("parallel.transport.connect_timeout_ms")? {
+                p.transport.connect_timeout_ms = v;
+            }
+            if let Some(v) = kv.get_u64("parallel.fault.max_round_retries")? {
+                p.fault.max_round_retries = v as u32;
+            }
+            if let Some(v) = kv.get_u64("parallel.fault.min_workers")? {
+                p.fault.min_workers = v.max(1) as usize;
+            }
+            if let Some(v) = kv.get_bool("parallel.fault.respawn")? {
+                p.fault.respawn = v;
+            }
+            if let Some(v) = kv.get_u64("parallel.fault.respawn_backoff_ms")? {
+                p.fault.respawn_backoff_ms = v;
             }
             cfg.parallel = Some(p);
         }
@@ -667,6 +693,15 @@ impl TrainConfig {
                 let _ = writeln!(out, "max_round_ms = {}", p.transport.max_round_ms);
                 let _ = writeln!(out, "heartbeat_ms = {}", p.transport.heartbeat_ms);
                 let _ = writeln!(out, "spawn = {}", p.transport.spawn);
+                let _ =
+                    writeln!(out, "connect_timeout_ms = {}", p.transport.connect_timeout_ms);
+            }
+            if p.fault != FaultCfg::default() {
+                let _ = writeln!(out, "\n[parallel.fault]");
+                let _ = writeln!(out, "max_round_retries = {}", p.fault.max_round_retries);
+                let _ = writeln!(out, "min_workers = {}", p.fault.min_workers);
+                let _ = writeln!(out, "respawn = {}", p.fault.respawn);
+                let _ = writeln!(out, "respawn_backoff_ms = {}", p.fault.respawn_backoff_ms);
             }
         }
         out
@@ -865,11 +900,44 @@ mod tests {
                 max_round_ms: 30_000,
                 heartbeat_ms: 100,
                 spawn: false,
+                connect_timeout_ms: 7_500,
+            },
+            fault: FaultCfg {
+                max_round_retries: 2,
+                min_workers: 2,
+                respawn: true,
+                respawn_backoff_ms: 250,
             },
         });
         let text = cfg.to_toml();
         let back = TrainConfig::from_toml(&text).unwrap();
         assert_eq!(back.parallel, cfg.parallel);
+    }
+
+    #[test]
+    fn fault_section_parses_defaults_and_rejects_typos() {
+        // Partial section: unset keys keep FaultCfg defaults.
+        let cfg = TrainConfig::from_toml(
+            "[parallel]\nworkers = 2\n\n[parallel.fault]\nmax_round_retries = 1\n",
+        )
+        .unwrap();
+        let p = cfg.parallel.unwrap();
+        assert_eq!(p.fault.max_round_retries, 1);
+        assert_eq!(p.fault.min_workers, FaultCfg::default().min_workers);
+        assert_eq!(p.fault.respawn, FaultCfg::default().respawn);
+        // A [parallel.fault] section alone is enough to opt into parallel.
+        let cfg =
+            TrainConfig::from_toml("[parallel.fault]\nrespawn = true\n").unwrap();
+        assert!(cfg.parallel.unwrap().fault.respawn);
+        // min_workers = 0 is clamped to 1 (an empty quorum is meaningless).
+        let cfg =
+            TrainConfig::from_toml("[parallel.fault]\nmin_workers = 0\n").unwrap();
+        assert_eq!(cfg.parallel.unwrap().fault.min_workers, 1);
+        // Typoed keys are rejected, not ignored.
+        let err = TrainConfig::from_toml("[parallel.fault]\nretries = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[parallel.fault]"), "unexpected error: {err}");
     }
 
     #[test]

@@ -61,6 +61,24 @@ impl Metrics {
         self.ema
     }
 
+    /// Opaque rewind point for mid-round fault recovery: everything a
+    /// later [`Metrics::rewind`] needs to make the record stream look
+    /// like the steps after this mark never ran. The throughput clock
+    /// is NOT part of the mark — wall time is not replayable (and
+    /// `tokens_per_s` is explicitly non-deterministic).
+    pub fn mark(&self) -> MetricsMark {
+        MetricsMark { len: self.records.len(), ema: self.ema, tokens_seen: self.tokens_seen }
+    }
+
+    /// Drop every record appended since `mark` and restore the EMA and
+    /// token-count accumulators, so a deterministic replay re-records
+    /// the same steps with bit-identical loss/lr/EMA values.
+    pub fn rewind(&mut self, mark: MetricsMark) {
+        self.records.truncate(mark.len);
+        self.ema = mark.ema;
+        self.tokens_seen = mark.tokens_seen;
+    }
+
     pub fn last(&self) -> Option<&StepRecord> {
         self.records.last()
     }
@@ -98,6 +116,14 @@ impl Default for Metrics {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// A [`Metrics::mark`] rewind point (see there).
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsMark {
+    len: usize,
+    ema: Option<f64>,
+    tokens_seen: u64,
 }
 
 /// Perplexity from mean cross-entropy (nats).
@@ -143,6 +169,29 @@ mod tests {
         }
         assert!((m.tail_mean_loss(2).unwrap() - 8.5).abs() < 1e-9);
         assert!((m.tail_mean_loss(100).unwrap() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mark_and_rewind_replay_bit_identically() {
+        let mut m = Metrics::new();
+        for step in 1..=4 {
+            m.record(step, 3.0 / step as f32, 1e-3, 64);
+        }
+        let mark = m.mark();
+        let replayed = [(5u64, 0.53f32), (6, 0.41)];
+        for &(s, l) in &replayed {
+            m.record(s, l, 1e-3, 64);
+        }
+        let ema_first = m.ema_loss().unwrap();
+        m.rewind(mark);
+        assert_eq!(m.records().len(), 4, "rewind must drop the replayed records");
+        for &(s, l) in &replayed {
+            m.record(s, l, 1e-3, 64);
+        }
+        assert_eq!(m.records().len(), 6);
+        // The EMA fold re-runs over identical inputs → identical bits.
+        assert_eq!(m.ema_loss().unwrap().to_bits(), ema_first.to_bits());
+        assert_eq!(m.last().unwrap().loss, 0.41);
     }
 
     #[test]

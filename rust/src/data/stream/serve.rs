@@ -105,6 +105,13 @@ impl Drop for DataServer {
 }
 
 /// One client connection: answer data requests until the peer hangs up.
+///
+/// Fault isolation: every connection runs on its own thread, and every
+/// exit path here returns from that thread only — a client dying
+/// mid-request (or shipping a corrupt frame) drops *its* connection and
+/// nothing else. The accept loop keeps serving; the dead client's
+/// replacement reconnects and gets the same bits (the fill contract is
+/// a pure function of the index).
 fn serve_connection(mut io: FrameIo, corpus: &dyn Corpus) {
     let mut tokens: Vec<i32> = Vec::new();
     loop {
@@ -116,7 +123,8 @@ fn serve_connection(mut io: FrameIo, corpus: &dyn Corpus) {
                     corpus.fill_train_batch(micro, &mut tokens);
                 }
                 let frame = Frame::DataBatch { micro, tokens: std::mem::take(&mut tokens) };
-                if io.send(&frame).is_err() {
+                if let Err(e) = io.send(&frame) {
+                    eprintln!("dataserve: client hung up mid-reply (micro {micro}): {e:#}");
                     return;
                 }
                 // Reclaim the buffer for the next request.
@@ -124,9 +132,12 @@ fn serve_connection(mut io: FrameIo, corpus: &dyn Corpus) {
                     tokens = t;
                 }
             }
-            Ok(Some(Frame::Shutdown)) | Ok(None) => return,
+            Ok(Some(Frame::Shutdown)) | Ok(None) => return, // orderly goodbye
             Ok(Some(_)) => continue, // stray frames: ignore
-            Err(_) => return,
+            Err(e) => {
+                eprintln!("dataserve: dropping client after a bad frame: {e:#}");
+                return;
+            }
         }
     }
 }
@@ -245,6 +256,87 @@ mod tests {
             assert_eq!(got, want, "micro {micro}");
         }
         assert_eq!(remote.val_batch(3), local.val_batch(3));
+    }
+
+    #[test]
+    fn killed_client_does_not_kill_the_server() {
+        let addr = uds_addr("killed");
+        let server = DataServer::start(TransportKind::Uds, &addr, Arc::new(stream())).unwrap();
+        // Client 1 ships a corrupt frame (1-byte body, zeroed CRC
+        // trailer) and dies. The server must log-and-drop only that
+        // connection.
+        {
+            use std::io::Write;
+            let mut raw = worker_connect_retry(
+                TransportKind::Uds,
+                server.addr(),
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            raw.write_all(&[1, 0, 0, 0, 0xEE, 0, 0, 0, 0]).unwrap();
+        }
+        // Client 2 sends a real request and hangs up without reading
+        // the reply (dies mid-DataRequest round-trip).
+        {
+            let stream = worker_connect_retry(
+                TransportKind::Uds,
+                server.addr(),
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            let mut io = FrameIo::new(stream);
+            io.send(&Frame::DataRequest { micro: 5 }).unwrap();
+        }
+        // A fresh client still gets served, bit-identically to a local
+        // open — the dead clients took nothing down with them.
+        let remote = RemoteCorpus::connect(
+            TransportKind::Uds,
+            server.addr(),
+            2,
+            16,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let local = stream();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        for micro in [0u64, 9] {
+            local.fill_train_batch(micro, &mut want);
+            remote.fill_train_batch(micro, &mut got);
+            assert_eq!(got, want, "micro {micro}");
+        }
+        assert_eq!(remote.val_batch(1), local.val_batch(1));
+    }
+
+    #[test]
+    fn tcp_soak_survives_disconnect_and_reconnect() {
+        let server =
+            DataServer::start(TransportKind::Tcp, "127.0.0.1:0", Arc::new(stream())).unwrap();
+        let addr = server.addr().to_string();
+        let local = stream();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        let mut fetched = 0u64;
+        // Three client lives over one server: each hangs up abruptly
+        // (drop, no Shutdown) and its successor resumes the index
+        // stream. Every batch must match a local open bit for bit —
+        // reconnection is invisible to the training loop.
+        for life in 0..3u32 {
+            let remote = RemoteCorpus::connect(
+                TransportKind::Tcp,
+                &addr,
+                2,
+                16,
+                Duration::from_secs(5),
+            )
+            .unwrap();
+            for _ in 0..20 {
+                let micro = fetched;
+                fetched += 1;
+                local.fill_train_batch(micro, &mut want);
+                remote.fill_train_batch(micro, &mut got);
+                assert_eq!(got, want, "micro {micro} (client life {life})");
+            }
+        }
+        assert_eq!(fetched, 60);
     }
 
     #[test]

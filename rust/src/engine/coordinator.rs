@@ -41,11 +41,15 @@ use std::time::{Duration, Instant};
 
 use super::compress::{CompressCfg, CompressMode, CompressPlan, EncodedGrad};
 use super::transport::{
-    default_addr, worker_connect_retry, Frame, FrameIo, Listener, Membership, RecvEvent,
-    Transport, TransportCfg, TransportKind, WorkerLost,
+    default_addr, worker_connect_retry, FaultCfg, Frame, FrameIo, Listener, Membership,
+    RecvEvent, Transport, TransportCfg, TransportKind, WorkerLost,
 };
 use super::GradSource;
 use crate::Result;
+
+/// The stable marker [`FrameIo::recv`] puts in a CRC-rejection error;
+/// the coordinator keys its `frames_rejected` tally on it.
+const CRC_MARKER: &str = "frame crc mismatch";
 
 /// Everything a round boundary broadcasts to the fleet: the codec plan
 /// over the fresh lane partition, plus (after a mid-round restore) the
@@ -76,6 +80,20 @@ struct Member {
     leaving: bool,
 }
 
+/// One coordinator-spawned worker process, remembered by its spawn
+/// slot so a crashed child can be relaunched with the same arguments.
+struct ChildProc {
+    slot: usize,
+    child: Child,
+}
+
+/// A scheduled relaunch of spawn slot `slot`, due at `due` under the
+/// capped-exponential [`FaultCfg::respawn_delay`] schedule.
+struct PendingRespawn {
+    slot: usize,
+    due: Instant,
+}
+
 /// The collector-side socket endpoint: owns the listener, one reader
 /// thread per admitted worker, the rank-ordered membership list, and
 /// (when spawning) the `frugal worker` child processes.
@@ -100,10 +118,25 @@ pub struct Coordinator {
     /// distinguishes this from the deterministic `WireBytes` plane.
     tally_frames: u64,
     tally_bytes: u64,
-    children: Vec<Child>,
+    children: Vec<ChildProc>,
     accept_stop: Arc<AtomicBool>,
     uds_cleanup: Option<String>,
     launched: bool,
+    /// The `[parallel.fault]` policy (recovery off by default).
+    fault: FaultCfg,
+    /// Recovery generation: bumps on every mid-round retry. Stamped
+    /// into `RoundBegin`, echoed by workers on their micros; a micro
+    /// carrying a stale generation is an orphan of an aborted attempt
+    /// and is discarded before it can reach the reduce tree.
+    attempt: u32,
+    /// Fault tallies since the last [`Coordinator::take_fault_counters`]
+    /// (evicted members, respawned children, CRC-rejected frames).
+    tally_evicted: u64,
+    tally_respawned: u64,
+    tally_rejected: u64,
+    /// Consecutive-respawn count per spawn slot (drives the backoff).
+    respawn_attempts: Vec<u32>,
+    pending_respawns: Vec<PendingRespawn>,
 }
 
 impl Coordinator {
@@ -144,7 +177,39 @@ impl Coordinator {
             accept_stop: Arc::new(AtomicBool::new(false)),
             uds_cleanup: None,
             launched: false,
+            fault: FaultCfg::default(),
+            attempt: 0,
+            tally_evicted: 0,
+            tally_respawned: 0,
+            tally_rejected: 0,
+            respawn_attempts: vec![0; workers],
+            pending_respawns: Vec::new(),
         })
+    }
+
+    /// Install the `[parallel.fault]` policy (the builder does, before
+    /// `connect`). Without this the coordinator keeps the historical
+    /// fail-fast behavior.
+    pub fn set_fault(&mut self, fault: FaultCfg) {
+        self.fault = fault;
+    }
+
+    pub fn fault(&self) -> FaultCfg {
+        self.fault
+    }
+
+    /// The current recovery generation.
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Enter a mid-round retry: bump the recovery generation (so stale
+    /// in-flight micros from the aborted attempt are discarded) and
+    /// clear the announced round so the replay re-broadcasts
+    /// `RoundBegin` with the survivors' fresh rank/N view.
+    pub fn begin_retry(&mut self) {
+        self.attempt += 1;
+        self.announced_round = 0;
     }
 
     /// The address workers connect to (resolved after `connect`).
@@ -166,6 +231,16 @@ impl Coordinator {
         let t = (self.tally_frames, self.tally_bytes);
         self.tally_frames = 0;
         self.tally_bytes = 0;
+        t
+    }
+
+    /// Drain and reset the fault tallies:
+    /// `(workers_evicted, workers_respawned, frames_rejected)`.
+    pub fn take_fault_counters(&mut self) -> (u64, u64, u64) {
+        let t = (self.tally_evicted, self.tally_respawned, self.tally_rejected);
+        self.tally_evicted = 0;
+        self.tally_respawned = 0;
+        self.tally_rejected = 0;
         t
     }
 
@@ -249,6 +324,9 @@ impl Coordinator {
                 }
             }
             ReaderMsg::Err { conn, error } => {
+                if error.contains(CRC_MARKER) {
+                    self.tally_rejected += 1;
+                }
                 if let Some(rank) = self.rank_of(conn) {
                     eprintln!("transport: worker rank {rank} read error: {error}");
                     self.members[rank].alive = false;
@@ -257,19 +335,110 @@ impl Coordinator {
         }
     }
 
+    /// Supervision sweep: reap exited children (scheduling a relaunch
+    /// under the backoff schedule when `fault.respawn` is on) and spawn
+    /// any relaunch that has come due. Respawned workers connect like
+    /// any joiner and are admitted at the next round boundary.
+    fn supervise_children(&mut self) {
+        if !self.launched {
+            return;
+        }
+        let mut i = 0;
+        while i < self.children.len() {
+            match self.children[i].child.try_wait() {
+                Ok(Some(status)) => {
+                    let slot = self.children[i].slot;
+                    self.children.remove(i);
+                    if self.fault.respawn {
+                        let attempt = self.respawn_attempts[slot];
+                        self.respawn_attempts[slot] = attempt.saturating_add(1);
+                        let delay = self.fault.respawn_delay(attempt);
+                        eprintln!(
+                            "transport: worker slot {slot} exited ({status}); respawning in {delay:?}"
+                        );
+                        self.pending_respawns
+                            .push(PendingRespawn { slot, due: Instant::now() + delay });
+                    }
+                }
+                _ => i += 1,
+            }
+        }
+        let mut i = 0;
+        while i < self.pending_respawns.len() {
+            if Instant::now() < self.pending_respawns[i].due {
+                i += 1;
+                continue;
+            }
+            let slot = self.pending_respawns.remove(i).slot;
+            match self.spawn_child(slot) {
+                Ok(()) => self.tally_respawned += 1,
+                Err(e) => eprintln!("transport: respawn of worker slot {slot} failed: {e:#}"),
+            }
+        }
+    }
+
+    /// Spawn the `frugal worker` child for spawn slot `slot` with that
+    /// slot's extra arguments.
+    fn spawn_child(&mut self, slot: usize) -> Result<()> {
+        let exe = std::env::current_exe()
+            .map_err(|e| anyhow::anyhow!("locate frugal binary for workers: {e}"))?;
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker").arg("--connect").arg(&self.addr);
+        if self.kind == TransportKind::Tcp {
+            cmd.arg("--tcp");
+        }
+        for a in self.worker_args.get(slot).into_iter().flatten() {
+            cmd.arg(a);
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawn worker {slot} ({}): {e}", exe.display()))?;
+        self.children.push(ChildProc { slot, child });
+        Ok(())
+    }
+
     /// Round-boundary membership sync: process queued leaves/deaths,
-    /// admit pending joiners, compact ranks, and return the new worker
-    /// count N for `begin_round`'s elastic re-provision. Errors only
-    /// when the fleet is empty.
+    /// supervise spawned children (reap + respawn), admit pending
+    /// joiners, compact ranks, and return the new worker count N for
+    /// `begin_round`'s elastic re-provision. Errors only when the fleet
+    /// is empty.
     pub fn sync_membership(&mut self) -> Result<usize> {
         while let Ok(msg) = self.events_rx.try_recv() {
             self.note_event(msg);
         }
+        self.supervise_children();
         while let Ok(stream) = self.pending_rx.try_recv() {
             if let Err(e) = self.admit(stream) {
                 eprintln!("transport: rejecting joiner: {e:#}");
             }
         }
+        self.remove_departed();
+        anyhow::ensure!(
+            !self.members.is_empty(),
+            "all workers left or died — no membership to run the next round"
+        );
+        Ok(self.members.len())
+    }
+
+    /// Mid-round recovery compaction: process queued deaths, evict dead
+    /// members, and return the survivor count — **without** admitting
+    /// pending joiners. The replay must run at exactly the surviving
+    /// worker count (that is what makes the recovered trace ≡ a
+    /// continuous N−1 run); joiners and respawned workers stay queued
+    /// and are admitted at the next natural round boundary through
+    /// [`Coordinator::sync_membership`].
+    pub fn compact_survivors(&mut self) -> usize {
+        while let Ok(msg) = self.events_rx.try_recv() {
+            self.note_event(msg);
+        }
+        self.supervise_children();
+        self.remove_departed();
+        self.members.len()
+    }
+
+    /// Drop dead and orderly-leaving members, compacting ranks. Deaths
+    /// count as evictions; orderly leaves get a `Shutdown` goodbye.
+    fn remove_departed(&mut self) {
         let mut i = 0;
         while i < self.members.len() {
             if !self.members[i].alive || self.members[i].leaving {
@@ -279,17 +448,14 @@ impl Coordinator {
                     if let Ok(n) = m.writer.send(&Frame::Shutdown) {
                         self.tally(n);
                     }
+                } else {
+                    self.tally_evicted += 1;
                 }
                 m.writer.shutdown();
             } else {
                 i += 1;
             }
         }
-        anyhow::ensure!(
-            !self.members.is_empty(),
-            "all workers left or died — no membership to run the next round"
-        );
-        Ok(self.members.len())
     }
 
     /// Broadcast the round plan, telling each worker its rank, and arm
@@ -299,6 +465,7 @@ impl Coordinator {
         for rank in 0..self.members.len() {
             let frame = Frame::RoundBegin {
                 round: info.round,
+                attempt: self.attempt,
                 rank: rank as u32,
                 workers,
                 grad_accum: info.grad_accum,
@@ -381,21 +548,8 @@ impl Transport for Coordinator {
             }
         });
         if self.cfg.spawn {
-            let exe = std::env::current_exe()
-                .map_err(|e| anyhow::anyhow!("locate frugal binary for workers: {e}"))?;
             for w in 0..self.target_workers {
-                let mut cmd = Command::new(&exe);
-                cmd.arg("worker").arg("--connect").arg(&self.addr);
-                if self.kind == TransportKind::Tcp {
-                    cmd.arg("--tcp");
-                }
-                for a in self.worker_args.get(w).into_iter().flatten() {
-                    cmd.arg(a);
-                }
-                let child = cmd
-                    .spawn()
-                    .map_err(|e| anyhow::anyhow!("spawn worker {w} ({}): {e}", exe.display()))?;
-                self.children.push(child);
+                self.spawn_child(w)?;
             }
         }
         let deadline = Instant::now() + Duration::from_millis(self.cfg.warmup_ms.max(1));
@@ -453,14 +607,21 @@ impl Transport for Coordinator {
                     self.tally(bytes);
                     let Some(rank) = self.rank_of(conn) else { continue };
                     match frame {
-                        Frame::Micro { slot, n_tok, loss, grad, .. } => {
+                        Frame::Micro { attempt, slot, n_tok, loss, grad, .. } => {
+                            if attempt != self.attempt {
+                                // Orphan of an aborted round attempt:
+                                // same round/step numbers as the replay,
+                                // different generation. Never let it
+                                // near the reduce tree.
+                                continue;
+                            }
                             return RecvEvent::Micro {
                                 worker: rank,
                                 slot: slot as usize,
                                 n_tok: n_tok as usize,
                                 loss,
                                 grad,
-                            }
+                            };
                         }
                         Frame::Failed { message, .. } => {
                             return RecvEvent::Failed { worker: rank, message }
@@ -472,8 +633,17 @@ impl Transport for Coordinator {
                         _ => continue,
                     }
                 }
-                ReaderMsg::Eof { conn } | ReaderMsg::Err { conn, .. } => {
+                ReaderMsg::Eof { conn } => {
                     let Some(rank) = self.rank_of(conn) else { continue };
+                    self.members[rank].alive = false;
+                    return RecvEvent::Closed { worker: Some(rank) };
+                }
+                ReaderMsg::Err { conn, error } => {
+                    if error.contains(CRC_MARKER) {
+                        self.tally_rejected += 1;
+                    }
+                    let Some(rank) = self.rank_of(conn) else { continue };
+                    eprintln!("transport: worker rank {rank} read error: {error}");
                     self.members[rank].alive = false;
                     return RecvEvent::Closed { worker: Some(rank) };
                 }
@@ -510,14 +680,14 @@ impl Drop for Coordinator {
         let deadline = Instant::now() + Duration::from_secs(5);
         for c in &mut self.children {
             loop {
-                match c.try_wait() {
+                match c.child.try_wait() {
                     Ok(Some(_)) => break,
                     Ok(None) if Instant::now() < deadline => {
                         std::thread::sleep(Duration::from_millis(20));
                     }
                     _ => {
-                        c.kill().ok();
-                        c.wait().ok();
+                        c.child.kill().ok();
+                        c.child.wait().ok();
                         break;
                     }
                 }
@@ -540,7 +710,7 @@ impl Drop for Coordinator {
 pub struct WorkerOpts {
     /// Crash (close the socket without a word) on receiving this
     /// 1-based global step — before computing anything, so the step's
-    /// slots go missing mid-round.
+    /// slots go missing mid-round (`--chaos crash:wR@sS`).
     pub fault_step: Option<u64>,
     /// After completing this many steps, send [`Frame::Leave`] and keep
     /// serving until the coordinator's boundary `Shutdown`.
@@ -548,6 +718,26 @@ pub struct WorkerOpts {
     /// Sleep this long before each owned slot (arrival-order scrambling
     /// for the out-of-order conformance test).
     pub slot_delay_ms: u64,
+    /// `(step, ms)`: sleep `ms` before serving this 1-based global step
+    /// (`--chaos stall:wR@sS:MSms`).
+    pub stall: Option<(u64, u64)>,
+    /// Corrupt the first micro frame of this 1-based global step after
+    /// its CRC trailer is computed, so the coordinator must reject it
+    /// at the framing layer (`--chaos drop-frame:wR@sS`).
+    pub corrupt_step: Option<u64>,
+}
+
+impl WorkerOpts {
+    /// Apply one chaos [`FaultEntry`](super::transport::FaultEntry) to
+    /// these options (what `--chaos` compiles down to, per worker).
+    pub fn apply_fault(&mut self, entry: super::transport::FaultEntry) {
+        use super::transport::FaultAction;
+        match entry.action {
+            FaultAction::Crash => self.fault_step = Some(entry.step),
+            FaultAction::Stall { ms } => self.stall = Some((entry.step, ms)),
+            FaultAction::DropFrame => self.corrupt_step = Some(entry.step),
+        }
+    }
 }
 
 /// Send `Hello`, await `Welcome`; returns `(worker id, run config)`.
@@ -583,6 +773,10 @@ pub fn run_worker(
         rank: usize,
         workers: usize,
         m: usize,
+        /// Recovery generation of the `RoundBegin` this state came
+        /// from; echoed on every micro so the coordinator can discard
+        /// leaves computed under an aborted round attempt.
+        attempt: u32,
         plan: CompressPlan,
         /// One EF residual per owned slot, local order (slot j lives at
         /// local index j / workers).
@@ -603,6 +797,7 @@ pub fn run_worker(
         };
         match frame {
             Frame::RoundBegin {
+                attempt,
                 rank,
                 workers,
                 grad_accum,
@@ -634,13 +829,28 @@ pub fn run_worker(
                     local.push(r);
                     j += nw;
                 }
-                round = Some(RoundState { rank: rk, workers: nw, m, plan, residuals: local });
+                round =
+                    Some(RoundState { rank: rk, workers: nw, m, attempt, plan, residuals: local });
             }
             Frame::StepBegin { step, flat } => {
                 if opts.fault_step == Some(step + 1) {
                     // Injected crash: vanish mid-round, no goodbye.
                     io.shutdown();
                     return Ok(());
+                }
+                if let Some((s, ms)) = opts.stall {
+                    if s == step + 1 {
+                        // Injected stall: go dark for a while, then
+                        // serve the step normally (exercises straggler
+                        // detection and the round deadline, never the
+                        // math — delivery order is combine-free).
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                if opts.corrupt_step == Some(step + 1) {
+                    // Injected corruption: the next outbound frame gets
+                    // a byte flipped after its CRC trailer is computed.
+                    io.corrupt_next = true;
                 }
                 let st = round
                     .as_mut()
@@ -660,7 +870,7 @@ pub fn run_worker(
                             let slot =
                                 st.residuals.get_mut(local).map(|r| r.as_mut_slice());
                             st.plan.encode_leaf_into(&grad, slot, &mut gather, &mut msg);
-                            io.send_micro(my_id, j as u32, n_tok, loss, &msg)?;
+                            io.send_micro(my_id, st.attempt, j as u32, n_tok, loss, &msg)?;
                         }
                         Err(e) => {
                             io.send(&Frame::Failed {
@@ -706,7 +916,10 @@ where
             let batch_fn = batch_fn.clone();
             let o = opts.get(w).copied().unwrap_or_default();
             std::thread::spawn(move || -> Result<()> {
-                let stream = worker_connect_retry(kind, &addr, Duration::from_secs(10))?;
+                // The test harness has no run config in scope; use the
+                // [parallel.transport] default connect_timeout_ms.
+                let timeout = Duration::from_millis(TransportCfg::default().connect_timeout_ms);
+                let stream = worker_connect_retry(kind, &addr, timeout)?;
                 let mut io = FrameIo::new(stream);
                 let (id, _config) = worker_handshake(&mut io)?;
                 let mut model = super::refmodel::RefLm::new(super::refmodel::RefLmCfg::default());

@@ -80,7 +80,8 @@ pub use pool::{BufferPool, PoolStats};
 pub use refmodel::{RefLm, RefLmCfg};
 pub use shard::{ResidualBank, ShardPlan};
 pub use transport::{
-    Frame, InMemory, Membership, RecvEvent, Transport, TransportCfg, TransportKind, WorkerLost,
+    FaultAction, FaultCfg, FaultEntry, FaultPlan, Frame, InMemory, Membership, RecvEvent,
+    Transport, TransportCfg, TransportKind, WorkerLost,
 };
 
 use std::time::{Duration, Instant};
@@ -176,6 +177,10 @@ pub struct ParallelCfg {
     /// worker over a Unix-domain/TCP socket. The tree grouping is
     /// index-keyed, so every transport is bit-identical.
     pub transport: TransportCfg,
+    /// Mid-round fault policy (`[parallel.fault]` section): round
+    /// retries with deterministic replay, eviction floor, supervised
+    /// respawn. Default = recovery off (a mid-round loss stays fatal).
+    pub fault: FaultCfg,
 }
 
 impl Default for ParallelCfg {
@@ -190,6 +195,7 @@ impl Default for ParallelCfg {
             pipeline: true,
             compress: CompressCfg::default(),
             transport: TransportCfg::default(),
+            fault: FaultCfg::default(),
         }
     }
 }
@@ -318,6 +324,39 @@ pub struct Engine {
     /// Sequences per training micro-batch, as declared by the data
     /// plane (0 = undeclared; the `SequencesAssigned` counter stays 0).
     seqs_per_micro: u64,
+    /// Scripted fault injection for the in-memory transport (socket
+    /// transports script their faults into the worker processes).
+    chaos: FaultPlan,
+    /// Rewind point for mid-round fault recovery, captured at every
+    /// round boundary while recovery is armed (socket transport with
+    /// `fault.max_round_retries > 0`).
+    boundary: Option<BoundarySnap>,
+    /// The round the retry budget below counts against.
+    retry_round: u64,
+    /// Retries consumed by `retry_round` so far.
+    retries_used: u32,
+}
+
+/// Everything needed to rewind the engine to the most recent round
+/// boundary for a deterministic round replay (mid-round fault
+/// recovery). Captured just *before* the boundary tick: the MaskBuilder
+/// stream is pre-advance, so a replay's `begin_round` regenerates the
+/// identical mask, shard plans, codec assignment, and fresh
+/// moments/residuals. Moments need no capture — the boundary resets
+/// them by construction.
+struct BoundarySnap {
+    /// Completed steps at the boundary (`clock.step()` pre-tick).
+    step: u64,
+    /// `clock.adam_t()` pre-tick (the previous round's final value).
+    adam_t: u64,
+    /// `Engine::round` pre-increment.
+    round: u64,
+    flat: Vec<f32>,
+    builder: crate::coordinator::subspace::MaskBuilderState,
+    /// Deterministic-plane counter words at the boundary.
+    det: Vec<u64>,
+    metrics: crate::coordinator::metrics::MetricsMark,
+    reports_len: usize,
 }
 
 /// Deterministic-counter snapshot taken at a round boundary (the base
@@ -349,6 +388,7 @@ pub struct EngineBuilder {
     worker_args: Vec<Vec<String>>,
     batch_plan: Option<BatchPlan>,
     seqs_per_micro: u64,
+    chaos: FaultPlan,
 }
 
 impl EngineBuilder {
@@ -422,6 +462,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Scripted fault injection (`--chaos`) for the in-memory threaded
+    /// transport: crash/stall actions fire on the named worker thread
+    /// at the named step. Socket transports ignore this — their chaos
+    /// is compiled into the spawned workers' CLI args instead, so the
+    /// faults live in the worker processes where real ones would.
+    pub fn chaos(mut self, plan: FaultPlan) -> Self {
+        self.chaos = plan;
+        self
+    }
+
     pub fn build(self) -> Result<Engine> {
         let mask_builder =
             self.mask_builder.ok_or_else(|| anyhow::anyhow!("EngineBuilder: mask_builder unset"))?;
@@ -476,6 +526,7 @@ impl EngineBuilder {
                 self.worker_config,
                 self.worker_args,
             )?;
+            co.set_fault(cfg.parallel.fault);
             co.connect()?;
             Some(co)
         } else {
@@ -537,6 +588,10 @@ impl EngineBuilder {
             batch_plan: self.batch_plan,
             active_accum,
             seqs_per_micro: self.seqs_per_micro,
+            chaos: self.chaos,
+            boundary: None,
+            retry_round: 0,
+            retries_used: 0,
         })
     }
 }
@@ -741,7 +796,197 @@ impl Engine {
     /// with indices `step*grad_accum .. (step+1)*grad_accum`. The
     /// fill-style signature keeps the steady-state loop allocation-free
     /// (see [`pool`]).
+    ///
+    /// With `[parallel.fault] max_round_retries > 0` on a socket
+    /// transport, a mid-round [`WorkerLost`] does not propagate:
+    /// [`Engine::recover_and_replay`] rewinds to the round boundary,
+    /// evicts the dead member, re-shards over the survivors, and
+    /// replays the round's steps deterministically before returning
+    /// this step's loss.
     pub fn step<F>(&mut self, batch_fn: &F) -> Result<f32>
+    where
+        F: Fn(u64, &mut Vec<i32>) + Sync,
+    {
+        // Arm recovery at each round boundary: capture the rewind point
+        // BEFORE the boundary tick advances the mask stream, so a
+        // replay's begin_round regenerates the identical round.
+        if self.link.is_some()
+            && self.cfg.parallel.fault.max_round_retries > 0
+            && self.clock.step() % self.cfg.update_freq == 0
+        {
+            self.capture_boundary();
+        }
+        match self.step_inner(batch_fn) {
+            Ok(loss) => Ok(loss),
+            Err(err) => self.recover_and_replay(batch_fn, err),
+        }
+    }
+
+    /// Capture the lightweight rewind point for the round about to
+    /// begin. The flat parameters dominate the cost (one memcpy per
+    /// round); moments, residuals, and plans are NOT captured because
+    /// `begin_round` re-derives all of them from (mask stream, worker
+    /// count) at replay time.
+    fn capture_boundary(&mut self) {
+        // Recycle the previous capture's parameter buffer.
+        let mut flat = self.boundary.take().map(|b| b.flat).unwrap_or_default();
+        flat.clear();
+        flat.extend_from_slice(&self.flat);
+        self.boundary = Some(BoundarySnap {
+            step: self.clock.step(),
+            adam_t: self.clock.adam_t(),
+            round: self.round,
+            flat,
+            builder: self.mask_builder.ckpt_state(),
+            det: self.tel.deterministic_words(),
+            metrics: self.metrics.mark(),
+            reports_len: self.reports.len(),
+        });
+    }
+
+    /// Mid-round fault recovery: rewind to the round boundary, compact
+    /// membership to the survivors, and deterministically replay the
+    /// round's steps up to (and including) the one that failed. Every
+    /// step is a pure function of (boundary params, global micro index)
+    /// and the math is worker-count invariant, so the replayed trace —
+    /// losses, metrics, AND the deterministic telemetry plane — is
+    /// bit-identical to a continuous run at the surviving worker count
+    /// from that boundary. Recovery is visible only in the process
+    /// plane (`rounds_retried`, `workers_evicted`, recovery-stall
+    /// spans).
+    fn recover_and_replay<F>(&mut self, batch_fn: &F, first_err: anyhow::Error) -> Result<f32>
+    where
+        F: Fn(u64, &mut Vec<i32>) + Sync,
+    {
+        // Steps owed when the original failure hit — the replay target
+        // stays fixed across nested retries.
+        let target = self.clock.step();
+        let mut err = first_err;
+        loop {
+            let fault = self.cfg.parallel.fault;
+            let recoverable = self.link.is_some()
+                && fault.max_round_retries > 0
+                && self.boundary.is_some()
+                && format!("{err:#}").contains("lost in round");
+            if !recoverable {
+                return Err(err);
+            }
+            let (b_step, b_round) =
+                self.boundary.as_ref().map(|b| (b.step, b.round + 1)).unwrap_or((0, 0));
+            // Per-round retry budget, reset when a new round first retries.
+            if b_round != self.retry_round {
+                self.retry_round = b_round;
+                self.retries_used = 0;
+            }
+            if self.retries_used >= fault.max_round_retries {
+                return Err(anyhow::anyhow!(
+                    "round {b_round} retry budget exhausted (max_round_retries = {}): {err:#}",
+                    fault.max_round_retries
+                ));
+            }
+            self.retries_used += 1;
+            eprintln!(
+                "recovery: {err:#}; rewinding to the step-{b_step} boundary \
+                 (retry {}/{} of round {b_round})",
+                self.retries_used, fault.max_round_retries
+            );
+            let t0 = Instant::now();
+            self.rewind_to_boundary()?;
+            self.tel.add(Counter::RoundsRetried, 1);
+            let mut failed = None;
+            let mut loss = f32::NAN;
+            while self.clock.step() < target {
+                match self.step_inner(batch_fn) {
+                    Ok(l) => loss = l,
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            match failed {
+                Some(e) => err = e,
+                None => {
+                    // Wall-clock cost of the whole recovery, keyed by
+                    // the (1-based) step whose loss this call returns.
+                    self.tel.record_ns(
+                        Phase::RecoveryStall,
+                        target,
+                        t0.elapsed().as_nanos() as u64,
+                    );
+                    if let Some(r) = self.reports.last_mut() {
+                        r.rounds_retried = self.retries_used as u64;
+                    }
+                    return Ok(loss);
+                }
+            }
+        }
+    }
+
+    /// Restore the boundary snapshot: survivors-only membership,
+    /// boundary parameters/clock/mask-stream, truncated metrics and
+    /// reports, and the deterministic telemetry plane as of the
+    /// boundary. Process-plane counters intentionally keep accruing —
+    /// recovery shows there and only there. Fails (with a targeted,
+    /// capture-consistent error state) when the survivors fall below
+    /// `fault.min_workers`.
+    fn rewind_to_boundary(&mut self) -> Result<()> {
+        let snap = self.boundary.take().expect("rewind without a boundary snapshot");
+        let fault = self.cfg.parallel.fault;
+        let survivors = self
+            .link
+            .as_mut()
+            .expect("mid-round recovery is socket-only")
+            .compact_survivors();
+        // Restore the boundary state BEFORE any early return so the
+        // emergency-snapshot path below captures from a consistent
+        // round boundary.
+        self.flat.clear();
+        self.flat.extend_from_slice(&snap.flat);
+        self.mask_builder.restore_ckpt_state(&snap.builder);
+        self.clock.restore_at(snap.step, snap.adam_t);
+        self.round = snap.round;
+        self.metrics.rewind(snap.metrics);
+        self.reports.truncate(snap.reports_len);
+        self.tel.load_deterministic(&snap.det);
+        // The buffer pool cannot rewind (the aborted attempt's grabs
+        // are sunk), so re-base the PoolGrabs registry word such that
+        // base + grabs-now equals the boundary word again. Wrapping:
+        // the base goes "negative" when the pool has already grabbed
+        // more than the boundary word (young engines).
+        self.pool_grabs_base =
+            self.tel.get(Counter::PoolGrabs).wrapping_sub(self.pool.stats().grabs);
+        let (b_step, b_round, b_adam_t) = (snap.step, snap.round + 1, snap.adam_t);
+        self.boundary = Some(snap);
+        if survivors < fault.min_workers.max(1) {
+            // Leave a capture-consistent state behind: fresh zeroed
+            // moments whose bias-correction counter matches the
+            // restored clock, over the still-provisioned aborted plan.
+            // The orchestrator commits the emergency snapshot from
+            // this; on resume the first tick re-selects and discards
+            // the zeros, replaying the round exactly as a live
+            // recovery would have.
+            self.states = (0..self.states.len())
+                .map(|w| {
+                    let mut s = AdamState::new(self.plan.shard_len(w));
+                    s.t = b_adam_t;
+                    s
+                })
+                .collect();
+            anyhow::bail!(
+                "{survivors} surviving workers after round-{b_round} eviction is below \
+                 min_workers = {} — halting at the step-{b_step} boundary",
+                fault.min_workers
+            );
+        }
+        self.apply_worker_count(survivors);
+        self.link.as_mut().expect("socket link checked above").begin_retry();
+        Ok(())
+    }
+
+    /// The body of one optimizer step (no recovery — see
+    /// [`Engine::step`] for the fault-handling wrapper).
+    fn step_inner<F>(&mut self, batch_fn: &F) -> Result<f32>
     where
         F: Fn(u64, &mut Vec<i32>) + Sync,
     {
@@ -884,6 +1129,7 @@ impl Engine {
             let stage = &mut self.stage;
             let seen = &mut self.seen;
             let ctxs = &mut self.workers_ctx;
+            let chaos: &FaultPlan = &self.chaos;
             let Sources::Threaded(srcs) = &mut self.sources else { unreachable!() };
             let banks = self.residuals.per_worker_mut();
             assert_eq!(banks.len(), nw, "residual bank not sized to the worker count");
@@ -905,6 +1151,23 @@ impl Engine {
                         let mut j = w;
                         let mut local = 0usize;
                         while j < m {
+                            // Scripted chaos (the in-memory leg of the
+                            // harness), fired before the worker's first
+                            // owned micro of the step. A crash stops
+                            // production — the dropped sender surfaces
+                            // as the targeted WorkerLost. Frame
+                            // corruption needs a wire codec, so
+                            // drop-frame is inert here (frames move by
+                            // value; there are no bytes to flip).
+                            if local == 0 {
+                                match chaos.action_for(w, step + 1) {
+                                    Some(FaultAction::Crash) => return,
+                                    Some(FaultAction::Stall { ms }) => {
+                                        std::thread::sleep(Duration::from_millis(ms))
+                                    }
+                                    Some(FaultAction::DropFrame) | None => {}
+                                }
+                            }
                             if straggler_ms > 0 && w == straggler_worker {
                                 std::thread::sleep(Duration::from_millis(straggler_ms));
                             }
@@ -1030,8 +1293,12 @@ impl Engine {
             self.tel.add(Counter::SequencesAssigned, self.seqs_per_micro * wire.leaves);
         }
         let pool_stats = self.pool.stats();
-        self.tel.set(Counter::PoolGrabs, self.pool_grabs_base + pool_stats.grabs);
+        // wrapping_add pairs with the wrapping_sub re-base in
+        // `rewind_to_boundary` — the sum is always the true count.
+        self.tel
+            .set(Counter::PoolGrabs, self.pool_grabs_base.wrapping_add(pool_stats.grabs));
         self.tel.set(Counter::PoolMisses, pool_stats.misses);
+        let mut fault_events = (0u64, 0u64, 0u64);
         if let Some(co) = self.link.as_mut() {
             // Actual serialized traffic, attributed to the transport —
             // process plane (framing + control overhead; stays 0 under
@@ -1039,6 +1306,13 @@ impl Engine {
             let (frames, bytes) = co.take_transport_counters();
             self.tel.add(Counter::TransportFrames, frames);
             self.tel.add(Counter::TransportBytes, bytes);
+            // Recovery accounting (drained — accrues exactly once), also
+            // process plane: evictions and respawns never touch the
+            // deterministic trace.
+            fault_events = co.take_fault_counters();
+            self.tel.add(Counter::WorkersEvicted, fault_events.0);
+            self.tel.add(Counter::WorkersRespawned, fault_events.1);
+            self.tel.add(Counter::FramesRejected, fault_events.2);
         }
 
         // Mean over the global batch — the same scale at any worker count.
@@ -1160,6 +1434,9 @@ impl Engine {
                 self.tel.get(Counter::MicroBatches) - self.round_base.micro_batches;
             report.combine_calls =
                 self.tel.get(Counter::CombineCalls) - self.round_base.combine_calls;
+            report.workers_evicted += fault_events.0;
+            report.workers_respawned += fault_events.1;
+            report.frames_rejected += fault_events.2;
         }
         self.metrics.record(step + 1, loss, lr as f64, tokens_total as u64);
         Ok(loss)

@@ -47,6 +47,18 @@ pub struct RoundReport {
     pub micro_batches: u64,
     /// Interior tree combines performed this round (registry delta).
     pub combine_calls: u64,
+    /// Times this round was rewound and replayed after a mid-round
+    /// worker loss (process plane — replays never touch the
+    /// deterministic trace).
+    pub rounds_retried: u64,
+    /// Dead members evicted while this round ran (incl. its retries).
+    pub workers_evicted: u64,
+    /// Crashed coordinator-spawned workers relaunched under the
+    /// respawn backoff schedule while this round ran.
+    pub workers_respawned: u64,
+    /// Wire frames rejected by the CRC-32 integrity check while this
+    /// round ran (each one feeds the recovery path, never gradients).
+    pub frames_rejected: u64,
 }
 
 impl RoundReport {
@@ -64,6 +76,10 @@ impl RoundReport {
             wire_dense_bytes: 0,
             micro_batches: 0,
             combine_calls: 0,
+            rounds_retried: 0,
+            workers_evicted: 0,
+            workers_respawned: 0,
+            frames_rejected: 0,
         }
     }
 
@@ -272,8 +288,30 @@ impl Orchestrator {
         F: Fn(u64, &mut Vec<i32>) + Sync,
         G: FnMut(u64) -> Vec<i32>,
     {
-        let result = self.run_inner(steps, train_fn, val_fn, eval_every, eval_batches);
-        if result.is_err() {
+        let mut result = self.run_inner(steps, train_fn, val_fn, eval_every, eval_batches);
+        if let Err(err) = &result {
+            // Graceful degradation below `[parallel.fault] min_workers`:
+            // the engine has already rewound itself to a capture-
+            // consistent round boundary, so commit an emergency
+            // snapshot before the targeted error propagates — a later
+            // `--resume` replays the interrupted round bit-identically.
+            if format!("{err:#}").contains("below min_workers") {
+                match self.emergency_snapshot() {
+                    Ok(Some(dir)) => {
+                        result = result.map_err(|e| {
+                            anyhow::anyhow!(
+                                "{e:#}; emergency snapshot committed to {} — resume with \
+                                 --resume to replay the interrupted round",
+                                dir.display()
+                            )
+                        });
+                    }
+                    Ok(None) => {}
+                    Err(save_err) => {
+                        eprintln!("warning: the emergency snapshot failed: {save_err:#}");
+                    }
+                }
+            }
             // Best-effort drain so a background save failure is at least
             // reported before the (primary) training error propagates.
             if let Err(save_err) = self.finish_saves() {
@@ -282,6 +320,22 @@ impl Orchestrator {
             }
         }
         result
+    }
+
+    /// Commit an emergency snapshot of the engine's current (round-
+    /// boundary) state through the normal save machinery, synchronously
+    /// drained so it is durable before the caller exits. Returns the
+    /// snapshot directory, or `None` when checkpointing is not
+    /// configured / nothing has trained yet.
+    fn emergency_snapshot(&mut self) -> Result<Option<std::path::PathBuf>> {
+        let Some(policy) = &self.save else { return Ok(None) };
+        if self.engine.global_step() == 0 {
+            return Ok(None);
+        }
+        let dir = policy.dir.join(ckpt::step_dir_name(self.engine.global_step()));
+        self.save_snapshot()?;
+        self.finish_saves()?;
+        Ok(Some(dir))
     }
 
     fn run_inner<F, G>(
@@ -351,11 +405,22 @@ impl Orchestrator {
 
 fn print_round(r: &RoundReport) {
     let wire_kb = r.wire_bytes as f64 / r.steps.max(1) as f64 / 1024.0;
+    let fault = if r.rounds_retried + r.workers_evicted + r.workers_respawned
+        + r.frames_rejected
+        > 0
+    {
+        format!(
+            "  fault: retried {} evicted {} respawned {} rejected {}",
+            r.rounds_retried, r.workers_evicted, r.workers_respawned, r.frames_rejected
+        )
+    } else {
+        String::new()
+    };
     println!(
         "round {:>4}  rho {:.3}  steps {:>4}  mean-loss {:.4}  statefull {:>8} lanes  \
-         max-shard {:>7}  wire {:>8.1}KB/step (x{:.1} vs fp32)  timeouts {}",
+         max-shard {:>7}  wire {:>8.1}KB/step (x{:.1} vs fp32)  timeouts {}{}",
         r.round, r.rho, r.steps, r.mean_loss(), r.statefull_lanes, r.max_shard_lanes,
-        wire_kb, r.wire_reduction(), r.straggler_timeouts
+        wire_kb, r.wire_reduction(), r.straggler_timeouts, fault
     );
 }
 

@@ -23,7 +23,10 @@
 //!
 //! # Framing
 //!
-//! Every frame is `[u32 LE body length][u8 tag][body]`. Scalars are
+//! Every frame is `[u32 LE body length][u8 tag][body][u32 LE CRC-32]`
+//! — the trailer hashes tag + body (IEEE reflected, the same `ckpt`
+//! polynomial that pins snapshot shards), and a mismatch rejects the
+//! frame before the codec parses a byte of it. Scalars are
 //! little-endian; vectors are a `u32` element count followed by the
 //! elements; strings are `u32` byte length + UTF-8. Gradient payloads
 //! serialize the [`Payload`] variants field by field (sign words as
@@ -100,6 +103,10 @@ pub struct TransportCfg {
     /// Spawn `frugal worker` child processes automatically (true), or
     /// expect externally launched workers to connect (false).
     pub spawn: bool,
+    /// How long a connecting endpoint (worker → coordinator, data
+    /// client → data server) keeps retrying before giving up. Retries
+    /// back off exponentially from 10ms, capped at 500ms.
+    pub connect_timeout_ms: u64,
 }
 
 impl Default for TransportCfg {
@@ -111,7 +118,146 @@ impl Default for TransportCfg {
             max_round_ms: 0,
             heartbeat_ms: 250,
             spawn: true,
+            connect_timeout_ms: 10_000,
         }
+    }
+}
+
+/// The `[parallel.fault]` run-config section: what the coordinator does
+/// when a worker is lost mid-round. The default is the historical
+/// behavior — a targeted fatal [`WorkerLost`] error (`max_round_retries
+/// = 0`); turning retries on makes rounds self-healing: partial
+/// accumulations are discarded, dead members evicted, lanes re-sharded
+/// over the survivors, and the round replayed deterministically, so the
+/// recovered trace is bit-identical to a continuous run at the
+/// surviving worker count from that boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultCfg {
+    /// Retries allowed per round before a loss is fatal again
+    /// (0 = recovery off, every mid-round loss is fatal).
+    pub max_round_retries: u32,
+    /// Fewest survivors worth continuing with. Dropping below this
+    /// commits an emergency snapshot (when checkpointing is configured)
+    /// and exits with a targeted error instead of limping on.
+    pub min_workers: usize,
+    /// Relaunch coordinator-spawned worker processes that exit; the
+    /// replacement rejoins at the next round boundary through the
+    /// normal admission path.
+    pub respawn: bool,
+    /// Base delay before a respawn; doubles per consecutive respawn of
+    /// the same worker slot, capped at 32x (deterministic, no jitter).
+    pub respawn_backoff_ms: u64,
+}
+
+impl Default for FaultCfg {
+    fn default() -> Self {
+        FaultCfg { max_round_retries: 0, min_workers: 1, respawn: false, respawn_backoff_ms: 500 }
+    }
+}
+
+impl FaultCfg {
+    /// The deterministic capped-exponential respawn delay for the
+    /// `attempt`-th consecutive respawn of one worker slot (0-based).
+    pub fn respawn_delay(&self, attempt: u32) -> Duration {
+        let factor = 1u64 << attempt.min(5);
+        Duration::from_millis(self.respawn_backoff_ms.saturating_mul(factor))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic fault injection (the chaos harness)
+// ---------------------------------------------------------------------
+
+/// One scripted fault: what happens to worker `worker` at 1-based
+/// optimizer step `step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The worker process/thread dies before serving the step.
+    Crash,
+    /// The worker sleeps this many ms before serving the step.
+    Stall { ms: u64 },
+    /// The worker flips a byte in its first micro frame of the step
+    /// after the CRC trailer is computed — the coordinator must reject
+    /// it at the frame codec, never letting it into gradient math.
+    DropFrame,
+}
+
+/// One entry of a [`FaultPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEntry {
+    /// Target worker index (the spawn slot / initial rank).
+    pub worker: usize,
+    /// 1-based optimizer step at which the fault fires.
+    pub step: u64,
+    pub action: FaultAction,
+}
+
+/// A deterministic fault-injection script
+/// (`--chaos "crash:w1@s25,stall:w2@s30:500ms,drop-frame:w0@s40"`),
+/// applied identically to the in-memory and socket transports: each
+/// entry names a worker, a 1-based step, and an action. The plan is a
+/// pure function of its spec string, so chaos runs are reproducible.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    /// Parse a `--chaos` spec: comma-separated entries of
+    /// `crash:wR@sS | stall:wR@sS:MSms | drop-frame:wR@sS`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("chaos entry '{part}': expected KIND:wR@sS"))?;
+            let (target, tail) = match rest.split_once(':') {
+                Some((t, ms)) => (t, Some(ms)),
+                None => (rest, None),
+            };
+            let (w, s) = target.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("chaos entry '{part}': expected wR@sS target, got '{target}'")
+            })?;
+            let worker: usize = w
+                .strip_prefix('w')
+                .and_then(|n| n.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("chaos entry '{part}': bad worker '{w}'"))?;
+            let step: u64 = s
+                .strip_prefix('s')
+                .and_then(|n| n.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("chaos entry '{part}': bad step '{s}'"))?;
+            anyhow::ensure!(step >= 1, "chaos entry '{part}': steps are 1-based");
+            let action = match (kind, tail) {
+                ("crash", None) => FaultAction::Crash,
+                ("stall", Some(ms)) => {
+                    let ms: u64 =
+                        ms.strip_suffix("ms").unwrap_or(ms).parse().map_err(|_| {
+                            anyhow::anyhow!("chaos entry '{part}': bad stall duration '{ms}'")
+                        })?;
+                    FaultAction::Stall { ms }
+                }
+                ("drop-frame", None) => FaultAction::DropFrame,
+                _ => anyhow::bail!(
+                    "chaos entry '{part}': expected crash:wR@sS | stall:wR@sS:MSms | drop-frame:wR@sS"
+                ),
+            };
+            entries.push(FaultEntry { worker, step, action });
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The scripted action for `worker` at 1-based step `step`, if any.
+    pub fn action_for(&self, worker: usize, step: u64) -> Option<FaultAction> {
+        self.entries.iter().find(|e| e.worker == worker && e.step == step).map(|e| e.action)
+    }
+
+    /// All entries targeting `worker`.
+    pub fn for_worker(&self, worker: usize) -> Vec<FaultEntry> {
+        self.entries.iter().copied().filter(|e| e.worker == worker).collect()
     }
 }
 
@@ -129,9 +275,14 @@ pub enum Frame {
     /// membership view (this worker's `rank` of `workers`), codec plan
     /// (mode/block over the `full`/`free` lane sets), and — after a
     /// mid-round restore — the slot-keyed EF residuals to resume from
-    /// (empty otherwise; workers start their slots at zero).
+    /// (empty otherwise; workers start their slots at zero). `attempt`
+    /// is the coordinator's recovery generation: it bumps on every
+    /// mid-round retry, and workers echo it on their micros so leaves
+    /// from an aborted attempt (same round, same step numbers) can
+    /// never contaminate the replay.
     RoundBegin {
         round: u64,
+        attempt: u32,
         rank: u32,
         workers: u32,
         grad_accum: u32,
@@ -146,8 +297,10 @@ pub enum Frame {
     /// these parameters (`step` is 0-based; micro-batch `j`'s global
     /// data index is `step * grad_accum + j`).
     StepBegin { step: u64, flat: Vec<f32> },
-    /// Worker → coordinator: one micro-batch result (the tree leaf).
-    Micro { worker: u64, slot: u32, n_tok: u32, loss: f32, grad: EncodedGrad },
+    /// Worker → coordinator: one micro-batch result (the tree leaf),
+    /// stamped with the recovery generation of the `RoundBegin` it was
+    /// computed under (stale generations are discarded silently).
+    Micro { worker: u64, attempt: u32, slot: u32, n_tok: u32, loss: f32, grad: EncodedGrad },
     /// Worker → coordinator: a gradient computation failed.
     Failed { worker: u64, message: String },
     /// Worker → coordinator: please drop me at the next round boundary.
@@ -310,7 +463,7 @@ impl InMemory {
 
     fn translate(frame: Frame) -> RecvEvent {
         match frame {
-            Frame::Micro { worker, slot, n_tok, loss, grad } => RecvEvent::Micro {
+            Frame::Micro { worker, slot, n_tok, loss, grad, .. } => RecvEvent::Micro {
                 worker: worker as usize,
                 slot: slot as usize,
                 n_tok: n_tok as usize,
@@ -591,6 +744,7 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
         }
         Frame::RoundBegin {
             round,
+            attempt,
             rank,
             workers,
             grad_accum,
@@ -603,6 +757,7 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
         } => {
             out.push(TAG_ROUND_BEGIN);
             put_u64(out, *round);
+            put_u32(out, *attempt);
             put_u32(out, *rank);
             put_u32(out, *workers);
             put_u32(out, *grad_accum);
@@ -621,9 +776,10 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             put_u64(out, *step);
             put_f32s(out, flat);
         }
-        Frame::Micro { worker, slot, n_tok, loss, grad } => {
+        Frame::Micro { worker, attempt, slot, n_tok, loss, grad } => {
             out.push(TAG_MICRO);
             put_u64(out, *worker);
+            put_u32(out, *attempt);
             put_u32(out, *slot);
             put_u32(out, *n_tok);
             put_f32(out, *loss);
@@ -659,6 +815,7 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
         TAG_WELCOME => Frame::Welcome { worker: r.u64()?, config: r.string()? },
         TAG_ROUND_BEGIN => {
             let round = r.u64()?;
+            let attempt = r.u32()?;
             let rank = r.u32()?;
             let workers = r.u32()?;
             let grad_accum = r.u32()?;
@@ -674,6 +831,7 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
             }
             Frame::RoundBegin {
                 round,
+                attempt,
                 rank,
                 workers,
                 grad_accum,
@@ -688,6 +846,7 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
         TAG_STEP_BEGIN => Frame::StepBegin { step: r.u64()?, flat: r.f32s()? },
         TAG_MICRO => Frame::Micro {
             worker: r.u64()?,
+            attempt: r.u32()?,
             slot: r.u32()?,
             n_tok: r.u32()?,
             loss: r.f32()?,
@@ -826,9 +985,14 @@ pub fn default_addr(kind: TransportKind) -> String {
 }
 
 /// Connect to a coordinator at `addr`, retrying until `timeout` (the
-/// listener may not be bound yet when a worker starts).
+/// listener may not be bound yet when a worker starts). Retries back
+/// off exponentially — 10ms doubling to a 500ms cap — instead of
+/// hammering the address in a tight loop; the timeout comes from
+/// [`TransportCfg::connect_timeout_ms`] at every call site.
 pub fn worker_connect_retry(kind: TransportKind, addr: &str, timeout: Duration) -> Result<Stream> {
     let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(10);
+    const BACKOFF_CAP: Duration = Duration::from_millis(500);
     loop {
         let attempt = match kind {
             TransportKind::Uds => {
@@ -842,18 +1006,24 @@ pub fn worker_connect_retry(kind: TransportKind, addr: &str, timeout: Duration) 
         match attempt {
             Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() >= deadline {
+                let now = Instant::now();
+                if now >= deadline {
                     anyhow::bail!("connect {kind} {addr}: {e} (gave up after {timeout:?})");
                 }
-                std::thread::sleep(Duration::from_millis(10));
+                std::thread::sleep(backoff.min(deadline - now));
+                backoff = (backoff * 2).min(BACKOFF_CAP);
             }
         }
     }
 }
 
 /// Framed, metered IO over one [`Stream`]: length-prefixed frames in
-/// both directions, with byte/frame counters for the transport
-/// telemetry plane.
+/// both directions — `[u32 LE body length][tag][body][u32 LE CRC-32]`,
+/// the trailer covering tag + body — with byte/frame counters for the
+/// transport telemetry plane. A frame whose trailer disagrees with its
+/// body is rejected with a `frame crc mismatch` error before the codec
+/// ever parses it: a flipped wire byte surfaces as a targeted
+/// per-connection fault, never as corrupt gradient math.
 pub struct FrameIo {
     stream: Stream,
     wbuf: Vec<u8>,
@@ -862,6 +1032,10 @@ pub struct FrameIo {
     pub sent_bytes: u64,
     pub recv_frames: u64,
     pub recv_bytes: u64,
+    /// Chaos hook (`drop-frame`): flip a byte of the next outbound
+    /// frame *after* its CRC trailer is computed, so the receiver must
+    /// reject it. One-shot; cleared on use.
+    pub corrupt_next: bool,
 }
 
 impl FrameIo {
@@ -874,6 +1048,7 @@ impl FrameIo {
             sent_bytes: 0,
             recv_frames: 0,
             recv_bytes: 0,
+            corrupt_next: false,
         }
     }
 
@@ -894,6 +1069,7 @@ impl FrameIo {
     pub fn send_micro(
         &mut self,
         worker: u64,
+        attempt: u32,
         slot: u32,
         n_tok: u32,
         loss: f32,
@@ -902,6 +1078,7 @@ impl FrameIo {
         self.wbuf.clear();
         self.wbuf.push(TAG_MICRO);
         put_u64(&mut self.wbuf, worker);
+        put_u32(&mut self.wbuf, attempt);
         put_u32(&mut self.wbuf, slot);
         put_u32(&mut self.wbuf, n_tok);
         put_f32(&mut self.wbuf, loss);
@@ -910,18 +1087,30 @@ impl FrameIo {
     }
 
     fn send_encoded(&mut self) -> Result<u64> {
+        let crc = crate::ckpt::crc::crc32(&self.wbuf);
+        if self.corrupt_next && !self.wbuf.is_empty() {
+            // Chaos: flip one body byte after the trailer was computed.
+            self.corrupt_next = false;
+            let mid = self.wbuf.len() / 2;
+            self.wbuf[mid] ^= 0xFF;
+        }
         let len = (self.wbuf.len() as u32).to_le_bytes();
         self.stream.write_all(&len).map_err(|e| anyhow::anyhow!("frame send: {e}"))?;
         self.stream.write_all(&self.wbuf).map_err(|e| anyhow::anyhow!("frame send: {e}"))?;
+        self.stream
+            .write_all(&crc.to_le_bytes())
+            .map_err(|e| anyhow::anyhow!("frame send: {e}"))?;
         self.stream.flush().map_err(|e| anyhow::anyhow!("frame send: {e}"))?;
-        let n = 4 + self.wbuf.len() as u64;
+        let n = 4 + self.wbuf.len() as u64 + 4;
         self.sent_frames += 1;
         self.sent_bytes += n;
         Ok(n)
     }
 
     /// Receive the next frame; `Ok(None)` on a clean EOF at a frame
-    /// boundary (the peer closed).
+    /// boundary (the peer closed). A trailer/body CRC disagreement is
+    /// an error whose message contains `frame crc mismatch` — the
+    /// stable marker the coordinator uses to count rejected frames.
     pub fn recv(&mut self) -> Result<Option<Frame>> {
         let mut len = [0u8; 4];
         match read_exact_or_eof(&mut self.stream, &mut len) {
@@ -935,8 +1124,18 @@ impl FrameIo {
         self.stream
             .read_exact(&mut self.rbuf)
             .map_err(|e| anyhow::anyhow!("frame recv: truncated frame: {e}"))?;
+        let mut trailer = [0u8; 4];
+        self.stream
+            .read_exact(&mut trailer)
+            .map_err(|e| anyhow::anyhow!("frame recv: truncated crc trailer: {e}"))?;
         self.recv_frames += 1;
-        self.recv_bytes += 4 + n as u64;
+        self.recv_bytes += 4 + n as u64 + 4;
+        let want = u32::from_le_bytes(trailer);
+        let got = crate::ckpt::crc::crc32(&self.rbuf);
+        anyhow::ensure!(
+            got == want,
+            "frame crc mismatch: body of {n} bytes hashes to {got:#010x}, trailer says {want:#010x}"
+        );
         decode_frame(&self.rbuf).map(Some)
     }
 
@@ -996,6 +1195,7 @@ mod tests {
         roundtrip(&Frame::Welcome { worker: 3, config: "steps = 4\n".into() });
         roundtrip(&Frame::RoundBegin {
             round: 7,
+            attempt: 2,
             rank: 1,
             workers: 4,
             grad_accum: 8,
@@ -1009,6 +1209,7 @@ mod tests {
         roundtrip(&Frame::StepBegin { step: 11, flat: vec![1.0, -0.0, f32::MIN_POSITIVE] });
         roundtrip(&Frame::Micro {
             worker: 2,
+            attempt: 0,
             slot: 5,
             n_tok: 64,
             loss: 3.25,
@@ -1016,6 +1217,7 @@ mod tests {
         });
         roundtrip(&Frame::Micro {
             worker: 0,
+            attempt: u32::MAX,
             slot: 0,
             n_tok: 1,
             loss: -0.5,
@@ -1056,12 +1258,78 @@ mod tests {
     }
 
     #[test]
+    fn framed_io_roundtrips_and_crc_rejects_corruption() {
+        let (a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let mut tx = FrameIo::new(Stream::Unix(a));
+        let mut rx = FrameIo::new(Stream::Unix(b));
+
+        // Clean frame crosses intact.
+        let frame = Frame::Micro {
+            worker: 1,
+            attempt: 3,
+            slot: 2,
+            n_tok: 7,
+            loss: 0.125,
+            grad: EncodedGrad::Dense(vec![1.0, -2.0]),
+        };
+        tx.send(&frame).unwrap();
+        assert_eq!(rx.recv().unwrap(), Some(frame.clone()));
+
+        // A byte flipped after the CRC trailer was computed (the chaos
+        // harness's drop-frame action) must be rejected at the framing
+        // layer with the stable marker message.
+        tx.corrupt_next = true;
+        tx.send(&frame).unwrap();
+        let err = rx.recv().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("frame crc mismatch"), "{msg}");
+
+        // The corrupt-one-frame hook is one-shot: the stream recovers.
+        tx.send(&frame).unwrap();
+        assert_eq!(rx.recv().unwrap(), Some(frame));
+    }
+
+    #[test]
+    fn fault_plan_parses_the_chaos_spec() {
+        let plan =
+            FaultPlan::parse("crash:w1@s25, stall:w2@s30:500ms,drop-frame:w0@s40").unwrap();
+        assert_eq!(
+            plan.entries,
+            vec![
+                FaultEntry { worker: 1, step: 25, action: FaultAction::Crash },
+                FaultEntry { worker: 2, step: 30, action: FaultAction::Stall { ms: 500 } },
+                FaultEntry { worker: 0, step: 40, action: FaultAction::DropFrame },
+            ]
+        );
+        assert_eq!(plan.action_for(1, 25), Some(FaultAction::Crash));
+        assert_eq!(plan.action_for(1, 24), None);
+        assert_eq!(plan.for_worker(2).len(), 1);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("crash:w1").is_err());
+        assert!(FaultPlan::parse("stall:w1@s5").is_err());
+        assert!(FaultPlan::parse("crash:w1@s0").is_err());
+        assert!(FaultPlan::parse("melt:w1@s5").is_err());
+    }
+
+    #[test]
+    fn respawn_backoff_is_capped_exponential() {
+        let cfg = FaultCfg { respawn_backoff_ms: 100, ..FaultCfg::default() };
+        assert_eq!(cfg.respawn_delay(0), Duration::from_millis(100));
+        assert_eq!(cfg.respawn_delay(1), Duration::from_millis(200));
+        assert_eq!(cfg.respawn_delay(3), Duration::from_millis(800));
+        assert_eq!(cfg.respawn_delay(5), Duration::from_millis(3_200));
+        // Capped at 32x base from the fifth consecutive respawn on.
+        assert_eq!(cfg.respawn_delay(9), Duration::from_millis(3_200));
+    }
+
+    #[test]
     fn in_memory_transport_delivers_and_reports_closure() {
         let mut t = InMemory::new(2);
         let s = t.sender();
         assert_eq!(t.membership().len(), 2);
         s.send_frame(Frame::Micro {
             worker: 1,
+            attempt: 0,
             slot: 3,
             n_tok: 10,
             loss: 0.5,

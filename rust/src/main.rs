@@ -37,9 +37,9 @@ use frugal::data::stream::{
 };
 use frugal::data::{Corpus, CorpusConfig, SyntheticCorpus, SyntheticStream};
 use frugal::engine::orchestrator::SavePolicy;
-use frugal::engine::{run_worker, worker_handshake, CompressMode, Engine, EngineCfg, GradSource,
-                     Orchestrator, ParallelCfg, RefLm, RefLmCfg, Sources, TransportKind,
-                     WorkerOpts};
+use frugal::engine::{run_worker, worker_handshake, CompressMode, Engine, EngineCfg, FaultAction,
+                     FaultPlan, GradSource, Orchestrator, ParallelCfg, RefLm, RefLmCfg, Sources,
+                     TransportKind, WorkerOpts};
 use frugal::optim::memory::{checkpoint_bytes, fmt_gib, lane_wire_bytes, optimizer_state_bytes,
                             split_wire_report, ArchSpec, Method, WireCodec};
 use frugal::optim::memory::scheduled_state_table;
@@ -62,13 +62,15 @@ USAGE:
                   [--straggler-ms N] [--timeout-ms N] [--sequential]
                   [--no-pipeline]
                   [--transport memory|uds|tcp] [--transport-addr ADDR]
-                  [--worker-fault W:S]
+                  [--worker-fault W:S] [--chaos SPEC] [--fault-retries N]
+                  [--min-workers N] [--respawn] [--respawn-backoff-ms N]
                   [--ckpt-dir DIR] [--save-every N] [--ckpt-codec q8|raw]
                   [--ckpt-sync] [--keep-last N] [--resume DIR]
                   [--trace-dir DIR]
                   [--data DIR] [--prefetch N] [--batch-schedule SPEC]
   frugal worker   --connect ADDR [--tcp] [--fault-step N] [--leave-after N]
-                  [--slot-delay-ms N] [--data DIR] [--data-addr ADDR]
+                  [--slot-delay-ms N] [--stall S:MS] [--corrupt-frame S]
+                  [--connect-timeout-ms N] [--data DIR] [--data-addr ADDR]
   frugal data     pack --out DIR --seq-len N [--vocab V] [--shard-seqs N]
                   (--tokens FILE | --synthetic-seqs N [--seed S])
   frugal data     inspect DIR
@@ -100,6 +102,22 @@ section; `--worker-fault W:S` makes worker W crash at global step S
 (deterministic failure injection for the resume CI: the run fails with
 `worker W lost in round R`, and a `--resume` from the last snapshot
 matches the uninterrupted run bitwise).
+
+`--fault-retries N` (the `[parallel.fault]` config section) arms mid-
+round recovery on the socket transports: when a worker dies mid-round
+the coordinator discards the partial round, evicts the dead worker,
+re-shards state over the survivors, and deterministically replays the
+round's micro-batches — the post-recovery loss trace and deterministic
+telemetry plane are bitwise-identical to a continuous run at the
+surviving worker count. `--chaos SPEC` scripts deterministic faults:
+comma-separated `crash:wR@sS | stall:wR@sS:MSms | drop-frame:wR@sS`
+(drop-frame flips a post-CRC byte so the coordinator's frame CRC-32
+rejects it — the corruption routes through the same recovery path,
+never into gradient math). `--min-workers N` commits an emergency
+snapshot and exits with a targeted error instead of limping below N
+survivors; `--respawn` relaunches crashed spawned workers under the
+capped-exponential `--respawn-backoff-ms` schedule (they rejoin at the
+next round boundary).
 
 `--rho-schedule SPEC` anneals the density per mask epoch (one epoch =
 --update-freq steps), shrinking the state-full lane count — and so the
@@ -223,8 +241,10 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             info(Path::new(args.get("artifacts").unwrap_or("artifacts")))
         }
         "pretrain" => {
-            let args =
-                Args::parse(rest, &["fused", "sequential", "no-pipeline", "ckpt-sync"])?;
+            let args = Args::parse(
+                rest,
+                &["fused", "sequential", "no-pipeline", "ckpt-sync", "respawn"],
+            )?;
             let mut cfg = match args.get("config") {
                 Some(p) => TrainConfig::from_toml_file(Path::new(p))?,
                 None => TrainConfig::default(),
@@ -312,6 +332,27 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                 let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
                 p.transport.addr = Some(a.to_string());
             }
+            // Fault policy + chaos script (the self-healing layer).
+            if let Some(n) = args.get_u64("fault-retries")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.fault.max_round_retries = n as u32;
+            }
+            if let Some(n) = args.get_u64("min-workers")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.fault.min_workers = (n as usize).max(1);
+            }
+            if args.has("respawn") {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.fault.respawn = true;
+            }
+            if let Some(n) = args.get_u64("respawn-backoff-ms")? {
+                let p = cfg.parallel.get_or_insert_with(ParallelCfg::default);
+                p.fault.respawn_backoff_ms = n;
+            }
+            let chaos = args.get("chaos").map(FaultPlan::parse).transpose()?;
+            if chaos.is_some() {
+                cfg.parallel.get_or_insert_with(ParallelCfg::default);
+            }
             let worker_fault = args
                 .get("worker-fault")
                 .map(|s| -> frugal::Result<(usize, u64)> {
@@ -392,11 +433,11 @@ fn run(argv: &[String]) -> frugal::Result<()> {
                      combine with the engine flags (--workers/--grad-accum/...)"
                 );
                 let backend = args.get("backend").unwrap_or("auto").to_string();
-                pretrain_parallel(cfg, &backend, resume.as_deref(), worker_fault)
+                pretrain_parallel(cfg, &backend, resume.as_deref(), worker_fault, chaos)
             } else {
                 anyhow::ensure!(
-                    worker_fault.is_none(),
-                    "--worker-fault needs the data-parallel engine (--workers N)"
+                    worker_fault.is_none() && chaos.is_none(),
+                    "--worker-fault/--chaos need the data-parallel engine (--workers N)"
                 );
                 pretrain(cfg, args.has("fused"))
             }
@@ -406,20 +447,40 @@ fn run(argv: &[String]) -> frugal::Result<()> {
             let addr = args.get("connect").ok_or_else(|| {
                 anyhow::anyhow!(
                     "usage: frugal worker --connect ADDR [--tcp] [--fault-step N] \
-                     [--leave-after N] [--slot-delay-ms N] [--data DIR] \
+                     [--leave-after N] [--slot-delay-ms N] [--stall S:MS] \
+                     [--corrupt-frame S] [--connect-timeout-ms N] [--data DIR] \
                      [--data-addr ADDR]"
                 )
             })?;
             let kind = if args.has("tcp") { TransportKind::Tcp } else { TransportKind::Uds };
+            let stall = args
+                .get("stall")
+                .map(|s| -> frugal::Result<(u64, u64)> {
+                    let (step, ms) = s.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("--stall expects STEP:MS (e.g. 30:500)")
+                    })?;
+                    Ok((
+                        step.parse().map_err(|e| anyhow::anyhow!("--stall step: {e}"))?,
+                        ms.parse().map_err(|e| anyhow::anyhow!("--stall ms: {e}"))?,
+                    ))
+                })
+                .transpose()?;
             let opts = WorkerOpts {
                 fault_step: args.get_u64("fault-step")?,
                 leave_after_steps: args.get_u64("leave-after")?,
                 slot_delay_ms: args.get_u64("slot-delay-ms")?.unwrap_or(0),
+                stall,
+                corrupt_step: args.get_u64("corrupt-frame")?,
             };
+            let connect_timeout = std::time::Duration::from_millis(
+                args.get_u64("connect-timeout-ms")?
+                    .unwrap_or(frugal::engine::TransportCfg::default().connect_timeout_ms),
+            );
             worker(
                 kind,
                 addr,
                 opts,
+                connect_timeout,
                 args.get("data").map(|s| s.to_string()),
                 args.get("data-addr").map(|s| s.to_string()),
             )
@@ -734,6 +795,7 @@ fn worker(
     kind: TransportKind,
     addr: &str,
     opts: WorkerOpts,
+    connect_timeout: std::time::Duration,
     data_dir: Option<String>,
     data_addr: Option<String>,
 ) -> frugal::Result<()> {
@@ -742,7 +804,7 @@ fn worker(
         data_dir.is_none() || data_addr.is_none(),
         "--data and --data-addr are alternatives (shared filesystem vs data server)"
     );
-    let stream = worker_connect_retry(kind, addr, std::time::Duration::from_secs(10))?;
+    let stream = worker_connect_retry(kind, addr, connect_timeout)?;
     let mut io = FrameIo::new(stream);
     let (id, config) = worker_handshake(&mut io)?;
     let mut model = RefLm::new(RefLmCfg::default());
@@ -759,7 +821,7 @@ fn worker(
             daddr,
             rcfg.batch,
             rcfg.seq_len,
-            std::time::Duration::from_secs(10),
+            connect_timeout,
         )?)
     } else if let Some(dir) = &data_dir {
         let sc = StreamingCorpus::open(Path::new(dir), rcfg.batch, run_cfg.seed)?;
@@ -889,6 +951,7 @@ fn pretrain_parallel(
     backend: &str,
     resume: Option<&str>,
     worker_fault: Option<(usize, u64)>,
+    chaos: Option<FaultPlan>,
 ) -> frugal::Result<()> {
     // The engine implements the FRUGAL update (subspace-masked AdamW +
     // signSGD); a different --optimizer must not silently run as FRUGAL.
@@ -916,6 +979,28 @@ fn pretrain_parallel(
             pcfg.workers
         );
         anyhow::ensure!(s >= 1, "--worker-fault step is 1-based (got 0)");
+    }
+    if let Some(plan) = &chaos {
+        for e in &plan.entries {
+            anyhow::ensure!(
+                e.worker < pcfg.workers,
+                "--chaos worker {} out of range (workers {})",
+                e.worker,
+                pcfg.workers
+            );
+            anyhow::ensure!(
+                !socket || e.action != FaultAction::DropFrame || pcfg.transport.spawn,
+                "--chaos drop-frame targets a spawned worker process; it cannot reach \
+                 a manually-joined worker (spawn = false)"
+            );
+        }
+        if !socket {
+            anyhow::ensure!(
+                !plan.entries.iter().any(|e| e.action == FaultAction::DropFrame),
+                "--chaos drop-frame corrupts wire bytes: it needs a socket transport \
+                 (--transport uds|tcp); the in-memory backend moves frames by value"
+            );
+        }
     }
     if socket {
         anyhow::ensure!(
@@ -1039,6 +1124,41 @@ fn pretrain_parallel(
     if let Some((w, s)) = worker_fault {
         worker_args[w] = vec!["--fault-step".into(), s.to_string()];
     }
+    // The chaos script reaches socket workers as per-slot CLI flags (a
+    // respawned worker re-runs its slot's args, so a scripted fault
+    // fires at most once per step — the step is already past on
+    // rejoin); the in-memory backend injects from the plan directly.
+    if let Some(plan) = &chaos {
+        for w in 0..pcfg.workers {
+            for e in plan.for_worker(w) {
+                match e.action {
+                    FaultAction::Crash => {
+                        worker_args[w].extend(["--fault-step".into(), e.step.to_string()]);
+                    }
+                    FaultAction::Stall { ms } => {
+                        worker_args[w]
+                            .extend(["--stall".into(), format!("{}:{ms}", e.step)]);
+                    }
+                    FaultAction::DropFrame => {
+                        worker_args[w]
+                            .extend(["--corrupt-frame".into(), e.step.to_string()]);
+                    }
+                }
+            }
+        }
+    }
+    // Spawned workers connect under the same budget the run config
+    // declares (they cannot learn it from the handshake — connecting is
+    // how they reach the handshake).
+    if socket && pcfg.transport.connect_timeout_ms != frugal::engine::TransportCfg::default().connect_timeout_ms
+    {
+        for args in &mut worker_args {
+            args.extend([
+                "--connect-timeout-ms".into(),
+                pcfg.transport.connect_timeout_ms.to_string(),
+            ]);
+        }
+    }
     let mut builder = Engine::builder()
         .mask_builder(mask_builder)
         .cfg(engine_cfg)
@@ -1049,6 +1169,9 @@ fn pretrain_parallel(
         .seqs_per_micro(batch as u64);
     if let Some(plan) = batch_plan.clone() {
         builder = builder.batch_plan(plan);
+    }
+    if let Some(plan) = chaos {
+        builder = builder.chaos(plan);
     }
     let engine = builder.build()?;
     let mut orch = Orchestrator::new(engine);

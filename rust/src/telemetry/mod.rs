@@ -97,12 +97,26 @@ pub enum Counter {
     /// prefixes and control frames included — the actual wire cost, as
     /// opposed to the deterministic `WireBytes` payload accounting.
     TransportBytes,
+    /// Rounds replayed after a mid-round worker loss (`[parallel.fault]`
+    /// recovery). Process plane: faults are wall-clock events; the
+    /// replayed steps reproduce the deterministic plane bit-exactly, so
+    /// recovery never shows up there.
+    RoundsRetried,
+    /// Coordinator-spawned worker processes relaunched by the respawn
+    /// supervisor.
+    WorkersRespawned,
+    /// Members evicted after dying mid-round or timing out (orderly
+    /// leaves are not evictions).
+    WorkersEvicted,
+    /// Inbound frames rejected by the wire codec's CRC-32 trailer
+    /// before reaching gradient math.
+    FramesRejected,
 }
 
 /// Counters in the deterministic plane (array prefix).
 pub const DET_COUNTERS: usize = 15;
 /// Total registry width.
-pub const NUM_COUNTERS: usize = 22;
+pub const NUM_COUNTERS: usize = 26;
 
 impl Counter {
     /// Every counter, in array order.
@@ -129,6 +143,10 @@ impl Counter {
         Counter::StragglerTimeouts,
         Counter::TransportFrames,
         Counter::TransportBytes,
+        Counter::RoundsRetried,
+        Counter::WorkersRespawned,
+        Counter::WorkersEvicted,
+        Counter::FramesRejected,
     ];
 
     /// Canonical snake_case key (manifest JSON, trace rendering).
@@ -156,6 +174,10 @@ impl Counter {
             Counter::StragglerTimeouts => "straggler_timeouts",
             Counter::TransportFrames => "transport_frames",
             Counter::TransportBytes => "transport_bytes",
+            Counter::RoundsRetried => "rounds_retried",
+            Counter::WorkersRespawned => "workers_respawned",
+            Counter::WorkersEvicted => "workers_evicted",
+            Counter::FramesRejected => "frames_rejected",
         }
     }
 
@@ -188,10 +210,14 @@ pub enum Phase {
     /// post-run from the prefetcher's stall ring, keyed by micro-batch
     /// index rather than step.
     PrefetchStall,
+    /// Wall-clock time one mid-round recovery took: from the loss being
+    /// detected to the round replay completing (eviction + rewind +
+    /// replayed steps). Keyed by the step the loss surfaced on.
+    RecoveryStall,
 }
 
 /// Number of [`Phase`] variants.
-pub const NUM_PHASES: usize = 8;
+pub const NUM_PHASES: usize = 9;
 
 impl Phase {
     /// Every phase, in array order.
@@ -204,6 +230,7 @@ impl Phase {
         Phase::StepKernel,
         Phase::CkptHandoff,
         Phase::PrefetchStall,
+        Phase::RecoveryStall,
     ];
 
     /// Canonical snake_case key.
@@ -217,6 +244,7 @@ impl Phase {
             Phase::StepKernel => "step_kernel",
             Phase::CkptHandoff => "ckpt_handoff",
             Phase::PrefetchStall => "prefetch_stall",
+            Phase::RecoveryStall => "recovery_stall",
         }
     }
 }

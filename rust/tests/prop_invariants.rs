@@ -556,3 +556,116 @@ fn prop_variable_rho_masks_and_shard_plans() {
         }
     }
 }
+
+/// Membership transitions never corrupt the rank space or the shard
+/// tiling. The model mirrors the coordinator's compaction exactly:
+/// joiners are admitted at the tail (ids handed out monotonically),
+/// leavers/evictees are removed in place so later ranks shift down.
+/// Across arbitrary join/leave/evict sequences the survivor list must
+/// stay duplicate-free, gapless (rank = index), and admission-ordered —
+/// and re-partitioning the lane set over any survivor count must yield
+/// shards that tile it exactly: sorted, disjoint, complete.
+#[test]
+fn prop_membership_transitions_preserve_ranks_and_shard_tiling() {
+    for case in 0..60u64 {
+        let mut rng = Prng::seed_from_u64(0xC0FF_EE ^ case);
+        let mut members: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..1 + rng.range(0, 4) {
+            members.push(next_id);
+            next_id += 1;
+        }
+        // The lane space being sharded, with duplicates and shuffling —
+        // partition() must canonicalize before cutting.
+        let mut lanes: Vec<u32> = (0..1 + rng.range(0, 4000) as u32).collect();
+        for _ in 0..rng.range(0, 50) {
+            let i = rng.range(0, lanes.len());
+            let dup = lanes[i];
+            lanes.push(dup);
+        }
+        for i in (1..lanes.len()).rev() {
+            let j = rng.range(0, i + 1);
+            lanes.swap(i, j);
+        }
+        let granularity = 1usize << rng.range(0, 8);
+
+        for transition in 0..1 + rng.range(0, 20) {
+            match rng.range(0, 3) {
+                0 => {
+                    // Join: admitted at the next round boundary, tail rank.
+                    members.push(next_id);
+                    next_id += 1;
+                }
+                _ if members.len() > 1 => {
+                    // Leave or evict: removed in place (rank compaction).
+                    let gone = rng.range(0, members.len());
+                    members.remove(gone);
+                }
+                _ => {}
+            }
+            // Ranks: unique, gapless by construction (rank = index), and
+            // admission-ordered — monotone ids prove order stability.
+            let mut ids = members.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(
+                ids.len(),
+                members.len(),
+                "case {case} transition {transition}: duplicate members"
+            );
+            assert!(
+                members.windows(2).all(|w| w[0] < w[1]),
+                "case {case} transition {transition}: compaction broke admission order"
+            );
+
+            // Shard tiling at the new survivor count.
+            let plan = ShardPlan::partition(lanes.clone(), members.len(), granularity);
+            assert_eq!(plan.workers(), members.len(), "case {case}");
+            let mut covered: Vec<u32> = Vec::new();
+            for w in 0..plan.workers() {
+                let shard = plan.lanes_of(w);
+                assert!(
+                    shard.windows(2).all(|x| x[0] < x[1]),
+                    "case {case} transition {transition}: shard {w} unsorted/duplicated"
+                );
+                assert_eq!(shard.len(), plan.shard_len(w), "case {case}");
+                covered.extend_from_slice(shard);
+            }
+            let mut want = lanes.clone();
+            want.sort_unstable();
+            want.dedup();
+            assert_eq!(
+                covered, want,
+                "case {case} transition {transition}: shards do not tile the lane space"
+            );
+            assert_eq!(plan.total_lanes(), want.len(), "case {case}");
+        }
+    }
+}
+
+/// The supervised-respawn backoff schedule is a pure function of the
+/// attempt index: deterministic, monotone non-decreasing, and capped at
+/// 32× the base so a crash-looping worker cannot push retries out to
+/// infinity.
+#[test]
+fn prop_respawn_backoff_deterministic_monotone_capped() {
+    use std::time::Duration;
+    for case in 0..40u64 {
+        let mut rng = Prng::seed_from_u64(case);
+        let base = 1 + rng.range(0, 2000) as u64;
+        let fault = frugal::engine::FaultCfg { respawn_backoff_ms: base, ..Default::default() };
+        let mut prev = Duration::ZERO;
+        for attempt in 0..12u32 {
+            let d = fault.respawn_delay(attempt);
+            assert_eq!(d, fault.respawn_delay(attempt), "case {case}: nondeterministic");
+            assert!(d >= prev, "case {case} attempt {attempt}: backoff shrank");
+            assert!(
+                d <= Duration::from_millis(base.saturating_mul(32)),
+                "case {case} attempt {attempt}: cap exceeded ({d:?})"
+            );
+            prev = d;
+        }
+        // Past the cap the schedule is flat.
+        assert_eq!(fault.respawn_delay(5), fault.respawn_delay(11), "case {case}");
+    }
+}

@@ -27,9 +27,11 @@ use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::coordinator::LrSchedule;
 use frugal::engine::transport::{default_addr, worker_connect_retry, FrameIo, Listener};
 use frugal::engine::{
-    spawn_ref_workers, CompressCfg, CompressMode, EncodedGrad, Engine, EngineCfg, Frame,
-    GradSource, ParallelCfg, RefLm, RefLmCfg, Sources, TransportCfg, TransportKind, WorkerOpts,
+    spawn_ref_workers, CompressCfg, CompressMode, EncodedGrad, Engine, EngineCfg, FaultCfg,
+    Frame, GradSource, ParallelCfg, RefLm, RefLmCfg, Sources, TransportCfg, TransportKind,
+    WorkerOpts,
 };
+use frugal::telemetry::Counter;
 use frugal::optim::adamw::AdamCfg;
 use frugal::optim::frugal::BlockPolicy;
 
@@ -49,6 +51,15 @@ fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
 }
 
 fn engine(workers: usize, mode: CompressMode, transport: TransportCfg) -> Engine {
+    engine_with_fault(workers, mode, transport, FaultCfg::default())
+}
+
+fn engine_with_fault(
+    workers: usize,
+    mode: CompressMode,
+    transport: TransportCfg,
+    fault: FaultCfg,
+) -> Engine {
     let m = RefLm::new(RefLmCfg::default());
     // Socket runs keep a single local source (evaluation only); the
     // in-memory transport needs one per worker.
@@ -67,6 +78,7 @@ fn engine(workers: usize, mode: CompressMode, transport: TransportCfg) -> Engine
             workers,
             grad_accum: GRAD_ACCUM,
             compress: CompressCfg { mode, block: 64 },
+            fault,
             ..Default::default()
         },
         schedule: LrSchedule::ConstantWarmup { warmup: 2 },
@@ -94,6 +106,15 @@ fn socket_engine(
     mode: CompressMode,
     opts: Vec<WorkerOpts>,
 ) -> (Engine, WorkerHandles) {
+    socket_engine_with_fault(workers, mode, opts, FaultCfg::default())
+}
+
+fn socket_engine_with_fault(
+    workers: usize,
+    mode: CompressMode,
+    opts: Vec<WorkerOpts>,
+    fault: FaultCfg,
+) -> (Engine, WorkerHandles) {
     let addr = default_addr(TransportKind::Uds);
     let handles = spawn_ref_workers(TransportKind::Uds, addr.clone(), opts.len(), batch_fn, opts);
     let tcfg = TransportCfg {
@@ -102,7 +123,7 @@ fn socket_engine(
         spawn: false,
         ..Default::default()
     };
-    (engine(workers, mode, tcfg), handles)
+    (engine_with_fault(workers, mode, tcfg, fault), handles)
 }
 
 fn trace(e: &mut Engine, steps: u64) -> Vec<u32> {
@@ -272,4 +293,101 @@ fn leave_at_round_boundary_resharding_preserves_the_trace() {
     );
     drop(sock);
     finish(handles);
+}
+
+/// Tentpole acceptance: a scripted mid-round crash with recovery armed
+/// (`[parallel.fault] max_round_retries > 0`) rewinds to the round
+/// boundary, evicts the dead worker, re-shards over the survivors, and
+/// deterministically replays the round — the full loss trace AND the
+/// deterministic telemetry plane are bitwise-identical to a continuous
+/// run at the surviving worker count, and the process exits nothing.
+#[test]
+fn mid_round_crash_recovers_bitwise_to_continuous_survivor_run() {
+    let mut cont = engine(2, CompressMode::Split, TransportCfg::default());
+    let cont_trace = trace(&mut cont, 12);
+
+    let mut opts = vec![WorkerOpts::default(); 3];
+    // 1-based step 6 is the second step of round 2 at T = 4: mid-round.
+    opts[1].fault_step = Some(6);
+    // A survivor also stalls briefly before the crash — injected delay
+    // must never perturb the math, only the wall clock.
+    opts[0].stall = Some((3, 20));
+    let fault = FaultCfg { max_round_retries: 2, ..Default::default() };
+    let (mut sock, handles) = socket_engine_with_fault(3, CompressMode::Split, opts, fault);
+    let sock_trace = trace(&mut sock, 12);
+
+    assert_eq!(
+        cont_trace, sock_trace,
+        "recovered trace diverged from the continuous 2-worker run"
+    );
+    assert_eq!(
+        cont.telemetry().deterministic_words(),
+        sock.telemetry().deterministic_words(),
+        "deterministic plane diverged across a mid-round recovery"
+    );
+    assert_eq!(sock.cfg().parallel.workers, 2, "eviction did not shrink the fleet");
+    assert_eq!(sock.telemetry().get(Counter::RoundsRetried), 1, "exactly one retry expected");
+    assert_eq!(sock.telemetry().get(Counter::WorkersEvicted), 1, "exactly one eviction expected");
+    drop(sock);
+    // The crashed worker exits by script; survivors exit by protocol.
+    for h in handles {
+        let _ = h.join().expect("worker thread panicked");
+    }
+}
+
+/// A corrupted wire frame (byte flipped after the CRC trailer was
+/// computed) is rejected by the frame CRC-32, never reaches gradient
+/// math, and routes through the same eviction + replay path a crash
+/// does — the trace matches a continuous run without that worker.
+#[test]
+fn corrupt_frame_is_rejected_by_crc_and_routed_through_recovery() {
+    let mut cont = engine(1, CompressMode::Split, TransportCfg::default());
+    let cont_trace = trace(&mut cont, 12);
+
+    let mut opts = vec![WorkerOpts::default(); 2];
+    opts[0].corrupt_step = Some(6);
+    let fault = FaultCfg { max_round_retries: 1, ..Default::default() };
+    let (mut sock, handles) = socket_engine_with_fault(2, CompressMode::Split, opts, fault);
+    let sock_trace = trace(&mut sock, 12);
+
+    assert_eq!(
+        cont_trace, sock_trace,
+        "corruption leaked into the math (trace diverged from the 1-worker run)"
+    );
+    assert_eq!(
+        cont.telemetry().deterministic_words(),
+        sock.telemetry().deterministic_words(),
+        "deterministic plane diverged across a CRC rejection"
+    );
+    assert!(
+        sock.telemetry().get(Counter::FramesRejected) >= 1,
+        "the CRC rejection was not counted"
+    );
+    assert_eq!(sock.telemetry().get(Counter::WorkersEvicted), 1);
+    drop(sock);
+    for h in handles {
+        let _ = h.join().expect("worker thread panicked");
+    }
+}
+
+/// Dropping below `min_workers` is not worth limping through: the run
+/// halts at the round boundary with a targeted error (the orchestrator
+/// layers the emergency snapshot on top of this message).
+#[test]
+fn below_min_workers_halts_with_a_targeted_error() {
+    let mut opts = vec![WorkerOpts::default(); 2];
+    opts[1].fault_step = Some(6);
+    let fault = FaultCfg { max_round_retries: 2, min_workers: 2, ..Default::default() };
+    let (mut e, handles) = socket_engine_with_fault(2, CompressMode::Split, opts, fault);
+    for _ in 0..5 {
+        e.step(&batch_fn).unwrap();
+    }
+    let err = e.step(&batch_fn).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("below min_workers"), "untargeted halt: {msg}");
+    assert!(msg.contains("boundary"), "halt must name the rewind boundary: {msg}");
+    drop(e);
+    for h in handles {
+        let _ = h.join().expect("worker thread panicked");
+    }
 }
