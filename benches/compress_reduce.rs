@@ -7,8 +7,10 @@
 //! records to `BENCH_compress_reduce.json` (the CI `bench-smoke` job
 //! uploads all `BENCH_*.json` files as perf-trajectory artifacts).
 //!
-//! Asserts the acceptance bounds for the split codec: ≥ 3× reduction in
-//! reduce-tree bytes/step and a final-loss gap ≤ 2% vs uncompressed.
+//! Asserts the acceptance bounds for the split codec (≥ 3× reduction in
+//! reduce-tree bytes/step and a final-loss gap ≤ 2% vs uncompressed)
+//! and for the adaptive codec (≥ 2× further reduction in bytes/step vs
+//! split, still at a ≤ 2% loss gap vs uncompressed).
 //!
 //! Env knobs: FRUGAL_BENCH_STEPS (default 30).
 
@@ -95,6 +97,7 @@ fn main() -> frugal::Result<()> {
     let mut rows = Vec::new();
     let mut records = Vec::new();
     let mut baseline: Option<(f64, f64)> = None; // (bytes/step, tail loss)
+    let mut split_bytes: Option<f64> = None;
     for mode in CompressMode::ALL {
         let mut engine = build_engine(&model, mode);
         let mut losses: Vec<f32> = Vec::new();
@@ -147,6 +150,26 @@ fn main() -> frugal::Result<()> {
                 gap <= 0.02,
                 "split codec final-loss gap {:.3}% exceeds 2% \
                  (uncompressed {base_tail:.4}, split {tail:.4})",
+                100.0 * gap
+            );
+            split_bytes = Some(bytes_per_step);
+        }
+        if matches!(mode, CompressMode::Adaptive { .. }) {
+            // The codec-frontier bound: adaptive must beat the split
+            // baseline by ≥ 2x on the wire while holding the same loss
+            // budget. (Wire bytes here are the metered counters, which
+            // the transport regression test pins to the serialized
+            // frame payload bytes.)
+            let split = split_bytes.expect("split runs before adaptive in CompressMode::ALL");
+            assert!(
+                split >= 2.0 * bytes_per_step,
+                "adaptive codec only reduced bytes/step {split:.0} -> \
+                 {bytes_per_step:.0} (< 2x vs split)"
+            );
+            assert!(
+                gap <= 0.02,
+                "adaptive codec final-loss gap {:.3}% exceeds 2% \
+                 (uncompressed {base_tail:.4}, adaptive {tail:.4})",
                 100.0 * gap
             );
         }

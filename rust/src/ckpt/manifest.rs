@@ -75,6 +75,11 @@ pub struct CkptManifest {
     /// (informational).
     pub wire_mode: String,
     pub wire_block: usize,
+    /// Adaptive-codec choice history (one `e{epoch}={free}+{full}` entry
+    /// per re-selection, comma-joined) — fingerprinted like the ρ
+    /// schedule so resume ≡ continuous holds across codec re-selection
+    /// boundaries. Empty for static modes and pre-adaptive manifests.
+    pub codec_history: String,
     /// Subspace-selection rule fingerprint (ρ-schedule/policy/roles) —
     /// restore rejects a mismatch, which would otherwise silently
     /// diverge.
@@ -124,6 +129,7 @@ impl CkptManifest {
         let _ = writeln!(out, "  \"codec_block\": {},", self.codec_block);
         let _ = writeln!(out, "  \"wire_mode\": \"{}\",", escape(&self.wire_mode));
         let _ = writeln!(out, "  \"wire_block\": {},", self.wire_block);
+        let _ = writeln!(out, "  \"codec_history\": \"{}\",", escape(&self.codec_history));
         let _ = writeln!(out, "  \"subspace\": \"{}\",", escape(&self.subspace));
         let _ = writeln!(out, "  \"rho\": {},", self.rho);
         let _ = writeln!(out, "  \"layout\": \"{}\",", escape(&self.layout));
@@ -206,6 +212,11 @@ impl CkptManifest {
             codec_block: v.field("codec_block")?.as_usize()?,
             wire_mode: v.field("wire_mode")?.as_str()?.to_string(),
             wire_block: v.field("wire_block")?.as_usize()?,
+            // Absent in pre-adaptive v2 manifests: no controller ran.
+            codec_history: match v.get("codec_history") {
+                Some(j) => j.as_str()?.to_string(),
+                None => String::new(),
+            },
             subspace: v.field("subspace")?.as_str()?.to_string(),
             // rho/layout are absent in pre-variable-ρ v2 manifests:
             // default to "unrecorded" (0.0 / empty fingerprint — the
@@ -271,6 +282,7 @@ mod tests {
             codec_block: 256,
             wire_mode: "split".into(),
             wire_block: 256,
+            codec_history: "e1=topk:5+q4,e7=sign-ef+q4".into(),
             subspace: "rho=0.25 policy=Blockwise(Random) full_roles=[Embed, Norm, Output] \
                        free_roles=[]"
                 .into(),
@@ -361,6 +373,21 @@ mod tests {
             .collect::<Vec<_>>()
             .join("\n");
         assert!(CkptManifest::parse(&legacy).unwrap().batch_schedule.is_empty());
+    }
+
+    #[test]
+    fn codec_history_roundtrips_and_defaults_empty_for_legacy_manifests() {
+        let back = CkptManifest::parse(&sample().to_json()).unwrap();
+        assert_eq!(back.codec_history, "e1=topk:5+q4,e7=sign-ef+q4");
+        // A pre-adaptive manifest (no codec_history line) parses as "no
+        // controller ran".
+        let legacy: String = sample()
+            .to_json()
+            .lines()
+            .filter(|l| !l.contains("\"codec_history\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert!(CkptManifest::parse(&legacy).unwrap().codec_history.is_empty());
     }
 
     #[test]

@@ -182,6 +182,15 @@ pub struct TrainState {
     /// mismatch (resume is valid, bit-identity holds per fixed codec).
     pub wire_mode: String,
     pub wire_block: usize,
+    /// Adaptive-codec choice history (`AdaptiveCodecController::history_string`),
+    /// empty for static modes and legacy snapshots. Fingerprinted into
+    /// the manifest like the ρ schedule so resume ≡ continuous holds
+    /// across codec re-selection boundaries.
+    pub codec_history: String,
+    /// Adaptive-controller observation marks (`[last_free, last_full,
+    /// last_leaves]` counter totals at its last observation), empty for
+    /// static modes and legacy snapshots.
+    pub codec_marks: Vec<u64>,
     /// Fingerprint of the subspace-selection hyper-parameters (the
     /// ρ-schedule, policy, role routing). These are as much "part of
     /// the math" as `update_freq`: a resume under a different selection
@@ -239,6 +248,8 @@ impl TrainState {
             padded_size: 0,
             wire_mode: String::new(),
             wire_block: 0,
+            codec_history: String::new(),
+            codec_marks: Vec::new(),
             subspace: String::new(),
             rho: 0.0,
             layout: String::new(),
@@ -317,6 +328,11 @@ impl TrainState {
             self.m.len(),
             self.v.len()
         );
+        anyhow::ensure!(
+            self.codec_marks.is_empty() || self.codec_marks.len() == 3,
+            "adaptive codec marks hold {} words, expected 0 or 3",
+            self.codec_marks.len()
+        );
         if !self.residuals.is_empty() {
             anyhow::ensure!(
                 self.residuals.len() == self.grad_accum,
@@ -331,9 +347,14 @@ impl TrainState {
             );
         }
         if !self.telemetry.is_empty() {
+            // `<=` — not `==` — so snapshots from before the plane grew
+            // still validate: `load_deterministic` zero-fills the new
+            // tail counters.
             anyhow::ensure!(
-                self.telemetry.len() == crate::telemetry::DET_COUNTERS,
-                "telemetry plane holds {} words, expected {}",
+                self.telemetry.len() <= crate::telemetry::DET_COUNTERS
+                    && self.telemetry.len()
+                        > crate::telemetry::Counter::WireDenseBytes as usize,
+                "telemetry plane holds {} words, expected at most {}",
                 self.telemetry.len(),
                 crate::telemetry::DET_COUNTERS
             );
@@ -507,13 +528,19 @@ pub fn save(dir: &Path, state: &TrainState, opts: SaveOptions) -> Result<SaveRep
     // loaders accept both widths, so old snapshots stay readable.
     let mut counters = vec![state.wire_bytes, state.wire_dense_bytes];
     counters.extend_from_slice(&state.telemetry);
-    let meta_sections: [(&str, SectionSrc<'_>); 5] = [
+    let mut meta_sections: Vec<(&str, SectionSrc<'_>)> = vec![
         ("flat", SectionSrc::F32(&state.flat)),
         ("mask", SectionSrc::U32(&state.full_lanes)),
         ("rng", SectionSrc::U64(&rng)),
         ("builder", SectionSrc::U64(&builder)),
         ("counters", SectionSrc::U64(&counters)),
     ];
+    // Adaptive-controller observation marks — written only when the run
+    // carries a controller, so static-mode snapshots keep the legacy
+    // section set byte-for-byte.
+    if !state.codec_marks.is_empty() {
+        meta_sections.push(("codec", SectionSrc::U64(&state.codec_marks)));
+    }
     let (meta_bytes, meta_crc) =
         format::write_sections_atomic(&dir.join("meta.bin"), &meta_sections)?;
     total += meta_bytes;
@@ -535,6 +562,7 @@ pub fn save(dir: &Path, state: &TrainState, opts: SaveOptions) -> Result<SaveRep
         codec_block: block,
         wire_mode: state.wire_mode.clone(),
         wire_block: state.wire_block,
+        codec_history: state.codec_history.clone(),
         subspace: state.subspace.clone(),
         rho: state.rho,
         layout: state.layout.clone(),
@@ -627,15 +655,24 @@ pub fn load(dir: &Path) -> Result<TrainState> {
                     builder.len());
     let counters = meta.take("counters")?;
     let counters = counters.as_u64()?;
-    // Two accepted widths: legacy (wire words only) and current (wire
-    // words + the deterministic telemetry plane).
+    // Accepted widths: legacy (wire words only) and wire words + a
+    // deterministic plane no wider than today's — the plane only ever
+    // grows, and `load_deterministic` zero-fills counters a snapshot
+    // predates.
     let full_width = 2 + crate::telemetry::DET_COUNTERS;
     anyhow::ensure!(
-        counters.len() == 2 || counters.len() == full_width,
-        "counters section holds {} words, expected 2 (legacy) or {full_width}",
+        counters.len() == 2 || (counters.len() > 2 && counters.len() <= full_width),
+        "counters section holds {} words, expected 2 (legacy) up to {full_width}",
         counters.len()
     );
     let telemetry = counters.get(2..).unwrap_or_default().to_vec();
+    // Optional adaptive-controller marks (absent in static-mode and
+    // legacy snapshots).
+    let codec_marks = if meta.get("codec").is_some() {
+        meta.take("codec")?.as_u64()?.to_vec()
+    } else {
+        Vec::new()
+    };
 
     // Shards concatenate back into lane order; their ranges must tile
     // 0..K exactly. A barrier-elided snapshot has no shards: the moments
@@ -738,6 +775,8 @@ pub fn load(dir: &Path) -> Result<TrainState> {
         padded_size: man.padded_size,
         wire_mode: man.wire_mode.clone(),
         wire_block: man.wire_block,
+        codec_history: man.codec_history.clone(),
+        codec_marks,
         subspace: man.subspace.clone(),
         rho: man.rho,
         layout: man.layout.clone(),
@@ -1058,6 +1097,16 @@ mod tests {
             padded_size,
             wire_mode: "split".into(),
             wire_block: 64,
+            codec_history: if seed % 3 == 0 {
+                format!("e1=topk:5+q4,e{}=sign-ef+q8", 2 + seed % 5)
+            } else {
+                String::new()
+            },
+            codec_marks: if seed % 3 == 0 {
+                vec![rng.next_u64() >> 30, rng.next_u64() >> 30, rng.next_u64() >> 40]
+            } else {
+                Vec::new()
+            },
             subspace: format!("rho=0.25 policy=test-{}", seed % 3),
             rho: 0.25,
             layout: format!("test-layout-{:04x}-f{flat_size}-P{padded_size}", seed * 77),
@@ -1132,6 +1181,8 @@ mod tests {
             assert_eq!(back.telemetry, st.telemetry, "seed {seed}");
             assert_eq!(back.rho.to_bits(), st.rho.to_bits(), "seed {seed}");
             assert_eq!(back.layout, st.layout, "seed {seed}");
+            assert_eq!(back.codec_history, st.codec_history, "seed {seed}");
+            assert_eq!(back.codec_marks, st.codec_marks, "seed {seed}");
             std::fs::remove_dir_all(&dir).ok();
         }
     }

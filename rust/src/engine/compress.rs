@@ -63,51 +63,419 @@ pub enum CompressMode {
     /// [`CompressMode::Q8`] on state-full lanes — the FRUGAL-shaped
     /// codec.
     Split,
+    /// Top-k magnitude sparsification (+ error feedback) on the
+    /// state-free lanes; state-full lanes stay fp32. `k_permille` is the
+    /// kept-lane density in thousandths (`topk:0.01` keeps 1%).
+    TopK { k_permille: u16 },
+    /// Blockwise 4-bit absmax on the state-full lanes; state-free lanes
+    /// stay fp32.
+    Q4,
+    /// Per-lane-group adaptive selection: each mask epoch the
+    /// [`AdaptiveCodecController`] picks the cheapest codec per group
+    /// whose measured residual-share signal meets `budget_permille`
+    /// (loss-gap budget in thousandths; `adaptive:0.02` = 2%).
+    Adaptive { budget_permille: u16 },
+}
+
+/// Parse a `NAME:FRACTION` suffix into permille (`0.01` → 10).
+fn parse_permille(spec: &str, what: &str) -> Result<u16> {
+    let f: f64 = spec
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad {what} fraction '{spec}' (expected e.g. 0.01)"))?;
+    anyhow::ensure!(
+        f > 0.0 && f <= 1.0,
+        "{what} fraction {f} out of range (0, 1]"
+    );
+    let pm = (f * 1000.0).round() as u16;
+    anyhow::ensure!(pm >= 1, "{what} fraction {f} rounds below 0.001");
+    Ok(pm)
 }
 
 impl CompressMode {
-    /// All modes, in CLI/config spelling order.
-    pub const ALL: [CompressMode; 4] =
-        [CompressMode::None, CompressMode::SignEf, CompressMode::Q8, CompressMode::Split];
+    /// All modes, in CLI/config spelling order (parameterized modes at
+    /// their defaults).
+    pub const ALL: [CompressMode; 7] = [
+        CompressMode::None,
+        CompressMode::SignEf,
+        CompressMode::Q8,
+        CompressMode::Split,
+        CompressMode::TopK { k_permille: 10 },
+        CompressMode::Q4,
+        CompressMode::Adaptive { budget_permille: 20 },
+    ];
 
-    /// Parse the CLI/config spelling (`none | sign-ef | q8 | split`).
+    /// Parse the CLI/config spelling
+    /// (`none | sign-ef | q8 | split | topk[:F] | q4 | adaptive[:F]`).
     pub fn parse(s: &str) -> Result<CompressMode> {
         match s {
             "none" => Ok(CompressMode::None),
             "sign-ef" => Ok(CompressMode::SignEf),
             "q8" => Ok(CompressMode::Q8),
             "split" => Ok(CompressMode::Split),
+            "q4" => Ok(CompressMode::Q4),
+            "topk" => Ok(CompressMode::TopK { k_permille: 10 }),
+            "adaptive" => Ok(CompressMode::Adaptive { budget_permille: 20 }),
             other => {
-                anyhow::bail!("unknown compress mode '{other}' (expected none|sign-ef|q8|split)")
+                if let Some(f) = other.strip_prefix("topk:") {
+                    return Ok(CompressMode::TopK { k_permille: parse_permille(f, "topk")? });
+                }
+                if let Some(f) = other.strip_prefix("adaptive:") {
+                    return Ok(CompressMode::Adaptive {
+                        budget_permille: parse_permille(f, "adaptive budget")?,
+                    });
+                }
+                anyhow::bail!(
+                    "unknown compress mode '{other}' \
+                     (expected none|sign-ef|q8|split|topk[:F]|q4|adaptive[:F])"
+                )
             }
         }
     }
 
-    /// The CLI/config spelling.
+    /// The mode family's CLI/config spelling (parameters elided — use
+    /// the `Display` impl for the canonical parameterized form).
     pub fn as_str(&self) -> &'static str {
         match self {
             CompressMode::None => "none",
             CompressMode::SignEf => "sign-ef",
             CompressMode::Q8 => "q8",
             CompressMode::Split => "split",
+            CompressMode::TopK { .. } => "topk",
+            CompressMode::Q4 => "q4",
+            CompressMode::Adaptive { .. } => "adaptive",
         }
     }
 
-    /// True when the state-full lane group is quantized (8-bit blocks).
+    /// True when the state-full lane group is quantized.
     pub fn compresses_full(&self) -> bool {
-        matches!(self, CompressMode::Q8 | CompressMode::Split)
+        matches!(
+            self,
+            CompressMode::Q8 | CompressMode::Split | CompressMode::Q4 | CompressMode::Adaptive { .. }
+        )
     }
 
-    /// True when the state-free lane group is sign-compressed (and
+    /// True when the state-free lane group is compressed lossily (and
     /// therefore carries an EF residual).
     pub fn compresses_free(&self) -> bool {
-        matches!(self, CompressMode::SignEf | CompressMode::Split)
+        matches!(
+            self,
+            CompressMode::SignEf
+                | CompressMode::Split
+                | CompressMode::TopK { .. }
+                | CompressMode::Adaptive { .. }
+        )
     }
 }
 
 impl std::fmt::Display for CompressMode {
+    /// Canonical spelling, round-tripping through [`CompressMode::parse`]
+    /// (parameterized modes print their fraction: `topk:0.01`).
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.as_str())
+        match self {
+            CompressMode::TopK { k_permille } => {
+                write!(f, "topk:{}", *k_permille as f64 / 1000.0)
+            }
+            CompressMode::Adaptive { budget_permille } => {
+                write!(f, "adaptive:{}", *budget_permille as f64 / 1000.0)
+            }
+            other => f.write_str(other.as_str()),
+        }
+    }
+}
+
+/// One lane group's codec — the unit the adaptive controller selects.
+/// [`CompressMode`] names a (full, free) pair of these; see
+/// [`CodecAssignment::from_mode`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GroupCodec {
+    /// Raw fp32 (exact).
+    #[default]
+    F32,
+    /// 1-bit sign + per-block scale, EF residual.
+    SignEf,
+    /// Top-k magnitude sparsification, EF residual.
+    TopK { k_permille: u16 },
+    /// Blockwise 8-bit absmax.
+    Q8,
+    /// Blockwise 4-bit absmax (two lanes per byte).
+    Q4,
+}
+
+impl GroupCodec {
+    /// Canonical spec string (`f32 | sign-ef | topk:K | q8 | q4`, with K
+    /// in permille) — the unit of the controller's history fingerprint.
+    pub fn spec(&self) -> String {
+        match self {
+            GroupCodec::F32 => "f32".to_string(),
+            GroupCodec::SignEf => "sign-ef".to_string(),
+            GroupCodec::TopK { k_permille } => format!("topk:{k_permille}"),
+            GroupCodec::Q8 => "q8".to_string(),
+            GroupCodec::Q4 => "q4".to_string(),
+        }
+    }
+
+    /// Inverse of [`GroupCodec::spec`].
+    pub fn parse_spec(s: &str) -> Result<GroupCodec> {
+        match s {
+            "f32" => Ok(GroupCodec::F32),
+            "sign-ef" => Ok(GroupCodec::SignEf),
+            "q8" => Ok(GroupCodec::Q8),
+            "q4" => Ok(GroupCodec::Q4),
+            other => {
+                if let Some(k) = other.strip_prefix("topk:") {
+                    let k_permille: u16 = k
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad topk permille '{k}'"))?;
+                    return Ok(GroupCodec::TopK { k_permille });
+                }
+                anyhow::bail!("unknown group codec spec '{other}'")
+            }
+        }
+    }
+
+    /// True when this codec keeps an EF residual (lossy enough that the
+    /// untransmitted remainder must integrate across steps).
+    pub fn uses_residual(&self) -> bool {
+        matches!(self, GroupCodec::SignEf | GroupCodec::TopK { .. })
+    }
+}
+
+/// The round's per-lane-group codec pair. Static modes derive it once
+/// from the mode; `adaptive` re-derives it from the controller at every
+/// mask epoch (and ships it to socket workers in `RoundBegin`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CodecAssignment {
+    /// State-full lane group (Adam subspace).
+    pub full: GroupCodec,
+    /// State-free lane group (signSGD complement).
+    pub free: GroupCodec,
+}
+
+impl CodecAssignment {
+    /// The static codec pair a [`CompressMode`] names. `adaptive` maps
+    /// to its initial (cheapest) rung; the controller takes over from
+    /// there.
+    pub fn from_mode(mode: CompressMode) -> CodecAssignment {
+        match mode {
+            CompressMode::None => CodecAssignment::default(),
+            CompressMode::SignEf => {
+                CodecAssignment { full: GroupCodec::F32, free: GroupCodec::SignEf }
+            }
+            CompressMode::Q8 => CodecAssignment { full: GroupCodec::Q8, free: GroupCodec::F32 },
+            CompressMode::Split => {
+                CodecAssignment { full: GroupCodec::Q8, free: GroupCodec::SignEf }
+            }
+            CompressMode::TopK { k_permille } => {
+                CodecAssignment { full: GroupCodec::F32, free: GroupCodec::TopK { k_permille } }
+            }
+            CompressMode::Q4 => CodecAssignment { full: GroupCodec::Q4, free: GroupCodec::F32 },
+            CompressMode::Adaptive { .. } => CodecAssignment {
+                full: GroupCodec::Q4,
+                free: GroupCodec::TopK { k_permille: ADAPTIVE_TOPK_PERMILLE },
+            },
+        }
+    }
+}
+
+/// The state-free top-k density the adaptive controller starts from
+/// (its cheapest rung), in permille.
+pub const ADAPTIVE_TOPK_PERMILLE: u16 = 5;
+
+/// One controller decision, recorded at the mask epoch it took effect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodecChoice {
+    /// Mask epoch (1-based, like the engine's round counter).
+    pub epoch: u64,
+    /// State-free group codec chosen for this epoch onward.
+    pub free: GroupCodec,
+    /// State-full group codec chosen for this epoch onward.
+    pub full: GroupCodec,
+}
+
+/// Cheapest-rung ladders the controller climbs, one per lane group.
+/// Order is cheapest → richest; the controller starts at rung 0 and
+/// ratchets up (never down, so the choice sequence is monotone and its
+/// fingerprint short) at most one rung per mask epoch and per group.
+const FREE_LADDER: [GroupCodec; 3] = [
+    GroupCodec::TopK { k_permille: ADAPTIVE_TOPK_PERMILLE },
+    GroupCodec::SignEf,
+    GroupCodec::F32,
+];
+const FULL_LADDER: [GroupCodec; 3] = [GroupCodec::Q4, GroupCodec::Q8, GroupCodec::F32];
+
+/// Per-rung quality gates at the reference budget (20‰ = 2% loss gap):
+/// the epoch-mean per-leaf residual share (millionths, see
+/// [`LeafSignal`]) a rung may report and still be kept. EF codecs run
+/// close to 10⁶ by construction (the residual carries most of the
+/// energy every step and is replayed next step), so their gates sit
+/// near the top of the scale; quantizer error is one-shot, so its gates
+/// are small. The last rung of each ladder is exact and always OK.
+const FREE_OK_MICRO: [u64; 3] = [995_000, 999_500, u64::MAX];
+const FULL_OK_MICRO: [u64; 3] = [100_000, 5_000, u64::MAX];
+
+/// Per-lane-group codec selector for `--compress adaptive`. Each mask
+/// epoch it re-reads the two deterministic residual-share counters
+/// (accumulated leaf [`LeafSignal`]s), takes the epoch mean per leaf,
+/// and keeps the cheapest ladder rung whose gate (scaled to the
+/// configured loss-gap budget) passes — climbing at most one rung per
+/// epoch per group. Every input is a deterministic-plane total, so the
+/// choice sequence is bit-identical at workers 1 ≡ N, any arrival
+/// order, and any transport; the sequence is fingerprinted into
+/// checkpoint manifests (like the ρ schedule) so resume ≡ continuous
+/// holds across a re-selection boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AdaptiveCodecController {
+    /// Loss-gap budget in permille (the `adaptive:F` knob; 20 = 2%).
+    budget_permille: u16,
+    free_rung: usize,
+    full_rung: usize,
+    history: Vec<CodecChoice>,
+    /// Counter totals at the last observed epoch boundary (free, full,
+    /// leaves) — deltas against these give the per-epoch means.
+    last_free: u64,
+    last_full: u64,
+    last_leaves: u64,
+}
+
+impl AdaptiveCodecController {
+    pub fn new(budget_permille: u16) -> AdaptiveCodecController {
+        AdaptiveCodecController {
+            budget_permille,
+            free_rung: 0,
+            full_rung: 0,
+            history: vec![CodecChoice { epoch: 1, free: FREE_LADDER[0], full: FULL_LADDER[0] }],
+            last_free: 0,
+            last_full: 0,
+            last_leaves: 0,
+        }
+    }
+
+    /// The codec pair rounds built from now on should use.
+    pub fn assignment(&self) -> CodecAssignment {
+        CodecAssignment { full: FULL_LADDER[self.full_rung], free: FREE_LADDER[self.free_rung] }
+    }
+
+    /// A rung gate scaled from the reference 20‰ budget to the
+    /// configured one: headroom below 10⁶ shrinks for looser budgets
+    /// and grows for tighter ones (integer math only).
+    fn allowed(&self, gate: u64) -> u64 {
+        let headroom = 1_000_000u64.saturating_sub(gate);
+        1_000_000u64.saturating_sub(headroom * 20 / u64::from(self.budget_permille.max(1)))
+    }
+
+    /// Feed the epoch boundary at `epoch` (the round about to begin)
+    /// with the current deterministic-plane totals of the two
+    /// residual-share counters and the leaf count. Returns true when the
+    /// assignment changed (the caller rebuilds its [`CompressPlan`]).
+    pub fn observe_epoch(
+        &mut self,
+        epoch: u64,
+        free_total: u64,
+        full_total: u64,
+        leaves_total: u64,
+    ) -> bool {
+        let leaves = leaves_total.saturating_sub(self.last_leaves);
+        if leaves == 0 {
+            return false;
+        }
+        let avg_free = free_total.saturating_sub(self.last_free) / leaves;
+        let avg_full = full_total.saturating_sub(self.last_full) / leaves;
+        self.last_free = free_total;
+        self.last_full = full_total;
+        self.last_leaves = leaves_total;
+        let mut changed = false;
+        if avg_free > self.allowed(FREE_OK_MICRO[self.free_rung])
+            && self.free_rung + 1 < FREE_LADDER.len()
+        {
+            self.free_rung += 1;
+            changed = true;
+        }
+        if avg_full > self.allowed(FULL_OK_MICRO[self.full_rung])
+            && self.full_rung + 1 < FULL_LADDER.len()
+        {
+            self.full_rung += 1;
+            changed = true;
+        }
+        if changed {
+            let a = self.assignment();
+            self.history.push(CodecChoice { epoch, free: a.free, full: a.full });
+        }
+        changed
+    }
+
+    /// The decision log (first entry is the epoch-1 initial pair).
+    pub fn history(&self) -> &[CodecChoice] {
+        &self.history
+    }
+
+    /// Canonical fingerprint of the decision log —
+    /// `e{epoch}={free_spec}+{full_spec}` entries joined by commas,
+    /// e.g. `e1=topk:5+q4,e7=sign-ef+q4`. Recorded in every checkpoint
+    /// manifest; [`AdaptiveCodecController::from_history`] inverts it.
+    pub fn history_string(&self) -> String {
+        self.history
+            .iter()
+            .map(|c| format!("e{}={}+{}", c.epoch, c.free.spec(), c.full.spec()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Rebuild a controller from a checkpointed fingerprint: the rungs
+    /// resume from the last recorded choice, the log is replayed
+    /// verbatim. Counter marks are restored separately
+    /// ([`AdaptiveCodecController::restore_marks`]).
+    pub fn from_history(budget_permille: u16, s: &str) -> Result<AdaptiveCodecController> {
+        let mut history = Vec::new();
+        for entry in s.split(',').filter(|e| !e.is_empty()) {
+            let (epoch, pair) = entry
+                .strip_prefix('e')
+                .and_then(|r| r.split_once('='))
+                .ok_or_else(|| anyhow::anyhow!("bad codec-history entry '{entry}'"))?;
+            let epoch: u64 = epoch
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad codec-history epoch in '{entry}'"))?;
+            let (free, full) = pair
+                .split_once('+')
+                .ok_or_else(|| anyhow::anyhow!("bad codec-history pair in '{entry}'"))?;
+            history.push(CodecChoice {
+                epoch,
+                free: GroupCodec::parse_spec(free)?,
+                full: GroupCodec::parse_spec(full)?,
+            });
+        }
+        let last = history
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("empty codec history in checkpoint"))?;
+        let free_rung = FREE_LADDER
+            .iter()
+            .position(|c| *c == last.free)
+            .ok_or_else(|| anyhow::anyhow!("codec history names an unknown free rung"))?;
+        let full_rung = FULL_LADDER
+            .iter()
+            .position(|c| *c == last.full)
+            .ok_or_else(|| anyhow::anyhow!("codec history names an unknown full rung"))?;
+        Ok(AdaptiveCodecController {
+            budget_permille,
+            free_rung,
+            full_rung,
+            history,
+            last_free: 0,
+            last_full: 0,
+            last_leaves: 0,
+        })
+    }
+
+    /// Counter totals at the last observed epoch boundary, for the
+    /// checkpoint (order: free, full, leaves).
+    pub fn marks(&self) -> [u64; 3] {
+        [self.last_free, self.last_full, self.last_leaves]
+    }
+
+    /// Inverse of [`AdaptiveCodecController::marks`].
+    pub fn restore_marks(&mut self, m: [u64; 3]) {
+        self.last_free = m[0];
+        self.last_full = m[1];
+        self.last_leaves = m[2];
     }
 }
 
@@ -136,6 +504,14 @@ pub enum Payload {
     /// 8-bit absmax quantization: lane `i` decodes to
     /// `q[i] as f32 * scales[i / block]`.
     Q8 { len: usize, block: usize, q: Vec<i8>, scales: Vec<f32> },
+    /// Top-k sparsification: `idx` (strictly ascending lane ids) decode
+    /// to the exact fp32 `vals`; every other lane decodes to 0.
+    TopK { len: usize, idx: Vec<u32>, vals: Vec<f32> },
+    /// 4-bit absmax quantization, two lanes per byte (even lane = low
+    /// nibble). Stored nibbles are `q + 8` with `q ∈ [-7, 7]`; lane `i`
+    /// decodes to `q * scales[i / block]`. An odd-length tail leaves the
+    /// last high nibble 0.
+    Q4 { len: usize, block: usize, q: Vec<u8>, scales: Vec<f32> },
 }
 
 impl Payload {
@@ -143,7 +519,10 @@ impl Payload {
     pub fn len(&self) -> usize {
         match self {
             Payload::F32(v) => v.len(),
-            Payload::Sign { len, .. } | Payload::Q8 { len, .. } => *len,
+            Payload::Sign { len, .. }
+            | Payload::Q8 { len, .. }
+            | Payload::TopK { len, .. }
+            | Payload::Q4 { len, .. } => *len,
         }
     }
 
@@ -151,13 +530,21 @@ impl Payload {
         self.len() == 0
     }
 
-    /// Bytes this payload occupies on the wire (sign bits or quantized
-    /// values plus the fp32 block scales).
+    /// Bytes this payload occupies on the wire — **exactly** the bytes
+    /// the transport frame codec serializes for it (variant tag, scalar
+    /// headers, vector counts, element data; see the `put_payload`
+    /// layout in `transport.rs`, regression-pinned by
+    /// `wire_bytes_match_serialized_payloads` there). Sign bits ship as
+    /// whole `u64` words, so a group not a multiple of 64 lanes pays
+    /// word padding — counting packed tail bytes here (the pre-PR-10
+    /// bug) understated real framed traffic.
     pub fn wire_bytes(&self) -> usize {
         match self {
-            Payload::F32(v) => 4 * v.len(),
-            Payload::Sign { len, scales, .. } => len.div_ceil(8) + 4 * scales.len(),
-            Payload::Q8 { q, scales, .. } => q.len() + 4 * scales.len(),
+            Payload::F32(v) => 1 + 4 + 4 * v.len(),
+            Payload::Sign { bits, scales, .. } => 1 + 4 + 4 + 4 + 8 * bits.len() + 4 + 4 * scales.len(),
+            Payload::Q8 { q, scales, .. } => 1 + 4 + 4 + 4 + q.len() + 4 + 4 * scales.len(),
+            Payload::TopK { idx, vals, .. } => 1 + 4 + 4 + 4 * idx.len() + 4 + 4 * vals.len(),
+            Payload::Q4 { q, scales, .. } => 1 + 4 + 4 + 4 + q.len() + 4 + 4 * scales.len(),
         }
     }
 
@@ -200,6 +587,21 @@ impl Payload {
                     }
                 }
             }
+            Payload::TopK { len, idx, vals } => {
+                out.resize(*len, 0.0);
+                out.fill(0.0);
+                for (&i, &v) in idx.iter().zip(vals) {
+                    out[i as usize] = v;
+                }
+            }
+            Payload::Q4 { len, block, q, scales } => {
+                let block = (*block).max(1);
+                out.resize(*len, 0.0);
+                for (i, o) in out.iter_mut().enumerate() {
+                    let nib = (q[i / 2] >> ((i % 2) * 4)) & 0x0f;
+                    *o = (nib as i32 - 8) as f32 * scales[i / block];
+                }
+            }
         }
     }
 
@@ -227,6 +629,27 @@ impl Payload {
             (
                 Payload::Q8 { len, block, q, scales },
                 Payload::Q8 { len: sl, block: sb, q: sq, scales: ss },
+            ) => {
+                *len = *sl;
+                *block = *sb;
+                q.clear();
+                q.extend_from_slice(sq);
+                scales.clear();
+                scales.extend_from_slice(ss);
+            }
+            (
+                Payload::TopK { len, idx, vals },
+                Payload::TopK { len: sl, idx: si, vals: sv },
+            ) => {
+                *len = *sl;
+                idx.clear();
+                idx.extend_from_slice(si);
+                vals.clear();
+                vals.extend_from_slice(sv);
+            }
+            (
+                Payload::Q4 { len, block, q, scales },
+                Payload::Q4 { len: sl, block: sb, q: sq, scales: ss },
             ) => {
                 *len = *sl;
                 *block = *sb;
@@ -339,6 +762,18 @@ fn add_decoded(p: &Payload, acc: &mut [f32]) {
                 for (a, &qv) in chunk.iter_mut().zip(qblk) {
                     *a += qv as f32 * s;
                 }
+            }
+        }
+        Payload::TopK { len: _, idx, vals } => {
+            for (&i, &v) in idx.iter().zip(vals) {
+                acc[i as usize] += v;
+            }
+        }
+        Payload::Q4 { len: _, block, q, scales } => {
+            let block = (*block).max(1);
+            for (i, a) in acc.iter_mut().enumerate() {
+                let nib = (q[i / 2] >> ((i % 2) * 4)) & 0x0f;
+                *a += (nib as i32 - 8) as f32 * scales[i / block];
             }
         }
     }
@@ -480,17 +915,174 @@ impl GradCodec for BlockQ8Codec {
             for &x in blk {
                 amax = amax.max(x.abs());
             }
-            if amax == 0.0 {
+            // Flush-to-zero guard: a zero OR subnormal absmax makes the
+            // scale zero/subnormal, where `x / scale` saturates to ±127
+            // on encode while decode collapses toward 0 — the block
+            // would silently round-trip to garbage. Such blocks encode
+            // as exact zeros instead (scale 0.0), matching the all-zero
+            // case; pinned by `subnormal_absmax_block_flushes_to_zero`.
+            let scale = amax / 127.0;
+            if !scale.is_normal() {
                 scales.push(0.0);
                 for qq in qblk.iter_mut() {
                     *qq = 0;
                 }
                 continue;
             }
-            let scale = amax / 127.0;
             scales.push(scale);
             for (qq, &x) in qblk.iter_mut().zip(blk) {
                 *qq = (x / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+}
+
+/// Top-k magnitude sparsification with error feedback: the `k =
+/// max(1, ⌈n·k‰⌉-ish)` largest-|·| lanes of the EF signal `e = v + r`
+/// ship as exact (index, fp32) pairs; everything else stays in the
+/// residual. Selection is deterministic: magnitudes compare by
+/// `total_cmp` with the lower index winning ties, and shipped indices
+/// are sorted ascending. The transmitted values are exact, so the EF
+/// residual of a selected lane is exactly 0 — over steps every lane is
+/// eventually selected (its residual keeps growing until it wins), so
+/// the long-run transmitted mean is unbiased.
+#[derive(Clone, Copy, Debug)]
+pub struct TopKEfCodec {
+    /// Kept-lane density in permille (≥ 1; at least one lane always
+    /// ships for a non-empty group).
+    pub k_permille: u16,
+}
+
+impl TopKEfCodec {
+    /// Lanes kept for an `n`-lane group.
+    pub fn k_for(&self, n: usize) -> usize {
+        if n == 0 {
+            0
+        } else {
+            (n * self.k_permille.max(1) as usize / 1000).clamp(1, n)
+        }
+    }
+}
+
+impl GradCodec for TopKEfCodec {
+    fn name(&self) -> &'static str {
+        "topk-ef"
+    }
+
+    fn encode_into(&self, vals: &[f32], residual: Option<&mut [f32]>, out: &mut Payload) {
+        let n = vals.len();
+        let k = self.k_for(n);
+        let (idx, sel) = match out {
+            Payload::TopK { len, idx, vals } => {
+                *len = n;
+                (idx, vals)
+            }
+            other => {
+                *other = Payload::TopK { len: n, idx: Vec::new(), vals: Vec::new() };
+                let Payload::TopK { idx, vals, .. } = other else { unreachable!() };
+                (idx, vals)
+            }
+        };
+        if let Some(r) = residual.as_deref() {
+            assert_eq!(r.len(), n, "EF residual length mismatch");
+        }
+        let r_ref = residual.as_deref();
+        let e = |i: u32| {
+            let i = i as usize;
+            match r_ref {
+                Some(r) => vals[i] + r[i],
+                None => vals[i],
+            }
+        };
+        idx.clear();
+        idx.extend(0..n as u32);
+        // Deterministic selection: |e| descending, index ascending on
+        // ties (total_cmp is a total order, so NaN cannot perturb the
+        // sort — non-finite input is rejected upstream anyway).
+        let by_mag = |a: &u32, b: &u32| {
+            e(*b).abs().total_cmp(&e(*a).abs()).then_with(|| a.cmp(b))
+        };
+        if k < n {
+            idx.select_nth_unstable_by(k.saturating_sub(1), by_mag);
+            idx.truncate(k);
+        }
+        idx.sort_unstable();
+        sel.clear();
+        sel.extend(idx.iter().map(|&i| e(i)));
+        // Residual update (last — it mutates r): selected lanes shipped
+        // exactly (residual 0), the rest keep their whole EF signal.
+        if let Some(r) = residual {
+            for (rr, &v) in r.iter_mut().zip(vals) {
+                *rr += v;
+            }
+            for &i in idx.iter() {
+                r[i as usize] = 0.0;
+            }
+        }
+    }
+}
+
+/// Blockwise 4-bit absmax quantization: `scale = max|v| / 7` per block,
+/// values round to one of 15 signed levels, packed two lanes per byte
+/// (nibble = q + 8). Residual ignored, like [`BlockQ8Codec`] — the
+/// adaptive controller's signal decides whether 4 bits are enough for
+/// the state-full group, not an EF loop.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockQ4Codec {
+    /// Lanes per scale block (≥ 1).
+    pub block: usize,
+}
+
+impl GradCodec for BlockQ4Codec {
+    fn name(&self) -> &'static str {
+        "q4"
+    }
+
+    fn encode_into(&self, vals: &[f32], _residual: Option<&mut [f32]>, out: &mut Payload) {
+        let block = self.block.max(1);
+        let n = vals.len();
+        let (q, scales) = match out {
+            Payload::Q4 { len, block: ob, q, scales } => {
+                *len = n;
+                *ob = block;
+                (q, scales)
+            }
+            other => {
+                *other = Payload::Q4 { len: n, block, q: Vec::new(), scales: Vec::new() };
+                let Payload::Q4 { q, scales, .. } = other else { unreachable!() };
+                (q, scales)
+            }
+        };
+        scales.clear();
+        q.clear();
+        // Nibble 8 encodes q = 0; pre-filling keeps flushed blocks and
+        // the odd tail's low nibble consistent (the tail's high nibble
+        // is overwritten to 0 below when n is odd).
+        q.resize(n.div_ceil(2), 0x88);
+        if n % 2 == 1 {
+            q[n / 2] = 0x08;
+        }
+        for (b, blk) in vals.chunks(block).enumerate() {
+            let mut amax = 0.0f32;
+            for &x in blk {
+                amax = amax.max(x.abs());
+            }
+            // Same flush-to-zero rule as BlockQ8: zero/subnormal absmax
+            // blocks encode as exact zeros.
+            let scale = amax / 7.0;
+            if !scale.is_normal() {
+                scales.push(0.0);
+                continue;
+            }
+            scales.push(scale);
+            let base = b * block;
+            for (k, &x) in blk.iter().enumerate() {
+                let i = base + k;
+                let qv = (x / scale).round().clamp(-7.0, 7.0) as i32;
+                let nib = (qv + 8) as u8;
+                let byte = &mut q[i / 2];
+                let shift = (i % 2) * 4;
+                *byte = (*byte & (0xf0 >> shift)) | (nib << shift);
             }
         }
     }
@@ -529,6 +1121,121 @@ impl EncodedGrad {
     }
 }
 
+/// A NaN/Inf gradient lane reached a lossy encoder. Surfaced as a
+/// targeted error *before* any scale computation — a non-finite lane
+/// would otherwise poison its whole block's scale (SignEf's mean-|e|,
+/// the quantizers' absmax) and decode to garbage with no diagnostic.
+/// Like [`super::transport::WorkerLost`], the vendored `anyhow` shim has
+/// no downcast, so the rendered message is the stable detection
+/// surface: it always contains `"non-finite gradient"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NonFiniteGrad {
+    /// Which lane group ("state-full" / "state-free").
+    pub group: &'static str,
+    /// Scale-block index of the offending lane within the group.
+    pub block: usize,
+}
+
+impl std::fmt::Display for NonFiniteGrad {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite gradient in the {} lane group (block {})",
+            self.group, self.block
+        )
+    }
+}
+
+impl NonFiniteGrad {
+    pub fn into_error(self) -> anyhow::Error {
+        anyhow::anyhow!("{self}")
+    }
+}
+
+/// Per-leaf codec quality signal, in integer millionths: for each lane
+/// group, `⌊10⁶ · ‖error‖² / ‖signal‖²⌋` (clamped to 10⁶; 0 when the
+/// signal is zero or the group is exact). EF codecs measure the residual
+/// left behind relative to the EF signal `e = v + r`; quantizers measure
+/// the decode error relative to the input. The norms are fixed-order
+/// f64 sums over slot-keyed data, quantized to integers *per leaf*, so
+/// accumulating them across leaves is a commutative `u64` sum — the
+/// adaptive controller's input is bit-identical at any worker count,
+/// arrival order, or transport.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LeafSignal {
+    /// State-free group residual share, millionths.
+    pub free_err_micro: u64,
+    /// State-full group residual share, millionths.
+    pub full_err_micro: u64,
+}
+
+/// `⌊10⁶ · err2 / e2⌋`, clamped into `[0, 10⁶]` (0 for a zero signal).
+fn ratio_micro(err2: f64, e2: f64) -> u64 {
+    if !(e2 > 0.0) {
+        return 0;
+    }
+    ((err2 / e2 * 1e6).floor() as u64).min(1_000_000)
+}
+
+/// Fixed-order squared decode error of `p` against `vals` (the same
+/// per-lane decode expressions as [`Payload::decode_into`]).
+fn decode_err2(p: &Payload, vals: &[f32]) -> f64 {
+    let mut err2 = 0.0f64;
+    match p {
+        Payload::F32(_) => {}
+        Payload::Sign { len: _, block, bits, scales } => {
+            let block = (*block).max(1);
+            for (i, &v) in vals.iter().enumerate() {
+                let positive = (bits[i / 64] >> (i % 64)) & 1 == 1;
+                let s = scales[i / block];
+                let d = (if positive { s } else { -s }) - v;
+                err2 += d as f64 * d as f64;
+            }
+        }
+        Payload::Q8 { len: _, block, q, scales } => {
+            let block = (*block).max(1);
+            for (i, &v) in vals.iter().enumerate() {
+                let d = q[i] as f32 * scales[i / block] - v;
+                err2 += d as f64 * d as f64;
+            }
+        }
+        Payload::TopK { len: _, idx, vals: kept } => {
+            // Exact at the kept indices; every other lane decodes to 0.
+            // (With EF active the caller measures the residual directly
+            // instead — this arm covers the residual-free path.)
+            let mut k = 0usize;
+            for (i, &v) in vals.iter().enumerate() {
+                let dec = if k < idx.len() && idx[k] as usize == i {
+                    k += 1;
+                    kept[k - 1]
+                } else {
+                    0.0
+                };
+                let d = dec - v;
+                err2 += d as f64 * d as f64;
+            }
+        }
+        Payload::Q4 { len: _, block, q, scales } => {
+            let block = (*block).max(1);
+            for (i, &v) in vals.iter().enumerate() {
+                let nib = (q[i / 2] >> ((i % 2) * 4)) & 0x0f;
+                let d = (nib as i32 - 8) as f32 * scales[i / block] - v;
+                err2 += d as f64 * d as f64;
+            }
+        }
+    }
+    err2
+}
+
+/// Fixed-order `Σ x²` (f64).
+fn sum_sq(vals: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for &x in vals {
+        s += x as f64 * x as f64;
+    }
+    s
+}
+
 /// Bytes that crossed reduce-tree edges during one optimizer step.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct WireStats {
@@ -547,6 +1254,11 @@ pub struct WireStats {
     pub full_bytes: u64,
     /// Encoded bytes attributable to the state-free lane group.
     pub free_bytes: u64,
+    /// Sum of per-leaf state-free residual shares ([`LeafSignal`]
+    /// millionths) — the adaptive controller's quality feed.
+    pub free_err_micro: u64,
+    /// Sum of per-leaf state-full residual shares (millionths).
+    pub full_err_micro: u64,
 }
 
 /// The per-round compression plan: lane groups (from the round's subspace
@@ -555,10 +1267,12 @@ pub struct WireStats {
 #[derive(Clone, Debug, Default)]
 pub struct CompressPlan {
     cfg: CompressCfg,
-    /// Sorted state-full lane ids (the BlockQ8 group under `q8`/`split`).
+    /// This round's per-group codec pair (static modes: a pure function
+    /// of `cfg.mode`; adaptive: the controller's current rungs).
+    assignment: CodecAssignment,
+    /// Sorted state-full lane ids (the quantizer group).
     full: Vec<u32>,
-    /// Sorted state-free lane ids (the SignEf group under
-    /// `sign-ef`/`split`).
+    /// Sorted state-free lane ids (the sign/top-k group).
     free: Vec<u32>,
     /// Length of the padded flat gradient the plan decodes back into.
     padded: usize,
@@ -568,14 +1282,32 @@ impl CompressPlan {
     /// `full`/`free` must be sorted, disjoint, in-range lane ids (the
     /// `lane_partition` output for the round's mask).
     pub fn new(cfg: CompressCfg, full: Vec<u32>, free: Vec<u32>, padded: usize) -> CompressPlan {
+        CompressPlan::with_assignment(cfg, CodecAssignment::from_mode(cfg.mode), full, free, padded)
+    }
+
+    /// Like [`CompressPlan::new`], but with an explicit codec assignment
+    /// — the adaptive controller's per-epoch selection (also how socket
+    /// workers rebuild the coordinator's plan from `RoundBegin`).
+    pub fn with_assignment(
+        cfg: CompressCfg,
+        assignment: CodecAssignment,
+        full: Vec<u32>,
+        free: Vec<u32>,
+        padded: usize,
+    ) -> CompressPlan {
         debug_assert!(full.windows(2).all(|w| w[0] < w[1]), "full lanes unsorted");
         debug_assert!(free.windows(2).all(|w| w[0] < w[1]), "free lanes unsorted");
         debug_assert!(full.iter().chain(&free).all(|&l| (l as usize) < padded));
-        CompressPlan { cfg, full, free, padded }
+        CompressPlan { cfg, assignment, full, free, padded }
     }
 
     pub fn mode(&self) -> CompressMode {
         self.cfg.mode
+    }
+
+    /// The round's per-group codec pair.
+    pub fn assignment(&self) -> CodecAssignment {
+        self.assignment
     }
 
     pub fn block(&self) -> usize {
@@ -590,7 +1322,7 @@ impl CompressPlan {
 
     /// Floats of per-slot EF residual this plan needs (0 = EF inactive).
     pub fn residual_len(&self) -> usize {
-        if self.cfg.mode.compresses_free() {
+        if self.assignment.free.uses_residual() {
             self.free.len()
         } else {
             0
@@ -601,15 +1333,80 @@ impl CompressPlan {
     /// consuming it — the `None` codec moves the vector straight into the
     /// tree, copy-free like the pre-compression engine. `residual` is the
     /// micro-batch slot's EF buffer ([`CompressPlan::residual_len`]
-    /// floats) or `None` when EF is off.
-    pub fn encode_leaf(&self, grad: Vec<f32>, residual: Option<&mut [f32]>) -> EncodedGrad {
+    /// floats) or `None` when EF is off. Returns the leaf's codec quality
+    /// signal, or the targeted [`NonFiniteGrad`] error when a NaN/Inf
+    /// lane reaches a lossy encoder.
+    pub fn encode_leaf(
+        &self,
+        grad: Vec<f32>,
+        residual: Option<&mut [f32]>,
+    ) -> Result<(EncodedGrad, LeafSignal)> {
         if self.cfg.mode == CompressMode::None {
-            return EncodedGrad::Dense(grad);
+            return Ok((EncodedGrad::Dense(grad), LeafSignal::default()));
         }
         let mut out = EncodedGrad::Dense(Vec::new());
         let mut gather = Vec::new();
-        self.encode_leaf_into(&grad, residual, &mut gather, &mut out);
-        out
+        let sig = self.encode_leaf_into(&grad, residual, &mut gather, &mut out)?;
+        Ok((out, sig))
+    }
+
+    /// Encode one lane group with its assigned codec, returning the
+    /// group's residual share in millionths (see [`LeafSignal`]).
+    /// Non-finite input lanes error out *before* any scale is computed —
+    /// the poisoned block never crosses the wire.
+    fn encode_group_into(
+        &self,
+        codec: GroupCodec,
+        group: &'static str,
+        vals: &[f32],
+        mut residual: Option<&mut [f32]>,
+        out: &mut Payload,
+    ) -> Result<u64> {
+        if codec == GroupCodec::F32 {
+            fill_f32(out, vals);
+            return Ok(0);
+        }
+        if let Some(bad) = vals.iter().position(|x| !x.is_finite()) {
+            return Err(NonFiniteGrad { group, block: bad / self.block() }.into_error());
+        }
+        Ok(match codec {
+            GroupCodec::F32 => unreachable!("handled above"),
+            GroupCodec::SignEf | GroupCodec::TopK { .. } => {
+                // EF codecs: signal = e = v + r (pre-encode), error =
+                // what stays in the residual afterwards.
+                let e2 = match residual.as_deref() {
+                    Some(r) => {
+                        let mut s = 0.0f64;
+                        for (&v, &rr) in vals.iter().zip(r) {
+                            let e = (v + rr) as f64;
+                            s += e * e;
+                        }
+                        s
+                    }
+                    None => sum_sq(vals),
+                };
+                match codec {
+                    GroupCodec::TopK { k_permille } => TopKEfCodec { k_permille }
+                        .encode_into(vals, residual.as_deref_mut(), out),
+                    _ => SignEfCodec { block: self.block() }
+                        .encode_into(vals, residual.as_deref_mut(), out),
+                }
+                let err2 = match residual.as_deref() {
+                    Some(r) => sum_sq(r),
+                    None => decode_err2(out, vals),
+                };
+                ratio_micro(err2, e2)
+            }
+            GroupCodec::Q8 | GroupCodec::Q4 => {
+                let e2 = sum_sq(vals);
+                if codec == GroupCodec::Q8 {
+                    BlockQ8Codec { block: self.block() }.encode_into(vals, None, out);
+                } else {
+                    BlockQ4Codec { block: self.block() }.encode_into(vals, None, out);
+                }
+                ratio_micro(decode_err2(out, vals), e2)
+            }
+        })
     }
 
     /// In-place leaf encode: overwrite `out` (a pooled message buffer,
@@ -623,7 +1420,7 @@ impl CompressPlan {
         residual: Option<&mut [f32]>,
         gather: &mut Vec<f32>,
         out: &mut EncodedGrad,
-    ) {
+    ) -> Result<LeafSignal> {
         debug_assert_eq!(grad.len(), self.padded, "gradient/plan size mismatch");
         if self.cfg.mode == CompressMode::None {
             match out {
@@ -633,7 +1430,7 @@ impl CompressPlan {
                 }
                 other => *other = EncodedGrad::Dense(grad.to_vec()),
             }
-            return;
+            return Ok(LeafSignal::default());
         }
         if !matches!(out, EncodedGrad::Split { .. }) {
             *out = EncodedGrad::Split {
@@ -642,50 +1439,103 @@ impl CompressPlan {
             };
         }
         let EncodedGrad::Split { full, free } = out else { unreachable!() };
+        let mut sig = LeafSignal::default();
         gather.clear();
         gather.extend(self.full.iter().map(|&l| grad[l as usize]));
-        if self.cfg.mode.compresses_full() {
-            BlockQ8Codec { block: self.block() }.encode_into(gather.as_slice(), None, full);
-        } else {
-            fill_f32(full, gather.as_slice());
-        }
+        sig.full_err_micro =
+            self.encode_group_into(self.assignment.full, "state-full", gather, None, full)?;
         gather.clear();
         gather.extend(self.free.iter().map(|&l| grad[l as usize]));
-        if self.cfg.mode.compresses_free() {
-            SignEfCodec { block: self.block() }.encode_into(gather.as_slice(), residual, free);
-        } else {
-            fill_f32(free, gather.as_slice());
-        }
+        sig.free_err_micro =
+            self.encode_group_into(self.assignment.free, "state-free", gather, residual, free)?;
+        Ok(sig)
     }
 
     /// Decode, add, re-encode one lane group at an interior tree node,
     /// in place: `a` becomes the parent message (reusing its storage),
-    /// `b` is only read (the caller recycles it). Compressed groups
-    /// re-encode as 8-bit blocks (see module docs for why interior hops
-    /// never re-sign).
+    /// `b` is only read (the caller recycles it). Interior re-encoding
+    /// rules per leaf codec:
+    ///
+    /// - `F32`: exact fp32 addition (identical to the pre-compression
+    ///   engine).
+    /// - `SignEf` / `Q8` / `Q4`: decode-add-reencode as **8-bit** blocks.
+    ///   Re-signing partial sums would erase their magnitudes, and
+    ///   re-quantizing at 4 bits would compound the quantization error
+    ///   through every tree level — Q8 interiors keep both leaf codecs'
+    ///   one-shot error profile.
+    /// - `TopK`: exact **sparse union merge** — matching indices add in
+    ///   fp32, the union stays sorted. No decode, no densify: interior
+    ///   hops stay sparse (nnz ≤ the children's sum) and exact.
     fn combine_group_into(
         &self,
         a: &mut Payload,
         b: &Payload,
-        compressed: bool,
+        codec: GroupCodec,
         scratch: &mut Vec<f32>,
     ) {
-        if !compressed {
-            // Uncompressed groups are F32 on both sides (leaf and
-            // interior encodes both produce F32 here): exact fp32
-            // addition in place, identical to the pre-compression engine.
-            let (Payload::F32(x), Payload::F32(y)) = (a, b) else {
-                panic!("uncompressed lane group carries a non-F32 payload (engine bug)")
-            };
-            debug_assert_eq!(x.len(), y.len(), "lane-group length mismatch");
-            for (xa, yb) in x.iter_mut().zip(y) {
-                *xa += yb;
+        match codec {
+            GroupCodec::F32 => {
+                // Uncompressed groups are F32 on both sides (leaf and
+                // interior encodes both produce F32 here): exact fp32
+                // addition in place, identical to the pre-compression
+                // engine.
+                let (Payload::F32(x), Payload::F32(y)) = (a, b) else {
+                    panic!("uncompressed lane group carries a non-F32 payload (engine bug)")
+                };
+                debug_assert_eq!(x.len(), y.len(), "lane-group length mismatch");
+                for (xa, yb) in x.iter_mut().zip(y) {
+                    *xa += yb;
+                }
             }
-            return;
+            GroupCodec::TopK { .. } => {
+                let (
+                    Payload::TopK { len: al, idx: ai, vals: av },
+                    Payload::TopK { len: bl, idx: bi, vals: bv },
+                ) = (a, b)
+                else {
+                    panic!("top-k lane group carries a non-TopK payload (engine bug)")
+                };
+                debug_assert_eq!(*al, *bl, "lane-group length mismatch");
+                let mut mi = Vec::with_capacity(ai.len() + bi.len());
+                let mut mv = Vec::with_capacity(ai.len() + bi.len());
+                let (mut x, mut y) = (0usize, 0usize);
+                while x < ai.len() || y < bi.len() {
+                    let xa = ai.get(x).copied();
+                    let yb = bi.get(y).copied();
+                    match (xa, yb) {
+                        (Some(i), Some(j)) if i == j => {
+                            mi.push(i);
+                            mv.push(av[x] + bv[y]);
+                            x += 1;
+                            y += 1;
+                        }
+                        (Some(i), Some(j)) if i < j => {
+                            mi.push(i);
+                            mv.push(av[x]);
+                            x += 1;
+                        }
+                        (Some(_), Some(_)) | (None, Some(_)) => {
+                            mi.push(yb.expect("y in range"));
+                            mv.push(bv[y]);
+                            y += 1;
+                        }
+                        (Some(i), None) => {
+                            mi.push(i);
+                            mv.push(av[x]);
+                            x += 1;
+                        }
+                        (None, None) => unreachable!("loop condition"),
+                    }
+                }
+                *ai = mi;
+                *av = mv;
+            }
+            GroupCodec::SignEf | GroupCodec::Q8 | GroupCodec::Q4 => {
+                a.decode_into(scratch);
+                add_decoded(b, scratch);
+                BlockQ8Codec { block: self.block() }.encode_into(scratch.as_slice(), None, a);
+            }
         }
-        a.decode_into(scratch);
-        add_decoded(b, scratch);
-        BlockQ8Codec { block: self.block() }.encode_into(scratch.as_slice(), None, a);
     }
 
     /// Combine two subtree messages into their parent's message, in
@@ -708,8 +1558,8 @@ impl CompressPlan {
                 EncodedGrad::Split { full: af, free: ar },
                 EncodedGrad::Split { full: bf, free: br },
             ) => {
-                self.combine_group_into(af, bf, self.cfg.mode.compresses_full(), scratch);
-                self.combine_group_into(ar, br, self.cfg.mode.compresses_free(), scratch);
+                self.combine_group_into(af, bf, self.assignment.full, scratch);
+                self.combine_group_into(ar, br, self.assignment.free, scratch);
             }
             _ => panic!("mixed encoded-grad variants in one reduce tree (engine bug)"),
         }
@@ -769,11 +1619,14 @@ impl CompressPlan {
         }
     }
 
-    /// Bytes `enc` occupies on the wire.
+    /// Bytes `enc` occupies on the wire — exactly the serialized frame
+    /// body bytes of the grad (the variant tag plus each payload as
+    /// metered by [`Payload::wire_bytes`]; dense grads carry a u32 lane
+    /// count before the fp32 lanes).
     pub fn wire_bytes(&self, enc: &EncodedGrad) -> usize {
         match enc {
-            EncodedGrad::Dense(v) => 4 * v.len(),
-            EncodedGrad::Split { full, free } => full.wire_bytes() + free.wire_bytes(),
+            EncodedGrad::Dense(v) => 1 + 4 + 4 * v.len(),
+            EncodedGrad::Split { full, free } => 1 + full.wire_bytes() + free.wire_bytes(),
         }
     }
 
@@ -830,24 +1683,36 @@ mod tests {
             g
         };
         let mut residual = vec![0.0f32; p.residual_len()];
-        let enc = p.encode_leaf(grad.clone(), Some(&mut residual));
+        let (enc, _) = p.encode_leaf(grad.clone(), Some(&mut residual)).unwrap();
         let (fb, rb) = p.wire_bytes_by_group(&enc).unwrap();
         assert!(fb > 0 && rb > 0);
-        assert_eq!(fb + rb, p.wire_bytes(&enc), "group bytes must partition the message");
+        // The grad's own variant tag is the one byte outside both groups.
+        assert_eq!(fb + rb + 1, p.wire_bytes(&enc), "group bytes must partition the message");
         // Dense messages have no group structure on the wire.
         let pn = plan(CompressMode::None, 16, 96, 128);
-        let dense = pn.encode_leaf(grad, None);
+        let (dense, _) = pn.encode_leaf(grad, None).unwrap();
         assert!(pn.wire_bytes_by_group(&dense).is_none());
-        assert_eq!(pn.wire_bytes(&dense), 4 * 128);
+        assert_eq!(pn.wire_bytes(&dense), 1 + 4 + 4 * 128);
     }
 
     #[test]
     fn mode_parses_and_displays() {
         for mode in CompressMode::ALL {
             assert_eq!(CompressMode::parse(mode.as_str()).unwrap(), mode);
-            assert_eq!(format!("{mode}"), mode.as_str());
+            // Display is the canonical parameterized spelling and
+            // round-trips through parse (as_str elides parameters).
+            assert_eq!(CompressMode::parse(&format!("{mode}")).unwrap(), mode);
+            assert!(format!("{mode}").starts_with(mode.as_str().trim_end_matches(":")));
         }
+        assert_eq!(format!("{}", CompressMode::TopK { k_permille: 10 }), "topk:0.01");
+        assert_eq!(format!("{}", CompressMode::Adaptive { budget_permille: 20 }), "adaptive:0.02");
+        assert_eq!(
+            CompressMode::parse("topk:0.005").unwrap(),
+            CompressMode::TopK { k_permille: 5 }
+        );
         assert!(CompressMode::parse("zstd").is_err());
+        assert!(CompressMode::parse("topk:0").is_err());
+        assert!(CompressMode::parse("adaptive:1.5").is_err());
     }
 
     #[test]
@@ -936,9 +1801,10 @@ mod tests {
         let p = plan(CompressMode::None, 64, 90, 96);
         let mut grad = randvec(90, 5);
         grad.resize(96, 0.0);
-        let enc = p.encode_leaf(grad.clone(), None);
+        let (enc, sig) = p.encode_leaf(grad.clone(), None).unwrap();
         assert!(p.leaf_matches(&enc));
-        assert_eq!(p.wire_bytes(&enc), 4 * 96);
+        assert_eq!(sig, LeafSignal::default(), "exact codec must report zero residual share");
+        assert_eq!(p.wire_bytes(&enc), 1 + 4 + 4 * 96);
         assert_eq!(p.into_grad(enc), grad);
     }
 
@@ -947,7 +1813,7 @@ mod tests {
         let p = plan(CompressMode::Split, 32, 90, 96);
         let mut grad = randvec(90, 9);
         grad.resize(96, 0.0);
-        let enc = p.encode_leaf(grad.clone(), None);
+        let (enc, _) = p.encode_leaf(grad.clone(), None).unwrap();
         assert!(p.leaf_matches(&enc));
         let dec = p.into_grad(enc);
         assert_eq!(dec.len(), 96);
@@ -969,15 +1835,15 @@ mod tests {
             g
         };
         let raw = plan(CompressMode::None, 256, 4000, 4096);
-        let dense = p.wire_bytes(&raw.encode_leaf(grad.clone(), None));
-        let split = p.wire_bytes(&p.encode_leaf(grad.clone(), None));
+        let dense = p.wire_bytes(&raw.encode_leaf(grad.clone(), None).unwrap().0);
+        let split = p.wire_bytes(&p.encode_leaf(grad.clone(), None).unwrap().0);
         assert!(
             dense >= 3 * split,
             "leaf message only shrank {dense}B -> {split}B (< 3x)"
         );
         // Interior messages (q8 on both groups) are compressed too.
-        let a = p.encode_leaf(grad.clone(), None);
-        let b = p.encode_leaf(grad.clone(), None);
+        let a = p.encode_leaf(grad.clone(), None).unwrap().0;
+        let b = p.encode_leaf(grad.clone(), None).unwrap().0;
         let interior = p.wire_bytes(&p.combine(a, b));
         assert!(dense >= 3 * interior, "interior message {interior}B not 3x under {dense}B");
     }
@@ -991,8 +1857,9 @@ mod tests {
             g
         };
         let (ga, gb) = (mk(21), mk(22));
-        let c1 = p.combine(p.encode_leaf(ga.clone(), None), p.encode_leaf(gb.clone(), None));
-        let c2 = p.combine(p.encode_leaf(ga.clone(), None), p.encode_leaf(gb.clone(), None));
+        let leaf = |g: &Vec<f32>| p.encode_leaf(g.clone(), None).unwrap().0;
+        let c1 = p.combine(leaf(&ga), leaf(&gb));
+        let c2 = p.combine(leaf(&ga), leaf(&gb));
         assert_eq!(c1, c2, "combine not deterministic");
         let dec = p.into_grad(c1);
         let mut err2 = 0.0f64;
@@ -1012,7 +1879,7 @@ mod tests {
     fn mixed_variants_panic() {
         let p = plan(CompressMode::Split, 16, 30, 32);
         let dense = EncodedGrad::Dense(vec![0.0; 32]);
-        let split = p.encode_leaf(vec![0.0f32; 32], None);
+        let split = p.encode_leaf(vec![0.0f32; 32], None).unwrap().0;
         p.combine(dense, split);
     }
 
@@ -1081,10 +1948,10 @@ mod tests {
                 g
             };
             let (ga, gb) = (mk(31), mk(32));
-            let want =
-                p.combine(p.encode_leaf(ga.clone(), None), p.encode_leaf(gb.clone(), None));
-            let mut a = p.encode_leaf(ga.clone(), None);
-            let b = p.encode_leaf(gb.clone(), None);
+            let leaf = |g: &Vec<f32>| p.encode_leaf(g.clone(), None).unwrap().0;
+            let want = p.combine(leaf(&ga), leaf(&gb));
+            let mut a = leaf(&ga);
+            let b = leaf(&gb);
             let mut scratch = Vec::new();
             p.combine_into(&mut a, &b, &mut scratch);
             assert_eq!(a, want, "{mode:?} combine_into != combine");
@@ -1109,12 +1976,13 @@ mod tests {
             let mut r1 = vec![0.02f32; res_len];
             let mut r2 = r1.clone();
             let slot1 = if res_len > 0 { Some(&mut r1[..]) } else { None };
-            let want = p.encode_leaf(grad.clone(), slot1);
+            let (want, want_sig) = p.encode_leaf(grad.clone(), slot1).unwrap();
             let mut got = EncodedGrad::Dense(vec![1.0; 4]);
             let mut gather = Vec::new();
             let slot2 = if res_len > 0 { Some(&mut r2[..]) } else { None };
-            p.encode_leaf_into(&grad, slot2, &mut gather, &mut got);
+            let got_sig = p.encode_leaf_into(&grad, slot2, &mut gather, &mut got).unwrap();
             assert_eq!(got, want, "{mode:?}");
+            assert_eq!(got_sig, want_sig, "{mode:?} quality signal diverged");
             assert_eq!(r1, r2, "{mode:?} EF residual diverged");
             assert!(p.leaf_matches(&got), "{mode:?}");
         }
@@ -1127,9 +1995,274 @@ mod tests {
             (CompressMode::SignEf, true),
             (CompressMode::Q8, false),
             (CompressMode::Split, true),
+            (CompressMode::TopK { k_permille: 10 }, true),
+            (CompressMode::Q4, false),
+            (CompressMode::Adaptive { budget_permille: 20 }, true),
         ] {
             let p = plan(mode, 16, 90, 96);
             assert_eq!(p.residual_len() > 0, expect_ef, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn topk_keeps_the_k_largest_exactly() {
+        let vals = randvec(200, 13);
+        let codec = TopKEfCodec { k_permille: 50 }; // k = 10 of 200
+        let p = codec.encode(&vals, None);
+        let Payload::TopK { len, ref idx, vals: ref kept } = p else {
+            panic!("TopKEfCodec produced a non-TopK payload")
+        };
+        assert_eq!(len, 200);
+        assert_eq!(idx.len(), 10);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices not strictly ascending");
+        // Kept values are the input bits, untouched.
+        for (&i, &v) in idx.iter().zip(kept) {
+            assert_eq!(v.to_bits(), vals[i as usize].to_bits(), "lane {i}");
+        }
+        // Every dropped lane is no larger in magnitude than the
+        // smallest kept one.
+        let min_kept = kept.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+        for (i, &v) in vals.iter().enumerate() {
+            if !idx.contains(&(i as u32)) {
+                assert!(v.abs() <= min_kept, "dropped lane {i} outweighs a kept lane");
+            }
+        }
+        // Decode: exact at kept indices, zero elsewhere.
+        let dec = p.decode();
+        for (i, &v) in dec.iter().enumerate() {
+            if idx.contains(&(i as u32)) {
+                assert_eq!(v.to_bits(), vals[i].to_bits());
+            } else {
+                assert_eq!(v, 0.0);
+            }
+        }
+        // k clamps into [1, n].
+        let tiny = TopKEfCodec { k_permille: 1 }.encode(&vals[..3], None);
+        let Payload::TopK { ref idx, .. } = tiny else { panic!() };
+        assert_eq!(idx.len(), 1, "k must clamp up to 1");
+    }
+
+    #[test]
+    fn topk_error_feedback_integrates_to_the_signal() {
+        // Same contract as sign-EF: each message drops 99% of lanes, but
+        // the residual re-injects them, so the running mean of decodes
+        // converges to the signal.
+        let vals = randvec(256, 19);
+        let codec = TopKEfCodec { k_permille: 100 }; // 25 of 256 per shot
+        let mut residual = vec![0.0f32; vals.len()];
+        let mut acc = vec![0.0f64; vals.len()];
+        let rounds = 400;
+        for _ in 0..rounds {
+            let dec = codec.decode(&codec.encode(&vals, Some(&mut residual)));
+            for (a, &d) in acc.iter_mut().zip(&dec) {
+                *a += d as f64;
+            }
+        }
+        let mut err2 = 0.0f64;
+        let mut norm2 = 0.0f64;
+        for (a, &v) in acc.iter().zip(&vals) {
+            let d = a / rounds as f64 - v as f64;
+            err2 += d * d;
+            norm2 += v as f64 * v as f64;
+        }
+        let rel = (err2 / norm2).sqrt();
+        assert!(rel < 0.08, "top-k EF mean-decode error {rel} too large");
+    }
+
+    #[test]
+    fn topk_combine_is_an_exact_sparse_union() {
+        let p = plan(CompressMode::TopK { k_permille: 100 }, 16, 120, 128);
+        let mk = |seed| {
+            let mut g = randvec(120, seed);
+            g.resize(128, 0.0);
+            g
+        };
+        let (ga, gb) = (mk(51), mk(52));
+        let a = p.encode_leaf(ga.clone(), None).unwrap().0;
+        let b = p.encode_leaf(gb.clone(), None).unwrap().0;
+        // Sum of the children's decodes, computed densely.
+        let mut scratch = Vec::new();
+        let mut want = Vec::new();
+        p.decode_root_into(&a, &mut scratch, &mut want);
+        let mut dec_b = Vec::new();
+        p.decode_root_into(&b, &mut scratch, &mut dec_b);
+        for (w, d) in want.iter_mut().zip(&dec_b) {
+            *w += d;
+        }
+        let parent = p.combine(a, b);
+        // Interior stays sparse (free group still TopK) and decodes to
+        // the exact fp32 sum of the children's decodes.
+        let EncodedGrad::Split { ref free, .. } = parent else { panic!() };
+        assert!(matches!(free, Payload::TopK { .. }), "interior densified a top-k group");
+        let mut got = Vec::new();
+        p.decode_root_into(&parent, &mut scratch, &mut got);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "sparse union merge is not the exact sum"
+        );
+    }
+
+    #[test]
+    fn q4_error_bounded_by_half_step() {
+        let vals = randvec(300, 29);
+        let codec = BlockQ4Codec { block: 64 };
+        let dec = codec.decode(&codec.encode(&vals, None));
+        for (b, blk) in vals.chunks(64).enumerate() {
+            let mut amax = 0.0f32;
+            for &x in blk {
+                amax = amax.max(x.abs());
+            }
+            let step = amax / 7.0;
+            for (k, (&x, &d)) in blk.iter().zip(&dec[b * 64..]).enumerate() {
+                assert!(
+                    (x - d).abs() <= 0.5001 * step,
+                    "lane {}: {x} -> {d} (step {step})",
+                    b * 64 + k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q4_all_zero_block_stays_zero() {
+        let codec = BlockQ4Codec { block: 16 };
+        let dec = codec.decode(&codec.encode(&[0.0; 41], None));
+        assert_eq!(dec, vec![0.0; 41]);
+    }
+
+    #[test]
+    fn subnormal_absmax_block_flushes_to_zero() {
+        // A subnormal block absmax used to underflow `amax / 127.0` to
+        // 0.0 and encode ±127 everywhere while decoding to garbage;
+        // the defined behavior is flush-to-zero, same as an all-zero
+        // block. Both quantizers, including an odd-length Q4 tail.
+        let sub = f32::from_bits(1); // smallest positive subnormal
+        let vals = vec![sub, -sub, sub, 0.0, sub, -sub, sub];
+        let q8 = BlockQ8Codec { block: 4 };
+        assert_eq!(q8.decode(&q8.encode(&vals, None)), vec![0.0; 7]);
+        let q4 = BlockQ4Codec { block: 4 };
+        assert_eq!(q4.decode(&q4.encode(&vals, None)), vec![0.0; 7]);
+        // A normal-absmax block is untouched by the flush arm.
+        let ok = vec![1.0f32, -2.0, 0.5, 0.25];
+        assert!(q8.decode(&q8.encode(&ok, None)).iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn non_finite_gradient_is_a_targeted_error() {
+        for mode in [
+            CompressMode::SignEf,
+            CompressMode::Q8,
+            CompressMode::Split,
+            CompressMode::TopK { k_permille: 10 },
+            CompressMode::Q4,
+            CompressMode::Adaptive { budget_permille: 20 },
+        ] {
+            let p = plan(mode, 16, 96, 96);
+            // Poison one lane of each group that has a lossy codec.
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let a = p.assignment();
+                for (codec, lane) in [(a.full, 0usize), (a.free, 1usize)] {
+                    let mut grad = randvec(96, 61);
+                    grad[lane] = bad;
+                    let mut residual = vec![0.0f32; p.residual_len()];
+                    let slot = if residual.is_empty() { None } else { Some(&mut residual[..]) };
+                    let got = p.encode_leaf(grad, slot);
+                    if codec == GroupCodec::F32 {
+                        // Exact groups pass through: a non-finite loss is
+                        // already visible downstream, nothing decodes to
+                        // silent garbage.
+                        assert!(got.is_ok(), "{mode:?} F32 group must not error");
+                    } else {
+                        let err = format!("{:#}", got.err().expect("poison must error"));
+                        assert!(
+                            err.contains("non-finite gradient"),
+                            "{mode:?}: unexpected error '{err}'"
+                        );
+                        assert!(err.contains("block 0"), "{mode:?}: wrong block in '{err}'");
+                    }
+                }
+            }
+        }
+        // The block index points at the poisoned block, not block 0.
+        let p = plan(CompressMode::Q4, 16, 96, 96);
+        let mut grad = randvec(96, 67);
+        // full group lanes are 0,3,6,... — lane 51 is gathered full
+        // index 17, which lands in block 1 at block=16.
+        grad[51] = f32::NAN;
+        let err = format!("{:#}", p.encode_leaf(grad, None).err().unwrap());
+        assert!(err.contains("state-full") && err.contains("block 1"), "'{err}'");
+    }
+
+    #[test]
+    fn leaf_signal_reflects_codec_quality() {
+        let p = plan(CompressMode::Split, 16, 120, 128);
+        let mut grad = randvec(120, 71);
+        grad.resize(128, 0.0);
+        let mut residual = vec![0.0f32; p.residual_len()];
+        let (_, sig) = p.encode_leaf(grad.clone(), Some(&mut residual)).unwrap();
+        // Q8 on the full group: tiny one-shot error.
+        assert!(sig.full_err_micro < 5_000, "q8 share {}", sig.full_err_micro);
+        // Sign-EF on the free group: most energy stays in the residual.
+        assert!(
+            sig.free_err_micro > 100_000 && sig.free_err_micro <= 1_000_000,
+            "sign-ef share {}",
+            sig.free_err_micro
+        );
+        // F32 groups report exactly zero.
+        let p = plan(CompressMode::None, 16, 120, 128);
+        let (_, sig) = p.encode_leaf(grad, None).unwrap();
+        assert_eq!(sig, LeafSignal::default());
+    }
+
+    #[test]
+    fn adaptive_controller_ratchets_monotonically_and_fingerprints() {
+        let mut ctl = AdaptiveCodecController::new(20);
+        assert_eq!(
+            ctl.assignment(),
+            CodecAssignment::from_mode(CompressMode::Adaptive { budget_permille: 20 })
+        );
+        assert_eq!(ctl.history_string(), "e1=topk:5+q4");
+        // Epoch 2: both groups well within budget — no change.
+        assert!(!ctl.observe_epoch(2, 8 * 900_000, 8 * 50_000, 8));
+        assert_eq!(ctl.history().len(), 1);
+        // Epoch 3: both groups blow their gates — one rung each, once.
+        assert!(ctl.observe_epoch(3, 16 * 999_999, 16 * 999_999, 16));
+        assert_eq!(
+            ctl.assignment(),
+            CodecAssignment { full: GroupCodec::Q8, free: GroupCodec::SignEf }
+        );
+        assert_eq!(ctl.history_string(), "e1=topk:5+q4,e3=sign-ef+q8");
+        // Epoch 4: still terrible — climbs to the exact top rung...
+        assert!(ctl.observe_epoch(4, 24 * 999_999, 24 * 999_999, 24));
+        assert_eq!(
+            ctl.assignment(),
+            CodecAssignment { full: GroupCodec::F32, free: GroupCodec::F32 }
+        );
+        // ...where it stays (never down, never past the end).
+        assert!(!ctl.observe_epoch(5, 32 * 999_999, 32 * 999_999, 32));
+        assert!(!ctl.observe_epoch(6, 32 * 999_999, 32 * 999_999, 32), "no leaf delta");
+        // Fingerprint round-trips: rungs, history, then marks.
+        let mut back = AdaptiveCodecController::from_history(20, &ctl.history_string()).unwrap();
+        assert_eq!(back.assignment(), ctl.assignment());
+        assert_eq!(back.history(), ctl.history());
+        back.restore_marks(ctl.marks());
+        assert_eq!(back, ctl);
+        assert!(AdaptiveCodecController::from_history(20, "").is_err());
+        assert!(AdaptiveCodecController::from_history(20, "e1=zstd+q4").is_err());
+    }
+
+    #[test]
+    fn adaptive_budget_scales_the_gates() {
+        // A looser budget tolerates a worse signal at the same rung: the
+        // reading that escalates at 1% must not escalate at 4%.
+        let reading = 999_700u64; // between the 2% sign-ef gate and 10^6
+        let mut tight = AdaptiveCodecController::new(10);
+        let mut loose = AdaptiveCodecController::new(40);
+        for ctl in [&mut tight, &mut loose] {
+            ctl.observe_epoch(2, 8 * 999_999, 0, 8); // force free to sign-ef
+        }
+        assert!(tight.observe_epoch(3, 16 * reading, 0, 16), "1% budget must escalate");
+        assert!(!loose.observe_epoch(3, 16 * reading, 0, 16), "4% budget must hold");
     }
 }

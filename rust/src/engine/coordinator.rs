@@ -39,7 +39,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use super::compress::{CompressCfg, CompressMode, CompressPlan, EncodedGrad};
+use super::compress::{CodecAssignment, CompressCfg, CompressMode, CompressPlan, EncodedGrad};
 use super::transport::{
     default_addr, worker_connect_retry, FaultCfg, Frame, FrameIo, Listener, Membership,
     RecvEvent, Transport, TransportCfg, TransportKind, WorkerLost,
@@ -61,6 +61,9 @@ pub struct RoundInfo {
     pub padded: u32,
     pub mode: CompressMode,
     pub block: u32,
+    /// The round's per-lane-group codec pair (the adaptive controller's
+    /// current choice; static modes just restate the mode's pair).
+    pub assignment: CodecAssignment,
     pub full: Vec<u32>,
     pub free: Vec<u32>,
     pub residuals: Vec<Vec<f32>>,
@@ -472,6 +475,7 @@ impl Coordinator {
                 padded: info.padded,
                 mode: info.mode,
                 block: info.block,
+                assignment: info.assignment,
                 full: info.full.clone(),
                 free: info.free.clone(),
                 residuals: info.residuals.clone(),
@@ -607,7 +611,9 @@ impl Transport for Coordinator {
                     self.tally(bytes);
                     let Some(rank) = self.rank_of(conn) else { continue };
                     match frame {
-                        Frame::Micro { attempt, slot, n_tok, loss, grad, .. } => {
+                        Frame::Micro {
+                            attempt, slot, n_tok, loss, sig_free, sig_full, grad, ..
+                        } => {
                             if attempt != self.attempt {
                                 // Orphan of an aborted round attempt:
                                 // same round/step numbers as the replay,
@@ -620,6 +626,8 @@ impl Transport for Coordinator {
                                 slot: slot as usize,
                                 n_tok: n_tok as usize,
                                 loss,
+                                sig_free,
+                                sig_full,
                                 grad,
                             };
                         }
@@ -804,6 +812,7 @@ pub fn run_worker(
                 padded,
                 mode,
                 block,
+                assignment,
                 full,
                 free,
                 residuals,
@@ -812,9 +821,16 @@ pub fn run_worker(
                 let nw = (workers as usize).max(1);
                 let rk = rank as usize;
                 let m = grad_accum as usize;
-                let plan =
-                    CompressPlan::new(CompressCfg { mode, block: block as usize }, full, free,
-                                      padded as usize);
+                // Build the plan from the *shipped* codec pair, not the
+                // mode: under `adaptive` the coordinator's controller
+                // owns the selection and workers must follow it exactly.
+                let plan = CompressPlan::with_assignment(
+                    CompressCfg { mode, block: block as usize },
+                    assignment,
+                    full,
+                    free,
+                    padded as usize,
+                );
                 let nres = plan.residual_len();
                 let mut local = Vec::new();
                 let mut j = rk;
@@ -869,8 +885,22 @@ pub fn run_worker(
                         Ok(loss) => {
                             let slot =
                                 st.residuals.get_mut(local).map(|r| r.as_mut_slice());
-                            st.plan.encode_leaf_into(&grad, slot, &mut gather, &mut msg);
-                            io.send_micro(my_id, st.attempt, j as u32, n_tok, loss, &msg)?;
+                            match st.plan.encode_leaf_into(&grad, slot, &mut gather, &mut msg) {
+                                Ok(sig) => {
+                                    io.send_micro(
+                                        my_id, st.attempt, j as u32, n_tok, loss, sig, &msg,
+                                    )?;
+                                }
+                                // Codec-level poisoning (NaN/Inf lanes)
+                                // rides the same targeted failure path
+                                // as a gradient error — never the tree.
+                                Err(e) => {
+                                    io.send(&Frame::Failed {
+                                        worker: my_id,
+                                        message: format!("{e:#}"),
+                                    })?;
+                                }
+                            }
                         }
                         Err(e) => {
                             io.send(&Frame::Failed {

@@ -71,8 +71,9 @@ pub mod transport;
 
 pub use allreduce::{tree_reduce, tree_reduce_with, ReduceTree};
 pub use compress::{
-    BlockQ8Codec, CompressCfg, CompressMode, CompressPlan, EncodedGrad, GradCodec, NoneCodec,
-    Payload, SignEfCodec, WireStats,
+    AdaptiveCodecController, BlockQ4Codec, BlockQ8Codec, CodecAssignment, CodecChoice,
+    CompressCfg, CompressMode, CompressPlan, EncodedGrad, GradCodec, GroupCodec, LeafSignal,
+    NonFiniteGrad, NoneCodec, Payload, SignEfCodec, TopKEfCodec, WireStats,
 };
 pub use coordinator::{run_worker, spawn_ref_workers, worker_handshake, Coordinator, WorkerOpts};
 pub use orchestrator::{Orchestrator, RoundReport};
@@ -244,8 +245,9 @@ impl Sources {
     }
 }
 
-/// One barrier-mode staging slot: `(token_count, loss, encoded_grad)`.
-type StagedMicro = Option<(usize, f32, EncodedGrad)>;
+/// One barrier-mode staging slot:
+/// `(token_count, loss, codec_signal, encoded_grad)`.
+type StagedMicro = Option<(usize, f32, LeafSignal, EncodedGrad)>;
 
 /// Persistent per-worker working set: token buffer, gradient buffer,
 /// lane-gather scratch, the pooled messages pre-drawn for this step's
@@ -275,6 +277,10 @@ pub struct Engine {
     states: Vec<AdamState>,
     /// Per-round codec assignment over the mask's lane groups.
     cplan: CompressPlan,
+    /// The adaptive per-lane-group codec selector (`Some` only under
+    /// `--compress adaptive`); consulted at every round boundary before
+    /// the codec plan rebuild.
+    codec_ctl: Option<AdaptiveCodecController>,
     /// Per-slot EF residuals (SignEf transport state; reset each round).
     residuals: ResidualBank,
     /// Reduce-tree message recycler (see [`pool`]).
@@ -557,6 +563,12 @@ impl EngineBuilder {
         let workers_ctx = (0..workers)
             .map(|_| WorkerCtx { grad: vec![0.0; padded], ..WorkerCtx::default() })
             .collect();
+        let codec_ctl = match cfg.parallel.compress.mode {
+            CompressMode::Adaptive { budget_permille } => {
+                Some(AdaptiveCodecController::new(budget_permille))
+            }
+            _ => None,
+        };
         Ok(Engine {
             cfg,
             mask_builder,
@@ -567,6 +579,7 @@ impl EngineBuilder {
             free_plan: ShardPlan::default(),
             states: Vec::new(),
             cplan: CompressPlan::default(),
+            codec_ctl,
             residuals: ResidualBank::default(),
             pool: BufferPool::new(),
             acc: MicroAccumulator::new(grad_accum),
@@ -600,26 +613,6 @@ impl Engine {
     /// Start building an engine (see [`EngineBuilder`]).
     pub fn builder() -> EngineBuilder {
         EngineBuilder::default()
-    }
-
-    /// `init_flat` must match the mask-builder layout's `padded_size`;
-    /// `sources` must hold one gradient source per worker.
-    #[deprecated(
-        since = "0.7.0",
-        note = "use Engine::builder() — named setters plus transport/telemetry options"
-    )]
-    pub fn new(
-        mask_builder: MaskBuilder,
-        cfg: EngineCfg,
-        sources: Sources,
-        init_flat: Vec<f32>,
-    ) -> Result<Engine> {
-        Engine::builder()
-            .mask_builder(mask_builder)
-            .cfg(cfg)
-            .sources(sources)
-            .init_flat(init_flat)
-            .build()
     }
 
     pub fn cfg(&self) -> &EngineCfg {
@@ -736,7 +729,32 @@ impl Engine {
         let (full, free) = lane_partition(&self.mask, flat_size);
         self.plan = ShardPlan::partition(full.clone(), workers, gran);
         self.free_plan = ShardPlan::partition(free.clone(), workers, gran);
-        self.cplan = CompressPlan::new(self.cfg.parallel.compress, full, free, padded);
+        // Under `adaptive`, feed the controller this epoch boundary's
+        // deterministic residual-share totals BEFORE building the codec
+        // plan — a re-selection takes effect for the whole round, and
+        // the inputs are counter-plane totals, so workers 1 ≡ N and
+        // resume ≡ continuous see the identical choice sequence.
+        if let Some(ctl) = &mut self.codec_ctl {
+            let changed = ctl.observe_epoch(
+                self.round,
+                self.tel.get(Counter::FreeErrShareMicro),
+                self.tel.get(Counter::FullErrShareMicro),
+                self.tel.get(Counter::MicroBatches),
+            );
+            if changed {
+                self.tel.add(Counter::CodecReselections, 1);
+            }
+        }
+        self.cplan = match &self.codec_ctl {
+            Some(ctl) => CompressPlan::with_assignment(
+                self.cfg.parallel.compress,
+                ctl.assignment(),
+                full,
+                free,
+                padded,
+            ),
+            None => CompressPlan::new(self.cfg.parallel.compress, full, free, padded),
+        };
         // Release (drop) previous shards, allocate fresh zeroed moments —
         // the paper's state reset on subspace change. The EF residuals
         // are defined over the (changed) state-free lane set, so they
@@ -818,7 +836,15 @@ impl Engine {
         }
         match self.step_inner(batch_fn) {
             Ok(loss) => Ok(loss),
-            Err(err) => self.recover_and_replay(batch_fn, err),
+            Err(err) => {
+                // Process plane only: a poisoned gradient is an event of
+                // this run, not of the deterministic trace (a replay that
+                // never sees the NaN must stay bit-identical).
+                if format!("{err:#}").contains("non-finite gradient") {
+                    self.tel.add(Counter::NonFiniteGrads, 1);
+                }
+                self.recover_and_replay(batch_fn, err)
+            }
         }
     }
 
@@ -1071,6 +1097,7 @@ impl Engine {
                     padded: padded as u32,
                     mode: self.cplan.mode(),
                     block: self.cplan.block() as u32,
+                    assignment: self.cplan.assignment(),
                     full: self.plan.lanes().to_vec(),
                     free: self.free_plan.lanes().to_vec(),
                     residuals,
@@ -1186,18 +1213,29 @@ impl Engine {
                                     // Slot j's EF residual lives at local
                                     // index j/N of this worker's bank.
                                     let slot = wres.get_mut(local).map(|r| r.as_mut_slice());
-                                    cplan.encode_leaf_into(
+                                    match cplan.encode_leaf_into(
                                         &ctx.grad,
                                         slot,
                                         &mut ctx.gather,
                                         &mut msg,
-                                    );
-                                    Frame::Micro {
-                                        worker: w as u64,
-                                        slot: j as u32,
-                                        n_tok: n_tok as u32,
-                                        loss,
-                                        grad: msg,
+                                    ) {
+                                        Ok(sig) => Frame::Micro {
+                                            worker: w as u64,
+                                            attempt: 0,
+                                            slot: j as u32,
+                                            n_tok: n_tok as u32,
+                                            loss,
+                                            sig_free: sig.free_err_micro,
+                                            sig_full: sig.full_err_micro,
+                                            grad: msg,
+                                        },
+                                        // Codec-level poisoning (NaN/Inf)
+                                        // rides the targeted failure path,
+                                        // never the reduce tree.
+                                        Err(e) => Frame::Failed {
+                                            worker: w as u64,
+                                            message: format!("{e:#}"),
+                                        },
                                     }
                                 }
                                 Err(e) => Frame::Failed {
@@ -1244,12 +1282,12 @@ impl Engine {
                 let loss = src.loss_and_grad_into(&self.flat, &ctx.tokens, &mut ctx.grad)?;
                 t = lap(&mut ns_grad, t);
                 let mut msg = self.pool.get_encoded();
-                self.cplan.encode_leaf_into(
+                let sig = self.cplan.encode_leaf_into(
                     &ctx.grad,
                     self.residuals.slot_mut(j),
                     &mut ctx.gather,
                     &mut msg,
-                );
+                )?;
                 t = lap(&mut ns_encode, t);
                 self.acc.push(
                     &self.cplan,
@@ -1258,6 +1296,7 @@ impl Engine {
                     j,
                     n_tok,
                     loss,
+                    sig,
                     msg,
                 )?;
                 lap(&mut ns_reduce, t);
@@ -1282,6 +1321,13 @@ impl Engine {
         self.tel.add(Counter::WireMessages, wire.messages);
         self.tel.add(Counter::WireFullBytes, wire.full_bytes);
         self.tel.add(Counter::WireFreeBytes, wire.free_bytes);
+        // Per-group codec quality shares (integer micros, summed over
+        // leaves in micro-batch order on the training thread): the
+        // adaptive controller's only input, so codec re-selection is a
+        // pure function of the deterministic trace — workers 1 ≡ N and
+        // memory ≡ uds stay bitwise under `--compress adaptive`.
+        self.tel.add(Counter::FreeErrShareMicro, wire.free_err_micro);
+        self.tel.add(Counter::FullErrShareMicro, wire.full_err_micro);
         self.tel.add(Counter::EncodeLeafCalls, wire.leaves);
         self.tel.add(Counter::CombineCalls, wire.combines);
         self.tel.add(Counter::DecodeRootCalls, 1);
@@ -1492,8 +1538,21 @@ impl Engine {
         st.flat_size = layout.flat_size;
         st.padded_size = layout.padded_size;
         st.wire_mode.clear();
-        st.wire_mode.push_str(self.cfg.parallel.compress.mode.as_str());
+        // Canonical parameterized spelling (`topk:0.005`, not `topk`) —
+        // restore must reject a resume whose codec *parameters* differ,
+        // not just the family.
+        st.wire_mode.push_str(&self.cfg.parallel.compress.mode.to_string());
         st.wire_block = self.cfg.parallel.compress.block;
+        // Adaptive-codec fingerprint: the controller's full choice
+        // history plus its observation marks, so resume ≡ continuous
+        // holds across a re-selection boundary (the restored controller
+        // ratchets from exactly the same state).
+        st.codec_history.clear();
+        st.codec_marks.clear();
+        if let Some(ctl) = &self.codec_ctl {
+            st.codec_history.push_str(&ctl.history_string());
+            st.codec_marks.extend_from_slice(&ctl.marks());
+        }
         st.subspace = self.mask_builder.fingerprint();
         // ρ(epoch) of the snapshot's mask epoch (informational — the
         // schedule inside `subspace` is what restore checks) and the
@@ -1616,7 +1675,7 @@ impl Engine {
             st.subspace
         );
         anyhow::ensure!(
-            self.cfg.parallel.compress.mode.as_str() == st.wire_mode
+            self.cfg.parallel.compress.mode.to_string() == st.wire_mode
                 && self.cfg.parallel.compress.block == st.wire_block,
             "snapshot ran --compress {} (block {}) but this run uses {} (block {}) — \
              the reduce-tree codec changes the transported bits (EF residuals, \
@@ -1661,8 +1720,37 @@ impl Engine {
 
         self.plan = ShardPlan::partition(st.full_lanes.clone(), workers, gran);
         self.free_plan = ShardPlan::partition(free.clone(), workers, gran);
-        self.cplan =
-            CompressPlan::new(self.cfg.parallel.compress, st.full_lanes, free, padded);
+        // Restore the adaptive controller BEFORE the plan rebuild: the
+        // restored rungs decide this round's codec assignment, exactly as
+        // the continuous run's `begin_round` would have.
+        self.codec_ctl = match self.cfg.parallel.compress.mode {
+            CompressMode::Adaptive { budget_permille } => {
+                let mut ctl = if st.codec_history.is_empty() {
+                    AdaptiveCodecController::new(budget_permille)
+                } else {
+                    AdaptiveCodecController::from_history(budget_permille, &st.codec_history)?
+                };
+                if st.codec_marks.len() == 3 {
+                    ctl.restore_marks([
+                        st.codec_marks[0],
+                        st.codec_marks[1],
+                        st.codec_marks[2],
+                    ]);
+                }
+                Some(ctl)
+            }
+            _ => None,
+        };
+        self.cplan = match &self.codec_ctl {
+            Some(ctl) => CompressPlan::with_assignment(
+                self.cfg.parallel.compress,
+                ctl.assignment(),
+                st.full_lanes,
+                free,
+                padded,
+            ),
+            None => CompressPlan::new(self.cfg.parallel.compress, st.full_lanes, free, padded),
+        };
         debug_assert_eq!(self.plan.total_lanes(), st.m.len());
 
         // Elastic re-shard: slice the lane-ordered moment arrays by this
@@ -1800,6 +1888,7 @@ impl MicroAccumulator {
         j: usize,
         n_tok: usize,
         loss: f32,
+        sig: LeafSignal,
         enc: EncodedGrad,
     ) -> Result<()> {
         anyhow::ensure!(
@@ -1808,6 +1897,10 @@ impl MicroAccumulator {
         );
         self.tokens_total += n_tok;
         self.received += 1;
+        // Commutative u64 sums of the per-leaf quality micros: identical
+        // at any arrival order, worker count, or transport.
+        self.wire.free_err_micro += sig.free_err_micro;
+        self.wire.full_err_micro += sig.full_err_micro;
         let dense = 4 * plan.padded_size() as u64;
         self.wire.bytes += plan.wire_bytes(&enc) as u64;
         self.wire.messages += 1;
@@ -1941,13 +2034,14 @@ fn collect_micro_grads(
             None
         };
         match link.recv_frame(wait) {
-            RecvEvent::Micro { worker: _, slot: j, n_tok, loss, grad } => {
+            RecvEvent::Micro { worker: _, slot: j, n_tok, loss, sig_free, sig_full, grad } => {
                 anyhow::ensure!(
                     j < m && !is_seen(seen, j),
                     "duplicate micro-batch slot {j}"
                 );
                 seen[j / 64] |= 1 << (j % 64);
                 delivered += 1;
+                let sig = LeafSignal { free_err_micro: sig_free, full_err_micro: sig_full };
                 let enc = if pooled_recv {
                     let mut pooled = pool.get_encoded();
                     pooled.copy_from(&grad);
@@ -1956,9 +2050,9 @@ fn collect_micro_grads(
                     grad
                 };
                 if pipeline {
-                    acc.push(plan, pool, scratch, j, n_tok, loss, enc)?;
+                    acc.push(plan, pool, scratch, j, n_tok, loss, sig, enc)?;
                 } else {
-                    stage[j] = Some((n_tok, loss, enc));
+                    stage[j] = Some((n_tok, loss, sig, enc));
                 }
             }
             RecvEvent::Failed { worker, message } => {
@@ -2010,9 +2104,9 @@ fn collect_micro_grads(
     }
     if !pipeline {
         for (j, slot) in stage.iter_mut().enumerate().take(m) {
-            let (n_tok, loss, enc) =
+            let (n_tok, loss, sig, enc) =
                 slot.take().expect("barrier stage incomplete despite full count");
-            acc.push(plan, pool, scratch, j, n_tok, loss, enc)?;
+            acc.push(plan, pool, scratch, j, n_tok, loss, sig, enc)?;
         }
     }
     Ok(timeouts)
@@ -2042,9 +2136,12 @@ mod collect_tests {
         for j in [0usize, 2] {
             sender.send_frame(Frame::Micro {
                 worker: 0,
+                attempt: 0,
                 slot: j as u32,
                 n_tok: 8,
                 loss: 1.0,
+                sig_free: 0,
+                sig_full: 0,
                 grad: EncodedGrad::Dense(vec![0.0; 4]),
             });
         }
@@ -2080,9 +2177,12 @@ mod collect_tests {
         for _ in 0..2 {
             sender.send_frame(Frame::Micro {
                 worker: 0,
+                attempt: 0,
                 slot: 1,
                 n_tok: 8,
                 loss: 1.0,
+                sig_free: 0,
+                sig_full: 0,
                 grad: EncodedGrad::Dense(vec![0.0; 2]),
             });
         }

@@ -38,7 +38,7 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::compress::{CompressMode, EncodedGrad, Payload};
+use super::compress::{CodecAssignment, CompressMode, EncodedGrad, GroupCodec, Payload};
 use crate::Result;
 
 /// Which wire the engine's workers speak
@@ -289,6 +289,11 @@ pub enum Frame {
         padded: u32,
         mode: CompressMode,
         block: u32,
+        /// The round's per-lane-group codec pair. Static modes re-derive
+        /// it from `mode`; `adaptive` ships the controller's current
+        /// choice here so socket workers encode with the coordinator's
+        /// exact selection without replaying its history.
+        assignment: CodecAssignment,
         full: Vec<u32>,
         free: Vec<u32>,
         residuals: Vec<Vec<f32>>,
@@ -300,7 +305,19 @@ pub enum Frame {
     /// Worker → coordinator: one micro-batch result (the tree leaf),
     /// stamped with the recovery generation of the `RoundBegin` it was
     /// computed under (stale generations are discarded silently).
-    Micro { worker: u64, attempt: u32, slot: u32, n_tok: u32, loss: f32, grad: EncodedGrad },
+    Micro {
+        worker: u64,
+        attempt: u32,
+        slot: u32,
+        n_tok: u32,
+        loss: f32,
+        /// Leaf codec quality signal ([`LeafSignal`]), carried per micro
+        /// so the deterministic residual-share counters accrue exactly
+        /// as in-memory runs do.
+        sig_free: u64,
+        sig_full: u64,
+        grad: EncodedGrad,
+    },
     /// Worker → coordinator: a gradient computation failed.
     Failed { worker: u64, message: String },
     /// Worker → coordinator: please drop me at the next round boundary.
@@ -325,7 +342,15 @@ pub enum Frame {
 pub enum RecvEvent {
     /// A micro-batch leaf arrived. `worker` is the sender's current
     /// rank (its slot-ownership index), not its stable id.
-    Micro { worker: usize, slot: usize, n_tok: usize, loss: f32, grad: EncodedGrad },
+    Micro {
+        worker: usize,
+        slot: usize,
+        n_tok: usize,
+        loss: f32,
+        sig_free: u64,
+        sig_full: u64,
+        grad: EncodedGrad,
+    },
     /// A worker reported a gradient failure.
     Failed { worker: usize, message: String },
     /// A worker asked to leave at the next round boundary.
@@ -463,13 +488,17 @@ impl InMemory {
 
     fn translate(frame: Frame) -> RecvEvent {
         match frame {
-            Frame::Micro { worker, slot, n_tok, loss, grad, .. } => RecvEvent::Micro {
-                worker: worker as usize,
-                slot: slot as usize,
-                n_tok: n_tok as usize,
-                loss,
-                grad,
-            },
+            Frame::Micro { worker, slot, n_tok, loss, sig_free, sig_full, grad, .. } => {
+                RecvEvent::Micro {
+                    worker: worker as usize,
+                    slot: slot as usize,
+                    n_tok: n_tok as usize,
+                    loss,
+                    sig_free,
+                    sig_full,
+                    grad,
+                }
+            }
             Frame::Failed { worker, message } => {
                 RecvEvent::Failed { worker: worker as usize, message }
             }
@@ -526,6 +555,8 @@ const TAG_DATA_BATCH: u8 = 9;
 const PAYLOAD_F32: u8 = 0;
 const PAYLOAD_SIGN: u8 = 1;
 const PAYLOAD_Q8: u8 = 2;
+const PAYLOAD_TOPK: u8 = 3;
+const PAYLOAD_Q4: u8 = 4;
 
 const GRAD_DENSE: u8 = 0;
 const GRAD_SPLIT: u8 = 1;
@@ -568,22 +599,56 @@ fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
     }
 }
 
-fn mode_tag(mode: CompressMode) -> u8 {
-    match mode {
-        CompressMode::None => 0,
-        CompressMode::SignEf => 1,
-        CompressMode::Q8 => 2,
-        CompressMode::Split => 3,
-    }
+/// Compress mode on the wire: a tag byte plus one u32 parameter
+/// (permille for `topk`/`adaptive`, 0 for the unparameterized modes).
+fn put_mode(out: &mut Vec<u8>, mode: CompressMode) {
+    let (tag, param): (u8, u32) = match mode {
+        CompressMode::None => (0, 0),
+        CompressMode::SignEf => (1, 0),
+        CompressMode::Q8 => (2, 0),
+        CompressMode::Split => (3, 0),
+        CompressMode::TopK { k_permille } => (4, u32::from(k_permille)),
+        CompressMode::Q4 => (5, 0),
+        CompressMode::Adaptive { budget_permille } => (6, u32::from(budget_permille)),
+    };
+    out.push(tag);
+    put_u32(out, param);
 }
 
-fn mode_from_tag(tag: u8) -> Result<CompressMode> {
+fn mode_from_tag(tag: u8, param: u32) -> Result<CompressMode> {
     Ok(match tag {
         0 => CompressMode::None,
         1 => CompressMode::SignEf,
         2 => CompressMode::Q8,
         3 => CompressMode::Split,
+        4 => CompressMode::TopK { k_permille: param as u16 },
+        5 => CompressMode::Q4,
+        6 => CompressMode::Adaptive { budget_permille: param as u16 },
         other => anyhow::bail!("frame decode: unknown compress-mode tag {other}"),
+    })
+}
+
+/// One lane group's codec on the wire: tag byte + one u32 parameter.
+fn put_group_codec(out: &mut Vec<u8>, c: GroupCodec) {
+    let (tag, param): (u8, u32) = match c {
+        GroupCodec::F32 => (0, 0),
+        GroupCodec::SignEf => (1, 0),
+        GroupCodec::Q8 => (2, 0),
+        GroupCodec::Q4 => (3, 0),
+        GroupCodec::TopK { k_permille } => (4, u32::from(k_permille)),
+    };
+    out.push(tag);
+    put_u32(out, param);
+}
+
+fn group_codec_from_tag(tag: u8, param: u32) -> Result<GroupCodec> {
+    Ok(match tag {
+        0 => GroupCodec::F32,
+        1 => GroupCodec::SignEf,
+        2 => GroupCodec::Q8,
+        3 => GroupCodec::Q4,
+        4 => GroupCodec::TopK { k_permille: param as u16 },
+        other => anyhow::bail!("frame decode: unknown group-codec tag {other}"),
     })
 }
 
@@ -609,6 +674,20 @@ fn put_payload(out: &mut Vec<u8>, p: &Payload) {
             put_u32(out, *block as u32);
             put_u32(out, q.len() as u32);
             out.extend(q.iter().map(|&x| x as u8));
+            put_f32s(out, scales);
+        }
+        Payload::TopK { len, idx, vals } => {
+            out.push(PAYLOAD_TOPK);
+            put_u32(out, *len as u32);
+            put_u32s(out, idx);
+            put_f32s(out, vals);
+        }
+        Payload::Q4 { len, block, q, scales } => {
+            out.push(PAYLOAD_Q4);
+            put_u32(out, *len as u32);
+            put_u32(out, *block as u32);
+            put_u32(out, q.len() as u32);
+            out.extend_from_slice(q);
             put_f32s(out, scales);
         }
     }
@@ -715,6 +794,20 @@ impl<'a> FrameReader<'a> {
                 let scales = self.f32s()?;
                 Ok(Payload::Q8 { len, block, q, scales })
             }
+            PAYLOAD_TOPK => {
+                let len = self.u32()? as usize;
+                let idx = self.u32s()?;
+                let vals = self.f32s()?;
+                Ok(Payload::TopK { len, idx, vals })
+            }
+            PAYLOAD_Q4 => {
+                let len = self.u32()? as usize;
+                let block = self.u32()? as usize;
+                let nq = self.u32()? as usize;
+                let q = self.take(nq)?.to_vec();
+                let scales = self.f32s()?;
+                Ok(Payload::Q4 { len, block, q, scales })
+            }
             other => anyhow::bail!("frame decode: unknown payload tag {other}"),
         }
     }
@@ -751,6 +844,7 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             padded,
             mode,
             block,
+            assignment,
             full,
             free,
             residuals,
@@ -762,8 +856,10 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             put_u32(out, *workers);
             put_u32(out, *grad_accum);
             put_u32(out, *padded);
-            out.push(mode_tag(*mode));
+            put_mode(out, *mode);
             put_u32(out, *block);
+            put_group_codec(out, assignment.full);
+            put_group_codec(out, assignment.free);
             put_u32s(out, full);
             put_u32s(out, free);
             put_u32(out, residuals.len() as u32);
@@ -776,13 +872,15 @@ pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
             put_u64(out, *step);
             put_f32s(out, flat);
         }
-        Frame::Micro { worker, attempt, slot, n_tok, loss, grad } => {
+        Frame::Micro { worker, attempt, slot, n_tok, loss, sig_free, sig_full, grad } => {
             out.push(TAG_MICRO);
             put_u64(out, *worker);
             put_u32(out, *attempt);
             put_u32(out, *slot);
             put_u32(out, *n_tok);
             put_f32(out, *loss);
+            put_u64(out, *sig_free);
+            put_u64(out, *sig_full);
             put_grad(out, grad);
         }
         Frame::Failed { worker, message } => {
@@ -820,8 +918,18 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
             let workers = r.u32()?;
             let grad_accum = r.u32()?;
             let padded = r.u32()?;
-            let mode = mode_from_tag(r.u8()?)?;
+            let mode = {
+                let tag = r.u8()?;
+                let param = r.u32()?;
+                mode_from_tag(tag, param)?
+            };
             let block = r.u32()?;
+            let mut codec = || -> Result<GroupCodec> {
+                let tag = r.u8()?;
+                let param = r.u32()?;
+                group_codec_from_tag(tag, param)
+            };
+            let assignment = CodecAssignment { full: codec()?, free: codec()? };
             let full = r.u32s()?;
             let free = r.u32s()?;
             let nres = r.u32()? as usize;
@@ -838,6 +946,7 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
                 padded,
                 mode,
                 block,
+                assignment,
                 full,
                 free,
                 residuals,
@@ -850,6 +959,8 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
             slot: r.u32()?,
             n_tok: r.u32()?,
             loss: r.f32()?,
+            sig_free: r.u64()?,
+            sig_full: r.u64()?,
             grad: r.grad()?,
         },
         TAG_FAILED => Frame::Failed { worker: r.u64()?, message: r.string()? },
@@ -1066,6 +1177,7 @@ impl FrameIo {
     /// Send a [`Frame::Micro`] from a *borrowed* gradient — the hot
     /// path: the worker keeps one persistent [`EncodedGrad`] buffer and
     /// re-encodes into it every slot.
+    #[allow(clippy::too_many_arguments)]
     pub fn send_micro(
         &mut self,
         worker: u64,
@@ -1073,6 +1185,7 @@ impl FrameIo {
         slot: u32,
         n_tok: u32,
         loss: f32,
+        sig: crate::engine::compress::LeafSignal,
         grad: &EncodedGrad,
     ) -> Result<u64> {
         self.wbuf.clear();
@@ -1082,6 +1195,8 @@ impl FrameIo {
         put_u32(&mut self.wbuf, slot);
         put_u32(&mut self.wbuf, n_tok);
         put_f32(&mut self.wbuf, loss);
+        put_u64(&mut self.wbuf, sig.free_err_micro);
+        put_u64(&mut self.wbuf, sig.full_err_micro);
         put_grad(&mut self.wbuf, grad);
         self.send_encoded()
     }
@@ -1202,9 +1317,27 @@ mod tests {
             padded: 128,
             mode: CompressMode::Split,
             block: 64,
+            assignment: CodecAssignment { full: GroupCodec::Q8, free: GroupCodec::SignEf },
             full: vec![0, 5, 9],
             free: vec![1, 2, 3],
             residuals: vec![vec![0.25, -1.5], vec![]],
+        });
+        roundtrip(&Frame::RoundBegin {
+            round: 9,
+            attempt: 0,
+            rank: 0,
+            workers: 2,
+            grad_accum: 4,
+            padded: 64,
+            mode: CompressMode::Adaptive { budget_permille: 20 },
+            block: 32,
+            assignment: CodecAssignment {
+                full: GroupCodec::Q4,
+                free: GroupCodec::TopK { k_permille: 5 },
+            },
+            full: vec![2],
+            free: vec![1, 3],
+            residuals: vec![],
         });
         roundtrip(&Frame::StepBegin { step: 11, flat: vec![1.0, -0.0, f32::MIN_POSITIVE] });
         roundtrip(&Frame::Micro {
@@ -1213,6 +1346,8 @@ mod tests {
             slot: 5,
             n_tok: 64,
             loss: 3.25,
+            sig_free: 0,
+            sig_full: 0,
             grad: EncodedGrad::Dense(vec![0.5, -2.0]),
         });
         roundtrip(&Frame::Micro {
@@ -1221,6 +1356,8 @@ mod tests {
             slot: 0,
             n_tok: 1,
             loss: -0.5,
+            sig_free: 999_999,
+            sig_full: 42,
             grad: EncodedGrad::Split {
                 full: Payload::Q8 { len: 3, block: 2, q: vec![-127, 0, 5], scales: vec![0.1, 0.2] },
                 free: Payload::Sign {
@@ -1231,12 +1368,80 @@ mod tests {
                 },
             },
         });
+        roundtrip(&Frame::Micro {
+            worker: 1,
+            attempt: 1,
+            slot: 2,
+            n_tok: 8,
+            loss: 0.75,
+            sig_free: 7,
+            sig_full: 9,
+            grad: EncodedGrad::Split {
+                full: Payload::Q4 {
+                    len: 5,
+                    block: 4,
+                    q: vec![0x18, 0x7f, 0x09],
+                    scales: vec![0.5, 1.5],
+                },
+                free: Payload::TopK { len: 11, idx: vec![0, 4, 10], vals: vec![1.5, -2.0, 0.25] },
+            },
+        });
         roundtrip(&Frame::Failed { worker: 1, message: "boom".into() });
         roundtrip(&Frame::Leave { worker: 9 });
         roundtrip(&Frame::Shutdown);
         roundtrip(&Frame::DataRequest { micro: u64::MAX });
         roundtrip(&Frame::DataBatch { micro: 42, tokens: vec![0, -1, i32::MAX, 7] });
         roundtrip(&Frame::DataBatch { micro: 0, tokens: vec![] });
+    }
+
+    /// The wire-metering contract: [`Payload::wire_bytes`] must equal
+    /// the serialized payload body length byte for byte — every byte
+    /// counter, `RoundReport`, `frugal memory` table and bench gate is
+    /// derived from it. This pins the `Sign` fix (the transport frames
+    /// whole `u64` words, `len.div_ceil(64) * 8` bytes, not the packed
+    /// `len.div_ceil(8)` the meter used to claim) across awkward
+    /// lengths on every variant, old and new.
+    #[test]
+    fn wire_bytes_match_serialized_payloads() {
+        use crate::engine::compress::{
+            BlockQ4Codec, BlockQ8Codec, GradCodec, NoneCodec, SignEfCodec, TopKEfCodec,
+        };
+        for n in [1usize, 63, 64, 65, 127] {
+            let vals: Vec<f32> = (0..n).map(|i| (i as f32 - 31.5) * 0.125).collect();
+            let payloads = [
+                NoneCodec.encode(&vals, None),
+                SignEfCodec { block: 16 }.encode(&vals, None),
+                BlockQ8Codec { block: 16 }.encode(&vals, None),
+                TopKEfCodec { k_permille: 100 }.encode(&vals, None),
+                BlockQ4Codec { block: 16 }.encode(&vals, None),
+            ];
+            for p in &payloads {
+                let mut bytes = Vec::new();
+                put_payload(&mut bytes, p);
+                assert_eq!(
+                    p.wire_bytes(),
+                    bytes.len(),
+                    "len {n}: meter disagrees with the serializer for {p:?}"
+                );
+            }
+            // And the grad envelope: variant tag + payload bodies.
+            let dense = EncodedGrad::Dense(vals.clone());
+            let split = EncodedGrad::Split {
+                full: payloads[2].clone(),
+                free: payloads[1].clone(),
+            };
+            for g in [&dense, &split] {
+                let mut bytes = Vec::new();
+                put_grad(&mut bytes, g);
+                let metered = match g {
+                    EncodedGrad::Dense(v) => 1 + 4 + 4 * v.len(),
+                    EncodedGrad::Split { full, free } => {
+                        1 + full.wire_bytes() + free.wire_bytes()
+                    }
+                };
+                assert_eq!(metered, bytes.len(), "len {n}: grad meter mismatch");
+            }
+        }
     }
 
     #[test]
@@ -1270,6 +1475,8 @@ mod tests {
             slot: 2,
             n_tok: 7,
             loss: 0.125,
+            sig_free: 1,
+            sig_full: 2,
             grad: EncodedGrad::Dense(vec![1.0, -2.0]),
         };
         tx.send(&frame).unwrap();
@@ -1333,6 +1540,8 @@ mod tests {
             slot: 3,
             n_tok: 10,
             loss: 0.5,
+            sig_free: 0,
+            sig_full: 0,
             grad: EncodedGrad::Dense(vec![1.0]),
         });
         drop(s);

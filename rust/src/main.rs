@@ -58,7 +58,8 @@ USAGE:
                   [--lr F] [--rho F] [--rho-schedule SPEC] [--update-freq N]
                   [--seed N] [--fused] [--log FILE] [--artifacts DIR]
                   [--workers N] [--grad-accum M] [--backend auto|ref|pjrt]
-                  [--compress none|sign-ef|q8|split] [--compress-block N]
+                  [--compress none|sign-ef|q8|split|topk[:F]|q4|adaptive[:F]]
+                  [--compress-block N]
                   [--straggler-ms N] [--timeout-ms N] [--sequential]
                   [--no-pipeline]
                   [--transport memory|uds|tcp] [--transport-addr ADDR]
@@ -88,8 +89,13 @@ fixed --grad-accum (the global batch).
 
 `--compress` picks the reduce-tree codec per FRUGAL lane group: `split`
 ships state-free lanes as 1-bit signs (+ error feedback) and state-full
-lanes as blockwise 8-bit — the bit-identity across worker counts holds
-within any fixed codec.
+lanes as blockwise 8-bit; `topk:F` keeps the fraction-F largest-|g|
+state-free lanes exactly (+ error feedback); `q4` packs state-full
+lanes two-per-byte; `adaptive:F` re-picks the cheapest codec pair per
+mask epoch within a loss-gap budget F, from the deterministic quality
+counters — the bit-identity across worker counts holds within any
+fixed codec *and* under `adaptive` (the controller reads only
+worker-count-invariant sums).
 
 `--transport uds|tcp` moves the workers out of process: the coordinator
 binds a socket (a fresh temp-dir path for uds, `--transport-addr` to
@@ -1500,6 +1506,9 @@ fn memory_table(
         ("sign-ef (free lanes)", WireCodec::F32, WireCodec::Sign1 { block }),
         ("q8 (full lanes)", WireCodec::Q8 { block }, WireCodec::F32),
         ("split", WireCodec::Q8 { block }, WireCodec::Sign1 { block }),
+        ("topk:0.005 (free)", WireCodec::Q8 { block }, WireCodec::TopK { k_permille: 5 }),
+        ("q4 (full lanes)", WireCodec::Q4 { block }, WireCodec::F32),
+        ("adaptive (floor)", WireCodec::Q4 { block }, WireCodec::TopK { k_permille: 5 }),
     ];
     for (name, full_codec, free_codec) in codec_rows {
         print!("{name:<22}");

@@ -141,9 +141,17 @@ pub enum WireCodec {
     /// Raw fp32 lanes.
     F32,
     /// 1-bit sign + one fp32 scale per `block` lanes (SignEf leaves).
+    /// Signs ship as packed u64 words, so the payload rounds up to
+    /// 8-byte granularity — the bytes the transport actually frames.
     Sign1 { block: u64 },
     /// 8-bit absmax + one fp32 scale per `block` lanes (BlockQ8).
     Q8 { block: u64 },
+    /// 4-bit absmax, two lanes per byte + one fp32 scale per `block`
+    /// lanes (BlockQ4).
+    Q4 { block: u64 },
+    /// Top-k magnitude sparsification (TopKEf): `k_permille`/1000 of
+    /// the lanes survive, each shipped as a u32 index + f32 value.
+    TopK { k_permille: u64 },
 }
 
 /// Bytes of fp32 block scales shipped alongside a compressed payload of
@@ -157,8 +165,19 @@ pub fn scale_overhead_bytes(lanes: u64, block: u64) -> u64 {
 pub fn lane_wire_bytes(lanes: u64, codec: WireCodec) -> u64 {
     match codec {
         WireCodec::F32 => 4 * lanes,
-        WireCodec::Sign1 { block } => lanes.div_ceil(8) + scale_overhead_bytes(lanes, block),
+        // div_ceil(64) * 8, not div_ceil(8): the transport serializes
+        // whole u64 sign words, so that is what the wire pays.
+        WireCodec::Sign1 { block } => {
+            lanes.div_ceil(64) * 8 + scale_overhead_bytes(lanes, block)
+        }
         WireCodec::Q8 { block } => lanes + scale_overhead_bytes(lanes, block),
+        WireCodec::Q4 { block } => lanes.div_ceil(2) + scale_overhead_bytes(lanes, block),
+        WireCodec::TopK { k_permille } => {
+            if lanes == 0 {
+                return 0;
+            }
+            8 * (lanes * k_permille / 1000).clamp(1, lanes)
+        }
     }
 }
 
@@ -366,7 +385,19 @@ mod tests {
         assert_eq!(scale_overhead_bytes(1000, 256), 16);
         assert_eq!(lane_wire_bytes(1000, WireCodec::F32), 4000);
         assert_eq!(lane_wire_bytes(1000, WireCodec::Q8 { block: 256 }), 1000 + 16);
-        assert_eq!(lane_wire_bytes(1000, WireCodec::Sign1 { block: 256 }), 125 + 16);
+        // 1000 signs occupy 16 serialized u64 words (128 bytes), not
+        // div_ceil(1000/8) = 125 packed bytes — the metering must report
+        // what the transport frames.
+        assert_eq!(lane_wire_bytes(1000, WireCodec::Sign1 { block: 256 }), 128 + 16);
+        assert_eq!(lane_wire_bytes(64, WireCodec::Sign1 { block: 256 }), 8 + 4);
+        assert_eq!(lane_wire_bytes(65, WireCodec::Sign1 { block: 256 }), 16 + 4);
+        assert_eq!(lane_wire_bytes(1000, WireCodec::Q4 { block: 256 }), 500 + 16);
+        assert_eq!(lane_wire_bytes(1001, WireCodec::Q4 { block: 256 }), 501 + 16);
+        // TopK: 5‰ of 1000 lanes = 5 survivors at 8B each; the floor is
+        // one survivor.
+        assert_eq!(lane_wire_bytes(1000, WireCodec::TopK { k_permille: 5 }), 40);
+        assert_eq!(lane_wire_bytes(10, WireCodec::TopK { k_permille: 5 }), 8);
+        assert_eq!(lane_wire_bytes(0, WireCodec::TopK { k_permille: 5 }), 0);
         // Degenerate block sizes clamp instead of dividing by zero.
         assert_eq!(scale_overhead_bytes(8, 0), 32);
     }

@@ -76,6 +76,19 @@ pub enum Counter {
     /// Sequences assigned to training micro-batches (0 when the driver
     /// does not declare its per-micro sequence count).
     SequencesAssigned,
+    /// Summed per-leaf state-free codec error shares, in millionths of
+    /// the group's pre-encode signal energy (see
+    /// [`crate::engine::LeafSignal`]). Deterministic: commutative u64
+    /// sums of integer micros, so identical at any worker count,
+    /// arrival order, or transport — the adaptive codec controller's
+    /// only quality feed.
+    FreeErrShareMicro,
+    /// Summed per-leaf state-full codec error shares (millionths).
+    FullErrShareMicro,
+    /// Adaptive-controller codec re-selections (mask epochs whose
+    /// assignment changed). Deterministic: a pure function of the
+    /// error-share counters above.
+    CodecReselections,
     // ---- process plane (not persisted, not identity-gated) ----
     /// Pool grabs that minted a fresh buffer (execution-strategy
     /// dependent: threaded pre-draw vs logical interleaving).
@@ -111,12 +124,17 @@ pub enum Counter {
     /// Inbound frames rejected by the wire codec's CRC-32 trailer
     /// before reaching gradient math.
     FramesRejected,
+    /// Micro-batches rejected at the encoder for a non-finite (NaN/Inf)
+    /// gradient lane. Process plane: the poisoned batch never enters
+    /// the reduce tree, so the deterministic trace of a recovered run
+    /// is the trace that never saw it.
+    NonFiniteGrads,
 }
 
 /// Counters in the deterministic plane (array prefix).
-pub const DET_COUNTERS: usize = 15;
+pub const DET_COUNTERS: usize = 18;
 /// Total registry width.
-pub const NUM_COUNTERS: usize = 26;
+pub const NUM_COUNTERS: usize = 30;
 
 impl Counter {
     /// Every counter, in array order.
@@ -136,6 +154,9 @@ impl Counter {
         Counter::EfResets,
         Counter::TokensConsumed,
         Counter::SequencesAssigned,
+        Counter::FreeErrShareMicro,
+        Counter::FullErrShareMicro,
+        Counter::CodecReselections,
         Counter::PoolMisses,
         Counter::SnapshotBytes,
         Counter::SnapshotFiles,
@@ -147,6 +168,7 @@ impl Counter {
         Counter::WorkersRespawned,
         Counter::WorkersEvicted,
         Counter::FramesRejected,
+        Counter::NonFiniteGrads,
     ];
 
     /// Canonical snake_case key (manifest JSON, trace rendering).
@@ -167,6 +189,9 @@ impl Counter {
             Counter::EfResets => "ef_resets",
             Counter::TokensConsumed => "tokens_consumed",
             Counter::SequencesAssigned => "sequences_assigned",
+            Counter::FreeErrShareMicro => "free_err_share_micro",
+            Counter::FullErrShareMicro => "full_err_share_micro",
+            Counter::CodecReselections => "codec_reselections",
             Counter::PoolMisses => "pool_misses",
             Counter::SnapshotBytes => "snapshot_bytes",
             Counter::SnapshotFiles => "snapshot_files",
@@ -178,6 +203,7 @@ impl Counter {
             Counter::WorkersRespawned => "workers_respawned",
             Counter::WorkersEvicted => "workers_evicted",
             Counter::FramesRejected => "frames_rejected",
+            Counter::NonFiniteGrads => "non_finite_grads",
         }
     }
 

@@ -56,37 +56,6 @@ fn engine(workers: usize, parallel: ParallelCfg, threaded: bool) -> Engine {
         .unwrap()
 }
 
-/// The deprecated positional constructor still delegates to the builder
-/// (one-release migration shim) — pinned so its removal is a deliberate
-/// act, and bit-identical to the builder it wraps.
-#[test]
-#[allow(deprecated)]
-fn deprecated_engine_new_shim_matches_the_builder() {
-    let parallel = ParallelCfg { grad_accum: 4, ..Default::default() };
-    let m = model();
-    let cfg = EngineCfg {
-        parallel: ParallelCfg { workers: 2, ..parallel.clone() },
-        schedule: LrSchedule::ConstantWarmup { warmup: 2 },
-        peak_lr: 1e-3,
-        lr_free_mult: 1.0,
-        update_freq: 4,
-        adam: AdamCfg::default(),
-        clip: None,
-    };
-    let sources = Sources::Threaded(
-        (0..2).map(|_| Box::new(m.clone()) as Box<dyn GradSource + Send>).collect(),
-    );
-    let mask_builder = MaskBuilder::new(
-        m.layout().clone(),
-        0.25,
-        SubspacePolicy::Blockwise(BlockPolicy::Random),
-        SEED,
-    );
-    let mut old = Engine::new(mask_builder, cfg, sources, m.init_flat(SEED)).unwrap();
-    let mut new = engine(2, parallel, true);
-    assert_eq!(run(&mut old, 6), run(&mut new, 6));
-}
-
 /// Deterministic micro-batch stream shared by all runs (fill-style — the
 /// engine's allocation-free batch contract).
 fn batch_fn(micro: u64, buf: &mut Vec<i32>) {
@@ -273,7 +242,14 @@ fn compressed(mode: CompressMode) -> ParallelCfg {
 /// re-selections, so codec plans and EF residuals rebuild mid-run.
 #[test]
 fn compressed_workers_are_bit_identical() {
-    for mode in [CompressMode::SignEf, CompressMode::Q8, CompressMode::Split] {
+    for mode in [
+        CompressMode::SignEf,
+        CompressMode::Q8,
+        CompressMode::Split,
+        CompressMode::TopK { k_permille: 10 },
+        CompressMode::Q4,
+        CompressMode::Adaptive { budget_permille: 20 },
+    ] {
         let mut e1 = engine(1, compressed(mode), true);
         let t1 = run(&mut e1, 10);
         for workers in [2usize, 4] {

@@ -6,8 +6,9 @@
 
 use frugal::coordinator::subspace::{MaskBuilder, SubspacePolicy};
 use frugal::engine::{
-    tree_reduce, tree_reduce_with, CompressCfg, CompressMode, CompressPlan, EncodedGrad,
-    GradCodec, ReduceTree, ShardPlan, SignEfCodec,
+    tree_reduce, tree_reduce_with, AdaptiveCodecController, BlockQ4Codec, CompressCfg,
+    CompressMode, CompressPlan, EncodedGrad, GradCodec, Payload, ReduceTree, ShardPlan,
+    SignEfCodec, TopKEfCodec,
 };
 use frugal::optim::frugal::BlockPolicy;
 use frugal::optim::projection::randk_indices;
@@ -228,9 +229,9 @@ fn prop_tree_allreduce_exact_on_integers() {
 /// shuffles.
 #[test]
 fn prop_encoded_tree_arrival_and_worker_count_invariant() {
-    for case in 0..24u64 {
+    for case in 0..28u64 {
         let mut rng = Prng::seed_from_u64(4000 + case);
-        let mode = CompressMode::ALL[case as usize % 4];
+        let mode = CompressMode::ALL[case as usize % CompressMode::ALL.len()];
         let flat = 32 + rng.range(0, 400);
         let padded = flat + rng.range(0, 32);
         let mut full = Vec::new();
@@ -250,7 +251,7 @@ fn prop_encoded_tree_arrival_and_worker_count_invariant() {
                 let grad: Vec<f32> = (0..padded)
                     .map(|i| if i < flat { 0.1 * rng.normal() } else { 0.0 })
                     .collect();
-                plan.encode_leaf(grad, None)
+                plan.encode_leaf(grad, None).expect("finite grads encode").0
             })
             .collect();
         let want: Vec<u32> = plan
@@ -667,5 +668,228 @@ fn prop_respawn_backoff_deterministic_monotone_capped() {
         }
         // Past the cap the schedule is flat.
         assert_eq!(fault.respawn_delay(5), fault.respawn_delay(11), "case {case}");
+    }
+}
+
+/// TopKEf ships exact (index, value) pairs: the payload holds exactly
+/// `k_for(n)` strictly-ascending indices, every selected lane decodes
+/// bitwise to the EF signal `v + r`, every unselected lane decodes to
+/// 0, and the residual after encode is `0` on selected lanes and
+/// `r + v` on the rest — the codec's whole error budget lives in the
+/// residual, never in the transmitted values.
+#[test]
+fn prop_topk_ef_roundtrip_exact() {
+    for case in 0..30u64 {
+        let mut rng = Prng::seed_from_u64(7000 + case);
+        let n = 1 + rng.range(0, 300);
+        let k_permille = 1 + rng.range(0, 400) as u16;
+        let codec = TopKEfCodec { k_permille };
+        let vals: Vec<f32> = (0..n).map(|_| 0.3 * rng.normal()).collect();
+        let mut residual: Vec<f32> = (0..n).map(|_| 0.05 * rng.normal()).collect();
+        let r_before = residual.clone();
+        let payload = codec.encode(&vals, Some(&mut residual));
+        let Payload::TopK { len, ref idx, vals: ref sel } = payload else {
+            panic!("case {case}: TopKEf produced a non-TopK payload");
+        };
+        assert_eq!(len, n, "case {case}");
+        assert_eq!(idx.len(), codec.k_for(n), "case {case}: wrong k");
+        assert_eq!(sel.len(), idx.len(), "case {case}");
+        assert!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "case {case}: indices not strictly ascending"
+        );
+        let dec = codec.decode(&payload);
+        assert_eq!(dec.len(), n, "case {case}");
+        let mut selected = vec![false; n];
+        for (&i, &s) in idx.iter().zip(sel) {
+            selected[i as usize] = true;
+            let e = vals[i as usize] + r_before[i as usize];
+            assert_eq!(s.to_bits(), e.to_bits(), "case {case} lane {i}: shipped value inexact");
+        }
+        for i in 0..n {
+            if selected[i] {
+                assert_eq!(
+                    dec[i].to_bits(),
+                    (vals[i] + r_before[i]).to_bits(),
+                    "case {case} lane {i}: selected lane decoded inexactly"
+                );
+                assert_eq!(residual[i].to_bits(), 0.0f32.to_bits(), "case {case} lane {i}");
+            } else {
+                assert_eq!(dec[i].to_bits(), 0.0f32.to_bits(), "case {case} lane {i}");
+                assert_eq!(
+                    residual[i].to_bits(),
+                    (r_before[i] + vals[i]).to_bits(),
+                    "case {case} lane {i}: residual lost signal"
+                );
+            }
+        }
+    }
+}
+
+/// TopKEf error feedback is unbiased in the long run: over many steps
+/// the per-lane invariant `Σ decoded + residual = Σ signal` holds (the
+/// residual is the only place error accumulates, and every selection
+/// flushes it exactly), so the accumulated transmission tracks the
+/// accumulated signal to float-accumulation precision on every lane —
+/// including lanes far too small to ever win a single round.
+#[test]
+fn prop_topk_ef_long_run_unbiased() {
+    for case in 0..12u64 {
+        let mut rng = Prng::seed_from_u64(7500 + case);
+        let n = 8 + rng.range(0, 120);
+        let codec = TopKEfCodec { k_permille: 1 + rng.range(0, 80) as u16 };
+        let steps = 400;
+        let mut residual = vec![0.0f32; n];
+        let mut acc_dec = vec![0.0f64; n];
+        let mut acc_sig = vec![0.0f64; n];
+        // Per-lane magnitude spread of ~100x so small lanes must wait
+        // many rounds for their residual to win selection.
+        let mags: Vec<f32> = (0..n).map(|_| 0.01 * (1.0 + 99.0 * rng.f32())).collect();
+        for _ in 0..steps {
+            let vals: Vec<f32> = mags.iter().map(|&m| m * rng.normal()).collect();
+            let payload = codec.encode(&vals, Some(&mut residual));
+            for (a, &d) in acc_dec.iter_mut().zip(&codec.decode(&payload)) {
+                *a += f64::from(d);
+            }
+            for (a, &v) in acc_sig.iter_mut().zip(&vals) {
+                *a += f64::from(v);
+            }
+        }
+        for i in 0..n {
+            let gap = (acc_dec[i] + f64::from(residual[i]) - acc_sig[i]).abs();
+            // Only fp32-accumulation noise is allowed; the EF identity
+            // itself is exact per step.
+            let tol = 1e-3 * (1.0 + acc_sig[i].abs());
+            assert!(
+                gap <= tol,
+                "case {case} lane {i}: EF leaked signal (gap {gap}, tol {tol})"
+            );
+        }
+    }
+}
+
+/// BlockQ4 decode error is bounded by half a quantization step per
+/// lane: `|dec - v| ≤ amax/14` for every normal-scale block (scale =
+/// amax/7, 15 signed levels), and flushed (zero/subnormal-absmax)
+/// blocks decode to exact zeros with error ≤ amax, which is itself
+/// below float-noise scale.
+#[test]
+fn prop_q4_decode_within_half_step() {
+    for case in 0..30u64 {
+        let mut rng = Prng::seed_from_u64(8000 + case);
+        let n = 1 + rng.range(0, 300);
+        let block = 1 + rng.range(0, 64);
+        let codec = BlockQ4Codec { block };
+        let mag = [1.0f32, 1e-3, 1e3][case as usize % 3];
+        let mut vals: Vec<f32> = (0..n).map(|_| mag * rng.normal()).collect();
+        // Force some all-zero blocks to exercise the flush arm.
+        if n > block && rng.f32() < 0.5 {
+            for v in vals[..block].iter_mut() {
+                *v = 0.0;
+            }
+        }
+        let payload = codec.encode(&vals, None);
+        let dec = codec.decode(&payload);
+        assert_eq!(dec.len(), n, "case {case}");
+        for (b, blk) in vals.chunks(block).enumerate() {
+            let mut amax = 0.0f32;
+            for &x in blk {
+                amax = amax.max(x.abs());
+            }
+            // Half-step plus fp slop; the absolute term covers flushed
+            // subnormal-absmax blocks (amax < 8.3e-38 there).
+            let bound = 0.5001 * amax / 7.0 + 1e-37;
+            for (k, &x) in blk.iter().enumerate() {
+                let d = dec[b * block + k];
+                assert!(
+                    (d - x).abs() <= bound,
+                    "case {case} lane {}: |{d} - {x}| > {bound} (amax {amax})",
+                    b * block + k
+                );
+            }
+        }
+    }
+}
+
+/// The adaptive controller is a pure function of the deterministic
+/// counter trace: sharding the same leaf signals across 1 vs 4 workers
+/// produces identical u64 totals, hence identical codec choices,
+/// history fingerprints, and marks at every epoch — and a controller
+/// rebuilt mid-run from `history_string()` + `marks()` (resume)
+/// continues bit-identically to the uninterrupted one.
+#[test]
+fn prop_adaptive_controller_deterministic_and_resumable() {
+    for case in 0..20u64 {
+        let mut rng = Prng::seed_from_u64(9000 + case);
+        let budget = 5 + rng.range(0, 60) as u16;
+        let mut solo = AdaptiveCodecController::new(budget);
+        let mut fleet = AdaptiveCodecController::new(budget);
+        let mut resumed: Option<AdaptiveCodecController> = None;
+        let (mut free_total, mut full_total, mut leaves_total) = (0u64, 0u64, 0u64);
+        let epochs = 6 + rng.range(0, 6) as u64;
+        for epoch in 1..=epochs {
+            // Per-leaf signals for this epoch (millionths, as produced
+            // by LeafSignal). Magnitudes drift upward so later epochs
+            // can trip rung climbs.
+            let leaves = 4 + rng.range(0, 12);
+            let sigs: Vec<(u64, u64)> = (0..leaves)
+                .map(|_| {
+                    let drift = epoch * rng.range(0, 200_000) as u64 / epochs;
+                    (
+                        (900_000 + rng.range(0, 100_000) as u64 + drift).min(1_000_000),
+                        (rng.range(0, 120_000) as u64 + drift).min(1_000_000),
+                    )
+                })
+                .collect();
+            // Worker 1: one stream, in slot order. Workers 4: four
+            // round-robin shards summed shard-by-shard. u64 addition
+            // commutes, so the totals must match bitwise.
+            let (mut f1, mut u1) = (0u64, 0u64);
+            for &(f, u) in &sigs {
+                f1 += f;
+                u1 += u;
+            }
+            let (mut f4, mut u4) = (0u64, 0u64);
+            for w in 0..4usize {
+                let mut j = w;
+                while j < sigs.len() {
+                    f4 += sigs[j].0;
+                    u4 += sigs[j].1;
+                    j += 4;
+                }
+            }
+            assert_eq!((f1, u1), (f4, u4), "case {case} epoch {epoch}: shard sums diverge");
+            free_total += f1;
+            full_total += u1;
+            leaves_total += leaves as u64;
+            let c1 = solo.observe_epoch(epoch, free_total, full_total, leaves_total);
+            let c4 = fleet.observe_epoch(epoch, free_total, full_total, leaves_total);
+            assert_eq!(c1, c4, "case {case} epoch {epoch}: change flags diverge");
+            assert_eq!(
+                solo.assignment(),
+                fleet.assignment(),
+                "case {case} epoch {epoch}: workers 1 vs 4 picked different codecs"
+            );
+            assert_eq!(solo.history_string(), fleet.history_string(), "case {case}");
+            assert_eq!(solo.marks(), fleet.marks(), "case {case} epoch {epoch}");
+            if let Some(r) = resumed.as_mut() {
+                r.observe_epoch(epoch, free_total, full_total, leaves_total);
+                assert_eq!(
+                    r.history_string(),
+                    solo.history_string(),
+                    "case {case} epoch {epoch}: resume ≢ continuous"
+                );
+                assert_eq!(r.assignment(), solo.assignment(), "case {case} epoch {epoch}");
+            }
+            // Checkpoint/restore at mid-run: rebuild from the
+            // fingerprint + marks and run it alongside from here on.
+            if epoch == epochs / 2 {
+                let mut r = AdaptiveCodecController::from_history(budget, &solo.history_string())
+                    .expect("fingerprint round-trips");
+                r.restore_marks(solo.marks());
+                assert_eq!(r.assignment(), solo.assignment(), "case {case}: restore mismatch");
+                resumed = Some(r);
+            }
+        }
     }
 }

@@ -151,9 +151,12 @@ fn frames_roundtrip_over_real_streams() {
             io.send(&Frame::Hello).unwrap();
             io.send(&Frame::Micro {
                 worker: 1,
+                attempt: 0,
                 slot: 2,
                 n_tok: 64,
                 loss: 0.5,
+                sig_free: 7,
+                sig_full: 11,
                 grad: EncodedGrad::Dense(vec![1.0, -2.5, f32::MIN_POSITIVE]),
             })
             .unwrap();
@@ -165,7 +168,9 @@ fn frames_roundtrip_over_real_streams() {
         let mut io = FrameIo::new(listener.accept().unwrap());
         assert_eq!(io.recv().unwrap().unwrap(), Frame::Hello);
         match io.recv().unwrap().unwrap() {
-            Frame::Micro { worker: 1, slot: 2, n_tok: 64, loss, grad } => {
+            Frame::Micro {
+                worker: 1, slot: 2, n_tok: 64, loss, sig_free: 7, sig_full: 11, grad, ..
+            } => {
                 assert_eq!(loss.to_bits(), 0.5f32.to_bits(), "{kind}");
                 assert_eq!(grad, EncodedGrad::Dense(vec![1.0, -2.5, f32::MIN_POSITIVE]));
             }
@@ -183,7 +188,13 @@ fn frames_roundtrip_over_real_streams() {
 /// plane — at every worker count and codec.
 #[test]
 fn socket_run_is_bitwise_identical_to_in_memory() {
-    for mode in [CompressMode::None, CompressMode::Split] {
+    for mode in [
+        CompressMode::None,
+        CompressMode::Split,
+        CompressMode::TopK { k_permille: 10 },
+        CompressMode::Q4,
+        CompressMode::Adaptive { budget_permille: 20 },
+    ] {
         for workers in [1usize, 2, 4] {
             let mut mem = engine(workers, mode, TransportCfg::default());
             let mem_trace = trace(&mut mem, 10);
